@@ -1,0 +1,43 @@
+//! Fig. 10: perplexity vs normalized inference energy for tiny-llama as the
+//! FP8 block budget varies, with the FP4/FP8 single-format endpoints — the
+//! paper's headline "<1% ppl degradation at 14% energy savings" trade-off
+//! curve.
+//!
+//!     cargo bench --bench fig10_ppl_vs_energy
+
+use fgmp::eval::sweep::{format_rows, run_sweep};
+use fgmp::eval::Evaluator;
+use fgmp::model::QuantConfig;
+use fgmp::runtime::Runtime;
+
+fn main() -> fgmp::Result<()> {
+    let artifacts = std::env::var("FGMP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let batches: usize = std::env::var("FGMP_BATCHES").ok()
+        .and_then(|v| v.parse().ok()).unwrap_or(8);
+    let rt = Runtime::cpu()?;
+    let ev = Evaluator::load(&rt, &artifacts, "tiny-llama")?;
+
+    let mut configs = vec![QuantConfig::all_fp8()];
+    for fp4 in [0.1, 0.3, 0.5, 0.7, 0.8, 0.9, 0.95] {
+        configs.push(QuantConfig::fgmp(fp4));
+    }
+    configs.push(QuantConfig::all_fp4());
+
+    let rows = run_sweep(&ev, &configs, batches)?;
+    println!("== Fig. 10: perplexity vs normalized energy (tiny-llama) ==");
+    print!("{}", format_rows(&rows));
+
+    // The headline row: largest energy savings with <1% ppl degradation
+    // relative to all-FP8.
+    let fp8_ppl = rows[0].ppl;
+    let best = rows
+        .iter()
+        .filter(|r| r.ppl <= fp8_ppl * 1.01 && r.energy_norm.is_finite() && r.label != "FP8/fisher")
+        .min_by(|a, b| a.energy_norm.partial_cmp(&b.energy_norm).unwrap());
+    if let Some(b) = best {
+        println!("\nheadline: '{}' attains {:.1}% energy savings with {:+.2}% ppl vs FP8",
+                 b.label, (1.0 - b.energy_norm) * 100.0, (b.ppl / fp8_ppl - 1.0) * 100.0);
+        println!("(paper: 14% energy savings at <1% perplexity degradation)");
+    }
+    Ok(())
+}

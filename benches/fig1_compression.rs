@@ -1,0 +1,34 @@
+//! Fig. 1: perplexity degradation vs compression rate for Llama-2-7B
+//! (tiny-llama stand-in). Regenerates the FGMP points (70/80/90% FP4), the
+//! microscale all-NVFP4 point, and the all-FP8 reference — the paper's
+//! claim is that FGMP dominates the single-format points on this plane.
+//!
+//!     cargo bench --bench fig1_compression
+
+use fgmp::eval::sweep::{format_rows, run_sweep};
+use fgmp::eval::Evaluator;
+use fgmp::model::{QuantConfig, RatioSpec};
+use fgmp::runtime::Runtime;
+
+fn main() -> fgmp::Result<()> {
+    let artifacts = std::env::var("FGMP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let batches: usize = std::env::var("FGMP_BATCHES").ok()
+        .and_then(|v| v.parse().ok()).unwrap_or(8);
+    let rt = Runtime::cpu()?;
+    let ev = Evaluator::load(&rt, &artifacts, "tiny-llama")?;
+
+    let configs = vec![
+        QuantConfig { ratio: RatioSpec::Bf16, ..QuantConfig::fgmp(0.0) },
+        QuantConfig::all_fp8(),
+        QuantConfig::fgmp(0.7),
+        QuantConfig::fgmp(0.8),
+        QuantConfig::fgmp(0.9),
+        QuantConfig::all_fp4(), // the "µscale" NVFP4 comparator
+    ];
+    let rows = run_sweep(&ev, &configs, batches)?;
+    println!("== Fig. 1: perplexity degradation vs compression rate (tiny-llama) ==");
+    print!("{}", format_rows(&rows));
+    println!("\nexpected shape (paper): FGMP rows sit below the all-FP4 row in");
+    println!("dPPL at strictly higher compression than all-FP8.");
+    Ok(())
+}

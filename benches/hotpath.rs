@@ -1,0 +1,114 @@
+//! Microbenchmarks for the L3 hot paths: codecs, impact scoring, threshold
+//! calibration, SW-Clip, packing, and the hwsim costing pipeline. These
+//! drive the §Perf iteration loop in EXPERIMENTS.md (in-repo bench harness;
+//! DESIGN.md §Deps).
+//!
+//!     cargo bench --bench hotpath
+
+use std::time::Duration;
+
+use fgmp::policy::{block_impact_scores, threshold_for_fp4_fraction};
+use fgmp::quant::{
+    nvfp4::nvfp4_roundtrip, quant_e2m1, quant_e4m3, sw_clip_tensor, FgmpTensor, Precision,
+};
+use fgmp::util::bench::{bench, black_box};
+use fgmp::util::Rng;
+
+const BUDGET: Duration = Duration::from_millis(400);
+
+fn main() {
+    let mut rng = Rng::new(42);
+    println!("== hotpath microbenchmarks (in-repo harness) ==");
+
+    // --- codecs ---
+    let xs = rng.normal_vec(1 << 16, 8.0);
+    let r = bench("quant_e4m3_64k", Some(xs.len() as u64), BUDGET, || {
+        xs.iter().map(|&x| quant_e4m3(black_box(x))).sum::<f32>()
+    });
+    println!("{}", r.report());
+    let r = bench("quant_e2m1_64k", Some(xs.len() as u64), BUDGET, || {
+        xs.iter().map(|&x| quant_e2m1(black_box(x))).sum::<f32>()
+    });
+    println!("{}", r.report());
+    let mut out = vec![0.0f32; xs.len()];
+    let r = bench("nvfp4_roundtrip_64k", Some(xs.len() as u64), BUDGET, || {
+        nvfp4_roundtrip(black_box(&xs), &mut out)
+    });
+    println!("{}", r.report());
+
+    // --- policy scoring + threshold ---
+    let k = 1024;
+    let rows = 512;
+    let data = rng.normal_vec(rows * k, 4.0);
+    let cw: Vec<f32> = (0..k).map(|_| rng.f32().abs() + 0.01).collect();
+    let r = bench("impact_scores_512x1024", Some((rows * k) as u64), BUDGET, || {
+        block_impact_scores(black_box(&data), k, &cw, None)
+    });
+    println!("{}", r.report());
+    let scores = block_impact_scores(&data, k, &cw, None);
+    let r = bench("threshold_percentile_32k", Some(scores.len() as u64), BUDGET, || {
+        threshold_for_fp4_fraction(black_box(&scores), 0.7)
+    });
+    println!("{}", r.report());
+
+    // --- packing + clipping ---
+    let rows = 256;
+    let data = rng.normal_vec(rows * k, 4.0);
+    let fisher: Vec<f32> = (0..rows * k).map(|_| rng.f32().abs() + 1e-4).collect();
+    let prec: Vec<Precision> = (0..rows * k / 16)
+        .map(|i| if i % 10 < 3 { Precision::Fp8 } else { Precision::Fp4 })
+        .collect();
+    let r = bench("pack_256x1024", Some((rows * k) as u64), BUDGET, || {
+        FgmpTensor::pack(&[rows, k], black_box(&data), &prec, None)
+    });
+    println!("{}", r.report());
+    let packed = FgmpTensor::pack(&[rows, k], &data, &prec, None);
+    let r = bench("unpack_256x1024", Some((rows * k) as u64), BUDGET, || {
+        black_box(&packed).unpack()
+    });
+    println!("{}", r.report());
+    let r = bench("sw_clip_256x1024", Some((rows * k) as u64), BUDGET, || {
+        sw_clip_tensor(black_box(&data), &fisher)
+    });
+    println!("{}", r.report());
+
+    // --- hwsim costing ---
+    use fgmp::hwsim::energy::EnergyModel;
+    use fgmp::hwsim::layerprof::{model_energy_clustered, LayerProfile};
+    use fgmp::hwsim::DatapathConfig;
+    let profiles: Vec<LayerProfile> = (0..128)
+        .map(|i| LayerProfile {
+            name: format!("l{i}"),
+            layer: i,
+            kind: "fc1".into(),
+            m: 4096,
+            k: 4096,
+            n: 4096,
+            weight_fp8: (i as f64 * 0.37).fract() * 0.4,
+            act_fp8: (i as f64 * 0.61).fract() * 0.4,
+        })
+        .collect();
+    let dp = DatapathConfig::default();
+    let em = EnergyModel::default();
+    let r = bench("model_energy_clustered_128x100", None, BUDGET, || {
+        model_energy_clustered(&dp, &em, black_box(&profiles), 100)
+    });
+    println!("{}", r.report());
+
+    // --- end-to-end offline quantization (if artifacts exist) ---
+    let artifacts = std::env::var("FGMP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if let Ok(arts) = fgmp::model::ModelArtifacts::load(format!("{artifacts}/tiny-llama")) {
+        let cfg = fgmp::model::QuantConfig::fgmp(0.7);
+        let r = bench("quantize_tiny_llama_full", None, Duration::from_secs(3), || {
+            fgmp::model::QuantizedModel::quantize(black_box(&arts), &cfg).unwrap()
+        });
+        println!("{}", r.report());
+        let cfg_noclip = fgmp::model::QuantConfig { sw_clip: false, ..cfg };
+        let r = bench("quantize_tiny_llama_noclip", None, Duration::from_secs(3), || {
+            fgmp::model::QuantizedModel::quantize(black_box(&arts), &cfg_noclip).unwrap()
+        });
+        println!("{}", r.report());
+    } else {
+        println!("(artifacts not found — skipping end-to-end quantize bench)");
+    }
+}

@@ -1,0 +1,41 @@
+//! Table 1: sensitivity-weighted clipping in the *weight-only* FP4 regime
+//! (activations stay BF16 — quantized weights flow through the unquantized
+//! fwd_ref graph). Llama-2-7B/13B map to tiny-llama / tiny-llama-l.
+//!
+//!     cargo bench --bench table1_swclip
+
+use fgmp::eval::Evaluator;
+use fgmp::model::{QuantConfig, QuantizedModel, RatioSpec};
+use fgmp::runtime::Runtime;
+
+fn main() -> fgmp::Result<()> {
+    let artifacts = std::env::var("FGMP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let batches: usize = std::env::var("FGMP_BATCHES").ok()
+        .and_then(|v| v.parse().ok()).unwrap_or(8);
+    let rt = Runtime::cpu()?;
+
+    println!("== Table 1: weight-only FP4 ± SW-Clip (BF16 activations) ==");
+    println!("{:<22} {:>12} {:>14}", "weight precision", "tiny-llama", "tiny-llama-l");
+    let mut rows = vec![vec![], vec![], vec![]];
+    for model in ["tiny-llama", "tiny-llama-l"] {
+        let ev = Evaluator::load(&rt, &artifacts, model)?;
+        let bf16 = ev.perplexity(
+            &QuantConfig { ratio: RatioSpec::Bf16, ..QuantConfig::fgmp(0.0) }, None, batches)?;
+        rows[0].push(bf16.ppl);
+        for (i, clip) in [(1, false), (2, true)] {
+            let cfg = QuantConfig { sw_clip: clip, ..QuantConfig::all_fp4() };
+            let qm = QuantizedModel::quantize(&ev.arts, &cfg)?;
+            let rep = ev.perplexity_weight_only(&qm, batches)?;
+            rows[i].push(rep.ppl);
+        }
+    }
+    for (label, row) in [("BF16", &rows[0]), ("FP4", &rows[1]), ("FP4 (w/ SW-Clip)", &rows[2])] {
+        print!("{label:<22}");
+        for v in row {
+            print!(" {v:>12.4}");
+        }
+        println!();
+    }
+    println!("\nexpected shape (paper): FP4 above BF16; SW-Clip strictly between.");
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Table 4: area breakdown of the FGMP datapath and PPU (5 nm
+//! post-synthesis component figures), with the derived overhead ratios and
+//! the PPU amortization analysis of §5.4.3.
+//!
+//!     cargo bench --bench table4_area
+
+use fgmp::hwsim::area::AreaModel;
+use fgmp::hwsim::datapath::DatapathConfig;
+use fgmp::hwsim::ppu::{ppu_balance, ppu_energy_per_op_fj};
+use fgmp::hwsim::energy::EnergyModel;
+
+fn main() {
+    let a = AreaModel::default();
+    println!("== Table 4: area breakdown (um^2, 16 lanes, BS=16) ==");
+    println!("{:<22} {:>10}", "configuration", "area");
+    for (name, v) in [
+        ("FP8 Datapath", a.fp8_datapath),
+        ("NVFP4 Datapath", a.nvfp4_datapath),
+        ("FP8/NVFP4 Datapath", a.fp8_nvfp4_datapath),
+        ("NVFP4/FP8 Datapath", a.nvfp4_fp8_datapath),
+        ("FGMP Datapath", a.fgmp_datapath),
+        ("FGMP PPU", a.fgmp_ppu),
+    ] {
+        println!("{name:<22} {v:>10.0}");
+    }
+    println!("\nderived:");
+    println!("  FGMP vs FP8-only     : {:.2}x (paper: 3.5x)", a.overhead_vs_fp8());
+    println!("  FGMP vs coarse MP    : {:.2}x (paper: 2.2x)", a.overhead_vs_coarse());
+    println!("  PPU vs FGMP datapath : {:.0}% (paper: 85%)", a.ppu_overhead() * 100.0);
+
+    println!("\n== PPU amortization (4096^3 matmul, 16-lane PEs) ==");
+    println!("{:>6} {:>14} {:>12} {:>10} {:>12}", "PEs", "datapath cyc", "PPU cyc", "balanced", "PPU area %");
+    for pes in [16, 64, 128, 256, 512] {
+        let cfg = DatapathConfig { lanes: 16, pes, freq_ghz: 1.0 };
+        let b = ppu_balance(&cfg, 4096, 4096, 4096, 1);
+        println!("{:>6} {:>14} {:>12} {:>10} {:>11.2}%",
+                 pes, b.datapath_cycles, b.ppu_cycles, b.balanced,
+                 a.ppu_overhead_amortized(pes) * 100.0);
+    }
+    let em = EnergyModel::default();
+    println!("\nPPU energy: {:.1} pJ/block -> {:.2} fJ/op at K=4096 (paper: 0.20 fJ/op, <1%)",
+             em.e_ppu_block, ppu_energy_per_op_fj(em.e_ppu_block, 4096));
+}

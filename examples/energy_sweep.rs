@@ -1,0 +1,58 @@
+//! Energy-model exploration: how the datapath geometry, PPU sharing, and
+//! precision mixes interact — the design-space view behind Figs. 9/10 and
+//! the Table 4 amortization argument.
+//!
+//!     cargo run --release --example energy_sweep
+
+use fgmp::hwsim::datapath::{simulate_matmul, DatapathConfig, MatmulJob};
+use fgmp::hwsim::energy::EnergyModel;
+use fgmp::hwsim::kmeans::{kmeans, LayerConfig};
+use fgmp::hwsim::ppu::ppu_balance;
+
+fn main() {
+    let em = EnergyModel::default();
+
+    // 1. Energy per op across the precision-mix diagonal.
+    println!("== dot-product energy/op (pJ) along the W=A diagonal ==");
+    let cfg = DatapathConfig::default();
+    for i in 0..=10 {
+        let p = i as f64 / 10.0;
+        let job = MatmulJob { m: 1024, k: 1024, n: 1024, weight_fp8: p, act_fp8: p };
+        let r = simulate_matmul(&cfg, &em, &job, true);
+        let bar = "#".repeat((r.energy_per_op() * 200.0) as usize);
+        println!("{:>4.0}% FP8  {:>7.4}  {}", p * 100.0, r.energy_per_op(), bar);
+    }
+
+    // 2. PE scaling vs PPU balance.
+    println!("\n== PPU balance across matmul shapes (one PPU, 16 lanes) ==");
+    println!("{:<28} {:>10} {:>14}", "shape", "max PEs", "note");
+    for (m, k, n) in [(4096, 4096, 4096), (512, 4096, 4096), (4096, 512, 4096), (128, 1024, 1024)] {
+        let b = ppu_balance(&DatapathConfig::default(), m, k, n, 1);
+        let note = if b.max_pes_per_ppu >= 256 { "amortizes fully" } else { "PPU-bound sooner" };
+        println!("{:<28} {:>10} {:>14}", format!("{m}x{k}x{n}"), b.max_pes_per_ppu, note);
+    }
+
+    // 3. The §4.3 clustering pipeline on a synthetic layer population.
+    println!("\n== K-means layer-config clustering (paper §4.3) ==");
+    let pts: Vec<LayerConfig> = (0..512)
+        .map(|i| LayerConfig {
+            weight_fp8: ((i * 37) % 100) as f64 / 150.0,
+            act_fp8: ((i * 61) % 100) as f64 / 200.0,
+        })
+        .collect();
+    for k in [4, 16, 100] {
+        let c = kmeans(&pts, k, 100);
+        let err: f64 = pts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let cen = &c.centroids[c.assignment[i]];
+                ((p.weight_fp8 - cen.weight_fp8).powi(2) + (p.act_fp8 - cen.act_fp8).powi(2)).sqrt()
+            })
+            .sum::<f64>()
+            / pts.len() as f64;
+        println!("K={k:<4} mean centroid distance {err:.4}");
+    }
+    println!("\n(paper uses K=100: effectively exact while replacing 512 power");
+    println!("simulations with 100 representative kernels)");
+}

@@ -1,0 +1,46 @@
+//! Quickstart: load a trained model, quantize it with FGMP, check the
+//! perplexity cost and the efficiency wins, in ~40 lines of API.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Requires `make artifacts` to have run first.
+
+use fgmp::eval::Evaluator;
+use fgmp::hwsim::memory::weight_memory_report;
+use fgmp::model::{QuantConfig, QuantizedModel};
+use fgmp::runtime::Runtime;
+
+fn main() -> fgmp::Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // Load the AOT-compiled graphs + calibration artifacts for tiny-llama.
+    let ev = Evaluator::load(&rt, &artifacts, "tiny-llama")?;
+
+    // The paper's headline configuration: 70% of blocks in NVFP4, selected
+    // by the Fisher-weighted impact score with a single global threshold,
+    // SW-Clip on the FP4 weight blocks.
+    let cfg = QuantConfig::fgmp(0.7);
+    let qm = QuantizedModel::quantize(&ev.arts, &cfg)?;
+
+    // Compare against the all-FP8 baseline (the paper's reference point).
+    let fp8_cfg = QuantConfig::all_fp8();
+    let qm8 = QuantizedModel::quantize(&ev.arts, &fp8_cfg)?;
+
+    let fgmp = ev.perplexity(&cfg, Some(&qm), 8)?;
+    let fp8 = ev.perplexity(&fp8_cfg, Some(&qm8), 8)?;
+
+    let (base_mem, fgmp_mem, savings) =
+        weight_memory_report(ev.arts.manifest.quantized_elements(), qm.weight_fp8_fraction());
+
+    println!("\n== FGMP 70% FP4 vs all-FP8 ==");
+    println!("perplexity     : {:.4} vs {:.4}  ({:+.2}%)", fgmp.ppl, fp8.ppl,
+             (fgmp.ppl / fp8.ppl - 1.0) * 100.0);
+    println!("weight blocks  : {:.1}% FP8", qm.weight_fp8_fraction() * 100.0);
+    println!("act blocks     : {:.1}% FP8 (measured online by the PPU)",
+             fgmp.mean_act_fp8() * 100.0);
+    println!("weight memory  : {:.3} MiB vs {:.3} MiB  (saves {:.1}%)",
+             fgmp_mem.total_mib(), base_mem.total_mib(), savings * 100.0);
+    Ok(())
+}

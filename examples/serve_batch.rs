@@ -1,0 +1,126 @@
+//! END-TO-END DRIVER: the full system on a real small workload.
+//!
+//! Loads the trained tiny-llama checkpoint, FGMP-quantizes it at the
+//! paper's headline operating point (70% FP4, Fisher policy, global
+//! threshold, SW-Clip), starts the async serving coordinator (router →
+//! dynamic batcher → PJRT executor), and drives it with a mixed stream of
+//! scoring and generation requests from the held-out test corpus. Reports:
+//!
+//!   * perplexity vs the all-FP8 baseline (paper: <1% degradation)
+//!   * simulated accelerator energy vs all-FP8 (paper: ~14% savings)
+//!   * packed weight memory vs FP8 (paper: ~30% savings)
+//!   * serving latency percentiles + throughput from the live coordinator
+//!
+//!     cargo run --release --example serve_batch [artifacts]
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use fgmp::coordinator::{BatchPolicy, Request, RequestKind, Server, ServerConfig};
+use fgmp::eval::Evaluator;
+use fgmp::hwsim::memory::weight_memory_report;
+use fgmp::model::{QuantConfig, QuantizedModel};
+use fgmp::runtime::Runtime;
+
+fn main() -> fgmp::Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let rt = Runtime::cpu()?;
+    let ev = Evaluator::load(&rt, &artifacts, "tiny-llama")?;
+    println!("platform {}  model tiny-llama  B={} S={}", rt.platform(), ev.batch, ev.seq);
+
+    // --- offline: quantize at the headline point + the FP8 baseline ---
+    let cfg = QuantConfig::fgmp(0.7);
+    let t0 = std::time::Instant::now();
+    let qm = QuantizedModel::quantize(&ev.arts, &cfg)?;
+    println!("quantized {} linears in {:?} (weight FP8 {:.1}%)",
+             qm.linears.len(), t0.elapsed(), qm.weight_fp8_fraction() * 100.0);
+    let fp8_cfg = QuantConfig::all_fp8();
+    let qm8 = QuantizedModel::quantize(&ev.arts, &fp8_cfg)?;
+
+    let fp8_rep = ev.perplexity(&fp8_cfg, Some(&qm8), 8)?;
+    let (base_mem, fgmp_mem, mem_savings) =
+        weight_memory_report(ev.arts.manifest.quantized_elements(), qm.weight_fp8_fraction());
+
+    // --- online: the serving coordinator ---
+    let fwd_tail = ev.quant_arg_tail(&cfg, &qm)?;
+    // logits graph has no mask arg; its tail is identical (params, aw, thr).
+    let fwd_hlo = std::path::PathBuf::from(format!("{artifacts}/tiny-llama/fwd_quant.hlo.txt"));
+    let logits_hlo = std::path::PathBuf::from(format!("{artifacts}/tiny-llama/logits_quant.hlo.txt"));
+    let logits_tail = fwd_tail.clone();
+    let shapes = qm.layer_profiles(&ev.arts.manifest, ev.batch * ev.seq, &fp8_rep.act_fp8);
+
+    let scfg = ServerConfig {
+        batch: ev.batch,
+        seq: ev.seq,
+        policy: BatchPolicy::default(),
+        layer_shapes: shapes,
+        queue_depth: 512,
+    };
+    let windows = ev.eval_windows(16);
+    let seq = ev.seq;
+
+    let server = Server::start(scfg, fwd_hlo, fwd_tail, logits_hlo, logits_tail)?;
+    let t0 = std::time::Instant::now();
+
+    // scoring stream: every test window as its own request
+    let mut rxs = Vec::new();
+    let mut id = 0u64;
+    for w in &windows {
+        for row in w.chunks_exact(seq) {
+            let (req, rx) = Request::new(
+                id,
+                RequestKind::Score { tokens: row.to_vec(), mask: vec![1.0; seq] },
+            );
+            id += 1;
+            server.router.submit(req)?;
+            rxs.push(rx);
+        }
+    }
+    // a few generation requests interleaved
+    let mut gen_rxs = Vec::new();
+    for g in 0..4 {
+        let prompt = windows[g][..32].to_vec();
+        let (req, rx) = Request::new(
+            100_000 + g as u64,
+            RequestKind::Generate { prompt, n_tokens: 8 },
+        );
+        server.router.submit(req)?;
+        gen_rxs.push(rx);
+    }
+
+    let mut nll = 0.0;
+    let mut toks = 0.0;
+    for rx in rxs {
+        if let Ok(r) = rx.recv() {
+            if let Some((s, n)) = r.nll {
+                nll += s;
+                toks += n;
+            }
+        }
+    }
+    for rx in gen_rxs {
+        if let Ok(r) = rx.recv() {
+            if let Some(g) = r.generated {
+                println!("generated {:?}... in {:?}", &g[..g.len().min(8)], r.latency);
+            }
+        }
+    }
+    let wall = t0.elapsed();
+    let ppl = (nll / toks).exp();
+    let snap = server.metrics.snapshot();
+
+    println!("\n================= END-TO-END REPORT =================");
+    println!("served         : {} score rows + {} generated tokens in {:.2}s",
+             snap.requests, snap.generated_tokens, wall.as_secs_f64());
+    println!("throughput     : {:.0} scored tokens/s", toks / wall.as_secs_f64());
+    println!("latency        : p50 {:.1} ms  p95 {:.1} ms  p99 {:.1} ms (batch fill {:.0}%)",
+             snap.p50_ms, snap.p95_ms, snap.p99_ms, snap.mean_batch_fill * 100.0);
+    println!("perplexity     : {:.4} vs FP8 {:.4}  ({:+.2}%  | paper: <1%)",
+             ppl, fp8_rep.ppl, (ppl / fp8_rep.ppl - 1.0) * 100.0);
+    println!("sim energy     : {:.3} mJ vs FP8 {:.3} mJ  (savings {:.1}%  | paper: 14%)",
+             snap.energy_j * 1e3, snap.energy_fp8_j * 1e3, snap.energy_savings * 100.0);
+    println!("weight memory  : {:.3} MiB vs FP8 {:.3} MiB (savings {:.1}%  | paper: 30%)",
+             fgmp_mem.total_mib(), base_mem.total_mib(), mem_savings * 100.0);
+    println!("=====================================================");
+    server.shutdown();
+    Ok(())
+}

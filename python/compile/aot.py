@@ -1,0 +1,152 @@
+"""AOT export: lower the L2 graphs to HLO *text* for the Rust runtime.
+
+Interchange is HLO text, NOT `.serialize()`: jax >= 0.5 emits HloModuleProto
+with 64-bit instruction ids that the xla crate's xla_extension 0.5.1 rejects;
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and gen_hlo.py).
+
+Per model we export three graphs (shapes frozen at export; recorded in
+manifest.json together with the exact argument order):
+
+  fwd_quant  (tokens i32[B,S], mask f32[B,S], *params, *act_weights,
+              thresholds f32[NL]) -> (nll_sum f32[B], ntok f32[B],
+              fp8_frac f32[NL])
+      The FGMP-quantized forward through the L1 Pallas kernels. Weights are
+      fed already round-tripped by the Rust quantizer; thresholds are inputs
+      so a single compiled executable serves every ratio R, every policy
+      weighting, and the all-FP8 (-1) / all-FP4 (+1e30) baselines.
+
+  fwd_ref    (tokens, mask, *params) -> (nll_sum, ntok)
+      Unquantized reference (the BF16 row of the paper's tables).
+
+  logits_quant (tokens, *params, *act_weights, thresholds) -> f32[B, V]
+      Last-position logits for the serving/generation path.
+
+Usage: python -m compile.aot --model all --out ../artifacts [--batch 8 --seq 128]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _specs(cfg: model_mod.ModelConfig, batch: int, seq: int):
+    tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    mask = jax.ShapeDtypeStruct((batch, seq), jnp.float32)
+    params = [jax.ShapeDtypeStruct(cfg.param_shape(n), jnp.float32) for n in cfg.param_names()]
+    aw = [jax.ShapeDtypeStruct((k,), jnp.float32) for (_, _, _, k, _) in cfg.linears()]
+    thr = jax.ShapeDtypeStruct((len(cfg.linears()),), jnp.float32)
+    return tok, mask, params, aw, thr
+
+
+def export_model(name: str, out_dir: str, batch: int = 8, seq: int = 128) -> None:
+    cfg = model_mod.FAMILIES[name]
+    mdir = os.path.join(out_dir, name)
+    os.makedirs(mdir, exist_ok=True)
+    pnames = cfg.param_names()
+    linears = cfg.linears()
+    tok, mask, pspecs, awspecs, thrspec = _specs(cfg, batch, seq)
+
+    def fwd_quant(tokens, mask, *rest):
+        params = dict(zip(pnames, rest[: len(pnames)]))
+        aws = list(rest[len(pnames) : len(pnames) + len(linears)])
+        thr = rest[-1]
+        s, n, fr = model_mod.nll(
+            cfg, params, tokens, mask,
+            linear_fn=model_mod.LinearFn.FGMP_PALLAS,
+            act_weights=aws, thresholds=thr,
+        )
+        return s, n, fr
+
+    def fwd_ref(tokens, mask, *rest):
+        params = dict(zip(pnames, rest))
+        s, n, _ = model_mod.nll(cfg, params, tokens, mask)
+        return s, n
+
+    def logits_quant(tokens, *rest):
+        params = dict(zip(pnames, rest[: len(pnames)]))
+        aws = list(rest[len(pnames) : len(pnames) + len(linears)])
+        thr = rest[-1]
+        logits, _ = model_mod.forward(
+            cfg, params, tokens,
+            linear_fn=model_mod.LinearFn.FGMP_PALLAS,
+            act_weights=aws, thresholds=thr,
+        )
+        return (logits[:, -1, :],)
+
+    exports = {
+        "fwd_quant": (fwd_quant, (tok, mask, *pspecs, *awspecs, thrspec)),
+        "fwd_ref": (fwd_ref, (tok, mask, *pspecs)),
+        "logits_quant": (logits_quant, (tok, *pspecs, *awspecs, thrspec)),
+    }
+    for gname, (fn, specs) in exports.items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(mdir, f"{gname}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"[{name}] wrote {gname}: {len(text) / 1e6:.2f} MB", flush=True)
+
+    manifest = {
+        "name": name,
+        "batch": batch,
+        "seq": seq,
+        "vocab": cfg.vocab,
+        "num_linears": len(linears),
+        "param_names": pnames,
+        "param_shapes": {n: list(cfg.param_shape(n)) for n in pnames},
+        "linears": [
+            {"name": nm, "layer": l, "kind": kind, "k_in": k, "n_out": n}
+            for (nm, l, kind, k, n) in linears
+        ],
+        "graphs": {
+            "fwd_quant": {
+                "args": ["tokens", "mask", *pnames,
+                         *[f"act_weight:{nm}" for (nm, *_ ) in linears], "thresholds"],
+                "outputs": ["nll_sum[B]", "ntok[B]", "fp8_frac[NL]"],
+            },
+            "fwd_ref": {
+                "args": ["tokens", "mask", *pnames],
+                "outputs": ["nll_sum[B]", "ntok[B]"],
+            },
+            "logits_quant": {
+                "args": ["tokens", *pnames,
+                         *[f"act_weight:{nm}" for (nm, *_ ) in linears], "thresholds"],
+                "outputs": ["last_logits[B,V]"],
+            },
+        },
+    }
+    with open(os.path.join(mdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="all")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+    names = list(model_mod.FAMILIES) if args.model == "all" else [args.model]
+    for nm in names:
+        export_model(nm, args.out, batch=args.batch, seq=args.seq)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""One-shot artifact build: corpus -> train -> calibrate -> AOT -> tasks.
+
+This is what `make artifacts` runs (a no-op when artifacts/ is up to date;
+the Makefile handles staleness). Python never runs again after this — the
+Rust binary is self-contained against artifacts/.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from . import aot, calibrate, tasks, train
+from . import model as model_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--models", default="all")
+    args = ap.parse_args()
+    names = list(model_mod.FAMILIES) if args.models == "all" else args.models.split(",")
+    t0 = time.time()
+
+    os.makedirs(args.out, exist_ok=True)
+    # Corpus + model training.
+    import sys
+
+    sys.argv = ["train", "--model", "all" if args.models == "all" else names[0],
+                "--steps", str(args.steps), "--out", args.out]
+    if args.models == "all":
+        from . import data as data_mod
+        from . import tensorio
+        corpus = data_mod.TinyCorpus()
+        tr, va, te = corpus.splits()
+        tensorio.save(os.path.join(args.out, "corpus.fgtn"),
+                      {"train": tr[:262144], "valid": va, "test": te})
+        for nm in names:
+            train.train_model(nm, args.out, steps=args.steps)
+    else:
+        train.main()
+
+    for nm in names:
+        calibrate.calibrate_model(nm, args.out)
+    for nm in names:
+        aot.export_model(nm, args.out)
+    sys.argv = ["tasks", "--out", args.out]
+    tasks.main()
+
+    with open(os.path.join(args.out, "BUILD_STAMP.json"), "w") as f:
+        json.dump({"models": names, "steps": args.steps,
+                   "seconds": time.time() - t0}, f)
+    print(f"artifact build complete in {time.time() - t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

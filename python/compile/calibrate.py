@@ -1,0 +1,151 @@
+"""Offline Fisher-information calibration (paper SS3.1-3.2, build-time).
+
+Mirrors the paper's procedure on our substrate: average squared gradients of
+the loss over a calibration sample from the training stream, giving
+
+  * per-element weight Fisher  E[g^2]        -> fisher_w.fgtn
+  * per-input-channel activation Fisher      -> act_fisher.fgtn
+  * per-input-channel mean |X|^2 (OE policy) -> act_msq.fgtn
+  * activation impact-score quantile tables  -> act_score_quantiles.fgtn
+    (per policy in {fisher, qe, oe}: a global 99-point quantile curve and a
+    per-linear table; these are the threshold <-> ratio-R lookup the Rust
+    coordinator uses to set the PPU threshold, eq. 9-10)
+
+The paper used 512 samples x 512 seq on an A100 (<3 min); we use the same
+batch-count scale on CPU with the tiny models and record wall-clock in
+EXPERIMENTS.md.
+
+Usage: python -m compile.calibrate --model tiny-llama --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as model_mod
+from . import tensorio
+from .kernels import ref
+
+QUANTS = np.arange(1, 100, dtype=np.float64) / 100.0  # q = 0.01 .. 0.99
+POLICIES = ("fisher", "qe", "oe")
+
+
+def _loss_with_taps(cfg, params, taps, tokens):
+    return model_mod.mean_loss(cfg, params, tokens, act_taps=taps)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _grad_step(cfg, params, tokens):
+    """One calibration batch: grads w.r.t. weights and linear inputs."""
+    b, s = tokens.shape
+    taps = [jnp.zeros((b * s, k), jnp.float32) for (_, _, _, k, _) in cfg.linears()]
+    gw, gt = jax.grad(_loss_with_taps, argnums=(1, 2))(cfg, params, taps, tokens)
+    fisher_w = {k + ".fisher": g * g for k, g in gw.items() if k.endswith(".w")}
+    act_fisher = [jnp.mean(g * g, axis=0) for g in gt]
+    return fisher_w, act_fisher
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _capture_step(cfg, params, tokens):
+    """One calibration batch: linear inputs + their per-policy block scores."""
+    _, _, inputs = model_mod.forward(cfg, params, tokens, return_inputs=True)
+    msq = [jnp.mean(h * h, axis=0) for h in inputs]
+    return inputs, msq
+
+
+def calibrate_model(name: str, out_dir: str, batches: int = 16, batch: int = 8,
+                    seq: int = 128, seed: int = 7) -> dict:
+    cfg = model_mod.FAMILIES[name]
+    mdir = os.path.join(out_dir, name)
+    params = {k: jnp.asarray(v) for k, v in tensorio.load(os.path.join(mdir, "weights.fgtn")).items()}
+    corpus = data_mod.TinyCorpus()
+    train_stream, _, _ = corpus.splits()
+    gen = data_mod.batches(train_stream, batch, seq, seed=seed)
+    linears = cfg.linears()
+    nl = len(linears)
+
+    t0 = time.time()
+    fisher_w_acc: dict[str, np.ndarray] = {}
+    act_fisher_acc = [np.zeros(k, np.float64) for (_, _, _, k, _) in linears]
+    msq_acc = [np.zeros(k, np.float64) for (_, _, _, k, _) in linears]
+    # Raw per-block scores per linear per policy (for the quantile tables).
+    scores: dict[str, list[list[np.ndarray]]] = {p: [[] for _ in range(nl)] for p in POLICIES}
+
+    # OE policy weighting for activations: mean over output channels of W^2
+    # for the corresponding input channel (static, from the weights).
+    oe_w = [np.asarray(jnp.mean(params[nm + ".w"] ** 2, axis=1)) for (nm, _, _, _, _) in linears]
+
+    for bi in range(batches):
+        tokens = jnp.asarray(next(gen))
+        fw, af = _grad_step(cfg, params, tokens)
+        for k, v in fw.items():
+            fisher_w_acc[k] = fisher_w_acc.get(k, 0) + np.asarray(v, np.float64)
+        for i in range(nl):
+            act_fisher_acc[i] += np.asarray(af[i], np.float64)
+        inputs, msq = _capture_step(cfg, params, tokens)
+        for i in range(nl):
+            msq_acc[i] += np.asarray(msq[i], np.float64)
+        # Block impact scores under each weighting (subsample rows to bound
+        # memory; deterministic stride keeps this reproducible).
+        for i, h in enumerate(inputs):
+            h = np.asarray(h)[:: max(1, len(inputs[i]) // 256)]
+            hj = jnp.asarray(h)
+            k = h.shape[1]
+            w_fisher = jnp.asarray(act_fisher_acc[i] / (bi + 1), jnp.float32)
+            for pol, cw in (("fisher", w_fisher),
+                            ("qe", jnp.ones(k, jnp.float32)),
+                            ("oe", jnp.asarray(oe_w[i], jnp.float32))):
+                sc = np.asarray(ref.block_impact(hj, cw)).ravel()
+                scores[pol][i].append(sc)
+
+    n = float(batches)
+    out_tensors: dict[str, np.ndarray] = {}
+    fisher_w = {k: (v / n).astype(np.float32) for k, v in fisher_w_acc.items()}
+    tensorio.save(os.path.join(mdir, "fisher_w.fgtn"), fisher_w)
+
+    act_fisher = {linears[i][0]: (act_fisher_acc[i] / n).astype(np.float32) for i in range(nl)}
+    tensorio.save(os.path.join(mdir, "act_fisher.fgtn"), act_fisher)
+    act_msq = {linears[i][0]: (msq_acc[i] / n).astype(np.float32) for i in range(nl)}
+    tensorio.save(os.path.join(mdir, "act_msq.fgtn"), act_msq)
+
+    for pol in POLICIES:
+        all_sc = np.concatenate([np.concatenate(scores[pol][i]) for i in range(nl)])
+        out_tensors[f"{pol}.global"] = np.quantile(all_sc, QUANTS).astype(np.float32)
+        local = np.stack(
+            [np.quantile(np.concatenate(scores[pol][i]), QUANTS) for i in range(nl)]
+        ).astype(np.float32)
+        out_tensors[f"{pol}.local"] = local
+    tensorio.save(os.path.join(mdir, "act_score_quantiles.fgtn"), out_tensors)
+
+    wall = time.time() - t0
+    meta = {"name": name, "batches": batches, "batch": batch, "seq": seq,
+            "calib_tokens": batches * batch * seq, "seconds": wall}
+    with open(os.path.join(mdir, "calibrate_meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"[{name}] calibration done in {wall:.1f}s "
+          f"({batches * batch * seq} tokens)", flush=True)
+    return meta
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="all")
+    ap.add_argument("--batches", type=int, default=16)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    names = list(model_mod.FAMILIES) if args.model == "all" else [args.model]
+    for nm in names:
+        calibrate_model(nm, args.out, batches=args.batches)
+
+
+if __name__ == "__main__":
+    main()

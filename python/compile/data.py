@@ -1,0 +1,159 @@
+"""Tiny-corpus: the synthetic stand-in for Wikitext-103 (DESIGN.md SS2).
+
+A first-order Markov language over a 512-token vocabulary with Zipfian
+unigram statistics and sparse per-state successor sets, segmented into
+sentences by a BOS token. This gives a next-token-prediction task with a
+non-trivial entropy floor, so perplexity *degradation* under quantization —
+the paper's accuracy metric — is meaningfully measurable. Everything is
+deterministic in `seed`.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+VOCAB = 512
+BOS = 0
+SUCCESSORS = 24  # sparse out-degree per state
+SENT_LEN_MEAN = 24
+
+
+class TinyCorpus:
+    """Deterministic synthetic corpus with train/valid/test splits."""
+
+    def __init__(self, seed: int = 1234, vocab: int = VOCAB):
+        self.vocab = vocab
+        rng = np.random.RandomState(seed)
+        # Zipfian target unigram distribution over non-BOS tokens.
+        ranks = np.arange(1, vocab, dtype=np.float64)
+        zipf = 1.0 / ranks**1.05
+        self.unigram = zipf / zipf.sum()
+        # Each state gets a sparse successor set biased toward frequent
+        # tokens, with Dirichlet transition probabilities. This makes some
+        # channels / contexts far more predictable than others — the
+        # heterogeneity the FGMP sensitivity policy feeds on.
+        self.succ = np.zeros((vocab, SUCCESSORS), dtype=np.int64)
+        self.succ_p = np.zeros((vocab, SUCCESSORS), dtype=np.float64)
+        for s in range(vocab):
+            cand = rng.choice(vocab - 1, size=SUCCESSORS, replace=False, p=self.unigram) + 1
+            self.succ[s] = cand
+            alpha = rng.uniform(0.05, 0.6)
+            p = rng.dirichlet(np.full(SUCCESSORS, alpha))
+            self.succ_p[s] = p
+        self._cum = np.cumsum(self.succ_p, axis=1)
+
+    def sample(self, n_tokens: int, seed: int) -> np.ndarray:
+        """Sample a token stream of length n_tokens (BOS-delimited sentences)."""
+        rng = np.random.RandomState(seed)
+        out = np.empty(n_tokens, dtype=np.int32)
+        state = BOS
+        remaining = 0
+        # Draw all uniforms up front; the loop is plain indexing.
+        us = rng.random_sample(n_tokens)
+        lens = rng.poisson(SENT_LEN_MEAN, size=n_tokens // 8 + 2).clip(4)
+        li = 0
+        for i in range(n_tokens):
+            if remaining == 0:
+                out[i] = BOS
+                state = BOS
+                remaining = int(lens[li])
+                li += 1
+                continue
+            j = int(np.searchsorted(self._cum[state], us[i]))
+            j = min(j, SUCCESSORS - 1)
+            state = int(self.succ[state, j])
+            out[i] = state
+            remaining -= 1
+        return out
+
+    def splits(self, train: int = 1_000_000, valid: int = 65_536, test: int = 65_536):
+        """The canonical train/valid/test streams (seeds disjoint by design)."""
+        return (
+            self.sample(train, seed=1),
+            self.sample(valid, seed=2),
+            self.sample(test, seed=3),
+        )
+
+    def continuation_logprob_rank(self) -> None:  # pragma: no cover
+        raise NotImplementedError
+
+
+def batches(stream: np.ndarray, batch: int, seq: int, seed: int = 0, loop: bool = True):
+    """Yield (batch, seq) i32 windows sampled uniformly from a token stream."""
+    rng = np.random.RandomState(seed)
+    n = len(stream) - seq - 1
+    while True:
+        idx = rng.randint(0, n, size=batch)
+        yield np.stack([stream[i : i + seq] for i in idx]).astype(np.int32)
+        if not loop:
+            break
+
+
+def eval_windows(stream: np.ndarray, batch: int, seq: int):
+    """Deterministic non-overlapping eval windows covering the stream."""
+    n = (len(stream) - 1) // seq
+    wins = [stream[i * seq : i * seq + seq] for i in range(n)]
+    for i in range(0, len(wins) - batch + 1, batch):
+        yield np.stack(wins[i : i + batch]).astype(np.int32)
+
+
+def make_cloze_suite(
+    corpus: TinyCorpus,
+    stream: np.ndarray,
+    *,
+    n_items: int,
+    ctx_len: int,
+    cont_len: int,
+    hard: bool,
+    seed: int,
+):
+    """Build a 4-way multiple-choice cloze suite (stand-in for MMLU /
+    lm-eval-harness tasks; DESIGN.md SS2).
+
+    Each item: a context window from the held-out stream, the true
+    continuation, and 3 distractors. `hard` distractors are *corruptions*
+    of the true continuation (each token replaced with a uniformly random
+    token with probability ~0.5) — same length and largely overlapping, but
+    the corrupted transitions are off-manifold, so a model that has learned
+    the transition structure prefers the truth. (Same-state Markov
+    re-samples would be statistically indistinguishable from the truth by
+    construction and score at chance.) Easy distractors are Markov samples
+    from a random unrelated state. Scored like lm-eval: argmax of mean
+    per-token logprob over the continuation.
+    """
+    rng = np.random.RandomState(seed)
+    items = []
+    n = len(stream) - ctx_len - cont_len - 1
+    for _ in range(n_items):
+        i = rng.randint(0, n)
+        ctx = stream[i : i + ctx_len].astype(np.int32)
+        true_cont = stream[i + ctx_len : i + ctx_len + cont_len].astype(np.int32)
+        opts = [true_cont]
+        for _ in range(3):
+            if hard:
+                cont = true_cont.copy()
+                # Corrupt ~2 tokens: enough off-manifold signal to beat
+                # chance, few enough that quantization noise can flip the
+                # ranking (keeps the suite discriminative across precisions).
+                flips = rng.random_sample(cont_len) < (2.0 / cont_len)
+                if not flips.any():
+                    flips[rng.randint(cont_len)] = True
+                cont[flips] = rng.randint(1, corpus.vocab, size=int(flips.sum()))
+            else:
+                s = int(rng.randint(1, corpus.vocab))
+                cont = np.empty(cont_len, dtype=np.int32)
+                for t in range(cont_len):
+                    u = rng.random_sample()
+                    j = min(int(np.searchsorted(corpus._cum[s], u)), SUCCESSORS - 1)
+                    s = int(corpus.succ[s, j])
+                    cont[t] = s
+            opts.append(cont)
+        order = rng.permutation(4)
+        items.append(
+            {
+                "context": ctx.tolist(),
+                "options": [opts[o].tolist() for o in order],
+                "answer": int(np.where(order == 0)[0][0]),
+            }
+        )
+    return items

@@ -1,0 +1,69 @@
+"""Emit golden quantization vectors for the Rust codec tests.
+
+The Rust codecs (rust/src/quant/) must match ref.py bit-for-bit; this writes
+a deterministic JSON fixture of inputs and expected round-trips that
+rust/tests/quant_golden.rs replays. Regenerate with:
+
+    python -m compile.golden --out ../rust/tests/golden/quant_golden.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from .kernels import ref
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../rust/tests/golden/quant_golden.json")
+    args = ap.parse_args()
+    rs = np.random.RandomState(42)
+
+    # Mixed-magnitude scalars, including boundary/tie cases for both formats.
+    special = np.array(
+        [0.0, -0.0, 0.25, -0.25, 0.5, 0.75, 1.25, 1.75, 3.5, 5.0, 6.0, 7.0,
+         448.0, 456.0, 500.0, -448.0, 2.0**-9, 2.0**-9 * 0.5, 2.0**-10,
+         2.0**-6, 2.0**-6 * 0.99, 1.0 / 3.0, np.pi, -np.e, 100.0, 447.9],
+        dtype=np.float32,
+    )
+    rand = np.concatenate([
+        rs.randn(200).astype(np.float32) * 3,
+        rs.randn(100).astype(np.float32) * 100,
+        (rs.randn(100) * 0.01).astype(np.float32),
+    ])
+    scalars = np.concatenate([special, rand])
+
+    e4m3 = np.asarray(ref.quant_e4m3(scalars))
+    e2m1 = np.asarray(ref.quant_e2m1(scalars))
+
+    # NVFP4 blocks (dynamic-max scaling) and impact scores.
+    blocks = (rs.randn(32, ref.BLOCK) * np.exp(rs.randn(32, 1))).astype(np.float32)
+    nv, scales = ref.quant_nvfp4(blocks.reshape(1, -1))
+    nv = np.asarray(nv).reshape(32, ref.BLOCK)
+    scales = np.asarray(scales).ravel()
+    cw = np.abs(rs.randn(32 * ref.BLOCK)).astype(np.float32)
+    impact = np.asarray(ref.block_impact(blocks.reshape(1, -1), cw)).ravel()
+
+    out = {
+        "scalars": scalars.tolist(),
+        "e4m3": e4m3.tolist(),
+        "e2m1": e2m1.tolist(),
+        "blocks": blocks.tolist(),
+        "nvfp4_roundtrip": nv.tolist(),
+        "nvfp4_scales": scales.tolist(),
+        "impact_chan_weight": cw.tolist(),
+        "impact_scores": impact.tolist(),
+    }
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(out, f)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""L1 Pallas kernels for FGMP quantization (build-time only).
+
+`ref` is the pure-jnp numerics specification; `nvfp4`/`fp8`/`fgmp_matmul`
+are the Pallas implementations (interpret=True) that lower into the exported
+HLO. The Rust codecs in rust/src/quant/ mirror `ref` bit-for-bit.
+"""
+
+from . import fgmp_matmul, fp8, nvfp4, ref  # noqa: F401

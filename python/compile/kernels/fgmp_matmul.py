@@ -1,0 +1,113 @@
+"""Pallas kernel: the FGMP hot-spot — fused on-the-fly mixed-precision
+activation quantization (the paper's PPU, SS4.2) + matmul against
+pre-quantized weights (the paper's FGMP VMAC datapath, SS4.1).
+
+TPU mapping (DESIGN.md SS3):
+  * grid over (M tiles, N tiles); each step holds an (TILE_M, K) activation
+    tile and a (K, TILE_N) weight tile in VMEM — the scratchpad analogue of
+    the paper's weight-stationary PE collectors.
+  * the paper's four parallel dot-product units become branch-free masked
+    arithmetic: both the FP4-grid and FP8-grid round-trips of each activation
+    block are computed vectorized and selected by the per-block impact-score
+    mask — the SIMD analogue of clock-gating three of four units.
+  * the per-block impact score sum_i g_i^2 (Q4(x_i)-Q8(x_i))^2 > T compare is
+    the PPU; it runs while the tile is resident in VMEM, i.e. "before writing
+    out to memory" exactly as in the paper.
+  * the matmul itself is f32 here (interpret mode); on a real TPU it is the
+    bf16 MXU op while the quantizer is overlappable VPU work.
+
+Outputs both the matmul result and the per-tile count of FP8 blocks so the
+L2 graph can report per-layer precision mixes to the Rust energy model.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .nvfp4 import e4m3_roundtrip, nvfp4_roundtrip_tile
+
+BLOCK = ref.BLOCK
+
+
+def fgmp_quant_tile(x, chan_weight, threshold):
+    """FGMP-quantize a (..., K) tile: returns (mixed tensor, fp8-block mask).
+
+    chan_weight is the per-input-channel sensitivity (K,) — Fisher g^2 for
+    the paper's policy; the weighting array is an argument so the same kernel
+    also runs the Quantization-Error / Output-Error baseline policies.
+    """
+    shape = x.shape
+    q4 = nvfp4_roundtrip_tile(x)
+    q8 = e4m3_roundtrip(x)
+    d = (q4 - q8) * jnp.sqrt(chan_weight)
+    db = d.reshape(*shape[:-1], shape[-1] // BLOCK, BLOCK)
+    score = jnp.sum(db * db, axis=-1)
+    keep_fp8 = score > threshold
+    mask = jnp.repeat(keep_fp8, BLOCK, axis=-1).reshape(shape)
+    return jnp.where(mask, q8, q4), keep_fp8
+
+
+def _fgmp_matmul_kernel(x_ref, w_ref, cw_ref, t_ref, y_ref, nfp8_ref):
+    xq, keep = fgmp_quant_tile(x_ref[...], cw_ref[...], t_ref[0])
+    y_ref[...] = xq @ w_ref[...]
+    # Count of FP8 blocks in this activation tile. Each activation tile is
+    # quantized once per N-tile in this schedule; the host divides by the
+    # N-grid size (grid dims are static, so this is exact).
+    nfp8_ref[0, 0] = jnp.sum(keep.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n"))
+def fgmp_matmul(
+    x: jnp.ndarray,
+    w_q: jnp.ndarray,
+    chan_weight: jnp.ndarray,
+    threshold: jnp.ndarray,
+    tile_m: int = 128,
+    tile_n: int = 128,
+):
+    """Fused FGMP activation-quant + matmul.
+
+    x           : (M, K) f32 activations (high precision, pre-PPU).
+    w_q         : (K, N) f32 weights already round-tripped through FGMP.
+    chan_weight : (K,) per-channel sensitivity for the impact score.
+    threshold   : scalar f32; blocks scoring above stay FP8 (+inf => all FP4,
+                  -inf/negative => all FP8).
+    returns     : (y (M, N) f32, fp8_fraction scalar f32).
+    """
+    m, k = x.shape
+    k2, n = w_q.shape
+    assert k == k2 and k % BLOCK == 0
+    tile_m = min(tile_m, m)
+    tile_n = min(tile_n, n)
+    assert m % tile_m == 0 and n % tile_n == 0
+    gm, gn = m // tile_m, n // tile_n
+    thr = jnp.reshape(threshold.astype(jnp.float32), (1,))
+    y, nfp8 = pl.pallas_call(
+        _fgmp_matmul_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+            jax.ShapeDtypeStruct((gm, gn), jnp.float32),
+        ),
+        grid=(gm, gn),
+        in_specs=[
+            pl.BlockSpec((tile_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tile_n), lambda i, j: (0, j)),
+            pl.BlockSpec((k,), lambda i, j: (0,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((tile_m, tile_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ),
+        interpret=True,
+    )(x.astype(jnp.float32), w_q.astype(jnp.float32), chan_weight.astype(jnp.float32), thr)
+    total_blocks = m * (k // BLOCK)
+    # Every M-tile recomputes the same quantization for each of its gn
+    # N-tiles; average the counts over one N column to undo the replication.
+    frac = jnp.sum(nfp8[:, 0]) / total_blocks
+    return y, frac

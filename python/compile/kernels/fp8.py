@@ -1,0 +1,31 @@
+"""Pallas kernel: plain E4M3 quantize-dequantize (the FGMP high format)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .nvfp4 import e4m3_roundtrip
+
+
+def _fp8_kernel(x_ref, o_ref):
+    o_ref[...] = e4m3_roundtrip(x_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m",))
+def fp8_quant(x: jnp.ndarray, tile_m: int = 128) -> jnp.ndarray:
+    """E4M3 round-trip of a (M, K) tensor, tiled (tile_m, K)."""
+    m, k = x.shape
+    tile_m = min(tile_m, m)
+    assert m % tile_m == 0, f"M={m} must be a multiple of tile_m={tile_m}"
+    return pl.pallas_call(
+        _fp8_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.float32),
+        grid=(m // tile_m,),
+        in_specs=[pl.BlockSpec((tile_m, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile_m, k), lambda i: (i, 0)),
+        interpret=True,
+    )(x.astype(jnp.float32))

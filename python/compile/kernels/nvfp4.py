@@ -1,0 +1,87 @@
+"""Pallas kernel: NVFP4 (E2M1 + per-16-block E4M3 scale) quantize-dequantize.
+
+TPU adaptation of the paper's block quantizer (DESIGN.md SS3): each grid step
+holds one (TILE_M, K) activation tile in VMEM; the E2M1/E4M3 round-trips are
+branch-free element-wise VPU work (exponent extraction via bitcast, quantum
+multiply, ties-to-even round) — the vectorized analogue of the per-lane
+quantizer hardware.
+
+interpret=True everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls, so the kernels lower to plain HLO (see /opt/xla-example/README).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BLOCK = ref.BLOCK
+
+
+def _floor_log2(ax: jnp.ndarray) -> jnp.ndarray:
+    bits = ax.astype(jnp.float32).view(jnp.int32)
+    return (bits >> 23) - 127
+
+
+def e4m3_roundtrip(x: jnp.ndarray) -> jnp.ndarray:
+    """In-kernel E4M3 round-trip; identical math to ref.quant_e4m3."""
+    ax = jnp.abs(x)
+    e = _floor_log2(jnp.where(ax > 0, ax, 1.0))
+    quantum = jnp.where(
+        ax < ref.E4M3_MIN_NORMAL,
+        ref.E4M3_QUANTUM_SUBNORMAL,
+        jnp.exp2((e - 3).astype(jnp.float32)),
+    )
+    q = jnp.round(x / quantum) * quantum
+    return jnp.clip(q, -ref.E4M3_MAX, ref.E4M3_MAX)
+
+
+def e2m1_roundtrip(x: jnp.ndarray) -> jnp.ndarray:
+    """In-kernel E2M1 round-trip; identical math to ref.quant_e2m1."""
+    ax = jnp.abs(x)
+    e = _floor_log2(jnp.where(ax > 0, ax, 1.0))
+    quantum = jnp.where(
+        ax < ref.E2M1_MIN_NORMAL,
+        ref.E2M1_QUANTUM_SUBNORMAL,
+        jnp.exp2((e - 1).astype(jnp.float32)),
+    )
+    q = jnp.round(x / quantum) * quantum
+    return jnp.clip(q, -ref.E2M1_MAX, ref.E2M1_MAX)
+
+
+def nvfp4_roundtrip_tile(x: jnp.ndarray) -> jnp.ndarray:
+    """NVFP4 round-trip of a (..., K) tile with dynamic-max block scales."""
+    shape = x.shape
+    xb = x.reshape(*shape[:-1], shape[-1] // BLOCK, BLOCK)
+    scale = e4m3_roundtrip(jnp.max(jnp.abs(xb), axis=-1) / ref.E2M1_MAX)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = e2m1_roundtrip(xb / safe[..., None]) * safe[..., None]
+    q = jnp.where(scale[..., None] > 0, q, 0.0)
+    return q.reshape(shape)
+
+
+def _nvfp4_kernel(x_ref, o_ref):
+    o_ref[...] = nvfp4_roundtrip_tile(x_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m",))
+def nvfp4_quant(x: jnp.ndarray, tile_m: int = 128) -> jnp.ndarray:
+    """NVFP4 quantize-dequantize of a (M, K) tensor along K, as a Pallas
+    kernel tiled (tile_m, K) so each grid step fits in VMEM."""
+    m, k = x.shape
+    assert k % BLOCK == 0, f"K={k} must be a multiple of {BLOCK}"
+    tile_m = min(tile_m, m)
+    assert m % tile_m == 0, f"M={m} must be a multiple of tile_m={tile_m}"
+    return pl.pallas_call(
+        _nvfp4_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.float32),
+        grid=(m // tile_m,),
+        in_specs=[pl.BlockSpec((tile_m, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile_m, k), lambda i: (i, 0)),
+        interpret=True,
+    )(x.astype(jnp.float32))

@@ -1,0 +1,144 @@
+"""Pure-jnp reference oracles for the FGMP quantization numerics.
+
+This module is the *specification* of the number formats used throughout the
+reproduction. The Pallas kernels (nvfp4.py / fp8.py / fgmp_matmul.py) and the
+bit-exact Rust codecs (rust/src/quant/) must agree with these functions to
+the last ULP; pytest/hypothesis and the checked-in golden vectors enforce it.
+
+Formats
+-------
+* FP8 E4M3 (OCP "FN" variant): bias 7, 3 mantissa bits, max normal 448,
+  min normal 2^-6, min subnormal 2^-9. No infinities; we saturate to +-448.
+* FP4 E2M1: bias 1, 1 mantissa bit, grid {0, 0.5, 1, 1.5, 2, 3, 4, 6} with
+  sign. Saturates to +-6.
+* NVFP4: 16-element blocks of E2M1 values with one E4M3 scale per block
+  (scale = round_e4m3(absmax / 6) by default, or an explicit clipped scale).
+
+All rounding is round-to-nearest, ties-to-even on the quantized mantissa
+(implemented as `round(x / quantum)` with jnp.round, which is ties-to-even),
+matching `f32::round_ties_even` on the Rust side.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Format constants (shared with the Rust side; see rust/src/quant/fp{4,8}.rs).
+E4M3_MAX = 448.0
+E4M3_MIN_NORMAL = 2.0**-6
+E4M3_QUANTUM_SUBNORMAL = 2.0**-9  # spacing below the min normal
+E2M1_MAX = 6.0
+E2M1_MIN_NORMAL = 1.0
+E2M1_QUANTUM_SUBNORMAL = 0.5
+BLOCK = 16  # NVFP4 / FGMP block size (= VMAC vector length, paper SS4)
+
+
+def _floor_log2(x: jnp.ndarray) -> jnp.ndarray:
+    """floor(log2(|x|)) for positive finite x, via the f32 exponent field."""
+    bits = jnp.abs(x).astype(jnp.float32).view(jnp.int32)
+    return (bits >> 23) - 127
+
+
+def quant_e4m3(x: jnp.ndarray) -> jnp.ndarray:
+    """Round-trip f32 -> E4M3 -> f32 (saturating, RNE)."""
+    x = x.astype(jnp.float32)
+    ax = jnp.abs(x)
+    e = _floor_log2(jnp.where(ax > 0, ax, 1.0))
+    # 3 mantissa bits: spacing within binade 2^e is 2^(e-3); subnormals flat.
+    quantum = jnp.where(
+        ax < E4M3_MIN_NORMAL,
+        E4M3_QUANTUM_SUBNORMAL,
+        jnp.exp2((e - 3).astype(jnp.float32)),
+    )
+    q = jnp.round(x / quantum) * quantum
+    # Re-rounding can bump into the next binade (e.g. 0.9999 -> 1.0): that is
+    # exactly representable, so no correction needed. Saturate the top.
+    return jnp.clip(q, -E4M3_MAX, E4M3_MAX)
+
+
+def quant_e2m1(x: jnp.ndarray) -> jnp.ndarray:
+    """Round-trip f32 -> E2M1 -> f32 (saturating, RNE). Input is pre-scaled."""
+    x = x.astype(jnp.float32)
+    ax = jnp.abs(x)
+    e = _floor_log2(jnp.where(ax > 0, ax, 1.0))
+    # 1 mantissa bit: spacing within binade 2^e is 2^(e-1); subnormals 0.5.
+    quantum = jnp.where(
+        ax < E2M1_MIN_NORMAL,
+        E2M1_QUANTUM_SUBNORMAL,
+        jnp.exp2((e - 1).astype(jnp.float32)),
+    )
+    q = jnp.round(x / quantum) * quantum
+    return jnp.clip(q, -E2M1_MAX, E2M1_MAX)
+
+
+def nvfp4_scale(block_absmax: jnp.ndarray) -> jnp.ndarray:
+    """Dynamic-max per-block scale: round_e4m3(absmax/6). A zero block gets
+    scale 0, which the caller substitutes with 1 to avoid 0/0."""
+    return quant_e4m3(block_absmax / E2M1_MAX)
+
+
+def quant_nvfp4(x: jnp.ndarray, scale: jnp.ndarray | None = None):
+    """Round-trip a tensor through NVFP4 along its last axis.
+
+    x        : (..., K) with K % 16 == 0.
+    scale    : optional explicit per-block scales (..., K//16); when None the
+               dynamic-max scale is used (the paper's online activation path).
+    returns  : (dequantized tensor, per-block scales actually used).
+    """
+    orig = x.shape
+    xb = x.reshape(*orig[:-1], orig[-1] // BLOCK, BLOCK).astype(jnp.float32)
+    if scale is None:
+        scale = nvfp4_scale(jnp.max(jnp.abs(xb), axis=-1))
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = quant_e2m1(xb / safe[..., None]) * safe[..., None]
+    q = jnp.where(scale[..., None] > 0, q, 0.0)
+    return q.reshape(orig), scale
+
+
+def quant_fp8_block(x: jnp.ndarray) -> jnp.ndarray:
+    """Round-trip through plain (unscaled) E4M3 — the paper's high format."""
+    return quant_e4m3(x)
+
+
+def block_impact(x: jnp.ndarray, chan_weight: jnp.ndarray) -> jnp.ndarray:
+    """Paper Eq. 8: per-block sensitivity-weighted increase in quantization
+    error when stored in NVFP4 instead of FP8.
+
+    x           : (..., K) values.
+    chan_weight : (K,) per-input-channel weighting (Fisher g^2 for the FGMP
+                  policy; ones for the Quantization-Error baseline; mean |Q|^2
+                  of the other tensor for the Output-Error baseline).
+    returns     : (..., K//16) impact scores.
+    """
+    q4, _ = quant_nvfp4(x)
+    q8 = quant_fp8_block(x)
+    d = (q4 - q8) * jnp.sqrt(chan_weight.astype(jnp.float32))
+    db = d.reshape(*x.shape[:-1], x.shape[-1] // BLOCK, BLOCK)
+    return jnp.sum(db * db, axis=-1)
+
+
+def fgmp_quant(x: jnp.ndarray, chan_weight: jnp.ndarray, threshold):
+    """Reference FGMP activation quantizer (the PPU, paper SS4.2).
+
+    Blocks whose impact score exceeds `threshold` are kept in FP8; the rest
+    are quantized to NVFP4. Returns (mixed round-trip tensor, fp8 block mask).
+    """
+    q4, _ = quant_nvfp4(x)
+    q8 = quant_fp8_block(x)
+    score = block_impact(x, chan_weight)
+    keep_fp8 = score > threshold
+    mask = jnp.repeat(keep_fp8, BLOCK, axis=-1).reshape(x.shape)
+    return jnp.where(mask, q8, q4), keep_fp8
+
+
+def fgmp_matmul_ref(x, w_q, chan_weight, threshold):
+    """Reference for the fused FGMP kernel: quantize activations to mixed
+    precision on the fly, then matmul against pre-quantized weights.
+
+    x: (M, K) f32, w_q: (K, N) already round-tripped weights.
+    Returns (y (M, N), fp8_fraction scalar).
+    """
+    xq, keep = fgmp_quant(x, chan_weight, threshold)
+    y = xq @ w_q
+    frac = jnp.mean(keep.astype(jnp.float32))
+    return y, frac

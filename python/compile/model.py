@@ -1,0 +1,303 @@
+"""L2: the transformer model families and their FGMP-quantized forward.
+
+Three tiny families stand in for the paper's Llama-2 / GPT3 / Nemotron-4
+model sets (DESIGN.md SS2): same block structure as the originals, trained at
+build time on tiny-corpus. The *quantized* forward threads every linear layer
+(QKV / O_proj / FC1 / FC2, exactly the four the paper profiles in Fig. 7)
+through the L1 `fgmp_matmul` Pallas kernel; per-linear activation sensitivity
+vectors and thresholds are graph *inputs*, so one exported HLO serves every
+mixed-precision ratio, every assignment policy, and the all-FP8/all-FP4
+baselines. Weights enter the graph already round-tripped (the Rust side owns
+weight-side FGMP + SW-Clip), and norms/embeddings/attention internals stay in
+high precision, matching the paper's scope (linear layers only).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.fgmp_matmul import fgmp_matmul
+
+LINEAR_KINDS = ("qkv_proj", "o_proj", "fc1", "fc2")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture descriptor for one model family member."""
+
+    name: str
+    vocab: int = 512
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 704
+    act: str = "swiglu"  # swiglu | gelu | relu2
+    norm: str = "rms"  # rms | ln
+    pos: str = "rope"  # rope | learned
+    max_seq: int = 512
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def fc1_out(self) -> int:
+        # SwiGLU fuses gate+up into one FC1 matmul (2*d_ff outputs).
+        return 2 * self.d_ff if self.act == "swiglu" else self.d_ff
+
+    def linears(self):
+        """The linear-layer inventory: (name, layer, kind, k_in, n_out)."""
+        out = []
+        for l in range(self.n_layers):
+            out.append((f"blk{l}.qkv_proj", l, "qkv_proj", self.d_model, 3 * self.d_model))
+            out.append((f"blk{l}.o_proj", l, "o_proj", self.d_model, self.d_model))
+            out.append((f"blk{l}.fc1", l, "fc1", self.d_model, self.fc1_out()))
+            out.append((f"blk{l}.fc2", l, "fc2", self.d_ff, self.d_model))
+        return out
+
+    def param_names(self):
+        """Ordered parameter list — this order is the HLO argument order."""
+        names = ["embed"]
+        if self.pos == "learned":
+            names.append("pos_embed")
+        for l in range(self.n_layers):
+            names += [
+                f"blk{l}.norm1",
+                f"blk{l}.qkv_proj.w",
+                f"blk{l}.o_proj.w",
+                f"blk{l}.norm2",
+                f"blk{l}.fc1.w",
+                f"blk{l}.fc2.w",
+            ]
+            if self.norm == "ln":
+                names += [f"blk{l}.norm1.b", f"blk{l}.norm2.b"]
+        names.append("final_norm")
+        if self.norm == "ln":
+            names.append("final_norm.b")
+        return names
+
+    def param_shape(self, name: str):
+        d, dff = self.d_model, self.d_ff
+        if name == "embed":
+            return (self.vocab, d)
+        if name == "pos_embed":
+            return (self.max_seq, d)
+        if name.endswith("qkv_proj.w"):
+            return (d, 3 * d)
+        if name.endswith("o_proj.w"):
+            return (d, d)
+        if name.endswith("fc1.w"):
+            return (d, self.fc1_out())
+        if name.endswith("fc2.w"):
+            return (dff, d)
+        return (d,)  # norms and biases
+
+
+# The published model roster -> our build-time stand-ins (DESIGN.md SS2).
+FAMILIES: dict[str, ModelConfig] = {
+    "tiny-llama": ModelConfig(
+        name="tiny-llama", d_model=256, n_layers=4, n_heads=4, d_ff=704,
+        act="swiglu", norm="rms", pos="rope",
+    ),
+    "tiny-llama-l": ModelConfig(
+        name="tiny-llama-l", d_model=320, n_layers=6, n_heads=5, d_ff=880,
+        act="swiglu", norm="rms", pos="rope",
+    ),
+    "tiny-gpt": ModelConfig(
+        name="tiny-gpt", d_model=192, n_layers=4, n_heads=4, d_ff=768,
+        act="gelu", norm="ln", pos="learned",
+    ),
+    "tiny-gpt-l": ModelConfig(
+        name="tiny-gpt-l", d_model=288, n_layers=5, n_heads=6, d_ff=1152,
+        act="gelu", norm="ln", pos="learned",
+    ),
+    "tiny-nemotron": ModelConfig(
+        name="tiny-nemotron", d_model=224, n_layers=6, n_heads=4, d_ff=896,
+        act="relu2", norm="rms", pos="rope",
+    ),
+}
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict[str, jnp.ndarray]:
+    """Scaled-normal init (GPT-2 style residual scaling)."""
+    rng = np.random.RandomState(seed)
+    params: dict[str, jnp.ndarray] = {}
+    resid_scale = 1.0 / math.sqrt(2 * cfg.n_layers)
+    for name in cfg.param_names():
+        shape = cfg.param_shape(name)
+        if name.endswith(".b"):
+            arr = np.zeros(shape, np.float32)
+        elif name.endswith("norm1") or name.endswith("norm2") or name == "final_norm":
+            arr = np.ones(shape, np.float32)
+        elif name.endswith(".w"):
+            std = 0.02 * (resid_scale if ("o_proj" in name or "fc2" in name) else 1.0)
+            arr = rng.randn(*shape).astype(np.float32) * std * math.sqrt(256 / shape[0])
+        else:  # embeddings
+            arr = rng.randn(*shape).astype(np.float32) * 0.02
+        params[name] = jnp.asarray(arr)
+    return params
+
+
+def _norm(cfg: ModelConfig, params, prefix: str, x):
+    g = params[prefix]
+    if cfg.norm == "rms":
+        return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-5) * g
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g + params[prefix + ".b"]
+
+
+def _rope(x: jnp.ndarray) -> jnp.ndarray:
+    """Rotary position embedding over (B, H, S, Dh)."""
+    b, h, s, dh = x.shape
+    half = dh // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    t = jnp.arange(s, dtype=jnp.float32)[:, None] * freqs[None, :]
+    cos, sin = jnp.cos(t), jnp.sin(t)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _mlp_act(cfg: ModelConfig, f1: jnp.ndarray) -> jnp.ndarray:
+    if cfg.act == "swiglu":
+        gate, up = jnp.split(f1, 2, axis=-1)
+        return jax.nn.silu(gate) * up
+    if cfg.act == "gelu":
+        return jax.nn.gelu(f1)
+    return jnp.square(jax.nn.relu(f1))  # Nemotron-style squared ReLU
+
+
+def _attention(cfg: ModelConfig, qkv: jnp.ndarray) -> jnp.ndarray:
+    """Causal MHA from fused qkv (B, S, 3D) -> (B, S, D). High precision."""
+    b, s, _ = qkv.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    if cfg.pos == "rope":
+        q, k = _rope(q), _rope(k)
+    att = jnp.einsum("bhsd,bhtd->bhst", q, k) / math.sqrt(dh)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(mask, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", att, v)
+    return out.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+class LinearFn:
+    """How the forward applies a linear layer.
+
+    PLAIN      : f32 matmul (training / BF16 reference graph).
+    FGMP_PALLAS: the L1 fused kernel (exported quantized graph).
+    FGMP_REF   : pure-jnp oracle (calibration + python-side tests; has a
+                 well-defined VJP, unlike interpret-mode pallas_call reverse).
+    """
+
+    PLAIN, FGMP_PALLAS, FGMP_REF = "plain", "fgmp_pallas", "fgmp_ref"
+
+
+def forward(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jnp.ndarray,
+    *,
+    linear_fn: str = LinearFn.PLAIN,
+    act_weights: list | None = None,
+    thresholds: jnp.ndarray | None = None,
+    act_taps: list | None = None,
+    return_inputs: bool = False,
+):
+    """Transformer forward -> (logits, per-linear FP8 block fractions).
+
+    act_weights : per-linear (K,) channel-sensitivity vectors (quant modes).
+    thresholds  : (num_linears,) impact-score thresholds (quant modes).
+    act_taps    : optional list of zero tensors added to each linear input;
+                  grads w.r.t. them give the activation Fisher (calibrate.py).
+    return_inputs: also return the (rows, K) input of every linear layer
+                  (calibration statistics; adds a third output).
+    """
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    if cfg.pos == "learned":
+        x = x + params["pos_embed"][:s][None, :, :]
+
+    li = 0
+    fracs = []
+    captured = []
+
+    def linear(h2d, wname):
+        nonlocal li
+        w = params[wname + ".w"]
+        if act_taps is not None:
+            h2d = h2d + act_taps[li]
+        if return_inputs:
+            captured.append(h2d)
+        if linear_fn == LinearFn.PLAIN:
+            y, frac = h2d @ w, jnp.float32(0.0)
+        elif linear_fn == LinearFn.FGMP_PALLAS:
+            m, n = h2d.shape[0], w.shape[1]
+            k = w.shape[0]
+            # Full-width N tile: quantization runs once per M tile (no
+            # replication). M tiles as large as the VMEM budget allows
+            # (~4 MiB of f32 per grid step) — fewer interpret-mode grid
+            # iterations, ~20% faster per kernel (EXPERIMENTS.md §Perf L2).
+            budget = 4 * 1024 * 1024 // 4  # f32 elements
+            tile_m = m
+            while tile_m > 128 and (tile_m * (k + n) > budget or m % tile_m != 0):
+                tile_m //= 2
+            if m % tile_m != 0:
+                tile_m = m
+            y, frac = fgmp_matmul(h2d, w, act_weights[li], thresholds[li],
+                                  tile_m=tile_m, tile_n=n)
+        else:
+            y, frac = ref.fgmp_matmul_ref(h2d, w, act_weights[li], thresholds[li])
+        li += 1
+        fracs.append(frac)
+        return y
+
+    for l in range(cfg.n_layers):
+        h = _norm(cfg, params, f"blk{l}.norm1", x)
+        qkv = linear(h.reshape(b * s, -1), f"blk{l}.qkv_proj").reshape(b, s, -1)
+        attn = _attention(cfg, qkv)
+        o = linear(attn.reshape(b * s, -1), f"blk{l}.o_proj").reshape(b, s, -1)
+        x = x + o
+        h = _norm(cfg, params, f"blk{l}.norm2", x)
+        f1 = linear(h.reshape(b * s, -1), f"blk{l}.fc1").reshape(b, s, -1)
+        act = _mlp_act(cfg, f1)
+        f2 = linear(act.reshape(b * s, -1), f"blk{l}.fc2").reshape(b, s, -1)
+        x = x + f2
+
+    x = _norm(cfg, params, "final_norm", x)
+    logits = x @ params["embed"].T  # tied LM head (high precision, as in paper)
+    fr = jnp.stack(fracs) if fracs else jnp.zeros((0,))
+    if return_inputs:
+        return logits, fr, captured
+    return logits, fr
+
+
+def nll(cfg, params, tokens, mask, **kw):
+    """Per-sequence masked next-token NLL.
+
+    tokens (B, S) i32; mask (B, S) f32 — position t is scored iff mask[t]=1,
+    predicting tokens[t] from tokens[<t]. Returns (nll_sum (B,), ntok (B,),
+    fp8 fractions (num_linears,)).
+    """
+    logits, fracs = forward(cfg, params, tokens, **kw)
+    logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    tgt = tokens[:, 1:]
+    token_lp = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    m = mask[:, 1:]
+    return -(token_lp * m).sum(axis=-1), m.sum(axis=-1), fracs
+
+
+def mean_loss(cfg, params, tokens, **kw):
+    """Scalar mean NLL over all next-token positions (training objective)."""
+    mask = jnp.ones(tokens.shape, jnp.float32)
+    s, n, _ = nll(cfg, params, tokens, mask, **kw)
+    return s.sum() / n.sum()

@@ -1,0 +1,54 @@
+"""Generate the synthetic downstream-task suites (stand-ins for MMLU and the
+lm-eval-harness selection; DESIGN.md SS2, paper Tables 2-3).
+
+Six 4-way multiple-choice suites over held-out tiny-corpus text, scored like
+lm-eval (argmax mean per-token logprob over the continuation):
+
+  mmlu-tiny   : hard distractors (same-state Markov continuations), long ctx
+  race-tiny   : long context, medium continuations
+  hellaswag-tiny, piqa-tiny, winogrande-tiny, boolq-tiny : varying
+                context/continuation lengths and distractor difficulty.
+
+Usage: python -m compile.tasks --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from . import data as data_mod
+
+SUITES = {
+    # name: (n_items, ctx_len, cont_len, hard, seed)
+    "mmlu-tiny": (256, 48, 8, True, 11),
+    "race-tiny": (192, 64, 12, True, 12),
+    "hellaswag-tiny": (192, 32, 10, True, 13),
+    "piqa-tiny": (192, 24, 8, False, 14),
+    "winogrande-tiny": (192, 40, 6, True, 15),
+    "boolq-tiny": (192, 56, 8, False, 16),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    corpus = data_mod.TinyCorpus()
+    _, _, test_stream = corpus.splits()
+    tdir = os.path.join(args.out, "tasks")
+    os.makedirs(tdir, exist_ok=True)
+    for name, (n, ctx, cont, hard, seed) in SUITES.items():
+        items = data_mod.make_cloze_suite(
+            corpus, test_stream, n_items=n, ctx_len=ctx, cont_len=cont,
+            hard=hard, seed=seed,
+        )
+        with open(os.path.join(tdir, f"{name}.json"), "w") as f:
+            json.dump({"name": name, "ctx_len": ctx, "cont_len": cont,
+                       "items": items}, f)
+        print(f"wrote {name}: {n} items", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""FGTN tensor-container format: the python->rust artifact interchange.
+
+Layout (little-endian):
+    magic   b"FGTN"
+    u32     version (1)
+    u32     tensor count
+    per tensor:
+        u16     name length, then utf-8 name bytes
+        u8      dtype (0 = f32, 1 = i32, 2 = u8)
+        u8      ndim
+        u64*    dims
+        bytes   row-major payload
+
+The Rust reader/writer lives in rust/src/io/tensorfile.rs; the two must stay
+in lock-step (enforced by the round-trip integration test, which reads a
+python-written file from Rust and re-writes it byte-identically).
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"FGTN"
+VERSION = 1
+_DTYPES = {0: np.float32, 1: np.int32, 2: np.uint8}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1, np.dtype(np.uint8): 2}
+
+
+def save(path: str, tensors: dict[str, np.ndarray]) -> None:
+    """Write an ordered dict of arrays; iteration order is preserved."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _CODES:
+                if np.issubdtype(arr.dtype, np.floating):
+                    arr = arr.astype(np.float32)
+                elif np.issubdtype(arr.dtype, np.integer):
+                    arr = arr.astype(np.int32)
+                else:
+                    raise TypeError(f"unsupported dtype {arr.dtype} for {name}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _CODES[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(arr.tobytes())
+
+
+def load(path: str) -> dict[str, np.ndarray]:
+    """Read a file written by save() (or by the Rust writer)."""
+    out: dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        version, count = struct.unpack("<II", f.read(8))
+        if version != VERSION:
+            raise ValueError(f"{path}: unsupported version {version}")
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode("utf-8")
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}Q", f.read(8 * ndim)) if ndim else ()
+            dt = np.dtype(_DTYPES[code])
+            n = int(np.prod(dims)) if ndim else 1
+            out[name] = np.frombuffer(f.read(n * dt.itemsize), dtype=dt).reshape(dims).copy()
+    return out

@@ -1,0 +1,137 @@
+"""Build-time training of the tiny model families on tiny-corpus.
+
+AdamW + cosine decay; deliberately short runs (a few hundred steps on CPU)
+whose only job is to produce transformers with *trained* weight/activation
+statistics — heavy-tailed, outlier-carrying — so the FGMP sensitivity policy
+has the structure the paper exploits. Checkpoints land in artifacts/<model>/
+via the FGTN container.
+
+Usage: python -m compile.train --model tiny-llama --steps 400 --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import math
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as model_mod
+from . import tensorio
+
+
+def adamw_init(params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()}, "t": jnp.int32(0)}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "lr", "wd", "warmup", "total"))
+def train_step(cfg, params, opt, tokens, lr=3e-3, wd=0.01, warmup=40, total=400):
+    loss, grads = jax.value_and_grad(lambda p: model_mod.mean_loss(cfg, p, tokens))(params)
+    t = opt["t"] + 1
+    tf = t.astype(jnp.float32)
+    sched = jnp.minimum(tf / warmup, 0.5 * (1 + jnp.cos(math.pi * jnp.minimum(tf / total, 1.0))))
+    step_lr = lr * sched
+    # global-norm clip at 1.0
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads.values()))
+    scale = jnp.minimum(1.0, 1.0 / (gnorm + 1e-9))
+    b1, b2, eps = 0.9, 0.95, 1e-8
+    new_p, new_m, new_v = {}, {}, {}
+    for k, g in grads.items():
+        g = g * scale
+        m = b1 * opt["m"][k] + (1 - b1) * g
+        v = b2 * opt["v"][k] + (1 - b2) * g * g
+        mhat = m / (1 - b1**tf)
+        vhat = v / (1 - b2**tf)
+        upd = mhat / (jnp.sqrt(vhat) + eps)
+        decay = wd if k.endswith(".w") or "embed" in k else 0.0
+        new_p[k] = params[k] - step_lr * (upd + decay * params[k])
+        new_m[k], new_v[k] = m, v
+    return new_p, {"m": new_m, "v": new_v, "t": t}, loss
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def eval_nll(cfg, params, tokens):
+    mask = jnp.ones(tokens.shape, jnp.float32)
+    s, n, _ = model_mod.nll(cfg, params, tokens, mask)
+    return s.sum(), n.sum()
+
+
+def evaluate(cfg, params, stream, batch=8, seq=128, max_batches=16):
+    tot_s, tot_n = 0.0, 0.0
+    for i, win in enumerate(data_mod.eval_windows(stream, batch, seq)):
+        if i >= max_batches:
+            break
+        s, n = eval_nll(cfg, params, jnp.asarray(win))
+        tot_s += float(s)
+        tot_n += float(n)
+    return math.exp(tot_s / tot_n)
+
+
+def train_model(name: str, out_dir: str, steps: int = 400, batch: int = 32, seq: int = 64,
+                seed: int = 0, log_every: int = 50) -> dict:
+    cfg = model_mod.FAMILIES[name]
+    corpus = data_mod.TinyCorpus()
+    train_stream, valid_stream, _ = corpus.splits()
+    params = model_mod.init_params(cfg, seed=seed)
+    opt = adamw_init(params)
+    gen = data_mod.batches(train_stream, batch, seq, seed=seed + 100)
+    t0 = time.time()
+    losses = []
+    for step in range(steps):
+        tokens = jnp.asarray(next(gen))
+        params, opt, loss = train_step(cfg, params, opt, tokens, total=steps)
+        losses.append(float(loss))
+        if (step + 1) % log_every == 0 or step == 0:
+            print(f"[{name}] step {step + 1}/{steps} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+    ppl = evaluate(cfg, params, valid_stream)
+    n_params = sum(int(np.prod(v.shape)) for v in params.values())
+    print(f"[{name}] done: valid ppl {ppl:.3f}, {n_params / 1e6:.2f}M params, "
+          f"{time.time() - t0:.1f}s", flush=True)
+
+    mdir = os.path.join(out_dir, name)
+    os.makedirs(mdir, exist_ok=True)
+    tensorio.save(os.path.join(mdir, "weights.fgtn"),
+                  {k: np.asarray(v) for k, v in params.items()})
+    meta = {
+        "name": name,
+        "config": {k: getattr(cfg, k) for k in
+                   ("vocab", "d_model", "n_layers", "n_heads", "d_ff", "act", "norm", "pos", "max_seq")},
+        "steps": steps,
+        "valid_ppl": ppl,
+        "n_params": n_params,
+        "loss_curve": losses[:: max(1, len(losses) // 100)],
+        "train_seconds": time.time() - t0,
+    }
+    with open(os.path.join(mdir, "train_meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return meta
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="all")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    names = list(model_mod.FAMILIES) if args.model == "all" else [args.model]
+    # Persist the corpus splits once for the Rust evaluator.
+    corpus = data_mod.TinyCorpus()
+    train_s, valid_s, test_s = corpus.splits()
+    os.makedirs(args.out, exist_ok=True)
+    tensorio.save(os.path.join(args.out, "corpus.fgtn"),
+                  {"train": train_s[:262144], "valid": valid_s, "test": test_s})
+    for n in names:
+        train_model(n, args.out, steps=args.steps)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Corpus determinism, cloze-suite sanity, and FGTN container round-trips."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import tensorio
+
+
+class TestCorpus:
+    def test_deterministic(self):
+        c1, c2 = D.TinyCorpus(seed=1234), D.TinyCorpus(seed=1234)
+        np.testing.assert_array_equal(c1.sample(2000, 5), c2.sample(2000, 5))
+
+    def test_seed_changes_stream(self):
+        c = D.TinyCorpus()
+        assert not np.array_equal(c.sample(2000, 1), c.sample(2000, 2))
+
+    def test_token_range(self):
+        s = D.TinyCorpus().sample(5000, 1)
+        assert s.min() >= 0 and s.max() < D.VOCAB
+
+    def test_zipf_head_is_heavy(self):
+        """Frequent tokens dominate: top-32 tokens cover > 35% of the stream."""
+        s = D.TinyCorpus().sample(50_000, 9)
+        s = s[s != D.BOS]
+        counts = np.bincount(s, minlength=D.VOCAB)
+        top = np.sort(counts)[::-1][:32].sum()
+        assert top / counts.sum() > 0.35
+
+    def test_splits_disjoint_seeds(self):
+        tr, va, te = D.TinyCorpus().splits(train=4096, valid=4096, test=4096)
+        assert not np.array_equal(tr[:4096], va)
+        assert not np.array_equal(va, te)
+
+    def test_markov_structure_learnable(self):
+        """Bigram model on train beats unigram on held-out (there IS signal)."""
+        c = D.TinyCorpus()
+        tr, va, _ = c.splits(train=200_000, valid=20_000, test=1)
+        big = np.ones((D.VOCAB, D.VOCAB))
+        np.add.at(big, (tr[:-1], tr[1:]), 1)
+        big /= big.sum(1, keepdims=True)
+        uni = np.bincount(tr, minlength=D.VOCAB) + 1.0
+        uni /= uni.sum()
+        nll_b = -np.mean(np.log(big[va[:-1], va[1:]]))
+        nll_u = -np.mean(np.log(uni[va[1:]]))
+        assert nll_b < nll_u - 0.5
+
+
+class TestBatches:
+    def test_shapes_and_determinism(self):
+        s = D.TinyCorpus().sample(10_000, 1)
+        g1 = D.batches(s, 4, 32, seed=3)
+        g2 = D.batches(s, 4, 32, seed=3)
+        a, b = next(g1), next(g2)
+        assert a.shape == (4, 32) and a.dtype == np.int32
+        np.testing.assert_array_equal(a, b)
+
+    def test_eval_windows_cover_nonoverlapping(self):
+        s = np.arange(1000, dtype=np.int32)
+        wins = list(D.eval_windows(s, 2, 100))
+        flat = np.concatenate([w.ravel() for w in wins])
+        assert len(flat) == len(np.unique(flat))  # no overlap
+
+
+class TestCloze:
+    def test_suite_structure(self):
+        c = D.TinyCorpus()
+        _, _, te = c.splits(train=1, valid=1, test=30_000)
+        items = D.make_cloze_suite(c, te, n_items=16, ctx_len=24, cont_len=8,
+                                   hard=True, seed=5)
+        assert len(items) == 16
+        for it in items:
+            assert len(it["context"]) == 24
+            assert len(it["options"]) == 4
+            assert all(len(o) == 8 for o in it["options"])
+            assert 0 <= it["answer"] < 4
+
+    def test_answers_not_constant(self):
+        c = D.TinyCorpus()
+        _, _, te = c.splits(train=1, valid=1, test=30_000)
+        items = D.make_cloze_suite(c, te, n_items=64, ctx_len=16, cont_len=4,
+                                   hard=False, seed=6)
+        assert len({it["answer"] for it in items}) == 4  # shuffled placement
+
+
+class TestTensorIO:
+    def test_roundtrip(self):
+        rs = np.random.RandomState(0)
+        tensors = {
+            "a": rs.randn(3, 4).astype(np.float32),
+            "b": rs.randint(-5, 5, (7,)).astype(np.int32),
+            "c": (rs.rand(2, 2, 2) * 255).astype(np.uint8),
+            "scalarish": np.float32([3.5]),
+        }
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "t.fgtn")
+            tensorio.save(p, tensors)
+            back = tensorio.load(p)
+        assert list(back) == list(tensors)  # order preserved
+        for k in tensors:
+            np.testing.assert_array_equal(back[k], tensors[k])
+            assert back[k].dtype == tensors[k].dtype
+
+    def test_f64_downcast(self):
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "t.fgtn")
+            tensorio.save(p, {"x": np.array([1.0, 2.0])})
+            assert tensorio.load(p)["x"].dtype == np.float32
+
+    def test_bad_magic_rejected(self):
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "bad.fgtn")
+            with open(p, "wb") as f:
+                f.write(b"NOPE" + b"\x00" * 16)
+            with pytest.raises(ValueError):
+                tensorio.load(p)

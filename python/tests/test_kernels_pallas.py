@@ -1,0 +1,98 @@
+"""Pallas kernels vs the pure-jnp oracle: the core L1 correctness signal.
+
+Hypothesis sweeps shapes/magnitudes/thresholds; every comparison is exact
+(same math, same rounding) except the matmul accumulation which gets a loose
+float tolerance.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fgmp_matmul import fgmp_matmul, fgmp_quant_tile
+from compile.kernels.fp8 import fp8_quant
+from compile.kernels.nvfp4 import nvfp4_quant
+
+SHAPES = st.sampled_from([(16, 16), (32, 32), (64, 16), (128, 64), (256, 48), (8, 96)])
+SCALES = st.sampled_from([0.01, 0.3, 1.0, 4.0, 50.0, 400.0])
+
+
+def _mk(shape, scale, seed):
+    rs = np.random.RandomState(seed)
+    return (rs.randn(*shape) * scale).astype(np.float32)
+
+
+@given(shape=SHAPES, scale=SCALES, seed=st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_nvfp4_kernel_matches_ref(shape, scale, seed):
+    x = _mk(shape, scale, seed)
+    got = np.asarray(nvfp4_quant(jnp.asarray(x), tile_m=shape[0]))
+    want = np.asarray(ref.quant_nvfp4(jnp.asarray(x))[0])
+    np.testing.assert_array_equal(got, want)
+
+
+@given(shape=SHAPES, scale=SCALES, seed=st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_fp8_kernel_matches_ref(shape, scale, seed):
+    x = _mk(shape, scale, seed)
+    got = np.asarray(fp8_quant(jnp.asarray(x), tile_m=shape[0]))
+    want = np.asarray(ref.quant_e4m3(jnp.asarray(x)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_nvfp4_kernel_tiled_equals_untiled():
+    x = _mk((256, 64), 2.0, 3)
+    a = np.asarray(nvfp4_quant(jnp.asarray(x), tile_m=32))
+    b = np.asarray(nvfp4_quant(jnp.asarray(x), tile_m=256))
+    np.testing.assert_array_equal(a, b)
+
+
+@given(
+    m=st.sampled_from([64, 128, 256]),
+    k=st.sampled_from([32, 64, 96]),
+    n=st.sampled_from([32, 128]),
+    thr=st.sampled_from([-1.0, 0.005, 0.05, 0.5, 1e30]),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=20, deadline=None)
+def test_fgmp_matmul_matches_ref(m, k, n, thr, seed):
+    rs = np.random.RandomState(seed)
+    x = (rs.randn(m, k) * 2).astype(np.float32)
+    w = rs.randn(k, n).astype(np.float32)
+    wq = np.asarray(ref.quant_nvfp4(jnp.asarray(w.T))[0]).T  # blocks along K
+    cw = np.abs(rs.randn(k)).astype(np.float32)
+    y, frac = fgmp_matmul(jnp.asarray(x), jnp.asarray(wq), jnp.asarray(cw),
+                          jnp.float32(thr), tile_m=64, tile_n=min(n, 128))
+    yr, fr = ref.fgmp_matmul_ref(jnp.asarray(x), jnp.asarray(wq),
+                                 jnp.asarray(cw), thr)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-5, atol=1e-4)
+    assert abs(float(frac) - float(fr)) < 1e-6
+
+
+def test_fgmp_matmul_fraction_monotone_in_threshold():
+    """Raising the threshold can only move blocks FP8 -> FP4."""
+    rs = np.random.RandomState(9)
+    x = (rs.randn(128, 64) * 2).astype(np.float32)
+    w = np.asarray(ref.quant_nvfp4(jnp.asarray(rs.randn(128, 64)))[0]).T
+    cw = jnp.ones(64)
+    fracs = []
+    for t in [0.0, 0.01, 0.1, 1.0, 10.0]:
+        _, f = fgmp_matmul(jnp.asarray(x), jnp.asarray(w), cw, jnp.float32(t),
+                           tile_m=128, tile_n=128)
+        fracs.append(float(f))
+    assert all(a >= b - 1e-9 for a, b in zip(fracs, fracs[1:]))
+
+
+def test_fgmp_quant_tile_all_fp8_is_e4m3():
+    x = jnp.asarray(_mk((32, 32), 3.0, 4))
+    xq, keep = fgmp_quant_tile(x, jnp.ones(32), jnp.float32(-1.0))
+    assert bool(jnp.all(keep))
+    np.testing.assert_array_equal(np.asarray(xq), np.asarray(ref.quant_e4m3(x)))
+
+
+def test_fgmp_quant_tile_all_fp4_is_nvfp4():
+    x = jnp.asarray(_mk((32, 32), 3.0, 5))
+    xq, keep = fgmp_quant_tile(x, jnp.ones(32), jnp.float32(1e30))
+    assert not bool(jnp.any(keep))
+    np.testing.assert_array_equal(np.asarray(xq), np.asarray(ref.quant_nvfp4(x)[0]))

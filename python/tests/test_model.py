@@ -1,0 +1,129 @@
+"""L2 model: shapes, family variants, quant-path consistency, NLL mechanics."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+
+def _toks(b, s, vocab=512, seed=0):
+    return jnp.asarray(np.random.RandomState(seed).randint(0, vocab, (b, s)), jnp.int32)
+
+
+@pytest.mark.parametrize("name", list(M.FAMILIES))
+def test_forward_shapes(name):
+    cfg = M.FAMILIES[name]
+    p = M.init_params(cfg, seed=1)
+    toks = _toks(2, 32, cfg.vocab)
+    logits, fracs = M.forward(cfg, p, toks)
+    assert logits.shape == (2, 32, cfg.vocab)
+    assert fracs.shape == (len(cfg.linears()),)
+
+
+@pytest.mark.parametrize("name", list(M.FAMILIES))
+def test_init_loss_near_uniform(name):
+    cfg = M.FAMILIES[name]
+    p = M.init_params(cfg, seed=2)
+    loss = float(M.mean_loss(cfg, p, _toks(2, 32, cfg.vocab)))
+    assert abs(loss - np.log(cfg.vocab)) < 0.35
+
+
+def test_linear_inventory_consistent():
+    for cfg in M.FAMILIES.values():
+        lin = cfg.linears()
+        assert len(lin) == 4 * cfg.n_layers
+        kinds = [k for (_, _, k, _, _) in lin[:4]]
+        assert kinds == list(M.LINEAR_KINDS)
+        for (_, _, _, k_in, n_out) in lin:
+            assert k_in % 16 == 0 and n_out % 16 == 0, "FGMP blocks must tile K"
+        # param shapes agree with inventory
+        for (nm, _, _, k_in, n_out) in lin:
+            assert cfg.param_shape(nm + ".w") == (k_in, n_out)
+
+
+def test_quant_ref_path_equals_pallas_path():
+    cfg = M.FAMILIES["tiny-llama"]
+    p = M.init_params(cfg, seed=3)
+    toks = _toks(2, 128, cfg.vocab, seed=3)
+    mask = jnp.ones(toks.shape, jnp.float32)
+    nl = len(cfg.linears())
+    aw = [jnp.ones(k) for (_, _, _, k, _) in cfg.linears()]
+    th = jnp.full((nl,), 0.02)
+    s1, n1, f1 = M.nll(cfg, p, toks, mask, linear_fn=M.LinearFn.FGMP_REF,
+                       act_weights=aw, thresholds=th)
+    s2, n2, f2 = M.nll(cfg, p, toks, mask, linear_fn=M.LinearFn.FGMP_PALLAS,
+                       act_weights=aw, thresholds=th)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), rtol=1e-5, atol=1e-7)
+
+
+def test_all_fp8_close_to_plain():
+    """All-FP8 quantization should barely move the loss on a tiny model."""
+    cfg = M.FAMILIES["tiny-llama"]
+    p = M.init_params(cfg, seed=4)
+    toks = _toks(2, 64, cfg.vocab, seed=4)
+    nl = len(cfg.linears())
+    aw = [jnp.ones(k) for (_, _, _, k, _) in cfg.linears()]
+    plain = float(M.mean_loss(cfg, p, toks))
+    fp8 = float(M.mean_loss(cfg, p, toks, linear_fn=M.LinearFn.FGMP_REF,
+                            act_weights=aw, thresholds=jnp.full((nl,), -1.0)))
+    assert abs(fp8 - plain) < 0.05
+
+
+def test_fp4_worse_or_equal_fp8():
+    cfg = M.FAMILIES["tiny-llama"]
+    p = M.init_params(cfg, seed=5)
+    toks = _toks(2, 64, cfg.vocab, seed=5)
+    nl = len(cfg.linears())
+    aw = [jnp.ones(k) for (_, _, _, k, _) in cfg.linears()]
+    kw = dict(linear_fn=M.LinearFn.FGMP_REF, act_weights=aw)
+    plain = float(M.mean_loss(cfg, p, toks))
+    fp8 = float(M.mean_loss(cfg, p, toks, thresholds=jnp.full((nl,), -1.0), **kw))
+    fp4 = float(M.mean_loss(cfg, p, toks, thresholds=jnp.full((nl,), 1e30), **kw))
+    assert abs(fp8 - plain) < abs(fp4 - plain) + 0.05
+
+
+def test_nll_masking():
+    cfg = M.FAMILIES["tiny-llama"]
+    p = M.init_params(cfg, seed=6)
+    toks = _toks(2, 32, cfg.vocab, seed=6)
+    full = jnp.ones(toks.shape, jnp.float32)
+    half = full.at[:, : toks.shape[1] // 2].set(0.0)
+    s_full, n_full, _ = M.nll(cfg, p, toks, full)
+    s_half, n_half, _ = M.nll(cfg, p, toks, half)
+    assert float(n_half.sum()) < float(n_full.sum())
+    assert np.all(np.asarray(s_half) <= np.asarray(s_full) + 1e-4)
+
+
+def test_return_inputs_matches_linear_count():
+    cfg = M.FAMILIES["tiny-gpt"]
+    p = M.init_params(cfg, seed=7)
+    toks = _toks(2, 16, cfg.vocab, seed=7)
+    _, _, inputs = M.forward(cfg, p, toks, return_inputs=True)
+    lin = cfg.linears()
+    assert len(inputs) == len(lin)
+    for h, (_, _, _, k, _) in zip(inputs, lin):
+        assert h.shape == (2 * 16, k)
+
+
+def test_act_taps_gradient_is_activation_gradient():
+    """Gradient w.r.t. a zero tap equals dLoss/d(linear input)."""
+    cfg = M.FAMILIES["tiny-llama"]
+    p = M.init_params(cfg, seed=8)
+    toks = _toks(1, 16, cfg.vocab, seed=8)
+    taps = [jnp.zeros((16, k), jnp.float32) for (_, _, _, k, _) in cfg.linears()]
+
+    g = jax.grad(lambda t: M.mean_loss(cfg, p, toks, act_taps=t))(taps)
+    assert len(g) == len(cfg.linears())
+    assert all(float(jnp.sum(jnp.abs(x))) > 0 for x in g)
+
+
+def test_deterministic_forward():
+    cfg = M.FAMILIES["tiny-nemotron"]
+    p = M.init_params(cfg, seed=9)
+    toks = _toks(2, 16, cfg.vocab, seed=9)
+    a, _ = M.forward(cfg, p, toks)
+    b, _ = M.forward(cfg, p, toks)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

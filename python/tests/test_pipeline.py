@@ -1,0 +1,77 @@
+"""Build-pipeline integration: a micro train + calibrate run end-to-end
+into a temp dir, validating every artifact the Rust side consumes."""
+
+import json
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile import calibrate, model as M, tensorio, train
+
+
+@pytest.fixture(scope="module")
+def built():
+    """Train tiny-gpt for a handful of steps and calibrate on 2 batches."""
+    d = tempfile.mkdtemp(prefix="fgmp_pipe_")
+    meta = train.train_model("tiny-gpt", d, steps=6, batch=4, seq=32, log_every=6)
+    cmeta = calibrate.calibrate_model("tiny-gpt", d, batches=2, batch=2, seq=64)
+    return d, meta, cmeta
+
+
+def test_training_reduces_loss(built):
+    _, meta, _ = built
+    curve = meta["loss_curve"]
+    assert curve[-1] < curve[0] + 0.1, "loss should not explode in 6 steps"
+    assert meta["n_params"] > 100_000
+
+
+def test_weights_artifact_complete(built):
+    d, _, _ = built
+    cfg = M.FAMILIES["tiny-gpt"]
+    w = tensorio.load(os.path.join(d, "tiny-gpt", "weights.fgtn"))
+    # jax pytrees sort dict keys, so on-disk order is alphabetical; consumers
+    # (rust Evaluator, aot.py) index by *manifest* order by name — only the
+    # name set must match.
+    assert set(w) == set(cfg.param_names())
+    for name in cfg.param_names():
+        assert w[name].shape == cfg.param_shape(name)
+        assert np.isfinite(w[name]).all()
+
+
+def test_fisher_artifacts(built):
+    d, _, _ = built
+    cfg = M.FAMILIES["tiny-gpt"]
+    fw = tensorio.load(os.path.join(d, "tiny-gpt", "fisher_w.fgtn"))
+    af = tensorio.load(os.path.join(d, "tiny-gpt", "act_fisher.fgtn"))
+    msq = tensorio.load(os.path.join(d, "tiny-gpt", "act_msq.fgtn"))
+    for (nm, _, _, k, n) in cfg.linears():
+        f = fw[f"{nm}.w.fisher"]
+        assert f.shape == (k, n)
+        assert (f >= 0).all() and f.max() > 0, "squared grads: nonneg, not all-zero"
+        assert af[nm].shape == (k,) and (af[nm] >= 0).all()
+        assert msq[nm].shape == (k,) and (msq[nm] >= 0).all()
+
+
+def test_quantile_tables_monotone(built):
+    d, _, _ = built
+    cfg = M.FAMILIES["tiny-gpt"]
+    q = tensorio.load(os.path.join(d, "tiny-gpt", "act_score_quantiles.fgtn"))
+    nl = len(cfg.linears())
+    for pol in ("fisher", "qe", "oe"):
+        g = q[f"{pol}.global"]
+        assert g.shape == (99,)
+        assert (np.diff(g) >= -1e-12).all(), f"{pol} global quantiles monotone"
+        assert (g >= 0).all()
+        loc = q[f"{pol}.local"]
+        assert loc.shape == (nl, 99)
+        assert (np.diff(loc, axis=1) >= -1e-12).all()
+
+
+def test_calibrate_meta_recorded(built):
+    d, _, cmeta = built
+    assert cmeta["calib_tokens"] == 2 * 2 * 64
+    with open(os.path.join(d, "tiny-gpt", "calibrate_meta.json")) as f:
+        on_disk = json.load(f)
+    assert on_disk["seconds"] > 0

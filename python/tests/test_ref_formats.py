@@ -1,0 +1,202 @@
+"""Properties of the reference number-format round-trips (the numerics spec)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+E2M1_GRID = np.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], np.float32)
+E2M1_FULL = np.unique(np.concatenate([E2M1_GRID, -E2M1_GRID]))
+
+
+def e4m3_grid():
+    """All non-negative finite E4M3 values, constructed from first principles."""
+    vals = [0.0]
+    for e in range(-6, 9):
+        for m in range(8):
+            vals.append((1 + m / 8) * 2.0**e)
+    for m in range(1, 8):
+        vals.append(m / 8 * 2.0**-6)  # subnormals
+    return np.unique(np.array([v for v in vals if v <= 448.0], np.float32))
+
+
+E4M3_GRID = e4m3_grid()
+
+
+class TestE2M1:
+    def test_grid_is_fixed_point(self):
+        q = np.asarray(ref.quant_e2m1(jnp.asarray(E2M1_FULL)))
+        np.testing.assert_array_equal(q, E2M1_FULL)
+
+    def test_saturates(self):
+        q = np.asarray(ref.quant_e2m1(jnp.asarray([100.0, -100.0, 6.01, 7.0])))
+        np.testing.assert_array_equal(q, [6.0, -6.0, 6.0, 6.0])
+
+    def test_outputs_on_grid(self):
+        x = np.random.RandomState(0).randn(4096).astype(np.float32) * 4
+        q = np.asarray(ref.quant_e2m1(jnp.asarray(x)))
+        assert np.all(np.isin(q, E2M1_FULL))
+
+    def test_nearest(self):
+        """Every output is the nearest grid point (up to tie-breaking)."""
+        x = np.random.RandomState(1).randn(4096).astype(np.float32) * 4
+        q = np.asarray(ref.quant_e2m1(jnp.asarray(x)))
+        xc = np.clip(x, -6, 6)
+        best = E2M1_FULL[np.argmin(np.abs(xc[:, None] - E2M1_FULL[None, :]), axis=1)]
+        err_q = np.abs(q - xc)
+        err_b = np.abs(best - xc)
+        np.testing.assert_allclose(err_q, err_b, atol=1e-7)
+
+    def test_ties_to_even_mantissa(self):
+        # 1.75 is midway between 1.5 (odd mantissa) and 2.0 (even): -> 2.0
+        # 1.25 is midway between 1.0 (even) and 1.5 (odd): -> 1.0
+        q = np.asarray(ref.quant_e2m1(jnp.asarray([1.75, 1.25, 0.25, 0.75, 2.5, 3.5, 5.0])))
+        np.testing.assert_array_equal(q, [2.0, 1.0, 0.0, 1.0, 2.0, 4.0, 4.0])
+
+    @given(st.floats(-1e4, 1e4, allow_nan=False, width=32))
+    @settings(max_examples=200, deadline=None)
+    def test_idempotent(self, v):
+        q1 = float(ref.quant_e2m1(jnp.float32(v)))
+        q2 = float(ref.quant_e2m1(jnp.float32(q1)))
+        assert q1 == q2
+
+    @given(st.floats(0, 6, width=32))
+    @settings(max_examples=100, deadline=None)
+    def test_sign_symmetry(self, v):
+        assert float(ref.quant_e2m1(jnp.float32(-v))) == -float(
+            ref.quant_e2m1(jnp.float32(v))
+        )
+
+
+class TestE4M3:
+    def test_grid_is_fixed_point(self):
+        full = np.unique(np.concatenate([E4M3_GRID, -E4M3_GRID]))
+        q = np.asarray(ref.quant_e4m3(jnp.asarray(full)))
+        np.testing.assert_array_equal(q, full)
+
+    def test_saturates(self):
+        q = np.asarray(ref.quant_e4m3(jnp.asarray([1e9, -1e9, 449.0])))
+        np.testing.assert_array_equal(q, [448.0, -448.0, 448.0])
+
+    def test_outputs_on_grid(self):
+        x = (np.random.RandomState(2).randn(4096) * 50).astype(np.float32)
+        q = np.asarray(ref.quant_e4m3(jnp.asarray(x)))
+        full = np.unique(np.concatenate([E4M3_GRID, -E4M3_GRID]))
+        assert np.all(np.isin(q, full))
+
+    def test_nearest(self):
+        x = (np.random.RandomState(3).randn(2048) * 10).astype(np.float32)
+        q = np.asarray(ref.quant_e4m3(jnp.asarray(x)))
+        xc = np.clip(x, -448, 448)
+        full = np.unique(np.concatenate([E4M3_GRID, -E4M3_GRID]))
+        best = full[np.argmin(np.abs(xc[:, None] - full[None, :]), axis=1)]
+        np.testing.assert_allclose(np.abs(q - xc), np.abs(best - xc), rtol=1e-6, atol=1e-9)
+
+    def test_subnormals(self):
+        q = np.asarray(ref.quant_e4m3(jnp.asarray([2.0**-9, 2.0**-9 * 0.49, 2.0**-10])))
+        np.testing.assert_array_equal(q, [2.0**-9, 0.0, 0.0])
+
+    @given(st.floats(-1e6, 1e6, allow_nan=False, width=32))
+    @settings(max_examples=200, deadline=None)
+    def test_idempotent(self, v):
+        q1 = float(ref.quant_e4m3(jnp.float32(v)))
+        assert float(ref.quant_e4m3(jnp.float32(q1))) == q1
+
+    def test_relative_error_bound(self):
+        """Normal-range quantization error <= 2^-4 relative (3 mantissa bits)."""
+        x = np.abs(np.random.RandomState(4).randn(4096).astype(np.float32)) + 0.1
+        q = np.asarray(ref.quant_e4m3(jnp.asarray(x)))
+        assert np.max(np.abs(q - x) / x) <= 2.0**-4 + 1e-6
+
+
+class TestNVFP4:
+    def test_scale_never_overflows_grid(self):
+        """With dynamic-max scaling, |x/scale| stays within ~E2M1 range."""
+        rs = np.random.RandomState(5)
+        x = (rs.randn(64, 32) * np.exp(rs.randn(64, 1) * 3)).astype(np.float32)
+        q, scale = ref.quant_nvfp4(jnp.asarray(x))
+        q = np.asarray(q)
+        scale = np.asarray(scale)
+        # every dequantized magnitude <= 6 * scale of its block
+        qb = q.reshape(64, 2, 16)
+        assert np.all(np.abs(qb) <= 6 * scale[..., None] + 1e-6)
+
+    def test_zero_block(self):
+        q, scale = ref.quant_nvfp4(jnp.zeros((1, 16)))
+        assert float(jnp.sum(jnp.abs(q))) == 0.0
+
+    def test_blockwise_independence(self):
+        """Changing one block never affects another block's output."""
+        rs = np.random.RandomState(6)
+        x = rs.randn(2, 32).astype(np.float32)
+        q1, _ = ref.quant_nvfp4(jnp.asarray(x))
+        x2 = x.copy()
+        x2[:, 16:] *= 100
+        q2, _ = ref.quant_nvfp4(jnp.asarray(x2))
+        np.testing.assert_array_equal(np.asarray(q1)[:, :16], np.asarray(q2)[:, :16])
+
+    def test_explicit_scale_roundtrip(self):
+        rs = np.random.RandomState(7)
+        x = rs.randn(4, 16).astype(np.float32)
+        _, s_dyn = ref.quant_nvfp4(jnp.asarray(x))
+        q, s_used = ref.quant_nvfp4(jnp.asarray(x), scale=s_dyn)
+        q_dyn, _ = ref.quant_nvfp4(jnp.asarray(x))
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(q_dyn))
+
+    def test_microscaling_beats_global_fp4(self):
+        """Per-block scaling must reduce MSE vs one global scale (the reason
+        microscaling exists; paper SS2.1)."""
+        rs = np.random.RandomState(8)
+        x = (rs.randn(256, 64) * np.exp(rs.randn(256, 1) * 2)).astype(np.float32)
+        q_block, _ = ref.quant_nvfp4(jnp.asarray(x))
+        gscale = np.abs(x).max() / 6.0
+        q_glob = np.asarray(ref.quant_e2m1(jnp.asarray(x / gscale))) * gscale
+        mse_block = float(np.mean((np.asarray(q_block) - x) ** 2))
+        mse_glob = float(np.mean((q_glob - x) ** 2))
+        assert mse_block < mse_glob
+
+
+class TestImpactScore:
+    def test_nonnegative_and_zero_for_identical(self):
+        rs = np.random.RandomState(9)
+        x = rs.randn(8, 64).astype(np.float32)
+        cw = np.abs(rs.randn(64)).astype(np.float32)
+        s = np.asarray(ref.block_impact(jnp.asarray(x), jnp.asarray(cw)))
+        assert np.all(s >= 0)
+
+    def test_weighting_scales_score(self):
+        """Doubling every channel weight doubles every score (linearity)."""
+        rs = np.random.RandomState(10)
+        x = rs.randn(8, 64).astype(np.float32) * 3
+        cw = np.abs(rs.randn(64)).astype(np.float32)
+        s1 = np.asarray(ref.block_impact(jnp.asarray(x), jnp.asarray(cw)))
+        s2 = np.asarray(ref.block_impact(jnp.asarray(x), jnp.asarray(cw * 2)))
+        np.testing.assert_allclose(s2, 2 * s1, rtol=1e-5)
+
+    def test_threshold_extremes(self):
+        rs = np.random.RandomState(11)
+        x = (rs.randn(32, 64) * 2).astype(np.float32)
+        cw = jnp.ones(64)
+        _, keep_hi = ref.fgmp_quant(jnp.asarray(x), cw, jnp.float32(-1.0))
+        _, keep_lo = ref.fgmp_quant(jnp.asarray(x), cw, jnp.float32(1e30))
+        assert bool(jnp.all(keep_hi)) and not bool(jnp.any(keep_lo))
+
+    def test_mixed_equals_select(self):
+        """FGMP output blocks equal the corresponding single-format round-trip."""
+        rs = np.random.RandomState(12)
+        x = (rs.randn(16, 64) * 2).astype(np.float32)
+        cw = jnp.ones(64)
+        t = 0.05
+        xq, keep = ref.fgmp_quant(jnp.asarray(x), cw, jnp.float32(t))
+        q4, _ = ref.quant_nvfp4(jnp.asarray(x))
+        q8 = ref.quant_fp8_block(jnp.asarray(x))
+        xqb = np.asarray(xq).reshape(16, 4, 16)
+        q4b = np.asarray(q4).reshape(16, 4, 16)
+        q8b = np.asarray(q8).reshape(16, 4, 16)
+        keep = np.asarray(keep)
+        for i in range(16):
+            for j in range(4):
+                expect = q8b[i, j] if keep[i, j] else q4b[i, j]
+                np.testing.assert_array_equal(xqb[i, j], expect)

@@ -1,0 +1,132 @@
+//! Dynamic batcher: packs queued score rows into fixed-shape device batches
+//! under a (max size, max wait) policy — the standard dynamic-batching
+//! trade-off between padding waste and queueing latency.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
+use std::time::{Duration, Instant};
+
+use super::router::Request;
+
+/// Batching policy.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Device batch size (the graph's frozen B).
+    pub max_batch: usize,
+    /// Max time the first queued request may wait before we flush a
+    /// partial batch.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(20) }
+    }
+}
+
+/// Collects rows from a queue into batches.
+pub struct Batcher {
+    pub policy: BatchPolicy,
+    rx: Receiver<Request>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy, rx: Receiver<Request>) -> Self {
+        Batcher { policy, rx }
+    }
+
+    /// Block for the next batch: returns `None` when the queue is closed
+    /// and drained. Invariants (exercised by tests/coordinator_props.rs):
+    ///  * 1 <= len <= max_batch
+    ///  * arrival order is preserved within and across batches
+    ///  * once a request heads the batch, it waits at most ~max_wait.
+    pub fn next_batch(&mut self) -> Option<Vec<Request>> {
+        let first = self.rx.recv().ok()?;
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.policy.max_wait;
+        while batch.len() < self.policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(req) => batch.push(req),
+                Err(RecvTimeoutError::Timeout) => break, // flush partial
+                Err(RecvTimeoutError::Disconnected) => break, // flush remnants
+            }
+        }
+        Some(batch)
+    }
+
+    /// Drain everything immediately available, up to max_batch (used by the
+    /// greedy inner loop when the executor is already hot).
+    pub fn drain_ready(&mut self, batch: &mut Vec<Request>) {
+        while batch.len() < self.policy.max_batch {
+            match self.rx.try_recv() {
+                Ok(req) => batch.push(req),
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::{Request, RequestKind};
+    use std::sync::mpsc::sync_channel;
+
+    fn req(id: u64) -> Request {
+        Request::new(id, RequestKind::Score { tokens: vec![0], mask: vec![1.0] }).0
+    }
+
+    #[test]
+    fn full_batch_when_queue_deep() {
+        let (tx, rx) = sync_channel(64);
+        for i in 0..20 {
+            tx.send(req(i)).unwrap();
+        }
+        let mut b = Batcher::new(
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) }, rx);
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 8);
+        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..8).collect::<Vec<_>>(), "order preserved");
+    }
+
+    #[test]
+    fn partial_batch_on_deadline() {
+        let (tx, rx) = sync_channel(64);
+        tx.send(req(0)).unwrap();
+        tx.send(req(1)).unwrap();
+        let mut b = Batcher::new(
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(10) }, rx);
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn closed_queue_flushes_then_ends() {
+        let (tx, rx) = sync_channel(64);
+        tx.send(req(0)).unwrap();
+        drop(tx);
+        let mut b = Batcher::new(BatchPolicy::default(), rx);
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn drain_ready_caps_at_max_batch() {
+        let (tx, rx) = sync_channel(64);
+        for i in 0..20 {
+            tx.send(req(i)).unwrap();
+        }
+        let mut b = Batcher::new(
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) }, rx);
+        let mut batch = vec![];
+        b.drain_ready(&mut batch);
+        assert_eq!(batch.len(), 4);
+    }
+}

@@ -1,0 +1,146 @@
+//! Serving metrics: latency percentiles, throughput, and the hwsim energy
+//! accounting that turns batch stats into the paper's joules story.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Aggregated serving metrics (thread-safe; one per server).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    latencies_us: Vec<u64>,
+    batches: u64,
+    rows: u64,
+    padded_rows: u64,
+    tokens_scored: f64,
+    generated: u64,
+    energy_pj: f64,
+    energy_fp8_pj: f64,
+    busy: Duration,
+}
+
+/// A point-in-time snapshot.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub mean_batch_fill: f64,
+    pub tokens_scored: f64,
+    pub generated_tokens: u64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    /// Simulated accelerator energy (J) under the served precision mix.
+    pub energy_j: f64,
+    /// Same workload on the all-FP8 datapath.
+    pub energy_fp8_j: f64,
+    pub energy_savings: f64,
+    pub executor_busy_s: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_batch(
+        &self,
+        rows: usize,
+        capacity: usize,
+        tokens: f64,
+        latencies: &[Duration],
+        busy: Duration,
+        energy_pj: f64,
+        energy_fp8_pj: f64,
+    ) {
+        let mut m = self.inner.lock().unwrap();
+        m.batches += 1;
+        m.rows += rows as u64;
+        m.padded_rows += (capacity - rows) as u64;
+        m.tokens_scored += tokens;
+        m.busy += busy;
+        m.energy_pj += energy_pj;
+        m.energy_fp8_pj += energy_fp8_pj;
+        for l in latencies {
+            m.latencies_us.push(l.as_micros() as u64);
+        }
+    }
+
+    pub fn record_generated(&self, n: u64) {
+        self.inner.lock().unwrap().generated += n;
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let m = self.inner.lock().unwrap();
+        let mut lats = m.latencies_us.clone();
+        lats.sort_unstable();
+        let pct = |q: f64| -> f64 {
+            if lats.is_empty() {
+                return 0.0;
+            }
+            let i = ((lats.len() - 1) as f64 * q).round() as usize;
+            lats[i] as f64 / 1000.0
+        };
+        let mean = if lats.is_empty() {
+            0.0
+        } else {
+            lats.iter().sum::<u64>() as f64 / lats.len() as f64 / 1000.0
+        };
+        Snapshot {
+            requests: m.rows,
+            batches: m.batches,
+            mean_batch_fill: if m.batches == 0 {
+                0.0
+            } else {
+                m.rows as f64 / (m.rows + m.padded_rows) as f64
+            },
+            tokens_scored: m.tokens_scored,
+            generated_tokens: m.generated,
+            p50_ms: pct(0.50),
+            p95_ms: pct(0.95),
+            p99_ms: pct(0.99),
+            mean_ms: mean,
+            energy_j: m.energy_pj * 1e-12,
+            energy_fp8_j: m.energy_fp8_pj * 1e-12,
+            energy_savings: if m.energy_fp8_pj > 0.0 {
+                1.0 - m.energy_pj / m.energy_fp8_pj
+            } else {
+                0.0
+            },
+            executor_busy_s: m.busy.as_secs_f64(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting_sums() {
+        let m = Metrics::new();
+        m.record_batch(6, 8, 600.0, &[Duration::from_millis(10); 6],
+                       Duration::from_millis(30), 100.0, 140.0);
+        m.record_batch(8, 8, 800.0, &[Duration::from_millis(20); 8],
+                       Duration::from_millis(40), 100.0, 140.0);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 14);
+        assert_eq!(s.batches, 2);
+        assert!((s.tokens_scored - 1400.0).abs() < 1e-9);
+        assert!((s.mean_batch_fill - 14.0 / 16.0).abs() < 1e-9);
+        assert!((s.energy_savings - (1.0 - 200.0 / 280.0)).abs() < 1e-9);
+        assert!(s.p95_ms >= s.p50_ms);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroes() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.p99_ms, 0.0);
+    }
+}

@@ -1,0 +1,20 @@
+//! The L3 serving coordinator: request router, dynamic batcher, executor
+//! worker, and metrics. Requests are scoring (masked NLL, the eval/serving
+//! primitive) or generation (iterated last-token logits); both ride the
+//! AOT-compiled quantized graphs — python is never on this path.
+//!
+//! Shape: `Router` fans requests into per-kind queues → `Batcher` packs
+//! rows into fixed-shape device batches under a deadline → a blocking
+//! executor thread runs the PJRT executable → responses resolve per-request
+//! oneshots. Energy accounting per batch comes from the hwsim model, so the
+//! serving report carries the paper's joules-per-token story.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::Metrics;
+pub use router::{Request, RequestKind, Response, Router};
+pub use server::{Server, ServerConfig};

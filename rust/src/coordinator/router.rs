@@ -1,0 +1,120 @@
+//! Request types and the front-door router.
+//!
+//! Thread-based implementation (the offline build has no async runtime):
+//! bounded `sync_channel` queues give the same backpressure semantics, and
+//! each request carries its own reply channel.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::time::Instant;
+
+use crate::Result;
+
+/// What the client wants.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RequestKind {
+    /// Masked NLL scoring of one row (perplexity / option scoring).
+    Score { tokens: Vec<i32>, mask: Vec<f32> },
+    /// Greedy generation of `n_tokens` continuing `prompt`.
+    Generate { prompt: Vec<i32>, n_tokens: usize },
+}
+
+/// One in-flight request.
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub kind: RequestKind,
+    pub submitted_at: Instant,
+    pub reply: std::sync::mpsc::Sender<Response>,
+}
+
+impl Request {
+    /// Build a request plus the receiver for its response.
+    pub fn new(id: u64, kind: RequestKind) -> (Self, std::sync::mpsc::Receiver<Response>) {
+        let (tx, rx) = std::sync::mpsc::channel();
+        (Request { id, kind, submitted_at: Instant::now(), reply: tx }, rx)
+    }
+}
+
+/// What the client gets back.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    /// Score requests: (nll_sum, token_count).
+    pub nll: Option<(f64, f64)>,
+    /// Generate requests: the produced tokens.
+    pub generated: Option<Vec<i32>>,
+    pub latency: std::time::Duration,
+}
+
+/// Fans requests into per-kind bounded queues. Conservation (every accepted
+/// request reaches exactly one queue and gets exactly one response or a
+/// dropped channel) is exercised by tests/coordinator_props.rs.
+pub struct Router {
+    score_tx: SyncSender<Request>,
+    gen_tx: SyncSender<Request>,
+}
+
+impl Router {
+    pub fn new(depth: usize) -> (Self, Receiver<Request>, Receiver<Request>) {
+        let (score_tx, score_rx) = sync_channel(depth);
+        let (gen_tx, gen_rx) = sync_channel(depth);
+        (Router { score_tx, gen_tx }, score_rx, gen_rx)
+    }
+
+    fn queue_for(&self, kind: &RequestKind) -> &SyncSender<Request> {
+        match kind {
+            RequestKind::Score { .. } => &self.score_tx,
+            RequestKind::Generate { .. } => &self.gen_tx,
+        }
+    }
+
+    /// Route one request; blocks (backpressure) when the queue is full.
+    pub fn submit(&self, req: Request) -> Result<()> {
+        self.queue_for(&req.kind)
+            .send(req)
+            .map_err(|_| anyhow::anyhow!("coordinator stopped"))
+    }
+
+    /// Non-blocking submit; fails fast when the queue is full (explicit
+    /// load-shedding instead of silent unbounded growth).
+    pub fn try_submit(&self, req: Request) -> Result<()> {
+        match self.queue_for(&req.kind).try_send(req) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(_)) => anyhow::bail!("queue full"),
+            Err(TrySendError::Disconnected(_)) => anyhow::bail!("coordinator stopped"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_by_kind() {
+        let (router, score_rx, gen_rx) = Router::new(4);
+        let (r1, _rx1) = Request::new(1, RequestKind::Score { tokens: vec![1], mask: vec![1.0] });
+        let (r2, _rx2) = Request::new(2, RequestKind::Generate { prompt: vec![1], n_tokens: 1 });
+        router.submit(r1).unwrap();
+        router.submit(r2).unwrap();
+        assert_eq!(score_rx.try_recv().unwrap().id, 1);
+        assert_eq!(gen_rx.try_recv().unwrap().id, 2);
+    }
+
+    #[test]
+    fn try_submit_sheds_load_when_full() {
+        let (router, _score_rx, _gen_rx) = Router::new(1);
+        let (r1, _a) = Request::new(1, RequestKind::Score { tokens: vec![], mask: vec![] });
+        let (r2, _b) = Request::new(2, RequestKind::Score { tokens: vec![], mask: vec![] });
+        router.try_submit(r1).unwrap();
+        assert!(router.try_submit(r2).is_err());
+    }
+
+    #[test]
+    fn closed_queue_errors() {
+        let (router, score_rx, _gen_rx) = Router::new(1);
+        drop(score_rx);
+        let (r, _rx) = Request::new(1, RequestKind::Score { tokens: vec![], mask: vec![] });
+        assert!(router.submit(r).is_err());
+    }
+}

@@ -1,0 +1,227 @@
+//! The serving loop: batcher → PJRT executor → per-request responses, with
+//! hwsim energy accounting per batch. Thread-based (DESIGN.md §Deps): one
+//! worker thread per request kind, each owning its queue.
+
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::Instant;
+
+use std::path::PathBuf;
+
+use crate::hwsim::energy::EnergyModel;
+use crate::hwsim::{simulate_matmul, DatapathConfig, LayerProfile, MatmulJob};
+use crate::runtime::{ArgValue, Executable, Runtime};
+use crate::Result;
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::Metrics;
+use super::router::{Request, RequestKind, Response, Router};
+
+/// Server configuration.
+#[derive(Clone)]
+pub struct ServerConfig {
+    pub batch: usize,
+    pub seq: usize,
+    pub policy: BatchPolicy,
+    /// Per-layer shapes + weight FP8 fractions for the energy accounting
+    /// (activation fractions are read per batch from the graph outputs).
+    pub layer_shapes: Vec<LayerProfile>,
+    pub queue_depth: usize,
+}
+
+/// A running coordinator instance.
+pub struct Server {
+    pub router: Arc<Router>,
+    pub metrics: Arc<Metrics>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the score and generate workers.
+    ///
+    /// Workers receive HLO *paths*, not executables: the xla crate's PJRT
+    /// handles are intentionally not Send (Rc-based refcounts), so each
+    /// worker thread owns its own client + compiled executable. The arg
+    /// tails (plain data: weights, weightings, thresholds) cross threads
+    /// freely.
+    pub fn start(
+        cfg: ServerConfig,
+        fwd_hlo: PathBuf,
+        fwd_args_tail: Vec<ArgValue>,
+        logits_hlo: PathBuf,
+        logits_args_tail: Vec<ArgValue>,
+    ) -> Result<Self> {
+        let (router, score_rx, gen_rx) = Router::new(cfg.queue_depth);
+        let metrics = Arc::new(Metrics::new());
+        let mut handles = Vec::new();
+
+        {
+            let (cfg, metrics) = (cfg.clone(), metrics.clone());
+            handles.push(std::thread::spawn(move || {
+                let rt = Runtime::cpu().expect("PJRT client (score worker)");
+                let exe = rt.load_hlo(&fwd_hlo).expect("compile fwd_quant");
+                score_worker(cfg, exe, fwd_args_tail, score_rx, metrics)
+            }));
+        }
+        {
+            let (cfg, metrics) = (cfg.clone(), metrics.clone());
+            handles.push(std::thread::spawn(move || {
+                let rt = Runtime::cpu().expect("PJRT client (gen worker)");
+                let exe = rt.load_hlo(&logits_hlo).expect("compile logits_quant");
+                generate_worker(cfg, exe, logits_args_tail, gen_rx, metrics)
+            }));
+        }
+
+        Ok(Server { router: Arc::new(router), metrics, handles })
+    }
+
+    /// Close the intake (drop the router) and wait for workers to drain.
+    pub fn shutdown(self) {
+        let Server { router, handles, .. } = self;
+        drop(router);
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Simulated accelerator energy of one forward over `m` token rows:
+/// (fgmp_pj, all-fp8 baseline pj).
+pub fn batch_energy(shapes: &[LayerProfile], act_fp8: &[f32], m: usize) -> (f64, f64) {
+    let dp = DatapathConfig::default();
+    let em = EnergyModel::default();
+    let mut fgmp = 0.0;
+    let mut fp8 = 0.0;
+    for (i, p) in shapes.iter().enumerate() {
+        let job = MatmulJob {
+            m,
+            k: p.k,
+            n: p.n,
+            weight_fp8: p.weight_fp8,
+            act_fp8: act_fp8.get(i).copied().unwrap_or(0.0) as f64,
+        };
+        fgmp += simulate_matmul(&dp, &em, &job, true).total_energy_pj();
+        let j8 = MatmulJob { weight_fp8: 1.0, act_fp8: 1.0, ..job };
+        let r8 = simulate_matmul(&dp, &em, &j8, true);
+        fp8 += r8.total_energy_pj() - em.e_mux_tax * r8.vmacs as f64;
+    }
+    (fgmp, fp8)
+}
+
+fn score_worker(
+    cfg: ServerConfig,
+    exe: Executable,
+    tail: Vec<ArgValue>,
+    rx: Receiver<Request>,
+    metrics: Arc<Metrics>,
+) {
+    let mut batcher = Batcher::new(cfg.policy.clone(), rx);
+    while let Some(mut batch) = batcher.next_batch() {
+        batcher.drain_ready(&mut batch);
+        let (b, s) = (cfg.batch, cfg.seq);
+        let mut tokens = vec![0i32; b * s];
+        let mut mask = vec![0.0f32; b * s];
+        for (row, req) in batch.iter().enumerate() {
+            if let RequestKind::Score { tokens: t, mask: m } = &req.kind {
+                let n = t.len().min(s);
+                tokens[row * s..row * s + n].copy_from_slice(&t[..n]);
+                mask[row * s..row * s + n].copy_from_slice(&m[..n]);
+            }
+        }
+        let mut args = vec![
+            ArgValue::I32 { shape: vec![b, s], data: tokens },
+            ArgValue::F32 { shape: vec![b, s], data: mask },
+        ];
+        args.extend(tail.iter().cloned());
+
+        let t0 = Instant::now();
+        let out = exe.run(&args);
+        let busy = t0.elapsed();
+
+        match out {
+            Ok(out) => {
+                let (nll, ntok, act_fp8) = (&out[0], &out[1], &out[2]);
+                let rows = batch.len();
+                let tokens_scored: f64 = ntok.iter().map(|&v| v as f64).sum();
+                let (e, e8) = batch_energy(&cfg.layer_shapes, act_fp8, b * s);
+                let now = Instant::now();
+                let lats: Vec<_> =
+                    batch.iter().map(|r| now.duration_since(r.submitted_at)).collect();
+                metrics.record_batch(rows, b, tokens_scored, &lats, busy, e, e8);
+                for (row, req) in batch.into_iter().enumerate() {
+                    let _ = req.reply.send(Response {
+                        id: req.id,
+                        nll: Some((nll[row] as f64, ntok[row] as f64)),
+                        generated: None,
+                        latency: now.duration_since(req.submitted_at),
+                    });
+                }
+            }
+            Err(_) => {
+                for req in batch {
+                    let _ = req.reply.send(Response {
+                        id: req.id,
+                        nll: None,
+                        generated: None,
+                        latency: req.submitted_at.elapsed(),
+                    });
+                }
+            }
+        }
+    }
+}
+
+fn generate_worker(
+    cfg: ServerConfig,
+    exe: Executable,
+    tail: Vec<ArgValue>,
+    rx: Receiver<Request>,
+    metrics: Arc<Metrics>,
+) {
+    // Greedy decode, one request at a time (tiny models; generation is the
+    // demo path — scoring is the serving hot path).
+    while let Ok(req) = rx.recv() {
+        if let RequestKind::Generate { prompt, n_tokens } = &req.kind {
+            let (b, s) = (cfg.batch, cfg.seq);
+            let mut ctx = prompt.clone();
+            let mut produced = Vec::with_capacity(*n_tokens);
+            let mut failed = false;
+            for _ in 0..*n_tokens {
+                // Right-align the context into the fixed window.
+                let mut tokens = vec![0i32; b * s];
+                let start = ctx.len().saturating_sub(s);
+                let window = &ctx[start..];
+                let off = s - window.len();
+                tokens[off..s].copy_from_slice(window);
+                // Other rows stay zero; we read row 0's logits only.
+                let mut args = vec![ArgValue::I32 { shape: vec![b, s], data: tokens }];
+                args.extend(tail.iter().cloned());
+                match exe.run(&args) {
+                    Ok(out) => {
+                        let vocab = out[0].len() / b;
+                        let row0 = &out[0][..vocab];
+                        let next = row0
+                            .iter()
+                            .enumerate()
+                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                            .map(|(i, _)| i as i32)
+                            .unwrap_or(0);
+                        ctx.push(next);
+                        produced.push(next);
+                    }
+                    Err(_) => {
+                        failed = true;
+                        break;
+                    }
+                }
+            }
+            metrics.record_generated(produced.len() as u64);
+            let _ = req.reply.send(Response {
+                id: req.id,
+                nll: None,
+                generated: if failed { None } else { Some(produced) },
+                latency: req.submitted_at.elapsed(),
+            });
+        }
+    }
+}

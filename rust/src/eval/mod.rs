@@ -1,0 +1,11 @@
+//! Evaluation harness: perplexity (the paper's Wikitext-103 metric on our
+//! tiny-corpus substrate), downstream 4-way cloze suites (Tables 2–3), and
+//! the ratio/policy sweep driver behind Figs. 1, 5, 6 and 10.
+
+pub mod perplexity;
+pub mod sweep;
+pub mod tasks;
+
+pub use perplexity::{Evaluator, PerplexityReport};
+pub use sweep::{run_sweep, SweepRow};
+pub use tasks::{score_suite, TaskSuite};

@@ -1,0 +1,203 @@
+//! Perplexity evaluation through the AOT fwd_quant / fwd_ref graphs.
+
+use std::path::Path;
+
+use crate::io::TensorFile;
+use crate::model::{ModelArtifacts, QuantConfig, QuantizedModel, RatioSpec};
+use crate::policy::Policy;
+use crate::runtime::{ArgValue, Executable, Runtime};
+use crate::Result;
+
+/// Result of one perplexity run.
+#[derive(Debug, Clone)]
+pub struct PerplexityReport {
+    pub ppl: f64,
+    pub nll_sum: f64,
+    pub tokens: f64,
+    /// Mean per-linear activation FP8 block fraction (from the in-graph PPU
+    /// counters), empty for the fwd_ref path.
+    pub act_fp8: Vec<f64>,
+    pub batches: usize,
+}
+
+impl PerplexityReport {
+    pub fn mean_act_fp8(&self) -> f64 {
+        if self.act_fp8.is_empty() {
+            return 0.0;
+        }
+        self.act_fp8.iter().sum::<f64>() / self.act_fp8.len() as f64
+    }
+}
+
+/// Drives the compiled graphs for one model.
+pub struct Evaluator {
+    pub arts: ModelArtifacts,
+    pub fwd_quant: Executable,
+    pub fwd_ref: Executable,
+    pub test_stream: Vec<i32>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl Evaluator {
+    /// Load artifacts + compile graphs for `model` under `artifacts_dir`.
+    pub fn load(rt: &Runtime, artifacts_dir: impl AsRef<Path>, model: &str) -> Result<Self> {
+        let dir = artifacts_dir.as_ref();
+        let arts = ModelArtifacts::load(dir.join(model))?;
+        let fwd_quant = rt.load_hlo(dir.join(model).join("fwd_quant.hlo.txt"))?;
+        let fwd_ref = rt.load_hlo(dir.join(model).join("fwd_ref.hlo.txt"))?;
+        let corpus = TensorFile::load(dir.join("corpus.fgtn"))?;
+        let test_stream = corpus.get("test")?.as_i32()?.to_vec();
+        let (batch, seq) = (arts.manifest.batch, arts.manifest.seq);
+        Ok(Evaluator { arts, fwd_quant, fwd_ref, test_stream, batch, seq })
+    }
+
+    /// The non-tokens argument tail of the fwd_quant graph for a config:
+    /// params (quantized weights substituted), act weightings, thresholds.
+    pub fn quant_arg_tail(&self, cfg: &QuantConfig, qm: &QuantizedModel) -> Result<Vec<ArgValue>> {
+        let m = &self.arts.manifest;
+        let mut args = Vec::with_capacity(m.param_names.len() + m.num_linears + 1);
+        // Parameters in manifest order, with each linear's weight replaced
+        // by its FGMP round-trip.
+        for name in &m.param_names {
+            let shape = m.param_shapes[name].clone();
+            let data = if let Some(qlin) = name
+                .strip_suffix(".w")
+                .and_then(|base| qm.linears.iter().find(|l| l.name == base))
+            {
+                qlin.dequant.clone()
+            } else {
+                self.arts.weights.get(name)?.as_f32()?.to_vec()
+            };
+            args.push(ArgValue::F32 { shape, data });
+        }
+        // Per-linear activation channel weightings for the PPU score.
+        for spec in &m.linears {
+            let w = self.arts.act_weighting(&spec.name, cfg.policy)?;
+            args.push(ArgValue::vec_f32(w));
+        }
+        // Per-linear thresholds.
+        args.push(ArgValue::vec_f32(self.arts.act_thresholds(cfg)?));
+        Ok(args)
+    }
+
+    /// Argument tail for fwd_ref (raw parameters only).
+    pub fn ref_arg_tail(&self) -> Result<Vec<ArgValue>> {
+        let m = &self.arts.manifest;
+        m.param_names
+            .iter()
+            .map(|name| {
+                Ok(ArgValue::F32 {
+                    shape: m.param_shapes[name].clone(),
+                    data: self.arts.weights.get(name)?.as_f32()?.to_vec(),
+                })
+            })
+            .collect()
+    }
+
+    /// fwd_ref tail with FGMP-quantized weights substituted: *weight-only*
+    /// quantization with BF16 activations (paper Table 1 regime).
+    pub fn ref_arg_tail_with(&self, qm: &QuantizedModel) -> Result<Vec<ArgValue>> {
+        let m = &self.arts.manifest;
+        m.param_names
+            .iter()
+            .map(|name| {
+                let data = if let Some(qlin) = name
+                    .strip_suffix(".w")
+                    .and_then(|base| qm.linears.iter().find(|l| l.name == base))
+                {
+                    qlin.dequant.clone()
+                } else {
+                    self.arts.weights.get(name)?.as_f32()?.to_vec()
+                };
+                Ok(ArgValue::F32 { shape: m.param_shapes[name].clone(), data })
+            })
+            .collect()
+    }
+
+    /// Weight-only perplexity: quantized weights through the unquantized
+    /// (BF16-activation) graph.
+    pub fn perplexity_weight_only(&self, qm: &QuantizedModel, max_batches: usize)
+                                  -> Result<PerplexityReport> {
+        let tail = self.ref_arg_tail_with(qm)?;
+        self.run_nll(&self.fwd_ref, &tail, max_batches, false)
+    }
+
+    /// Deterministic non-overlapping eval windows over the test stream.
+    pub fn eval_windows(&self, max_batches: usize) -> Vec<Vec<i32>> {
+        let n_windows = (self.test_stream.len() - 1) / self.seq;
+        let n_batches = (n_windows / self.batch).min(max_batches);
+        (0..n_batches)
+            .map(|b| {
+                let mut toks = Vec::with_capacity(self.batch * self.seq);
+                for r in 0..self.batch {
+                    let off = (b * self.batch + r) * self.seq;
+                    toks.extend_from_slice(&self.test_stream[off..off + self.seq]);
+                }
+                toks
+            })
+            .collect()
+    }
+
+    /// Perplexity of a quantization config (BF16 routes to fwd_ref).
+    pub fn perplexity(&self, cfg: &QuantConfig, qm: Option<&QuantizedModel>,
+                      max_batches: usize) -> Result<PerplexityReport> {
+        let is_bf16 = matches!(cfg.ratio, RatioSpec::Bf16);
+        let tail = if is_bf16 {
+            self.ref_arg_tail()?
+        } else {
+            self.quant_arg_tail(cfg, qm.expect("quantized model required"))?
+        };
+        let exe = if is_bf16 { &self.fwd_ref } else { &self.fwd_quant };
+        self.run_nll(exe, &tail, max_batches, !is_bf16)
+    }
+
+    /// Shared NLL loop over the deterministic eval windows.
+    pub fn run_nll(&self, exe: &Executable, tail: &[ArgValue], max_batches: usize,
+                   has_fracs: bool) -> Result<PerplexityReport> {
+        let mask = vec![1.0f32; self.batch * self.seq];
+        let mut nll_sum = 0.0f64;
+        let mut tok_sum = 0.0f64;
+        let nl = self.arts.manifest.num_linears;
+        let mut frac_sum = vec![0.0f64; nl];
+        let windows = self.eval_windows(max_batches);
+        let batches = windows.len();
+        anyhow::ensure!(batches > 0, "test stream too short for one batch");
+        for toks in windows {
+            let mut args = vec![
+                ArgValue::I32 { shape: vec![self.batch, self.seq], data: toks },
+                ArgValue::F32 { shape: vec![self.batch, self.seq], data: mask.clone() },
+            ];
+            args.extend(tail.iter().cloned());
+            let out = exe.run(&args)?;
+            nll_sum += out[0].iter().map(|&v| v as f64).sum::<f64>();
+            tok_sum += out[1].iter().map(|&v| v as f64).sum::<f64>();
+            if has_fracs {
+                for (i, &f) in out[2].iter().enumerate() {
+                    frac_sum[i] += f as f64;
+                }
+            }
+        }
+        Ok(PerplexityReport {
+            ppl: (nll_sum / tok_sum).exp(),
+            nll_sum,
+            tokens: tok_sum,
+            act_fp8: if has_fracs {
+                frac_sum.iter().map(|f| f / batches as f64).collect()
+            } else {
+                vec![]
+            },
+            batches,
+        })
+    }
+
+    /// Convenience: the standard baselines used all over the figures.
+    pub fn baseline_configs() -> (QuantConfig, QuantConfig, QuantConfig) {
+        (
+            QuantConfig { ratio: RatioSpec::Bf16, policy: Policy::Fisher,
+                          threshold_mode: crate::policy::ThresholdMode::Global, sw_clip: false },
+            QuantConfig::all_fp8(),
+            QuantConfig::all_fp4(),
+        )
+    }
+}

@@ -1,0 +1,116 @@
+//! The sweep driver: for each quantization configuration — quantize the
+//! weights, evaluate perplexity, and cost the run on the hardware model.
+//! This is the engine behind Figs. 1, 5, 6 and 10.
+
+
+use crate::hwsim::energy::EnergyModel;
+use crate::hwsim::layerprof::model_energy_clustered;
+use crate::hwsim::memory::fgmp_footprint;
+use crate::hwsim::DatapathConfig;
+use crate::model::{QuantConfig, QuantizedModel, RatioSpec};
+use crate::Result;
+
+use super::perplexity::Evaluator;
+
+/// One row of a sweep (one point on a figure).
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub label: String,
+    pub ppl: f64,
+    /// Perplexity degradation vs the BF16 reference (Fig. 1/5 y-axis).
+    pub ppl_delta_bf16: f64,
+    /// ... and vs the FP8 baseline (the paper's headline "<1%" metric).
+    pub ppl_delta_fp8: f64,
+    pub weight_fp8: f64,
+    pub act_fp8: f64,
+    /// Average weight bits/element (packed FGMP).
+    pub weight_bits_per_elem: f64,
+    /// Compression rate = 16 / average W+A bit width (Fig. 1 x-axis).
+    pub compression_rate: f64,
+    /// Dot-product energy normalized to the all-FP8 datapath (Fig. 10).
+    pub energy_norm: f64,
+}
+
+/// Run a list of configs. BF16/FP8 baselines are computed once and shared
+/// for the delta columns (both must be present in `configs` or are added).
+pub fn run_sweep(
+    ev: &Evaluator,
+    configs: &[QuantConfig],
+    max_batches: usize,
+) -> Result<Vec<SweepRow>> {
+    let (bf16_cfg, fp8_cfg, _) = Evaluator::baseline_configs();
+
+    let bf16 = ev.perplexity(&bf16_cfg, None, max_batches)?;
+    let qm8 = QuantizedModel::quantize(&ev.arts, &fp8_cfg)?;
+    let fp8 = ev.perplexity(&fp8_cfg, Some(&qm8), max_batches)?;
+
+    let dp = DatapathConfig::default();
+    let em = EnergyModel::default();
+    let tokens_per_fwd = ev.batch * ev.seq;
+
+    let mut rows = Vec::with_capacity(configs.len());
+    for cfg in configs {
+        let row = if matches!(cfg.ratio, RatioSpec::Bf16) {
+            SweepRow {
+                label: "BF16".into(),
+                ppl: bf16.ppl,
+                ppl_delta_bf16: 0.0,
+                ppl_delta_fp8: bf16.ppl - fp8.ppl,
+                weight_fp8: 0.0,
+                act_fp8: 0.0,
+                weight_bits_per_elem: 16.0,
+                compression_rate: 1.0,
+                energy_norm: f64::NAN, // no BF16 datapath in the prototype
+            }
+        } else {
+            let qm = QuantizedModel::quantize(&ev.arts, cfg)?;
+            let rep = ev.perplexity(cfg, Some(&qm), max_batches)?;
+            let profiles = qm.layer_profiles(&ev.arts.manifest, tokens_per_fwd, &rep.act_fp8);
+            let energy = model_energy_clustered(&dp, &em, &profiles, 100);
+
+            let w_fp8 = qm.weight_fp8_fraction();
+            let mem = fgmp_footprint(ev.arts.manifest.quantized_elements(), w_fp8);
+            let w_bits = mem.bits_per_element();
+            // Activations: same packed format online (payload+scale+meta).
+            let a_fp8 = rep.mean_act_fp8();
+            let a_bits = a_fp8 * 8.0 + (1.0 - a_fp8) * 4.5 + 0.0625;
+            SweepRow {
+                label: cfg.label(),
+                ppl: rep.ppl,
+                ppl_delta_bf16: rep.ppl - bf16.ppl,
+                ppl_delta_fp8: rep.ppl - fp8.ppl,
+                weight_fp8: w_fp8,
+                act_fp8: a_fp8,
+                weight_bits_per_elem: w_bits,
+                compression_rate: 16.0 / ((w_bits + a_bits) / 2.0),
+                energy_norm: energy.normalized(),
+            }
+        };
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+/// Pretty-print rows as the aligned table the benches emit.
+pub fn format_rows(rows: &[SweepRow]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<28} {:>8} {:>9} {:>9} {:>7} {:>7} {:>7} {:>7} {:>8}\n",
+        "config", "ppl", "dPPL/bf16", "dPPL/fp8", "W-fp8%", "A-fp8%", "bits/w", "comp", "E/fp8"
+    ));
+    for r in rows {
+        s.push_str(&format!(
+            "{:<28} {:>8.4} {:>9.4} {:>9.4} {:>7.1} {:>7.1} {:>7.3} {:>7.2} {:>8.3}\n",
+            r.label,
+            r.ppl,
+            r.ppl_delta_bf16,
+            r.ppl_delta_fp8,
+            r.weight_fp8 * 100.0,
+            r.act_fp8 * 100.0,
+            r.weight_bits_per_elem,
+            r.compression_rate,
+            r.energy_norm,
+        ));
+    }
+    s
+}

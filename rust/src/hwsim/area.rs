@@ -1,0 +1,89 @@
+//! Area model (paper Table 4, post-synthesis 5 nm, 16 lanes, BS = 16).
+//!
+//! Component areas are the paper's published numbers; the derived quantities
+//! (overhead ratios, PPU amortization across PEs) are recomputed from them —
+//! that recomputation is what `benches/table4_area.rs` regenerates.
+
+
+/// Post-synthesis area in µm² for each datapath configuration (Table 4).
+#[derive(Debug, Clone)]
+pub struct AreaModel {
+    pub fp8_datapath: f64,
+    pub nvfp4_datapath: f64,
+    /// FP8 weights × NVFP4 activations unit.
+    pub fp8_nvfp4_datapath: f64,
+    /// NVFP4 weights × FP8 activations unit.
+    pub nvfp4_fp8_datapath: f64,
+    /// The full four-unit FGMP datapath (16 lanes).
+    pub fgmp_datapath: f64,
+    /// The mixed-precision activation-quantization PPU.
+    pub fgmp_ppu: f64,
+}
+
+impl Default for AreaModel {
+    fn default() -> Self {
+        AreaModel {
+            fp8_datapath: 2995.0,
+            nvfp4_datapath: 1811.0,
+            fp8_nvfp4_datapath: 2669.0,
+            nvfp4_fp8_datapath: 2630.0,
+            fgmp_datapath: 10356.0,
+            fgmp_ppu: 8848.0,
+        }
+    }
+}
+
+impl AreaModel {
+    /// FGMP datapath overhead vs a standalone FP8 datapath (paper: 3.5×).
+    pub fn overhead_vs_fp8(&self) -> f64 {
+        self.fgmp_datapath / self.fp8_datapath
+    }
+
+    /// Overhead vs a coarse-grained mixed-precision datapath that has only
+    /// the FP8 and FP4 units (paper: 2.2×).
+    pub fn overhead_vs_coarse(&self) -> f64 {
+        self.fgmp_datapath / (self.fp8_datapath + self.nvfp4_datapath)
+    }
+
+    /// PPU area overhead relative to the 16-lane FGMP datapath (paper: 85%).
+    pub fn ppu_overhead(&self) -> f64 {
+        self.fgmp_ppu / self.fgmp_datapath
+    }
+
+    /// PPU area overhead when one PPU is shared across `pes` PEs.
+    pub fn ppu_overhead_amortized(&self, pes: usize) -> f64 {
+        self.fgmp_ppu / (self.fgmp_datapath * pes as f64)
+    }
+
+    /// Sum of the four independent units — the FGMP datapath is slightly
+    /// larger than this because of the per-lane muxing/accumulator sharing.
+    pub fn sum_of_units(&self) -> f64 {
+        self.fp8_datapath + self.nvfp4_datapath + self.fp8_nvfp4_datapath + self.nvfp4_fp8_datapath
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_overheads() {
+        let a = AreaModel::default();
+        assert!((a.overhead_vs_fp8() - 3.458).abs() < 0.01);
+        assert!((a.overhead_vs_coarse() - 2.154).abs() < 0.01);
+        assert!((a.ppu_overhead() - 0.854).abs() < 0.01);
+    }
+
+    #[test]
+    fn amortized_ppu_negligible_at_256_pes() {
+        let a = AreaModel::default();
+        assert!(a.ppu_overhead_amortized(256) < 0.004);
+    }
+
+    #[test]
+    fn fgmp_close_to_sum_of_units() {
+        let a = AreaModel::default();
+        let ratio = a.fgmp_datapath / a.sum_of_units();
+        assert!(ratio > 0.95 && ratio < 1.1, "got {ratio}");
+    }
+}

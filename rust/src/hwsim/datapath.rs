@@ -1,0 +1,197 @@
+//! Weight-stationary VMAC datapath cycle/energy model (paper §4.1, §5.4).
+//!
+//! The accelerator is P PEs × L lanes; each lane computes one BS-wide VMAC
+//! per cycle. For an (M×K)·(K×N) matmul the datapath time is
+//! `M/L · K/BS · N/P` cycles (paper §5.4.3), with the A tile held stationary
+//! and B blocks broadcast — we account energy per VMAC from the per-unit
+//! model plus amortized weight-load / broadcast costs.
+
+
+use super::energy::{DotUnit, EnergyModel};
+use crate::BLOCK;
+
+/// Datapath geometry (defaults = the paper's prototype: L=16, BS=16).
+#[derive(Debug, Clone)]
+pub struct DatapathConfig {
+    /// Vector lanes per PE.
+    pub lanes: usize,
+    /// Number of PEs.
+    pub pes: usize,
+    /// Clock frequency in GHz (paper: 1 GHz).
+    pub freq_ghz: f64,
+}
+
+impl Default for DatapathConfig {
+    fn default() -> Self {
+        DatapathConfig { lanes: 16, pes: 16, freq_ghz: 1.0 }
+    }
+}
+
+/// One matmul to simulate: dimensions plus the precision mix.
+#[derive(Debug, Clone)]
+pub struct MatmulJob {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// Fraction of weight blocks in FP8.
+    pub weight_fp8: f64,
+    /// Fraction of activation blocks in FP8.
+    pub act_fp8: f64,
+}
+
+/// Simulation result for one matmul.
+#[derive(Debug, Clone, Default)]
+pub struct MatmulReport {
+    pub cycles: u64,
+    pub vmacs: u64,
+    pub ops: u64,
+    /// Dot-product energy (pJ), FGMP mux tax included.
+    pub dot_energy_pj: f64,
+    /// Weight-load + broadcast energy (pJ).
+    pub data_energy_pj: f64,
+    /// PPU energy (pJ) for quantizing the output blocks.
+    pub ppu_energy_pj: f64,
+    pub runtime_us: f64,
+}
+
+impl MatmulReport {
+    pub fn total_energy_pj(&self) -> f64 {
+        self.dot_energy_pj + self.data_energy_pj + self.ppu_energy_pj
+    }
+    /// Energy per op (pJ) — the Fig. 9/10 unit.
+    pub fn energy_per_op(&self) -> f64 {
+        self.total_energy_pj() / self.ops.max(1) as f64
+    }
+}
+
+/// Simulate one matmul on the FGMP datapath with the PPU quantizing the
+/// (M×N) output to mixed precision (`quantize_output=false` for the final
+/// LM head or any layer whose consumer wants high precision).
+pub fn simulate_matmul(
+    cfg: &DatapathConfig,
+    em: &EnergyModel,
+    job: &MatmulJob,
+    quantize_output: bool,
+) -> MatmulReport {
+    let bs = BLOCK;
+    assert!(job.k % bs == 0, "K must tile into blocks");
+    // Throughput is precision-independent (paper §4.1): ceil dims.
+    let m_tiles = job.m.div_ceil(cfg.lanes) as u64;
+    let k_blocks = (job.k / bs) as u64;
+    let n_tiles = job.n.div_ceil(cfg.pes) as u64;
+    let cycles = m_tiles * k_blocks * n_tiles;
+    let vmacs = (job.m as u64) * k_blocks * (job.n as u64);
+    let ops = vmacs * 2 * bs as u64;
+
+    // Expected VMAC energy under the block-precision mix (independence of
+    // weight/activation metadata bits — they are computed by independent
+    // mechanisms, offline policy vs online PPU).
+    let e_vmac = em.vmac_expected(job.weight_fp8, job.act_fp8);
+    let dot_energy = e_vmac * vmacs as f64;
+
+    // Weight-stationary: each weight block loaded once per N-tile pass;
+    // activations broadcast once per M-tile row.
+    let weight_blocks = (job.m as u64) * k_blocks;
+    let act_blocks = k_blocks * (job.n as u64);
+    let data_energy = em.e_weight_load_block * weight_blocks as f64
+        + em.e_act_broadcast * act_blocks as f64 * (m_tiles as f64);
+
+    // PPU: one quantization per 16-element output block (paper §5.4.2 —
+    // invoked once per reduced output block, amortized over K).
+    let out_blocks = (job.m as u64) * (job.n as u64).div_ceil(bs as u64);
+    let ppu_energy = if quantize_output { em.e_ppu_block * out_blocks as f64 } else { 0.0 };
+
+    MatmulReport {
+        cycles,
+        vmacs,
+        ops,
+        dot_energy_pj: dot_energy,
+        data_energy_pj: data_energy,
+        ppu_energy_pj: ppu_energy,
+        runtime_us: cycles as f64 / (cfg.freq_ghz * 1e3),
+    }
+}
+
+/// Single-format reference points (the four labelled boxes of Fig. 9): the
+/// whole matmul runs on one dot-product unit with no mux tax.
+pub fn simulate_single_format(
+    cfg: &DatapathConfig,
+    em: &EnergyModel,
+    job: &MatmulJob,
+    unit: DotUnit,
+) -> MatmulReport {
+    let mut r = simulate_matmul(cfg, em, job, false);
+    r.dot_energy_pj = em.vmac_single(unit) * r.vmacs as f64;
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(m: usize, k: usize, n: usize) -> MatmulJob {
+        MatmulJob { m, k, n, weight_fp8: 0.3, act_fp8: 0.3 }
+    }
+
+    #[test]
+    fn cycle_count_closed_form() {
+        // Paper §5.4.3: M/L · K/16 · N/P for a 4096³ matmul, L=16, P=16.
+        let cfg = DatapathConfig::default();
+        let em = EnergyModel::default();
+        let r = simulate_matmul(&cfg, &em, &job(4096, 4096, 4096), true);
+        assert_eq!(r.cycles, (4096 / 16) * (4096 / 16) * (4096 / 16));
+    }
+
+    #[test]
+    fn throughput_independent_of_precision() {
+        let cfg = DatapathConfig::default();
+        let em = EnergyModel::default();
+        let mut j = job(512, 256, 512);
+        let c1 = simulate_matmul(&cfg, &em, &j, true).cycles;
+        j.weight_fp8 = 1.0;
+        j.act_fp8 = 1.0;
+        let c2 = simulate_matmul(&cfg, &em, &j, true).cycles;
+        assert_eq!(c1, c2, "paper §4.1: same math throughput per cycle");
+    }
+
+    #[test]
+    fn energy_monotone_in_fp8() {
+        let cfg = DatapathConfig::default();
+        let em = EnergyModel::default();
+        let mut last = 0.0;
+        for i in 0..=4 {
+            let f = i as f64 / 4.0;
+            let r = simulate_matmul(&cfg, &em, &MatmulJob { weight_fp8: f, act_fp8: f, ..job(256, 256, 256) }, true);
+            assert!(r.dot_energy_pj >= last);
+            last = r.dot_energy_pj;
+        }
+    }
+
+    #[test]
+    fn fp4_saves_vs_fp8_single_format() {
+        let cfg = DatapathConfig::default();
+        let em = EnergyModel::default();
+        let j = job(256, 256, 256);
+        let r8 = simulate_single_format(&cfg, &em, &j, DotUnit::Fp8Fp8);
+        let r4 = simulate_single_format(&cfg, &em, &j, DotUnit::Fp4Fp4);
+        let ratio = r4.dot_energy_pj / r8.dot_energy_pj;
+        assert!((ratio - 0.67).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ppu_amortized_below_one_percent() {
+        // Paper §5.4.2: for K >= 4096 the PPU is < 1% of dot-product energy.
+        let cfg = DatapathConfig::default();
+        let em = EnergyModel::default();
+        let r = simulate_matmul(&cfg, &em, &job(4096, 4096, 4096), true);
+        assert!(r.ppu_energy_pj / r.dot_energy_pj < 0.01);
+    }
+
+    #[test]
+    fn runtime_scales_with_cycles() {
+        let cfg = DatapathConfig::default();
+        let em = EnergyModel::default();
+        let r = simulate_matmul(&cfg, &em, &job(256, 256, 256), false);
+        assert!((r.runtime_us - r.cycles as f64 / 1e3).abs() < 1e-9);
+    }
+}

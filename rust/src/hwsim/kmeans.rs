@@ -1,0 +1,167 @@
+//! K-means clustering of per-layer precision-mix configurations
+//! (paper §4.3): measuring power for every (layer × global-ratio) point is
+//! intractable, so the paper normalizes each configuration's features,
+//! clusters them into K=100 representatives, measures those, and scales the
+//! results back up to the real layer shapes. We reproduce that pipeline.
+
+/// One layer configuration: the features the paper clusters on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerConfig {
+    /// Fraction of weight blocks in FP8.
+    pub weight_fp8: f64,
+    /// Fraction of activation blocks in FP8.
+    pub act_fp8: f64,
+}
+
+impl LayerConfig {
+    fn as_vec(&self) -> [f64; 2] {
+        [self.weight_fp8, self.act_fp8]
+    }
+}
+
+/// K-means result: centroids and per-point assignment.
+#[derive(Debug, Clone)]
+pub struct Clustering {
+    pub centroids: Vec<LayerConfig>,
+    pub assignment: Vec<usize>,
+}
+
+fn dist2(a: &[f64; 2], b: &[f64; 2]) -> f64 {
+    (a[0] - b[0]).powi(2) + (a[1] - b[1]).powi(2)
+}
+
+/// Deterministic k-means (k-means++-style farthest-point seeding with a
+/// fixed LCG, Lloyd iterations to convergence or `max_iter`).
+pub fn kmeans(points: &[LayerConfig], k: usize, max_iter: usize) -> Clustering {
+    assert!(!points.is_empty());
+    let k = k.min(points.len());
+    let xs: Vec<[f64; 2]> = points.iter().map(|p| p.as_vec()).collect();
+
+    // Farthest-point seeding from a deterministic start.
+    let mut centers: Vec<[f64; 2]> = vec![xs[0]];
+    while centers.len() < k {
+        let (mut best_i, mut best_d) = (0usize, -1.0f64);
+        for (i, x) in xs.iter().enumerate() {
+            let d = centers.iter().map(|c| dist2(x, c)).fold(f64::MAX, f64::min);
+            if d > best_d {
+                best_d = d;
+                best_i = i;
+            }
+        }
+        centers.push(xs[best_i]);
+    }
+
+    let mut assignment = vec![0usize; xs.len()];
+    for _ in 0..max_iter {
+        let mut changed = false;
+        for (i, x) in xs.iter().enumerate() {
+            let (mut bj, mut bd) = (0usize, f64::MAX);
+            for (j, c) in centers.iter().enumerate() {
+                let d = dist2(x, c);
+                if d < bd {
+                    bd = d;
+                    bj = j;
+                }
+            }
+            if assignment[i] != bj {
+                assignment[i] = bj;
+                changed = true;
+            }
+        }
+        let mut sums = vec![[0.0f64; 2]; k];
+        let mut counts = vec![0usize; k];
+        for (i, &a) in assignment.iter().enumerate() {
+            sums[a][0] += xs[i][0];
+            sums[a][1] += xs[i][1];
+            counts[a] += 1;
+        }
+        for j in 0..k {
+            if counts[j] > 0 {
+                centers[j] = [sums[j][0] / counts[j] as f64, sums[j][1] / counts[j] as f64];
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    Clustering {
+        centroids: centers
+            .into_iter()
+            .map(|c| LayerConfig { weight_fp8: c[0], act_fp8: c[1] })
+            .collect(),
+        assignment,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid_points() -> Vec<LayerConfig> {
+        let mut v = Vec::new();
+        for i in 0..20 {
+            for j in 0..20 {
+                v.push(LayerConfig { weight_fp8: i as f64 / 19.0, act_fp8: j as f64 / 19.0 });
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn assignment_is_partition() {
+        let pts = grid_points();
+        let c = kmeans(&pts, 16, 50);
+        assert_eq!(c.assignment.len(), pts.len());
+        assert!(c.assignment.iter().all(|&a| a < c.centroids.len()));
+        // every centroid used
+        for j in 0..c.centroids.len() {
+            assert!(c.assignment.iter().any(|&a| a == j), "unused centroid {j}");
+        }
+    }
+
+    #[test]
+    fn assignment_is_nearest() {
+        let pts = grid_points();
+        let c = kmeans(&pts, 8, 50);
+        for (i, p) in pts.iter().enumerate() {
+            let my = &c.centroids[c.assignment[i]];
+            let my_d = dist2(&p.as_vec(), &my.as_vec());
+            for cent in &c.centroids {
+                assert!(my_d <= dist2(&p.as_vec(), &cent.as_vec()) + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn k_larger_than_points_clamps() {
+        let pts = vec![
+            LayerConfig { weight_fp8: 0.1, act_fp8: 0.2 },
+            LayerConfig { weight_fp8: 0.9, act_fp8: 0.8 },
+        ];
+        let c = kmeans(&pts, 100, 10);
+        assert_eq!(c.centroids.len(), 2);
+    }
+
+    #[test]
+    fn deterministic() {
+        let pts = grid_points();
+        let a = kmeans(&pts, 10, 50);
+        let b = kmeans(&pts, 10, 50);
+        assert_eq!(a.assignment, b.assignment);
+    }
+
+    #[test]
+    fn centroid_error_small_with_many_clusters() {
+        // With K=100 over the 20x20 grid, mean quantization error is tiny —
+        // the paper's justification for measuring only 100 representatives.
+        let pts = grid_points();
+        let c = kmeans(&pts, 100, 100);
+        let mean_err: f64 = pts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| dist2(&p.as_vec(), &c.centroids[c.assignment[i]].as_vec()).sqrt())
+            .sum::<f64>()
+            / pts.len() as f64;
+        assert!(mean_err < 0.05, "mean centroid error {mean_err}");
+    }
+}

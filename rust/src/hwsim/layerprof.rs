@@ -1,0 +1,187 @@
+//! Per-layer precision-mix profiles (paper Fig. 7) and the full-model
+//! energy pipeline of §4.3: profile per-layer FP4/FP8 mixes → K-means into
+//! representative configurations → cost each representative on the datapath
+//! model → scale back to the real layer shapes.
+
+
+use super::datapath::{simulate_matmul, DatapathConfig, MatmulJob, MatmulReport};
+use super::energy::EnergyModel;
+use super::kmeans::{kmeans, LayerConfig};
+
+/// The measured precision mix for one linear layer.
+#[derive(Debug, Clone)]
+pub struct LayerProfile {
+    pub name: String,
+    pub layer: usize,
+    /// "qkv_proj" | "o_proj" | "fc1" | "fc2".
+    pub kind: String,
+    /// Matmul shape: (M tokens, K, N).
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// Fraction of weight blocks in FP8 (from the offline assignment).
+    pub weight_fp8: f64,
+    /// Fraction of activation blocks in FP8 (from the runtime PPU stats).
+    pub act_fp8: f64,
+}
+
+/// Full-model energy report.
+#[derive(Debug, Clone, Default)]
+pub struct ModelEnergyReport {
+    pub per_layer: Vec<(String, MatmulReport)>,
+    pub total_pj: f64,
+    /// Total under the all-FP8 single-format baseline.
+    pub fp8_baseline_pj: f64,
+    /// Total under the all-FP4 single-format baseline.
+    pub fp4_baseline_pj: f64,
+    pub n_clusters: usize,
+}
+
+impl ModelEnergyReport {
+    /// Normalized energy vs the FP8 baseline (the Fig. 10 x-axis).
+    pub fn normalized(&self) -> f64 {
+        self.total_pj / self.fp8_baseline_pj
+    }
+    pub fn savings(&self) -> f64 {
+        1.0 - self.normalized()
+    }
+}
+
+/// Cost a whole model: exact per-layer simulation (the "ground truth" the
+/// clustered estimate approximates).
+pub fn model_energy_exact(
+    cfg: &DatapathConfig,
+    em: &EnergyModel,
+    profiles: &[LayerProfile],
+) -> ModelEnergyReport {
+    let mut rep = ModelEnergyReport::default();
+    for p in profiles {
+        let job = MatmulJob { m: p.m, k: p.k, n: p.n, weight_fp8: p.weight_fp8, act_fp8: p.act_fp8 };
+        let r = simulate_matmul(cfg, em, &job, true);
+        rep.total_pj += r.total_energy_pj();
+        let r8 = simulate_matmul(cfg, em, &MatmulJob { weight_fp8: 1.0, act_fp8: 1.0, ..job.clone() }, true);
+        // Single-format baselines don't pay the FGMP mux tax:
+        rep.fp8_baseline_pj += r8.total_energy_pj() - em.e_mux_tax * r8.vmacs as f64;
+        let r4 = simulate_matmul(cfg, em, &MatmulJob { weight_fp8: 0.0, act_fp8: 0.0, ..job.clone() }, true);
+        rep.fp4_baseline_pj += r4.total_energy_pj() - em.e_mux_tax * r4.vmacs as f64;
+        rep.per_layer.push((p.name.clone(), r));
+    }
+    rep.n_clusters = profiles.len();
+    rep
+}
+
+/// Cost a whole model via the paper's §4.3 pipeline: K-means the per-layer
+/// configurations into `k` representatives, cost one small kernel per
+/// representative, scale up by each member layer's VMAC count.
+pub fn model_energy_clustered(
+    cfg: &DatapathConfig,
+    em: &EnergyModel,
+    profiles: &[LayerProfile],
+    k: usize,
+) -> ModelEnergyReport {
+    let pts: Vec<LayerConfig> = profiles
+        .iter()
+        .map(|p| LayerConfig { weight_fp8: p.weight_fp8, act_fp8: p.act_fp8 })
+        .collect();
+    let clus = kmeans(&pts, k, 100);
+
+    // Cost one representative small kernel (256×256×256) per centroid and
+    // derive the per-VMAC energy, as the paper replays small kernels on the
+    // gate netlist and scales to layer shapes.
+    let probe = |wc: f64, ac: f64| -> f64 {
+        let job = MatmulJob { m: 256, k: 256, n: 256, weight_fp8: wc, act_fp8: ac };
+        let r = simulate_matmul(cfg, em, &job, true);
+        r.total_energy_pj() / r.vmacs as f64
+    };
+    let per_vmac: Vec<f64> = clus
+        .centroids
+        .iter()
+        .map(|c| probe(c.weight_fp8, c.act_fp8))
+        .collect();
+
+    let mut rep = ModelEnergyReport::default();
+    for (i, p) in profiles.iter().enumerate() {
+        let job = MatmulJob { m: p.m, k: p.k, n: p.n, weight_fp8: p.weight_fp8, act_fp8: p.act_fp8 };
+        let exact = simulate_matmul(cfg, em, &job, true); // for vmac count + baselines
+        let scaled = per_vmac[clus.assignment[i]] * exact.vmacs as f64;
+        rep.total_pj += scaled;
+        let r8 = simulate_matmul(cfg, em, &MatmulJob { weight_fp8: 1.0, act_fp8: 1.0, ..job.clone() }, true);
+        rep.fp8_baseline_pj += r8.total_energy_pj() - em.e_mux_tax * r8.vmacs as f64;
+        let r4 = simulate_matmul(cfg, em, &MatmulJob { weight_fp8: 0.0, act_fp8: 0.0, ..job.clone() }, true);
+        rep.fp4_baseline_pj += r4.total_energy_pj() - em.e_mux_tax * r4.vmacs as f64;
+        rep.per_layer.push((p.name.clone(), exact));
+    }
+    rep.n_clusters = clus.centroids.len();
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_profiles(n: usize) -> Vec<LayerProfile> {
+        (0..n)
+            .map(|i| LayerProfile {
+                name: format!("blk{i}.fc1"),
+                layer: i,
+                kind: "fc1".into(),
+                m: 1024,
+                k: 256,
+                n: 512,
+                weight_fp8: (i as f64 * 0.37).fract() * 0.5,
+                act_fp8: (i as f64 * 0.61).fract() * 0.5,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn clustered_close_to_exact() {
+        // Paper's methodology check: 100 clusters approximate the exact
+        // per-layer costing to well under 1%.
+        let cfg = DatapathConfig::default();
+        let em = EnergyModel::default();
+        let profiles = mk_profiles(64);
+        let exact = model_energy_exact(&cfg, &em, &profiles);
+        let approx = model_energy_clustered(&cfg, &em, &profiles, 100);
+        let rel = (approx.total_pj - exact.total_pj).abs() / exact.total_pj;
+        assert!(rel < 0.01, "clustered estimate off by {rel}");
+    }
+
+    #[test]
+    fn fewer_clusters_coarser_but_sane() {
+        let cfg = DatapathConfig::default();
+        let em = EnergyModel::default();
+        let profiles = mk_profiles(64);
+        let exact = model_energy_exact(&cfg, &em, &profiles);
+        let approx = model_energy_clustered(&cfg, &em, &profiles, 4);
+        let rel = (approx.total_pj - exact.total_pj).abs() / exact.total_pj;
+        assert!(rel < 0.10, "4-cluster estimate off by {rel}");
+    }
+
+    #[test]
+    fn mostly_fp4_model_saves_vs_fp8() {
+        let cfg = DatapathConfig::default();
+        let em = EnergyModel::default();
+        let profiles = mk_profiles(16);
+        let rep = model_energy_exact(&cfg, &em, &profiles);
+        assert!(rep.normalized() < 1.0);
+        assert!(rep.total_pj > rep.fp4_baseline_pj);
+    }
+
+    #[test]
+    fn all_fp8_profile_slightly_above_baseline() {
+        let cfg = DatapathConfig::default();
+        let em = EnergyModel::default();
+        let profiles: Vec<LayerProfile> = mk_profiles(8)
+            .into_iter()
+            .map(|mut p| {
+                p.weight_fp8 = 1.0;
+                p.act_fp8 = 1.0;
+                p
+            })
+            .collect();
+        let rep = model_energy_exact(&cfg, &em, &profiles);
+        assert!(rep.normalized() > 1.0, "mux tax must show up: {}", rep.normalized());
+        assert!(rep.normalized() < 1.03);
+    }
+}

@@ -1,0 +1,27 @@
+//! Hardware model of the FGMP accelerator (paper §4, §5.4).
+//!
+//! The paper's system-level results (Figs. 8–10, Table 4) are *derived* from
+//! component measurements of a 5 nm prototype (Catapult HLS → Fusion
+//! Compiler → PrimePower). We reproduce the derivation: [`energy`] carries
+//! the published per-unit energies (NVFP4 = 0.67× FP8, mixed ≈ 0.84×/0.83×,
+//! mux tax, 25.7 pJ/block PPU), [`area`] the Table-4 areas, [`datapath`] the
+//! weight-stationary VMAC cycle model, [`ppu`] the post-processing
+//! activation quantizer with its amortization analysis, [`memory`] the
+//! Fig.-8 footprint accounting, [`kmeans`] the §4.3 K-means clustering of
+//! per-layer precision-mix configurations, and [`layerprof`] the per-layer
+//! profile plumbing.
+
+pub mod area;
+pub mod datapath;
+pub mod energy;
+pub mod kmeans;
+pub mod kvcache;
+pub mod layerprof;
+pub mod memory;
+pub mod ppu;
+pub mod trace;
+
+pub use datapath::{DatapathConfig, MatmulJob, simulate_matmul};
+pub use energy::{DotUnit, EnergyModel};
+pub use layerprof::LayerProfile;
+pub use memory::weight_memory_report;

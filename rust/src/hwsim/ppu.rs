@@ -1,0 +1,98 @@
+//! Post-processing unit (PPU) model: the on-the-fly mixed-precision
+//! activation quantizer (paper §4.2) plus its amortization/stall analysis
+//! (§5.4.3).
+//!
+//! The functional model (what the PPU *computes*) lives in the quant/policy
+//! modules — `fgmp_quant` in the L1 kernel and `assign_tensor` here in Rust;
+//! this module models its *cost*: energy per block and the PE:PPU balance
+//! condition under the paper's pipeline equation.
+
+use super::datapath::DatapathConfig;
+use crate::BLOCK;
+
+/// PPU throughput/balance analysis for an (M×K)·(K×N) matmul.
+#[derive(Debug, Clone)]
+pub struct PpuBalance {
+    /// Datapath time in cycles: M/L · K/BS · N/P.
+    pub datapath_cycles: u64,
+    /// PPU time in cycles: M/BS · N/U (one output block per cycle per PPU).
+    pub ppu_cycles: u64,
+    /// Whether the PPU keeps up (no stall) with this PE count.
+    pub balanced: bool,
+    /// Max PEs a single PPU sustains without stalling for this shape.
+    pub max_pes_per_ppu: usize,
+}
+
+/// Evaluate the paper's balance equation for `u` PPUs.
+pub fn ppu_balance(cfg: &DatapathConfig, m: usize, k: usize, n: usize, u: usize) -> PpuBalance {
+    let bs = BLOCK as u64;
+    let datapath = (m as u64).div_ceil(cfg.lanes as u64)
+        * (k as u64 / bs)
+        * (n as u64).div_ceil(cfg.pes as u64);
+    let ppu = (m as u64).div_ceil(bs) * (n as u64).div_ceil(u as u64);
+    // PPU keeps up iff ppu_cycles <= datapath_cycles; solve for the PE count
+    // where equality holds (paper: 4096³ @ 16 lanes -> 256 PEs per PPU).
+    // datapath ∝ 1/P  =>  P_max = floor(datapath(P=1) / ppu).
+    let dp1 = (m as u64).div_ceil(cfg.lanes as u64) * (k as u64 / bs) * n as u64;
+    let max_pes = if ppu == 0 { usize::MAX } else { (dp1 / ppu) as usize };
+    PpuBalance {
+        datapath_cycles: datapath,
+        ppu_cycles: ppu,
+        balanced: ppu <= datapath,
+        max_pes_per_ppu: max_pes.max(1),
+    }
+}
+
+/// PPU energy per output element (fJ/op), amortized over the reduction dim
+/// — the paper's "0.20 fJ/op for K ≥ 4096" claim.
+pub fn ppu_energy_per_op_fj(e_ppu_block_pj: f64, k: usize) -> f64 {
+    // Each output block of BS elements required K/BS · BS · 2 = 2K ops per
+    // element; the PPU quantizes the block once.
+    let ops_per_block = 2.0 * k as f64 * BLOCK as f64;
+    e_ppu_block_pj * 1000.0 / ops_per_block
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwsim::energy::EnergyModel;
+
+    #[test]
+    fn paper_balance_point_256_pes() {
+        // Paper §5.4.3: 4096³ matmul, 16-lane PEs -> one PPU supports up to
+        // 256 PEs without stalling.
+        let cfg = DatapathConfig { lanes: 16, pes: 256, freq_ghz: 1.0 };
+        let b = ppu_balance(&cfg, 4096, 4096, 4096, 1);
+        assert!(b.balanced);
+        assert_eq!(b.max_pes_per_ppu, 256);
+    }
+
+    #[test]
+    fn overprovisioned_pes_stall() {
+        let cfg = DatapathConfig { lanes: 16, pes: 512, freq_ghz: 1.0 };
+        let b = ppu_balance(&cfg, 4096, 4096, 4096, 1);
+        assert!(!b.balanced);
+    }
+
+    #[test]
+    fn more_ppus_restore_balance() {
+        let cfg = DatapathConfig { lanes: 16, pes: 512, freq_ghz: 1.0 };
+        let b = ppu_balance(&cfg, 4096, 4096, 4096, 2);
+        assert!(b.balanced);
+    }
+
+    #[test]
+    fn paper_point_two_tenths_fj_per_op() {
+        // Paper §5.4.2: 25.7 pJ per block over K = 4096 -> ~0.20 fJ/op.
+        let em = EnergyModel::default();
+        let fj = ppu_energy_per_op_fj(em.e_ppu_block, 4096);
+        assert!((fj - 0.196).abs() < 0.01, "got {fj}");
+    }
+
+    #[test]
+    fn amortization_improves_with_k() {
+        let em = EnergyModel::default();
+        assert!(ppu_energy_per_op_fj(em.e_ppu_block, 8192)
+            < ppu_energy_per_op_fj(em.e_ppu_block, 1024));
+    }
+}

@@ -1,0 +1,219 @@
+//! Trace-level datapath simulation: execute a matmul's weight-stationary
+//! schedule with the *actual* per-block metadata bits (from a packed weight
+//! tensor and a concrete activation precision mask), counting per-unit VMAC
+//! activations exactly.
+//!
+//! This is the ground-truth check for the closed-form expectation model in
+//! [`super::energy`]/[`super::datapath`] (which assumes independent
+//! weight/activation metadata): the §4.3 energy pipeline is validated by
+//! comparing the two on real assignments (tests below and
+//! `examples/energy_sweep.rs`).
+
+use std::collections::HashMap;
+
+use super::datapath::{DatapathConfig, MatmulJob};
+use super::energy::{DotUnit, EnergyModel};
+use crate::quant::FgmpTensor;
+use crate::BLOCK;
+
+/// Exact per-unit activation counts from one traced matmul.
+#[derive(Debug, Clone, Default)]
+pub struct TraceReport {
+    /// VMACs issued per dot-product unit.
+    pub unit_vmacs: HashMap<DotUnit, u64>,
+    pub cycles: u64,
+    pub dot_energy_pj: f64,
+}
+
+impl TraceReport {
+    pub fn total_vmacs(&self) -> u64 {
+        self.unit_vmacs.values().sum()
+    }
+    /// Fraction of VMACs on each unit.
+    pub fn unit_fraction(&self, u: DotUnit) -> f64 {
+        *self.unit_vmacs.get(&u).unwrap_or(&0) as f64 / self.total_vmacs().max(1) as f64
+    }
+}
+
+/// Trace an (M×K)·(K×N) matmul given per-block precision bits.
+///
+/// * `weight_fp8[n][kb]` — metadata bit for the weight block feeding output
+///   channel `n`, K-block `kb` (the packed layout: blocks along K).
+/// * `act_fp8[m][kb]`    — metadata bit for activation row `m`, K-block `kb`
+///   (what the PPU produced for the previous layer's output).
+///
+/// The schedule mirrors §4.1: A (weights) held stationary per lane group,
+/// B (activation blocks) broadcast; every (m, kb, n) triple issues exactly
+/// one BS-wide VMAC on the unit selected by the two metadata bits.
+pub fn trace_matmul(
+    cfg: &DatapathConfig,
+    em: &EnergyModel,
+    weight_fp8: &[Vec<bool>],
+    act_fp8: &[Vec<bool>],
+) -> TraceReport {
+    let n_dim = weight_fp8.len();
+    let m_dim = act_fp8.len();
+    assert!(n_dim > 0 && m_dim > 0);
+    let k_blocks = weight_fp8[0].len();
+    assert!(weight_fp8.iter().all(|r| r.len() == k_blocks));
+    assert!(act_fp8.iter().all(|r| r.len() == k_blocks));
+
+    let mut unit_vmacs: HashMap<DotUnit, u64> = HashMap::new();
+    let mut energy = 0.0f64;
+    for wrow in weight_fp8 {
+        for arow in act_fp8 {
+            for kb in 0..k_blocks {
+                let unit = DotUnit::select(wrow[kb], arow[kb]);
+                *unit_vmacs.entry(unit).or_insert(0) += 1;
+                energy += em.vmac_fgmp(unit);
+            }
+        }
+    }
+    let cycles = (m_dim as u64).div_ceil(cfg.lanes as u64)
+        * k_blocks as u64
+        * (n_dim as u64).div_ceil(cfg.pes as u64);
+    TraceReport { unit_vmacs, cycles, dot_energy_pj: energy }
+}
+
+/// Trace using a packed FGMP weight tensor (blocks along K per output
+/// channel) and an activation mask.
+pub fn trace_packed(
+    cfg: &DatapathConfig,
+    em: &EnergyModel,
+    weights: &FgmpTensor,
+    k: usize,
+    act_fp8: &[Vec<bool>],
+) -> TraceReport {
+    let kb = k / BLOCK;
+    let n = weights.n_blocks / kb;
+    let wmask: Vec<Vec<bool>> = (0..n)
+        .map(|ni| (0..kb).map(|b| weights.is_fp8(ni * kb + b)).collect())
+        .collect();
+    trace_matmul(cfg, em, &wmask, act_fp8)
+}
+
+/// Relative error between the traced energy and the closed-form
+/// expectation model for the same aggregate fractions.
+pub fn expectation_gap(
+    cfg: &DatapathConfig,
+    em: &EnergyModel,
+    weight_fp8: &[Vec<bool>],
+    act_fp8: &[Vec<bool>],
+) -> f64 {
+    let trace = trace_matmul(cfg, em, weight_fp8, act_fp8);
+    let k_blocks = weight_fp8[0].len();
+    let wf = frac(weight_fp8);
+    let af = frac(act_fp8);
+    let job = MatmulJob {
+        m: act_fp8.len(),
+        k: k_blocks * BLOCK,
+        n: weight_fp8.len(),
+        weight_fp8: wf,
+        act_fp8: af,
+    };
+    let analytic = super::datapath::simulate_matmul(cfg, em, &job, false);
+    (trace.dot_energy_pj - analytic.dot_energy_pj).abs() / analytic.dot_energy_pj
+}
+
+fn frac(mask: &[Vec<bool>]) -> f64 {
+    let total: usize = mask.iter().map(|r| r.len()).sum();
+    let set: usize = mask.iter().map(|r| r.iter().filter(|&&b| b).count()).sum();
+    set as f64 / total.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn mask(rows: usize, kb: usize, p: f64, seed: u64) -> Vec<Vec<bool>> {
+        let mut rng = Rng::new(seed);
+        (0..rows).map(|_| (0..kb).map(|_| rng.f64() < p).collect()).collect()
+    }
+
+    #[test]
+    fn vmac_count_exact() {
+        let cfg = DatapathConfig::default();
+        let em = EnergyModel::default();
+        let r = trace_matmul(&cfg, &em, &mask(32, 8, 0.3, 1), &mask(64, 8, 0.3, 2));
+        assert_eq!(r.total_vmacs(), 32 * 64 * 8);
+    }
+
+    #[test]
+    fn single_format_masks_use_one_unit() {
+        let cfg = DatapathConfig::default();
+        let em = EnergyModel::default();
+        let r = trace_matmul(&cfg, &em, &mask(8, 4, 1.1, 1), &mask(8, 4, 1.1, 2));
+        assert_eq!(r.unit_fraction(DotUnit::Fp8Fp8), 1.0);
+        let r = trace_matmul(&cfg, &em, &mask(8, 4, -0.1, 1), &mask(8, 4, -0.1, 2));
+        assert_eq!(r.unit_fraction(DotUnit::Fp4Fp4), 1.0);
+    }
+
+    #[test]
+    fn expectation_model_matches_trace_exactly_under_independence() {
+        // With weight bits indexed by (n, kb) and act bits by (m, kb), the
+        // cross product makes the *pairing* exactly independent per kb, so
+        // the expectation model should agree to ~the mixing error of the
+        // finite masks (<2% for these sizes).
+        let cfg = DatapathConfig::default();
+        let em = EnergyModel::default();
+        for (pw, pa) in [(0.1, 0.3), (0.3, 0.3), (0.7, 0.2), (0.5, 0.5)] {
+            let gap = expectation_gap(&cfg, &em,
+                                      &mask(64, 16, pw, 42), &mask(128, 16, pa, 43));
+            assert!(gap < 0.02, "gap {gap} at ({pw},{pa})");
+        }
+    }
+
+    #[test]
+    fn additive_unit_energies_make_expectation_exact_under_correlation() {
+        // A finding the trace simulator surfaces: the paper's published
+        // unit energies are *additive* in the two metadata bits (FP4
+        // weights save 16%, FP4 activations 17%, both together 33%), so
+        // E[energy] depends only on the marginal FP8 fractions — even
+        // maximally correlated masks (weight and activation FP8 aligned on
+        // the same K columns) match the independence model exactly. The
+        // §4.3 clustered pipeline therefore carries no correlation error
+        // for this datapath.
+        let cfg = DatapathConfig::default();
+        let em = EnergyModel::default();
+        let kb = 16;
+        // both masks FP8 on the same first 4 kb columns only (max correlation)
+        let w: Vec<Vec<bool>> = (0..64).map(|_| (0..kb).map(|b| b < 4).collect()).collect();
+        let a: Vec<Vec<bool>> = (0..64).map(|_| (0..kb).map(|b| b < 4).collect()).collect();
+        let trace = trace_matmul(&cfg, &em, &w, &a);
+        let job = MatmulJob { m: 64, k: kb * BLOCK, n: 64, weight_fp8: 0.25, act_fp8: 0.25 };
+        let analytic = super::super::datapath::simulate_matmul(&cfg, &em, &job, false);
+        let gap = (trace.dot_energy_pj - analytic.dot_energy_pj).abs() / analytic.dot_energy_pj;
+        assert!(gap < 1e-9, "additivity: gap {gap}");
+        // ... and a hypothetical non-additive datapath would break this:
+        // with super-additive FP4×FP4 savings, aligned masks over-represent
+        // the cheap unit, so the trace comes in BELOW the expectation model.
+        let mut em2 = em.clone();
+        em2.e_fp4 *= 0.8;
+        let trace2 = trace_matmul(&cfg, &em2, &w, &a);
+        let analytic2 = super::super::datapath::simulate_matmul(&cfg, &em2, &job, false);
+        assert!(trace2.dot_energy_pj < analytic2.dot_energy_pj * 0.99,
+                "correlated masks must under-cost on a super-additive datapath");
+    }
+
+    #[test]
+    fn packed_tensor_trace_consistent() {
+        use crate::quant::Precision;
+        let mut rng = Rng::new(7);
+        let k = 64;
+        let n = 8;
+        let data: Vec<f32> = (0..n * k).map(|_| (rng.normal() * 3.0) as f32).collect();
+        let prec: Vec<Precision> = (0..n * k / BLOCK)
+            .map(|i| if i % 3 == 0 { Precision::Fp8 } else { Precision::Fp4 })
+            .collect();
+        let t = FgmpTensor::pack(&[n, k], &data, &prec, None);
+        let cfg = DatapathConfig::default();
+        let em = EnergyModel::default();
+        let act = mask(16, k / BLOCK, 0.5, 9);
+        let r = trace_packed(&cfg, &em, &t, k, &act);
+        assert_eq!(r.total_vmacs(), (16 * n * (k / BLOCK)) as u64);
+        // fraction of weight-FP8-involving units equals the packed fraction
+        let w8 = r.unit_fraction(DotUnit::Fp8Fp8) + r.unit_fraction(DotUnit::Fp8Fp4);
+        assert!((w8 - t.fp8_fraction()).abs() < 1e-9);
+    }
+}

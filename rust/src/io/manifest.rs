@@ -1,0 +1,149 @@
+//! The model manifest written by `python -m compile.aot`: parameter order
+//! (= HLO argument order), linear-layer inventory, and graph signatures.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::Context;
+
+use crate::util::Json;
+use crate::Result;
+
+/// One linear layer: the unit of FGMP quantization and hwsim costing.
+#[derive(Debug, Clone)]
+pub struct LinearSpec {
+    pub name: String,
+    pub layer: usize,
+    pub kind: String,
+    pub k_in: usize,
+    pub n_out: usize,
+}
+
+/// Signature of one exported graph.
+#[derive(Debug, Clone)]
+pub struct GraphSpec {
+    pub args: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+/// manifest.json, one per model directory under artifacts/.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    pub num_linears: usize,
+    pub param_names: Vec<String>,
+    pub param_shapes: HashMap<String, Vec<usize>>,
+    pub linears: Vec<LinearSpec>,
+    pub graphs: HashMap<String, GraphSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        let param_names: Vec<String> = v
+            .get("param_names")?
+            .as_arr()?
+            .iter()
+            .map(|x| Ok(x.as_str()?.to_string()))
+            .collect::<Result<_>>()?;
+        let mut param_shapes = HashMap::new();
+        for (k, shape) in v.get("param_shapes")?.as_obj()? {
+            param_shapes.insert(k.clone(), shape.usize_vec()?);
+        }
+        let linears: Vec<LinearSpec> = v
+            .get("linears")?
+            .as_arr()?
+            .iter()
+            .map(|l| {
+                Ok(LinearSpec {
+                    name: l.get("name")?.as_str()?.to_string(),
+                    layer: l.get("layer")?.as_usize()?,
+                    kind: l.get("kind")?.as_str()?.to_string(),
+                    k_in: l.get("k_in")?.as_usize()?,
+                    n_out: l.get("n_out")?.as_usize()?,
+                })
+            })
+            .collect::<Result<_>>()?;
+        let mut graphs = HashMap::new();
+        for (k, g) in v.get("graphs")?.as_obj()? {
+            let strs = |key: &str| -> Result<Vec<String>> {
+                g.get(key)?
+                    .as_arr()?
+                    .iter()
+                    .map(|x| Ok(x.as_str()?.to_string()))
+                    .collect()
+            };
+            graphs.insert(k.clone(), GraphSpec { args: strs("args")?, outputs: strs("outputs")? });
+        }
+        Ok(Manifest {
+            name: v.get("name")?.as_str()?.to_string(),
+            batch: v.get("batch")?.as_usize()?,
+            seq: v.get("seq")?.as_usize()?,
+            vocab: v.get("vocab")?.as_usize()?,
+            num_linears: v.get("num_linears")?.as_usize()?,
+            param_names,
+            param_shapes,
+            linears,
+            graphs,
+        })
+    }
+
+    /// Weight-matrix parameter names (the FGMP-quantized subset), in
+    /// inventory order.
+    pub fn weight_names(&self) -> Vec<String> {
+        self.linears.iter().map(|l| format!("{}.w", l.name)).collect()
+    }
+
+    pub fn linear(&self, name: &str) -> Result<&LinearSpec> {
+        self.linears
+            .iter()
+            .find(|l| l.name == name)
+            .ok_or_else(|| anyhow::anyhow!("linear '{name}' not in manifest"))
+    }
+
+    /// Total quantized weight elements (for the memory model).
+    pub fn quantized_elements(&self) -> u64 {
+        self.linears.iter().map(|l| (l.k_in * l.n_out) as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        Manifest::from_json(
+            r#"{
+            "name": "m", "batch": 8, "seq": 128, "vocab": 512,
+            "num_linears": 1,
+            "param_names": ["embed", "blk0.qkv_proj.w"],
+            "param_shapes": {"embed": [512, 64], "blk0.qkv_proj.w": [64, 192]},
+            "linears": [{"name": "blk0.qkv_proj", "layer": 0, "kind": "qkv_proj",
+                          "k_in": 64, "n_out": 192}],
+            "graphs": {"fwd_ref": {"args": ["tokens"], "outputs": ["nll"]}}
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_and_derives() {
+        let m = sample();
+        assert_eq!(m.weight_names(), vec!["blk0.qkv_proj.w"]);
+        assert_eq!(m.quantized_elements(), 64 * 192);
+        assert!(m.linear("blk0.qkv_proj").is_ok());
+        assert!(m.linear("nope").is_err());
+        assert_eq!(m.param_shapes["embed"], vec![512, 64]);
+        assert_eq!(m.graphs["fwd_ref"].args, vec!["tokens"]);
+    }
+}

@@ -1,0 +1,8 @@
+//! Artifact IO: the FGTN tensor container (python ⇄ rust interchange) and
+//! the model manifest produced by `python -m compile.aot`.
+
+pub mod manifest;
+pub mod tensorfile;
+
+pub use manifest::{LinearSpec, Manifest};
+pub use tensorfile::{Tensor, TensorData, TensorFile};

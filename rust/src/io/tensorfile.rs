@@ -1,0 +1,268 @@
+//! FGTN tensor-container codec — lock-step with python/compile/tensorio.py.
+//!
+//! Layout (little-endian): magic "FGTN", u32 version, u32 count, then per
+//! tensor: u16 name-len + utf-8 name, u8 dtype (0=f32, 1=i32, 2=u8), u8
+//! ndim, u64 dims, row-major payload.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context};
+
+use crate::Result;
+
+const MAGIC: &[u8; 4] = b"FGTN";
+const VERSION: u32 = 1;
+
+/// Tensor payload variants.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U8(Vec<u8>),
+}
+
+impl TensorData {
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+            TensorData::U8(v) => v.len(),
+        }
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    fn code(&self) -> u8 {
+        match self {
+            TensorData::F32(_) => 0,
+            TensorData::I32(_) => 1,
+            TensorData::U8(_) => 2,
+        }
+    }
+}
+
+/// A named, shaped tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: TensorData::F32(data) }
+    }
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: TensorData::I32(data) }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// An ordered collection of named tensors (insertion order preserved on
+/// write; lookups via the index map).
+#[derive(Debug, Default, Clone)]
+pub struct TensorFile {
+    pub names: Vec<String>,
+    map: BTreeMap<String, Tensor>,
+}
+
+impl TensorFile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        if !self.map.contains_key(name) {
+            self.names.push(name.to_string());
+        }
+        self.map.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.map
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("tensor '{name}' not found (have: {:?})", self.names))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        Self::from_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn from_bytes(mut b: &[u8]) -> Result<Self> {
+        let mut magic = [0u8; 4];
+        b.read_exact(&mut magic)?;
+        ensure!(&magic == MAGIC, "bad magic {:?}", magic);
+        let version = read_u32(&mut b)?;
+        ensure!(version == VERSION, "unsupported FGTN version {version}");
+        let count = read_u32(&mut b)? as usize;
+        let mut out = TensorFile::new();
+        for _ in 0..count {
+            let nlen = read_u16(&mut b)? as usize;
+            let mut nb = vec![0u8; nlen];
+            b.read_exact(&mut nb)?;
+            let name = String::from_utf8(nb)?;
+            let mut hdr = [0u8; 2];
+            b.read_exact(&mut hdr)?;
+            let (code, ndim) = (hdr[0], hdr[1] as usize);
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u64(&mut b)? as usize);
+            }
+            let n: usize = shape.iter().product();
+            let data = match code {
+                0 => {
+                    let mut raw = vec![0u8; n * 4];
+                    b.read_exact(&mut raw)?;
+                    TensorData::F32(
+                        raw.chunks_exact(4)
+                            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                            .collect(),
+                    )
+                }
+                1 => {
+                    let mut raw = vec![0u8; n * 4];
+                    b.read_exact(&mut raw)?;
+                    TensorData::I32(
+                        raw.chunks_exact(4)
+                            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                            .collect(),
+                    )
+                }
+                2 => {
+                    let mut raw = vec![0u8; n];
+                    b.read_exact(&mut raw)?;
+                    TensorData::U8(raw)
+                }
+                c => bail!("unknown dtype code {c}"),
+            };
+            out.insert(&name, Tensor { shape, data });
+        }
+        Ok(out)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut buf = Vec::new();
+        buf.write_all(MAGIC)?;
+        buf.extend((VERSION).to_le_bytes());
+        buf.extend((self.names.len() as u32).to_le_bytes());
+        for name in &self.names {
+            let t = &self.map[name];
+            buf.extend((name.len() as u16).to_le_bytes());
+            buf.extend(name.as_bytes());
+            buf.push(t.data.code());
+            buf.push(t.shape.len() as u8);
+            for &d in &t.shape {
+                buf.extend((d as u64).to_le_bytes());
+            }
+            match &t.data {
+                TensorData::F32(v) => {
+                    for x in v {
+                        buf.extend(x.to_le_bytes());
+                    }
+                }
+                TensorData::I32(v) => {
+                    for x in v {
+                        buf.extend(x.to_le_bytes());
+                    }
+                }
+                TensorData::U8(v) => buf.extend_from_slice(v),
+            }
+        }
+        std::fs::write(path.as_ref(), buf)
+            .with_context(|| format!("writing {}", path.as_ref().display()))?;
+        Ok(())
+    }
+}
+
+fn read_u16(b: &mut &[u8]) -> Result<u16> {
+    let mut x = [0u8; 2];
+    b.read_exact(&mut x)?;
+    Ok(u16::from_le_bytes(x))
+}
+fn read_u32(b: &mut &[u8]) -> Result<u32> {
+    let mut x = [0u8; 4];
+    b.read_exact(&mut x)?;
+    Ok(u32::from_le_bytes(x))
+}
+fn read_u64(b: &mut &[u8]) -> Result<u64> {
+    let mut x = [0u8; 8];
+    b.read_exact(&mut x)?;
+    Ok(u64::from_le_bytes(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut tf = TensorFile::new();
+        tf.insert("a", Tensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]));
+        tf.insert("b", Tensor::i32(vec![4], vec![-1, 0, 1, 2]));
+        tf.insert("c", Tensor { shape: vec![3], data: TensorData::U8(vec![7, 8, 9]) });
+        let dir = std::env::temp_dir().join("fgtn_test_rt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.fgtn");
+        tf.save(&p).unwrap();
+        let back = TensorFile::load(&p).unwrap();
+        assert_eq!(back.names, tf.names);
+        assert_eq!(back.get("a").unwrap(), tf.get("a").unwrap());
+        assert_eq!(back.get("b").unwrap(), tf.get("b").unwrap());
+        assert_eq!(back.get("c").unwrap(), tf.get("c").unwrap());
+    }
+
+    #[test]
+    fn bad_magic() {
+        assert!(TensorFile::from_bytes(b"NOPE\x01\x00\x00\x00\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn missing_tensor_error_lists_names() {
+        let mut tf = TensorFile::new();
+        tf.insert("x", Tensor::f32(vec![1], vec![0.5]));
+        let err = tf.get("y").unwrap_err().to_string();
+        assert!(err.contains("y") && err.contains("x"));
+    }
+
+    #[test]
+    fn scalarish_shapes() {
+        let mut tf = TensorFile::new();
+        tf.insert("s", Tensor::f32(vec![1], vec![3.5]));
+        let bytes_path = std::env::temp_dir().join("fgtn_test_scalar.fgtn");
+        tf.save(&bytes_path).unwrap();
+        let back = TensorFile::load(&bytes_path).unwrap();
+        assert_eq!(back.get("s").unwrap().as_f32().unwrap(), &[3.5]);
+    }
+}

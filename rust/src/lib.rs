@@ -1,0 +1,36 @@
+//! # FGMP — Fine-Grained Mixed-Precision Quantization
+//!
+//! Reproduction of *FGMP: Fine-Grained Mixed-Precision Weight and Activation
+//! Quantization for Hardware-Accelerated LLM Inference* (Hooper et al., 2025)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the runtime: bit-exact NVFP4/FP8 codecs and the
+//!   FGMP packed-tensor format ([`quant`]), the Fisher-weighted precision
+//!   assignment policy with its baselines ([`policy`]), the co-designed
+//!   hardware model — VMAC datapath, PPU, energy/area/memory ([`hwsim`]) —
+//!   the PJRT executor for the AOT-compiled model graphs ([`runtime`]), the
+//!   perplexity/downstream evaluation harness ([`eval`]) and an async
+//!   serving coordinator ([`coordinator`]).
+//! * **L2 (python/compile, build-time)** — JAX transformer families lowered
+//!   once to HLO text (`make artifacts`).
+//! * **L1 (python/compile/kernels, build-time)** — Pallas kernels for the
+//!   FGMP quantize+matmul hot-spot, verified against a pure-jnp oracle.
+//!
+//! Python never runs on the request path: after `make artifacts` the `fgmp`
+//! binary is self-contained.
+
+pub mod coordinator;
+pub mod eval;
+pub mod hwsim;
+pub mod io;
+pub mod model;
+pub mod policy;
+pub mod quant;
+pub mod runtime;
+pub mod util;
+
+/// The FGMP / NVFP4 / VMAC block size (paper §4: BS = 16 = vector length).
+pub const BLOCK: usize = 16;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

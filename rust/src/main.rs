@@ -1,0 +1,314 @@
+//! `fgmp` — the L3 coordinator CLI.
+//!
+//! Subcommands map onto the paper's experiments:
+//!   * `quantize` — run the offline weight pipeline, report fractions/memory
+//!   * `eval`     — perplexity of one configuration
+//!   * `sweep`    — ratio/policy sweeps (Figs. 1/5/6/10 engines)
+//!   * `tasks`    — downstream suites (Tables 2–3)
+//!   * `hwsim`    — datapath energy/area/memory reports (Figs. 8/9, Table 4)
+//!   * `serve`    — start the async serving coordinator demo
+//!   * `report`   — precision-assignment visualization (Fig. 2b)
+
+use fgmp::eval::sweep::format_rows;
+use fgmp::eval::{run_sweep, Evaluator};
+use fgmp::hwsim::area::AreaModel;
+use fgmp::hwsim::energy::EnergyModel;
+use fgmp::hwsim::memory::weight_memory_report;
+use fgmp::model::{ModelArtifacts, QuantConfig, QuantizedModel, RatioSpec};
+use fgmp::policy::{Policy, ThresholdMode};
+use fgmp::quant::Precision;
+use fgmp::runtime::Runtime;
+use fgmp::Result;
+
+/// Hand-rolled CLI (offline build: no clap; DESIGN.md SSDeps).
+///
+///   fgmp [--artifacts DIR] [--model NAME] <cmd> [flags]
+struct Cli {
+    artifacts: String,
+    model: String,
+    cmd: String,
+    flags: std::collections::HashMap<String, String>,
+}
+
+const USAGE: &str = "\
+fgmp — FGMP mixed-precision quantization coordinator
+
+USAGE: fgmp [--artifacts DIR] [--model NAME] <command> [--flag value ...]
+
+COMMANDS
+  quantize   --fp4 0.7 --policy fisher|qe|oe [--no-clip] [--local-threshold]
+  eval       --fp4 0.7 --policy P [--no-clip] [--local-threshold] --batches 16
+  sweep      --fp4 0.9,0.8,0.7,0.5,0.3,0.1 --policy P [--no-clip] [--local-threshold] --batches 8
+  tasks      --fp4 0.9,0.7 --max-items 64
+  hwsim
+  report     --linear blk0.fc1 --fp4 0.9 --rows 24
+  serve      --fp4 0.7 --requests 64
+";
+
+impl Cli {
+    fn parse() -> Result<Cli> {
+        let mut args = std::env::args().skip(1).peekable();
+        let mut artifacts = "artifacts".to_string();
+        let mut model = "tiny-llama".to_string();
+        let mut cmd = String::new();
+        let mut flags = std::collections::HashMap::new();
+        while let Some(a) = args.next() {
+            match a.as_str() {
+                "--artifacts" => artifacts = args.next().unwrap_or_default(),
+                "--model" => model = args.next().unwrap_or_default(),
+                "-h" | "--help" => {
+                    println!("{USAGE}");
+                    std::process::exit(0);
+                }
+                f if f.starts_with("--") => {
+                    let key = f.trim_start_matches("--").replace('-', "_");
+                    // boolean flags take no value
+                    let boolean = matches!(key.as_str(), "no_clip" | "local_threshold");
+                    let val = if boolean {
+                        "true".to_string()
+                    } else {
+                        args.next().ok_or_else(|| anyhow::anyhow!("missing value for {f}"))?
+                    };
+                    flags.insert(key, val);
+                }
+                c if cmd.is_empty() => cmd = c.to_string(),
+                other => anyhow::bail!("unexpected argument '{other}'\n{USAGE}"),
+            }
+        }
+        if cmd.is_empty() {
+            anyhow::bail!("no command given\n{USAGE}");
+        }
+        Ok(Cli { artifacts, model, cmd, flags })
+    }
+
+    fn f64(&self, key: &str, default: f64) -> f64 {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    fn usize(&self, key: &str, default: usize) -> usize {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+    fn bool(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+    fn f64_list(&self, key: &str, default: &[f64]) -> Vec<f64> {
+        match self.flags.get(key) {
+            Some(v) => v.split(',').filter_map(|x| x.parse().ok()).collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+fn parse_policy(s: &str) -> Policy {
+    match s {
+        "qe" => Policy::QuantError,
+        "oe" => Policy::OutputError,
+        _ => Policy::Fisher,
+    }
+}
+
+fn mk_config(fp4: f64, policy: &str, no_clip: bool, local: bool) -> QuantConfig {
+    QuantConfig {
+        ratio: if fp4 >= 1.0 {
+            RatioSpec::AllFp4
+        } else if fp4 <= 0.0 {
+            RatioSpec::AllFp8
+        } else {
+            RatioSpec::Fp4Fraction(fp4)
+        },
+        policy: parse_policy(policy),
+        threshold_mode: if local { ThresholdMode::Local } else { ThresholdMode::Global },
+        sw_clip: !no_clip,
+    }
+}
+
+fn main() -> Result<()> {
+    let cli = Cli::parse()?;
+    match cli.cmd.as_str() {
+        "quantize" => {
+            let arts = ModelArtifacts::load(format!("{}/{}", cli.artifacts, cli.model))?;
+            let cfg = mk_config(cli.f64("fp4", 0.7), &cli.str("policy", "fisher"),
+                                cli.bool("no_clip"), cli.bool("local_threshold"));
+            let t0 = std::time::Instant::now();
+            let qm = QuantizedModel::quantize(&arts, &cfg)?;
+            let w8 = qm.weight_fp8_fraction();
+            let (fp8m, fgmpm, savings) =
+                weight_memory_report(arts.manifest.quantized_elements(), w8);
+            println!("model         : {}", cli.model);
+            println!("config        : {}", cfg.label());
+            println!("weight FP8    : {:.2}% of blocks", w8 * 100.0);
+            println!("packed bits/w : {:.3}", fgmpm.bits_per_element());
+            println!("memory        : {:.3} MiB (FP8 baseline {:.3} MiB, save {:.1}%)",
+                     fgmpm.total_mib(), fp8m.total_mib(), savings * 100.0);
+            println!("quantize time : {:?}", t0.elapsed());
+            for l in qm.linears.iter().take(4) {
+                println!("  {:<16} fp8 {:>6.2}%", l.name, l.packed.fp8_fraction() * 100.0);
+            }
+        }
+        "eval" => {
+            let rt = Runtime::cpu()?;
+            let ev = Evaluator::load(&rt, &cli.artifacts, &cli.model)?;
+            let cfg = mk_config(cli.f64("fp4", 0.7), &cli.str("policy", "fisher"),
+                                cli.bool("no_clip"), cli.bool("local_threshold"));
+            let qm = QuantizedModel::quantize(&ev.arts, &cfg)?;
+            let rep = ev.perplexity(&cfg, Some(&qm), cli.usize("batches", 16))?;
+            println!("{}: ppl {:.4} over {} tokens (act fp8 {:.1}%, weight fp8 {:.1}%)",
+                     cfg.label(), rep.ppl, rep.tokens,
+                     rep.mean_act_fp8() * 100.0, qm.weight_fp8_fraction() * 100.0);
+        }
+        "sweep" => {
+            let rt = Runtime::cpu()?;
+            let ev = Evaluator::load(&rt, &cli.artifacts, &cli.model)?;
+            let mut configs = vec![
+                QuantConfig { ratio: RatioSpec::Bf16, ..QuantConfig::fgmp(0.0) },
+                QuantConfig::all_fp8(),
+            ];
+            for f in cli.f64_list("fp4", &[0.9, 0.8, 0.7, 0.5, 0.3, 0.1]) {
+                configs.push(mk_config(f, &cli.str("policy", "fisher"),
+                                       cli.bool("no_clip"), cli.bool("local_threshold")));
+            }
+            configs.push(QuantConfig::all_fp4());
+            let rows = run_sweep(&ev, &configs, cli.usize("batches", 8))?;
+            print!("{}", format_rows(&rows));
+        }
+        "tasks" => {
+            cmd_tasks(&cli, &cli.f64_list("fp4", &[0.9, 0.7]), cli.usize("max_items", 64))?;
+        }
+        "hwsim" => {
+            let em = EnergyModel::default();
+            let am = AreaModel::default();
+            println!("== datapath energy (pJ / 16-wide VMAC) ==");
+            println!("FP8x8 {:.3}  FP4x4 {:.3}  FP4w/8a {:.3}  FP8w/4a {:.3}  mux-tax {:.3}",
+                     em.e_fp8, em.e_fp4, em.e_fp4w_fp8a, em.e_fp8w_fp4a, em.e_mux_tax);
+            println!("== area (um^2, Table 4) ==");
+            println!("FP8 {:.0}  NVFP4 {:.0}  FP8/NVFP4 {:.0}  NVFP4/FP8 {:.0}  FGMP {:.0}  PPU {:.0}",
+                     am.fp8_datapath, am.nvfp4_datapath, am.fp8_nvfp4_datapath,
+                     am.nvfp4_fp8_datapath, am.fgmp_datapath, am.fgmp_ppu);
+            println!("overhead vs FP8: {:.2}x  vs coarse MP: {:.2}x  PPU/datapath: {:.0}%",
+                     am.overhead_vs_fp8(), am.overhead_vs_coarse(), am.ppu_overhead() * 100.0);
+        }
+        "report" => {
+            let arts = ModelArtifacts::load(format!("{}/{}", cli.artifacts, cli.model))?;
+            let cfg = QuantConfig::fgmp(cli.f64("fp4", 0.9));
+            let qm = QuantizedModel::quantize(&arts, &cfg)?;
+            let linear = cli.str("linear", "blk0.fc1");
+            let l = qm
+                .linears
+                .iter()
+                .find(|l| l.name == linear)
+                .ok_or_else(|| anyhow::anyhow!("no linear named {linear}"))?;
+            let bpr = l.assignment.blocks_per_row;
+            let rows = cli.usize("rows", 24);
+            println!("precision map of {linear} (first {rows} output channels; '#'=FP8, '.'=FP4):");
+            for r in 0..rows {
+                let row: String = (0..bpr)
+                    .map(|b| match l.assignment.precision[r * bpr + b] {
+                        Precision::Fp8 => '#',
+                        Precision::Fp4 => '.',
+                    })
+                    .collect();
+                println!("  {row}");
+            }
+            println!("layer fp8 fraction: {:.2}%", l.packed.fp8_fraction() * 100.0);
+        }
+        "serve" => {
+            cmd_serve(&cli, cli.f64("fp4", 0.7), cli.usize("requests", 64))?;
+        }
+        other => anyhow::bail!("unknown command '{other}'\n{USAGE}"),
+    }
+    Ok(())
+}
+
+fn cmd_tasks(cli: &Cli, fp4: &[f64], max_items: usize) -> Result<()> {
+    use fgmp::eval::tasks::{score_suite, TaskSuite};
+    let rt = Runtime::cpu()?;
+    let ev = Evaluator::load(&rt, &cli.artifacts, &cli.model)?;
+    let suites: Vec<TaskSuite> = std::fs::read_dir(format!("{}/tasks", cli.artifacts))?
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().extension().is_some_and(|x| x == "json"))
+        .map(|e| TaskSuite::load(e.path()))
+        .collect::<Result<_>>()?;
+
+    let mut configs = vec![QuantConfig::all_fp8(), QuantConfig::all_fp4()];
+    for f in fp4 {
+        configs.push(QuantConfig::fgmp(*f));
+    }
+    println!("{:<16} {}", "suite",
+             configs.iter().map(|c| format!("{:>12}", c.ratio.label())).collect::<String>());
+    for suite in &suites {
+        print!("{:<16}", suite.name);
+        for cfg in &configs {
+            let qm = QuantizedModel::quantize(&ev.arts, cfg)?;
+            let tail = ev.quant_arg_tail(cfg, &qm)?;
+            let acc = score_suite(&ev.fwd_quant, &tail, suite, ev.batch, ev.seq, max_items)?;
+            print!("{:>12.3}", acc);
+        }
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_serve(cli: &Cli, fp4: f64, requests: usize) -> Result<()> {
+    use fgmp::coordinator::{BatchPolicy, Request, RequestKind, Server, ServerConfig};
+
+    let rt = Runtime::cpu()?;
+    let ev = Evaluator::load(&rt, &cli.artifacts, &cli.model)?;
+    let cfg = QuantConfig::fgmp(fp4);
+    let qm = QuantizedModel::quantize(&ev.arts, &cfg)?;
+    let fwd_tail = ev.quant_arg_tail(&cfg, &qm)?;
+    // logits graph: same tail but no mask arg (tokens, params, aw, thr).
+    let fwd_hlo = std::path::PathBuf::from(
+        format!("{}/{}/fwd_quant.hlo.txt", cli.artifacts, cli.model));
+    let logits_hlo = std::path::PathBuf::from(
+        format!("{}/{}/logits_quant.hlo.txt", cli.artifacts, cli.model));
+    let logits_tail = fwd_tail.clone();
+    let shapes = qm.layer_profiles(&ev.arts.manifest, ev.batch * ev.seq, &[]);
+
+    let scfg = ServerConfig {
+        batch: ev.batch,
+        seq: ev.seq,
+        policy: BatchPolicy::default(),
+        layer_shapes: shapes,
+        queue_depth: 256,
+    };
+    let windows = ev.eval_windows(requests.div_ceil(ev.batch));
+    let seq = ev.seq;
+    let server = Server::start(scfg, fwd_hlo, fwd_tail, logits_hlo, logits_tail)?;
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    let mut id = 0u64;
+    for w in &windows {
+        for row in w.chunks_exact(seq) {
+            let (req, rx) = Request::new(
+                id,
+                RequestKind::Score { tokens: row.to_vec(), mask: vec![1.0; seq] },
+            );
+            id += 1;
+            server.router.submit(req)?;
+            rxs.push(rx);
+        }
+    }
+    let mut nll = 0.0;
+    let mut toks = 0.0;
+    for rx in rxs {
+        if let Ok(resp) = rx.recv() {
+            if let Some((s, n)) = resp.nll {
+                nll += s;
+                toks += n;
+            }
+        }
+    }
+    let wall = t0.elapsed();
+    let snap = server.metrics.snapshot();
+    println!("served {} score rows in {:.2}s ({:.1} tok/s)", snap.requests,
+             wall.as_secs_f64(), toks / wall.as_secs_f64());
+    println!("ppl {:.4}  p50 {:.1}ms p95 {:.1}ms p99 {:.1}ms  fill {:.0}%",
+             (nll / toks).exp(), snap.p50_ms, snap.p95_ms, snap.p99_ms,
+             snap.mean_batch_fill * 100.0);
+    println!("sim energy {:.3} mJ vs FP8 {:.3} mJ  (savings {:.1}%)",
+             snap.energy_j * 1e3, snap.energy_fp8_j * 1e3, snap.energy_savings * 100.0);
+    server.shutdown();
+    Ok(())
+}

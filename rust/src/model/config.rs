@@ -1,0 +1,93 @@
+//! Quantization configuration: the knobs of every experiment in the paper.
+
+
+use crate::policy::{Policy, ThresholdMode};
+
+/// Target precision mix, expressed the way the paper labels its figures.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RatioSpec {
+    /// Everything unquantized (the BF16 rows; uses the fwd_ref graph).
+    Bf16,
+    /// All blocks FP8 (threshold = -inf).
+    AllFp8,
+    /// All blocks NVFP4 (threshold = +inf).
+    AllFp4,
+    /// FGMP with the given fraction of blocks in FP4 (paper: "70% FP4").
+    Fp4Fraction(f64),
+}
+
+impl RatioSpec {
+    /// The FP4 fraction used for threshold calibration (None for Bf16).
+    pub fn fp4_fraction(&self) -> Option<f64> {
+        match self {
+            RatioSpec::Bf16 => None,
+            RatioSpec::AllFp8 => Some(0.0),
+            RatioSpec::AllFp4 => Some(1.0),
+            RatioSpec::Fp4Fraction(f) => Some(*f),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            RatioSpec::Bf16 => "BF16".into(),
+            RatioSpec::AllFp8 => "FP8".into(),
+            RatioSpec::AllFp4 => "FP4".into(),
+            RatioSpec::Fp4Fraction(f) => format!("{:.0}% FP4", f * 100.0),
+        }
+    }
+}
+
+/// Full quantization configuration for one experiment point.
+#[derive(Debug, Clone)]
+pub struct QuantConfig {
+    pub ratio: RatioSpec,
+    /// Block-scoring policy (paper Fig. 6 ablation; Fisher = FGMP).
+    pub policy: Policy,
+    /// Global (paper) vs per-layer (ablation) thresholding.
+    pub threshold_mode: ThresholdMode,
+    /// Sensitivity-weighted clipping for FP4 weight blocks (§3.3).
+    pub sw_clip: bool,
+}
+
+impl QuantConfig {
+    /// The paper's headline configuration at a given FP4 fraction.
+    pub fn fgmp(fp4_fraction: f64) -> Self {
+        QuantConfig {
+            ratio: RatioSpec::Fp4Fraction(fp4_fraction),
+            policy: Policy::Fisher,
+            threshold_mode: ThresholdMode::Global,
+            sw_clip: true,
+        }
+    }
+
+    pub fn all_fp8() -> Self {
+        QuantConfig { ratio: RatioSpec::AllFp8, ..Self::fgmp(0.0) }
+    }
+
+    pub fn all_fp4() -> Self {
+        QuantConfig { ratio: RatioSpec::AllFp4, ..Self::fgmp(1.0) }
+    }
+
+    pub fn label(&self) -> String {
+        let mut s = format!("{}/{}", self.ratio.label(), self.policy.name());
+        if matches!(self.threshold_mode, ThresholdMode::Local) {
+            s.push_str("/local");
+        }
+        if self.sw_clip {
+            s.push_str("/clip");
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels() {
+        assert_eq!(RatioSpec::Fp4Fraction(0.7).label(), "70% FP4");
+        assert_eq!(QuantConfig::all_fp8().ratio.fp4_fraction(), Some(0.0));
+        assert!(QuantConfig::fgmp(0.7).label().contains("clip"));
+    }
+}

@@ -1,0 +1,8 @@
+//! Model-level plumbing: artifact loading, the offline weight-quantization
+//! pipeline (policy → SW-Clip → packing), and quantization configuration.
+
+pub mod config;
+pub mod weights;
+
+pub use config::{QuantConfig, RatioSpec};
+pub use weights::{ModelArtifacts, QuantizedModel};

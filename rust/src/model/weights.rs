@@ -1,0 +1,272 @@
+//! Checkpoint loading and the offline weight-quantization pipeline:
+//! score blocks (policy weighting) → calibrate threshold (global or local)
+//! → assign precisions → SW-Clip the FP4 blocks → pack + dequantize.
+//!
+//! The dequantized values feed the PJRT executable (numerically exactly
+//! what the FGMP datapath would consume); the packed form feeds the memory
+//! model; the per-layer FP8 fractions feed the energy model.
+
+use std::path::{Path, PathBuf};
+
+
+use crate::hwsim::LayerProfile;
+use crate::io::{Manifest, TensorFile};
+use crate::model::config::{QuantConfig, RatioSpec};
+use crate::policy::baselines::{oe_weighting_for_acts, qe_weighting};
+use crate::policy::{
+    assign_tensor, block_impact_scores, threshold_for_fp4_fraction, Assignment, Policy,
+    ThresholdMode,
+};
+use crate::quant::{sw_clip_tensor, FgmpTensor};
+use crate::Result;
+
+/// Everything `make artifacts` produced for one model.
+pub struct ModelArtifacts {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    pub weights: TensorFile,
+    pub fisher_w: TensorFile,
+    pub act_fisher: TensorFile,
+    pub act_msq: TensorFile,
+    pub act_quantiles: TensorFile,
+}
+
+impl ModelArtifacts {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        Ok(ModelArtifacts {
+            manifest: Manifest::load(dir.join("manifest.json"))?,
+            weights: TensorFile::load(dir.join("weights.fgtn"))?,
+            fisher_w: TensorFile::load(dir.join("fisher_w.fgtn"))?,
+            act_fisher: TensorFile::load(dir.join("act_fisher.fgtn"))?,
+            act_msq: TensorFile::load(dir.join("act_msq.fgtn"))?,
+            act_quantiles: TensorFile::load(dir.join("act_score_quantiles.fgtn"))?,
+            dir,
+        })
+    }
+
+    /// Per-channel weighting for the *activation* side of `linear` under a
+    /// policy (Fisher: calibrated g²; QE: ones; OE: mean-square of the
+    /// weight's corresponding input channels).
+    pub fn act_weighting(&self, linear: &str, policy: Policy) -> Result<Vec<f32>> {
+        let spec = self.manifest.linear(linear)?;
+        Ok(match policy {
+            Policy::Fisher => self.act_fisher.get(linear)?.as_f32()?.to_vec(),
+            Policy::QuantError => qe_weighting(spec.k_in),
+            Policy::OutputError => {
+                let w = self.weights.get(&format!("{linear}.w"))?.as_f32()?;
+                oe_weighting_for_acts(w, spec.k_in, spec.n_out)
+            }
+        })
+    }
+
+    /// Activation threshold(s) for a config, from the calibrated quantile
+    /// tables (one entry per linear). Global mode returns the same value
+    /// everywhere; the all-FP8/FP4 extremes return ∓inf sentinels.
+    pub fn act_thresholds(&self, cfg: &QuantConfig) -> Result<Vec<f32>> {
+        let nl = self.manifest.num_linears;
+        let f = match cfg.ratio {
+            RatioSpec::Bf16 => return Ok(vec![f32::NEG_INFINITY; nl]),
+            r => r.fp4_fraction().unwrap(),
+        };
+        if f <= 0.0 {
+            return Ok(vec![-1.0; nl]); // all FP8 (scores are >= 0)
+        }
+        if f >= 1.0 {
+            return Ok(vec![f32::INFINITY; nl]);
+        }
+        // Quantile tables hold q = 0.01..0.99 in steps of 0.01.
+        let qi = ((f * 100.0).round() as usize).clamp(1, 99) - 1;
+        match cfg.threshold_mode {
+            ThresholdMode::Global => {
+                let table = self.act_quantiles.get(&format!("{}.global", cfg.policy.name()))?;
+                let t = table.as_f32()?[qi];
+                Ok(vec![t; nl])
+            }
+            ThresholdMode::Local => {
+                let table = self.act_quantiles.get(&format!("{}.local", cfg.policy.name()))?;
+                let v = table.as_f32()?;
+                ensure_shape(&table.shape, nl)?;
+                Ok((0..nl).map(|l| v[l * 99 + qi]).collect())
+            }
+        }
+    }
+}
+
+fn ensure_shape(shape: &[usize], nl: usize) -> Result<()> {
+    anyhow::ensure!(
+        shape.len() == 2 && shape[0] == nl && shape[1] == 99,
+        "quantile table shape {shape:?}, want [{nl}, 99]"
+    );
+    Ok(())
+}
+
+/// One quantized linear layer.
+pub struct QuantizedLinear {
+    pub name: String,
+    pub packed: FgmpTensor,
+    /// Dequantized values (row-major K×N) for the PJRT executable.
+    pub dequant: Vec<f32>,
+    pub assignment: Assignment,
+}
+
+/// A fully weight-quantized model.
+pub struct QuantizedModel {
+    pub config: QuantConfig,
+    pub linears: Vec<QuantizedLinear>,
+    /// Weight-side threshold actually used (per linear; global repeats).
+    pub thresholds: Vec<f64>,
+}
+
+impl QuantizedModel {
+    /// Run the full offline pipeline on a checkpoint.
+    ///
+    /// Weight tensors are stored (K, N) row-major; FGMP blocks run along K,
+    /// i.e. down columns. We therefore score/pack the *transposed* (N, K)
+    /// layout so blocks are contiguous, exactly as the datapath streams
+    /// them (one output channel's K-dim blocks at a time).
+    pub fn quantize(arts: &ModelArtifacts, cfg: &QuantConfig) -> Result<Self> {
+        let fp4_target = cfg.ratio.fp4_fraction().unwrap_or(0.0);
+
+        // Gather per-linear transposed data + element weighting.
+        struct Job {
+            name: String,
+            k: usize,
+            n: usize,
+            data_t: Vec<f32>,   // (N, K) — blocks contiguous along K
+            weight_t: Vec<f32>, // per-element weighting, same layout
+        }
+        let jobs: Vec<Job> = arts
+            .manifest
+            .linears
+            .iter()
+            .map(|spec| -> Result<Job> {
+                let w = arts.weights.get(&format!("{}.w", spec.name))?.as_f32()?;
+                let (k, n) = (spec.k_in, spec.n_out);
+                let mut data_t = vec![0.0f32; w.len()];
+                for ki in 0..k {
+                    for ni in 0..n {
+                        data_t[ni * k + ki] = w[ki * n + ni];
+                    }
+                }
+                let weight_t = match cfg.policy {
+                    Policy::Fisher => {
+                        let f = arts.fisher_w.get(&format!("{}.w.fisher", spec.name))?.as_f32()?;
+                        let mut t = vec![0.0f32; f.len()];
+                        for ki in 0..k {
+                            for ni in 0..n {
+                                t[ni * k + ki] = f[ki * n + ni];
+                            }
+                        }
+                        t
+                    }
+                    Policy::QuantError => vec![1.0f32; w.len()],
+                    Policy::OutputError => {
+                        // avg squared magnitude of X's channel k, broadcast
+                        let msq = arts.act_msq.get(&spec.name)?.as_f32()?;
+                        let mut t = vec![0.0f32; w.len()];
+                        for ni in 0..n {
+                            t[ni * k..(ni + 1) * k].copy_from_slice(msq);
+                        }
+                        t
+                    }
+                };
+                Ok(Job { name: spec.name.clone(), k, n, data_t, weight_t })
+            })
+            .collect::<Result<_>>()?;
+
+        // Score all blocks (parallel over linears).
+        let all_scores: Vec<Vec<f64>> = crate::util::par_map(&jobs, |j| {
+            block_impact_scores(&j.data_t, j.k, &[], Some(&j.weight_t))
+        });
+
+        // Thresholds: global percentile over the concatenation, or local.
+        let thresholds: Vec<f64> = match cfg.threshold_mode {
+            ThresholdMode::Global => {
+                let mut flat: Vec<f64> =
+                    all_scores.iter().flat_map(|s| s.iter().copied()).collect();
+                flat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let t = if fp4_target >= 1.0 {
+                    f64::INFINITY
+                } else if fp4_target <= 0.0 {
+                    f64::NEG_INFINITY
+                } else {
+                    crate::policy::threshold::percentile_sorted(&flat, fp4_target)
+                };
+                vec![t; jobs.len()]
+            }
+            ThresholdMode::Local => all_scores
+                .iter()
+                .map(|s| threshold_for_fp4_fraction(s, fp4_target))
+                .collect(),
+        };
+
+        // Assign + clip + pack (parallel over linears).
+        let jobs_t: Vec<(&Job, f64)> = jobs.iter().zip(thresholds.iter().copied()).collect();
+        let linears: Vec<QuantizedLinear> = crate::util::par_map(&jobs_t, |&(j, t)| {
+                let assignment = assign_tensor(&j.data_t, j.k, &[], Some(&j.weight_t), t);
+                let clip_scales = if cfg.sw_clip {
+                    // Clip every block; the packer indexes FP4 blocks by
+                    // position so we filter to the FP4 subset in order.
+                    let all = sw_clip_tensor(&j.data_t, &j.weight_t);
+                    let fp4_scales: Vec<f32> = all
+                        .iter()
+                        .zip(&assignment.precision)
+                        .filter(|(_, p)| **p == crate::quant::Precision::Fp4)
+                        .map(|(s, _)| *s)
+                        .collect();
+                    Some(fp4_scales)
+                } else {
+                    None
+                };
+                let packed = FgmpTensor::pack(
+                    &[j.n, j.k],
+                    &j.data_t,
+                    &assignment.precision,
+                    clip_scales.as_deref(),
+                );
+                // Dequantize and transpose back to (K, N) for the executor.
+                let deq_t = packed.unpack();
+                let mut dequant = vec![0.0f32; deq_t.len()];
+                for ni in 0..j.n {
+                    for ki in 0..j.k {
+                        dequant[ki * j.n + ni] = deq_t[ni * j.k + ki];
+                    }
+                }
+                QuantizedLinear { name: j.name.clone(), packed, dequant, assignment }
+            });
+
+        Ok(QuantizedModel { config: cfg.clone(), linears, thresholds })
+    }
+
+    /// Overall FP8 block fraction across all weight tensors.
+    pub fn weight_fp8_fraction(&self) -> f64 {
+        let (fp8, total) = self
+            .linears
+            .iter()
+            .fold((0usize, 0usize), |(a, b), l| (a + l.packed.n_fp8, b + l.packed.n_blocks));
+        fp8 as f64 / total.max(1) as f64
+    }
+
+    /// Per-layer hwsim profiles (activation fractions filled by the caller
+    /// from the runtime PPU stats; `m` = tokens per forward).
+    pub fn layer_profiles(&self, manifest: &Manifest, m: usize, act_fp8: &[f64]) -> Vec<LayerProfile> {
+        self.linears
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                let spec = &manifest.linears[i];
+                LayerProfile {
+                    name: l.name.clone(),
+                    layer: spec.layer,
+                    kind: spec.kind.clone(),
+                    m,
+                    k: spec.k_in,
+                    n: spec.n_out,
+                    weight_fp8: l.packed.fp8_fraction(),
+                    act_fp8: act_fp8.get(i).copied().unwrap_or(0.0),
+                }
+            })
+            .collect()
+    }
+}

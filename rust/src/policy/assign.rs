@@ -1,0 +1,124 @@
+//! Per-tensor block assignment: scores + threshold → FP4/FP8 per block,
+//! packaged for the packer ([`crate::quant::FgmpTensor`]) and the hardware
+//! model ([`crate::hwsim`]).
+
+use super::impact::block_impact_scores;
+use crate::util::par_map;
+use crate::quant::Precision;
+use crate::BLOCK;
+
+/// The result of assigning precisions to one tensor.
+#[derive(Debug, Clone)]
+pub struct Assignment {
+    /// Per-block precision, block-row-major (blocks tile the last axis).
+    pub precision: Vec<Precision>,
+    /// The per-block scores the decision was based on.
+    pub scores: Vec<f64>,
+    /// Fraction of blocks kept in FP8.
+    pub fp8_fraction: f64,
+    /// Blocks per row (k / 16) — for visualization (paper Fig. 2b).
+    pub blocks_per_row: usize,
+}
+
+/// Score a tensor and threshold it.
+///
+/// * `data`        — row-major tensor values, last axis length `k`.
+/// * `chan_weight` — per-channel weighting (activation-side policies), or
+/// * `elem_weight` — per-element weighting (weight-side Fisher), one of the
+///   two must be provided per [`super::Policy`] semantics.
+/// * `threshold`   — impact-score cut; above => FP8.
+pub fn assign_tensor(
+    data: &[f32],
+    k: usize,
+    chan_weight: &[f32],
+    elem_weight: Option<&[f32]>,
+    threshold: f64,
+) -> Assignment {
+    let scores = block_impact_scores(data, k, chan_weight, elem_weight);
+    let precision: Vec<Precision> = scores
+        .iter()
+        .map(|&s| if s > threshold { Precision::Fp8 } else { Precision::Fp4 })
+        .collect();
+    let n_fp8 = precision.iter().filter(|p| **p == Precision::Fp8).count();
+    Assignment {
+        fp8_fraction: n_fp8 as f64 / precision.len().max(1) as f64,
+        blocks_per_row: k / BLOCK,
+        precision,
+        scores,
+    }
+}
+
+/// Score many tensors in parallel (the offline weight-quantization pass).
+/// Each entry is (data, k, chan_weight, elem_weight, threshold).
+pub fn assign_many<'a>(
+    jobs: Vec<(&'a [f32], usize, &'a [f32], Option<&'a [f32]>, f64)>,
+) -> Vec<Assignment> {
+    par_map(&jobs, |(d, k, cw, ew, t)| assign_tensor(d, *k, cw, *ew, *t))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lcg(seed: &mut u64) -> f32 {
+        *seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+        ((*seed >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+    }
+
+    #[test]
+    fn threshold_extremes() {
+        let mut s = 1u64;
+        let k = 64;
+        let data: Vec<f32> = (0..k * 4).map(|_| lcg(&mut s) * 3.0).collect();
+        let cw = vec![1.0f32; k];
+        let all4 = assign_tensor(&data, k, &cw, None, f64::INFINITY);
+        assert_eq!(all4.fp8_fraction, 0.0);
+        let all8 = assign_tensor(&data, k, &cw, None, f64::NEG_INFINITY);
+        assert_eq!(all8.fp8_fraction, 1.0);
+    }
+
+    #[test]
+    fn monotone_in_threshold() {
+        let mut s = 2u64;
+        let k = 64;
+        let data: Vec<f32> = (0..k * 16).map(|_| lcg(&mut s) * 5.0).collect();
+        let cw = vec![1.0f32; k];
+        let mut last = 1.1f64;
+        for t in [0.0, 1e-6, 1e-4, 1e-2, 1.0] {
+            let a = assign_tensor(&data, k, &cw, None, t);
+            assert!(a.fp8_fraction <= last + 1e-12);
+            last = a.fp8_fraction;
+        }
+    }
+
+    #[test]
+    fn permutation_equivariant_rows() {
+        // Swapping two rows swaps their assignments and nothing else.
+        let mut s = 3u64;
+        let k = 32;
+        let mut data: Vec<f32> = (0..k * 2).map(|_| lcg(&mut s) * 4.0).collect();
+        let cw: Vec<f32> = (0..k).map(|_| lcg(&mut s).abs() + 0.1).collect();
+        let a1 = assign_tensor(&data, k, &cw, None, 1e-3);
+        let (lo, hi) = data.split_at_mut(k);
+        lo.swap_with_slice(hi);
+        let a2 = assign_tensor(&data, k, &cw, None, 1e-3);
+        let bpr = k / BLOCK;
+        assert_eq!(&a1.precision[..bpr], &a2.precision[bpr..]);
+        assert_eq!(&a1.precision[bpr..], &a2.precision[..bpr]);
+    }
+
+    #[test]
+    fn assign_many_matches_single() {
+        let mut s = 4u64;
+        let k = 32;
+        let d1: Vec<f32> = (0..k * 2).map(|_| lcg(&mut s)).collect();
+        let d2: Vec<f32> = (0..k * 3).map(|_| lcg(&mut s)).collect();
+        let cw = vec![1.0f32; k];
+        let got = assign_many(vec![
+            (&d1[..], k, &cw[..], None, 1e-4),
+            (&d2[..], k, &cw[..], None, 1e-4),
+        ]);
+        assert_eq!(got[0].precision, assign_tensor(&d1, k, &cw, None, 1e-4).precision);
+        assert_eq!(got[1].precision, assign_tensor(&d2, k, &cw, None, 1e-4).precision);
+    }
+}

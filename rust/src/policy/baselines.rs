@@ -1,0 +1,55 @@
+//! Baseline precision-assignment policies (paper §3.4, Fig. 6 ablation).
+//!
+//! Both reuse the impact-score machinery with a different element weighting:
+//!
+//! * **Quantization Error** (Eq. 12): weighting ≡ 1 — rank blocks purely by
+//!   the increase in quantization error.
+//! * **Output Error** (Eq. 13): weight each input channel by the mean
+//!   squared magnitude of the *other* tensor's corresponding channel, so the
+//!   score approximates the layer-output error.
+//!
+//! In the paper both baselines use **per-layer dynamic** thresholds; the
+//! sweep driver honours that by pairing them with `ThresholdMode::Local`.
+
+/// Channel weighting for the Output-Error policy when quantizing a *weight*
+/// tensor: mean over calibration tokens of X[·,k]² (supplied by the
+/// calibration artifacts as `act_msq`).
+pub fn oe_weighting_for_weights(act_msq: &[f32]) -> Vec<f32> {
+    act_msq.to_vec()
+}
+
+/// Channel weighting for the Output-Error policy when quantizing an
+/// *activation* tensor: mean over output channels of W[k,·]².
+pub fn oe_weighting_for_acts(weight: &[f32], k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(weight.len(), k * n);
+    let mut out = vec![0.0f32; k];
+    for (ki, o) in out.iter_mut().enumerate() {
+        let row = &weight[ki * n..(ki + 1) * n];
+        *o = row.iter().map(|&w| w * w).sum::<f32>() / n as f32;
+    }
+    out
+}
+
+/// Uniform weighting for the Quantization-Error policy.
+pub fn qe_weighting(k: usize) -> Vec<f32> {
+    vec![1.0f32; k]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oe_acts_is_row_mean_square() {
+        // W is 2x3 (k=2 input channels, n=3 outputs), row-major.
+        let w = [1.0f32, 2.0, 3.0, 0.0, -1.0, 1.0];
+        let cw = oe_weighting_for_acts(&w, 2, 3);
+        assert!((cw[0] - (1.0 + 4.0 + 9.0) / 3.0).abs() < 1e-6);
+        assert!((cw[1] - (0.0 + 1.0 + 1.0) / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn qe_is_ones() {
+        assert!(qe_weighting(8).iter().all(|&v| v == 1.0));
+    }
+}

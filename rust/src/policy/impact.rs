@@ -1,0 +1,125 @@
+//! The sensitivity-weighted impact score (paper Eq. 8):
+//!
+//!   I'(v) = Σ_i w_i · (Q_fp4(v_i) − Q_fp8(v_i))²
+//!
+//! where w_i is the per-element weighting (Fisher g², ones, or channel
+//! mean-square, depending on the [`super::Policy`]). Identical math to
+//! `ref.block_impact` on the python side.
+
+use crate::quant::{nvfp4::nvfp4_roundtrip_block, nvfp4_scale, quant_e4m3};
+use crate::BLOCK;
+
+/// Impact score of one block under element weighting `w`.
+pub fn impact_score_block(x: &[f32], w: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), BLOCK);
+    let absmax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let scale = nvfp4_scale(absmax);
+    let mut q4 = [0.0f32; BLOCK];
+    nvfp4_roundtrip_block(x, scale, &mut q4);
+    let mut acc = 0.0f64;
+    for i in 0..BLOCK {
+        let d = (q4[i] - quant_e4m3(x[i])) as f64;
+        acc += w[i] as f64 * d * d;
+    }
+    acc
+}
+
+/// Impact scores for every block of a tensor (blocks tile the contiguous
+/// last axis of length `k`; the weighting repeats per row).
+///
+/// `chan_weight` has length `k` (per-input-channel weighting shared by all
+/// rows) — this is the activation-side formulation. For the weight side,
+/// where the Fisher is per *element*, pass `elem_weight = Some(...)` with
+/// the full tensor-sized weighting instead.
+pub fn block_impact_scores(
+    data: &[f32],
+    k: usize,
+    chan_weight: &[f32],
+    elem_weight: Option<&[f32]>,
+) -> Vec<f64> {
+    assert_eq!(data.len() % k, 0);
+    assert_eq!(k % BLOCK, 0);
+    if let Some(ew) = elem_weight {
+        assert_eq!(ew.len(), data.len());
+    } else {
+        assert_eq!(chan_weight.len(), k);
+    }
+    let blocks_per_row = k / BLOCK;
+    let rows = data.len() / k;
+    let mut out = Vec::with_capacity(rows * blocks_per_row);
+    for r in 0..rows {
+        for b in 0..blocks_per_row {
+            let off = r * k + b * BLOCK;
+            let xb = &data[off..off + BLOCK];
+            let wb: &[f32] = match elem_weight {
+                Some(ew) => &ew[off..off + BLOCK],
+                None => &chan_weight[b * BLOCK..(b + 1) * BLOCK],
+            };
+            out.push(impact_score_block(xb, wb));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lcg(seed: &mut u64) -> f32 {
+        *seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+        ((*seed >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+    }
+
+    #[test]
+    fn nonnegative() {
+        let mut s = 5u64;
+        for _ in 0..32 {
+            let x: Vec<f32> = (0..BLOCK).map(|_| lcg(&mut s) * 10.0).collect();
+            let w: Vec<f32> = (0..BLOCK).map(|_| lcg(&mut s).abs()).collect();
+            assert!(impact_score_block(&x, &w) >= 0.0);
+        }
+    }
+
+    #[test]
+    fn linear_in_weighting() {
+        let mut s = 6u64;
+        let x: Vec<f32> = (0..BLOCK).map(|_| lcg(&mut s) * 4.0).collect();
+        let w: Vec<f32> = (0..BLOCK).map(|_| lcg(&mut s).abs() + 0.1).collect();
+        let w2: Vec<f32> = w.iter().map(|v| v * 3.0).collect();
+        let a = impact_score_block(&x, &w);
+        let b = impact_score_block(&x, &w2);
+        // w2 = 3*w rounds in f32, so compare with a small relative tolerance
+        assert!((b - 3.0 * a).abs() <= 1e-5 * (3.0 * a).abs() + 1e-18, "{b} vs {}", 3.0 * a);
+    }
+
+    #[test]
+    fn zero_when_formats_agree() {
+        // Values exactly representable in both formats at scale 1 (absmax 6
+        // -> scale 1): impact must be 0.
+        let x = [6.0f32, 0.5, 1.0, -1.5, 2.0, 3.0, -4.0, 0.0, 6.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 0.0];
+        let w = [1.0f32; BLOCK];
+        assert_eq!(impact_score_block(&x, &w), 0.0);
+    }
+
+    #[test]
+    fn per_row_scores_count() {
+        let mut s = 7u64;
+        let k = 64;
+        let data: Vec<f32> = (0..k * 3).map(|_| lcg(&mut s)).collect();
+        let cw = vec![1.0f32; k];
+        let scores = block_impact_scores(&data, k, &cw, None);
+        assert_eq!(scores.len(), 3 * (k / BLOCK));
+    }
+
+    #[test]
+    fn elem_weight_variant_matches_manual() {
+        let mut s = 8u64;
+        let k = 32;
+        let data: Vec<f32> = (0..k * 2).map(|_| lcg(&mut s) * 5.0).collect();
+        let ew: Vec<f32> = (0..k * 2).map(|_| lcg(&mut s).abs()).collect();
+        let scores = block_impact_scores(&data, k, &[], Some(&ew));
+        assert_eq!(scores.len(), 4);
+        let manual = impact_score_block(&data[0..BLOCK], &ew[0..BLOCK]);
+        assert_eq!(scores[0], manual);
+    }
+}

@@ -1,0 +1,40 @@
+//! Precision-assignment policies (paper §3.1–3.2, §3.4).
+//!
+//! [`impact`] implements the paper's Fisher-weighted impact score (Eq. 8);
+//! [`baselines`] the Quantization-Error and Output-Error comparison policies
+//! (Eqs. 12–13); [`threshold`] the global/local percentile calibration
+//! (Eqs. 9–10); [`assign`] ties them together into per-tensor block
+//! assignments consumed by the packer and the hardware model.
+
+pub mod assign;
+pub mod baselines;
+pub mod impact;
+pub mod threshold;
+
+pub use assign::{assign_tensor, Assignment};
+pub use impact::{block_impact_scores, impact_score_block};
+pub use threshold::{percentile, threshold_for_fp4_fraction, ThresholdMode};
+
+/// Which weighting enters the per-block score (paper Fig. 6 ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Policy {
+    /// Fisher-weighted (the paper's FGMP policy, Eq. 8).
+    Fisher,
+    /// Unweighted quantization error (Eq. 12).
+    QuantError,
+    /// Weighted by mean squared magnitude of the other tensor's
+    /// corresponding input channels (Eq. 13).
+    OutputError,
+}
+
+impl Policy {
+    pub const ALL: [Policy; 3] = [Policy::Fisher, Policy::QuantError, Policy::OutputError];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Fisher => "fisher",
+            Policy::QuantError => "qe",
+            Policy::OutputError => "oe",
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! Threshold calibration (paper §3.2, Eqs. 9–10).
+//!
+//! For a target FP4 fraction f, the threshold is the f-quantile of the
+//! impact scores: blocks scoring above it stay FP8. The paper's key choice
+//! is a **single global threshold** across all layers (Eq. 10) so that more
+//! sensitive layers automatically retain more FP8 blocks; the per-layer
+//! ("local", Eq. 9) variant is kept as the Fig. 6 ablation.
+
+/// Global (one threshold across all tensors) vs local (per tensor/layer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ThresholdMode {
+    Global,
+    Local,
+}
+
+/// Linear-interpolated quantile of unsorted data, q ∈ [0, 1]
+/// (matches numpy's default 'linear' method used in calibrate.py).
+pub fn percentile(scores: &[f64], q: f64) -> f64 {
+    assert!(!scores.is_empty(), "percentile of empty score set");
+    let mut v: Vec<f64> = scores.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, q)
+}
+
+/// Quantile of already-sorted data.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let pos = q.clamp(0.0, 1.0) * (n - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Threshold such that ~`fp4_fraction` of blocks fall below (=> FP4) and the
+/// rest above (=> FP8). `fp4_fraction` of 1.0 returns +inf (all FP4);
+/// 0.0 returns -inf (all FP8) — the two single-format baselines.
+pub fn threshold_for_fp4_fraction(scores: &[f64], fp4_fraction: f64) -> f64 {
+    if fp4_fraction >= 1.0 {
+        return f64::INFINITY;
+    }
+    if fp4_fraction <= 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    percentile(scores, fp4_fraction)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantile_basics() {
+        let v = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 5.0);
+        assert_eq!(percentile(&v, 0.5), 3.0);
+        assert_eq!(percentile(&v, 0.25), 2.0);
+    }
+
+    #[test]
+    fn interpolation() {
+        let v = [0.0, 10.0];
+        assert_eq!(percentile(&v, 0.3), 3.0);
+    }
+
+    #[test]
+    fn extremes_give_infinite_thresholds() {
+        let v = [1.0, 2.0];
+        assert_eq!(threshold_for_fp4_fraction(&v, 1.0), f64::INFINITY);
+        assert_eq!(threshold_for_fp4_fraction(&v, 0.0), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn achieved_fraction_tracks_target() {
+        // 10k distinct scores: the realized FP4 fraction at the computed
+        // threshold must be within 1% of target.
+        let scores: Vec<f64> = (0..10_000).map(|i| (i as f64 * 0.7919).sin().abs() + i as f64 * 1e-6).collect();
+        for target in [0.1, 0.3, 0.5, 0.7, 0.9] {
+            let t = threshold_for_fp4_fraction(&scores, target);
+            let below = scores.iter().filter(|&&s| s <= t).count() as f64 / scores.len() as f64;
+            assert!((below - target).abs() < 0.01, "target {target}, got {below}");
+        }
+    }
+
+    #[test]
+    fn unsorted_input_ok() {
+        let v = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&v, 0.5), 3.0);
+    }
+}

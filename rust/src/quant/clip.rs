@@ -1,0 +1,146 @@
+//! Sensitivity-weighted clipping (SW-Clip, paper §3.3).
+//!
+//! For each weight block destined for NVFP4, brute-force over the E4M3 scale
+//! candidates to minimize the Fisher-weighted squared quantization error
+//! (Eq. 11). The search space is the E4M3 grid restricted to a neighbourhood
+//! of the dynamic-max scale (scales above it only lose resolution without
+//! expanding range; scales far below clip everything), which matches the
+//! paper's "brute-force search over possible values for s".
+
+use super::fp4::quant_e2m1;
+use super::fp8::e4m3_grid;
+use super::nvfp4::nvfp4_scale;
+use crate::BLOCK;
+
+thread_local! {
+    /// Candidate scales, built once per thread (ascending E4M3 grid).
+    static GRID: Vec<f32> = e4m3_grid();
+}
+
+/// Fisher-weighted squared error of quantizing `x` with scale `s`,
+/// abandoning early once the running sum exceeds `abandon_above`
+/// (the brute-force search only needs errors below the incumbent;
+/// §Perf change 3).
+#[inline]
+fn weighted_err(x: &[f32], g2: &[f32], s: f32, abandon_above: f64) -> f64 {
+    if s <= 0.0 {
+        return x.iter().zip(g2).map(|(&v, &g)| (g as f64) * (v as f64) * (v as f64)).sum();
+    }
+    let inv_s = 1.0 / s;
+    let mut acc = 0.0f64;
+    for (&v, &g) in x.iter().zip(g2) {
+        let d = (quant_e2m1(v * inv_s) * s - v) as f64;
+        acc += g as f64 * d * d;
+        if acc > abandon_above {
+            return f64::INFINITY;
+        }
+    }
+    acc
+}
+
+/// Search the per-block scale minimizing the sensitivity-weighted error.
+/// `g2` is the per-element Fisher weighting (ones = plain MSE clipping).
+/// Returns (best scale, its weighted error).
+pub fn sw_clip_block(x: &[f32], g2: &[f32]) -> (f32, f64) {
+    debug_assert_eq!(x.len(), g2.len());
+    let absmax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let s_dyn = nvfp4_scale(absmax);
+    if s_dyn == 0.0 {
+        return (0.0, 0.0);
+    }
+    let mut best_s = s_dyn;
+    let mut best_e = weighted_err(x, g2, s_dyn, f64::INFINITY);
+    // Candidates: every non-zero E4M3 grid value up to s_dyn (the paper's
+    // brute-force over possible scale values). Scales above s_dyn strictly
+    // coarsen the lattice with no added range (absmax/s_dyn already maps to
+    // the top code), so they never reduce the error. Candidates are walked
+    // top-down so the incumbent tightens fast and early-abandon prunes the
+    // deep-clip tail.
+    GRID.with(|grid| {
+        for &s in grid.iter().rev() {
+            if s >= s_dyn || s == 0.0 {
+                continue;
+            }
+            let e = weighted_err(x, g2, s, best_e);
+            if e < best_e {
+                best_e = e;
+                best_s = s;
+            }
+        }
+    });
+    (best_s, best_e)
+}
+
+/// SW-Clip an entire tensor (blocks along the last axis). Returns per-FP4
+/// block scales aligned with *all* blocks (callers index by block id).
+pub fn sw_clip_tensor(data: &[f32], fisher: &[f32]) -> Vec<f32> {
+    assert_eq!(data.len(), fisher.len());
+    assert_eq!(data.len() % BLOCK, 0);
+    data.chunks_exact(BLOCK)
+        .zip(fisher.chunks_exact(BLOCK))
+        .map(|(xb, gb)| sw_clip_block(xb, gb).0)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::nvfp4::nvfp4_roundtrip_block;
+
+    fn lcg(seed: &mut u64) -> f32 {
+        *seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+        ((*seed >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+    }
+
+    #[test]
+    fn never_worse_than_dynamic_max() {
+        let mut seed = 42u64;
+        for _ in 0..64 {
+            let x: Vec<f32> = (0..BLOCK).map(|_| lcg(&mut seed) * 4.0).collect();
+            let g2: Vec<f32> = (0..BLOCK).map(|_| lcg(&mut seed).abs() + 0.01).collect();
+            let absmax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let s_dyn = nvfp4_scale(absmax);
+            let (s_best, e_best) = sw_clip_block(&x, &g2);
+            let e_dyn = {
+                let mut out = [0.0f32; BLOCK];
+                nvfp4_roundtrip_block(&x, s_dyn, &mut out);
+                x.iter()
+                    .zip(out.iter())
+                    .zip(&g2)
+                    .map(|((&v, &q), &g)| (g as f64) * ((q - v) as f64).powi(2))
+                    .sum::<f64>()
+            };
+            assert!(e_best <= e_dyn + 1e-12, "clip must not increase error");
+            assert!(s_best > 0.0);
+        }
+    }
+
+    #[test]
+    fn clipping_helps_outlier_block() {
+        // One huge outlier with tiny Fisher + 15 sensitive small values:
+        // clipping the range (smaller s) must win.
+        let mut x = [0.1f32; BLOCK];
+        x[0] = 60.0;
+        let mut g2 = [10.0f32; BLOCK];
+        g2[0] = 1e-6;
+        let absmax = 60.0f32;
+        let s_dyn = nvfp4_scale(absmax);
+        let (s_best, _) = sw_clip_block(&x, &g2);
+        assert!(s_best < s_dyn, "expected clipped scale, got {s_best} >= {s_dyn}");
+    }
+
+    #[test]
+    fn zero_block_gets_zero_scale() {
+        let x = [0.0f32; BLOCK];
+        let g2 = [1.0f32; BLOCK];
+        assert_eq!(sw_clip_block(&x, &g2), (0.0, 0.0));
+    }
+
+    #[test]
+    fn tensor_api_len() {
+        let mut seed = 9u64;
+        let x: Vec<f32> = (0..BLOCK * 7).map(|_| lcg(&mut seed)).collect();
+        let g: Vec<f32> = (0..BLOCK * 7).map(|_| lcg(&mut seed).abs()).collect();
+        assert_eq!(sw_clip_tensor(&x, &g).len(), 7);
+    }
+}

@@ -1,0 +1,119 @@
+//! FP4 E2M1 codec: bias 1, grid {0, 0.5, 1, 1.5, 2, 3, 4, 6} with sign.
+//!
+//! Values are always stored *pre-scaled* (NVFP4 divides by the per-block
+//! E4M3 scale first); this module only handles the 4-bit grid itself.
+
+
+/// Largest E2M1 magnitude.
+pub const E2M1_MAX: f32 = 6.0;
+/// Smallest normal E2M1 magnitude.
+pub const E2M1_MIN_NORMAL: f32 = 1.0;
+/// Subnormal spacing.
+pub const E2M1_QUANTUM_SUBNORMAL: f32 = 0.5;
+
+/// The eight non-negative E2M1 values.
+pub const E2M1_GRID: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+
+/// Round-trip f32 -> E2M1 -> f32 (saturating, round-to-nearest ties-to-even).
+///
+/// Quantum 2^(e-1) built from the exponent field (no `powi`) — this is the
+/// innermost operation of the SW-Clip search (§Perf change 1).
+#[inline]
+pub fn quant_e2m1(x: f32) -> f32 {
+    let ax = x.abs();
+    if ax == 0.0 {
+        return 0.0;
+    }
+    let quantum = if ax < E2M1_MIN_NORMAL {
+        E2M1_QUANTUM_SUBNORMAL
+    } else {
+        f32::from_bits(((ax.to_bits() >> 23) - 1) << 23)
+    };
+    let q = (x / quantum).round_ties_even() * quantum;
+    q.clamp(-E2M1_MAX, E2M1_MAX)
+}
+
+/// Encode into a 4-bit code (low nibble): sign | exp(2b) | mantissa(1b).
+/// The code index is derived arithmetically from the quantized value's
+/// exponent/mantissa (no grid search; §Perf change 2).
+pub fn encode_e2m1(x: f32) -> u8 {
+    let q = quant_e2m1(x);
+    if q == 0.0 {
+        return 0; // canonical +0 (negative zero carries no information)
+    }
+    let sign = if q.is_sign_negative() { 0x8u8 } else { 0 };
+    let a = q.abs();
+    let idx = if a < 1.0 {
+        1 // 0.5, the sole subnormal
+    } else {
+        // a = (1 + m/2) * 2^e with e in 0..=2, m in {0,1}
+        let e = ((a.to_bits() >> 23) as i32 - 127) as u32;
+        let m = (a.to_bits() >> 22) & 1; // top mantissa bit
+        (2 + 2 * e + m) as u8
+    };
+    debug_assert_eq!(E2M1_GRID[idx as usize], a, "arithmetic code agrees with grid");
+    sign | idx
+}
+
+/// Decode a 4-bit code (low nibble) to f32.
+#[inline]
+pub fn decode_e2m1(code: u8) -> f32 {
+    let mag = E2M1_GRID[(code & 0x7) as usize];
+    if code & 0x8 != 0 {
+        -mag
+    } else {
+        mag
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_fixed_points() {
+        for g in E2M1_GRID {
+            assert_eq!(quant_e2m1(g), g);
+            assert_eq!(quant_e2m1(-g), -g);
+        }
+    }
+
+    #[test]
+    fn nearest_with_ties_to_even() {
+        // (input, expected) — ties resolve to the even mantissa code.
+        let cases = [
+            (0.24, 0.0),
+            (0.25, 0.0),  // tie 0 vs 0.5 -> 0 (even)
+            (0.26, 0.5),
+            (0.75, 1.0),  // tie 0.5 vs 1.0 -> 1.0 (even subnormal count)
+            (1.25, 1.0),  // tie -> even mantissa (1.0)
+            (1.75, 2.0),  // tie -> 2.0
+            (2.5, 2.0),   // tie 2 vs 3 -> 2 (even)
+            (3.5, 4.0),   // tie 3 vs 4 -> 4
+            (5.0, 4.0),   // tie 4 vs 6 -> 4 (even)
+            (5.1, 6.0),
+            (7.0, 6.0),   // saturate
+            (-1.3, -1.5),
+        ];
+        for (x, want) in cases {
+            assert_eq!(quant_e2m1(x), want, "x={x}");
+        }
+    }
+
+    #[test]
+    fn encode_decode_all_codes() {
+        for c in 0u8..16 {
+            let x = decode_e2m1(c);
+            // -0.0 encodes to 0x8 and decodes to -0.0 == 0.0
+            assert_eq!(decode_e2m1(encode_e2m1(x)), x);
+        }
+    }
+
+    #[test]
+    fn encode_matches_quant() {
+        for i in 0..4096 {
+            let x = ((i as f32) * 0.0137).sin() * 8.0;
+            assert_eq!(decode_e2m1(encode_e2m1(x)), quant_e2m1(x), "x={x}");
+        }
+    }
+}

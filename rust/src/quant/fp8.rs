@@ -1,0 +1,160 @@
+//! FP8 E4M3 codec (OCP "FN" variant): bias 7, max 448, no infinities.
+//!
+//! `quant_e4m3` is the round-trip used throughout the policy math (identical
+//! to `ref.quant_e4m3`); `encode_e4m3`/`decode_e4m3` are the true byte codec
+//! used by the packed-tensor storage format.
+
+/// Largest finite E4M3 magnitude.
+pub const E4M3_MAX: f32 = 448.0;
+/// Smallest normal E4M3 magnitude (2^-6).
+pub const E4M3_MIN_NORMAL: f32 = 0.015625;
+/// Subnormal spacing (2^-9).
+pub const E4M3_QUANTUM_SUBNORMAL: f32 = 0.001953125;
+
+/// Round-trip f32 -> E4M3 -> f32 (saturating, round-to-nearest ties-to-even).
+///
+/// The in-binade quantum 2^(e-3) is built directly from the exponent field
+/// (subtract 3 from the biased exponent) instead of `powi` — this is the
+/// inner loop of impact scoring, packing, and SW-Clip (§Perf change 1).
+#[inline]
+pub fn quant_e4m3(x: f32) -> f32 {
+    let ax = x.abs();
+    if ax == 0.0 {
+        return 0.0;
+    }
+    let quantum = if ax < E4M3_MIN_NORMAL {
+        E4M3_QUANTUM_SUBNORMAL
+    } else {
+        // biased exponent of ax, minus 3 -> 2^(e-3); ax >= 2^-6 keeps the
+        // result normal, and the mantissa bits are cleared by the shift.
+        f32::from_bits(((ax.to_bits() >> 23) - 3) << 23)
+    };
+    let q = (x / quantum).round_ties_even() * quantum;
+    q.clamp(-E4M3_MAX, E4M3_MAX)
+}
+
+/// Encode a (pre-rounded or arbitrary) f32 into an E4M3 byte.
+/// Encoding quantizes first, so `decode(encode(x)) == quant_e4m3(x)`.
+pub fn encode_e4m3(x: f32) -> u8 {
+    let q = quant_e4m3(x);
+    let aq = q.abs();
+    if aq == 0.0 {
+        return 0; // canonical +0 (negative zero carries no information)
+    }
+    let sign = if q.is_sign_negative() { 0x80u8 } else { 0 };
+    if aq < E4M3_MIN_NORMAL {
+        // subnormal: mantissa counts 2^-9 steps
+        let m = (aq / E4M3_QUANTUM_SUBNORMAL).round() as u8;
+        return sign | m;
+    }
+    // aq is already on the E4M3 grid: exponent/mantissa drop out of the
+    // f32 bit pattern directly (top 3 mantissa bits; §Perf change 2).
+    let bits = aq.to_bits();
+    let e = ((bits >> 23) as i32) - 127; // in [-6, 8]
+    let m = ((bits >> 20) & 0x7) as u8;
+    sign | (((e + 7) as u8) << 3) | m
+}
+
+/// Decode an E4M3 byte to f32. The NaN encodings (0x7f/0xff) decode to the
+/// max magnitude — they never occur in data we produce (saturating encode).
+pub fn decode_e4m3(b: u8) -> f32 {
+    let sign = if b & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    let e = ((b >> 3) & 0x0f) as i32;
+    let m = (b & 0x07) as f32;
+    let mag = if e == 0 {
+        m * E4M3_QUANTUM_SUBNORMAL
+    } else {
+        (1.0 + m / 8.0) * (2.0f32).powi(e - 7)
+    };
+    sign * mag.min(E4M3_MAX)
+}
+
+/// Vectorized round-trip.
+pub fn quant_e4m3_slice(xs: &[f32], out: &mut [f32]) {
+    for (o, &x) in out.iter_mut().zip(xs) {
+        *o = quant_e4m3(x);
+    }
+}
+
+/// All 126 non-negative finite E4M3 values in ascending order (used by the
+/// SW-Clip brute-force scale search, paper §3.3).
+pub fn e4m3_grid() -> Vec<f32> {
+    let mut v = vec![0.0f32];
+    for m in 1..8 {
+        v.push(m as f32 * E4M3_QUANTUM_SUBNORMAL);
+    }
+    for e in -6..=8i32 {
+        for m in 0..8 {
+            let x = (1.0 + m as f32 / 8.0) * (2.0f32).powi(e);
+            if x <= E4M3_MAX {
+                v.push(x);
+            }
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_fixed_points() {
+        for g in e4m3_grid() {
+            assert_eq!(quant_e4m3(g), g, "grid value {g} must be fixed");
+            assert_eq!(quant_e4m3(-g), -g);
+        }
+    }
+
+    #[test]
+    fn saturation() {
+        assert_eq!(quant_e4m3(1e9), 448.0);
+        assert_eq!(quant_e4m3(-1e9), -448.0);
+        assert_eq!(quant_e4m3(449.0), 448.0);
+    }
+
+    #[test]
+    fn subnormals() {
+        assert_eq!(quant_e4m3(E4M3_QUANTUM_SUBNORMAL), E4M3_QUANTUM_SUBNORMAL);
+        assert_eq!(quant_e4m3(E4M3_QUANTUM_SUBNORMAL * 0.49), 0.0);
+        assert_eq!(quant_e4m3(E4M3_QUANTUM_SUBNORMAL * 0.51), E4M3_QUANTUM_SUBNORMAL);
+    }
+
+    #[test]
+    fn ties_to_even() {
+        // midpoint between 1.0 (mantissa 0, even) and 1.125 (mantissa 1, odd)
+        assert_eq!(quant_e4m3(1.0625), 1.0);
+        // midpoint between 1.125 and 1.25 -> 1.25 (even mantissa 2)
+        assert_eq!(quant_e4m3(1.1875), 1.25);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_all_bytes() {
+        // decode(encode(decode(b))) == decode(b) for every non-NaN byte
+        for b in 0u16..=255 {
+            let b = b as u8;
+            if (b & 0x7f) == 0x7f {
+                continue; // NaN encodings
+            }
+            let x = decode_e4m3(b);
+            assert_eq!(decode_e4m3(encode_e4m3(x)), x, "byte {b:#x}");
+        }
+    }
+
+    #[test]
+    fn encode_matches_quant() {
+        let rs: Vec<f32> = (0..4096)
+            .map(|i| ((i as f32 * 0.7311).sin() * 300.0) + (i as f32 * 0.017).cos())
+            .collect();
+        for x in rs {
+            assert_eq!(decode_e4m3(encode_e4m3(x)), quant_e4m3(x), "x={x}");
+        }
+    }
+
+    #[test]
+    fn grid_count() {
+        // 1 zero + 7 subnormals + (15 binades * 8 mantissas - 1 cut above
+        // 448) = 127 non-negative finite values
+        assert_eq!(e4m3_grid().len(), 127);
+    }
+}

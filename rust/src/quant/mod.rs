@@ -1,0 +1,18 @@
+//! Bit-exact quantization codecs and the FGMP packed-tensor format.
+//!
+//! The numerics here mirror `python/compile/kernels/ref.py` to the last ULP
+//! (same quantum-based round-to-nearest-ties-to-even algorithm); the golden
+//! fixture test `tests/quant_golden.rs` replays python-generated vectors to
+//! pin the two implementations together.
+
+pub mod clip;
+pub mod fp4;
+pub mod fp8;
+pub mod nvfp4;
+pub mod pack;
+
+pub use clip::{sw_clip_block, sw_clip_tensor};
+pub use fp4::{quant_e2m1, E2M1_MAX};
+pub use fp8::{encode_e4m3, decode_e4m3, quant_e4m3, E4M3_MAX};
+pub use nvfp4::{nvfp4_roundtrip, nvfp4_scale, NvFp4Block};
+pub use pack::{FgmpTensor, Precision};

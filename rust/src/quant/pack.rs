@@ -1,0 +1,220 @@
+//! The FGMP packed-tensor storage format (paper §4: payload + per-block
+//! E4M3 microscale for FP4 blocks + **one metadata bit per block**).
+//!
+//! Layout per tensor (blocks run along the contiguous K axis):
+//!   * `meta`    — 1 bit/block, 1 = FP8 block, 0 = NVFP4 block
+//!   * `payload` — FP8 blocks: 16 E4M3 bytes; FP4 blocks: 8 bytes (two E2M1
+//!     nibbles each, low nibble first)
+//!   * `scales`  — one E4M3 byte per FP4 block (FP8 blocks carry none)
+//!
+//! This is exactly the memory-footprint accounting of the paper's Fig. 8:
+//! FP4 block = 64 + 8 (scale) + 1 (meta) bits, FP8 block = 128 + 1 bits.
+
+use crate::BLOCK;
+
+use super::fp4::{decode_e2m1, encode_e2m1};
+use super::fp8::{decode_e4m3, encode_e4m3};
+use super::nvfp4::nvfp4_scale;
+
+/// Per-block precision assignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    Fp4,
+    Fp8,
+}
+
+/// A tensor stored in the FGMP packed format.
+#[derive(Debug, Clone)]
+pub struct FgmpTensor {
+    /// Logical shape (row-major; blocks tile the last axis).
+    pub shape: Vec<usize>,
+    /// 1 bit per block, LSB-first within each byte; 1 = FP8.
+    pub meta: Vec<u8>,
+    /// Mixed payload, in block order.
+    pub payload: Vec<u8>,
+    /// E4M3 scale byte per FP4 block, in FP4-block order.
+    pub scales: Vec<u8>,
+    /// Number of blocks.
+    pub n_blocks: usize,
+    /// Number of FP8 blocks (for stats / footprint accounting).
+    pub n_fp8: usize,
+}
+
+impl FgmpTensor {
+    /// Pack `data` given a per-block precision assignment and optional
+    /// per-FP4-block scale override (from SW-Clip); `None` = dynamic-max.
+    pub fn pack(
+        shape: &[usize],
+        data: &[f32],
+        precision: &[Precision],
+        clip_scales: Option<&[f32]>,
+    ) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, data.len());
+        assert_eq!(n % BLOCK, 0, "last axis must tile into {BLOCK}-blocks");
+        let n_blocks = n / BLOCK;
+        assert_eq!(precision.len(), n_blocks);
+
+        let mut meta = vec![0u8; n_blocks.div_ceil(8)];
+        let mut payload = Vec::with_capacity(n);
+        let mut scales = Vec::new();
+        let mut n_fp8 = 0;
+        let mut fp4_idx = 0;
+
+        for (bi, xb) in data.chunks_exact(BLOCK).enumerate() {
+            match precision[bi] {
+                Precision::Fp8 => {
+                    meta[bi / 8] |= 1 << (bi % 8);
+                    n_fp8 += 1;
+                    payload.extend(xb.iter().map(|&v| encode_e4m3(v)));
+                }
+                Precision::Fp4 => {
+                    let s = match clip_scales {
+                        Some(cs) => cs[fp4_idx],
+                        None => {
+                            let absmax = xb.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                            nvfp4_scale(absmax)
+                        }
+                    };
+                    fp4_idx += 1;
+                    scales.push(encode_e4m3(s));
+                    let sdec = decode_e4m3(encode_e4m3(s));
+                    let safe = if sdec > 0.0 { sdec } else { 1.0 };
+                    for pair in xb.chunks_exact(2) {
+                        let lo = encode_e2m1(pair[0] / safe);
+                        let hi = encode_e2m1(pair[1] / safe);
+                        payload.push(lo | (hi << 4));
+                    }
+                }
+            }
+        }
+        FgmpTensor { shape: shape.to_vec(), meta, payload, scales, n_blocks, n_fp8 }
+    }
+
+    /// Is block `bi` stored in FP8?
+    #[inline]
+    pub fn is_fp8(&self, bi: usize) -> bool {
+        self.meta[bi / 8] & (1 << (bi % 8)) != 0
+    }
+
+    /// Unpack to dequantized f32 (the values the datapath consumes).
+    pub fn unpack(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.n_blocks * BLOCK);
+        let mut off = 0usize;
+        let mut fp4_idx = 0usize;
+        for bi in 0..self.n_blocks {
+            if self.is_fp8(bi) {
+                for j in 0..BLOCK {
+                    out.push(decode_e4m3(self.payload[off + j]));
+                }
+                off += BLOCK;
+            } else {
+                let s = decode_e4m3(self.scales[fp4_idx]);
+                fp4_idx += 1;
+                let s = if s > 0.0 { s } else { 0.0 };
+                for j in 0..BLOCK / 2 {
+                    let b = self.payload[off + j];
+                    out.push(decode_e2m1(b & 0x0f) * s);
+                    out.push(decode_e2m1(b >> 4) * s);
+                }
+                off += BLOCK / 2;
+            }
+        }
+        out
+    }
+
+    /// Storage size in bits, split into (payload, scales, metadata) — the
+    /// three bars of the paper's Fig. 8 breakdown.
+    pub fn footprint_bits(&self) -> (usize, usize, usize) {
+        let n_fp4 = self.n_blocks - self.n_fp8;
+        let payload = self.n_fp8 * BLOCK * 8 + n_fp4 * BLOCK * 4;
+        let scales = n_fp4 * 8;
+        let meta = self.n_blocks;
+        (payload, scales, meta)
+    }
+
+    /// Fraction of blocks kept in FP8.
+    pub fn fp8_fraction(&self) -> f64 {
+        self.n_fp8 as f64 / self.n_blocks.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quant_e4m3, nvfp4::nvfp4_roundtrip};
+
+    fn lcg(seed: &mut u64) -> f32 {
+        *seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+        ((*seed >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+    }
+
+    fn data(n: usize, scale: f32, seed: u64) -> Vec<f32> {
+        let mut s = seed;
+        (0..n).map(|_| lcg(&mut s) * scale).collect()
+    }
+
+    #[test]
+    fn all_fp8_roundtrip_equals_e4m3() {
+        let x = data(BLOCK * 10, 20.0, 1);
+        let t = FgmpTensor::pack(&[10, BLOCK], &x, &vec![Precision::Fp8; 10], None);
+        let back = t.unpack();
+        for (a, &b) in back.iter().zip(&x) {
+            assert_eq!(*a, quant_e4m3(b));
+        }
+        assert_eq!(t.n_fp8, 10);
+        assert!(t.scales.is_empty());
+    }
+
+    #[test]
+    fn all_fp4_roundtrip_equals_nvfp4() {
+        let x = data(BLOCK * 10, 5.0, 2);
+        let t = FgmpTensor::pack(&[10, BLOCK], &x, &vec![Precision::Fp4; 10], None);
+        let back = t.unpack();
+        let mut want = vec![0.0; x.len()];
+        nvfp4_roundtrip(&x, &mut want);
+        for (a, b) in back.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+        assert_eq!(t.scales.len(), 10);
+    }
+
+    #[test]
+    fn mixed_blocks_select_correct_codec() {
+        let x = data(BLOCK * 4, 3.0, 3);
+        let prec = vec![Precision::Fp4, Precision::Fp8, Precision::Fp8, Precision::Fp4];
+        let t = FgmpTensor::pack(&[4, BLOCK], &x, &prec, None);
+        assert!(!t.is_fp8(0) && t.is_fp8(1) && t.is_fp8(2) && !t.is_fp8(3));
+        assert_eq!(t.n_fp8, 2);
+        let back = t.unpack();
+        // FP8 blocks match e4m3
+        for j in BLOCK..3 * BLOCK {
+            assert_eq!(back[j], quant_e4m3(x[j]));
+        }
+    }
+
+    #[test]
+    fn footprint_accounting() {
+        let x = data(BLOCK * 8, 1.0, 4);
+        let prec: Vec<Precision> = (0..8)
+            .map(|i| if i < 2 { Precision::Fp8 } else { Precision::Fp4 })
+            .collect();
+        let t = FgmpTensor::pack(&[8, BLOCK], &x, &prec, None);
+        let (p, s, m) = t.footprint_bits();
+        assert_eq!(p, 2 * 128 + 6 * 64);
+        assert_eq!(s, 6 * 8);
+        assert_eq!(m, 8);
+        assert_eq!(t.payload.len(), 2 * 16 + 6 * 8);
+    }
+
+    #[test]
+    fn explicit_clip_scales_respected() {
+        let x = data(BLOCK, 4.0, 5);
+        let t = FgmpTensor::pack(&[1, BLOCK], &x, &[Precision::Fp4], Some(&[0.25]));
+        assert_eq!(decode_e4m3(t.scales[0]), 0.25);
+        let back = t.unpack();
+        for &v in &back {
+            assert!(v.abs() <= 6.0 * 0.25 + 1e-6);
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! The PJRT CPU client and compiled-executable handles.
+//!
+//! Interchange is HLO *text* (see python/compile/aot.py and
+//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` reparses
+//! and reassigns instruction ids, sidestepping the 64-bit-id protos that
+//! xla_extension 0.5.1 rejects. Graphs are lowered with return_tuple=True,
+//! so outputs arrive as one tuple literal we decompose here.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Context;
+
+use crate::Result;
+
+use super::literal::ArgValue;
+
+/// Shared PJRT CPU client.
+#[derive(Clone)]
+pub struct Runtime {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client: Arc::new(client) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text file into an executable.
+    pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe: Arc::new(exe), name: path.display().to_string() })
+    }
+}
+
+/// One compiled graph. Cheap to clone; `execute` is synchronous.
+#[derive(Clone)]
+pub struct Executable {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    pub name: String,
+}
+
+/// One output tensor, flattened.
+#[derive(Debug, Clone)]
+pub struct OutValue {
+    pub data: Vec<f32>,
+}
+
+impl Executable {
+    /// Execute with host args; returns the flattened f32 elements of each
+    /// tuple field (all our graph outputs are f32).
+    pub fn run(&self, args: &[ArgValue]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> =
+            args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let fields = out.to_tuple().context("decomposing result tuple")?;
+        fields
+            .into_iter()
+            .map(|l| {
+                let v = l.to_vec::<f32>().context("reading f32 output")?;
+                Ok(v)
+            })
+            .collect()
+    }
+}

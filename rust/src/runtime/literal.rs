@@ -1,0 +1,52 @@
+//! Tensor ⇄ xla::Literal conversion helpers.
+
+use xla::Literal;
+
+use crate::Result;
+
+/// A host-side argument value (what the coordinator traffics in).
+#[derive(Debug, Clone)]
+pub enum ArgValue {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl ArgValue {
+    pub fn to_literal(&self) -> Result<Literal> {
+        match self {
+            ArgValue::F32 { shape, data } => lit_f32(data, shape),
+            ArgValue::I32 { shape, data } => lit_i32(data, shape),
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        ArgValue::F32 { shape: vec![], data: vec![v] }
+    }
+    pub fn vec_f32(data: Vec<f32>) -> Self {
+        ArgValue::F32 { shape: vec![data.len()], data }
+    }
+}
+
+/// Build an f32 literal with the given shape.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {shape:?} != len {}", data.len());
+    let flat = Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(flat);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(flat.reshape(&dims)?)
+}
+
+/// Build an i32 literal with the given shape.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {shape:?} != len {}", data.len());
+    let flat = Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(flat);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(flat.reshape(&dims)?)
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: load AOT-compiled HLO text and execute it on the CPU
+//! client. This is the only place the `xla` crate is touched; everything
+//! above works with plain `Vec<f32>`/`Vec<i32>` tensors.
+
+pub mod client;
+pub mod literal;
+
+pub use client::{Executable, Runtime};
+pub use literal::{lit_f32, lit_i32, ArgValue};

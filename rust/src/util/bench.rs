@@ -1,0 +1,75 @@
+//! Micro-bench timer — replaces criterion for the hotpath benches (offline
+//! build). Warmup + N timed iterations, reports mean/p50/min and
+//! throughput; plain text output, machine-greppable.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    /// Optional elements-per-iteration for throughput reporting.
+    pub elements: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "{:<36} iters {:>4}  mean {:>12?}  p50 {:>12?}  min {:>12?}",
+            self.name, self.iters, self.mean, self.median, self.min
+        );
+        if let Some(e) = self.elements {
+            let eps = e as f64 / self.mean.as_secs_f64();
+            s.push_str(&format!("  {:>10.1} Melem/s", eps / 1e6));
+        }
+        s
+    }
+}
+
+/// Time `f` with automatic iteration count targeting ~`budget` total.
+pub fn bench<R>(name: &str, elements: Option<u64>, budget: Duration, mut f: impl FnMut() -> R) -> BenchResult {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let once = t0.elapsed().max(Duration::from_nanos(50));
+    let iters = (budget.as_secs_f64() / once.as_secs_f64()).clamp(5.0, 1000.0) as usize;
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    let mean = samples.iter().sum::<Duration>() / iters as u32;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean,
+        median: samples[iters / 2],
+        min: samples[0],
+        elements,
+    }
+}
+
+/// Re-export of the standard black_box for bench bodies.
+pub use std::hint::black_box;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let r = bench("noop_sum", Some(1000), Duration::from_millis(20), || {
+            (0..1000u64).sum::<u64>()
+        });
+        assert!(r.iters >= 5);
+        assert!(r.min <= r.mean);
+        assert!(r.report().contains("noop_sum"));
+    }
+}

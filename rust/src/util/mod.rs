@@ -1,0 +1,12 @@
+//! Self-contained utilities replacing external crates for the fully-offline
+//! build (DESIGN.md §Deps): a minimal JSON codec, a seeded RNG, a scoped
+//! parallel map, and a micro-bench timer.
+
+pub mod bench;
+pub mod json;
+pub mod parallel;
+pub mod rng;
+
+pub use json::Json;
+pub use parallel::par_map;
+pub use rng::Rng;

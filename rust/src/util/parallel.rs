@@ -1,0 +1,70 @@
+//! Scoped parallel map over a slice — replaces rayon for the offline
+//! weight-quantization pipeline (embarrassingly parallel over linears).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// Map `f` over `items` using up to `std::thread::available_parallelism()`
+/// worker threads; results come back in input order.
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(n);
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let next = &next;
+            let f = &f;
+            let tx = tx.clone();
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let _ = tx.send((i, f(&items[i])));
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for (i, r) in rx {
+            slots[i] = Some(r);
+        }
+        slots.into_iter().map(|o| o.expect("worker filled slot")).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<usize> = (0..1000).collect();
+        let out = par_map(&items, |&x| x * 2);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let e: Vec<u32> = vec![];
+        assert!(par_map(&e, |&x| x).is_empty());
+        assert_eq!(par_map(&[5u32], |&x| x + 1), vec![6]);
+    }
+
+    #[test]
+    fn actually_parallel_work() {
+        let items: Vec<u64> = (0..64).collect();
+        let out = par_map(&items, |&x| (0..10_000u64).fold(x, |a, b| a.wrapping_add(b * b)));
+        assert_eq!(out.len(), 64);
+        assert_eq!(out[0], (0..10_000u64).fold(0u64, |a, b| a.wrapping_add(b * b)));
+    }
+}

@@ -1,0 +1,133 @@
+//! Property tests for the coordinator invariants (DESIGN.md §7), using the
+//! in-repo seeded-RNG harness (offline build: no proptest; many random
+//! scenarios per property instead).
+
+use std::time::Duration;
+
+use fgmp::coordinator::{BatchPolicy, Batcher, Request, RequestKind, Router};
+use fgmp::util::Rng;
+
+fn score_req(id: u64) -> (Request, std::sync::mpsc::Receiver<fgmp::coordinator::Response>) {
+    Request::new(id, RequestKind::Score { tokens: vec![id as i32], mask: vec![1.0] })
+}
+
+/// Batcher: over many random (queue depth, max_batch, arrival pattern)
+/// scenarios — every request appears exactly once, order preserved, and no
+/// batch exceeds max_batch.
+#[test]
+fn batcher_conserves_and_orders_requests() {
+    let mut rng = Rng::new(0xBA7C4);
+    for case in 0..50 {
+        let n = 1 + rng.below(60) as u64;
+        let max_batch = 1 + rng.below(12);
+        let (tx, rx) = std::sync::mpsc::sync_channel(n as usize + 1);
+        let mut keep = Vec::new();
+        for id in 0..n {
+            let (req, r) = score_req(id);
+            keep.push(r);
+            tx.send(req).unwrap();
+        }
+        drop(tx);
+        let mut batcher = Batcher::new(
+            BatchPolicy { max_batch, max_wait: Duration::from_millis(1) },
+            rx,
+        );
+        let mut seen = Vec::new();
+        while let Some(batch) = batcher.next_batch() {
+            assert!(!batch.is_empty() && batch.len() <= max_batch,
+                    "case {case}: batch size {} vs max {max_batch}", batch.len());
+            seen.extend(batch.iter().map(|r| r.id));
+        }
+        assert_eq!(seen, (0..n).collect::<Vec<_>>(), "case {case}: order/conservation");
+    }
+}
+
+/// Router: requests land in exactly one queue, by kind, order preserved
+/// per queue, across random interleavings.
+#[test]
+fn router_partitions_by_kind() {
+    let mut rng = Rng::new(0x707E5);
+    for case in 0..50 {
+        let n = 1 + rng.below(100) as u64;
+        let (router, score_rx, gen_rx) = Router::new(n as usize + 1);
+        let mut want_score = Vec::new();
+        let mut want_gen = Vec::new();
+        for id in 0..n {
+            if rng.f64() < 0.6 {
+                let (req, _rx) = score_req(id);
+                router.submit(req).unwrap();
+                want_score.push(id);
+            } else {
+                let (req, _rx) =
+                    Request::new(id, RequestKind::Generate { prompt: vec![1], n_tokens: 1 });
+                router.submit(req).unwrap();
+                want_gen.push(id);
+            }
+        }
+        drop(router);
+        let got_score: Vec<u64> = score_rx.iter().map(|r| r.id).collect();
+        let got_gen: Vec<u64> = gen_rx.iter().map(|r| r.id).collect();
+        assert_eq!(got_score, want_score, "case {case}");
+        assert_eq!(got_gen, want_gen, "case {case}");
+        assert_eq!(got_score.len() + got_gen.len(), n as usize);
+    }
+}
+
+/// Batcher under concurrent production: with a slow producer the batcher
+/// still terminates and conserves requests (no loss under timeout flushes).
+#[test]
+fn batcher_with_live_producer_conserves() {
+    for seed in 0..8u64 {
+        let (tx, rx) = std::sync::mpsc::sync_channel(128);
+        let n = 40u64;
+        let producer = std::thread::spawn(move || {
+            let mut rng = Rng::new(seed);
+            for id in 0..n {
+                let (req, _rx) = score_req(id);
+                tx.send(req).unwrap();
+                if rng.f64() < 0.3 {
+                    std::thread::sleep(Duration::from_micros(rng.below(500) as u64));
+                }
+            }
+        });
+        let mut batcher = Batcher::new(
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+            rx,
+        );
+        let mut seen = Vec::new();
+        while let Some(batch) = batcher.next_batch() {
+            seen.extend(batch.iter().map(|r| r.id));
+        }
+        producer.join().unwrap();
+        assert_eq!(seen, (0..n).collect::<Vec<_>>(), "seed {seed}");
+    }
+}
+
+/// Metrics accounting: sums of random batch records reconcile exactly.
+#[test]
+fn metrics_reconcile_random_streams() {
+    let mut rng = Rng::new(0x3E7);
+    for _ in 0..20 {
+        let m = fgmp::coordinator::Metrics::new();
+        let batches = 1 + rng.below(30);
+        let (mut rows, mut toks, mut e, mut e8) = (0u64, 0.0f64, 0.0f64, 0.0f64);
+        for _ in 0..batches {
+            let r = 1 + rng.below(8);
+            let t = rng.f64() * 1000.0;
+            let lats: Vec<Duration> =
+                (0..r).map(|_| Duration::from_micros(rng.below(10_000) as u64)).collect();
+            let (be, be8) = (rng.f64() * 100.0, rng.f64() * 100.0 + 100.0);
+            m.record_batch(r, 8, t, &lats, Duration::from_millis(1), be, be8);
+            rows += r as u64;
+            toks += t;
+            e += be;
+            e8 += be8;
+        }
+        let s = m.snapshot();
+        assert_eq!(s.requests, rows);
+        assert_eq!(s.batches, batches as u64);
+        assert!((s.tokens_scored - toks).abs() < 1e-6);
+        assert!((s.energy_savings - (1.0 - e / e8)).abs() < 1e-9);
+        assert!(s.p50_ms <= s.p95_ms && s.p95_ms <= s.p99_ms);
+    }
+}
