@@ -19,7 +19,7 @@ use fgmp::coordinator::{BatchPolicy, Request, RequestKind, Server, ServerConfig}
 use fgmp::eval::Evaluator;
 use fgmp::hwsim::memory::weight_memory_report;
 use fgmp::model::{QuantConfig, QuantizedModel};
-use fgmp::runtime::Runtime;
+use fgmp::runtime::{ExecSpec, GraphKind, Runtime};
 
 fn main() -> fgmp::Result<()> {
     let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
@@ -43,8 +43,8 @@ fn main() -> fgmp::Result<()> {
     // --- online: the serving coordinator ---
     let fwd_tail = ev.quant_arg_tail(&cfg, &qm)?;
     // logits graph has no mask arg; its tail is identical (params, aw, thr).
-    let fwd_hlo = std::path::PathBuf::from(format!("{artifacts}/tiny-llama/fwd_quant.hlo.txt"));
-    let logits_hlo = std::path::PathBuf::from(format!("{artifacts}/tiny-llama/logits_quant.hlo.txt"));
+    let fwd_spec = ExecSpec::new(&artifacts, "tiny-llama", GraphKind::FwdQuant);
+    let logits_spec = ExecSpec::new(&artifacts, "tiny-llama", GraphKind::LogitsQuant);
     let logits_tail = fwd_tail.clone();
     let shapes = qm.layer_profiles(&ev.arts.manifest, ev.batch * ev.seq, &fp8_rep.act_fp8);
 
@@ -58,7 +58,7 @@ fn main() -> fgmp::Result<()> {
     let windows = ev.eval_windows(16);
     let seq = ev.seq;
 
-    let server = Server::start(scfg, fwd_hlo, fwd_tail, logits_hlo, logits_tail)?;
+    let server = Server::start(scfg, fwd_spec, fwd_tail, logits_spec, logits_tail)?;
     let t0 = std::time::Instant::now();
 
     // scoring stream: every test window as its own request

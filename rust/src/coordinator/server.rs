@@ -1,16 +1,14 @@
-//! The serving loop: batcher → PJRT executor → per-request responses, with
-//! hwsim energy accounting per batch. Thread-based (DESIGN.md §Deps): one
-//! worker thread per request kind, each owning its queue.
+//! The serving loop: batcher → executor → per-request responses, with hwsim
+//! energy accounting per batch. Thread-based (DESIGN.md §Deps): one worker
+//! thread per request kind, each owning its queue.
 
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 use std::time::Instant;
 
-use std::path::PathBuf;
-
 use crate::hwsim::energy::EnergyModel;
 use crate::hwsim::{simulate_matmul, DatapathConfig, LayerProfile, MatmulJob};
-use crate::runtime::{ArgValue, Executable, Runtime};
+use crate::runtime::{ArgValue, ExecSpec, Executable, Runtime};
 use crate::Result;
 
 use super::batcher::{BatchPolicy, Batcher};
@@ -39,16 +37,16 @@ pub struct Server {
 impl Server {
     /// Start the score and generate workers.
     ///
-    /// Workers receive HLO *paths*, not executables: the xla crate's PJRT
-    /// handles are intentionally not Send (Rc-based refcounts), so each
-    /// worker thread owns its own client + compiled executable. The arg
+    /// Workers receive graph *specs*, not executables: executables may not
+    /// be Send (the PJRT backend's handles are Rc-based), so each worker
+    /// thread builds its own runtime + executable from the spec. The arg
     /// tails (plain data: weights, weightings, thresholds) cross threads
     /// freely.
     pub fn start(
         cfg: ServerConfig,
-        fwd_hlo: PathBuf,
+        fwd_spec: ExecSpec,
         fwd_args_tail: Vec<ArgValue>,
-        logits_hlo: PathBuf,
+        logits_spec: ExecSpec,
         logits_args_tail: Vec<ArgValue>,
     ) -> Result<Self> {
         let (router, score_rx, gen_rx) = Router::new(cfg.queue_depth);
@@ -58,16 +56,16 @@ impl Server {
         {
             let (cfg, metrics) = (cfg.clone(), metrics.clone());
             handles.push(std::thread::spawn(move || {
-                let rt = Runtime::cpu().expect("PJRT client (score worker)");
-                let exe = rt.load_hlo(&fwd_hlo).expect("compile fwd_quant");
+                let rt = Runtime::cpu().expect("runtime (score worker)");
+                let exe = rt.load_spec(&fwd_spec).expect("load fwd_quant");
                 score_worker(cfg, exe, fwd_args_tail, score_rx, metrics)
             }));
         }
         {
             let (cfg, metrics) = (cfg.clone(), metrics.clone());
             handles.push(std::thread::spawn(move || {
-                let rt = Runtime::cpu().expect("PJRT client (gen worker)");
-                let exe = rt.load_hlo(&logits_hlo).expect("compile logits_quant");
+                let rt = Runtime::cpu().expect("runtime (gen worker)");
+                let exe = rt.load_spec(&logits_spec).expect("load logits_quant");
                 generate_worker(cfg, exe, logits_args_tail, gen_rx, metrics)
             }));
         }

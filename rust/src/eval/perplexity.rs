@@ -1,11 +1,12 @@
-//! Perplexity evaluation through the AOT fwd_quant / fwd_ref graphs.
+//! Perplexity evaluation through the fwd_quant / fwd_ref graphs (native or
+//! PJRT — the evaluator is backend-agnostic via [`ExecSpec`]).
 
 use std::path::Path;
 
 use crate::io::TensorFile;
 use crate::model::{ModelArtifacts, QuantConfig, QuantizedModel, RatioSpec};
 use crate::policy::Policy;
-use crate::runtime::{ArgValue, Executable, Runtime};
+use crate::runtime::{ArgValue, ExecSpec, Executable, GraphKind, Runtime};
 use crate::Result;
 
 /// Result of one perplexity run.
@@ -40,12 +41,12 @@ pub struct Evaluator {
 }
 
 impl Evaluator {
-    /// Load artifacts + compile graphs for `model` under `artifacts_dir`.
+    /// Load artifacts + materialize graphs for `model` under `artifacts_dir`.
     pub fn load(rt: &Runtime, artifacts_dir: impl AsRef<Path>, model: &str) -> Result<Self> {
         let dir = artifacts_dir.as_ref();
         let arts = ModelArtifacts::load(dir.join(model))?;
-        let fwd_quant = rt.load_hlo(dir.join(model).join("fwd_quant.hlo.txt"))?;
-        let fwd_ref = rt.load_hlo(dir.join(model).join("fwd_ref.hlo.txt"))?;
+        let fwd_quant = rt.load_spec(&ExecSpec::new(dir, model, GraphKind::FwdQuant))?;
+        let fwd_ref = rt.load_spec(&ExecSpec::new(dir, model, GraphKind::FwdRef))?;
         let corpus = TensorFile::load(dir.join("corpus.fgtn"))?;
         let test_stream = corpus.get("test")?.as_i32()?.to_vec();
         let (batch, seq) = (arts.manifest.batch, arts.manifest.seq);

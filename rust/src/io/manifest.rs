@@ -6,6 +6,7 @@ use std::path::Path;
 
 use anyhow::Context;
 
+use crate::model::forward::ModelArch;
 use crate::util::Json;
 use crate::Result;
 
@@ -38,6 +39,9 @@ pub struct Manifest {
     pub param_shapes: HashMap<String, Vec<usize>>,
     pub linears: Vec<LinearSpec>,
     pub graphs: HashMap<String, GraphSpec>,
+    /// Architecture descriptor for the native runtime; absent in manifests
+    /// exported before it existed (then [`Manifest::arch`] infers one).
+    pub arch: Option<ModelArch>,
 }
 
 impl Manifest {
@@ -85,6 +89,10 @@ impl Manifest {
             };
             graphs.insert(k.clone(), GraphSpec { args: strs("args")?, outputs: strs("outputs")? });
         }
+        let arch = match v.opt("arch") {
+            Some(a) => Some(ModelArch::from_json(a)?),
+            None => None,
+        };
         Ok(Manifest {
             name: v.get("name")?.as_str()?.to_string(),
             batch: v.get("batch")?.as_usize()?,
@@ -95,7 +103,17 @@ impl Manifest {
             param_shapes,
             linears,
             graphs,
+            arch,
         })
+    }
+
+    /// The architecture for the native runtime: the recorded `arch` section
+    /// when present, else a best-effort reconstruction from shapes.
+    pub fn arch(&self) -> Result<ModelArch> {
+        match &self.arch {
+            Some(a) => Ok(a.clone()),
+            None => ModelArch::infer(self),
+        }
     }
 
     /// Weight-matrix parameter names (the FGMP-quantized subset), in

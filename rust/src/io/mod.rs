@@ -1,7 +1,9 @@
-//! Artifact IO: the FGTN tensor container (python ⇄ rust interchange) and
-//! the model manifest produced by `python -m compile.aot`.
+//! Artifact IO: the FGTN tensor container (python ⇄ rust interchange), the
+//! model manifest, and the deterministic synthetic-artifact builder that
+//! replaces the Python `make artifacts` pipeline for hermetic runs.
 
 pub mod manifest;
+pub mod synth;
 pub mod tensorfile;
 
 pub use manifest::{LinearSpec, Manifest};

@@ -1,0 +1,666 @@
+//! Deterministic synthetic-artifact builder: everything `make artifacts`
+//! used to require Python for, generated natively from a seeded RNG.
+//!
+//! For a model preset this writes, under `artifacts/<model>/`:
+//!   * `manifest.json` — shapes, linear inventory, graph signatures, and the
+//!     `arch` section the native runtime executes from
+//!   * `weights.fgtn` — scaled-normal initialized parameters
+//!   * `fisher_w.fgtn` — synthetic per-element weight Fisher (positive,
+//!     |w|²-correlated, with per-layer sensitivity spread)
+//!   * `act_fisher.fgtn` — synthetic per-channel activation Fisher
+//!     (heavy-tailed across channels and layers)
+//!   * `act_msq.fgtn` — *measured* mean-square of each linear's input over
+//!     the calibration batches
+//!   * `act_score_quantiles.fgtn` — per-policy global + per-linear quantile
+//!     tables of the activation impact scores, *measured* by running the
+//!     native forward on calibration batches (mirrors compile/calibrate.py)
+//! and, shared at the artifacts root:
+//!   * `corpus.fgtn` — train/valid/test streams of a first-order Markov
+//!     language with Zipfian unigrams and heterogeneous per-state entropy
+//!   * `tasks/*.json` — 4-way cloze suites (easy + hard distractors)
+//!
+//! Scale is deliberately small (a few seconds of CPU for the full set) —
+//! these artifacts exist so the crate's tests, benches, examples, and CLI
+//! run hermetically; the Python pipeline remains available for full-size
+//! runs behind the `pjrt` feature.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::io::tensorfile::{Tensor, TensorFile};
+use crate::model::forward::{forward, Act, ModelArch, NormKind, PosKind};
+use crate::policy::baselines::oe_weighting_for_acts;
+use crate::policy::block_impact_scores;
+use crate::policy::threshold::percentile_sorted;
+use crate::util::{Json, Rng};
+use crate::Result;
+
+/// Tokens reserved as sentence delimiter.
+const BOS: i32 = 0;
+/// Sparse out-degree per Markov state.
+const SUCC: usize = 16;
+/// Shared corpus vocabulary (all presets use it).
+pub const VOCAB: usize = 256;
+
+/// Everything needed to synthesize one model's artifacts.
+#[derive(Debug, Clone)]
+pub struct SynthConfig {
+    pub model: String,
+    pub arch: ModelArch,
+    pub seed: u64,
+    pub batch: usize,
+    pub seq: usize,
+    pub calib_batches: usize,
+}
+
+impl SynthConfig {
+    /// Named presets mirroring the python model families at test scale.
+    pub fn preset(model: &str, seed: u64) -> Result<SynthConfig> {
+        let arch = match model {
+            "tiny-llama" => ModelArch {
+                vocab: VOCAB,
+                d_model: 96,
+                n_layers: 2,
+                n_heads: 3,
+                d_ff: 256,
+                act: Act::SwiGlu,
+                norm: NormKind::Rms,
+                pos: PosKind::Rope,
+                max_seq: 128,
+            },
+            "tiny-llama-l" => ModelArch {
+                vocab: VOCAB,
+                d_model: 128,
+                n_layers: 3,
+                n_heads: 4,
+                d_ff: 320,
+                act: Act::SwiGlu,
+                norm: NormKind::Rms,
+                pos: PosKind::Rope,
+                max_seq: 128,
+            },
+            "tiny-gpt" => ModelArch {
+                vocab: VOCAB,
+                d_model: 64,
+                n_layers: 2,
+                n_heads: 2,
+                d_ff: 128,
+                act: Act::Gelu,
+                norm: NormKind::LayerNorm,
+                pos: PosKind::Learned,
+                max_seq: 128,
+            },
+            "tiny-gpt-l" => ModelArch {
+                vocab: VOCAB,
+                d_model: 96,
+                n_layers: 3,
+                n_heads: 3,
+                d_ff: 192,
+                act: Act::Gelu,
+                norm: NormKind::LayerNorm,
+                pos: PosKind::Learned,
+                max_seq: 128,
+            },
+            "tiny-nemotron" => ModelArch {
+                vocab: VOCAB,
+                d_model: 80,
+                n_layers: 2,
+                n_heads: 5,
+                d_ff: 160,
+                act: Act::Relu2,
+                norm: NormKind::Rms,
+                pos: PosKind::Rope,
+                max_seq: 128,
+            },
+            other => anyhow::bail!(
+                "no synthetic preset for model '{other}' \
+                 (have tiny-llama, tiny-llama-l, tiny-gpt, tiny-gpt-l, tiny-nemotron)"
+            ),
+        };
+        Ok(SynthConfig {
+            model: model.to_string(),
+            arch,
+            seed,
+            batch: 4,
+            seq: 64,
+            calib_batches: 4,
+        })
+    }
+}
+
+/// Build the shared corpus + tasks (if absent) and one model's artifacts
+/// (if absent). Returns true when anything was written.
+pub fn ensure_model(artifacts: &Path, model: &str, seed: u64) -> Result<bool> {
+    let mut wrote = false;
+    if !artifacts.join("corpus.fgtn").exists() {
+        build_corpus(artifacts)?;
+        wrote = true;
+    }
+    // Probe the *last*-written suite so an interrupted build self-repairs
+    // (build_tasks writes cloze_easy.json first, cloze_hard.json last).
+    if !artifacts.join("tasks").join("cloze_hard.json").exists() {
+        build_tasks(artifacts, seed)?;
+        wrote = true;
+    }
+    if !artifacts.join(model).join("manifest.json").exists() {
+        let cfg = SynthConfig::preset(model, seed)?;
+        build_model(artifacts, &cfg)?;
+        wrote = true;
+    }
+    Ok(wrote)
+}
+
+/// Build the default test set: corpus + tasks + tiny-llama.
+pub fn build_default(artifacts: &Path) -> Result<()> {
+    ensure_model(artifacts, "tiny-llama", 42)?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Corpus
+// ---------------------------------------------------------------------------
+
+/// First-order Markov language with Zipfian unigram bias and per-state
+/// entropy spread (the heterogeneity the sensitivity policies feed on).
+pub struct Markov {
+    vocab: usize,
+    succ: Vec<[i32; SUCC]>,
+    cum: Vec<[f32; SUCC]>,
+}
+
+impl Markov {
+    pub fn new(vocab: usize, rng: &mut Rng) -> Markov {
+        // Zipf cumulative over non-BOS tokens for successor candidate draws.
+        let mut zipf = Vec::with_capacity(vocab - 1);
+        let mut total = 0.0f64;
+        for r in 1..vocab {
+            total += 1.0 / (r as f64).powf(1.05);
+            zipf.push(total);
+        }
+        let draw_zipf = |rng: &mut Rng| -> i32 {
+            let u = rng.f64() * total;
+            let mut lo = 0usize;
+            let mut hi = zipf.len() - 1;
+            while lo < hi {
+                let mid = (lo + hi) / 2;
+                if zipf[mid] < u {
+                    lo = mid + 1;
+                } else {
+                    hi = mid;
+                }
+            }
+            (lo + 1) as i32
+        };
+
+        let mut succ = Vec::with_capacity(vocab);
+        let mut cum = Vec::with_capacity(vocab);
+        for _ in 0..vocab {
+            let mut cand = [0i32; SUCC];
+            let mut n = 0usize;
+            let mut attempts = 0usize;
+            while n < SUCC && attempts < SUCC * 20 {
+                attempts += 1;
+                let c = draw_zipf(rng);
+                if !cand[..n].contains(&c) {
+                    cand[n] = c;
+                    n += 1;
+                }
+            }
+            let mut fill = 1i32;
+            while n < SUCC {
+                if !cand[..n].contains(&fill) {
+                    cand[n] = fill;
+                    n += 1;
+                }
+                fill += 1;
+            }
+            // Heavy-tailed transition weights: some states near-deterministic,
+            // others near-uniform.
+            let sigma = 0.3 + 2.7 * rng.f64();
+            let mut w = [0.0f32; SUCC];
+            let mut t = 0.0f32;
+            for wi in w.iter_mut() {
+                *wi = (rng.normal() * sigma).exp() as f32;
+                t += *wi;
+            }
+            let mut c = [0.0f32; SUCC];
+            let mut acc = 0.0f32;
+            for i in 0..SUCC {
+                acc += w[i] / t;
+                c[i] = acc;
+            }
+            c[SUCC - 1] = 1.0;
+            succ.push(cand);
+            cum.push(c);
+        }
+        Markov { vocab, succ, cum }
+    }
+
+    /// Sample a BOS-delimited token stream.
+    pub fn sample(&self, n: usize, rng: &mut Rng) -> Vec<i32> {
+        let mut out = Vec::with_capacity(n);
+        let mut state = BOS as usize;
+        let mut remaining = 0usize;
+        for _ in 0..n {
+            if remaining == 0 {
+                out.push(BOS);
+                state = BOS as usize;
+                remaining = 4 + rng.below(40);
+                continue;
+            }
+            let u = rng.f32();
+            let c = &self.cum[state];
+            let mut j = 0usize;
+            while j + 1 < SUCC && c[j] < u {
+                j += 1;
+            }
+            state = self.succ[state][j] as usize;
+            debug_assert!(state > 0 && state < self.vocab);
+            out.push(state as i32);
+            remaining -= 1;
+        }
+        out
+    }
+}
+
+/// Write `corpus.fgtn` with train/valid/test splits (disjoint RNG streams).
+pub fn build_corpus(artifacts: &Path) -> Result<()> {
+    std::fs::create_dir_all(artifacts)?;
+    let mut structure_rng = Rng::new(0xC0_0051);
+    let markov = Markov::new(VOCAB, &mut structure_rng);
+    let mut tf = TensorFile::new();
+    for (name, n, seed) in
+        [("train", 65_536usize, 1u64), ("valid", 8_192, 2), ("test", 16_384, 3)]
+    {
+        let mut rng = Rng::new(seed);
+        let stream = markov.sample(n, &mut rng);
+        tf.insert(name, Tensor::i32(vec![n], stream));
+    }
+    tf.save(artifacts.join("corpus.fgtn"))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Tasks
+// ---------------------------------------------------------------------------
+
+/// Write the 4-way cloze suites under `tasks/` (easy + hard distractors),
+/// mirroring `data.py::make_cloze_suite` at test scale.
+pub fn build_tasks(artifacts: &Path, seed: u64) -> Result<()> {
+    let tasks_dir = artifacts.join("tasks");
+    std::fs::create_dir_all(&tasks_dir)?;
+    let mut structure_rng = Rng::new(0xC0_0051);
+    let markov = Markov::new(VOCAB, &mut structure_rng);
+    let mut stream_rng = Rng::new(4);
+    let stream = markov.sample(16_384, &mut stream_rng);
+
+    for (name, hard) in [("cloze_easy", false), ("cloze_hard", true)] {
+        let mut rng = Rng::new(seed ^ if hard { 0xBAD } else { 0x600D });
+        let (ctx_len, cont_len, n_items) = (16usize, 8usize, 32usize);
+        let span = stream.len() - ctx_len - cont_len - 1;
+        let mut items = Vec::with_capacity(n_items);
+        for _ in 0..n_items {
+            let i = rng.below(span);
+            let ctx = &stream[i..i + ctx_len];
+            let truth = stream[i + ctx_len..i + ctx_len + cont_len].to_vec();
+            let mut opts: Vec<Vec<i32>> = vec![truth.clone()];
+            for _ in 0..3 {
+                if hard {
+                    // Corrupt ~2 tokens of the truth: off-manifold but close.
+                    let mut cont = truth.clone();
+                    let mut flipped = false;
+                    for c in cont.iter_mut() {
+                        if rng.f64() < 2.0 / cont_len as f64 {
+                            *c = (1 + rng.below(VOCAB - 1)) as i32;
+                            flipped = true;
+                        }
+                    }
+                    if !flipped {
+                        let j = rng.below(cont_len);
+                        cont[j] = (1 + rng.below(VOCAB - 1)) as i32;
+                    }
+                    opts.push(cont);
+                } else {
+                    // A Markov walk from an unrelated random state.
+                    let mut walk_rng = rng.split();
+                    let mut w = markov.sample(cont_len + 8, &mut walk_rng);
+                    w.retain(|&t| t != BOS);
+                    w.truncate(cont_len);
+                    while w.len() < cont_len {
+                        w.push((1 + rng.below(VOCAB - 1)) as i32);
+                    }
+                    opts.push(w);
+                }
+            }
+            // Shuffle options; record where the truth landed.
+            let mut order = [0usize, 1, 2, 3];
+            for j in (1..4).rev() {
+                order.swap(j, rng.below(j + 1));
+            }
+            let answer = order.iter().position(|&o| o == 0).unwrap();
+            let item = Json::Obj(BTreeMap::from([
+                ("context".to_string(), json_i32(ctx)),
+                (
+                    "options".to_string(),
+                    Json::Arr(order.iter().map(|&o| json_i32(&opts[o])).collect()),
+                ),
+                ("answer".to_string(), Json::Num(answer as f64)),
+            ]));
+            items.push(item);
+        }
+        let suite = Json::Obj(BTreeMap::from([
+            ("name".to_string(), Json::Str(name.to_string())),
+            ("ctx_len".to_string(), Json::Num(ctx_len as f64)),
+            ("cont_len".to_string(), Json::Num(cont_len as f64)),
+            ("items".to_string(), Json::Arr(items)),
+        ]));
+        std::fs::write(tasks_dir.join(format!("{name}.json")), suite.to_string())?;
+    }
+    Ok(())
+}
+
+fn json_i32(v: &[i32]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn json_strs(v: &[String]) -> Json {
+    Json::Arr(v.iter().map(|s| Json::Str(s.clone())).collect())
+}
+
+// ---------------------------------------------------------------------------
+// Model artifacts
+// ---------------------------------------------------------------------------
+
+/// Build one model's full artifact directory.
+pub fn build_model(artifacts: &Path, cfg: &SynthConfig) -> Result<()> {
+    let arch = &cfg.arch;
+    anyhow::ensure!(arch.vocab == VOCAB, "presets share the corpus vocabulary");
+    let mdir = artifacts.join(&cfg.model);
+    std::fs::create_dir_all(&mdir)?;
+
+    // --- weights (scaled-normal init, model.py::init_params style) ---
+    let mut rng = Rng::new(cfg.seed);
+    let resid = 1.0 / (2.0 * arch.n_layers as f32).sqrt();
+    let mut weights = TensorFile::new();
+    for name in arch.param_names() {
+        let shape = arch.param_shape(&name);
+        let len: usize = shape.iter().product();
+        let data = if name.ends_with(".b") {
+            vec![0.0f32; len]
+        } else if name.ends_with("norm1") || name.ends_with("norm2") || name == "final_norm" {
+            vec![1.0f32; len]
+        } else if name.ends_with(".w") {
+            let r = if name.contains("o_proj") || name.contains("fc2") { resid } else { 1.0 };
+            let std = 0.05 * r * (256.0 / shape[0] as f32).sqrt();
+            rng.normal_vec(len, std)
+        } else {
+            // embeddings — a little hotter than python's 0.02 so the tied
+            // logits carry visible structure at this tiny scale
+            rng.normal_vec(len, 0.05)
+        };
+        weights.insert(&name, Tensor::f32(shape, data));
+    }
+    weights.save(mdir.join("weights.fgtn"))?;
+
+    let linears = arch.linears();
+
+    // --- synthetic weight Fisher: positive, |w|²-correlated, with a
+    //     per-layer sensitivity spread so the global threshold has work ---
+    let mut fisher_rng = Rng::new(cfg.seed ^ 0xF15E);
+    let mut fisher_w = TensorFile::new();
+    for spec in &linears {
+        let w = weights.get(&format!("{}.w", spec.name))?.as_f32()?;
+        let lambda = (fisher_rng.normal() * 1.2).exp() as f32;
+        let data: Vec<f32> = w
+            .iter()
+            .map(|&v| lambda * (v * v + 1e-6) * (fisher_rng.normal() * 0.5).exp() as f32)
+            .collect();
+        fisher_w.insert(
+            &format!("{}.w.fisher", spec.name),
+            Tensor::f32(vec![spec.k_in, spec.n_out], data),
+        );
+    }
+    fisher_w.save(mdir.join("fisher_w.fgtn"))?;
+
+    // --- synthetic per-channel activation Fisher (heavy-tailed) ---
+    let mut act_rng = Rng::new(cfg.seed ^ 0xAC7);
+    let mut act_fisher = TensorFile::new();
+    let mut act_fisher_vecs: Vec<Vec<f32>> = Vec::with_capacity(linears.len());
+    for spec in &linears {
+        let lambda = (act_rng.normal() * 1.2).exp() as f32;
+        let data: Vec<f32> =
+            (0..spec.k_in).map(|_| lambda * (act_rng.normal() * 1.5).exp() as f32).collect();
+        act_fisher.insert(&spec.name, Tensor::f32(vec![spec.k_in], data.clone()));
+        act_fisher_vecs.push(data);
+    }
+    act_fisher.save(mdir.join("act_fisher.fgtn"))?;
+
+    // --- calibration: run the native forward, capture every linear input ---
+    let corpus = TensorFile::load(artifacts.join("corpus.fgtn"))?;
+    let train = corpus.get("train")?.as_i32()?;
+    let pnames = arch.param_names();
+    let mut params: std::collections::HashMap<&str, &[f32]> =
+        std::collections::HashMap::with_capacity(pnames.len());
+    for n in &pnames {
+        params.insert(n.as_str(), weights.get(n)?.as_f32()?);
+    }
+    let mut calib_rng = Rng::new(cfg.seed ^ 0xCA11B);
+    let (b, s) = (cfg.batch, cfg.seq);
+    let span = train.len() - s - 1;
+    let mut captures: Vec<Vec<f32>> = vec![Vec::new(); linears.len()];
+    for _ in 0..cfg.calib_batches {
+        let mut tokens = Vec::with_capacity(b * s);
+        for _ in 0..b {
+            let off = calib_rng.below(span);
+            tokens.extend_from_slice(&train[off..off + s]);
+        }
+        let mut caps: Vec<Vec<f32>> = Vec::new();
+        forward(arch, &params, &tokens, b, s, None, Some(&mut caps), false)?;
+        for (acc, c) in captures.iter_mut().zip(caps) {
+            acc.extend_from_slice(&c);
+        }
+    }
+
+    // --- measured act_msq + per-policy impact-score quantile tables ---
+    let mut act_msq = TensorFile::new();
+    let mut quantiles = TensorFile::new();
+    let qs: Vec<f64> = (1..100).map(|i| i as f64 / 100.0).collect();
+    let mut per_policy_local: BTreeMap<&str, Vec<Vec<f32>>> = BTreeMap::new();
+    let mut per_policy_global: BTreeMap<&str, Vec<f64>> = BTreeMap::new();
+    for (i, spec) in linears.iter().enumerate() {
+        let h = &captures[i];
+        let k = spec.k_in;
+        let rows = h.len() / k;
+        anyhow::ensure!(rows > 0, "no calibration captures for {}", spec.name);
+        let mut msq = vec![0.0f32; k];
+        for r in 0..rows {
+            for (m, &v) in msq.iter_mut().zip(&h[r * k..(r + 1) * k]) {
+                *m += v * v;
+            }
+        }
+        for m in msq.iter_mut() {
+            *m /= rows as f32;
+        }
+        act_msq.insert(&spec.name, Tensor::f32(vec![k], msq.clone()));
+
+        let w = weights.get(&format!("{}.w", spec.name))?.as_f32()?;
+        let oe = oe_weighting_for_acts(w, k, spec.n_out);
+        let ones = vec![1.0f32; k];
+        for (pol, cw) in
+            [("fisher", &act_fisher_vecs[i]), ("qe", &ones), ("oe", &oe)]
+        {
+            let mut scores = block_impact_scores(h, k, cw, None);
+            scores.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let local: Vec<f32> =
+                qs.iter().map(|&q| percentile_sorted(&scores, q) as f32).collect();
+            per_policy_local.entry(pol).or_default().push(local);
+            per_policy_global.entry(pol).or_default().extend(scores);
+        }
+    }
+    for (pol, all_scores) in per_policy_global.iter_mut() {
+        all_scores.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let global: Vec<f32> =
+            qs.iter().map(|&q| percentile_sorted(all_scores, q) as f32).collect();
+        quantiles.insert(&format!("{pol}.global"), Tensor::f32(vec![99], global));
+        let local = &per_policy_local[pol];
+        let flat: Vec<f32> = local.iter().flatten().copied().collect();
+        quantiles.insert(
+            &format!("{pol}.local"),
+            Tensor::f32(vec![linears.len(), 99], flat),
+        );
+    }
+    act_msq.save(mdir.join("act_msq.fgtn"))?;
+    quantiles.save(mdir.join("act_score_quantiles.fgtn"))?;
+
+    // --- manifest (incl. the arch section + graph signatures) ---
+    let manifest = manifest_json(cfg, &linears);
+    std::fs::write(mdir.join("manifest.json"), manifest.to_string())?;
+    Ok(())
+}
+
+fn manifest_json(cfg: &SynthConfig, linears: &[crate::io::LinearSpec]) -> Json {
+    let arch = &cfg.arch;
+    let pnames = arch.param_names();
+    let mut shapes = BTreeMap::new();
+    for n in &pnames {
+        shapes.insert(
+            n.clone(),
+            Json::Arr(arch.param_shape(n).iter().map(|&d| Json::Num(d as f64)).collect()),
+        );
+    }
+    let lin_arr = Json::Arr(
+        linears
+            .iter()
+            .map(|l| {
+                Json::Obj(BTreeMap::from([
+                    ("name".to_string(), Json::Str(l.name.clone())),
+                    ("layer".to_string(), Json::Num(l.layer as f64)),
+                    ("kind".to_string(), Json::Str(l.kind.clone())),
+                    ("k_in".to_string(), Json::Num(l.k_in as f64)),
+                    ("n_out".to_string(), Json::Num(l.n_out as f64)),
+                ]))
+            })
+            .collect(),
+    );
+    let aw_args: Vec<String> =
+        linears.iter().map(|l| format!("act_weight:{}", l.name)).collect();
+    let graph = |args: Vec<String>, outputs: Vec<String>| {
+        Json::Obj(BTreeMap::from([
+            ("args".to_string(), json_strs(&args)),
+            ("outputs".to_string(), json_strs(&outputs)),
+        ]))
+    };
+    let mut fq_args = vec!["tokens".to_string(), "mask".to_string()];
+    fq_args.extend(pnames.clone());
+    fq_args.extend(aw_args.clone());
+    fq_args.push("thresholds".to_string());
+    let mut fr_args = vec!["tokens".to_string(), "mask".to_string()];
+    fr_args.extend(pnames.clone());
+    let mut lg_args = vec!["tokens".to_string()];
+    lg_args.extend(pnames.clone());
+    lg_args.extend(aw_args);
+    lg_args.push("thresholds".to_string());
+    let graphs = Json::Obj(BTreeMap::from([
+        (
+            "fwd_quant".to_string(),
+            graph(
+                fq_args,
+                vec!["nll_sum[B]".into(), "ntok[B]".into(), "fp8_frac[NL]".into()],
+            ),
+        ),
+        (
+            "fwd_ref".to_string(),
+            graph(fr_args, vec!["nll_sum[B]".into(), "ntok[B]".into()]),
+        ),
+        (
+            "logits_quant".to_string(),
+            graph(lg_args, vec!["last_logits[B,V]".into()]),
+        ),
+    ]));
+    Json::Obj(BTreeMap::from([
+        ("name".to_string(), Json::Str(cfg.model.clone())),
+        ("batch".to_string(), Json::Num(cfg.batch as f64)),
+        ("seq".to_string(), Json::Num(cfg.seq as f64)),
+        ("vocab".to_string(), Json::Num(arch.vocab as f64)),
+        ("num_linears".to_string(), Json::Num(linears.len() as f64)),
+        ("param_names".to_string(), json_strs(&pnames)),
+        ("param_shapes".to_string(), Json::Obj(shapes)),
+        ("linears".to_string(), lin_arr),
+        ("graphs".to_string(), graphs),
+        ("arch".to_string(), arch.to_json()),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("fgmp_synth_{name}"));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn corpus_is_deterministic_and_in_vocab() {
+        let d = tmp("corpus");
+        build_corpus(&d).unwrap();
+        let c1 = TensorFile::load(d.join("corpus.fgtn")).unwrap();
+        build_corpus(&d).unwrap();
+        let c2 = TensorFile::load(d.join("corpus.fgtn")).unwrap();
+        for split in ["train", "valid", "test"] {
+            let s1 = c1.get(split).unwrap().as_i32().unwrap();
+            assert_eq!(s1, c2.get(split).unwrap().as_i32().unwrap(), "{split} deterministic");
+            assert!(s1.iter().all(|&t| (0..VOCAB as i32).contains(&t)));
+            assert!(s1.contains(&BOS));
+        }
+    }
+
+    #[test]
+    fn markov_has_structure() {
+        // Per-state successor sets are sparse: the conditional distribution
+        // after a fixed token concentrates on ≤ SUCC values.
+        let mut rng = Rng::new(0xC0_0051);
+        let markov = Markov::new(VOCAB, &mut rng);
+        let mut srng = Rng::new(9);
+        let stream = markov.sample(20_000, &mut srng);
+        // Probe the most frequent non-BOS token: it recurs thousands of
+        // times, so its observed successor set is well sampled.
+        let mut counts = vec![0usize; VOCAB];
+        for &t in &stream {
+            counts[t as usize] += 1;
+        }
+        let probe = (1..VOCAB).max_by_key(|&t| counts[t]).unwrap() as i32;
+        let mut nexts = std::collections::BTreeSet::new();
+        for w in stream.windows(2) {
+            if w[0] == probe && w[1] != BOS {
+                nexts.insert(w[1]);
+            }
+        }
+        assert!(!nexts.is_empty() && nexts.len() <= SUCC, "got {} successors", nexts.len());
+    }
+
+    #[test]
+    fn unknown_preset_errors() {
+        assert!(SynthConfig::preset("mega-llama", 1).is_err());
+    }
+
+    #[test]
+    fn tasks_have_valid_answers() {
+        let d = tmp("tasks");
+        build_tasks(&d, 7).unwrap();
+        for name in ["cloze_easy", "cloze_hard"] {
+            let s = crate::eval::tasks::TaskSuite::load(
+                d.join("tasks").join(format!("{name}.json")),
+            )
+            .unwrap();
+            assert_eq!(s.items.len(), 32);
+            for it in &s.items {
+                assert_eq!(it.options.len(), 4);
+                assert!(it.answer < 4);
+                assert_eq!(it.context.len(), s.ctx_len);
+                assert!(it.options.iter().all(|o| o.len() == s.cont_len));
+            }
+        }
+    }
+}

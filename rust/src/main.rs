@@ -14,10 +14,11 @@ use fgmp::eval::{run_sweep, Evaluator};
 use fgmp::hwsim::area::AreaModel;
 use fgmp::hwsim::energy::EnergyModel;
 use fgmp::hwsim::memory::weight_memory_report;
+use fgmp::io::synth;
 use fgmp::model::{ModelArtifacts, QuantConfig, QuantizedModel, RatioSpec};
 use fgmp::policy::{Policy, ThresholdMode};
 use fgmp::quant::Precision;
-use fgmp::runtime::Runtime;
+use fgmp::runtime::{ExecSpec, GraphKind, Runtime};
 use fgmp::Result;
 
 /// Hand-rolled CLI (offline build: no clap; DESIGN.md SSDeps).
@@ -36,6 +37,7 @@ fgmp — FGMP mixed-precision quantization coordinator
 USAGE: fgmp [--artifacts DIR] [--model NAME] <command> [--flag value ...]
 
 COMMANDS
+  synth      [--seed 42]         build deterministic synthetic artifacts
   quantize   --fp4 0.7 --policy fisher|qe|oe [--no-clip] [--local-threshold]
   eval       --fp4 0.7 --policy P [--no-clip] [--local-threshold] --batches 16
   sweep      --fp4 0.9,0.8,0.7,0.5,0.3,0.1 --policy P [--no-clip] [--local-threshold] --batches 8
@@ -43,6 +45,10 @@ COMMANDS
   hwsim
   report     --linear blk0.fc1 --fp4 0.9 --rows 24
   serve      --fp4 0.7 --requests 64
+
+Commands that need artifacts synthesize them on first use when the model
+directory is missing (hermetic default). Point --artifacts at a directory
+produced by the Python pipeline to evaluate real exports instead.
 ";
 
 impl Cli {
@@ -124,9 +130,41 @@ fn mk_config(fp4: f64, policy: &str, no_clip: bool, local: bool) -> QuantConfig 
     }
 }
 
+/// Synthesize artifacts for the selected model when absent (and say so).
+fn ensure_artifacts(cli: &Cli) -> Result<()> {
+    let seed = cli.usize("seed", 42) as u64;
+    let dir = std::path::Path::new(&cli.artifacts);
+    if synth::ensure_model(dir, &cli.model, seed)? {
+        println!(
+            "(synthesized artifacts for {} under {} — seed {seed})",
+            cli.model, cli.artifacts
+        );
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let cli = Cli::parse()?;
+    // Only provision artifacts for commands that need them — and only after
+    // the command name is known-good (a typo must not cost a synth run).
+    if matches!(
+        cli.cmd.as_str(),
+        "quantize" | "eval" | "sweep" | "tasks" | "report" | "serve"
+    ) {
+        ensure_artifacts(&cli)?;
+    }
     match cli.cmd.as_str() {
+        "synth" => {
+            let seed = cli.usize("seed", 42) as u64;
+            let dir = std::path::Path::new(&cli.artifacts);
+            let wrote = synth::ensure_model(dir, &cli.model, seed)?;
+            println!(
+                "{} artifacts for {} under {} (seed {seed})",
+                if wrote { "built" } else { "kept existing" },
+                cli.model,
+                cli.artifacts
+            );
+        }
         "quantize" => {
             let arts = ModelArtifacts::load(format!("{}/{}", cli.artifacts, cli.model))?;
             let cfg = mk_config(cli.f64("fp4", 0.7), &cli.str("policy", "fisher"),
@@ -259,10 +297,8 @@ fn cmd_serve(cli: &Cli, fp4: f64, requests: usize) -> Result<()> {
     let qm = QuantizedModel::quantize(&ev.arts, &cfg)?;
     let fwd_tail = ev.quant_arg_tail(&cfg, &qm)?;
     // logits graph: same tail but no mask arg (tokens, params, aw, thr).
-    let fwd_hlo = std::path::PathBuf::from(
-        format!("{}/{}/fwd_quant.hlo.txt", cli.artifacts, cli.model));
-    let logits_hlo = std::path::PathBuf::from(
-        format!("{}/{}/logits_quant.hlo.txt", cli.artifacts, cli.model));
+    let fwd_spec = ExecSpec::new(&cli.artifacts, &cli.model, GraphKind::FwdQuant);
+    let logits_spec = ExecSpec::new(&cli.artifacts, &cli.model, GraphKind::LogitsQuant);
     let logits_tail = fwd_tail.clone();
     let shapes = qm.layer_profiles(&ev.arts.manifest, ev.batch * ev.seq, &[]);
 
@@ -275,7 +311,7 @@ fn cmd_serve(cli: &Cli, fp4: f64, requests: usize) -> Result<()> {
     };
     let windows = ev.eval_windows(requests.div_ceil(ev.batch));
     let seq = ev.seq;
-    let server = Server::start(scfg, fwd_hlo, fwd_tail, logits_hlo, logits_tail)?;
+    let server = Server::start(scfg, fwd_spec, fwd_tail, logits_spec, logits_tail)?;
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::new();
     let mut id = 0u64;

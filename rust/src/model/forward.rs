@@ -1,0 +1,919 @@
+//! Pure-Rust reference forward pass for the tiny transformer families.
+//!
+//! This is the native sibling of `python/compile/model.py`: embed → per-block
+//! (norm → fused-QKV attention → norm → MLP) → final norm → tied LM head,
+//! with every linear layer optionally routed through the FGMP activation
+//! quantizer (the PPU, paper §4.2) exactly as `ref.fgmp_matmul_ref` does —
+//! per 16-block impact scores against a threshold select FP8 vs NVFP4
+//! round-trips, and the realized FP8 block fractions come back as in-graph
+//! counters. Weights enter *already round-tripped* (the offline pipeline in
+//! [`super::weights`] owns weight-side FGMP + SW-Clip), norms / embeddings /
+//! attention internals stay in high precision — the paper's scope.
+//!
+//! The implementation is deterministic: parallelism ([`par_map`]) is over
+//! independent output rows, each accumulated serially, so results do not
+//! depend on thread scheduling.
+
+use std::collections::HashMap;
+
+use crate::io::manifest::{LinearSpec, Manifest};
+use crate::policy::impact_score_block;
+use crate::quant::{nvfp4::nvfp4_roundtrip_block, nvfp4_scale, quant_e4m3};
+use crate::util::{par_map, Json};
+use crate::{Result, BLOCK};
+
+/// MLP activation family (mirrors `model.py`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    /// SwiGLU: FC1 fuses gate+up (2·d_ff outputs), silu(gate) ⊙ up.
+    SwiGlu,
+    /// GELU (tanh approximation, as `jax.nn.gelu`'s default).
+    Gelu,
+    /// Squared ReLU (Nemotron-style).
+    Relu2,
+}
+
+/// Normalization family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NormKind {
+    Rms,
+    LayerNorm,
+}
+
+/// Positional-encoding family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PosKind {
+    Rope,
+    Learned,
+}
+
+/// Architecture descriptor — enough to rebuild the forward graph natively.
+/// Serialized into `manifest.json` under the `arch` key by the synthetic
+/// artifact builder; inferred from parameter shapes for older manifests.
+#[derive(Debug, Clone)]
+pub struct ModelArch {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub act: Act,
+    pub norm: NormKind,
+    pub pos: PosKind,
+    pub max_seq: usize,
+}
+
+impl ModelArch {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// FC1 output width (SwiGLU fuses gate+up into one matmul).
+    pub fn fc1_out(&self) -> usize {
+        if self.act == Act::SwiGlu {
+            2 * self.d_ff
+        } else {
+            self.d_ff
+        }
+    }
+
+    /// The linear-layer inventory, in forward-execution order (= the order
+    /// `model.py` threads them and the manifest records them).
+    pub fn linears(&self) -> Vec<LinearSpec> {
+        let d = self.d_model;
+        let mut out = Vec::with_capacity(4 * self.n_layers);
+        for l in 0..self.n_layers {
+            out.push(spec(format!("blk{l}.qkv_proj"), l, "qkv_proj", d, 3 * d));
+            out.push(spec(format!("blk{l}.o_proj"), l, "o_proj", d, d));
+            out.push(spec(format!("blk{l}.fc1"), l, "fc1", d, self.fc1_out()));
+            out.push(spec(format!("blk{l}.fc2"), l, "fc2", self.d_ff, d));
+        }
+        out
+    }
+
+    /// Ordered parameter list — this order is the graph argument order.
+    pub fn param_names(&self) -> Vec<String> {
+        let mut names = vec!["embed".to_string()];
+        if self.pos == PosKind::Learned {
+            names.push("pos_embed".into());
+        }
+        for l in 0..self.n_layers {
+            names.push(format!("blk{l}.norm1"));
+            names.push(format!("blk{l}.qkv_proj.w"));
+            names.push(format!("blk{l}.o_proj.w"));
+            names.push(format!("blk{l}.norm2"));
+            names.push(format!("blk{l}.fc1.w"));
+            names.push(format!("blk{l}.fc2.w"));
+            if self.norm == NormKind::LayerNorm {
+                names.push(format!("blk{l}.norm1.b"));
+                names.push(format!("blk{l}.norm2.b"));
+            }
+        }
+        names.push("final_norm".into());
+        if self.norm == NormKind::LayerNorm {
+            names.push("final_norm.b".into());
+        }
+        names
+    }
+
+    pub fn param_shape(&self, name: &str) -> Vec<usize> {
+        let d = self.d_model;
+        if name == "embed" {
+            return vec![self.vocab, d];
+        }
+        if name == "pos_embed" {
+            return vec![self.max_seq, d];
+        }
+        if name.ends_with("qkv_proj.w") {
+            return vec![d, 3 * d];
+        }
+        if name.ends_with("o_proj.w") {
+            return vec![d, d];
+        }
+        if name.ends_with("fc1.w") {
+            return vec![d, self.fc1_out()];
+        }
+        if name.ends_with("fc2.w") {
+            return vec![self.d_ff, d];
+        }
+        vec![d] // norms and biases
+    }
+
+    /// Serialize for the manifest's `arch` section.
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("vocab".into(), Json::Num(self.vocab as f64));
+        m.insert("d_model".into(), Json::Num(self.d_model as f64));
+        m.insert("n_layers".into(), Json::Num(self.n_layers as f64));
+        m.insert("n_heads".into(), Json::Num(self.n_heads as f64));
+        m.insert("d_ff".into(), Json::Num(self.d_ff as f64));
+        let act = match self.act {
+            Act::SwiGlu => "swiglu",
+            Act::Gelu => "gelu",
+            Act::Relu2 => "relu2",
+        };
+        m.insert("act".into(), Json::Str(act.into()));
+        let norm = match self.norm {
+            NormKind::Rms => "rms",
+            NormKind::LayerNorm => "ln",
+        };
+        m.insert("norm".into(), Json::Str(norm.into()));
+        let pos = match self.pos {
+            PosKind::Rope => "rope",
+            PosKind::Learned => "learned",
+        };
+        m.insert("pos".into(), Json::Str(pos.into()));
+        m.insert("max_seq".into(), Json::Num(self.max_seq as f64));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let act = match v.get("act")?.as_str()? {
+            "swiglu" => Act::SwiGlu,
+            "gelu" => Act::Gelu,
+            "relu2" => Act::Relu2,
+            other => anyhow::bail!("unknown act '{other}'"),
+        };
+        let norm = match v.get("norm")?.as_str()? {
+            "rms" => NormKind::Rms,
+            "ln" => NormKind::LayerNorm,
+            other => anyhow::bail!("unknown norm '{other}'"),
+        };
+        let pos = match v.get("pos")?.as_str()? {
+            "rope" => PosKind::Rope,
+            "learned" => PosKind::Learned,
+            other => anyhow::bail!("unknown pos '{other}'"),
+        };
+        Ok(ModelArch {
+            vocab: v.get("vocab")?.as_usize()?,
+            d_model: v.get("d_model")?.as_usize()?,
+            n_layers: v.get("n_layers")?.as_usize()?,
+            n_heads: v.get("n_heads")?.as_usize()?,
+            d_ff: v.get("d_ff")?.as_usize()?,
+            act,
+            norm,
+            pos,
+            max_seq: v.get("max_seq")?.as_usize()?,
+        })
+    }
+
+    /// Best-effort reconstruction from parameter shapes, for manifests
+    /// exported before the `arch` section existed (the python AOT path).
+    /// Heads are not recoverable from shapes; assume 64-wide heads when the
+    /// width divides evenly (the Llama convention), else 4 heads.
+    pub fn infer(man: &Manifest) -> Result<Self> {
+        let embed = man
+            .param_shapes
+            .get("embed")
+            .ok_or_else(|| anyhow::anyhow!("manifest has no 'embed' shape"))?;
+        anyhow::ensure!(embed.len() == 2, "embed shape {embed:?}");
+        let (vocab, d_model) = (embed[0], embed[1]);
+        let n_layers = man.linears.iter().map(|l| l.layer + 1).max().unwrap_or(0);
+        anyhow::ensure!(n_layers > 0, "manifest lists no linear layers");
+        let fc2 = man.linear("blk0.fc2")?;
+        let fc1 = man.linear("blk0.fc1")?;
+        let d_ff = fc2.k_in;
+        let norm = if man.param_shapes.contains_key("final_norm.b") {
+            NormKind::LayerNorm
+        } else {
+            NormKind::Rms
+        };
+        let pos = if man.param_shapes.contains_key("pos_embed") {
+            PosKind::Learned
+        } else {
+            PosKind::Rope
+        };
+        let act = if fc1.n_out == 2 * d_ff {
+            Act::SwiGlu
+        } else if norm == NormKind::LayerNorm {
+            Act::Gelu
+        } else {
+            Act::Relu2
+        };
+        let n_heads = if d_model % 64 == 0 { d_model / 64 } else { 4 };
+        // Head count is a guess — wrong heads silently change attention
+        // partitioning and the RoPE half-width, so be loud about it.
+        eprintln!(
+            "WARNING: manifest for '{}' has no 'arch' section; native runtime \
+             inferred n_heads={n_heads} from d_model={d_model} — results are \
+             wrong if the exporter used a different head count (re-export with \
+             an arch section, or use the pjrt backend)",
+            man.name
+        );
+        let max_seq = man
+            .param_shapes
+            .get("pos_embed")
+            .map(|s| s[0])
+            .unwrap_or(4 * man.seq.max(1));
+        Ok(ModelArch {
+            vocab,
+            d_model,
+            n_layers,
+            n_heads,
+            d_ff,
+            act,
+            norm,
+            pos,
+            max_seq,
+        })
+    }
+}
+
+fn spec(name: String, layer: usize, kind: &str, k_in: usize, n_out: usize) -> LinearSpec {
+    LinearSpec { name, layer, kind: kind.to_string(), k_in, n_out }
+}
+
+/// Per-linear activation-quantization inputs (the fwd_quant graph tail).
+pub struct QuantInputs<'a> {
+    /// Per-linear per-input-channel weighting, each of length `k_in`.
+    pub act_weights: Vec<&'a [f32]>,
+    /// Per-linear impact-score thresholds.
+    pub thresholds: &'a [f32],
+}
+
+/// Forward result.
+pub struct ForwardOut {
+    /// Row-major logits: `(B·S, V)`, or `(B, V)` when `last_only`.
+    pub logits: Vec<f32>,
+    /// Realized per-linear activation FP8 block fractions (quant mode only).
+    pub act_fp8: Vec<f32>,
+}
+
+/// Dense `y = x·w` for row-major `x (M,K)`, `w (K,N)`; parallel over rows.
+pub fn matmul(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w.len(), k * n);
+    let rows: Vec<usize> = (0..m).collect();
+    let out = par_map(&rows, |&mi| {
+        let mut acc = vec![0.0f32; n];
+        let xr = &x[mi * k..(mi + 1) * k];
+        for (ki, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wr = &w[ki * n..(ki + 1) * n];
+            for (a, &wv) in acc.iter_mut().zip(wr) {
+                *a += xv * wv;
+            }
+        }
+        acc
+    });
+    flatten(out, m * n)
+}
+
+/// `y = x·wᵀ` for `x (M,K)` against row-major `wt (N,K)` — the tied LM head.
+pub fn matmul_transposed(x: &[f32], wt: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(wt.len(), n * k);
+    let rows: Vec<usize> = (0..m).collect();
+    let out = par_map(&rows, |&mi| {
+        let xr = &x[mi * k..(mi + 1) * k];
+        let mut acc = vec![0.0f32; n];
+        for (ni, a) in acc.iter_mut().enumerate() {
+            let wr = &wt[ni * k..(ni + 1) * k];
+            let mut s = 0.0f32;
+            for (xv, wv) in xr.iter().zip(wr) {
+                s += xv * wv;
+            }
+            *a = s;
+        }
+        acc
+    });
+    flatten(out, m * n)
+}
+
+/// FGMP-quantized matmul: round-trip each activation row block-wise to mixed
+/// FP8/NVFP4 per the impact score vs `threshold` (the PPU), then multiply
+/// against already-round-tripped weights. Returns `(y, fp8_block_fraction)` —
+/// the native equivalent of `ref.fgmp_matmul_ref`.
+pub fn fgmp_matmul(
+    x: &[f32],
+    w: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    chan_weight: &[f32],
+    threshold: f32,
+) -> (Vec<f32>, f32) {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w.len(), k * n);
+    assert_eq!(chan_weight.len(), k);
+    assert_eq!(k % BLOCK, 0);
+    let blocks_per_row = k / BLOCK;
+    let rows: Vec<usize> = (0..m).collect();
+    let out = par_map(&rows, |&mi| {
+        let xr = &x[mi * k..(mi + 1) * k];
+        let mut xq = vec![0.0f32; k];
+        let mut n_fp8 = 0usize;
+        for bi in 0..blocks_per_row {
+            let off = bi * BLOCK;
+            let xb = &xr[off..off + BLOCK];
+            let cb = &chan_weight[off..off + BLOCK];
+            let score = impact_score_block(xb, cb);
+            if score > threshold as f64 {
+                n_fp8 += 1;
+                for (o, &v) in xq[off..off + BLOCK].iter_mut().zip(xb) {
+                    *o = quant_e4m3(v);
+                }
+            } else {
+                let absmax = xb.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+                let s = nvfp4_scale(absmax);
+                nvfp4_roundtrip_block(xb, s, &mut xq[off..off + BLOCK]);
+            }
+        }
+        let mut acc = vec![0.0f32; n];
+        for (ki, &xv) in xq.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wr = &w[ki * n..(ki + 1) * n];
+            for (a, &wv) in acc.iter_mut().zip(wr) {
+                *a += xv * wv;
+            }
+        }
+        (acc, n_fp8)
+    });
+    let total_fp8: usize = out.iter().map(|(_, f)| *f).sum();
+    let mut flat = Vec::with_capacity(m * n);
+    for (row, _) in out {
+        flat.extend_from_slice(&row);
+    }
+    let frac = total_fp8 as f32 / (m * blocks_per_row).max(1) as f32;
+    (flat, frac)
+}
+
+fn flatten(rows: Vec<Vec<f32>>, cap: usize) -> Vec<f32> {
+    let mut flat = Vec::with_capacity(cap);
+    for r in rows {
+        flat.extend_from_slice(&r);
+    }
+    flat
+}
+
+fn norm_rows(kind: NormKind, x: &[f32], d: usize, g: &[f32], b: Option<&[f32]>) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    for (xr, or) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        match kind {
+            NormKind::Rms => {
+                let ss: f32 = xr.iter().map(|v| v * v).sum::<f32>() / d as f32;
+                let inv = 1.0 / (ss + 1e-5).sqrt();
+                for i in 0..d {
+                    or[i] = xr[i] * inv * g[i];
+                }
+            }
+            NormKind::LayerNorm => {
+                let mu: f32 = xr.iter().sum::<f32>() / d as f32;
+                let var: f32 = xr.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+                let inv = 1.0 / (var + 1e-5).sqrt();
+                let bias = b.expect("layer-norm bias");
+                for i in 0..d {
+                    or[i] = (xr[i] - mu) * inv * g[i] + bias[i];
+                }
+            }
+        }
+    }
+    out
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+fn gelu_tanh(x: f32) -> f32 {
+    // jax.nn.gelu(approximate=True)
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+fn mlp_act(act: Act, f1: &[f32], m: usize, fc1_out: usize, d_ff: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * d_ff];
+    match act {
+        Act::SwiGlu => {
+            for mi in 0..m {
+                let row = &f1[mi * fc1_out..(mi + 1) * fc1_out];
+                let o = &mut out[mi * d_ff..(mi + 1) * d_ff];
+                for i in 0..d_ff {
+                    o[i] = silu(row[i]) * row[d_ff + i];
+                }
+            }
+        }
+        Act::Gelu => {
+            for (o, &v) in out.iter_mut().zip(f1) {
+                *o = gelu_tanh(v);
+            }
+        }
+        Act::Relu2 => {
+            for (o, &v) in out.iter_mut().zip(f1) {
+                let r = v.max(0.0);
+                *o = r * r;
+            }
+        }
+    }
+    out
+}
+
+/// Rotary tables: `(cos, sin)`, each `s × half`, matching `model.py::_rope`.
+fn rope_tables(s: usize, half: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut cos = vec![0.0f32; s * half];
+    let mut sin = vec![0.0f32; s * half];
+    for t in 0..s {
+        for i in 0..half {
+            let freq = (-(10000.0f32.ln()) * i as f32 / half as f32).exp();
+            let ang = t as f32 * freq;
+            cos[t * half + i] = ang.cos();
+            sin[t * half + i] = ang.sin();
+        }
+    }
+    (cos, sin)
+}
+
+/// Causal multi-head attention over fused qkv rows `(B·S, 3D)` → `(B·S, D)`.
+fn attention(arch: &ModelArch, qkv: &[f32], b: usize, s: usize) -> Vec<f32> {
+    let d = arch.d_model;
+    let h = arch.n_heads;
+    let dh = arch.head_dim();
+    let half = dh / 2;
+    let rope = arch.pos == PosKind::Rope;
+    let (cos, sin) = if rope { rope_tables(s, half) } else { (Vec::new(), Vec::new()) };
+    let scale = 1.0 / (dh as f32).sqrt();
+
+    let pairs: Vec<(usize, usize)> =
+        (0..b).flat_map(|bi| (0..h).map(move |hi| (bi, hi))).collect();
+    let heads = par_map(&pairs, |&(bi, hi)| {
+        // Gather this head's q/k/v as contiguous (S, dh) panels.
+        let mut q = vec![0.0f32; s * dh];
+        let mut k = vec![0.0f32; s * dh];
+        let mut v = vec![0.0f32; s * dh];
+        for si in 0..s {
+            let row = &qkv[(bi * s + si) * 3 * d..(bi * s + si + 1) * 3 * d];
+            q[si * dh..(si + 1) * dh].copy_from_slice(&row[hi * dh..(hi + 1) * dh]);
+            k[si * dh..(si + 1) * dh].copy_from_slice(&row[d + hi * dh..d + (hi + 1) * dh]);
+            v[si * dh..(si + 1) * dh].copy_from_slice(&row[2 * d + hi * dh..2 * d + (hi + 1) * dh]);
+        }
+        if rope {
+            for si in 0..s {
+                rotate(&mut q[si * dh..(si + 1) * dh], &cos[si * half..], &sin[si * half..], half);
+                rotate(&mut k[si * dh..(si + 1) * dh], &cos[si * half..], &sin[si * half..], half);
+            }
+        }
+        let mut o = vec![0.0f32; s * dh];
+        let mut sc = vec![0.0f32; s];
+        for si in 0..s {
+            let qr = &q[si * dh..(si + 1) * dh];
+            // Causal: only keys 0..=si contribute (the -1e30 mask + softmax
+            // of model.py zeroes the rest exactly).
+            let mut mx = f32::NEG_INFINITY;
+            for (j, scj) in sc.iter_mut().enumerate().take(si + 1) {
+                let kr = &k[j * dh..(j + 1) * dh];
+                let mut dot = 0.0f32;
+                for (a, b2) in qr.iter().zip(kr) {
+                    dot += a * b2;
+                }
+                *scj = dot * scale;
+                mx = mx.max(*scj);
+            }
+            let mut z = 0.0f32;
+            for scj in sc.iter_mut().take(si + 1) {
+                *scj = (*scj - mx).exp();
+                z += *scj;
+            }
+            let or = &mut o[si * dh..(si + 1) * dh];
+            for j in 0..=si {
+                let p = sc[j] / z;
+                if p == 0.0 {
+                    continue;
+                }
+                let vr = &v[j * dh..(j + 1) * dh];
+                for (a, &vv) in or.iter_mut().zip(vr) {
+                    *a += p * vv;
+                }
+            }
+        }
+        o
+    });
+
+    // Scatter head panels back into (B·S, D).
+    let mut out = vec![0.0f32; b * s * d];
+    for (&(bi, hi), o) in pairs.iter().zip(&heads) {
+        for si in 0..s {
+            out[(bi * s + si) * d + hi * dh..(bi * s + si) * d + (hi + 1) * dh]
+                .copy_from_slice(&o[si * dh..(si + 1) * dh]);
+        }
+    }
+    out
+}
+
+/// Rotate one head row in place (rope half-split convention of model.py).
+fn rotate(x: &mut [f32], cos: &[f32], sin: &[f32], half: usize) {
+    for i in 0..half {
+        let (a, b) = (x[i], x[i + half]);
+        x[i] = a * cos[i] - b * sin[i];
+        x[i + half] = a * sin[i] + b * cos[i];
+    }
+}
+
+/// One linear application in execution order: optional calibration capture,
+/// then the plain or FGMP-quantized matmul (`li` indexes the inventory).
+#[allow(clippy::too_many_arguments)]
+fn apply_linear(
+    linears: &[LinearSpec],
+    params: &HashMap<&str, &[f32]>,
+    quant: Option<&QuantInputs<'_>>,
+    h: &[f32],
+    rows: usize,
+    li: usize,
+    fracs: &mut [f32],
+    capture: &mut Option<&mut Vec<Vec<f32>>>,
+) -> Result<Vec<f32>> {
+    let spec = &linears[li];
+    let wname = format!("{}.w", spec.name);
+    let w = params
+        .get(wname.as_str())
+        .copied()
+        .ok_or_else(|| anyhow::anyhow!("missing parameter '{wname}'"))?;
+    anyhow::ensure!(
+        w.len() == spec.k_in * spec.n_out,
+        "weight {} size {} != {}x{}",
+        spec.name,
+        w.len(),
+        spec.k_in,
+        spec.n_out
+    );
+    if let Some(cap) = capture.as_mut() {
+        cap.push(h.to_vec());
+    }
+    match quant {
+        None => Ok(matmul(h, w, rows, spec.k_in, spec.n_out)),
+        Some(q) => {
+            anyhow::ensure!(
+                q.act_weights[li].len() == spec.k_in,
+                "act weighting {} length",
+                spec.name
+            );
+            let (y, frac) =
+                fgmp_matmul(h, w, rows, spec.k_in, spec.n_out, q.act_weights[li], q.thresholds[li]);
+            fracs[li] = frac;
+            Ok(y)
+        }
+    }
+}
+
+/// Run the transformer. `params` maps manifest parameter names to row-major
+/// buffers; `quant` switches every linear onto the FGMP datapath; `capture`
+/// (when given) receives each linear's input `(rows·k)` in execution order —
+/// the calibration tap. `last_only` returns only the final position's logits
+/// per batch row (the serving/generation graph).
+pub fn forward(
+    arch: &ModelArch,
+    params: &HashMap<&str, &[f32]>,
+    tokens: &[i32],
+    b: usize,
+    s: usize,
+    quant: Option<&QuantInputs<'_>>,
+    mut capture: Option<&mut Vec<Vec<f32>>>,
+    last_only: bool,
+) -> Result<ForwardOut> {
+    let d = arch.d_model;
+    let m = b * s;
+    anyhow::ensure!(tokens.len() == m, "tokens length {} != B*S {}", tokens.len(), m);
+    let get = |name: &str| -> Result<&[f32]> {
+        params
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("missing parameter '{name}'"))
+    };
+
+    let embed = get("embed")?;
+    anyhow::ensure!(embed.len() == arch.vocab * d, "embed size mismatch");
+    let mut x = vec![0.0f32; m * d];
+    for (i, &t) in tokens.iter().enumerate() {
+        let t = t as usize;
+        anyhow::ensure!(t < arch.vocab, "token {t} out of vocab {}", arch.vocab);
+        x[i * d..(i + 1) * d].copy_from_slice(&embed[t * d..(t + 1) * d]);
+    }
+    if arch.pos == PosKind::Learned {
+        let pe = get("pos_embed")?;
+        anyhow::ensure!(pe.len() >= s * d, "pos_embed shorter than sequence");
+        for bi in 0..b {
+            for si in 0..s {
+                let xr = &mut x[(bi * s + si) * d..(bi * s + si + 1) * d];
+                for (a, &p) in xr.iter_mut().zip(&pe[si * d..(si + 1) * d]) {
+                    *a += p;
+                }
+            }
+        }
+    }
+
+    let linears = arch.linears();
+    if let Some(q) = quant {
+        anyhow::ensure!(q.act_weights.len() == linears.len(), "act_weights count");
+        anyhow::ensure!(q.thresholds.len() == linears.len(), "thresholds count");
+    }
+    let mut fracs = vec![0.0f32; if quant.is_some() { linears.len() } else { 0 }];
+    let mut li = 0usize;
+
+    for l in 0..arch.n_layers {
+        let g1 = get(&format!("blk{l}.norm1"))?;
+        let b1 = if arch.norm == NormKind::LayerNorm {
+            Some(get(&format!("blk{l}.norm1.b"))?)
+        } else {
+            None
+        };
+        let h = norm_rows(arch.norm, &x, d, g1, b1);
+        let qkv = apply_linear(&linears, params, quant, &h, m, li, &mut fracs, &mut capture)?;
+        li += 1;
+        let attn = attention(arch, &qkv, b, s);
+        let o = apply_linear(&linears, params, quant, &attn, m, li, &mut fracs, &mut capture)?;
+        li += 1;
+        for (a, &v) in x.iter_mut().zip(&o) {
+            *a += v;
+        }
+
+        let g2 = get(&format!("blk{l}.norm2"))?;
+        let b2 = if arch.norm == NormKind::LayerNorm {
+            Some(get(&format!("blk{l}.norm2.b"))?)
+        } else {
+            None
+        };
+        let h = norm_rows(arch.norm, &x, d, g2, b2);
+        let f1 = apply_linear(&linears, params, quant, &h, m, li, &mut fracs, &mut capture)?;
+        li += 1;
+        let act = mlp_act(arch.act, &f1, m, arch.fc1_out(), arch.d_ff);
+        let f2 = apply_linear(&linears, params, quant, &act, m, li, &mut fracs, &mut capture)?;
+        li += 1;
+        for (a, &v) in x.iter_mut().zip(&f2) {
+            *a += v;
+        }
+    }
+
+    let gf = get("final_norm")?;
+    let bf = if arch.norm == NormKind::LayerNorm {
+        Some(get("final_norm.b")?)
+    } else {
+        None
+    };
+    let xn = norm_rows(arch.norm, &x, d, gf, bf);
+
+    let logits = if last_only {
+        // Only each batch row's final position feeds the LM head.
+        let mut lastx = vec![0.0f32; b * d];
+        for bi in 0..b {
+            let src = (bi * s + s - 1) * d;
+            lastx[bi * d..(bi + 1) * d].copy_from_slice(&xn[src..src + d]);
+        }
+        matmul_transposed(&lastx, embed, b, d, arch.vocab)
+    } else {
+        matmul_transposed(&xn, embed, m, d, arch.vocab)
+    };
+
+    Ok(ForwardOut { logits, act_fp8: fracs })
+}
+
+/// Masked next-token NLL per batch row — `model.py::nll` semantics: position
+/// `t ≥ 1` is scored iff `mask[t] = 1`, predicting `tokens[t]` from the
+/// logits at `t−1`. Returns `(nll_sum (B,), ntok (B,))`.
+pub fn masked_nll(
+    logits: &[f32],
+    tokens: &[i32],
+    mask: &[f32],
+    b: usize,
+    s: usize,
+    vocab: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(logits.len(), b * s * vocab);
+    assert_eq!(tokens.len(), b * s);
+    assert_eq!(mask.len(), b * s);
+    let rows: Vec<usize> = (0..b).collect();
+    let per_row = par_map(&rows, |&bi| {
+        let mut nll = 0.0f32;
+        let mut ntok = 0.0f32;
+        for t in 0..s - 1 {
+            let mw = mask[bi * s + t + 1];
+            if mw == 0.0 {
+                continue;
+            }
+            let row = &logits[(bi * s + t) * vocab..(bi * s + t + 1) * vocab];
+            let tgt = tokens[bi * s + t + 1] as usize;
+            let mx = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+            let z: f32 = row.iter().map(|&v| (v - mx).exp()).sum();
+            let logp = row[tgt] - mx - z.ln();
+            nll -= logp * mw;
+            ntok += mw;
+        }
+        (nll, ntok)
+    });
+    (per_row.iter().map(|r| r.0).collect(), per_row.iter().map(|r| r.1).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn tiny_arch() -> ModelArch {
+        ModelArch {
+            vocab: 32,
+            d_model: 32,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 32,
+            act: Act::SwiGlu,
+            norm: NormKind::Rms,
+            pos: PosKind::Rope,
+            max_seq: 16,
+        }
+    }
+
+    fn random_params(arch: &ModelArch, seed: u64) -> Vec<(String, Vec<f32>)> {
+        let mut rng = Rng::new(seed);
+        arch.param_names()
+            .iter()
+            .map(|n| {
+                let shape = arch.param_shape(n);
+                let len: usize = shape.iter().product();
+                let data = if n.contains("norm") {
+                    vec![1.0f32; len]
+                } else {
+                    rng.normal_vec(len, 0.05)
+                };
+                (n.clone(), data)
+            })
+            .collect()
+    }
+
+    fn param_map<'a>(params: &'a [(String, Vec<f32>)]) -> HashMap<&'a str, &'a [f32]> {
+        params.iter().map(|(n, v)| (n.as_str(), v.as_slice())).collect()
+    }
+
+    #[test]
+    fn matmul_matches_manual() {
+        // (2,3)·(3,2)
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let w = [1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let y = matmul(&x, &w, 2, 3, 2);
+        assert_eq!(y, vec![4.0, 5.0, 10.0, 11.0]);
+        // transposed variant: same product via wt = wᵀ (2,3)
+        let wt = [1.0, 0.0, 1.0, 0.0, 1.0, 1.0];
+        let yt = matmul_transposed(&x, &wt, 2, 3, 2);
+        assert_eq!(yt, y);
+    }
+
+    #[test]
+    fn fgmp_matmul_extreme_thresholds() {
+        let mut rng = Rng::new(3);
+        let (m, k, n) = (4, BLOCK * 2, 8);
+        let x = rng.normal_vec(m * k, 2.0);
+        let w = rng.normal_vec(k * n, 0.2);
+        let cw = vec![1.0f32; k];
+        // threshold −1: every block FP8 (scores ≥ 0)
+        let (y8, f8) = fgmp_matmul(&x, &w, m, k, n, &cw, -1.0);
+        assert_eq!(f8, 1.0);
+        // matches an e4m3 pre-roundtrip + plain matmul
+        let xq: Vec<f32> = x.iter().map(|&v| crate::quant::quant_e4m3(v)).collect();
+        let want = matmul(&xq, &w, m, k, n);
+        assert_eq!(y8, want);
+        // +inf: every block NVFP4
+        let (_, f4) = fgmp_matmul(&x, &w, m, k, n, &cw, f32::INFINITY);
+        assert_eq!(f4, 0.0);
+    }
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        let arch = tiny_arch();
+        let params = random_params(&arch, 7);
+        let pm = param_map(&params);
+        let (b, s) = (2, 8);
+        let tokens: Vec<i32> = (0..b * s).map(|i| (i % arch.vocab) as i32).collect();
+        let out = forward(&arch, &pm, &tokens, b, s, None, None, false).unwrap();
+        assert_eq!(out.logits.len(), b * s * arch.vocab);
+        assert!(out.logits.iter().all(|v| v.is_finite()));
+        assert!(out.act_fp8.is_empty());
+        let last = forward(&arch, &pm, &tokens, b, s, None, None, true).unwrap();
+        assert_eq!(last.logits.len(), b * arch.vocab);
+        // last_only rows equal the corresponding full-logit rows
+        for bi in 0..b {
+            let full = &out.logits[(bi * s + s - 1) * arch.vocab..(bi * s + s) * arch.vocab];
+            let lo = &last.logits[bi * arch.vocab..(bi + 1) * arch.vocab];
+            assert_eq!(full, lo);
+        }
+    }
+
+    #[test]
+    fn forward_is_causal() {
+        // Changing the final token must not change earlier positions' logits.
+        let arch = tiny_arch();
+        let params = random_params(&arch, 11);
+        let pm = param_map(&params);
+        let (b, s) = (1, 8);
+        let mut tokens: Vec<i32> = (0..s as i32).collect();
+        let out1 = forward(&arch, &pm, &tokens, b, s, None, None, false).unwrap();
+        tokens[s - 1] = 31;
+        let out2 = forward(&arch, &pm, &tokens, b, s, None, None, false).unwrap();
+        let v = arch.vocab;
+        assert_eq!(&out1.logits[..(s - 1) * v], &out2.logits[..(s - 1) * v]);
+        assert_ne!(&out1.logits[(s - 1) * v..], &out2.logits[(s - 1) * v..]);
+    }
+
+    #[test]
+    fn quant_mode_counts_fractions_and_perturbs() {
+        let arch = tiny_arch();
+        let params = random_params(&arch, 13);
+        let pm = param_map(&params);
+        let (b, s) = (2, 8);
+        let tokens: Vec<i32> = (0..b * s).map(|i| ((i * 5) % arch.vocab) as i32).collect();
+        let linears = arch.linears();
+        let aw: Vec<Vec<f32>> = linears.iter().map(|l| vec![1.0f32; l.k_in]).collect();
+        let awr: Vec<&[f32]> = aw.iter().map(|v| v.as_slice()).collect();
+        let thr_fp8 = vec![-1.0f32; linears.len()];
+        let q = QuantInputs { act_weights: awr.clone(), thresholds: &thr_fp8 };
+        let out8 = forward(&arch, &pm, &tokens, b, s, Some(&q), None, false).unwrap();
+        assert!(out8.act_fp8.iter().all(|&f| f == 1.0));
+        let thr_fp4 = vec![f32::INFINITY; linears.len()];
+        let q4 = QuantInputs { act_weights: awr, thresholds: &thr_fp4 };
+        let out4 = forward(&arch, &pm, &tokens, b, s, Some(&q4), None, false).unwrap();
+        assert!(out4.act_fp8.iter().all(|&f| f == 0.0));
+        assert_ne!(out8.logits, out4.logits);
+    }
+
+    #[test]
+    fn capture_collects_linear_inputs() {
+        let arch = tiny_arch();
+        let params = random_params(&arch, 17);
+        let pm = param_map(&params);
+        let (b, s) = (1, 4);
+        let tokens = vec![1i32; b * s];
+        let mut caps: Vec<Vec<f32>> = Vec::new();
+        forward(&arch, &pm, &tokens, b, s, None, Some(&mut caps), false).unwrap();
+        let linears = arch.linears();
+        assert_eq!(caps.len(), linears.len());
+        for (c, l) in caps.iter().zip(&linears) {
+            assert_eq!(c.len(), b * s * l.k_in, "capture width for {}", l.name);
+        }
+    }
+
+    #[test]
+    fn nll_masks_and_normalizes() {
+        // Uniform logits → nll per scored token = ln(V).
+        let (b, s, v) = (1, 4, 8);
+        let logits = vec![0.0f32; b * s * v];
+        let tokens = vec![3i32; b * s];
+        let mut mask = vec![1.0f32; b * s];
+        mask[1] = 0.0; // drop one scored position
+        let (nll, ntok) = masked_nll(&logits, &tokens, &mask, b, s, v);
+        assert_eq!(ntok[0], 2.0); // positions 2 and 3 (t=1 masked, t=0 never scored)
+        let want = 2.0 * (v as f32).ln();
+        assert!((nll[0] - want).abs() < 1e-5, "{} vs {want}", nll[0]);
+    }
+
+    #[test]
+    fn arch_roundtrips_through_json() {
+        let arch = tiny_arch();
+        let j = arch.to_json();
+        let back = ModelArch::from_json(&j).unwrap();
+        assert_eq!(back.d_model, arch.d_model);
+        assert_eq!(back.act, arch.act);
+        assert_eq!(back.norm, arch.norm);
+        assert_eq!(back.pos, arch.pos);
+        assert_eq!(back.param_names(), arch.param_names());
+    }
+}

@@ -1,8 +1,11 @@
 //! Model-level plumbing: artifact loading, the offline weight-quantization
-//! pipeline (policy → SW-Clip → packing), and quantization configuration.
+//! pipeline (policy → SW-Clip → packing), quantization configuration, and
+//! the pure-Rust reference forward pass the native runtime executes.
 
 pub mod config;
+pub mod forward;
 pub mod weights;
 
 pub use config::{QuantConfig, RatioSpec};
+pub use forward::{Act, ModelArch, NormKind, PosKind};
 pub use weights::{ModelArtifacts, QuantizedModel};

@@ -1,0 +1,70 @@
+//! Backend-neutral host-side tensor arguments.
+//!
+//! `ArgValue` is what the evaluator and the serving coordinator traffic in:
+//! plain shaped `Vec<f32>` / `Vec<i32>` buffers. The native backend consumes
+//! them directly; the PJRT backend (feature `pjrt`) converts them to
+//! `xla::Literal`s in the feature-gated `literal` module.
+
+/// A host-side argument value.
+#[derive(Debug, Clone)]
+pub enum ArgValue {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl ArgValue {
+    pub fn scalar_f32(v: f32) -> Self {
+        ArgValue::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn vec_f32(data: Vec<f32>) -> Self {
+        ArgValue::F32 { shape: vec![data.len()], data }
+    }
+
+    /// Logical element count.
+    pub fn elements(&self) -> usize {
+        match self {
+            ArgValue::F32 { data, .. } => data.len(),
+            ArgValue::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            ArgValue::F32 { shape, .. } => shape,
+            ArgValue::I32 { shape, .. } => shape,
+        }
+    }
+
+    /// Borrow as f32 data, or error with the argument's position context.
+    pub fn as_f32(&self) -> crate::Result<&[f32]> {
+        match self {
+            ArgValue::F32 { data, .. } => Ok(data),
+            ArgValue::I32 { .. } => anyhow::bail!("expected f32 argument, got i32"),
+        }
+    }
+
+    /// Borrow as i32 data.
+    pub fn as_i32(&self) -> crate::Result<&[i32]> {
+        match self {
+            ArgValue::I32 { data, .. } => Ok(data),
+            ArgValue::F32 { .. } => anyhow::bail!("expected i32 argument, got f32"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_and_accessors() {
+        let s = ArgValue::scalar_f32(2.5);
+        assert_eq!(s.elements(), 1);
+        assert!(s.shape().is_empty());
+        let v = ArgValue::vec_f32(vec![1.0, 2.0]);
+        assert_eq!(v.shape(), &[2]);
+        assert_eq!(v.as_f32().unwrap(), &[1.0, 2.0]);
+        assert!(v.as_i32().is_err());
+    }
+}

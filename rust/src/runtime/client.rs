@@ -1,10 +1,14 @@
-//! The PJRT CPU client and compiled-executable handles.
+//! The PJRT CPU client and compiled-executable handles (feature `pjrt`).
 //!
-//! Interchange is HLO *text* (see python/compile/aot.py and
-//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` reparses
-//! and reassigns instruction ids, sidestepping the 64-bit-id protos that
-//! xla_extension 0.5.1 rejects. Graphs are lowered with return_tuple=True,
-//! so outputs arrive as one tuple literal we decompose here.
+//! Interchange is HLO *text* (see python/compile/aot.py):
+//! `HloModuleProto::from_text_file` reparses and reassigns instruction ids,
+//! sidestepping the 64-bit-id protos that xla_extension 0.5.1 rejects.
+//! Graphs are lowered with return_tuple=True, so outputs arrive as one tuple
+//! literal we decompose here.
+//!
+//! The `xla` crate is not vendored; compiling with `--features pjrt`
+//! requires supplying it (path override / [patch]). The default build never
+//! touches this module — the native backend covers every test and CLI path.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -13,18 +17,18 @@ use anyhow::Context;
 
 use crate::Result;
 
-use super::literal::ArgValue;
+use super::args::ArgValue;
 
 /// Shared PJRT CPU client.
 #[derive(Clone)]
-pub struct Runtime {
+pub struct PjrtRuntime {
     client: Arc<xla::PjRtClient>,
 }
 
-impl Runtime {
+impl PjrtRuntime {
     pub fn cpu() -> Result<Self> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client: Arc::new(client) })
+        Ok(PjrtRuntime { client: Arc::new(client) })
     }
 
     pub fn platform(&self) -> String {
@@ -32,7 +36,7 @@ impl Runtime {
     }
 
     /// Load + compile an HLO-text file into an executable.
-    pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<Executable> {
+    pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<PjrtExecutable> {
         let path = path.as_ref();
         let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
             .with_context(|| format!("parsing HLO text {}", path.display()))?;
@@ -41,24 +45,19 @@ impl Runtime {
             .client
             .compile(&comp)
             .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(Executable { exe: Arc::new(exe), name: path.display().to_string() })
+        Ok(PjrtExecutable { exe: Arc::new(exe), name: path.display().to_string() })
     }
 }
 
-/// One compiled graph. Cheap to clone; `execute` is synchronous.
+/// One compiled graph. Cheap to clone; `run` is synchronous. Not `Send`
+/// (xla's PJRT handles are Rc-based) — each worker thread builds its own.
 #[derive(Clone)]
-pub struct Executable {
+pub struct PjrtExecutable {
     exe: Arc<xla::PjRtLoadedExecutable>,
     pub name: String,
 }
 
-/// One output tensor, flattened.
-#[derive(Debug, Clone)]
-pub struct OutValue {
-    pub data: Vec<f32>,
-}
-
-impl Executable {
+impl PjrtExecutable {
     /// Execute with host args; returns the flattened f32 elements of each
     /// tuple field (all our graph outputs are f32).
     pub fn run(&self, args: &[ArgValue]) -> Result<Vec<Vec<f32>>> {

@@ -1,29 +1,18 @@
-//! Tensor ⇄ xla::Literal conversion helpers.
+//! Tensor ⇄ xla::Literal conversion helpers (feature `pjrt`).
 
 use xla::Literal;
 
 use crate::Result;
 
-/// A host-side argument value (what the coordinator traffics in).
-#[derive(Debug, Clone)]
-pub enum ArgValue {
-    F32 { shape: Vec<usize>, data: Vec<f32> },
-    I32 { shape: Vec<usize>, data: Vec<i32> },
-}
+use super::args::ArgValue;
 
 impl ArgValue {
+    /// Convert to an XLA literal (pjrt backend only).
     pub fn to_literal(&self) -> Result<Literal> {
         match self {
             ArgValue::F32 { shape, data } => lit_f32(data, shape),
             ArgValue::I32 { shape, data } => lit_i32(data, shape),
         }
-    }
-
-    pub fn scalar_f32(v: f32) -> Self {
-        ArgValue::F32 { shape: vec![], data: vec![v] }
-    }
-    pub fn vec_f32(data: Vec<f32>) -> Self {
-        ArgValue::F32 { shape: vec![data.len()], data }
     }
 }
 

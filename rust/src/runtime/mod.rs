@@ -1,9 +1,160 @@
-//! PJRT runtime: load AOT-compiled HLO text and execute it on the CPU
-//! client. This is the only place the `xla` crate is touched; everything
-//! above works with plain `Vec<f32>`/`Vec<i32>` tensors.
+//! Execution runtimes behind one backend-agnostic API.
+//!
+//! * **native** (default, hermetic) — [`native::NativeGraph`] reruns the
+//!   manifest-described transformer in pure Rust; no HLO files, no PJRT, no
+//!   Python anywhere. This is what `Runtime::cpu()` gives you.
+//! * **pjrt** (feature `pjrt`) — the original XLA path: AOT-lowered HLO text
+//!   compiled by the PJRT CPU client (the feature-gated `client` module).
+//!   Select it at runtime with `FGMP_BACKEND=pjrt` once the feature (and the
+//!   `xla` crate) is compiled in.
+//!
+//! Callers describe *what* to run with an [`ExecSpec`] (artifacts dir, model
+//! name, [`GraphKind`]); the runtime decides *how*. `ExecSpec` is plain data
+//! and crosses threads freely, which is what the serving coordinator's
+//! worker threads rely on.
 
+pub mod args;
+pub mod native;
+
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(feature = "pjrt")]
 pub mod literal;
 
-pub use client::{Executable, Runtime};
-pub use literal::{lit_f32, lit_i32, ArgValue};
+use std::path::{Path, PathBuf};
+
+pub use args::ArgValue;
+#[cfg(feature = "pjrt")]
+pub use client::PjrtRuntime;
+#[cfg(feature = "pjrt")]
+pub use literal::{lit_f32, lit_i32};
+
+use crate::io::Manifest;
+use crate::Result;
+
+/// Which exported graph to run (signatures in `manifest.json`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GraphKind {
+    /// `(tokens, mask, *params, *act_weights, thresholds)` →
+    /// `(nll_sum[B], ntok[B], fp8_frac[NL])`.
+    FwdQuant,
+    /// `(tokens, mask, *params)` → `(nll_sum[B], ntok[B])`.
+    FwdRef,
+    /// `(tokens, *params, *act_weights, thresholds)` → `(last_logits[B,V])`.
+    LogitsQuant,
+}
+
+impl GraphKind {
+    /// Manifest/graph-file stem.
+    pub fn stem(&self) -> &'static str {
+        match self {
+            GraphKind::FwdQuant => "fwd_quant",
+            GraphKind::FwdRef => "fwd_ref",
+            GraphKind::LogitsQuant => "logits_quant",
+        }
+    }
+}
+
+/// A graph to load: where, which model, which kind. Plain data — `Send`,
+/// `Clone` — so coordinator workers can each materialize their own
+/// executable from it.
+#[derive(Debug, Clone)]
+pub struct ExecSpec {
+    pub artifacts: PathBuf,
+    pub model: String,
+    pub kind: GraphKind,
+}
+
+impl ExecSpec {
+    pub fn new(artifacts: impl AsRef<Path>, model: &str, kind: GraphKind) -> Self {
+        ExecSpec { artifacts: artifacts.as_ref().to_path_buf(), model: model.to_string(), kind }
+    }
+
+    /// The model directory holding manifest.json (and HLO text for pjrt).
+    pub fn model_dir(&self) -> PathBuf {
+        self.artifacts.join(&self.model)
+    }
+
+    /// The AOT HLO text path (pjrt backend).
+    pub fn hlo_path(&self) -> PathBuf {
+        self.model_dir().join(format!("{}.hlo.txt", self.kind.stem()))
+    }
+}
+
+/// Backend selector.
+#[derive(Clone)]
+enum Backend {
+    Native,
+    #[cfg(feature = "pjrt")]
+    Pjrt(client::PjrtRuntime),
+}
+
+/// A runtime handle. `cpu()` picks the hermetic native backend unless the
+/// `pjrt` feature is compiled in *and* `FGMP_BACKEND=pjrt` is set.
+#[derive(Clone)]
+pub struct Runtime {
+    backend: Backend,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        #[cfg(feature = "pjrt")]
+        if std::env::var("FGMP_BACKEND").as_deref() == Ok("pjrt") {
+            return Ok(Runtime { backend: Backend::Pjrt(client::PjrtRuntime::cpu()?) });
+        }
+        Ok(Runtime { backend: Backend::Native })
+    }
+
+    /// Force the native backend (tests).
+    pub fn native() -> Self {
+        Runtime { backend: Backend::Native }
+    }
+
+    pub fn platform(&self) -> String {
+        match &self.backend {
+            Backend::Native => "native-cpu".to_string(),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(rt) => rt.platform(),
+        }
+    }
+
+    /// Load one graph of one model.
+    pub fn load_spec(&self, spec: &ExecSpec) -> Result<Executable> {
+        match &self.backend {
+            Backend::Native => {
+                let manifest = Manifest::load(spec.model_dir().join("manifest.json"))?;
+                Ok(Executable::Native(native::NativeGraph::new(manifest, spec.kind)?))
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(rt) => Ok(Executable::Pjrt(rt.load_hlo(spec.hlo_path())?)),
+        }
+    }
+}
+
+/// One loaded graph, whatever the backend. Cheap to clone.
+#[derive(Clone)]
+pub enum Executable {
+    Native(native::NativeGraph),
+    #[cfg(feature = "pjrt")]
+    Pjrt(client::PjrtExecutable),
+}
+
+impl Executable {
+    /// Execute with host args; returns the flattened f32 elements of each
+    /// output tuple field.
+    pub fn run(&self, args: &[ArgValue]) -> Result<Vec<Vec<f32>>> {
+        match self {
+            Executable::Native(g) => g.run(args),
+            #[cfg(feature = "pjrt")]
+            Executable::Pjrt(e) => e.run(args),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        match self {
+            Executable::Native(g) => g.name(),
+            #[cfg(feature = "pjrt")]
+            Executable::Pjrt(e) => &e.name,
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! The hermetic native executor: runs the manifest-described transformer
+//! graphs ([`crate::model::forward`]) directly on host `Vec<f32>` buffers —
+//! no HLO, no PJRT, no Python. Argument order and output tuples match the
+//! AOT graph signatures recorded in `manifest.json`, so the evaluator and
+//! the serving coordinator are backend-agnostic.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::io::Manifest;
+use crate::model::forward::{forward, masked_nll, ModelArch, QuantInputs};
+use crate::Result;
+
+use super::args::ArgValue;
+use super::GraphKind;
+
+/// One native "compiled" graph: the architecture plus the graph kind.
+/// Cheap to clone and `Send` — worker threads share it freely.
+#[derive(Clone)]
+pub struct NativeGraph {
+    manifest: Arc<Manifest>,
+    arch: ModelArch,
+    kind: GraphKind,
+    name: String,
+}
+
+impl NativeGraph {
+    pub fn new(manifest: Manifest, kind: GraphKind) -> Result<Self> {
+        let arch = manifest.arch()?;
+        let expect = arch.linears().len();
+        anyhow::ensure!(
+            manifest.num_linears == expect,
+            "manifest lists {} linears but the {} arch implies {expect}",
+            manifest.num_linears,
+            manifest.name
+        );
+        let name = format!("{}:{}", manifest.name, kind.stem());
+        Ok(NativeGraph { manifest: Arc::new(manifest), arch, kind, name })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with host args; returns the graph's output tuple flattened to
+    /// f32 — exactly the shape contract of the PJRT executables.
+    pub fn run(&self, args: &[ArgValue]) -> Result<Vec<Vec<f32>>> {
+        let man = &self.manifest;
+        let (b, s) = (man.batch, man.seq);
+        let np = man.param_names.len();
+        let nl = man.num_linears;
+        let has_mask = !matches!(self.kind, GraphKind::LogitsQuant);
+        let has_quant = !matches!(self.kind, GraphKind::FwdRef);
+        let expected =
+            1 + usize::from(has_mask) + np + if has_quant { nl + 1 } else { 0 };
+        anyhow::ensure!(
+            args.len() == expected,
+            "{}: got {} args, expected {expected}",
+            self.name,
+            args.len()
+        );
+
+        let tokens = args[0].as_i32()?;
+        anyhow::ensure!(tokens.len() == b * s, "{}: tokens length", self.name);
+        let mask = if has_mask { Some(args[1].as_f32()?) } else { None };
+        let poff = 1 + usize::from(has_mask);
+
+        let mut params: HashMap<&str, &[f32]> = HashMap::with_capacity(np);
+        for (i, pname) in man.param_names.iter().enumerate() {
+            let want: usize = man.param_shapes[pname].iter().product();
+            let a = &args[poff + i];
+            anyhow::ensure!(
+                a.elements() == want,
+                "{}: parameter '{pname}' has {} elements, want {want}",
+                self.name,
+                a.elements()
+            );
+            params.insert(pname.as_str(), a.as_f32()?);
+        }
+
+        let quant = if has_quant {
+            let aw: Vec<&[f32]> = (0..nl)
+                .map(|i| args[poff + np + i].as_f32())
+                .collect::<Result<_>>()?;
+            let thresholds = args[poff + np + nl].as_f32()?;
+            anyhow::ensure!(thresholds.len() == nl, "{}: thresholds length", self.name);
+            Some(QuantInputs { act_weights: aw, thresholds })
+        } else {
+            None
+        };
+
+        let last_only = matches!(self.kind, GraphKind::LogitsQuant);
+        let out = forward(&self.arch, &params, tokens, b, s, quant.as_ref(), None, last_only)?;
+
+        match self.kind {
+            GraphKind::FwdQuant => {
+                let (nll, ntok) =
+                    masked_nll(&out.logits, tokens, mask.unwrap(), b, s, self.arch.vocab);
+                Ok(vec![nll, ntok, out.act_fp8])
+            }
+            GraphKind::FwdRef => {
+                let (nll, ntok) =
+                    masked_nll(&out.logits, tokens, mask.unwrap(), b, s, self.arch.vocab);
+                Ok(vec![nll, ntok])
+            }
+            GraphKind::LogitsQuant => Ok(vec![out.logits]),
+        }
+    }
+}

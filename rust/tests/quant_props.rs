@@ -2,7 +2,7 @@
 //! seeded-RNG harness over many random cases.
 
 use fgmp::policy::{assign_tensor, block_impact_scores, percentile, threshold_for_fp4_fraction};
-use fgmp::quant::nvfp4::nvfp4_roundtrip_block;
+use fgmp::quant::nvfp4::{nvfp4_roundtrip, nvfp4_roundtrip_block};
 use fgmp::quant::{
     fp4::{decode_e2m1, encode_e2m1},
     fp8::{decode_e4m3, encode_e4m3},
@@ -10,6 +10,107 @@ use fgmp::quant::{
 };
 use fgmp::util::Rng;
 use fgmp::BLOCK;
+
+#[test]
+fn nvfp4_roundtrip_idempotent() {
+    // NVFP4 idempotence, stated precisely: re-round-tripping the output
+    // *with the block's scale held* is exactly the identity — the values sit
+    // on the scaled E2M1 lattice. With dynamic-max re-derivation the scale
+    // itself can legitimately shrink when the block max rounded down (the
+    // output's absmax is smaller), so full dynamic double-round-trips are
+    // only identical when the re-derived scale matches; both facets are
+    // pinned here.
+    let mut rng = Rng::new(0x1DE4);
+    let mut rederived_mismatch = 0usize;
+    let n_blocks = 20_000usize;
+    for _ in 0..n_blocks {
+        let mag = 10f64.powf(rng.f64() * 4.0 - 2.0);
+        let x: Vec<f32> = (0..BLOCK).map(|_| (rng.normal() * mag) as f32).collect();
+        let mut once = vec![0.0f32; BLOCK];
+        let s1 = nvfp4_roundtrip(&x, &mut once)[0];
+        // scale-held second pass: exact fixed point
+        let mut held = vec![0.0f32; BLOCK];
+        nvfp4_roundtrip_block(&once, s1, &mut held);
+        assert_eq!(held, once, "scale-held roundtrip must be identity");
+        // dynamic second pass: identity exactly when the scale re-derives
+        let mut twice = vec![0.0f32; BLOCK];
+        let s2 = nvfp4_roundtrip(&once, &mut twice)[0];
+        if s2 == s1 {
+            assert_eq!(twice, once, "same-scale dynamic roundtrip must be identity");
+        } else {
+            rederived_mismatch += 1;
+        }
+    }
+    // Scale re-derivation drift is a rare corner (≈0.4% measured), not the norm.
+    assert!(
+        rederived_mismatch < n_blocks / 20,
+        "scale drift on {rederived_mismatch}/{n_blocks} blocks"
+    );
+}
+
+#[test]
+fn fgmp_tensor_pack_unpack_matches_reference_codecs() {
+    // Pack/unpack round-trip across random mixed FP4/FP8 block patterns:
+    // every FP8 block must decode to the e4m3 round-trip of its input and
+    // every FP4 block to the dynamic-max NVFP4 round-trip — bit-exact.
+    let mut rng = Rng::new(0xFACC);
+    for case in 0..40 {
+        let blocks = 1 + rng.below(80);
+        let mag = 10f64.powf(rng.f64() * 3.0 - 1.0);
+        let data: Vec<f32> =
+            (0..blocks * BLOCK).map(|_| (rng.normal() * mag) as f32).collect();
+        let prec: Vec<Precision> = (0..blocks)
+            .map(|_| if rng.f64() < 0.5 { Precision::Fp8 } else { Precision::Fp4 })
+            .collect();
+        let t = FgmpTensor::pack(&[blocks, BLOCK], &data, &prec, None);
+        assert_eq!(t.n_fp8, prec.iter().filter(|p| **p == Precision::Fp8).count());
+        let back = t.unpack();
+        for (bi, p) in prec.iter().enumerate() {
+            let x = &data[bi * BLOCK..(bi + 1) * BLOCK];
+            let got = &back[bi * BLOCK..(bi + 1) * BLOCK];
+            match p {
+                Precision::Fp8 => {
+                    for (g, &v) in got.iter().zip(x) {
+                        assert_eq!(*g, quant_e4m3(v), "case {case} block {bi} fp8");
+                    }
+                }
+                Precision::Fp4 => {
+                    let mut want = vec![0.0f32; BLOCK];
+                    nvfp4_roundtrip(x, &mut want);
+                    assert_eq!(got, &want[..], "case {case} block {bi} fp4");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn assign_fp8_fraction_monotone_in_threshold() {
+    // assign_tensor's fp8_fraction is non-increasing in the threshold,
+    // across random tensors and random threshold ladders.
+    let mut rng = Rng::new(0x30_0703);
+    for case in 0..20 {
+        let k = BLOCK * (1 + rng.below(8));
+        let rows = 1 + rng.below(32);
+        let data: Vec<f32> = (0..rows * k).map(|_| (rng.normal() * 4.0) as f32).collect();
+        let cw: Vec<f32> = (0..k).map(|_| rng.f32() + 0.01).collect();
+        let mut thresholds: Vec<f64> = (0..12).map(|_| rng.f64() * 1e-1).collect();
+        thresholds.push(f64::NEG_INFINITY);
+        thresholds.push(f64::INFINITY);
+        thresholds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut last = f64::INFINITY;
+        for &t in &thresholds {
+            let a = assign_tensor(&data, k, &cw, None, t);
+            assert!(
+                a.fp8_fraction <= last + 1e-12,
+                "case {case}: fraction rose from {last} to {} at t={t}",
+                a.fp8_fraction
+            );
+            last = a.fp8_fraction;
+        }
+        assert_eq!(last, 0.0, "infinite threshold leaves no FP8 blocks");
+    }
+}
 
 #[test]
 fn codec_roundtrip_idempotent_random() {

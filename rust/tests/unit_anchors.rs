@@ -1,0 +1,68 @@
+//! Integration-level anchors for published-number claims and concurrency
+//! invariants that the rest of the stack silently leans on.
+
+use fgmp::hwsim::datapath::DatapathConfig;
+use fgmp::hwsim::energy::EnergyModel;
+use fgmp::hwsim::ppu::{ppu_balance, ppu_energy_per_op_fj};
+use fgmp::util::par_map;
+
+#[test]
+fn ppu_balance_paper_anchor_4096_cubed() {
+    // Paper §5.4.3: a 4096³ matmul with 16-lane PEs keeps one PPU busy
+    // exactly at the 256-PE point — balanced at 256, stalling at 512,
+    // restored with a second PPU.
+    let cfg = DatapathConfig { lanes: 16, pes: 256, freq_ghz: 1.0 };
+    let b = ppu_balance(&cfg, 4096, 4096, 4096, 1);
+    assert!(b.balanced, "256 PEs per PPU must not stall");
+    assert_eq!(b.max_pes_per_ppu, 256);
+    assert_eq!(b.datapath_cycles, b.ppu_cycles, "equality at the balance point");
+
+    let over = DatapathConfig { lanes: 16, pes: 512, freq_ghz: 1.0 };
+    assert!(!ppu_balance(&over, 4096, 4096, 4096, 1).balanced);
+    assert!(ppu_balance(&over, 4096, 4096, 4096, 2).balanced);
+}
+
+#[test]
+fn ppu_amortization_paper_anchor() {
+    // Paper §5.4.2: 25.7 pJ per output block amortizes to ≈0.20 fJ/op at
+    // K = 4096, improving with deeper reductions.
+    let em = EnergyModel::default();
+    let fj = ppu_energy_per_op_fj(em.e_ppu_block, 4096);
+    assert!((fj - 0.196).abs() < 0.01, "got {fj}");
+    assert!(ppu_energy_per_op_fj(em.e_ppu_block, 8192) < fj);
+}
+
+#[test]
+fn par_map_preserves_input_order_with_oversubscription() {
+    // n far above the worker count: results must still land in input order
+    // (the quantization pipeline and the native matmul both depend on it).
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    let n = workers * 64 + 7;
+    let items: Vec<usize> = (0..n).collect();
+    let out = par_map(&items, |&x| {
+        // stagger completion so late-index items often finish first
+        if x % workers == 0 {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+        x * 3 + 1
+    });
+    assert_eq!(out.len(), n);
+    for (i, &v) in out.iter().enumerate() {
+        assert_eq!(v, i * 3 + 1, "slot {i}");
+    }
+}
+
+#[test]
+fn par_map_nested_inside_par_map_is_safe() {
+    // The native forward calls par_map from within par_map'd work items
+    // (e.g. matmul inside a layer loop driven by tests running in threads);
+    // nested scoped pools must not deadlock or reorder.
+    let outer: Vec<usize> = (0..8).collect();
+    let out = par_map(&outer, |&o| {
+        let inner: Vec<usize> = (0..50).collect();
+        par_map(&inner, |&i| o * 100 + i).iter().sum::<usize>()
+    });
+    for (o, &s) in out.iter().enumerate() {
+        assert_eq!(s, o * 100 * 50 + (0..50).sum::<usize>());
+    }
+}
