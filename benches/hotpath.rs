@@ -1,55 +1,54 @@
-//! Microbenchmarks for the L3 hot paths: codecs, impact scoring, threshold
-//! calibration, SW-Clip, packing, and the hwsim costing pipeline. These
-//! drive the §Perf iteration loop in EXPERIMENTS.md (in-repo bench harness;
-//! DESIGN.md §Deps).
+//! Microbenchmarks for the L3 hot paths: blocked matmul kernels, codecs,
+//! impact scoring, threshold calibration, SW-Clip, packing, and the hwsim
+//! costing pipeline. These drive the §Perf iteration loop in
+//! EXPERIMENTS.md (in-repo bench harness; DESIGN.md §Deps).
 //!
 //!     cargo bench --bench hotpath
+//!
+//! Budget per bench is overridable with `FGMP_BENCH_BUDGET_MS` (CI uses a
+//! short budget); results are also written to `BENCH_micro.json` in the
+//! shared `util::bench` suite format.
 
-use std::time::Duration;
-
+use fgmp::benchsuite::{keep, kernel_benches};
 use fgmp::policy::{block_impact_scores, threshold_for_fp4_fraction};
-use fgmp::quant::{
-    nvfp4::nvfp4_roundtrip, quant_e2m1, quant_e4m3, sw_clip_tensor, FgmpTensor, Precision,
-};
-use fgmp::util::bench::{bench, black_box};
+use fgmp::quant::{quant_e2m1, quant_e4m3, sw_clip_tensor, FgmpTensor, Precision};
+use fgmp::util::bench::{bench, black_box, budget_from_env, BenchSuite};
 use fgmp::util::Rng;
 
-const BUDGET: Duration = Duration::from_millis(400);
-
 fn main() {
+    let budget = budget_from_env(400);
+    let mut suite = BenchSuite::new("micro");
     let mut rng = Rng::new(42);
-    println!("== hotpath microbenchmarks (in-repo harness) ==");
+    println!("== hotpath microbenchmarks (in-repo harness, budget {budget:?}) ==");
 
-    // --- codecs ---
+    // --- shared kernel comparisons (one definition: fgmp::benchsuite) ---
+    kernel_benches(&mut suite, budget);
+
+    // --- scalar codec reductions (historic micro anchors) ---
     let xs = rng.normal_vec(1 << 16, 8.0);
-    let r = bench("quant_e4m3_64k", Some(xs.len() as u64), BUDGET, || {
+    let r = bench("quant_e4m3_64k", Some(xs.len() as u64), budget, || {
         xs.iter().map(|&x| quant_e4m3(black_box(x))).sum::<f32>()
     });
-    println!("{}", r.report());
-    let r = bench("quant_e2m1_64k", Some(xs.len() as u64), BUDGET, || {
+    keep(&mut suite, r);
+    let r = bench("quant_e2m1_64k", Some(xs.len() as u64), budget, || {
         xs.iter().map(|&x| quant_e2m1(black_box(x))).sum::<f32>()
     });
-    println!("{}", r.report());
-    let mut out = vec![0.0f32; xs.len()];
-    let r = bench("nvfp4_roundtrip_64k", Some(xs.len() as u64), BUDGET, || {
-        nvfp4_roundtrip(black_box(&xs), &mut out)
-    });
-    println!("{}", r.report());
+    keep(&mut suite, r);
 
     // --- policy scoring + threshold ---
     let k = 1024;
     let rows = 512;
     let data = rng.normal_vec(rows * k, 4.0);
     let cw: Vec<f32> = (0..k).map(|_| rng.f32().abs() + 0.01).collect();
-    let r = bench("impact_scores_512x1024", Some((rows * k) as u64), BUDGET, || {
+    let r = bench("impact_scores_512x1024", Some((rows * k) as u64), budget, || {
         block_impact_scores(black_box(&data), k, &cw, None)
     });
-    println!("{}", r.report());
+    keep(&mut suite, r);
     let scores = block_impact_scores(&data, k, &cw, None);
-    let r = bench("threshold_percentile_32k", Some(scores.len() as u64), BUDGET, || {
+    let r = bench("threshold_percentile_32k", Some(scores.len() as u64), budget, || {
         threshold_for_fp4_fraction(black_box(&scores), 0.7)
     });
-    println!("{}", r.report());
+    keep(&mut suite, r);
 
     // --- packing + clipping ---
     let rows = 256;
@@ -58,19 +57,19 @@ fn main() {
     let prec: Vec<Precision> = (0..rows * k / 16)
         .map(|i| if i % 10 < 3 { Precision::Fp8 } else { Precision::Fp4 })
         .collect();
-    let r = bench("pack_256x1024", Some((rows * k) as u64), BUDGET, || {
+    let r = bench("pack_256x1024", Some((rows * k) as u64), budget, || {
         FgmpTensor::pack(&[rows, k], black_box(&data), &prec, None)
     });
-    println!("{}", r.report());
+    keep(&mut suite, r);
     let packed = FgmpTensor::pack(&[rows, k], &data, &prec, None);
-    let r = bench("unpack_256x1024", Some((rows * k) as u64), BUDGET, || {
+    let r = bench("unpack_256x1024", Some((rows * k) as u64), budget, || {
         black_box(&packed).unpack()
     });
-    println!("{}", r.report());
-    let r = bench("sw_clip_256x1024", Some((rows * k) as u64), BUDGET, || {
+    keep(&mut suite, r);
+    let r = bench("sw_clip_256x1024", Some((rows * k) as u64), budget, || {
         sw_clip_tensor(black_box(&data), &fisher)
     });
-    println!("{}", r.report());
+    keep(&mut suite, r);
 
     // --- hwsim costing ---
     use fgmp::hwsim::energy::EnergyModel;
@@ -90,25 +89,31 @@ fn main() {
         .collect();
     let dp = DatapathConfig::default();
     let em = EnergyModel::default();
-    let r = bench("model_energy_clustered_128x100", None, BUDGET, || {
+    let r = bench("model_energy_clustered_128x100", None, budget, || {
         model_energy_clustered(&dp, &em, black_box(&profiles), 100)
     });
-    println!("{}", r.report());
+    keep(&mut suite, r);
 
     // --- end-to-end offline quantization (if artifacts exist) ---
     let artifacts = std::env::var("FGMP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     if let Ok(arts) = fgmp::model::ModelArtifacts::load(format!("{artifacts}/tiny-llama")) {
         let cfg = fgmp::model::QuantConfig::fgmp(0.7);
-        let r = bench("quantize_tiny_llama_full", None, Duration::from_secs(3), || {
+        let r = bench("quantize_tiny_llama_full", None, budget, || {
             fgmp::model::QuantizedModel::quantize(black_box(&arts), &cfg).unwrap()
         });
-        println!("{}", r.report());
+        keep(&mut suite, r);
         let cfg_noclip = fgmp::model::QuantConfig { sw_clip: false, ..cfg };
-        let r = bench("quantize_tiny_llama_noclip", None, Duration::from_secs(3), || {
+        let r = bench("quantize_tiny_llama_noclip", None, budget, || {
             fgmp::model::QuantizedModel::quantize(black_box(&arts), &cfg_noclip).unwrap()
         });
-        println!("{}", r.report());
+        keep(&mut suite, r);
     } else {
         println!("(artifacts not found — skipping end-to-end quantize bench)");
+    }
+
+    let out_dir = std::env::var("FGMP_BENCH_OUT").unwrap_or_else(|_| ".".into());
+    match suite.write(&out_dir) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("failed to write BENCH_micro.json: {e}"),
     }
 }

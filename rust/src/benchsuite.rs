@@ -1,0 +1,194 @@
+//! Shared benchmark workloads for the hotpath kernels — one definition of
+//! each named bench (shape, seed, derived metric), used by both the
+//! `fgmp bench` CLI subcommand and `cargo bench --bench hotpath`, so the
+//! two suites and the checked-in CI baseline (`ci/bench-baseline.json`)
+//! cannot drift apart on names or workloads.
+
+use std::time::Duration;
+
+use crate::io::synth::SynthConfig;
+use crate::model::forward::{fgmp_matmul, forward};
+use crate::quant::fp8::quant_e4m3_slice;
+use crate::quant::{nvfp4_roundtrip, quant_e4m3, sw_clip_tensor};
+use crate::util::bench::{bench, black_box, BenchResult, BenchSuite};
+use crate::util::{kernels, Rng};
+
+/// Canonical bench + derived-metric names. `ci/bench-baseline.json` gates
+/// on these strings; the `baseline_gates_on_known_names` test pins the
+/// baseline file to this list, so a rename is a conscious two-sided edit.
+pub mod names {
+    pub const MATMUL_SCALAR: &str = "matmul_scalar_256x512x1536";
+    pub const MATMUL_BLOCKED: &str = "matmul_blocked_256x512x1536";
+    pub const MATMUL_T_SCALAR: &str = "matmul_t_scalar_256x512x256";
+    pub const MATMUL_T_BLOCKED: &str = "matmul_t_blocked_256x512x256";
+    pub const QUANT_E4M3_SCALAR: &str = "quant_e4m3_scalar_64k";
+    pub const QUANT_E4M3_SLICE: &str = "quant_e4m3_slice_64k";
+    pub const NVFP4_ROUNDTRIP: &str = "nvfp4_roundtrip_64k";
+    pub const SW_CLIP: &str = "sw_clip_256x512";
+    pub const FGMP_MATMUL: &str = "fgmp_matmul_256x512x1536";
+    pub const FORWARD_D512: &str = "forward_d512_b1s32";
+
+    pub const SPEEDUP_MATMUL: &str = "speedup_matmul_d512";
+    pub const SPEEDUP_MATMUL_T: &str = "speedup_matmul_t_d512";
+    pub const SPEEDUP_QUANT: &str = "speedup_quant_e4m3";
+
+    pub const ALL: [&str; 10] = [
+        MATMUL_SCALAR,
+        MATMUL_BLOCKED,
+        MATMUL_T_SCALAR,
+        MATMUL_T_BLOCKED,
+        QUANT_E4M3_SCALAR,
+        QUANT_E4M3_SLICE,
+        NVFP4_ROUNDTRIP,
+        SW_CLIP,
+        FGMP_MATMUL,
+        FORWARD_D512,
+    ];
+    pub const ALL_DERIVED: [&str; 3] = [SPEEDUP_MATMUL, SPEEDUP_MATMUL_T, SPEEDUP_QUANT];
+}
+
+/// Print one result and add it to the suite.
+pub fn keep(suite: &mut BenchSuite, r: BenchResult) {
+    println!("{}", r.report());
+    suite.push(r);
+}
+
+/// Record a scalar/fast pair plus the derived min-time speedup under `key`.
+fn pair(suite: &mut BenchSuite, key: &str, scalar: BenchResult, fast: BenchResult) {
+    let s = scalar.min.as_secs_f64() / fast.min.as_secs_f64().max(1e-12);
+    println!("{}", scalar.report());
+    println!("{}", fast.report());
+    println!("  -> {key} {s:.2}x");
+    suite.push(scalar);
+    suite.push(fast);
+    suite.derive(key, s);
+}
+
+/// Blocked-vs-scalar kernel comparisons at the d_model=512 shape class:
+/// the dense matmul, the transposed (LM head) matmul, and the E4M3 slice
+/// quantizer — each fast path against its same-workload scalar sibling —
+/// plus the NVFP4 tensor round-trip.
+pub fn kernel_benches(suite: &mut BenchSuite, budget: Duration) {
+    let mut rng = Rng::new(42);
+
+    // Dense matmul at the small-llama qkv shape.
+    let (m, k, n) = (256usize, 512usize, 1536usize);
+    let x = rng.normal_vec(m * k, 1.0);
+    let w = rng.normal_vec(k * n, 0.05);
+    let macs = (m * k * n) as u64;
+    let scalar = bench(names::MATMUL_SCALAR, Some(macs), budget, || {
+        kernels::matmul_scalar(black_box(&x), &w, m, k, n)
+    });
+    let fast = bench(names::MATMUL_BLOCKED, Some(macs), budget, || {
+        kernels::matmul(black_box(&x), &w, m, k, n)
+    });
+    pair(suite, names::SPEEDUP_MATMUL, scalar, fast);
+
+    // Transposed matmul (the tied LM head).
+    let (tm, tk, tn) = (256usize, 512usize, 256usize);
+    let xt = rng.normal_vec(tm * tk, 1.0);
+    let wt = rng.normal_vec(tn * tk, 0.05);
+    let tmacs = (tm * tk * tn) as u64;
+    let scalar = bench(names::MATMUL_T_SCALAR, Some(tmacs), budget, || {
+        kernels::matmul_transposed_scalar(black_box(&xt), &wt, tm, tk, tn)
+    });
+    let fast = bench(names::MATMUL_T_BLOCKED, Some(tmacs), budget, || {
+        kernels::matmul_transposed(black_box(&xt), &wt, tm, tk, tn)
+    });
+    pair(suite, names::SPEEDUP_MATMUL_T, scalar, fast);
+
+    // Quantizer: element-at-a-time scalar codec vs the branch-free slice
+    // kernel, both writing the same output buffer (like-for-like bodies,
+    // so the ratio measures the codec lanes, not a reduction chain).
+    let xs = rng.normal_vec(1 << 16, 8.0);
+    let mut qout = vec![0.0f32; xs.len()];
+    let scalar = bench(names::QUANT_E4M3_SCALAR, Some(xs.len() as u64), budget, || {
+        for (o, &v) in qout.iter_mut().zip(black_box(&xs)) {
+            *o = quant_e4m3(v);
+        }
+    });
+    let fast = bench(names::QUANT_E4M3_SLICE, Some(xs.len() as u64), budget, || {
+        quant_e4m3_slice(black_box(&xs), &mut qout)
+    });
+    pair(suite, names::SPEEDUP_QUANT, scalar, fast);
+
+    let r = bench(names::NVFP4_ROUNDTRIP, Some(xs.len() as u64), budget, || {
+        nvfp4_roundtrip(black_box(&xs), &mut qout)
+    });
+    keep(suite, r);
+}
+
+/// Heavier pipeline benches: SW-Clip over a weight-sized tensor, the PPU +
+/// blocked-multiply FGMP datapath, and a full native forward pass at the
+/// `small-llama` preset architecture (random params — no artifacts
+/// required, the arch comes straight from `SynthConfig::preset`).
+pub fn pipeline_benches(suite: &mut BenchSuite, budget: Duration) {
+    let mut rng = Rng::new(43);
+
+    let cdata = rng.normal_vec(256 * 512, 0.05);
+    let fisher: Vec<f32> = (0..cdata.len()).map(|_| rng.f32() + 1e-4).collect();
+    let r = bench(names::SW_CLIP, Some(cdata.len() as u64), budget, || {
+        sw_clip_tensor(black_box(&cdata), &fisher)
+    });
+    keep(suite, r);
+
+    let (m, k, n) = (256usize, 512usize, 1536usize);
+    let x = rng.normal_vec(m * k, 1.0);
+    let w = rng.normal_vec(k * n, 0.05);
+    let cw = vec![1.0f32; k];
+    let r = bench(names::FGMP_MATMUL, Some((m * k * n) as u64), budget, || {
+        fgmp_matmul(black_box(&x), &w, m, k, n, &cw, 0.5)
+    });
+    keep(suite, r);
+
+    // The d512 preset architecture — one definition, shared with synth.
+    let arch = SynthConfig::preset("small-llama", 42).expect("small-llama preset").arch;
+    let params: Vec<(String, Vec<f32>)> = arch
+        .param_names()
+        .iter()
+        .map(|nm| {
+            let len: usize = arch.param_shape(nm).iter().product();
+            let data =
+                if nm.contains("norm") { vec![1.0f32; len] } else { rng.normal_vec(len, 0.02) };
+            (nm.clone(), data)
+        })
+        .collect();
+    let pm: std::collections::HashMap<&str, &[f32]> =
+        params.iter().map(|(nm, v)| (nm.as_str(), v.as_slice())).collect();
+    let (b, s) = (1usize, 32usize);
+    let tokens: Vec<i32> = (0..b * s).map(|i| (i % arch.vocab) as i32).collect();
+    let r = bench(names::FORWARD_D512, Some((b * s) as u64), budget, || {
+        forward(&arch, &pm, &tokens, b, s, None, None, false).unwrap()
+    });
+    keep(suite, r);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_gates_on_known_names() {
+        // The checked-in CI baseline must only reference benches and
+        // derived metrics this suite actually produces — otherwise the
+        // perf gate fails every run with "in baseline but not in this
+        // run". (Unit tests run with the package root as cwd.)
+        let baseline = BenchSuite::load("ci/bench-baseline.json").expect("parse baseline");
+        for r in &baseline.results {
+            assert!(
+                names::ALL.contains(&r.name.as_str()),
+                "baseline bench '{}' is not produced by fgmp::benchsuite",
+                r.name
+            );
+            assert!(r.elements.is_some(), "baseline '{}' lacks elements", r.name);
+        }
+        for key in baseline.derived.keys() {
+            assert!(
+                names::ALL_DERIVED.contains(&key.as_str()),
+                "baseline derived '{key}' is not produced by fgmp::benchsuite"
+            );
+        }
+        // The acceptance floor itself: the blocked matmul must be gated.
+        assert!(baseline.derived.get(names::SPEEDUP_MATMUL).is_some_and(|&v| v >= 2.0));
+    }
+}

@@ -14,6 +14,7 @@ use std::collections::HashMap;
 use super::datapath::{DatapathConfig, MatmulJob};
 use super::energy::{DotUnit, EnergyModel};
 use crate::quant::FgmpTensor;
+use crate::util::kernels;
 use crate::BLOCK;
 
 /// Exact per-unit activation counts from one traced matmul.
@@ -45,6 +46,11 @@ impl TraceReport {
 /// The schedule mirrors §4.1: A (weights) held stationary per lane group,
 /// B (activation blocks) broadcast; every (m, kb, n) triple issues exactly
 /// one BS-wide VMAC on the unit selected by the two metadata bits.
+///
+/// Counting is block-structured rather than element-at-a-time: each
+/// metadata row is packed into `u64` words once ([`kernels::pack_mask_u64`])
+/// and every (weight-row, act-row) pair resolves its four unit counts with
+/// three popcounts — exact counts, `K/64`-wide inner loop.
 pub fn trace_matmul(
     cfg: &DatapathConfig,
     em: &EnergyModel,
@@ -58,15 +64,32 @@ pub fn trace_matmul(
     assert!(weight_fp8.iter().all(|r| r.len() == k_blocks));
     assert!(act_fp8.iter().all(|r| r.len() == k_blocks));
 
+    let wbits: Vec<Vec<u64>> = weight_fp8.iter().map(|r| kernels::pack_mask_u64(r)).collect();
+    let abits: Vec<Vec<u64>> = act_fp8.iter().map(|r| kernels::pack_mask_u64(r)).collect();
+
+    // Per-unit VMAC counts via popcounts on the packed metadata.
+    let (mut c88, mut c84, mut c48) = (0u64, 0u64, 0u64);
+    for wrow in &wbits {
+        for arow in &abits {
+            c88 += kernels::and_popcount(wrow, arow);
+            c84 += kernels::andnot_popcount(wrow, arow);
+            c48 += kernels::andnot_popcount(arow, wrow);
+        }
+    }
+    let total = (n_dim * m_dim * k_blocks) as u64;
+    let c44 = total - c88 - c84 - c48;
+
     let mut unit_vmacs: HashMap<DotUnit, u64> = HashMap::new();
     let mut energy = 0.0f64;
-    for wrow in weight_fp8 {
-        for arow in act_fp8 {
-            for kb in 0..k_blocks {
-                let unit = DotUnit::select(wrow[kb], arow[kb]);
-                *unit_vmacs.entry(unit).or_insert(0) += 1;
-                energy += em.vmac_fgmp(unit);
-            }
+    for (unit, count) in [
+        (DotUnit::select(true, true), c88),
+        (DotUnit::select(true, false), c84),
+        (DotUnit::select(false, true), c48),
+        (DotUnit::select(false, false), c44),
+    ] {
+        if count > 0 {
+            *unit_vmacs.entry(unit).or_insert(0) += count;
+            energy += em.vmac_fgmp(unit) * count as f64;
         }
     }
     let cycles = (m_dim as u64).div_ceil(cfg.lanes as u64)

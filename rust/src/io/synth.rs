@@ -112,9 +112,26 @@ impl SynthConfig {
                 pos: PosKind::Rope,
                 max_seq: 128,
             },
+            // The perf-scale preset: d_model ≥ 512 with more layers, the
+            // shape class the blocked matmul kernels exist for. Artifact
+            // synthesis runs full calibration forwards at this size, so it
+            // is only built on demand (`fgmp bench --preset`, the
+            // FGMP_E2E_LARGE release suite) — never by `build_default`.
+            "small-llama" => ModelArch {
+                vocab: VOCAB,
+                d_model: 512,
+                n_layers: 4,
+                n_heads: 8,
+                d_ff: 1536,
+                act: Act::SwiGlu,
+                norm: NormKind::Rms,
+                pos: PosKind::Rope,
+                max_seq: 128,
+            },
             other => anyhow::bail!(
                 "no synthetic preset for model '{other}' \
-                 (have tiny-llama, tiny-llama-l, tiny-gpt, tiny-gpt-l, tiny-nemotron)"
+                 (have tiny-llama, tiny-llama-l, tiny-gpt, tiny-gpt-l, tiny-nemotron, \
+                  small-llama)"
             ),
         };
         Ok(SynthConfig {
@@ -643,6 +660,15 @@ mod tests {
     #[test]
     fn unknown_preset_errors() {
         assert!(SynthConfig::preset("mega-llama", 1).is_err());
+    }
+
+    #[test]
+    fn large_preset_is_block_aligned_at_scale() {
+        let cfg = SynthConfig::preset("small-llama", 1).unwrap();
+        assert_eq!(cfg.arch.d_model, 512);
+        assert_eq!(cfg.arch.n_layers, 4);
+        assert_eq!(cfg.arch.fc1_out(), 2 * 1536);
+        assert!(cfg.arch.linears().iter().all(|l| l.k_in % crate::BLOCK == 0));
     }
 
     #[test]

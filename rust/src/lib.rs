@@ -31,6 +31,7 @@
     clippy::inherent_to_string
 )]
 
+pub mod benchsuite;
 pub mod coordinator;
 pub mod eval;
 pub mod hwsim;

@@ -8,6 +8,8 @@
 //!   * `hwsim`    — datapath energy/area/memory reports (Figs. 8/9, Table 4)
 //!   * `serve`    — start the async serving coordinator demo
 //!   * `report`   — precision-assignment visualization (Fig. 2b)
+//!   * `bench`    — hotpath + forward benchmarks, emitted as
+//!     machine-readable `BENCH_<name>.json` (the CI perf gate's input)
 
 use fgmp::eval::sweep::format_rows;
 use fgmp::eval::{run_sweep, Evaluator};
@@ -45,6 +47,10 @@ COMMANDS
   hwsim
   report     --linear blk0.fc1 --fp4 0.9 --rows 24
   serve      --fp4 0.7 --requests 64
+  bench      [--out .] [--name hotpath] [--budget-ms 300] [--baseline FILE]
+             run blocked-vs-scalar kernel + forward benchmarks, write
+             BENCH_<name>.json; with --baseline, exit non-zero on any
+             >2x throughput regression (the CI perf gate)
 
 Commands that need artifacts synthesize them on first use when the model
 directory is missing (hermetic default). Point --artifacts at a directory
@@ -254,6 +260,9 @@ fn main() -> Result<()> {
         "serve" => {
             cmd_serve(&cli, cli.f64("fp4", 0.7), cli.usize("requests", 64))?;
         }
+        "bench" => {
+            cmd_bench(&cli)?;
+        }
         other => anyhow::bail!("unknown command '{other}'\n{USAGE}"),
     }
     Ok(())
@@ -284,6 +293,53 @@ fn cmd_tasks(cli: &Cli, fp4: &[f64], max_items: usize) -> Result<()> {
             print!("{:>12.3}", acc);
         }
         println!();
+    }
+    Ok(())
+}
+
+/// `fgmp bench`: the shared kernel + pipeline benchmark suite
+/// (`fgmp::benchsuite` — same workloads `cargo bench --bench hotpath`
+/// runs), collected into `BENCH_<name>.json`. With `--baseline FILE`,
+/// acts as the CI perf gate: exits non-zero when any bench regresses by
+/// more than 2x against the checked-in baseline, or a derived speedup
+/// falls below its floor.
+fn cmd_bench(cli: &Cli) -> Result<()> {
+    use fgmp::benchsuite::{kernel_benches, pipeline_benches};
+    use fgmp::util::bench::{budget_from_env, BenchSuite};
+    use std::time::Duration;
+
+    let budget = cli
+        .flags
+        .get("budget_ms")
+        .and_then(|v| v.parse::<u64>().ok())
+        .map(Duration::from_millis)
+        .unwrap_or_else(|| budget_from_env(300));
+    let name = cli.str("name", "hotpath");
+    let out_dir = cli.str("out", ".");
+    let mut suite = BenchSuite::new(&name);
+    println!("== fgmp bench: suite '{name}', budget {budget:?} ==");
+
+    kernel_benches(&mut suite, budget);
+    pipeline_benches(&mut suite, budget);
+
+    let path = suite.write(&out_dir)?;
+    println!("wrote {}", path.display());
+
+    if let Some(bp) = cli.flags.get("baseline") {
+        let baseline = BenchSuite::load(bp)?;
+        let fails = suite.check_regressions(&baseline, 2.0);
+        if fails.is_empty() {
+            println!(
+                "perf gate: OK ({} baseline benches, {} derived floors)",
+                baseline.results.len(),
+                baseline.derived.len()
+            );
+        } else {
+            for f in &fails {
+                eprintln!("perf gate FAIL: {f}");
+            }
+            anyhow::bail!("{} perf regression(s) vs baseline {bp}", fails.len());
+        }
     }
     Ok(())
 }

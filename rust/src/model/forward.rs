@@ -11,15 +11,14 @@
 //! attention internals stay in high precision — the paper's scope.
 //!
 //! The implementation is deterministic: parallelism ([`par_map`]) is over
-//! independent output rows, each accumulated serially, so results do not
-//! depend on thread scheduling.
+//! independent output row tiles, each output accumulated in a fixed
+//! (ascending-K / lane-interleaved) order by the shared blocked kernels in
+//! [`crate::util::kernels`], so results do not depend on thread scheduling.
 
 use std::collections::HashMap;
 
 use crate::io::manifest::{LinearSpec, Manifest};
-use crate::policy::impact_score_block;
-use crate::quant::{nvfp4::nvfp4_roundtrip_block, nvfp4_scale, quant_e4m3};
-use crate::util::{par_map, Json};
+use crate::util::{kernels, par_map, Json};
 use crate::{Result, BLOCK};
 
 /// MLP activation family (mirrors `model.py`).
@@ -279,53 +278,25 @@ pub struct ForwardOut {
     pub act_fp8: Vec<f32>,
 }
 
-/// Dense `y = x·w` for row-major `x (M,K)`, `w (K,N)`; parallel over rows.
+/// Dense `y = x·w` for row-major `x (M,K)`, `w (K,N)` — the cache-tiled,
+/// register-blocked kernel from [`kernels`] (parallel over row tiles;
+/// bit-identical to [`kernels::matmul_scalar`]).
 pub fn matmul(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    assert_eq!(x.len(), m * k);
-    assert_eq!(w.len(), k * n);
-    let rows: Vec<usize> = (0..m).collect();
-    let out = par_map(&rows, |&mi| {
-        let mut acc = vec![0.0f32; n];
-        let xr = &x[mi * k..(mi + 1) * k];
-        for (ki, &xv) in xr.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let wr = &w[ki * n..(ki + 1) * n];
-            for (a, &wv) in acc.iter_mut().zip(wr) {
-                *a += xv * wv;
-            }
-        }
-        acc
-    });
-    flatten(out, m * n)
+    kernels::matmul(x, w, m, k, n)
 }
 
-/// `y = x·wᵀ` for `x (M,K)` against row-major `wt (N,K)` — the tied LM head.
+/// `y = x·wᵀ` for `x (M,K)` against row-major `wt (N,K)` — the tied LM
+/// head, via the lane-parallel dot-product kernel.
 pub fn matmul_transposed(x: &[f32], wt: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    assert_eq!(x.len(), m * k);
-    assert_eq!(wt.len(), n * k);
-    let rows: Vec<usize> = (0..m).collect();
-    let out = par_map(&rows, |&mi| {
-        let xr = &x[mi * k..(mi + 1) * k];
-        let mut acc = vec![0.0f32; n];
-        for (ni, a) in acc.iter_mut().enumerate() {
-            let wr = &wt[ni * k..(ni + 1) * k];
-            let mut s = 0.0f32;
-            for (xv, wv) in xr.iter().zip(wr) {
-                s += xv * wv;
-            }
-            *a = s;
-        }
-        acc
-    });
-    flatten(out, m * n)
+    kernels::matmul_transposed(x, wt, m, k, n)
 }
 
 /// FGMP-quantized matmul: round-trip each activation row block-wise to mixed
 /// FP8/NVFP4 per the impact score vs `threshold` (the PPU), then multiply
 /// against already-round-tripped weights. Returns `(y, fp8_block_fraction)` —
-/// the native equivalent of `ref.fgmp_matmul_ref`.
+/// the native equivalent of `ref.fgmp_matmul_ref`. Quantization and the
+/// multiply both run block-structured: the PPU kernel round-trips whole
+/// 16-blocks at a time and the product reuses the blocked matmul tiles.
 pub fn fgmp_matmul(
     x: &[f32],
     w: &[f32],
@@ -340,54 +311,28 @@ pub fn fgmp_matmul(
     assert_eq!(chan_weight.len(), k);
     assert_eq!(k % BLOCK, 0);
     let blocks_per_row = k / BLOCK;
-    let rows: Vec<usize> = (0..m).collect();
-    let out = par_map(&rows, |&mi| {
-        let xr = &x[mi * k..(mi + 1) * k];
-        let mut xq = vec![0.0f32; k];
+    let tiles: Vec<usize> = (0..m.div_ceil(kernels::MR)).collect();
+    let out = par_map(&tiles, |&t| {
+        let r0 = t * kernels::MR;
+        let rows = kernels::MR.min(m - r0);
+        let mut xq = vec![0.0f32; rows * k];
         let mut n_fp8 = 0usize;
-        for bi in 0..blocks_per_row {
-            let off = bi * BLOCK;
-            let xb = &xr[off..off + BLOCK];
-            let cb = &chan_weight[off..off + BLOCK];
-            let score = impact_score_block(xb, cb);
-            if score > threshold as f64 {
-                n_fp8 += 1;
-                for (o, &v) in xq[off..off + BLOCK].iter_mut().zip(xb) {
-                    *o = quant_e4m3(v);
-                }
-            } else {
-                let absmax = xb.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
-                let s = nvfp4_scale(absmax);
-                nvfp4_roundtrip_block(xb, s, &mut xq[off..off + BLOCK]);
-            }
+        for r in 0..rows {
+            let xr = &x[(r0 + r) * k..(r0 + r + 1) * k];
+            let xq_row = &mut xq[r * k..(r + 1) * k];
+            n_fp8 += kernels::ppu_quantize_row(xr, chan_weight, threshold, xq_row);
         }
-        let mut acc = vec![0.0f32; n];
-        for (ki, &xv) in xq.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let wr = &w[ki * n..(ki + 1) * n];
-            for (a, &wv) in acc.iter_mut().zip(wr) {
-                *a += xv * wv;
-            }
-        }
-        (acc, n_fp8)
+        let mut tile = vec![0.0f32; rows * n];
+        kernels::matmul_rows(&xq, w, rows, k, n, &mut tile);
+        (tile, n_fp8)
     });
     let total_fp8: usize = out.iter().map(|(_, f)| *f).sum();
     let mut flat = Vec::with_capacity(m * n);
-    for (row, _) in out {
-        flat.extend_from_slice(&row);
+    for (tile, _) in out {
+        flat.extend_from_slice(&tile);
     }
     let frac = total_fp8 as f32 / (m * blocks_per_row).max(1) as f32;
     (flat, frac)
-}
-
-fn flatten(rows: Vec<Vec<f32>>, cap: usize) -> Vec<f32> {
-    let mut flat = Vec::with_capacity(cap);
-    for r in rows {
-        flat.extend_from_slice(&r);
-    }
-    flat
 }
 
 fn norm_rows(kind: NormKind, x: &[f32], d: usize, g: &[f32], b: Option<&[f32]>) -> Vec<f32> {

@@ -6,19 +6,23 @@
 //! mean-square, depending on the [`super::Policy`]). Identical math to
 //! `ref.block_impact` on the python side.
 
-use crate::quant::{nvfp4::nvfp4_roundtrip_block, nvfp4_scale, quant_e4m3};
+use crate::quant::nvfp4_scale;
+use crate::util::kernels;
 use crate::BLOCK;
 
-/// Impact score of one block under element weighting `w`.
+/// Impact score of one block under element weighting `w`. Both format
+/// images of the block are produced by the vectorized slice kernels; the
+/// f64 error accumulation keeps its element order.
 pub fn impact_score_block(x: &[f32], w: &[f32]) -> f64 {
     debug_assert_eq!(x.len(), BLOCK);
-    let absmax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-    let scale = nvfp4_scale(absmax);
+    let scale = nvfp4_scale(kernels::absmax(x));
     let mut q4 = [0.0f32; BLOCK];
-    nvfp4_roundtrip_block(x, scale, &mut q4);
+    kernels::nvfp4_block(x, scale, &mut q4);
+    let mut q8 = [0.0f32; BLOCK];
+    kernels::e4m3_slice(x, &mut q8);
     let mut acc = 0.0f64;
     for i in 0..BLOCK {
-        let d = (q4[i] - quant_e4m3(x[i])) as f64;
+        let d = (q4[i] - q8[i]) as f64;
         acc += w[i] as f64 * d * d;
     }
     acc

@@ -7,9 +7,9 @@
 //! expanding range; scales far below clip everything), which matches the
 //! paper's "brute-force search over possible values for s".
 
-use super::fp4::quant_e2m1;
 use super::fp8::e4m3_grid;
 use super::nvfp4::nvfp4_scale;
+use crate::util::kernels;
 use crate::BLOCK;
 
 thread_local! {
@@ -20,19 +20,26 @@ thread_local! {
 /// Fisher-weighted squared error of quantizing `x` with scale `s`,
 /// abandoning early once the running sum exceeds `abandon_above`
 /// (the brute-force search only needs errors below the incumbent;
-/// §Perf change 3).
+/// §Perf change 3). The E2M1 round-trip of the whole block is computed
+/// up-front by the vectorized slice kernel; the f64 error accumulation
+/// (and its per-element abandon checkpoints) keeps the original order.
 #[inline]
 fn weighted_err(x: &[f32], g2: &[f32], s: f32, abandon_above: f64) -> f64 {
     if s <= 0.0 {
         return x.iter().zip(g2).map(|(&v, &g)| (g as f64) * (v as f64) * (v as f64)).sum();
     }
     let inv_s = 1.0 / s;
+    let mut qbuf = [0.0f32; BLOCK];
     let mut acc = 0.0f64;
-    for (&v, &g) in x.iter().zip(g2) {
-        let d = (quant_e2m1(v * inv_s) * s - v) as f64;
-        acc += g as f64 * d * d;
-        if acc > abandon_above {
-            return f64::INFINITY;
+    for (xc, gc) in x.chunks(BLOCK).zip(g2.chunks(BLOCK)) {
+        let q = &mut qbuf[..xc.len()];
+        kernels::e2m1_scaled_slice(xc, inv_s, s, q);
+        for ((&v, &qv), &g) in xc.iter().zip(q.iter()).zip(gc) {
+            let d = (qv - v) as f64;
+            acc += g as f64 * d * d;
+            if acc > abandon_above {
+                return f64::INFINITY;
+            }
         }
     }
     acc
@@ -43,8 +50,7 @@ fn weighted_err(x: &[f32], g2: &[f32], s: f32, abandon_above: f64) -> f64 {
 /// Returns (best scale, its weighted error).
 pub fn sw_clip_block(x: &[f32], g2: &[f32]) -> (f32, f64) {
     debug_assert_eq!(x.len(), g2.len());
-    let absmax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-    let s_dyn = nvfp4_scale(absmax);
+    let s_dyn = nvfp4_scale(kernels::absmax(x));
     if s_dyn == 0.0 {
         return (0.0, 0.0);
     }

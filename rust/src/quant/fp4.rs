@@ -33,6 +33,13 @@ pub fn quant_e2m1(x: f32) -> f32 {
     q.clamp(-E2M1_MAX, E2M1_MAX)
 }
 
+/// Vectorized round-trip: the branch-free slice kernel from
+/// [`crate::util::kernels`] (same lattice as [`quant_e2m1`], asserted in
+/// `tests/kernel_props.rs`).
+pub fn quant_e2m1_slice(xs: &[f32], out: &mut [f32]) {
+    crate::util::kernels::e2m1_slice(xs, out)
+}
+
 /// Encode into a 4-bit code (low nibble): sign | exp(2b) | mantissa(1b).
 /// The code index is derived arithmetically from the quantized value's
 /// exponent/mantissa (no grid search; §Perf change 2).

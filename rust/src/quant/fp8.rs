@@ -69,11 +69,11 @@ pub fn decode_e4m3(b: u8) -> f32 {
     sign * mag.min(E4M3_MAX)
 }
 
-/// Vectorized round-trip.
+/// Vectorized round-trip: the branch-free slice kernel from
+/// [`crate::util::kernels`] (same lattice as [`quant_e4m3`], asserted in
+/// `tests/kernel_props.rs`).
 pub fn quant_e4m3_slice(xs: &[f32], out: &mut [f32]) {
-    for (o, &x) in out.iter_mut().zip(xs) {
-        *o = quant_e4m3(x);
-    }
+    crate::util::kernels::e4m3_slice(xs, out)
 }
 
 /// All 126 non-negative finite E4M3 values in ascending order (used by the

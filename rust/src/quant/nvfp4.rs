@@ -3,8 +3,8 @@
 //! Matches `ref.quant_nvfp4`: dynamic-max scale = round_e4m3(absmax/6), or an
 //! explicit (clipped) scale from the SW-Clip search.
 
-use super::fp4::quant_e2m1;
 use super::fp8::quant_e4m3;
+use crate::util::kernels;
 use crate::BLOCK;
 
 /// Largest representable E2M1 magnitude (re-exported for scale math).
@@ -28,25 +28,20 @@ pub fn nvfp4_scale(absmax: f32) -> f32 {
 /// grid value from the clip search). A zero scale maps the block to zeros.
 pub fn nvfp4_roundtrip_block(x: &[f32], scale: f32, out: &mut [f32]) {
     debug_assert_eq!(x.len(), out.len());
-    if scale <= 0.0 {
-        out.fill(0.0);
-        return;
-    }
-    for (o, &v) in out.iter_mut().zip(x) {
-        *o = quant_e2m1(v / scale) * scale;
-    }
+    kernels::nvfp4_block(x, scale, out)
 }
 
 /// Round-trip a whole tensor (blocks along the contiguous last axis) using
-/// dynamic-max scales. Returns the per-block scales.
+/// dynamic-max scales. Returns the per-block scales. Each block runs
+/// through the vectorized slice kernels (absmax + E2M1 round-trip) rather
+/// than element-at-a-time.
 pub fn nvfp4_roundtrip(x: &[f32], out: &mut [f32]) -> Vec<f32> {
     assert_eq!(x.len() % BLOCK, 0, "length must be a multiple of {BLOCK}");
     assert_eq!(x.len(), out.len());
     let mut scales = Vec::with_capacity(x.len() / BLOCK);
     for (xb, ob) in x.chunks_exact(BLOCK).zip(out.chunks_exact_mut(BLOCK)) {
-        let absmax = xb.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-        let s = nvfp4_scale(absmax);
-        nvfp4_roundtrip_block(xb, s, ob);
+        let s = nvfp4_scale(kernels::absmax(xb));
+        kernels::nvfp4_block(xb, s, ob);
         scales.push(s);
     }
     scales

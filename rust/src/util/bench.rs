@@ -1,8 +1,17 @@
-//! Micro-bench timer — replaces criterion for the hotpath benches (offline
-//! build). Warmup + N timed iterations, reports mean/p50/min and
-//! throughput; plain text output, machine-greppable.
+//! Micro-bench harness — replaces criterion for the hotpath benches
+//! (offline build). Warmup + N timed iterations, reporting mean/p50/min/max
+//! and throughput, plus a machine-readable suite format: every bench run
+//! can be collected into a [`BenchSuite`] and written as `BENCH_<name>.json`
+//! via [`crate::util::json`], the one output format shared by
+//! `cargo bench --bench hotpath`, the `fgmp bench` CLI, and the CI
+//! perf-regression gate ([`BenchSuite::check_regressions`]).
 
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+use crate::util::Json;
+use crate::Result;
 
 /// Result of one benchmark.
 #[derive(Debug, Clone)]
@@ -12,6 +21,7 @@ pub struct BenchResult {
     pub mean: Duration,
     pub median: Duration,
     pub min: Duration,
+    pub max: Duration,
     /// Optional elements-per-iteration for throughput reporting.
     pub elements: Option<u64>,
 }
@@ -19,8 +29,8 @@ pub struct BenchResult {
 impl BenchResult {
     pub fn report(&self) -> String {
         let mut s = format!(
-            "{:<36} iters {:>4}  mean {:>12?}  p50 {:>12?}  min {:>12?}",
-            self.name, self.iters, self.mean, self.median, self.min
+            "{:<36} iters {:>4}  mean {:>12?}  p50 {:>12?}  min {:>12?}  max {:>12?}",
+            self.name, self.iters, self.mean, self.median, self.min, self.max
         );
         if let Some(e) = self.elements {
             let eps = e as f64 / self.mean.as_secs_f64();
@@ -28,15 +38,190 @@ impl BenchResult {
         }
         s
     }
+
+    /// Peak throughput in Melem/s (elements over the *minimum* iteration
+    /// time — the noise-robust statistic the CI gate compares).
+    pub fn melem_per_s(&self) -> Option<f64> {
+        self.elements.map(|e| e as f64 / self.min.as_secs_f64().max(1e-12) / 1e6)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("iters".to_string(), Json::Num(self.iters as f64));
+        m.insert("mean_ns".to_string(), Json::Num(self.mean.as_nanos() as f64));
+        m.insert("median_ns".to_string(), Json::Num(self.median.as_nanos() as f64));
+        m.insert("min_ns".to_string(), Json::Num(self.min.as_nanos() as f64));
+        m.insert("max_ns".to_string(), Json::Num(self.max.as_nanos() as f64));
+        if let Some(e) = self.elements {
+            m.insert("elements".to_string(), Json::Num(e as f64));
+            m.insert("melem_per_s".to_string(), Json::Num(self.melem_per_s().unwrap_or(0.0)));
+        }
+        Json::Obj(m)
+    }
+
+    pub fn from_json(v: &Json) -> Result<BenchResult> {
+        let dur = |key: &str| -> Result<Duration> {
+            Ok(Duration::from_nanos(v.get(key)?.as_f64()? as u64))
+        };
+        Ok(BenchResult {
+            name: v.get("name")?.as_str()?.to_string(),
+            iters: v.get("iters")?.as_usize()?,
+            mean: dur("mean_ns")?,
+            median: dur("median_ns")?,
+            min: dur("min_ns")?,
+            max: dur("max_ns")?,
+            elements: match v.opt("elements") {
+                Some(e) => Some(e.as_f64()? as u64),
+                None => None,
+            },
+        })
+    }
+}
+
+/// A named collection of bench results plus derived scalar metrics
+/// (speedup ratios etc.), serializable to `BENCH_<name>.json`.
+#[derive(Debug, Clone, Default)]
+pub struct BenchSuite {
+    pub name: String,
+    pub results: Vec<BenchResult>,
+    /// Derived metrics, e.g. `"speedup_matmul_d512" -> 3.4`. In a baseline
+    /// file these act as *floors* the current run must meet.
+    pub derived: BTreeMap<String, f64>,
+}
+
+impl BenchSuite {
+    pub fn new(name: &str) -> BenchSuite {
+        BenchSuite { name: name.to_string(), results: Vec::new(), derived: BTreeMap::new() }
+    }
+
+    pub fn push(&mut self, r: BenchResult) {
+        self.results.push(r);
+    }
+
+    pub fn derive(&mut self, key: &str, value: f64) {
+        self.derived.insert(key.to_string(), value);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&BenchResult> {
+        self.results.iter().find(|r| r.name == name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("suite".to_string(), Json::Str(self.name.clone()));
+        m.insert(
+            "results".to_string(),
+            Json::Arr(self.results.iter().map(|r| r.to_json()).collect()),
+        );
+        let derived: BTreeMap<String, Json> =
+            self.derived.iter().map(|(k, &v)| (k.clone(), Json::Num(v))).collect();
+        m.insert("derived".to_string(), Json::Obj(derived));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(v: &Json) -> Result<BenchSuite> {
+        let results = v
+            .get("results")?
+            .as_arr()?
+            .iter()
+            .map(BenchResult::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let mut derived = BTreeMap::new();
+        if let Some(d) = v.opt("derived") {
+            for (k, x) in d.as_obj()? {
+                derived.insert(k.clone(), x.as_f64()?);
+            }
+        }
+        Ok(BenchSuite { name: v.get("suite")?.as_str()?.to_string(), results, derived })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<BenchSuite> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        BenchSuite::from_json(&Json::parse(&text)?)
+    }
+
+    /// Write `BENCH_<name>.json` into `dir`; returns the path written.
+    pub fn write(&self, dir: impl AsRef<Path>) -> Result<PathBuf> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.to_json().to_string())?;
+        Ok(path)
+    }
+
+    /// The CI perf gate: compare this run against a baseline suite and
+    /// return one message per regression. A result regresses when its
+    /// min-time throughput falls below `baseline / max_slowdown` (or, for
+    /// unthroughputed benches, its min time exceeds `baseline ·
+    /// max_slowdown`). Baseline `derived` entries are floors the current
+    /// run's derived metrics must meet. Benches present only in the
+    /// current run are ignored (new benches don't need a baseline yet);
+    /// benches present only in the baseline are reported (a silent rename
+    /// must not disable the gate).
+    pub fn check_regressions(&self, baseline: &BenchSuite, max_slowdown: f64) -> Vec<String> {
+        let mut fails = Vec::new();
+        for base in &baseline.results {
+            let Some(cur) = self.get(&base.name) else {
+                fails.push(format!("bench '{}' in baseline but not in this run", base.name));
+                continue;
+            };
+            match (cur.melem_per_s(), base.melem_per_s()) {
+                (Some(c), Some(b)) => {
+                    if c * max_slowdown < b {
+                        fails.push(format!(
+                            "'{}' throughput {:.1} Melem/s < baseline {:.1} / {:.1}x",
+                            base.name, c, b, max_slowdown
+                        ));
+                    }
+                }
+                _ => {
+                    let (c, b) = (cur.min.as_secs_f64(), base.min.as_secs_f64());
+                    if c > b * max_slowdown {
+                        fails.push(format!(
+                            "'{}' min time {:.3}ms > baseline {:.3}ms x {:.1}",
+                            base.name,
+                            c * 1e3,
+                            b * 1e3,
+                            max_slowdown
+                        ));
+                    }
+                }
+            }
+        }
+        for (k, &floor) in &baseline.derived {
+            match self.derived.get(k) {
+                None => {
+                    fails.push(format!("derived metric '{k}' missing (baseline floor {floor})"))
+                }
+                Some(&v) if v < floor => {
+                    fails.push(format!("derived metric '{k}' = {v:.2} below floor {floor:.2}"))
+                }
+                Some(_) => {}
+            }
+        }
+        fails
+    }
 }
 
 /// Time `f` with automatic iteration count targeting ~`budget` total.
-pub fn bench<R>(name: &str, elements: Option<u64>, budget: Duration, mut f: impl FnMut() -> R) -> BenchResult {
+/// A zero budget is smoke mode: one timed iteration (used by tests that
+/// only need the suite structure, not stable timings).
+pub fn bench<R>(
+    name: &str,
+    elements: Option<u64>,
+    budget: Duration,
+    mut f: impl FnMut() -> R,
+) -> BenchResult {
     // Warmup + calibration.
     let t0 = Instant::now();
     std::hint::black_box(f());
     let once = t0.elapsed().max(Duration::from_nanos(50));
-    let iters = (budget.as_secs_f64() / once.as_secs_f64()).clamp(5.0, 1000.0) as usize;
+    let iters = if budget.is_zero() {
+        1
+    } else {
+        (budget.as_secs_f64() / once.as_secs_f64()).clamp(5.0, 1000.0) as usize
+    };
 
     let mut samples = Vec::with_capacity(iters);
     for _ in 0..iters {
@@ -52,8 +237,19 @@ pub fn bench<R>(name: &str, elements: Option<u64>, budget: Duration, mut f: impl
         mean,
         median: samples[iters / 2],
         min: samples[0],
+        max: samples[iters - 1],
         elements,
     }
+}
+
+/// Per-iteration time budget, overridable with `FGMP_BENCH_BUDGET_MS`
+/// (the CI perf job uses a short budget to bound wall-clock).
+pub fn budget_from_env(default_ms: u64) -> Duration {
+    let ms = std::env::var("FGMP_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(default_ms);
+    Duration::from_millis(ms)
 }
 
 /// Re-export of the standard black_box for bench bodies.
@@ -63,13 +259,90 @@ pub use std::hint::black_box;
 mod tests {
     use super::*;
 
+    fn quick(name: &str, elements: Option<u64>) -> BenchResult {
+        bench(name, elements, Duration::from_millis(10), || (0..1000u64).sum::<u64>())
+    }
+
     #[test]
     fn bench_runs_and_reports() {
-        let r = bench("noop_sum", Some(1000), Duration::from_millis(20), || {
-            (0..1000u64).sum::<u64>()
-        });
+        let r = quick("noop_sum", Some(1000));
         assert!(r.iters >= 5);
         assert!(r.min <= r.mean);
+        assert!(r.mean <= r.max);
         assert!(r.report().contains("noop_sum"));
+        assert!(r.melem_per_s().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn suite_roundtrips_through_json() {
+        let mut s = BenchSuite::new("unit");
+        s.push(quick("a", Some(1000)));
+        s.push(quick("b", None));
+        s.derive("speedup_a_over_b", 2.5);
+        let back = BenchSuite::from_json(&s.to_json()).unwrap();
+        assert_eq!(back.name, "unit");
+        assert_eq!(back.results.len(), 2);
+        assert_eq!(back.results[0].name, "a");
+        assert_eq!(back.results[0].elements, Some(1000));
+        assert_eq!(back.results[1].elements, None);
+        assert_eq!(back.derived["speedup_a_over_b"], 2.5);
+        // durations survive to nanosecond precision
+        assert_eq!(back.results[0].min, s.results[0].min);
+    }
+
+    #[test]
+    fn suite_writes_bench_json_file() {
+        let dir = std::env::temp_dir().join("fgmp_bench_suite_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = BenchSuite::new("unitfile");
+        s.push(quick("a", Some(64)));
+        let path = s.write(&dir).unwrap();
+        assert!(path.ends_with("BENCH_unitfile.json"));
+        let back = BenchSuite::load(&path).unwrap();
+        assert_eq!(back.name, "unitfile");
+    }
+
+    #[test]
+    fn regression_gate_fires_on_2x_loss() {
+        let mk = |name: &str, min_ns: u64, elements: Option<u64>| BenchResult {
+            name: name.to_string(),
+            iters: 10,
+            mean: Duration::from_nanos(min_ns * 2),
+            median: Duration::from_nanos(min_ns * 2),
+            min: Duration::from_nanos(min_ns),
+            max: Duration::from_nanos(min_ns * 3),
+            elements,
+        };
+        let mut base = BenchSuite::new("b");
+        base.push(mk("tput", 1000, Some(1_000_000)));
+        base.push(mk("wall", 1000, None));
+        base.derive("speedup", 2.0);
+
+        // identical run: clean
+        let mut cur = base.clone();
+        assert!(cur.check_regressions(&base, 2.0).is_empty());
+
+        // 3x slower on both + derived below floor + missing bench
+        cur.results[0].min = Duration::from_nanos(3000);
+        cur.results[1].min = Duration::from_nanos(3000);
+        cur.derive("speedup", 1.0);
+        let fails = cur.check_regressions(&base, 2.0);
+        assert_eq!(fails.len(), 3, "{fails:?}");
+
+        // bench missing from current run is reported
+        cur.results.clear();
+        let fails = cur.check_regressions(&base, 2.0);
+        assert!(fails.iter().any(|f| f.contains("not in this run")));
+    }
+
+    #[test]
+    fn budget_env_default_and_override() {
+        // Robust whether or not FGMP_BENCH_BUDGET_MS is set in the test
+        // environment: compute the expectation the same way users do.
+        let want = std::env::var("FGMP_BENCH_BUDGET_MS")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .unwrap_or(123);
+        assert_eq!(budget_from_env(123), Duration::from_millis(want));
     }
 }

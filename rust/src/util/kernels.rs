@@ -1,0 +1,489 @@
+//! Shared blocked / autovectorizer-friendly compute kernels.
+//!
+//! One home for the innermost loops of the native forward pass
+//! ([`crate::model::forward`]), the quantization codecs ([`crate::quant`]),
+//! the PPU impact scoring ([`crate::policy`]), and the hwsim trace costing
+//! ([`crate::hwsim::trace`]).
+//!
+//! Design rules:
+//!  * every fast kernel has a scalar sibling (`*_scalar`) with the **same
+//!    per-output accumulation order**, so fast == scalar holds bit-exactly
+//!    (property-tested in `tests/kernel_props.rs`);
+//!  * matmul register tiles are `MR × NR` with the K loop kept sequential
+//!    ascending — tiling changes *which* outputs are in flight, never the
+//!    per-output accumulation order, which is what makes blocking safe to
+//!    verify exactly;
+//!  * quantizers are written branch-free (selects plus the `1.5·2²³`
+//!    round-to-nearest-ties-to-even trick) so LLVM can if-convert and
+//!    vectorize them at the SSE2 baseline — no `round_ties_even` libcall
+//!    in the hot loops.
+
+use crate::quant::fp4::{E2M1_MAX, E2M1_MIN_NORMAL, E2M1_QUANTUM_SUBNORMAL};
+use crate::quant::fp8::{E4M3_MAX, E4M3_MIN_NORMAL, E4M3_QUANTUM_SUBNORMAL};
+use crate::quant::nvfp4_scale;
+use crate::util::par_map;
+use crate::BLOCK;
+
+/// Row-tile height of the blocked matmul: rows of `x` that share one
+/// streaming pass over a `w` panel (cuts weight traffic by `MR×`).
+pub const MR: usize = 4;
+/// Column-tile width of the blocked matmul register kernel (accumulators
+/// stay in registers across the whole K loop).
+pub const NR: usize = 8;
+/// Partial-sum lanes of the transposed (dot-product) kernel.
+pub const LANES: usize = 16;
+
+// ---------------------------------------------------------------------------
+// Branch-free scalar quantizers (the vector lanes of the slice kernels)
+// ---------------------------------------------------------------------------
+
+/// `1.5·2²³`: adding and subtracting snaps a float to the integer grid
+/// with round-to-nearest-ties-to-even, exactly, for `|y| < 2²²`. All
+/// quotients fed to it here are `< 16` in magnitude by construction
+/// (mantissa-over-quantum ratios), and ±inf/NaN pass through unchanged.
+const ROUND_MAGIC: f32 = 12_582_912.0;
+
+#[inline(always)]
+fn round_nearest_even_small(y: f32) -> f32 {
+    (y + ROUND_MAGIC) - ROUND_MAGIC
+}
+
+/// Branch-free E4M3 round-trip on the same lattice as
+/// [`crate::quant::quant_e4m3`] (equality is property-tested); the only
+/// representational difference is that results that round to zero come
+/// back as `+0.0` rather than `-0.0` for negative inputs.
+#[inline(always)]
+pub fn e4m3(x: f32) -> f32 {
+    let ax = x.abs();
+    // 2^(e-3) built from the exponent field. When ax is subnormal or zero
+    // the wrapped bit pattern is garbage, but the select below discards it.
+    let normal_q = f32::from_bits((ax.to_bits() >> 23).wrapping_sub(3) << 23);
+    let quantum = if ax < E4M3_MIN_NORMAL { E4M3_QUANTUM_SUBNORMAL } else { normal_q };
+    let q = round_nearest_even_small(x / quantum) * quantum;
+    q.clamp(-E4M3_MAX, E4M3_MAX)
+}
+
+/// Branch-free E2M1 round-trip on the same lattice as
+/// [`crate::quant::quant_e2m1`] (equality is property-tested).
+#[inline(always)]
+pub fn e2m1(x: f32) -> f32 {
+    let ax = x.abs();
+    let normal_q = f32::from_bits((ax.to_bits() >> 23).wrapping_sub(1) << 23);
+    let quantum = if ax < E2M1_MIN_NORMAL { E2M1_QUANTUM_SUBNORMAL } else { normal_q };
+    let q = round_nearest_even_small(x / quantum) * quantum;
+    q.clamp(-E2M1_MAX, E2M1_MAX)
+}
+
+// ---------------------------------------------------------------------------
+// Slice / block quantization kernels
+// ---------------------------------------------------------------------------
+
+/// `out[i] = e4m3(x[i])` over a whole slice (vectorized).
+pub fn e4m3_slice(x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = e4m3(v);
+    }
+}
+
+/// `out[i] = e2m1(x[i])` over a whole slice (vectorized).
+pub fn e2m1_slice(x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = e2m1(v);
+    }
+}
+
+/// NVFP4 round-trip of one block with an explicit E4M3 scale:
+/// `out = e2m1(x / s) · s`. Division (not reciprocal multiply) keeps the
+/// values on the reference lattice of `ref.quant_nvfp4`. A non-positive
+/// scale maps the block to zeros.
+pub fn nvfp4_block(x: &[f32], scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    if scale <= 0.0 {
+        out.fill(0.0);
+        return;
+    }
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = e2m1(v / scale) * scale;
+    }
+}
+
+/// SW-Clip inner round-trip: `out = e2m1(x · inv_s) · s`. The clip search
+/// pre-computes the reciprocal once per candidate scale — this kernel keeps
+/// exactly that numerics (multiply, not divide).
+pub fn e2m1_scaled_slice(x: &[f32], inv_s: f32, s: f32, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = e2m1(v * inv_s) * s;
+    }
+}
+
+/// `max |x_i|` over a slice (`0.0` for empty) — the dynamic-max scale input.
+pub fn absmax(x: &[f32]) -> f32 {
+    x.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+}
+
+/// The PPU (paper §4.2) on one activation row: round-trip each 16-block to
+/// FP8 or NVFP4 per the impact score (Eq. 8) against `threshold`, writing
+/// dequantized values to `out`. Returns the FP8 block count. Identical
+/// numerics to `policy::impact_score_block` + the per-branch round-trips,
+/// but each block's E4M3/NVFP4 images are computed once, vectorized.
+pub fn ppu_quantize_row(xr: &[f32], chan_weight: &[f32], threshold: f32, out: &mut [f32]) -> usize {
+    debug_assert_eq!(xr.len(), out.len());
+    debug_assert_eq!(xr.len(), chan_weight.len());
+    debug_assert_eq!(xr.len() % BLOCK, 0);
+    let mut n_fp8 = 0usize;
+    for (bi, (xb, ob)) in xr.chunks_exact(BLOCK).zip(out.chunks_exact_mut(BLOCK)).enumerate() {
+        let cb = &chan_weight[bi * BLOCK..(bi + 1) * BLOCK];
+        let mut q8 = [0.0f32; BLOCK];
+        e4m3_slice(xb, &mut q8);
+        let s = nvfp4_scale(absmax(xb));
+        let mut q4 = [0.0f32; BLOCK];
+        nvfp4_block(xb, s, &mut q4);
+        // Impact score, same f64 accumulation order as impact_score_block.
+        let mut score = 0.0f64;
+        for j in 0..BLOCK {
+            let d = (q4[j] - q8[j]) as f64;
+            score += cb[j] as f64 * d * d;
+        }
+        if score > threshold as f64 {
+            n_fp8 += 1;
+            ob.copy_from_slice(&q8);
+        } else {
+            ob.copy_from_slice(&q4);
+        }
+    }
+    n_fp8
+}
+
+// ---------------------------------------------------------------------------
+// Blocked matmul
+// ---------------------------------------------------------------------------
+
+/// Dense `y = x·w` for row-major `x (M,K)`, `w (K,N)`: parallel over
+/// `MR`-row tiles, register-blocked `MR × NR` inner kernel. Per-output
+/// accumulation is ascending-K, so the result equals [`matmul_scalar`]
+/// bit-for-bit.
+pub fn matmul(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w.len(), k * n);
+    let tiles: Vec<usize> = (0..m.div_ceil(MR)).collect();
+    let out = par_map(&tiles, |&t| {
+        let r0 = t * MR;
+        let rows = MR.min(m - r0);
+        let mut tile = vec![0.0f32; rows * n];
+        matmul_rows(&x[r0 * k..(r0 + rows) * k], w, rows, k, n, &mut tile);
+        tile
+    });
+    flatten(out, m * n)
+}
+
+/// Scalar reference matmul — the pre-blocking kernel, kept as the
+/// bit-exactness oracle and fallback path. Each output element accumulates
+/// its products in ascending-K order (no zero-skipping, so the order
+/// statement is unconditional).
+pub fn matmul_scalar(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w.len(), k * n);
+    let rows: Vec<usize> = (0..m).collect();
+    let out = par_map(&rows, |&mi| {
+        let mut acc = vec![0.0f32; n];
+        let xr = &x[mi * k..(mi + 1) * k];
+        for (ki, &xv) in xr.iter().enumerate() {
+            let wr = &w[ki * n..(ki + 1) * n];
+            for (a, &wv) in acc.iter_mut().zip(wr) {
+                *a += xv * wv;
+            }
+        }
+        acc
+    });
+    flatten(out, m * n)
+}
+
+/// Multiply `rows ≤ MR` rows of `x (rows,K)` against `w (K,N)` into
+/// `out (rows,N)`, register-tiling N in NR-wide panels.
+pub fn matmul_rows(x: &[f32], w: &[f32], rows: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert!(rows <= MR);
+    debug_assert_eq!(x.len(), rows * k);
+    debug_assert_eq!(out.len(), rows * n);
+    let mut nc = 0usize;
+    while nc + NR <= n {
+        if rows == MR {
+            kernel_full(x, w, k, n, nc, out);
+        } else {
+            kernel_edge(x, w, rows, k, n, nc, NR, out);
+        }
+        nc += NR;
+    }
+    if nc < n {
+        kernel_edge(x, w, rows, k, n, nc, n - nc, out);
+    }
+}
+
+/// The `MR × NR` register microkernel: accumulators live in registers for
+/// the whole K loop; each `w` panel row is loaded once and reused by all
+/// MR rows of `x`.
+#[inline(always)]
+fn kernel_full(x: &[f32], w: &[f32], k: usize, n: usize, nc: usize, out: &mut [f32]) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for ki in 0..k {
+        let base = ki * n + nc;
+        let wv: &[f32; NR] = w[base..base + NR].try_into().unwrap();
+        for r in 0..MR {
+            let xv = x[r * k + ki];
+            for j in 0..NR {
+                acc[r][j] += xv * wv[j];
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        out[r * n + nc..r * n + nc + NR].copy_from_slice(accr);
+    }
+}
+
+/// Generic edge kernel for bottom row tiles (`rows < MR`) and the N
+/// remainder (`width < NR`). Same ascending-K per-output order.
+fn kernel_edge(
+    x: &[f32],
+    w: &[f32],
+    rows: usize,
+    k: usize,
+    n: usize,
+    nc: usize,
+    width: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(width <= NR);
+    let mut acc = [[0.0f32; NR]; MR];
+    for ki in 0..k {
+        let wr = &w[ki * n + nc..ki * n + nc + width];
+        for (r, accr) in acc.iter_mut().enumerate().take(rows) {
+            let xv = x[r * k + ki];
+            for (a, &wv) in accr[..width].iter_mut().zip(wr) {
+                *a += xv * wv;
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate().take(rows) {
+        out[r * n + nc..r * n + nc + width].copy_from_slice(&accr[..width]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Transposed matmul (the tied LM head): lane-parallel dot products
+// ---------------------------------------------------------------------------
+
+/// `y = x·wᵀ` for `x (M,K)` against row-major `wt (N,K)`. Each output is a
+/// K-length dot product accumulated in [`LANES`] interleaved partial sums
+/// (then reduced lane 0→15) — same order as [`matmul_transposed_scalar`].
+pub fn matmul_transposed(x: &[f32], wt: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(wt.len(), n * k);
+    let rows: Vec<usize> = (0..m).collect();
+    let out = par_map(&rows, |&mi| {
+        let xr = &x[mi * k..(mi + 1) * k];
+        let mut acc = vec![0.0f32; n];
+        for (ni, a) in acc.iter_mut().enumerate() {
+            *a = dot_lanes(xr, &wt[ni * k..(ni + 1) * k]);
+        }
+        acc
+    });
+    flatten(out, m * n)
+}
+
+/// Scalar reference for [`matmul_transposed`]: element-at-a-time with the
+/// same lane-interleaved accumulation order, so the two agree bit-exactly.
+pub fn matmul_transposed_scalar(x: &[f32], wt: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(wt.len(), n * k);
+    let rows: Vec<usize> = (0..m).collect();
+    let out = par_map(&rows, |&mi| {
+        let xr = &x[mi * k..(mi + 1) * k];
+        let mut acc = vec![0.0f32; n];
+        for (ni, a) in acc.iter_mut().enumerate() {
+            *a = dot_lanes_scalar(xr, &wt[ni * k..(ni + 1) * k]);
+        }
+        acc
+    });
+    flatten(out, m * n)
+}
+
+/// Lane-parallel dot product: LANES partial sums over ascending chunks,
+/// the `< LANES` remainder into lanes `0..rem`, then a sequential lane
+/// reduction. This is the canonical accumulation order for dot products.
+#[inline(always)]
+fn dot_lanes(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0.0f32; LANES];
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for (av, bv) in (&mut ac).zip(&mut bc) {
+        for j in 0..LANES {
+            lanes[j] += av[j] * bv[j];
+        }
+    }
+    for (j, (&av, &bv)) in ac.remainder().iter().zip(bc.remainder()).enumerate() {
+        lanes[j] += av * bv;
+    }
+    lanes.iter().fold(0.0f32, |s, &l| s + l)
+}
+
+/// Element-at-a-time transcription of [`dot_lanes`]'s accumulation order.
+fn dot_lanes_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let mut lanes = [0.0f32; LANES];
+    let full = a.len() - a.len() % LANES;
+    for i in 0..full {
+        lanes[i % LANES] += a[i] * b[i];
+    }
+    for i in full..a.len() {
+        lanes[i - full] += a[i] * b[i];
+    }
+    let mut s = 0.0f32;
+    for l in lanes {
+        s += l;
+    }
+    s
+}
+
+fn flatten(rows: Vec<Vec<f32>>, cap: usize) -> Vec<f32> {
+    let mut flat = Vec::with_capacity(cap);
+    for r in rows {
+        flat.extend_from_slice(&r);
+    }
+    flat
+}
+
+// ---------------------------------------------------------------------------
+// Bitset block-mask kernels (hwsim trace costing)
+// ---------------------------------------------------------------------------
+
+/// Pack a per-block boolean precision mask into `u64` words, LSB-first —
+/// the block-metadata representation the trace simulator counts with.
+pub fn pack_mask_u64(mask: &[bool]) -> Vec<u64> {
+    let mut out = vec![0u64; mask.len().div_ceil(64)];
+    for (i, &b) in mask.iter().enumerate() {
+        if b {
+            out[i / 64] |= 1u64 << (i % 64);
+        }
+    }
+    out
+}
+
+/// `popcount(a & b)` — blocks where both metadata bits are set.
+pub fn and_popcount(a: &[u64], b: &[u64]) -> u64 {
+    a.iter().zip(b).map(|(&x, &y)| (x & y).count_ones() as u64).sum()
+}
+
+/// `popcount(a & !b)` — blocks set in `a` but clear in `b`.
+pub fn andnot_popcount(a: &[u64], b: &[u64]) -> u64 {
+    a.iter().zip(b).map(|(&x, &y)| (x & !y).count_ones() as u64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quant_e2m1, quant_e4m3};
+    use crate::util::Rng;
+
+    #[test]
+    fn branch_free_codecs_match_scalar_on_edge_cases() {
+        let cases = [
+            0.0,
+            -0.0,
+            1.0625,
+            1.1875,
+            -1.3,
+            0.25,
+            0.75,
+            2.5,
+            3.5,
+            5.0,
+            447.9,
+            448.0,
+            449.0,
+            1e9,
+            -1e9,
+            1e-9,
+            E4M3_QUANTUM_SUBNORMAL * 0.49,
+            E4M3_QUANTUM_SUBNORMAL * 0.51,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::MIN_POSITIVE,
+            f32::MIN_POSITIVE / 2.0, // f32 subnormal
+        ];
+        for x in cases {
+            assert_eq!(e4m3(x), quant_e4m3(x), "e4m3({x})");
+            assert_eq!(e2m1(x), quant_e2m1(x), "e2m1({x})");
+        }
+        assert!(e4m3(f32::NAN).is_nan());
+        assert!(e2m1(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn branch_free_codecs_match_scalar_on_dense_sweep() {
+        // Dense magnitude sweep across every binade both formats touch,
+        // plus a random sweep — the vector lanes must be the exact lattice.
+        let mut rng = Rng::new(99);
+        for i in 0..200_000 {
+            let x = if i % 2 == 0 {
+                (rng.normal() as f32) * 10f32.powf((rng.f32() - 0.5) * 10.0)
+            } else {
+                rng.f32() * 1000.0 - 500.0
+            };
+            assert_eq!(e4m3(x), quant_e4m3(x), "e4m3({x})");
+            assert_eq!(e2m1(x), quant_e2m1(x), "e2m1({x})");
+        }
+    }
+
+    #[test]
+    fn blocked_matmul_matches_scalar_small() {
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let w = [1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        assert_eq!(matmul(&x, &w, 2, 3, 2), matmul_scalar(&x, &w, 2, 3, 2));
+        assert_eq!(matmul(&x, &w, 2, 3, 2), vec![4.0, 5.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn transposed_matches_its_scalar_reference() {
+        let mut rng = Rng::new(5);
+        for (m, k, n) in [(1, 1, 1), (3, 17, 5), (4, 64, 9), (2, 100, 33)] {
+            let x = rng.normal_vec(m * k, 1.0);
+            let wt = rng.normal_vec(n * k, 1.0);
+            assert_eq!(
+                matmul_transposed(&x, &wt, m, k, n),
+                matmul_transposed_scalar(&x, &wt, m, k, n),
+                "shape ({m},{k},{n})"
+            );
+        }
+    }
+
+    #[test]
+    fn mask_popcounts() {
+        let a: Vec<bool> = (0..130).map(|i| i % 3 == 0).collect();
+        let b: Vec<bool> = (0..130).map(|i| i % 2 == 0).collect();
+        let (pa, pb) = (pack_mask_u64(&a), pack_mask_u64(&b));
+        let both = a.iter().zip(&b).filter(|(&x, &y)| x && y).count() as u64;
+        let only_a = a.iter().zip(&b).filter(|(&x, &y)| x && !y).count() as u64;
+        assert_eq!(and_popcount(&pa, &pb), both);
+        assert_eq!(andnot_popcount(&pa, &pb), only_a);
+    }
+
+    #[test]
+    fn ppu_row_extreme_thresholds() {
+        let mut rng = Rng::new(3);
+        let k = BLOCK * 3;
+        let x = rng.normal_vec(k, 2.0);
+        let cw = vec![1.0f32; k];
+        let mut out = vec![0.0f32; k];
+        // threshold −1: every block FP8 (scores ≥ 0)
+        let n8 = ppu_quantize_row(&x, &cw, -1.0, &mut out);
+        assert_eq!(n8, 3);
+        let mut want = vec![0.0f32; k];
+        e4m3_slice(&x, &mut want);
+        assert_eq!(out, want);
+        // +inf: every block NVFP4
+        let n8 = ppu_quantize_row(&x, &cw, f32::INFINITY, &mut out);
+        assert_eq!(n8, 0);
+    }
+}

@@ -1,9 +1,11 @@
 //! Self-contained utilities replacing external crates for the fully-offline
 //! build (DESIGN.md §Deps): a minimal JSON codec, a seeded RNG, a scoped
-//! parallel map, and a micro-bench timer.
+//! parallel map, the shared blocked/SIMD compute kernels, and a micro-bench
+//! harness with machine-readable `BENCH_*.json` suites.
 
 pub mod bench;
 pub mod json;
+pub mod kernels;
 pub mod parallel;
 pub mod rng;
 

@@ -295,3 +295,39 @@ fn task_suites_score_through_native_graphs() {
     let acc = score_suite(&ev.fwd_quant, &tail, &suite, ev.batch, ev.seq, 8).unwrap();
     assert!((0.0..=1.0).contains(&acc), "accuracy {acc}");
 }
+
+/// The d_model=512 perf-scale preset, end to end: synthesize artifacts,
+/// load an `Evaluator`, quantize, and score perplexity through the native
+/// fwd_quant graph. Gated behind `FGMP_E2E_LARGE=1` (the CI release job
+/// sets it) so the default `cargo test -q` stays fast.
+#[test]
+fn large_preset_round_trips_through_evaluator() {
+    if std::env::var("FGMP_E2E_LARGE").is_err() {
+        eprintln!("skipping large-preset e2e (set FGMP_E2E_LARGE=1 to run)");
+        return;
+    }
+    let dir = std::env::temp_dir().join("fgmp_e2e_large_artifacts");
+    let _ = std::fs::remove_dir_all(&dir);
+    synth::ensure_model(&dir, "small-llama", 42).expect("synthesize small-llama artifacts");
+
+    let rt = Runtime::cpu().unwrap();
+    let ev = Evaluator::load(&rt, &dir, "small-llama").unwrap();
+    assert_eq!(ev.arts.manifest.param_shapes["embed"], vec![synth::VOCAB, 512]);
+    assert_eq!(ev.arts.manifest.num_linears, 16, "4 layers x 4 linears");
+
+    let cfg = QuantConfig::fgmp(0.7);
+    let qm = QuantizedModel::quantize(&ev.arts, &cfg).unwrap();
+    let w8 = qm.weight_fp8_fraction();
+    assert!((w8 - 0.3).abs() < 0.02, "weight FP8 fraction {w8} off 0.30 target");
+
+    let rep = ev.perplexity(&cfg, Some(&qm), 2).unwrap();
+    assert!(rep.ppl.is_finite() && rep.ppl > 1.0 && rep.ppl < 1e4, "ppl {}", rep.ppl);
+    assert!(rep.tokens > 0.0);
+    assert!(rep.act_fp8.iter().all(|&f| (0.0..=1.0).contains(&f)));
+
+    // The quantized graph must actually diverge from the BF16 reference
+    // (same windows, different numerics) while staying in a sane band.
+    let bf16 = ev.perplexity(&bf16_config(), None, 2).unwrap();
+    assert!(bf16.ppl.is_finite() && bf16.ppl > 1.0);
+    assert_ne!(bf16.nll_sum, rep.nll_sum);
+}

@@ -1,0 +1,190 @@
+//! Property tests pinning the blocked/SIMD kernels to their scalar
+//! references — bit-exactly, because every fast kernel preserves its
+//! reference's per-output accumulation order (ascending-K for `x·w`,
+//! lane-interleaved for dot products), and the branch-free quantizer
+//! lanes share the reference lattice.
+
+use fgmp::model::forward::fgmp_matmul;
+use fgmp::policy::impact_score_block;
+use fgmp::quant::fp4::quant_e2m1_slice;
+use fgmp::quant::fp8::quant_e4m3_slice;
+use fgmp::quant::nvfp4::nvfp4_roundtrip_block;
+use fgmp::quant::{nvfp4_roundtrip, nvfp4_scale, quant_e2m1, quant_e4m3};
+use fgmp::util::kernels;
+use fgmp::util::Rng;
+use fgmp::BLOCK;
+
+/// Shapes deliberately off the MR/NR/LANES grids: odd m, k, n, tiny and
+/// tile-straddling sizes, plus one aligned shape as control.
+const SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (1, 7, 3),
+    (3, 5, 9),
+    (4, 8, 8),     // exactly one MR x NR tile
+    (5, 9, 17),    // one past every tile edge
+    (7, 33, 31),
+    (13, 100, 29),
+    (16, 64, 48),  // aligned control
+    (31, 127, 65),
+    (6, 512, 19),  // deep-K odd-N (the LM-head-ish regime)
+];
+
+#[test]
+fn blocked_matmul_matches_scalar_bit_exactly() {
+    let mut rng = Rng::new(0xB10C);
+    for &(m, k, n) in SHAPES {
+        let x = rng.normal_vec(m * k, 2.0);
+        let w = rng.normal_vec(k * n, 0.5);
+        let blocked = kernels::matmul(&x, &w, m, k, n);
+        let scalar = kernels::matmul_scalar(&x, &w, m, k, n);
+        assert_eq!(blocked.len(), m * n);
+        // Bit-exact: same per-output ascending-K accumulation order.
+        for (i, (a, b)) in blocked.iter().zip(&scalar).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "({m},{k},{n}) elem {i}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn blocked_matmul_exact_even_with_zeros_and_denormals() {
+    // Zeros everywhere (the old kernel special-cased them) and tiny values.
+    let mut rng = Rng::new(77);
+    let (m, k, n) = (9, 21, 13);
+    let x: Vec<f32> = (0..m * k)
+        .map(|i| if i % 3 == 0 { 0.0 } else { rng.normal() as f32 * 1e-40 })
+        .collect();
+    let w = rng.normal_vec(k * n, 1.0);
+    let blocked = kernels::matmul(&x, &w, m, k, n);
+    let scalar = kernels::matmul_scalar(&x, &w, m, k, n);
+    for (a, b) in blocked.iter().zip(&scalar) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+#[test]
+fn transposed_matmul_matches_scalar_bit_exactly() {
+    let mut rng = Rng::new(0x7A);
+    for &(m, k, n) in SHAPES {
+        let x = rng.normal_vec(m * k, 2.0);
+        let wt = rng.normal_vec(n * k, 0.5);
+        let fast = kernels::matmul_transposed(&x, &wt, m, k, n);
+        let scalar = kernels::matmul_transposed_scalar(&x, &wt, m, k, n);
+        for (i, (a, b)) in fast.iter().zip(&scalar).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "({m},{k},{n}) elem {i}");
+        }
+    }
+}
+
+#[test]
+fn fgmp_matmul_matches_scalar_reference_pipeline() {
+    // End-to-end: the tiled PPU-quantize + blocked multiply must equal a
+    // hand-rolled scalar pipeline (per-block impact score, per-branch
+    // round-trip, scalar matmul) — value-exact under f32 ==.
+    let mut rng = Rng::new(0xF6);
+    for &(m, kb, n) in &[(3usize, 1usize, 5usize), (5, 2, 9), (8, 4, 17), (13, 3, 8)] {
+        let k = kb * BLOCK;
+        let x = rng.normal_vec(m * k, 2.0);
+        let w = rng.normal_vec(k * n, 0.3);
+        let cw: Vec<f32> = (0..k).map(|_| rng.f32() + 0.01).collect();
+        // A mid-range threshold so both branches execute.
+        let scores: Vec<f64> = (0..m)
+            .flat_map(|mi| {
+                (0..kb).map(move |bi| (mi * k + bi * BLOCK, bi * BLOCK)).collect::<Vec<_>>()
+            })
+            .map(|(off, coff)| impact_score_block(&x[off..off + BLOCK], &cw[coff..coff + BLOCK]))
+            .collect();
+        let mut sorted = scores.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let threshold = sorted[sorted.len() / 2] as f32;
+
+        let (got, frac) = fgmp_matmul(&x, &w, m, k, n, &cw, threshold);
+
+        // Scalar reference pipeline.
+        let mut xq = vec![0.0f32; m * k];
+        let mut n_fp8 = 0usize;
+        for mi in 0..m {
+            for bi in 0..kb {
+                let off = mi * k + bi * BLOCK;
+                let xb = &x[off..off + BLOCK];
+                let cb = &cw[bi * BLOCK..(bi + 1) * BLOCK];
+                if impact_score_block(xb, cb) > threshold as f64 {
+                    n_fp8 += 1;
+                    for (o, &v) in xq[off..off + BLOCK].iter_mut().zip(xb) {
+                        *o = quant_e4m3(v);
+                    }
+                } else {
+                    let absmax = xb.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+                    nvfp4_roundtrip_block(xb, nvfp4_scale(absmax), &mut xq[off..off + BLOCK]);
+                }
+            }
+        }
+        let want = kernels::matmul_scalar(&xq, &w, m, k, n);
+        assert_eq!(got, want, "({m},{k},{n})");
+        let want_frac = n_fp8 as f32 / (m * kb) as f32;
+        assert_eq!(frac, want_frac);
+        assert!(frac > 0.0 && frac < 1.0, "median threshold must split blocks, got {frac}");
+    }
+}
+
+#[test]
+fn quant_slices_match_scalar_codecs() {
+    let mut rng = Rng::new(0x5E3D);
+    // Random magnitudes spanning every binade both formats touch, plus
+    // exact grid/tie points and the zero/subnormal edges.
+    let mut xs: Vec<f32> = Vec::new();
+    for _ in 0..20_000 {
+        xs.push((rng.normal() as f32) * 10f32.powf((rng.f32() - 0.5) * 12.0));
+    }
+    xs.extend([
+        0.0,
+        -0.0,
+        1.0625,
+        1.1875,
+        0.25,
+        0.75,
+        2.5,
+        3.5,
+        5.0,
+        -5.0,
+        6.0,
+        7.0,
+        448.0,
+        449.0,
+        -449.0,
+        1e9,
+        -1e9,
+        1e-9,
+        0.015625,
+        0.001953125,
+        0.5,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+    ]);
+    let mut out = vec![0.0f32; xs.len()];
+    quant_e4m3_slice(&xs, &mut out);
+    for (&x, &q) in xs.iter().zip(&out) {
+        assert_eq!(q, quant_e4m3(x), "e4m3({x})");
+    }
+    quant_e2m1_slice(&xs, &mut out);
+    for (&x, &q) in xs.iter().zip(&out) {
+        assert_eq!(q, quant_e2m1(x), "e2m1({x})");
+    }
+}
+
+#[test]
+fn nvfp4_roundtrip_matches_manual_blocks() {
+    let mut rng = Rng::new(4242);
+    let x = rng.normal_vec(BLOCK * 33, 5.0);
+    let mut fast = vec![0.0f32; x.len()];
+    let scales = nvfp4_roundtrip(&x, &mut fast);
+    assert_eq!(scales.len(), 33);
+    for (bi, xb) in x.chunks_exact(BLOCK).enumerate() {
+        let absmax = xb.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let s = nvfp4_scale(absmax);
+        assert_eq!(scales[bi], s, "block {bi} scale");
+        for (j, &v) in xb.iter().enumerate() {
+            let want = if s > 0.0 { quant_e2m1(v / s) * s } else { 0.0 };
+            assert_eq!(fast[bi * BLOCK + j], want, "block {bi} elem {j}");
+        }
+    }
+}
