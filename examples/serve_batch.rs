@@ -54,6 +54,8 @@ fn main() -> fgmp::Result<()> {
         policy: BatchPolicy::default(),
         layer_shapes: shapes,
         queue_depth: 512,
+        kv_precision: fgmp::model::KvPrecision::Fp8,
+        decode_batch: 4,
     };
     let windows = ev.eval_windows(16);
     let seq = ev.seq;
@@ -114,6 +116,8 @@ fn main() -> fgmp::Result<()> {
     println!("throughput     : {:.0} scored tokens/s", toks / wall.as_secs_f64());
     println!("latency        : p50 {:.1} ms  p95 {:.1} ms  p99 {:.1} ms (batch fill {:.0}%)",
              snap.p50_ms, snap.p95_ms, snap.p99_ms, snap.mean_batch_fill * 100.0);
+    println!("decode         : {:.1} tok/s  ttft p50 {:.1} ms  occupancy {:.2}",
+             snap.decode_tok_per_s, snap.ttft_p50_ms, snap.mean_decode_occupancy);
     println!("perplexity     : {:.4} vs FP8 {:.4}  ({:+.2}%  | paper: <1%)",
              ppl, fp8_rep.ppl, (ppl / fp8_rep.ppl - 1.0) * 100.0);
     println!("sim energy     : {:.3} mJ vs FP8 {:.3} mJ  (savings {:.1}%  | paper: 14%)",

@@ -7,7 +7,10 @@
 use std::time::Duration;
 
 use crate::io::synth::SynthConfig;
-use crate::model::forward::{fgmp_matmul, forward};
+use crate::model::forward::{
+    fgmp_matmul, forward, forward_prefill, forward_step, forward_step_batch, ModelArch,
+};
+use crate::model::kv::{KvPrecision, KvState};
 use crate::quant::fp8::quant_e4m3_slice;
 use crate::quant::{nvfp4_roundtrip, quant_e4m3, sw_clip_tensor};
 use crate::util::bench::{bench, black_box, BenchResult, BenchSuite};
@@ -27,12 +30,18 @@ pub mod names {
     pub const SW_CLIP: &str = "sw_clip_256x512";
     pub const FGMP_MATMUL: &str = "fgmp_matmul_256x512x1536";
     pub const FORWARD_D512: &str = "forward_d512_b1s32";
+    pub const DECODE_RECOMPUTE: &str = "decode_recompute_d512_p16_g8";
+    pub const DECODE_CACHED: &str = "decode_cached_d512_p16_g8";
+    pub const DECODE_OCC1: &str = "decode_step_d512_occ1";
+    pub const DECODE_OCC4: &str = "decode_step_d512_occ4";
+    pub const DECODE_OCC8: &str = "decode_step_d512_occ8";
 
     pub const SPEEDUP_MATMUL: &str = "speedup_matmul_d512";
     pub const SPEEDUP_MATMUL_T: &str = "speedup_matmul_t_d512";
     pub const SPEEDUP_QUANT: &str = "speedup_quant_e4m3";
+    pub const SPEEDUP_DECODE: &str = "speedup_decode_cached_d512";
 
-    pub const ALL: [&str; 10] = [
+    pub const ALL: [&str; 15] = [
         MATMUL_SCALAR,
         MATMUL_BLOCKED,
         MATMUL_T_SCALAR,
@@ -43,8 +52,14 @@ pub mod names {
         SW_CLIP,
         FGMP_MATMUL,
         FORWARD_D512,
+        DECODE_RECOMPUTE,
+        DECODE_CACHED,
+        DECODE_OCC1,
+        DECODE_OCC4,
+        DECODE_OCC8,
     ];
-    pub const ALL_DERIVED: [&str; 3] = [SPEEDUP_MATMUL, SPEEDUP_MATMUL_T, SPEEDUP_QUANT];
+    pub const ALL_DERIVED: [&str; 4] =
+        [SPEEDUP_MATMUL, SPEEDUP_MATMUL_T, SPEEDUP_QUANT, SPEEDUP_DECODE];
 }
 
 /// Print one result and add it to the suite.
@@ -142,6 +157,20 @@ pub fn pipeline_benches(suite: &mut BenchSuite, budget: Duration) {
     keep(suite, r);
 
     // The d512 preset architecture — one definition, shared with synth.
+    let (arch, params) = d512_model(&mut rng);
+    let pm: std::collections::HashMap<&str, &[f32]> =
+        params.iter().map(|(nm, v)| (nm.as_str(), v.as_slice())).collect();
+    let (b, s) = (1usize, 32usize);
+    let tokens: Vec<i32> = (0..b * s).map(|i| (i % arch.vocab) as i32).collect();
+    let r = bench(names::FORWARD_D512, Some((b * s) as u64), budget, || {
+        forward(&arch, &pm, &tokens, b, s, None, None, false).unwrap()
+    });
+    keep(suite, r);
+}
+
+/// Shared d512 model setup for the decode workloads (random params at the
+/// `small-llama` preset architecture — no artifacts required).
+fn d512_model(rng: &mut Rng) -> (ModelArch, Vec<(String, Vec<f32>)>) {
     let arch = SynthConfig::preset("small-llama", 42).expect("small-llama preset").arch;
     let params: Vec<(String, Vec<f32>)> = arch
         .param_names()
@@ -153,14 +182,58 @@ pub fn pipeline_benches(suite: &mut BenchSuite, budget: Duration) {
             (nm.clone(), data)
         })
         .collect();
+    (arch, params)
+}
+
+/// Decode-throughput workloads at the d512 preset: the same 8-token
+/// schedule decoded (a) KV-cached via `forward_prefill` + `forward_step`
+/// and (b) by windowed full-sequence recompute (the pre-Engine serve
+/// path), with their min-time ratio recorded as `speedup_decode_cached` —
+/// the algorithmic win the stateful session API exists for. Plus one
+/// batched `forward_step_batch` at occupancy 1/4/8 (the continuous-
+/// batching shape).
+pub fn decode_benches(suite: &mut BenchSuite, budget: Duration) {
+    let mut rng = Rng::new(44);
+    let (arch, params) = d512_model(&mut rng);
     let pm: std::collections::HashMap<&str, &[f32]> =
         params.iter().map(|(nm, v)| (nm.as_str(), v.as_slice())).collect();
-    let (b, s) = (1usize, 32usize);
-    let tokens: Vec<i32> = (0..b * s).map(|i| (i % arch.vocab) as i32).collect();
-    let r = bench(names::FORWARD_D512, Some((b * s) as u64), budget, || {
-        forward(&arch, &pm, &tokens, b, s, None, None, false).unwrap()
+
+    let prompt_len = 16usize;
+    let gen = 8usize;
+    let prompt: Vec<i32> = (0..prompt_len).map(|i| ((i * 7) % arch.vocab) as i32).collect();
+    let next: Vec<i32> = (0..gen).map(|i| ((i * 11 + 3) % arch.vocab) as i32).collect();
+
+    // Prefill once; each cached iteration clones the warm cache and steps.
+    let mut kv0 = KvState::new(&arch, KvPrecision::Fp16);
+    forward_prefill(&arch, &pm, &prompt, None, &mut kv0).expect("prefill");
+
+    let recompute = bench(names::DECODE_RECOMPUTE, Some(gen as u64), budget, || {
+        let mut ctx = prompt.clone();
+        for &t in &next {
+            ctx.push(t);
+            let s = ctx.len();
+            black_box(forward(&arch, &pm, black_box(&ctx), 1, s, None, None, true).unwrap());
+        }
     });
-    keep(suite, r);
+    let cached = bench(names::DECODE_CACHED, Some(gen as u64), budget, || {
+        let mut kv = kv0.clone();
+        for &t in &next {
+            black_box(forward_step(&arch, &pm, black_box(t), &mut kv, None).unwrap());
+        }
+    });
+    pair(suite, names::SPEEDUP_DECODE, recompute, cached);
+
+    for (occ, name) in
+        [(1usize, names::DECODE_OCC1), (4, names::DECODE_OCC4), (8, names::DECODE_OCC8)]
+    {
+        let toks: Vec<i32> = (0..occ).map(|i| ((i * 5 + 1) % arch.vocab) as i32).collect();
+        let r = bench(name, Some(occ as u64), budget, || {
+            let mut owned: Vec<KvState> = (0..occ).map(|_| kv0.clone()).collect();
+            let mut kvs: Vec<&mut KvState> = owned.iter_mut().collect();
+            black_box(forward_step_batch(&arch, &pm, &toks, &mut kvs, None).unwrap());
+        });
+        keep(suite, r);
+    }
 }
 
 #[cfg(test)]
@@ -188,7 +261,9 @@ mod tests {
                 "baseline derived '{key}' is not produced by fgmp::benchsuite"
             );
         }
-        // The acceptance floor itself: the blocked matmul must be gated.
+        // The acceptance floors themselves: the blocked matmul and the
+        // cached-decode-vs-recompute speedup must both be gated.
         assert!(baseline.derived.get(names::SPEEDUP_MATMUL).is_some_and(|&v| v >= 2.0));
+        assert!(baseline.derived.get(names::SPEEDUP_DECODE).is_some_and(|&v| v >= 1.0));
     }
 }

@@ -60,7 +60,17 @@ impl Batcher {
     /// Drain everything immediately available, up to max_batch (used by the
     /// greedy inner loop when the executor is already hot).
     pub fn drain_ready(&mut self, batch: &mut Vec<Request>) {
-        while batch.len() < self.policy.max_batch {
+        self.drain_ready_capped(batch, self.policy.max_batch)
+    }
+
+    /// Drain immediately-available requests until `batch` holds `cap`
+    /// entries — the continuous-batching admission path: the decode loop
+    /// calls this between steps with `cap = free session slots`, so a
+    /// waiting request is picked up within one decode step of capacity
+    /// opening (never parked past its deadline while slots are free;
+    /// exercised by tests/coordinator_props.rs).
+    pub fn drain_ready_capped(&mut self, batch: &mut Vec<Request>, cap: usize) {
+        while batch.len() < cap {
             match self.rx.try_recv() {
                 Ok(req) => batch.push(req),
                 Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,

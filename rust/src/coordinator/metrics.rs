@@ -21,6 +21,12 @@ struct Inner {
     energy_pj: f64,
     energy_fp8_pj: f64,
     busy: Duration,
+    // Decode-loop (continuous batching) accounting.
+    ttft_us: Vec<u64>,
+    decode_steps: u64,
+    decode_rows: u64,
+    decode_slot_rows: u64,
+    decode_busy: Duration,
 }
 
 /// A point-in-time snapshot.
@@ -41,6 +47,20 @@ pub struct Snapshot {
     pub energy_fp8_j: f64,
     pub energy_savings: f64,
     pub executor_busy_s: f64,
+    // --- decode loop (continuous batching) ---
+    /// Batched decode steps taken.
+    pub decode_steps: u64,
+    /// Mean live sessions per decode step (batch occupancy, rows).
+    pub mean_decode_occupancy: f64,
+    /// Occupancy as a fraction of the decode batch capacity.
+    pub decode_fill: f64,
+    /// Decode-produced tokens (one per live session per step) per second
+    /// of decode-loop busy time — prefill-produced first tokens and
+    /// prefill time are both excluded.
+    pub decode_tok_per_s: f64,
+    /// Time-to-first-token: submit → prefilled logits, p50 / p95 (ms).
+    pub ttft_p50_ms: f64,
+    pub ttft_p95_ms: f64,
 }
 
 impl Metrics {
@@ -75,22 +95,52 @@ impl Metrics {
         self.inner.lock().unwrap().generated += n;
     }
 
+    /// A generate request's prompt finished prefill — its first token's
+    /// logits exist. `ttft` is measured from request submission.
+    pub fn record_ttft(&self, ttft: Duration) {
+        self.inner.lock().unwrap().ttft_us.push(ttft.as_micros() as u64);
+    }
+
+    /// One batched decode step: `rows` live sessions advanced out of
+    /// `capacity` slots in `busy` executor time, costing the simulated
+    /// `energy_pj` (vs the all-FP8 `energy_fp8_pj` baseline) including KV
+    /// traffic.
+    pub fn record_decode_step(
+        &self,
+        rows: usize,
+        capacity: usize,
+        busy: Duration,
+        energy_pj: f64,
+        energy_fp8_pj: f64,
+    ) {
+        let mut m = self.inner.lock().unwrap();
+        m.decode_steps += 1;
+        m.decode_rows += rows as u64;
+        m.decode_slot_rows += capacity as u64;
+        m.decode_busy += busy;
+        m.energy_pj += energy_pj;
+        m.energy_fp8_pj += energy_fp8_pj;
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let m = self.inner.lock().unwrap();
         let mut lats = m.latencies_us.clone();
         lats.sort_unstable();
-        let pct = |q: f64| -> f64 {
-            if lats.is_empty() {
+        let pct_of = |sorted: &[u64], q: f64| -> f64 {
+            if sorted.is_empty() {
                 return 0.0;
             }
-            let i = ((lats.len() - 1) as f64 * q).round() as usize;
-            lats[i] as f64 / 1000.0
+            let i = ((sorted.len() - 1) as f64 * q).round() as usize;
+            sorted[i] as f64 / 1000.0
         };
+        let pct = |q: f64| pct_of(&lats, q);
         let mean = if lats.is_empty() {
             0.0
         } else {
             lats.iter().sum::<u64>() as f64 / lats.len() as f64 / 1000.0
         };
+        let mut ttfts = m.ttft_us.clone();
+        ttfts.sort_unstable();
         Snapshot {
             requests: m.rows,
             batches: m.batches,
@@ -113,6 +163,24 @@ impl Metrics {
                 0.0
             },
             executor_busy_s: m.busy.as_secs_f64(),
+            decode_steps: m.decode_steps,
+            mean_decode_occupancy: if m.decode_steps == 0 {
+                0.0
+            } else {
+                m.decode_rows as f64 / m.decode_steps as f64
+            },
+            decode_fill: if m.decode_slot_rows == 0 {
+                0.0
+            } else {
+                m.decode_rows as f64 / m.decode_slot_rows as f64
+            },
+            decode_tok_per_s: if m.decode_busy.is_zero() {
+                0.0
+            } else {
+                m.decode_rows as f64 / m.decode_busy.as_secs_f64()
+            },
+            ttft_p50_ms: pct_of(&ttfts, 0.50),
+            ttft_p95_ms: pct_of(&ttfts, 0.95),
         }
     }
 }
@@ -142,5 +210,30 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.requests, 0);
         assert_eq!(s.p99_ms, 0.0);
+        assert_eq!(s.decode_steps, 0);
+        assert_eq!(s.mean_decode_occupancy, 0.0);
+        assert_eq!(s.decode_tok_per_s, 0.0);
+        assert_eq!(s.ttft_p50_ms, 0.0);
+    }
+
+    #[test]
+    fn decode_accounting_reconciles() {
+        let m = Metrics::new();
+        m.record_ttft(Duration::from_millis(4));
+        m.record_ttft(Duration::from_millis(8));
+        // 3 steps at occupancy 4, 2, 2 of capacity 4 → 8 decode-produced
+        // tokens over 2s of decode busy time.
+        m.record_decode_step(4, 4, Duration::from_millis(500), 10.0, 20.0);
+        m.record_decode_step(2, 4, Duration::from_millis(750), 10.0, 20.0);
+        m.record_decode_step(2, 4, Duration::from_millis(750), 10.0, 20.0);
+        m.record_generated(8);
+        let s = m.snapshot();
+        assert_eq!(s.decode_steps, 3);
+        assert!((s.mean_decode_occupancy - 8.0 / 3.0).abs() < 1e-9);
+        assert!((s.decode_fill - 8.0 / 12.0).abs() < 1e-9);
+        assert!((s.decode_tok_per_s - 4.0).abs() < 1e-9);
+        assert!(s.ttft_p50_ms >= 4.0 && s.ttft_p95_ms >= s.ttft_p50_ms);
+        // Decode energy folds into the shared energy accounting.
+        assert!((s.energy_savings - 0.5).abs() < 1e-9);
     }
 }

@@ -4,10 +4,15 @@
 //! AOT-compiled quantized graphs — python is never on this path.
 //!
 //! Shape: `Router` fans requests into per-kind queues → `Batcher` packs
-//! rows into fixed-shape device batches under a deadline → a blocking
-//! executor thread runs the PJRT executable → responses resolve per-request
-//! oneshots. Energy accounting per batch comes from the hwsim model, so the
-//! serving report carries the paper's joules-per-token story.
+//! score rows into fixed-shape device batches under a deadline → a blocking
+//! executor thread runs the one-shot executable → responses resolve
+//! per-request oneshots. Generation instead runs a continuous-batching
+//! decode loop over the stateful `runtime::Engine`: requests are admitted
+//! between decode steps, prefilled into KV-cached sessions, stepped
+//! together as one batched forward, and retired individually. Energy
+//! accounting per batch/step comes from the hwsim model — including
+//! KV-cache traffic at the session KV precision — so the serving report
+//! carries the paper's joules-per-token story.
 
 pub mod batcher;
 pub mod metrics;
@@ -17,4 +22,4 @@ pub mod server;
 pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::Metrics;
 pub use router::{Request, RequestKind, Response, Router};
-pub use server::{Server, ServerConfig};
+pub use server::{decode_step_energy, kv_dims_from_profiles, Server, ServerConfig};

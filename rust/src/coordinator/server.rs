@@ -1,14 +1,26 @@
 //! The serving loop: batcher → executor → per-request responses, with hwsim
 //! energy accounting per batch. Thread-based (DESIGN.md §Deps): one worker
 //! thread per request kind, each owning its queue.
+//!
+//! Scoring runs the stateless one-shot graph as before. Generation runs a
+//! **continuous-batching decode loop** over the stateful [`Engine`]: new
+//! requests are admitted from the batcher *between* decode steps (up to the
+//! decode batch capacity), each is prefilled once into a KV-cached
+//! [`Session`], all live sessions advance one token per step as a single
+//! batched forward over the blocked kernels, and finished sessions retire
+//! immediately — no request waits for another's completion. Per-step energy
+//! includes the KV-cache read traffic at the sessions' KV precision via
+//! [`crate::hwsim::kvcache::kv_cache_bits`].
 
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::hwsim::energy::EnergyModel;
+use crate::hwsim::kvcache::{kv_cache_bits, KvModelDims};
 use crate::hwsim::{simulate_matmul, DatapathConfig, LayerProfile, MatmulJob};
-use crate::runtime::{ArgValue, ExecSpec, Executable, Runtime};
+use crate::model::kv::KvPrecision;
+use crate::runtime::{ArgValue, Engine, ExecSpec, Executable, Runtime, Session};
 use crate::Result;
 
 use super::batcher::{BatchPolicy, Batcher};
@@ -25,6 +37,11 @@ pub struct ServerConfig {
     /// (activation fractions are read per batch from the graph outputs).
     pub layer_shapes: Vec<LayerProfile>,
     pub queue_depth: usize,
+    /// KV-cache storage precision of generation sessions.
+    pub kv_precision: KvPrecision,
+    /// Max live sessions the decode loop advances per step (continuous-
+    /// batching capacity; independent of the score graph's frozen B).
+    pub decode_batch: usize,
 }
 
 /// A running coordinator instance.
@@ -39,9 +56,9 @@ impl Server {
     ///
     /// Workers receive graph *specs*, not executables: executables may not
     /// be Send (the PJRT backend's handles are Rc-based), so each worker
-    /// thread builds its own runtime + executable from the spec. The arg
-    /// tails (plain data: weights, weightings, thresholds) cross threads
-    /// freely.
+    /// thread builds its own runtime + executable/engine from the spec.
+    /// The arg tails (plain data: weights, weightings, thresholds) cross
+    /// threads freely.
     pub fn start(
         cfg: ServerConfig,
         fwd_spec: ExecSpec,
@@ -65,8 +82,15 @@ impl Server {
             let (cfg, metrics) = (cfg.clone(), metrics.clone());
             handles.push(std::thread::spawn(move || {
                 let rt = Runtime::cpu().expect("runtime (gen worker)");
-                let exe = rt.load_spec(&logits_spec).expect("load logits_quant");
-                generate_worker(cfg, exe, logits_args_tail, gen_rx, metrics)
+                match Engine::new(&rt, &logits_spec, logits_args_tail, cfg.kv_precision) {
+                    Ok(engine) => generate_worker(cfg, engine, gen_rx, metrics),
+                    Err(e) => {
+                        eprintln!("gen worker: engine init failed: {e}");
+                        while let Ok(req) = gen_rx.recv() {
+                            fail_request(req);
+                        }
+                    }
+                }
             }));
         }
 
@@ -104,6 +128,50 @@ pub fn batch_energy(shapes: &[LayerProfile], act_fp8: &[f32], m: usize) -> (f64,
         fp8 += r8.total_energy_pj() - em.e_mux_tax * r8.vmacs as f64;
     }
     (fgmp, fp8)
+}
+
+/// KV-sizing dims recovered from the serving layer profiles (n_layers from
+/// the layer indices, d_model from the qkv input width).
+pub fn kv_dims_from_profiles(shapes: &[LayerProfile]) -> KvModelDims {
+    let n_layers = shapes.iter().map(|p| p.layer + 1).max().unwrap_or(0);
+    let d_model = shapes
+        .iter()
+        .find(|p| p.kind == "qkv_proj")
+        .map(|p| p.k)
+        .or_else(|| shapes.first().map(|p| p.k))
+        .unwrap_or(0);
+    let weight_elements = shapes.iter().map(|p| (p.k * p.n) as u64).sum();
+    KvModelDims { n_layers, d_model, weight_elements }
+}
+
+/// Simulated energy of one decode step: the datapath compute over `rows`
+/// new token rows **plus** the KV-cache read traffic — every step streams
+/// each live session's whole cache (`kv_tokens` tokens in total) through
+/// the attention units at `kv_bits_per_value`. The baseline is all-FP8
+/// compute with the paper's 16-bit KV cache, so an FP8 cache's traffic
+/// savings show up in `energy_savings` alongside the datapath's.
+pub fn decode_step_energy(
+    shapes: &[LayerProfile],
+    act_fp8: &[f32],
+    rows: usize,
+    dims: &KvModelDims,
+    kv_tokens: u64,
+    kv_bits_per_value: f64,
+) -> (f64, f64) {
+    let (fgmp, fp8) = batch_energy(shapes, act_fp8, rows);
+    let em = EnergyModel::default();
+    let kv = kv_cache_bits(dims, kv_tokens, kv_bits_per_value) as f64 * em.e_kv_bit;
+    let kv16 = kv_cache_bits(dims, kv_tokens, 16.0) as f64 * em.e_kv_bit;
+    (fgmp + kv, fp8 + kv16)
+}
+
+fn fail_request(req: Request) {
+    let _ = req.reply.send(Response {
+        id: req.id,
+        nll: None,
+        generated: None,
+        latency: req.submitted_at.elapsed(),
+    });
 }
 
 fn score_worker(
@@ -157,69 +225,126 @@ fn score_worker(
             }
             Err(_) => {
                 for req in batch {
-                    let _ = req.reply.send(Response {
-                        id: req.id,
-                        nll: None,
-                        generated: None,
-                        latency: req.submitted_at.elapsed(),
-                    });
+                    fail_request(req);
                 }
             }
         }
     }
 }
 
+/// One generation request being decoded.
+struct LiveGen {
+    req: Request,
+    sess: Session,
+    want: usize,
+    produced: Vec<i32>,
+}
+
+/// Send responses for every session that has produced its token budget,
+/// removing it from the live set (continuous retirement).
+fn retire_finished(live: &mut Vec<LiveGen>, metrics: &Metrics) {
+    let mut i = 0;
+    while i < live.len() {
+        if live[i].produced.len() >= live[i].want {
+            let lg = live.swap_remove(i);
+            metrics.record_generated(lg.want as u64);
+            let _ = lg.req.reply.send(Response {
+                id: lg.req.id,
+                nll: None,
+                generated: Some(lg.produced[..lg.want].to_vec()),
+                latency: lg.req.submitted_at.elapsed(),
+            });
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// The continuous-batching decode loop. Each iteration: admit waiting
+/// requests into free session slots (blocking only when no session is
+/// live), prefill them (TTFT ends here — the first token's logits exist),
+/// retire anything already satisfied, then advance every live session one
+/// token in a single batched [`Engine::decode_step`].
 fn generate_worker(
     cfg: ServerConfig,
-    exe: Executable,
-    tail: Vec<ArgValue>,
+    engine: Engine,
     rx: Receiver<Request>,
     metrics: Arc<Metrics>,
 ) {
-    // Greedy decode, one request at a time (tiny models; generation is the
-    // demo path — scoring is the serving hot path).
-    while let Ok(req) = rx.recv() {
-        if let RequestKind::Generate { prompt, n_tokens } = &req.kind {
-            let (b, s) = (cfg.batch, cfg.seq);
-            let mut ctx = prompt.clone();
-            let mut produced = Vec::with_capacity(*n_tokens);
-            let mut failed = false;
-            for _ in 0..*n_tokens {
-                // Right-align the context into the fixed window.
-                let mut tokens = vec![0i32; b * s];
-                let start = ctx.len().saturating_sub(s);
-                let window = &ctx[start..];
-                let off = s - window.len();
-                tokens[off..s].copy_from_slice(window);
-                // Other rows stay zero; we read row 0's logits only.
-                let mut args = vec![ArgValue::I32 { shape: vec![b, s], data: tokens }];
-                args.extend(tail.iter().cloned());
-                match exe.run(&args) {
-                    Ok(out) => {
-                        let vocab = out[0].len() / b;
-                        let row0 = &out[0][..vocab];
-                        let next = row0
-                            .iter()
-                            .enumerate()
-                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                            .map(|(i, _)| i as i32)
-                            .unwrap_or(0);
-                        ctx.push(next);
-                        produced.push(next);
-                    }
-                    Err(_) => {
-                        failed = true;
-                        break;
-                    }
+    let cap = cfg.decode_batch.max(1);
+    // Admission shares the score path's deadline policy but is capped by
+    // the decode batch, not the score graph's B.
+    let policy = BatchPolicy { max_batch: cap, ..cfg.policy.clone() };
+    let mut batcher = Batcher::new(policy, rx);
+    let kv_dims = kv_dims_from_profiles(&cfg.layer_shapes);
+    let kv_bits = engine.kv_precision().bits_per_value();
+    let mut live: Vec<LiveGen> = Vec::new();
+
+    loop {
+        // Admit new work between steps.
+        let mut admitted = Vec::new();
+        if live.is_empty() {
+            match batcher.next_batch() {
+                Some(batch) => admitted = batch,
+                None => break, // queue closed and drained; nothing live
+            }
+        } else if live.len() < cap {
+            batcher.drain_ready_capped(&mut admitted, cap - live.len());
+        }
+        for req in admitted {
+            let (prompt, want) = match &req.kind {
+                RequestKind::Generate { prompt, n_tokens } => (prompt.clone(), *n_tokens),
+                // The router partitions by kind; anything else is a bug —
+                // fail it rather than wedge the loop.
+                _ => {
+                    fail_request(req);
+                    continue;
+                }
+            };
+            match engine.prefill(&prompt) {
+                Ok(sess) => {
+                    metrics.record_ttft(req.submitted_at.elapsed());
+                    let mut lg = LiveGen { req, sess, want, produced: Vec::with_capacity(want) };
+                    lg.produced.push(lg.sess.next_token());
+                    live.push(lg);
+                }
+                Err(_) => fail_request(req),
+            }
+        }
+        retire_finished(&mut live, &metrics);
+        if live.is_empty() {
+            continue;
+        }
+
+        // Step every live session by one token, batched.
+        let t0 = Instant::now();
+        let stepped = {
+            let mut sessions: Vec<&mut Session> =
+                live.iter_mut().map(|lg| &mut lg.sess).collect();
+            engine.decode_step(&mut sessions)
+        };
+        let busy = t0.elapsed();
+        match stepped {
+            Ok(step) => {
+                let (e, e8) = decode_step_energy(
+                    &cfg.layer_shapes,
+                    &step.act_fp8,
+                    step.rows,
+                    &kv_dims,
+                    step.kv_tokens,
+                    kv_bits,
+                );
+                metrics.record_decode_step(step.rows, cap, busy, e, e8);
+                for lg in &mut live {
+                    lg.produced.push(lg.sess.next_token());
                 }
             }
-            metrics.record_generated(produced.len() as u64);
-            let _ = req.reply.send(Response {
-                id: req.id,
-                nll: None,
-                generated: if failed { None } else { Some(produced) },
-                latency: req.submitted_at.elapsed(),
-            });
+            Err(_) => {
+                for lg in live.drain(..) {
+                    fail_request(lg.req);
+                }
+            }
         }
+        retire_finished(&mut live, &metrics);
     }
 }

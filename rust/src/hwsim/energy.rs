@@ -62,6 +62,10 @@ pub struct EnergyModel {
     pub e_weight_load_block: f64,
     /// Activation broadcast energy per block per lane row.
     pub e_act_broadcast: f64,
+    /// On-chip KV-cache traffic energy per bit moved (decode reads the
+    /// whole cache every step; anchored to `e_weight_load_block` ≈ 0.9 pJ
+    /// per 128-bit FP8 block).
+    pub e_kv_bit: f64,
 }
 
 impl Default for EnergyModel {
@@ -78,6 +82,7 @@ impl Default for EnergyModel {
             e_ppu_block: 25.7,
             e_weight_load_block: 0.9,
             e_act_broadcast: 0.35,
+            e_kv_bit: 0.9 / 128.0,
         }
     }
 }

@@ -46,11 +46,20 @@ COMMANDS
   tasks      --fp4 0.9,0.7 --max-items 64
   hwsim
   report     --linear blk0.fc1 --fp4 0.9 --rows 24
-  serve      --fp4 0.7 --requests 64
+  serve      --fp4 0.7 --requests 64 [--gen 8] [--gen-tokens 16]
+             [--kv fp16|fp8] [--decode-batch 8]
+             score + generate traffic through the coordinator: scoring
+             batches the one-shot graph, generation runs the KV-cached
+             continuous-batching decode loop (--kv picks the cache
+             precision, --decode-batch its occupancy cap)
+  generate   --prompt-len 16 --tokens 32 [--sessions 4] [--kv fp16|fp8]
+             drive the stateful Engine directly: prefill each session
+             from the corpus, decode all sessions batched, print tokens
+             and decode throughput
   bench      [--out .] [--name hotpath] [--budget-ms 300] [--baseline FILE]
-             run blocked-vs-scalar kernel + forward benchmarks, write
-             BENCH_<name>.json; with --baseline, exit non-zero on any
-             >2x throughput regression (the CI perf gate)
+             run blocked-vs-scalar kernel + forward + decode benchmarks,
+             write BENCH_<name>.json; with --baseline, exit non-zero on
+             any >2x throughput regression (the CI perf gate)
 
 Commands that need artifacts synthesize them on first use when the model
 directory is missing (hermetic default). Point --artifacts at a directory
@@ -155,7 +164,7 @@ fn main() -> Result<()> {
     // the command name is known-good (a typo must not cost a synth run).
     if matches!(
         cli.cmd.as_str(),
-        "quantize" | "eval" | "sweep" | "tasks" | "report" | "serve"
+        "quantize" | "eval" | "sweep" | "tasks" | "report" | "serve" | "generate"
     ) {
         ensure_artifacts(&cli)?;
     }
@@ -260,6 +269,9 @@ fn main() -> Result<()> {
         "serve" => {
             cmd_serve(&cli, cli.f64("fp4", 0.7), cli.usize("requests", 64))?;
         }
+        "generate" => {
+            cmd_generate(&cli)?;
+        }
         "bench" => {
             cmd_bench(&cli)?;
         }
@@ -304,7 +316,7 @@ fn cmd_tasks(cli: &Cli, fp4: &[f64], max_items: usize) -> Result<()> {
 /// more than 2x against the checked-in baseline, or a derived speedup
 /// falls below its floor.
 fn cmd_bench(cli: &Cli) -> Result<()> {
-    use fgmp::benchsuite::{kernel_benches, pipeline_benches};
+    use fgmp::benchsuite::{decode_benches, kernel_benches, pipeline_benches};
     use fgmp::util::bench::{budget_from_env, BenchSuite};
     use std::time::Duration;
 
@@ -321,6 +333,7 @@ fn cmd_bench(cli: &Cli) -> Result<()> {
 
     kernel_benches(&mut suite, budget);
     pipeline_benches(&mut suite, budget);
+    decode_benches(&mut suite, budget);
 
     let path = suite.write(&out_dir)?;
     println!("wrote {}", path.display());
@@ -345,7 +358,11 @@ fn cmd_bench(cli: &Cli) -> Result<()> {
 }
 
 fn cmd_serve(cli: &Cli, fp4: f64, requests: usize) -> Result<()> {
-    use fgmp::coordinator::{BatchPolicy, Request, RequestKind, Server, ServerConfig};
+    use fgmp::coordinator::{
+        kv_dims_from_profiles, BatchPolicy, Request, RequestKind, Server, ServerConfig,
+    };
+    use fgmp::hwsim::kvcache::kv_cache_bits;
+    use fgmp::model::KvPrecision;
 
     let rt = Runtime::cpu()?;
     let ev = Evaluator::load(&rt, &cli.artifacts, &cli.model)?;
@@ -357,6 +374,10 @@ fn cmd_serve(cli: &Cli, fp4: f64, requests: usize) -> Result<()> {
     let logits_spec = ExecSpec::new(&cli.artifacts, &cli.model, GraphKind::LogitsQuant);
     let logits_tail = fwd_tail.clone();
     let shapes = qm.layer_profiles(&ev.arts.manifest, ev.batch * ev.seq, &[]);
+    let kv_precision = KvPrecision::parse(&cli.str("kv", "fp16"))?;
+    let gen_requests = cli.usize("gen", 8);
+    let gen_tokens = cli.usize("gen_tokens", 16);
+    let kv_dims = kv_dims_from_profiles(&shapes);
 
     let scfg = ServerConfig {
         batch: ev.batch,
@@ -364,14 +385,17 @@ fn cmd_serve(cli: &Cli, fp4: f64, requests: usize) -> Result<()> {
         policy: BatchPolicy::default(),
         layer_shapes: shapes,
         queue_depth: 256,
+        kv_precision,
+        decode_batch: cli.usize("decode_batch", 8),
     };
     let windows = ev.eval_windows(requests.div_ceil(ev.batch));
     let seq = ev.seq;
     let server = Server::start(scfg, fwd_spec, fwd_tail, logits_spec, logits_tail)?;
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::new();
+    let mut gen_rxs = Vec::new();
     let mut id = 0u64;
-    for w in &windows {
+    for (wi, w) in windows.iter().enumerate() {
         for row in w.chunks_exact(seq) {
             let (req, rx) = Request::new(
                 id,
@@ -380,7 +404,25 @@ fn cmd_serve(cli: &Cli, fp4: f64, requests: usize) -> Result<()> {
             id += 1;
             server.router.submit(req)?;
             rxs.push(rx);
+            // Interleave generation traffic: one prompt per few score rows.
+            if gen_rxs.len() < gen_requests && wi % 2 == 0 {
+                let prompt = row[..row.len().min(8)].to_vec();
+                let (req, rx) =
+                    Request::new(id, RequestKind::Generate { prompt, n_tokens: gen_tokens });
+                id += 1;
+                server.router.submit(req)?;
+                gen_rxs.push(rx);
+            }
         }
+    }
+    // Top up if the window loop produced fewer gen requests than asked.
+    while gen_rxs.len() < gen_requests {
+        let prompt =
+            windows.first().map(|w| w[..8.min(w.len())].to_vec()).unwrap_or_else(|| vec![0]);
+        let (req, rx) = Request::new(id, RequestKind::Generate { prompt, n_tokens: gen_tokens });
+        id += 1;
+        server.router.submit(req)?;
+        gen_rxs.push(rx);
     }
     let mut nll = 0.0;
     let mut toks = 0.0;
@@ -392,6 +434,14 @@ fn cmd_serve(cli: &Cli, fp4: f64, requests: usize) -> Result<()> {
             }
         }
     }
+    let mut gen_toks = 0usize;
+    for rx in &gen_rxs {
+        if let Ok(resp) = rx.recv() {
+            if let Some(g) = resp.generated {
+                gen_toks += g.len();
+            }
+        }
+    }
     let wall = t0.elapsed();
     let snap = server.metrics.snapshot();
     println!("served {} score rows in {:.2}s ({:.1} tok/s)", snap.requests,
@@ -399,8 +449,93 @@ fn cmd_serve(cli: &Cli, fp4: f64, requests: usize) -> Result<()> {
     println!("ppl {:.4}  p50 {:.1}ms p95 {:.1}ms p99 {:.1}ms  fill {:.0}%",
              (nll / toks).exp(), snap.p50_ms, snap.p95_ms, snap.p99_ms,
              snap.mean_batch_fill * 100.0);
-    println!("sim energy {:.3} mJ vs FP8 {:.3} mJ  (savings {:.1}%)",
+    println!("gen: {gen_toks} tokens / {} reqs  {:.1} tok/s decode  ttft p50 {:.1}ms p95 {:.1}ms",
+             gen_rxs.len(), snap.decode_tok_per_s, snap.ttft_p50_ms, snap.ttft_p95_ms);
+    println!("decode: {} steps  occupancy {:.2} ({:.0}% of {})",
+             snap.decode_steps, snap.mean_decode_occupancy, snap.decode_fill * 100.0,
+             cli.usize("decode_batch", 8));
+    let kv_bytes_per_tok =
+        kv_cache_bits(&kv_dims, 1, kv_precision.bits_per_value()) as f64 / 8.0;
+    println!("kv: {} cache, {:.0} B/token ({:.0} B/token at fp16)",
+             kv_precision.label(), kv_bytes_per_tok,
+             kv_cache_bits(&kv_dims, 1, 16.0) as f64 / 8.0);
+    println!("sim energy {:.3} mJ vs FP8 {:.3} mJ  (savings {:.1}%, incl. KV traffic)",
              snap.energy_j * 1e3, snap.energy_fp8_j * 1e3, snap.energy_savings * 100.0);
     server.shutdown();
+    Ok(())
+}
+
+/// `fgmp generate`: drive the stateful [`fgmp::runtime::Engine`] directly —
+/// prefill one or more sessions from corpus windows, decode them batched,
+/// and report tokens + decode throughput. The single-process view of what
+/// the `serve` coordinator does continuously.
+fn cmd_generate(cli: &Cli) -> Result<()> {
+    use fgmp::model::KvPrecision;
+    use fgmp::runtime::Engine;
+
+    let rt = Runtime::cpu()?;
+    let ev = Evaluator::load(&rt, &cli.artifacts, &cli.model)?;
+    let cfg = QuantConfig::fgmp(cli.f64("fp4", 0.7));
+    let qm = QuantizedModel::quantize(&ev.arts, &cfg)?;
+    let tail = ev.quant_arg_tail(&cfg, &qm)?;
+    let spec = ExecSpec::new(&cli.artifacts, &cli.model, GraphKind::LogitsQuant);
+    let kv = KvPrecision::parse(&cli.str("kv", "fp16"))?;
+    let engine = Engine::new(&rt, &spec, tail, kv)?;
+
+    let prompt_len = cli.usize("prompt_len", 16).clamp(1, ev.test_stream.len().max(1));
+    let n_tokens = cli.usize("tokens", 32);
+    let n_sessions = cli.usize("sessions", 4).max(1);
+
+    let t0 = std::time::Instant::now();
+    let mut sessions = Vec::with_capacity(n_sessions);
+    let mut prompts = Vec::with_capacity(n_sessions);
+    for i in 0..n_sessions {
+        let off = (i * prompt_len) % ev.test_stream.len().saturating_sub(prompt_len).max(1);
+        let prompt = &ev.test_stream[off..off + prompt_len];
+        prompts.push(prompt.to_vec());
+        sessions.push(engine.prefill(prompt)?);
+    }
+    let prefill_t = t0.elapsed();
+
+    let mut produced: Vec<Vec<i32>> = sessions.iter().map(|s| vec![s.next_token()]).collect();
+    let t1 = std::time::Instant::now();
+    let mut steps = 0usize;
+    while produced.iter().any(|p| p.len() < n_tokens) {
+        // Step only the sessions still short of their budget (continuous
+        // retirement, single-process edition).
+        let idx: Vec<usize> =
+            (0..sessions.len()).filter(|&i| produced[i].len() < n_tokens).collect();
+        let mut stepping: Vec<&mut fgmp::runtime::Session> = sessions
+            .iter_mut()
+            .enumerate()
+            .filter(|(i, _)| produced[*i].len() < n_tokens)
+            .map(|(_, s)| s)
+            .collect();
+        engine.decode_step(&mut stepping)?;
+        for (slot, &i) in idx.iter().enumerate() {
+            produced[i].push(stepping[slot].next_token());
+        }
+        steps += 1;
+    }
+    let decode_t = t1.elapsed();
+
+    let total: usize = produced.iter().map(|p| p.len().min(n_tokens)).sum();
+    println!(
+        "engine: {} path, kv {}  |  {n_sessions} sessions, prompt {prompt_len}, \
+         {n_tokens} tokens each",
+        if engine.is_cached() { "cached" } else { "windowed-recompute" },
+        engine.kv_precision().label(),
+    );
+    for (i, p) in produced.iter().enumerate() {
+        let shown: Vec<String> = p[..p.len().min(n_tokens)].iter().map(|t| t.to_string()).collect();
+        println!("  s{i} [{}...] -> {}", prompts[i][..4.min(prompts[i].len())]
+                 .iter().map(|t| t.to_string()).collect::<Vec<_>>().join(","),
+                 shown.join(" "));
+    }
+    let kv_bits: u64 = sessions.iter().map(|s| s.kv_bits()).sum();
+    println!("prefill {:.1}ms  decode {} steps in {:.1}ms  ({:.1} tok/s)",
+             prefill_t.as_secs_f64() * 1e3, steps, decode_t.as_secs_f64() * 1e3,
+             total as f64 / decode_t.as_secs_f64().max(1e-9));
+    println!("kv held: {:.1} KiB across sessions", kv_bits as f64 / 8.0 / 1024.0);
     Ok(())
 }

@@ -18,6 +18,7 @@
 use std::collections::HashMap;
 
 use crate::io::manifest::{LinearSpec, Manifest};
+use crate::model::kv::{KvState, LayerKv};
 use crate::util::{kernels, par_map, Json};
 use crate::{Result, BLOCK};
 
@@ -397,17 +398,24 @@ fn mlp_act(act: Act, f1: &[f32], m: usize, fc1_out: usize, d_ff: usize) -> Vec<f
     out
 }
 
+/// cos/sin for one rotary position — the single expression both the
+/// full-sequence tables and the incremental decode path evaluate, so the
+/// two agree bit-for-bit at every position.
+fn rope_row(t: usize, half: usize, cos: &mut [f32], sin: &mut [f32]) {
+    for i in 0..half {
+        let freq = (-(10000.0f32.ln()) * i as f32 / half as f32).exp();
+        let ang = t as f32 * freq;
+        cos[i] = ang.cos();
+        sin[i] = ang.sin();
+    }
+}
+
 /// Rotary tables: `(cos, sin)`, each `s × half`, matching `model.py::_rope`.
 fn rope_tables(s: usize, half: usize) -> (Vec<f32>, Vec<f32>) {
     let mut cos = vec![0.0f32; s * half];
     let mut sin = vec![0.0f32; s * half];
     for t in 0..s {
-        for i in 0..half {
-            let freq = (-(10000.0f32.ln()) * i as f32 / half as f32).exp();
-            let ang = t as f32 * freq;
-            cos[t * half + i] = ang.cos();
-            sin[t * half + i] = ang.sin();
-        }
+        rope_row(t, half, &mut cos[t * half..(t + 1) * half], &mut sin[t * half..(t + 1) * half]);
     }
     (cos, sin)
 }
@@ -446,33 +454,10 @@ fn attention(arch: &ModelArch, qkv: &[f32], b: usize, s: usize) -> Vec<f32> {
         for si in 0..s {
             let qr = &q[si * dh..(si + 1) * dh];
             // Causal: only keys 0..=si contribute (the -1e30 mask + softmax
-            // of model.py zeroes the rest exactly).
-            let mut mx = f32::NEG_INFINITY;
-            for (j, scj) in sc.iter_mut().enumerate().take(si + 1) {
-                let kr = &k[j * dh..(j + 1) * dh];
-                let mut dot = 0.0f32;
-                for (a, b2) in qr.iter().zip(kr) {
-                    dot += a * b2;
-                }
-                *scj = dot * scale;
-                mx = mx.max(*scj);
-            }
-            let mut z = 0.0f32;
-            for scj in sc.iter_mut().take(si + 1) {
-                *scj = (*scj - mx).exp();
-                z += *scj;
-            }
+            // of model.py zeroes the rest exactly). The panels are (S, dh)
+            // single-head buffers, hence d = dh, hi = 0.
             let or = &mut o[si * dh..(si + 1) * dh];
-            for j in 0..=si {
-                let p = sc[j] / z;
-                if p == 0.0 {
-                    continue;
-                }
-                let vr = &v[j * dh..(j + 1) * dh];
-                for (a, &vv) in or.iter_mut().zip(vr) {
-                    *a += p * vv;
-                }
-            }
+            attend_row(qr, &k, &v, si + 1, dh, 0, dh, scale, &mut sc, or);
         }
         o
     });
@@ -495,6 +480,184 @@ fn rotate(x: &mut [f32], cos: &[f32], sin: &[f32], half: usize) {
         x[i] = a * cos[i] - b * sin[i];
         x[i + half] = a * sin[i] + b * cos[i];
     }
+}
+
+/// One causal attention output row: query `qr` (dh) against the first
+/// `len` cached key/value rows of head `hi` in `(tokens, d)`-layout
+/// buffers. Scores, softmax, and the weighted sum accumulate in exactly
+/// [`attention`]'s per-position order, so cached attention is bit-identical
+/// to full-sequence attention over the same K/V values.
+#[allow(clippy::too_many_arguments)]
+fn attend_row(
+    qr: &[f32],
+    kmat: &[f32],
+    vmat: &[f32],
+    len: usize,
+    d: usize,
+    hi: usize,
+    dh: usize,
+    scale: f32,
+    sc: &mut [f32],
+    or: &mut [f32],
+) {
+    let mut mx = f32::NEG_INFINITY;
+    for (j, scj) in sc.iter_mut().enumerate().take(len) {
+        let kr = &kmat[j * d + hi * dh..j * d + (hi + 1) * dh];
+        let mut dot = 0.0f32;
+        for (a, b2) in qr.iter().zip(kr) {
+            dot += a * b2;
+        }
+        *scj = dot * scale;
+        mx = mx.max(*scj);
+    }
+    let mut z = 0.0f32;
+    for scj in sc.iter_mut().take(len) {
+        *scj = (*scj - mx).exp();
+        z += *scj;
+    }
+    or.fill(0.0);
+    for j in 0..len {
+        let p = sc[j] / z;
+        if p == 0.0 {
+            continue;
+        }
+        let vr = &vmat[j * d + hi * dh..j * d + (hi + 1) * dh];
+        for (a, &vv) in or.iter_mut().zip(vr) {
+            *a += p * vv;
+        }
+    }
+}
+
+/// Prefill attention over `s` fused qkv rows `(s, 3D)` → `(s, D)` (one
+/// sequence), appending every position's post-RoPE key and value to `lkv`
+/// and attending over the cache *as stored* — so an FP8 cache sees its own
+/// round-tripped keys/values from the first token, consistent with later
+/// decode steps. With an FP16 cache this is bit-identical to [`attention`].
+fn attention_prefill(arch: &ModelArch, qkv: &[f32], s: usize, lkv: &mut LayerKv) -> Vec<f32> {
+    let d = arch.d_model;
+    let h = arch.n_heads;
+    let dh = arch.head_dim();
+    let half = dh / 2;
+    let rope = arch.pos == PosKind::Rope;
+    let (cos, sin) = if rope { rope_tables(s, half) } else { (Vec::new(), Vec::new()) };
+    let scale = 1.0 / (dh as f32).sqrt();
+
+    // Split fused rows; rotate q and k per head; append k/v to the cache.
+    let mut q = vec![0.0f32; s * d];
+    let mut kbuf = vec![0.0f32; d];
+    for si in 0..s {
+        let row = &qkv[si * 3 * d..(si + 1) * 3 * d];
+        q[si * d..(si + 1) * d].copy_from_slice(&row[..d]);
+        kbuf.copy_from_slice(&row[d..2 * d]);
+        if rope {
+            for hi in 0..h {
+                let (c, sn) = (&cos[si * half..], &sin[si * half..]);
+                rotate(&mut q[si * d + hi * dh..si * d + (hi + 1) * dh], c, sn, half);
+                rotate(&mut kbuf[hi * dh..(hi + 1) * dh], c, sn, half);
+            }
+        }
+        lkv.k.push_row(&kbuf);
+        lkv.v.push_row(&row[2 * d..]);
+    }
+
+    let (mut ks, mut vs) = (Vec::new(), Vec::new());
+    let kmat = lkv.k.materialize(&mut ks);
+    let vmat = lkv.v.materialize(&mut vs);
+
+    let heads: Vec<usize> = (0..h).collect();
+    let outs = par_map(&heads, |&hi| {
+        let mut o = vec![0.0f32; s * dh];
+        let mut sc = vec![0.0f32; s];
+        for si in 0..s {
+            let qr = &q[si * d + hi * dh..si * d + (hi + 1) * dh];
+            attend_row(
+                qr,
+                kmat,
+                vmat,
+                si + 1,
+                d,
+                hi,
+                dh,
+                scale,
+                &mut sc,
+                &mut o[si * dh..(si + 1) * dh],
+            );
+        }
+        o
+    });
+
+    let mut out = vec![0.0f32; s * d];
+    for (hi, o) in outs.iter().enumerate() {
+        for si in 0..s {
+            out[si * d + hi * dh..si * d + (hi + 1) * dh]
+                .copy_from_slice(&o[si * dh..(si + 1) * dh]);
+        }
+    }
+    out
+}
+
+/// One decode step of attention for `n` independent sessions: fused qkv
+/// rows `(n, 3D)`, one per session, each appended to its own cache at its
+/// own position, then attended over that cache → `(n, D)`. Parallel over
+/// (session, head) pairs like [`attention`] is over (batch, head).
+fn attention_step(
+    arch: &ModelArch,
+    qkv: &[f32],
+    caches: &mut [&mut LayerKv],
+    positions: &[usize],
+) -> Vec<f32> {
+    let n = positions.len();
+    let d = arch.d_model;
+    let h = arch.n_heads;
+    let dh = arch.head_dim();
+    let half = dh / 2;
+    let rope = arch.pos == PosKind::Rope;
+    let scale = 1.0 / (dh as f32).sqrt();
+
+    let mut q = vec![0.0f32; n * d];
+    let mut kbuf = vec![0.0f32; d];
+    let (mut cos, mut sin) = (vec![0.0f32; half], vec![0.0f32; half]);
+    for i in 0..n {
+        let row = &qkv[i * 3 * d..(i + 1) * 3 * d];
+        q[i * d..(i + 1) * d].copy_from_slice(&row[..d]);
+        kbuf.copy_from_slice(&row[d..2 * d]);
+        if rope {
+            rope_row(positions[i], half, &mut cos, &mut sin);
+            for hi in 0..h {
+                rotate(&mut q[i * d + hi * dh..i * d + (hi + 1) * dh], &cos, &sin, half);
+                rotate(&mut kbuf[hi * dh..(hi + 1) * dh], &cos, &sin, half);
+            }
+        }
+        caches[i].k.push_row(&kbuf);
+        caches[i].v.push_row(&row[2 * d..]);
+    }
+
+    // Materialize each session's cache once (decodes FP8 bytes), then fan
+    // the (session, head) attention rows out across threads.
+    let mut scratch: Vec<(Vec<f32>, Vec<f32>)> = (0..n).map(|_| (Vec::new(), Vec::new())).collect();
+    let mats: Vec<(&[f32], &[f32])> = caches
+        .iter()
+        .zip(scratch.iter_mut())
+        .map(|(c, (ks, vs))| (c.k.materialize(ks), c.v.materialize(vs)))
+        .collect();
+
+    let pairs: Vec<(usize, usize)> =
+        (0..n).flat_map(|i| (0..h).map(move |hi| (i, hi))).collect();
+    let rows = par_map(&pairs, |&(i, hi)| {
+        let (kmat, vmat) = mats[i];
+        let len = positions[i] + 1;
+        let qr = &q[i * d + hi * dh..i * d + (hi + 1) * dh];
+        let mut sc = vec![0.0f32; len];
+        let mut o = vec![0.0f32; dh];
+        attend_row(qr, kmat, vmat, len, d, hi, dh, scale, &mut sc, &mut o);
+        o
+    });
+
+    let mut out = vec![0.0f32; n * d];
+    for (&(i, hi), o) in pairs.iter().zip(&rows) {
+        out[i * d + hi * dh..i * d + (hi + 1) * dh].copy_from_slice(o);
+    }
+    out
 }
 
 /// One linear application in execution order: optional calibration capture,
@@ -558,35 +721,244 @@ pub fn forward(
     mut capture: Option<&mut Vec<Vec<f32>>>,
     last_only: bool,
 ) -> Result<ForwardOut> {
-    let d = arch.d_model;
     let m = b * s;
     anyhow::ensure!(tokens.len() == m, "tokens length {} != B*S {}", tokens.len(), m);
-    let get = |name: &str| -> Result<&[f32]> {
-        params
-            .get(name)
-            .copied()
-            .ok_or_else(|| anyhow::anyhow!("missing parameter '{name}'"))
-    };
 
-    let embed = get("embed")?;
+    let linears = arch.linears();
+    if let Some(q) = quant {
+        anyhow::ensure!(q.act_weights.len() == linears.len(), "act_weights count");
+        anyhow::ensure!(q.thresholds.len() == linears.len(), "thresholds count");
+    }
+    let mut fracs = vec![0.0f32; if quant.is_some() { linears.len() } else { 0 }];
+    let positions: Vec<usize> = (0..m).map(|i| i % s).collect();
+    let mut x = embed_rows(arch, params, tokens, &positions)?;
+    let mut li = 0usize;
+
+    for l in 0..arch.n_layers {
+        block_forward(
+            arch,
+            &linears,
+            params,
+            quant,
+            l,
+            &mut x,
+            m,
+            &mut li,
+            &mut fracs,
+            &mut capture,
+            |qkv| attention(arch, qkv, b, s),
+        )?;
+    }
+
+    let take: Vec<usize> = if last_only {
+        // Only each batch row's final position feeds the LM head.
+        (0..b).map(|bi| bi * s + s - 1).collect()
+    } else {
+        (0..m).collect()
+    };
+    let logits = lm_head(arch, params, &x, &take)?;
+    Ok(ForwardOut { logits, act_fp8: fracs })
+}
+
+/// Embed `tokens` into `(rows, d)` activations, adding the learned
+/// positional rows `positions[i]` when the arch uses them.
+fn embed_rows(
+    arch: &ModelArch,
+    params: &HashMap<&str, &[f32]>,
+    tokens: &[i32],
+    positions: &[usize],
+) -> Result<Vec<f32>> {
+    let d = arch.d_model;
+    let embed = params
+        .get("embed")
+        .copied()
+        .ok_or_else(|| anyhow::anyhow!("missing parameter 'embed'"))?;
     anyhow::ensure!(embed.len() == arch.vocab * d, "embed size mismatch");
-    let mut x = vec![0.0f32; m * d];
+    let mut x = vec![0.0f32; tokens.len() * d];
     for (i, &t) in tokens.iter().enumerate() {
         let t = t as usize;
         anyhow::ensure!(t < arch.vocab, "token {t} out of vocab {}", arch.vocab);
         x[i * d..(i + 1) * d].copy_from_slice(&embed[t * d..(t + 1) * d]);
     }
     if arch.pos == PosKind::Learned {
-        let pe = get("pos_embed")?;
-        anyhow::ensure!(pe.len() >= s * d, "pos_embed shorter than sequence");
-        for bi in 0..b {
-            for si in 0..s {
-                let xr = &mut x[(bi * s + si) * d..(bi * s + si + 1) * d];
-                for (a, &p) in xr.iter_mut().zip(&pe[si * d..(si + 1) * d]) {
-                    *a += p;
-                }
+        let pe = params
+            .get("pos_embed")
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("missing parameter 'pos_embed'"))?;
+        for (i, &pos) in positions.iter().enumerate() {
+            anyhow::ensure!(pe.len() >= (pos + 1) * d, "pos_embed shorter than position {pos}");
+            for (a, &p) in x[i * d..(i + 1) * d].iter_mut().zip(&pe[pos * d..(pos + 1) * d]) {
+                *a += p;
             }
         }
+    }
+    Ok(x)
+}
+
+/// Run one transformer block (attention + MLP sublayers) over `rows`
+/// activation rows in `x`, with `attn` supplying the attention mixing for
+/// this layer's post-qkv rows. `li` indexes the linear inventory and is
+/// advanced past the four linears consumed. Shared verbatim by the
+/// full-sequence, prefill, and decode-step paths — the structural reason
+/// they agree bit-for-bit outside of attention's K/V source.
+#[allow(clippy::too_many_arguments)]
+fn block_forward(
+    arch: &ModelArch,
+    linears: &[LinearSpec],
+    params: &HashMap<&str, &[f32]>,
+    quant: Option<&QuantInputs<'_>>,
+    l: usize,
+    x: &mut [f32],
+    rows: usize,
+    li: &mut usize,
+    fracs: &mut [f32],
+    capture: &mut Option<&mut Vec<Vec<f32>>>,
+    attn: impl FnOnce(&[f32]) -> Vec<f32>,
+) -> Result<()> {
+    let d = arch.d_model;
+    let get = |name: &str| -> Result<&[f32]> {
+        params
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("missing parameter '{name}'"))
+    };
+    let g1 = get(&format!("blk{l}.norm1"))?;
+    let b1 = if arch.norm == NormKind::LayerNorm {
+        Some(get(&format!("blk{l}.norm1.b"))?)
+    } else {
+        None
+    };
+    let h = norm_rows(arch.norm, x, d, g1, b1);
+    let qkv = apply_linear(linears, params, quant, &h, rows, *li, fracs, capture)?;
+    *li += 1;
+    let mixed = attn(&qkv);
+    let o = apply_linear(linears, params, quant, &mixed, rows, *li, fracs, capture)?;
+    *li += 1;
+    for (a, &v) in x.iter_mut().zip(&o) {
+        *a += v;
+    }
+
+    let g2 = get(&format!("blk{l}.norm2"))?;
+    let b2 = if arch.norm == NormKind::LayerNorm {
+        Some(get(&format!("blk{l}.norm2.b"))?)
+    } else {
+        None
+    };
+    let h = norm_rows(arch.norm, x, d, g2, b2);
+    let f1 = apply_linear(linears, params, quant, &h, rows, *li, fracs, capture)?;
+    *li += 1;
+    let act = mlp_act(arch.act, &f1, rows, arch.fc1_out(), arch.d_ff);
+    let f2 = apply_linear(linears, params, quant, &act, rows, *li, fracs, capture)?;
+    *li += 1;
+    for (a, &v) in x.iter_mut().zip(&f2) {
+        *a += v;
+    }
+    Ok(())
+}
+
+/// Final norm + tied LM head over the selected `rows` of `x`, keeping only
+/// the row indices in `take` (e.g. the last position for serving).
+fn lm_head(
+    arch: &ModelArch,
+    params: &HashMap<&str, &[f32]>,
+    x: &[f32],
+    take: &[usize],
+) -> Result<Vec<f32>> {
+    let d = arch.d_model;
+    let get = |name: &str| -> Result<&[f32]> {
+        params
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("missing parameter '{name}'"))
+    };
+    let gf = get("final_norm")?;
+    let bf = if arch.norm == NormKind::LayerNorm {
+        Some(get("final_norm.b")?)
+    } else {
+        None
+    };
+    let xn = norm_rows(arch.norm, x, d, gf, bf);
+    let mut sel = vec![0.0f32; take.len() * d];
+    for (i, &r) in take.iter().enumerate() {
+        sel[i * d..(i + 1) * d].copy_from_slice(&xn[r * d..(r + 1) * d]);
+    }
+    let embed = get("embed")?;
+    Ok(matmul_transposed(&sel, embed, take.len(), d, arch.vocab))
+}
+
+/// Prefill one session: run the full prompt through the transformer (one
+/// sequence, `b = 1`), populating `kv` with every layer's post-RoPE K and V
+/// rows, and return the **last position's** logits `(1, V)` — the serving
+/// prefill. With an FP16 cache the logits are bit-identical to
+/// `forward(..., last_only = true)`; with an FP8 cache the attention reads
+/// the round-tripped K/V it stores, consistently with later decode steps
+/// (tolerance documented in `tests/decode_props.rs`).
+pub fn forward_prefill(
+    arch: &ModelArch,
+    params: &HashMap<&str, &[f32]>,
+    tokens: &[i32],
+    quant: Option<&QuantInputs<'_>>,
+    kv: &mut KvState,
+) -> Result<ForwardOut> {
+    let s = tokens.len();
+    anyhow::ensure!(s > 0, "prefill needs at least one token");
+    anyhow::ensure!(s <= arch.max_seq, "prompt length {s} exceeds max_seq {}", arch.max_seq);
+    anyhow::ensure!(kv.is_empty(), "prefill requires an empty KV cache");
+    anyhow::ensure!(kv.layers.len() == arch.n_layers, "KV cache layer count");
+
+    let linears = arch.linears();
+    if let Some(q) = quant {
+        anyhow::ensure!(q.act_weights.len() == linears.len(), "act_weights count");
+        anyhow::ensure!(q.thresholds.len() == linears.len(), "thresholds count");
+    }
+    let mut fracs = vec![0.0f32; if quant.is_some() { linears.len() } else { 0 }];
+    let positions: Vec<usize> = (0..s).collect();
+    let mut x = embed_rows(arch, params, tokens, &positions)?;
+    let mut li = 0usize;
+    for (l, lkv) in kv.layers.iter_mut().enumerate() {
+        block_forward(
+            arch,
+            &linears,
+            params,
+            quant,
+            l,
+            &mut x,
+            s,
+            &mut li,
+            &mut fracs,
+            &mut None,
+            |qkv| attention_prefill(arch, qkv, s, lkv),
+        )?;
+    }
+    kv.advance(s);
+    let logits = lm_head(arch, params, &x, &[s - 1])?;
+    Ok(ForwardOut { logits, act_fp8: fracs })
+}
+
+/// One incremental decode step for `n` independent sessions, batched: each
+/// session contributes one new token at its own position, the four linears
+/// of every block run as single `(n, K)` matmuls over the blocked kernels
+/// (the PPU quantizes exactly the `n` new activation rows), and attention
+/// reads each session's own cache. Returns the next-token logits `(n, V)`.
+pub fn forward_step_batch(
+    arch: &ModelArch,
+    params: &HashMap<&str, &[f32]>,
+    tokens: &[i32],
+    kvs: &mut [&mut KvState],
+    quant: Option<&QuantInputs<'_>>,
+) -> Result<ForwardOut> {
+    let n = tokens.len();
+    anyhow::ensure!(n > 0, "decode step needs at least one session");
+    anyhow::ensure!(kvs.len() == n, "tokens/sessions length mismatch");
+    let positions: Vec<usize> = kvs.iter().map(|kv| kv.len()).collect();
+    for (i, kv) in kvs.iter().enumerate() {
+        anyhow::ensure!(!kv.is_empty(), "session {i}: decode before prefill");
+        anyhow::ensure!(
+            kv.len() < arch.max_seq,
+            "session {i}: KV cache full at max_seq {} — roll before stepping",
+            arch.max_seq
+        );
+        anyhow::ensure!(kv.layers.len() == arch.n_layers, "session {i}: cache layer count");
     }
 
     let linears = arch.linears();
@@ -595,63 +967,41 @@ pub fn forward(
         anyhow::ensure!(q.thresholds.len() == linears.len(), "thresholds count");
     }
     let mut fracs = vec![0.0f32; if quant.is_some() { linears.len() } else { 0 }];
+    let mut x = embed_rows(arch, params, tokens, &positions)?;
     let mut li = 0usize;
-
     for l in 0..arch.n_layers {
-        let g1 = get(&format!("blk{l}.norm1"))?;
-        let b1 = if arch.norm == NormKind::LayerNorm {
-            Some(get(&format!("blk{l}.norm1.b"))?)
-        } else {
-            None
-        };
-        let h = norm_rows(arch.norm, &x, d, g1, b1);
-        let qkv = apply_linear(&linears, params, quant, &h, m, li, &mut fracs, &mut capture)?;
-        li += 1;
-        let attn = attention(arch, &qkv, b, s);
-        let o = apply_linear(&linears, params, quant, &attn, m, li, &mut fracs, &mut capture)?;
-        li += 1;
-        for (a, &v) in x.iter_mut().zip(&o) {
-            *a += v;
-        }
-
-        let g2 = get(&format!("blk{l}.norm2"))?;
-        let b2 = if arch.norm == NormKind::LayerNorm {
-            Some(get(&format!("blk{l}.norm2.b"))?)
-        } else {
-            None
-        };
-        let h = norm_rows(arch.norm, &x, d, g2, b2);
-        let f1 = apply_linear(&linears, params, quant, &h, m, li, &mut fracs, &mut capture)?;
-        li += 1;
-        let act = mlp_act(arch.act, &f1, m, arch.fc1_out(), arch.d_ff);
-        let f2 = apply_linear(&linears, params, quant, &act, m, li, &mut fracs, &mut capture)?;
-        li += 1;
-        for (a, &v) in x.iter_mut().zip(&f2) {
-            *a += v;
-        }
+        let mut caches: Vec<&mut LayerKv> = kvs.iter_mut().map(|kv| &mut kv.layers[l]).collect();
+        block_forward(
+            arch,
+            &linears,
+            params,
+            quant,
+            l,
+            &mut x,
+            n,
+            &mut li,
+            &mut fracs,
+            &mut None,
+            |qkv| attention_step(arch, qkv, &mut caches, &positions),
+        )?;
     }
-
-    let gf = get("final_norm")?;
-    let bf = if arch.norm == NormKind::LayerNorm {
-        Some(get("final_norm.b")?)
-    } else {
-        None
-    };
-    let xn = norm_rows(arch.norm, &x, d, gf, bf);
-
-    let logits = if last_only {
-        // Only each batch row's final position feeds the LM head.
-        let mut lastx = vec![0.0f32; b * d];
-        for bi in 0..b {
-            let src = (bi * s + s - 1) * d;
-            lastx[bi * d..(bi + 1) * d].copy_from_slice(&xn[src..src + d]);
-        }
-        matmul_transposed(&lastx, embed, b, d, arch.vocab)
-    } else {
-        matmul_transposed(&xn, embed, m, d, arch.vocab)
-    };
-
+    for kv in kvs.iter_mut() {
+        kv.advance(1);
+    }
+    let take: Vec<usize> = (0..n).collect();
+    let logits = lm_head(arch, params, &x, &take)?;
     Ok(ForwardOut { logits, act_fp8: fracs })
+}
+
+/// Single-session convenience wrapper over [`forward_step_batch`].
+pub fn forward_step(
+    arch: &ModelArch,
+    params: &HashMap<&str, &[f32]>,
+    token: i32,
+    kv: &mut KvState,
+    quant: Option<&QuantInputs<'_>>,
+) -> Result<ForwardOut> {
+    forward_step_batch(arch, params, &[token], &mut [kv], quant)
 }
 
 /// Masked next-token NLL per batch row — `model.py::nll` semantics: position

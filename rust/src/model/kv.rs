@@ -1,0 +1,266 @@
+//! Per-session KV cache for incremental decoding.
+//!
+//! [`KvState`] holds one transformer session's cached keys and values: one
+//! [`LayerKv`] per block, each an append-only `(tokens, d_model)` buffer of
+//! post-RoPE keys and raw values (heads side by side, the layout
+//! `model::forward` gathers per-head panels from). The buffers are
+//! precision-aware: [`KvPrecision::Fp16`] stores exact f32 rows (standing in
+//! for the paper's BF16 KV baseline), while [`KvPrecision::Fp8`] stores each
+//! element as a real E4M3 byte via the [`crate::quant::fp8`] codec — half
+//! the memory, mirroring the quantized-cache comparators the paper's Fig. 1
+//! footnote discusses — and decodes on read, so decode steps attend over
+//! exactly the values a byte-packed accelerator cache would hold.
+//!
+//! With `Fp16` the cached rows are bit-identical to what the full-sequence
+//! forward computes internally, which is what makes the prefill+step path
+//! bit-exact against full recompute (property-tested in
+//! `tests/decode_props.rs`). With `Fp8` the divergence is bounded by the
+//! E4M3 round-trip error on K/V (documented tolerance in the same test).
+
+use crate::model::forward::ModelArch;
+use crate::quant::fp8::{decode_e4m3, encode_e4m3};
+
+/// Storage precision of a session's KV cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvPrecision {
+    /// Exact f32 rows (models the BF16/FP16 cache of the paper's setup).
+    Fp16,
+    /// E4M3 bytes per element — 8 bits/value, decoded on read.
+    Fp8,
+}
+
+impl KvPrecision {
+    /// Bits per cached value, the number `hwsim::kvcache::kv_cache_bits`
+    /// charges for cache traffic and capacity at this precision.
+    pub fn bits_per_value(&self) -> f64 {
+        match self {
+            KvPrecision::Fp16 => 16.0,
+            KvPrecision::Fp8 => 8.0,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            KvPrecision::Fp16 => "fp16",
+            KvPrecision::Fp8 => "fp8",
+        }
+    }
+
+    /// Parse a CLI knob value ("fp16"/"bf16" or "fp8").
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "fp16" | "bf16" | "f32" => Ok(KvPrecision::Fp16),
+            "fp8" | "e4m3" => Ok(KvPrecision::Fp8),
+            other => anyhow::bail!("unknown KV precision '{other}' (have fp16, fp8)"),
+        }
+    }
+}
+
+/// One append-only `(rows, width)` tensor at the cache precision.
+#[derive(Debug, Clone)]
+enum KvData {
+    F32(Vec<f32>),
+    Fp8(Vec<u8>),
+}
+
+/// A precision-aware K or V buffer for one layer.
+#[derive(Debug, Clone)]
+pub struct KvBuf {
+    data: KvData,
+    width: usize,
+}
+
+impl KvBuf {
+    fn new(prec: KvPrecision, width: usize) -> Self {
+        let data = match prec {
+            KvPrecision::Fp16 => KvData::F32(Vec::new()),
+            KvPrecision::Fp8 => KvData::Fp8(Vec::new()),
+        };
+        KvBuf { data, width }
+    }
+
+    /// Cached rows (tokens).
+    pub fn rows(&self) -> usize {
+        match &self.data {
+            KvData::F32(v) => v.len() / self.width,
+            KvData::Fp8(v) => v.len() / self.width,
+        }
+    }
+
+    /// Append one `width`-wide row, quantizing to the cache precision.
+    pub fn push_row(&mut self, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.width);
+        match &mut self.data {
+            KvData::F32(v) => v.extend_from_slice(row),
+            KvData::Fp8(v) => v.extend(row.iter().map(|&x| encode_e4m3(x))),
+        }
+    }
+
+    /// Borrow the whole buffer as f32 rows. The FP16 cache is returned
+    /// in place; the FP8 cache is decoded into `scratch` (resized as
+    /// needed) — the read-side dequant a mixed-precision cache pays.
+    pub fn materialize<'a>(&'a self, scratch: &'a mut Vec<f32>) -> &'a [f32] {
+        match &self.data {
+            KvData::F32(v) => v,
+            KvData::Fp8(v) => {
+                scratch.clear();
+                scratch.extend(v.iter().map(|&b| decode_e4m3(b)));
+                scratch
+            }
+        }
+    }
+
+    /// Physical bits held (excluding Vec capacity slack).
+    pub fn stored_bits(&self) -> u64 {
+        match &self.data {
+            KvData::F32(v) => 32 * v.len() as u64,
+            KvData::Fp8(v) => 8 * v.len() as u64,
+        }
+    }
+
+    fn clear(&mut self) {
+        match &mut self.data {
+            KvData::F32(v) => v.clear(),
+            KvData::Fp8(v) => v.clear(),
+        }
+    }
+}
+
+/// One layer's cached keys and values.
+#[derive(Debug, Clone)]
+pub struct LayerKv {
+    /// Post-RoPE keys, `(tokens, d_model)` row-major, heads side by side.
+    pub k: KvBuf,
+    /// Values, same layout.
+    pub v: KvBuf,
+}
+
+/// A full per-session cache: one [`LayerKv`] per transformer block.
+#[derive(Debug, Clone)]
+pub struct KvState {
+    pub layers: Vec<LayerKv>,
+    pub precision: KvPrecision,
+    /// Tokens currently cached (identical across layers).
+    len: usize,
+}
+
+impl KvState {
+    pub fn new(arch: &ModelArch, precision: KvPrecision) -> Self {
+        let layers = (0..arch.n_layers)
+            .map(|_| LayerKv {
+                k: KvBuf::new(precision, arch.d_model),
+                v: KvBuf::new(precision, arch.d_model),
+            })
+            .collect();
+        KvState { layers, precision, len: 0 }
+    }
+
+    /// Tokens cached so far — the position the *next* token will occupy.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Bump the token count after every layer appended one row. Asserts the
+    /// per-layer buffers actually advanced in lockstep.
+    pub(crate) fn advance(&mut self, rows: usize) {
+        self.len += rows;
+        debug_assert!(self.layers.iter().all(|l| l.k.rows() == self.len && l.v.rows() == self.len));
+    }
+
+    /// Drop all cached tokens (the rolling re-prefill path).
+    pub fn clear(&mut self) {
+        for l in &mut self.layers {
+            l.k.clear();
+            l.v.clear();
+        }
+        self.len = 0;
+    }
+
+    /// Physical bits this cache holds right now.
+    pub fn stored_bits(&self) -> u64 {
+        self.layers.iter().map(|l| l.k.stored_bits() + l.v.stored_bits()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::forward::{Act, NormKind, PosKind};
+    use crate::quant::quant_e4m3;
+    use crate::util::Rng;
+
+    fn arch() -> ModelArch {
+        ModelArch {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            act: Act::SwiGlu,
+            norm: NormKind::Rms,
+            pos: PosKind::Rope,
+            max_seq: 8,
+        }
+    }
+
+    #[test]
+    fn fp16_cache_is_exact() {
+        let a = arch();
+        let mut kv = KvState::new(&a, KvPrecision::Fp16);
+        let mut rng = Rng::new(1);
+        let row = rng.normal_vec(a.d_model, 2.0);
+        for l in &mut kv.layers {
+            l.k.push_row(&row);
+            l.v.push_row(&row);
+        }
+        kv.advance(1);
+        assert_eq!(kv.len(), 1);
+        let mut scratch = Vec::new();
+        assert_eq!(kv.layers[0].k.materialize(&mut scratch), &row[..]);
+        assert_eq!(kv.stored_bits(), (2 * 2 * a.d_model * 32) as u64);
+    }
+
+    #[test]
+    fn fp8_cache_stores_bytes_and_decodes_on_the_e4m3_lattice() {
+        let a = arch();
+        let mut kv = KvState::new(&a, KvPrecision::Fp8);
+        let mut rng = Rng::new(2);
+        let row = rng.normal_vec(a.d_model, 3.0);
+        kv.layers[0].k.push_row(&row);
+        let mut scratch = Vec::new();
+        let got = kv.layers[0].k.materialize(&mut scratch).to_vec();
+        let want: Vec<f32> = row.iter().map(|&x| quant_e4m3(x)).collect();
+        assert_eq!(got, want, "decode(encode(x)) must equal the round-trip");
+        // Half the bits of the f32 cache for the same row count.
+        assert_eq!(kv.layers[0].k.stored_bits(), (a.d_model * 8) as u64);
+    }
+
+    #[test]
+    fn clear_resets_len_and_bits() {
+        let a = arch();
+        let mut kv = KvState::new(&a, KvPrecision::Fp8);
+        let row = vec![1.0f32; a.d_model];
+        for l in &mut kv.layers {
+            l.k.push_row(&row);
+            l.v.push_row(&row);
+        }
+        kv.advance(1);
+        kv.clear();
+        assert_eq!(kv.len(), 0);
+        assert_eq!(kv.stored_bits(), 0);
+        assert!(kv.is_empty());
+    }
+
+    #[test]
+    fn precision_knob_parses_and_prices() {
+        assert_eq!(KvPrecision::parse("fp8").unwrap(), KvPrecision::Fp8);
+        assert_eq!(KvPrecision::parse("fp16").unwrap(), KvPrecision::Fp16);
+        assert!(KvPrecision::parse("int3").is_err());
+        assert_eq!(KvPrecision::Fp8.bits_per_value(), 8.0);
+        assert_eq!(KvPrecision::Fp16.bits_per_value(), 16.0);
+    }
+}

@@ -4,8 +4,10 @@
 
 pub mod config;
 pub mod forward;
+pub mod kv;
 pub mod weights;
 
 pub use config::{QuantConfig, RatioSpec};
 pub use forward::{Act, ModelArch, NormKind, PosKind};
+pub use kv::{KvPrecision, KvState};
 pub use weights::{ModelArtifacts, QuantizedModel};

@@ -1,0 +1,386 @@
+//! The stateful inference engine: KV-cached prefill/decode sessions over a
+//! loaded model.
+//!
+//! [`Engine`] is the serving-side facade the coordinator's generate path
+//! builds on. It owns one model's parameters (parsed once from the same
+//! argument tail the one-shot [`Executable::run`] API takes) and exposes
+//!
+//!  * [`Engine::prefill`] — run a prompt once, populating a per-session
+//!    [`KvState`], and return a [`Session`] whose logits already predict
+//!    the first generated token (time-to-first-token ends here);
+//!  * [`Engine::decode_step`] — advance *many* sessions by one token each
+//!    in a single batched forward over the blocked kernels (continuous
+//!    batching: the session set may change between steps), attending over
+//!    each session's cached K/V and PPU-quantizing only the new rows.
+//!
+//! On the native backend this is the cached incremental path
+//! ([`crate::model::forward::forward_prefill`] /
+//! [`forward_step_batch`](crate::model::forward::forward_step_batch)); on
+//! any other backend (PJRT) sessions transparently fall back to windowed
+//! full-sequence recompute through the one-shot executable, so
+//! `Runtime`/`ExecSpec`/`GraphKind` keep working everywhere. The cached
+//! path is bit-identical to recompute with an FP16 cache (see
+//! `tests/decode_props.rs`) and rolls — re-prefilling the trailing half
+//! window — when a session outgrows `max_seq`.
+
+use std::collections::HashMap;
+
+use crate::io::Manifest;
+use crate::model::forward::{forward_prefill, forward_step_batch, ModelArch, QuantInputs};
+use crate::model::kv::{KvPrecision, KvState};
+use crate::Result;
+
+use super::args::ArgValue;
+use super::{ExecSpec, Executable, GraphKind, Runtime};
+
+/// One live generation session: the token context, the latest next-token
+/// logits, and (on the cached path) the per-layer KV cache.
+#[derive(Debug, Clone)]
+pub struct Session {
+    /// Full context: the (possibly truncated-on-roll) prompt plus every
+    /// token consumed by decode steps.
+    pub tokens: Vec<i32>,
+    /// Next-token logits at the current position `(V,)`.
+    pub last_logits: Vec<f32>,
+    /// Decode steps taken since prefill.
+    pub steps: usize,
+    kv: Option<KvState>,
+}
+
+impl Session {
+    /// Greedy argmax over the current logits — the token a decode step
+    /// will consume next (same tie-breaking as the legacy recompute loop:
+    /// the last maximum wins under `max_by`).
+    pub fn next_token(&self) -> i32 {
+        self.last_logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as i32)
+            .unwrap_or(0)
+    }
+
+    /// Tokens currently held in the KV cache (0 on the windowed fallback,
+    /// which caches nothing).
+    pub fn cached_tokens(&self) -> usize {
+        self.kv.as_ref().map(|kv| kv.len()).unwrap_or(0)
+    }
+
+    /// Physical bits the session's cache holds right now.
+    pub fn kv_bits(&self) -> u64 {
+        self.kv.as_ref().map(|kv| kv.stored_bits()).unwrap_or(0)
+    }
+}
+
+/// Per-step report for metrics/energy accounting.
+#[derive(Debug, Clone, Default)]
+pub struct StepOut {
+    /// Sessions advanced this step (the decode batch occupancy).
+    pub rows: usize,
+    /// Realized per-linear activation FP8 fractions over the new rows
+    /// (empty on the windowed fallback, which reports none).
+    pub act_fp8: Vec<f32>,
+    /// Total KV-cache tokens attended over this step (Σ per-session
+    /// context) — the cache-traffic input to the energy report.
+    pub kv_tokens: u64,
+}
+
+/// The model-owning state of the cached native path.
+struct CachedEngine {
+    arch: ModelArch,
+    params: Vec<(String, Vec<f32>)>,
+    act_weights: Vec<Vec<f32>>,
+    thresholds: Vec<f32>,
+    kv: KvPrecision,
+}
+
+impl CachedEngine {
+    fn param_map(&self) -> HashMap<&str, &[f32]> {
+        self.params.iter().map(|(n, v)| (n.as_str(), v.as_slice())).collect()
+    }
+
+    fn quant_inputs(&self) -> QuantInputs<'_> {
+        QuantInputs {
+            act_weights: self.act_weights.iter().map(|v| v.as_slice()).collect(),
+            thresholds: &self.thresholds,
+        }
+    }
+}
+
+/// The windowed-recompute fallback: one-shot logits graph, fixed (B, S).
+struct WindowedEngine {
+    exe: Executable,
+    tail: Vec<ArgValue>,
+    arch: ModelArch,
+    batch: usize,
+    seq: usize,
+}
+
+enum Inner {
+    Cached(CachedEngine),
+    Windowed(WindowedEngine),
+}
+
+/// A loaded model plus the session machinery. Built per worker thread
+/// (like executables, engines are not shared across threads).
+pub struct Engine {
+    inner: Inner,
+}
+
+impl Engine {
+    /// Build an engine for a `logits_quant` graph from its [`ExecSpec`] and
+    /// the same argument tail (params, activation weightings, thresholds)
+    /// the one-shot API takes. The native backend gets the KV-cached
+    /// incremental path at `kv` precision; other backends fall back to
+    /// windowed recompute.
+    pub fn new(
+        rt: &Runtime,
+        spec: &ExecSpec,
+        tail: Vec<ArgValue>,
+        kv: KvPrecision,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            spec.kind == GraphKind::LogitsQuant,
+            "Engine drives the logits_quant graph, got {:?}",
+            spec.kind
+        );
+        let exe = rt.load_spec(spec)?;
+        match exe {
+            Executable::Native(g) => {
+                let (params, act_weights, thresholds) = parse_tail(g.manifest(), &tail)?;
+                Ok(Engine {
+                    inner: Inner::Cached(CachedEngine {
+                        arch: g.arch().clone(),
+                        params,
+                        act_weights,
+                        thresholds,
+                        kv,
+                    }),
+                })
+            }
+            #[cfg(feature = "pjrt")]
+            exe @ Executable::Pjrt(_) => Engine::windowed_from(spec, exe, tail),
+        }
+    }
+
+    /// Force the windowed-recompute fallback regardless of backend (the
+    /// PJRT path always takes this; tests use it as the parity oracle).
+    pub fn new_windowed(rt: &Runtime, spec: &ExecSpec, tail: Vec<ArgValue>) -> Result<Self> {
+        anyhow::ensure!(
+            spec.kind == GraphKind::LogitsQuant,
+            "Engine drives the logits_quant graph, got {:?}",
+            spec.kind
+        );
+        let exe = rt.load_spec(spec)?;
+        Engine::windowed_from(spec, exe, tail)
+    }
+
+    fn windowed_from(spec: &ExecSpec, exe: Executable, tail: Vec<ArgValue>) -> Result<Self> {
+        let manifest = Manifest::load(spec.model_dir().join("manifest.json"))?;
+        let arch = manifest.arch()?;
+        let (batch, seq) = (manifest.batch, manifest.seq);
+        Ok(Engine { inner: Inner::Windowed(WindowedEngine { exe, tail, arch, batch, seq }) })
+    }
+
+    /// Whether sessions run the cached incremental path (vs windowed
+    /// recompute).
+    pub fn is_cached(&self) -> bool {
+        matches!(self.inner, Inner::Cached(_))
+    }
+
+    /// The model architecture.
+    pub fn arch(&self) -> &ModelArch {
+        match &self.inner {
+            Inner::Cached(ce) => &ce.arch,
+            Inner::Windowed(we) => &we.arch,
+        }
+    }
+
+    /// KV storage precision of new sessions (the fallback holds no cache;
+    /// it reports FP16, the recompute activations' precision).
+    pub fn kv_precision(&self) -> KvPrecision {
+        match &self.inner {
+            Inner::Cached(ce) => ce.kv,
+            Inner::Windowed(_) => KvPrecision::Fp16,
+        }
+    }
+
+    /// Run one prompt to completion, returning a session whose logits
+    /// predict the first generated token. Prompts longer than the model's
+    /// context are truncated to the trailing window; an empty prompt is
+    /// treated as the single token 0 (matching the legacy zero-padded
+    /// window).
+    pub fn prefill(&self, prompt: &[i32]) -> Result<Session> {
+        let prompt = if prompt.is_empty() { &[0i32][..] } else { prompt };
+        match &self.inner {
+            Inner::Cached(ce) => {
+                let keep = prompt.len().min(ce.arch.max_seq);
+                let kept = &prompt[prompt.len() - keep..];
+                let mut kv = KvState::new(&ce.arch, ce.kv);
+                let quant = ce.quant_inputs();
+                let out = forward_prefill(&ce.arch, &ce.param_map(), kept, Some(&quant), &mut kv)?;
+                Ok(Session {
+                    tokens: kept.to_vec(),
+                    last_logits: out.logits,
+                    steps: 0,
+                    kv: Some(kv),
+                })
+            }
+            Inner::Windowed(we) => {
+                let mut sess = Session {
+                    tokens: prompt.to_vec(),
+                    last_logits: Vec::new(),
+                    steps: 0,
+                    kv: None,
+                };
+                {
+                    let mut refs = [&mut sess];
+                    we.refresh_logits(&mut refs)?;
+                }
+                Ok(sess)
+            }
+        }
+    }
+
+    /// Advance every session by one token: each consumes its own greedy
+    /// next token, all new rows run as one batched forward (cached path),
+    /// and each session's logits then predict the following token.
+    /// Sessions whose cache has reached `max_seq` are rolled first: the
+    /// cache is rebuilt from the trailing half window (the same truncation
+    /// semantics as the windowed fallback, paid once per half window
+    /// instead of every step).
+    pub fn decode_step(&self, sessions: &mut [&mut Session]) -> Result<StepOut> {
+        if sessions.is_empty() {
+            return Ok(StepOut::default());
+        }
+        match &self.inner {
+            Inner::Cached(ce) => {
+                // Validate and roll *before* consuming any token, so a
+                // pre-check failure leaves every session untouched.
+                for (i, sess) in sessions.iter().enumerate() {
+                    anyhow::ensure!(sess.kv.is_some(), "session {i} was not prefilled cached");
+                }
+                let pm = ce.param_map();
+                let quant = ce.quant_inputs();
+                for sess in sessions.iter_mut() {
+                    let kv = sess.kv.as_mut().expect("checked above");
+                    if kv.len() >= ce.arch.max_seq {
+                        // Roll: rebuild the cache from the trailing half
+                        // window of the already-consumed context.
+                        let w = (ce.arch.max_seq / 2).max(1);
+                        let kept: Vec<i32> =
+                            sess.tokens[sess.tokens.len().saturating_sub(w)..].to_vec();
+                        kv.clear();
+                        forward_prefill(&ce.arch, &pm, &kept, Some(&quant), kv)?;
+                        sess.tokens = kept;
+                    }
+                }
+                let inputs: Vec<i32> = sessions.iter().map(|s| s.next_token()).collect();
+                for (sess, &t) in sessions.iter_mut().zip(&inputs) {
+                    sess.tokens.push(t);
+                }
+                let mut kvs: Vec<&mut KvState> =
+                    sessions.iter_mut().map(|s| s.kv.as_mut().expect("checked above")).collect();
+                let out = match forward_step_batch(&ce.arch, &pm, &inputs, &mut kvs, Some(&quant))
+                {
+                    Ok(out) => out,
+                    Err(e) => {
+                        // Un-consume the inputs so the caller's token view
+                        // stays coherent (the cache itself is undefined
+                        // after a failed step — drop such sessions).
+                        for sess in sessions.iter_mut() {
+                            sess.tokens.pop();
+                        }
+                        return Err(e);
+                    }
+                };
+                let vocab = ce.arch.vocab;
+                let mut kv_tokens = 0u64;
+                for (i, sess) in sessions.iter_mut().enumerate() {
+                    sess.last_logits = out.logits[i * vocab..(i + 1) * vocab].to_vec();
+                    sess.steps += 1;
+                    kv_tokens += sess.cached_tokens() as u64;
+                }
+                Ok(StepOut { rows: sessions.len(), act_fp8: out.act_fp8, kv_tokens })
+            }
+            Inner::Windowed(we) => {
+                let inputs: Vec<i32> = sessions.iter().map(|s| s.next_token()).collect();
+                for (sess, &t) in sessions.iter_mut().zip(&inputs) {
+                    sess.tokens.push(t);
+                }
+                if let Err(e) = we.refresh_logits(sessions) {
+                    for sess in sessions.iter_mut() {
+                        sess.tokens.pop();
+                    }
+                    return Err(e);
+                }
+                for sess in sessions.iter_mut() {
+                    sess.steps += 1;
+                }
+                Ok(StepOut { rows: sessions.len(), act_fp8: Vec::new(), kv_tokens: 0 })
+            }
+        }
+    }
+}
+
+impl WindowedEngine {
+    /// Recompute next-token logits for each session from its trailing
+    /// window, packing up to `batch` sessions per one-shot run (the
+    /// fixed-shape graph batch).
+    fn refresh_logits(&self, sessions: &mut [&mut Session]) -> Result<()> {
+        for chunk in sessions.chunks_mut(self.batch) {
+            let (b, s) = (self.batch, self.seq);
+            let mut tokens = vec![0i32; b * s];
+            for (row, sess) in chunk.iter().enumerate() {
+                let ctx = &sess.tokens;
+                let start = ctx.len().saturating_sub(s);
+                let window = &ctx[start..];
+                let off = s - window.len();
+                tokens[row * s + off..(row + 1) * s].copy_from_slice(window);
+            }
+            let mut args = vec![ArgValue::I32 { shape: vec![b, s], data: tokens }];
+            args.extend(self.tail.iter().cloned());
+            let out = self.exe.run(&args)?;
+            let vocab = out[0].len() / b;
+            for (row, sess) in chunk.iter_mut().enumerate() {
+                sess.last_logits = out[0][row * vocab..(row + 1) * vocab].to_vec();
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Split a `logits_quant` argument tail into owned (params, activation
+/// weightings, thresholds) following the manifest's parameter inventory —
+/// the same layout `NativeGraph::run` consumes positionally.
+#[allow(clippy::type_complexity)]
+fn parse_tail(
+    man: &Manifest,
+    tail: &[ArgValue],
+) -> Result<(Vec<(String, Vec<f32>)>, Vec<Vec<f32>>, Vec<f32>)> {
+    let np = man.param_names.len();
+    let nl = man.num_linears;
+    anyhow::ensure!(
+        tail.len() == np + nl + 1,
+        "logits tail has {} args, expected {np} params + {nl} weightings + thresholds",
+        tail.len()
+    );
+    let mut params = Vec::with_capacity(np);
+    for (i, name) in man.param_names.iter().enumerate() {
+        let want: usize = man.param_shapes[name].iter().product();
+        let a = &tail[i];
+        anyhow::ensure!(
+            a.elements() == want,
+            "parameter '{name}' has {} elements, want {want}",
+            a.elements()
+        );
+        params.push((name.clone(), a.as_f32()?.to_vec()));
+    }
+    let mut act_weights = Vec::with_capacity(nl);
+    for i in 0..nl {
+        act_weights.push(tail[np + i].as_f32()?.to_vec());
+    }
+    let thresholds = tail[np + nl].as_f32()?.to_vec();
+    anyhow::ensure!(thresholds.len() == nl, "thresholds length");
+    Ok((params, act_weights, thresholds))
+}

@@ -12,8 +12,15 @@
 //! name, [`GraphKind`]); the runtime decides *how*. `ExecSpec` is plain data
 //! and crosses threads freely, which is what the serving coordinator's
 //! worker threads rely on.
+//!
+//! Two execution styles sit on top:
+//! * one-shot [`Executable::run`] — stateless, the Score/eval path;
+//! * stateful [`Engine`] sessions — KV-cached prefill/decode for
+//!   generation ([`engine`]), falling back to windowed recompute through
+//!   the one-shot API on backends without the native cached path.
 
 pub mod args;
+pub mod engine;
 pub mod native;
 
 #[cfg(feature = "pjrt")]
@@ -24,6 +31,7 @@ pub mod literal;
 use std::path::{Path, PathBuf};
 
 pub use args::ArgValue;
+pub use engine::{Engine, Session, StepOut};
 #[cfg(feature = "pjrt")]
 pub use client::PjrtRuntime;
 #[cfg(feature = "pjrt")]

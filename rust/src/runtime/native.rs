@@ -42,6 +42,17 @@ impl NativeGraph {
         &self.name
     }
 
+    /// The manifest this graph was materialized from (the [`super::engine`]
+    /// facade reuses it to parse argument tails into owned parameters).
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// The native architecture descriptor.
+    pub fn arch(&self) -> &ModelArch {
+        &self.arch
+    }
+
     /// Execute with host args; returns the graph's output tuple flattened to
     /// f32 — exactly the shape contract of the PJRT executables.
     pub fn run(&self, args: &[ArgValue]) -> Result<Vec<Vec<f32>>> {

@@ -103,6 +103,153 @@ fn batcher_with_live_producer_conserves() {
     }
 }
 
+/// Admission liveness: as long as the decode loop calls
+/// `drain_ready_capped` between steps with free capacity, no waiting
+/// request is starved past its deadline — pickup latency stays bounded by
+/// ~(max_wait + one simulated step), never unbounded.
+#[test]
+fn drain_ready_never_starves_waiting_requests() {
+    use std::time::Instant;
+    let (tx, rx) = std::sync::mpsc::sync_channel(64);
+    let n = 30u64;
+    let producer = std::thread::spawn(move || {
+        let mut rng = Rng::new(0x57A2);
+        let mut submitted = Vec::new();
+        for id in 0..n {
+            let (req, _rx) = score_req(id);
+            submitted.push((id, Instant::now()));
+            tx.send(req).unwrap();
+            std::thread::sleep(Duration::from_micros(200 + rng.below(800) as u64));
+        }
+        submitted
+    });
+
+    let max_wait = Duration::from_millis(10);
+    let step = Duration::from_millis(1);
+    let mut batcher = Batcher::new(BatchPolicy { max_batch: 4, max_wait }, rx);
+    // The continuous-batching shape: one blocking first batch, then a
+    // busy "decode" loop that drains between steps.
+    let mut picked: Vec<(u64, Instant)> = Vec::new();
+    let mut live = 0usize;
+    let cap = 4usize;
+    match batcher.next_batch() {
+        Some(batch) => {
+            live += batch.len().min(2);
+            picked.extend(batch.iter().map(|r| (r.id, Instant::now())));
+        }
+        None => unreachable!("producer still running"),
+    }
+    while picked.len() < n as usize {
+        std::thread::sleep(step); // one decode step
+        let mut admitted = Vec::new();
+        batcher.drain_ready_capped(&mut admitted, cap.saturating_sub(live));
+        picked.extend(admitted.iter().map(|r| (r.id, Instant::now())));
+        // retire someone occasionally so capacity keeps opening
+        live = live.saturating_sub(1);
+    }
+    let submitted = producer.join().unwrap();
+    // Deadline + generous CI scheduling slack: the property is that waits
+    // are *bounded* (starvation would grow with queue position).
+    let bound = max_wait + Duration::from_millis(200);
+    for ((id_s, t_s), (id_p, t_p)) in submitted.iter().zip(&picked) {
+        assert_eq!(id_s, id_p, "FIFO admission order");
+        let waited = t_p.duration_since(*t_s);
+        assert!(waited < bound, "req {id_s} waited {waited:?} (bound {bound:?})");
+    }
+}
+
+/// Continuous batching preserves per-request token streams: requests with
+/// different prompts and budgets, admitted and retired at different times
+/// while sharing batched decode steps, each produce exactly the stream a
+/// dedicated single-session engine produces for their prompt (the decode
+/// batch is bit-exact per row, so interleaving must be invisible).
+#[test]
+fn continuous_batching_preserves_per_request_streams() {
+    use fgmp::coordinator::{Server, ServerConfig};
+    use fgmp::eval::Evaluator;
+    use fgmp::model::{KvPrecision, QuantConfig, QuantizedModel};
+    use fgmp::runtime::{Engine, ExecSpec, GraphKind, Runtime};
+
+    let dir = std::env::temp_dir().join("fgmp_coordinator_props_artifacts");
+    let _ = std::fs::remove_dir_all(&dir);
+    fgmp::io::synth::ensure_model(&dir, "tiny-llama", 42).expect("synthesize artifacts");
+
+    let rt = Runtime::native();
+    let ev = Evaluator::load(&rt, &dir, "tiny-llama").unwrap();
+    let cfg = QuantConfig::fgmp(0.7);
+    let qm = QuantizedModel::quantize(&ev.arts, &cfg).unwrap();
+    let tail = ev.quant_arg_tail(&cfg, &qm).unwrap();
+    let shapes = qm.layer_profiles(&ev.arts.manifest, ev.batch * ev.seq, &[]);
+    let logits_spec = ExecSpec::new(&dir, "tiny-llama", GraphKind::LogitsQuant);
+
+    // Reference streams from a dedicated single-session engine.
+    let engine = Engine::new(&rt, &logits_spec, tail.clone(), KvPrecision::Fp16).unwrap();
+    let mut rng = Rng::new(0xC0B5);
+    let cases: Vec<(Vec<i32>, usize)> = (0..10)
+        .map(|i| {
+            let off = i * 16;
+            let len = 4 + rng.below(8);
+            let n_tokens = 1 + rng.below(6);
+            (ev.test_stream[off..off + len].to_vec(), n_tokens)
+        })
+        .collect();
+    let expected: Vec<Vec<i32>> = cases
+        .iter()
+        .map(|(prompt, n)| {
+            let mut sess = engine.prefill(prompt).unwrap();
+            let mut produced = vec![sess.next_token()];
+            while produced.len() < *n {
+                let mut refs = [&mut sess];
+                engine.decode_step(&mut refs).unwrap();
+                produced.push(sess.next_token());
+            }
+            produced.truncate(*n);
+            produced
+        })
+        .collect();
+
+    // A small decode batch forces queueing, mid-flight admission, and
+    // staggered retirement across the 10 requests.
+    let scfg = ServerConfig {
+        batch: ev.batch,
+        seq: ev.seq,
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+        layer_shapes: shapes,
+        queue_depth: 64,
+        kv_precision: KvPrecision::Fp16,
+        decode_batch: 3,
+    };
+    let fwd_spec = ExecSpec::new(&dir, "tiny-llama", GraphKind::FwdQuant);
+    let server = Server::start(scfg, fwd_spec, tail.clone(), logits_spec, tail).unwrap();
+
+    let mut rxs = Vec::new();
+    for (id, (prompt, n_tokens)) in cases.iter().enumerate() {
+        let (req, resp_rx) = Request::new(
+            id as u64,
+            RequestKind::Generate { prompt: prompt.clone(), n_tokens: *n_tokens },
+        );
+        server.router.submit(req).unwrap();
+        rxs.push(resp_rx);
+        if id % 3 == 1 {
+            std::thread::sleep(Duration::from_millis(2)); // stagger admission
+        }
+    }
+    for (i, resp_rx) in rxs.into_iter().enumerate() {
+        let resp = resp_rx.recv().expect("generate response");
+        let got = resp.generated.expect("tokens generated");
+        assert_eq!(got, expected[i], "request {i}: stream perturbed by batching");
+    }
+    let snap = server.metrics.snapshot();
+    assert!(snap.decode_steps > 0, "decode loop must have stepped");
+    assert!(snap.mean_decode_occupancy > 0.0);
+    assert!(snap.ttft_p50_ms >= 0.0);
+    assert_eq!(
+        snap.generated_tokens,
+        cases.iter().map(|(_, n)| *n as u64).sum::<u64>()
+    );
+    server.shutdown();
+}
+
 /// Metrics accounting: sums of random batch records reconcile exactly.
 #[test]
 fn metrics_reconcile_random_streams() {

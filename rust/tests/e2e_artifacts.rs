@@ -210,6 +210,8 @@ fn coordinator_serves_score_requests_natively() {
         policy: BatchPolicy::default(),
         layer_shapes: shapes,
         queue_depth: 64,
+        kv_precision: fgmp::model::KvPrecision::Fp8,
+        decode_batch: 4,
     };
     let fwd = ExecSpec::new(dir, "tiny-llama", GraphKind::FwdQuant);
     let logits = ExecSpec::new(dir, "tiny-llama", GraphKind::LogitsQuant);
@@ -258,6 +260,11 @@ fn coordinator_serves_score_requests_natively() {
     assert_eq!(snap.requests, id);
     assert!(snap.energy_fp8_j > 0.0 && snap.energy_j > 0.0);
     assert!(snap.energy_savings > 0.0, "mixed precision must save energy");
+    // The generation rode the continuous-batching decode loop: 3 tokens =
+    // prefill + 2 batched steps, with TTFT recorded.
+    assert!(snap.decode_steps >= 2, "decode steps {}", snap.decode_steps);
+    assert!(snap.mean_decode_occupancy > 0.0);
+    assert_eq!(snap.generated_tokens, 3);
     server.shutdown();
 }
 
@@ -330,4 +337,68 @@ fn large_preset_round_trips_through_evaluator() {
     let bf16 = ev.perplexity(&bf16_config(), None, 2).unwrap();
     assert!(bf16.ppl.is_finite() && bf16.ppl > 1.0);
     assert_ne!(bf16.nll_sum, rep.nll_sum);
+}
+
+/// Generation e2e at the d_model=512 perf-scale preset: batched KV-cached
+/// decode through the stateful Engine, FP8 cache, deterministic across
+/// runs and bit-identical between batched and solo decode. Gated behind
+/// `FGMP_E2E_LARGE=1` like the evaluator round-trip above.
+#[test]
+fn large_preset_generates_through_engine() {
+    use fgmp::model::KvPrecision;
+    use fgmp::runtime::{Engine, ExecSpec, GraphKind, Runtime};
+
+    if std::env::var("FGMP_E2E_LARGE").is_err() {
+        eprintln!("skipping large-preset generation e2e (set FGMP_E2E_LARGE=1 to run)");
+        return;
+    }
+    // Own directory: the evaluator round-trip test rebuilds its dir from
+    // scratch and tests run concurrently.
+    let dir = std::env::temp_dir().join("fgmp_e2e_large_gen_artifacts");
+    let _ = std::fs::remove_dir_all(&dir);
+    synth::ensure_model(&dir, "small-llama", 42).expect("synthesize small-llama artifacts");
+
+    let rt = Runtime::native();
+    let ev = Evaluator::load(&rt, &dir, "small-llama").unwrap();
+    let cfg = QuantConfig::fgmp(0.7);
+    let qm = QuantizedModel::quantize(&ev.arts, &cfg).unwrap();
+    let tail = ev.quant_arg_tail(&cfg, &qm).unwrap();
+    let spec = ExecSpec::new(&dir, "small-llama", GraphKind::LogitsQuant);
+    let engine = Engine::new(&rt, &spec, tail, KvPrecision::Fp8).unwrap();
+    assert!(engine.is_cached());
+
+    let n_tokens = 8usize;
+    let prompts: Vec<Vec<i32>> =
+        (0..2).map(|i| ev.test_stream[i * 32..i * 32 + 16].to_vec()).collect();
+
+    // Batched decode across both sessions.
+    let mut sessions: Vec<_> = prompts.iter().map(|p| engine.prefill(p).unwrap()).collect();
+    let mut produced: Vec<Vec<i32>> = sessions.iter().map(|s| vec![s.next_token()]).collect();
+    for _ in 1..n_tokens {
+        let mut refs: Vec<&mut fgmp::runtime::Session> = sessions.iter_mut().collect();
+        let step = engine.decode_step(&mut refs).unwrap();
+        assert_eq!(step.rows, 2);
+        assert!(step.kv_tokens > 0);
+        for (p, s) in produced.iter_mut().zip(&sessions) {
+            p.push(s.next_token());
+        }
+    }
+    for (p, prompt) in produced.iter().zip(&prompts) {
+        assert_eq!(p.len(), n_tokens);
+        assert!(p.iter().all(|&t| (0..synth::VOCAB as i32).contains(&t)), "tokens in vocab");
+        // Solo decode of the same prompt must match bit-for-bit.
+        let mut sess = engine.prefill(prompt).unwrap();
+        let mut solo = vec![sess.next_token()];
+        while solo.len() < n_tokens {
+            let mut refs = [&mut sess];
+            engine.decode_step(&mut refs).unwrap();
+            solo.push(sess.next_token());
+        }
+        assert_eq!(&solo, p, "batched vs solo stream");
+    }
+    // The FP8 cache physically holds half the bits of an FP16 cache.
+    let arch = ev.arts.manifest.arch().unwrap();
+    let toks = (16 + n_tokens - 1) as u64;
+    let want = 8 * 2 * arch.n_layers as u64 * toks * arch.d_model as u64;
+    assert_eq!(sessions[0].kv_bits(), want);
 }
