@@ -56,6 +56,7 @@ fn main() -> fgmp::Result<()> {
         queue_depth: 512,
         kv_precision: fgmp::model::KvPrecision::Fp8,
         decode_batch: 4,
+        kv_pages: None,
     };
     let windows = ev.eval_windows(16);
     let seq = ev.seq;

@@ -8,7 +8,8 @@ use std::time::Duration;
 
 use crate::io::synth::SynthConfig;
 use crate::model::forward::{
-    fgmp_matmul, forward, forward_prefill, forward_step, forward_step_batch, ModelArch,
+    fgmp_matmul, forward, forward_prefill, forward_prefill_batch, forward_step,
+    forward_step_batch, ModelArch,
 };
 use crate::model::kv::{KvPrecision, KvState};
 use crate::quant::fp8::quant_e4m3_slice;
@@ -35,13 +36,19 @@ pub mod names {
     pub const DECODE_OCC1: &str = "decode_step_d512_occ1";
     pub const DECODE_OCC4: &str = "decode_step_d512_occ4";
     pub const DECODE_OCC8: &str = "decode_step_d512_occ8";
+    pub const DECODE_OCC8_PAGED: &str = "decode_step_paged_d512_occ8";
+    pub const DECODE_CHURN_PAGED: &str = "decode_paged_churn_d512";
+    pub const PREFILL_SEQ: &str = "prefill_sequential_d512_p16x8";
+    pub const PREFILL_BATCHED: &str = "prefill_batched_d512_p16x8";
 
     pub const SPEEDUP_MATMUL: &str = "speedup_matmul_d512";
     pub const SPEEDUP_MATMUL_T: &str = "speedup_matmul_t_d512";
     pub const SPEEDUP_QUANT: &str = "speedup_quant_e4m3";
     pub const SPEEDUP_DECODE: &str = "speedup_decode_cached_d512";
+    pub const SPEEDUP_PREFILL_BATCHED: &str = "speedup_prefill_batched_d512";
+    pub const RATIO_DECODE_PAGED: &str = "ratio_decode_paged_occ8_d512";
 
-    pub const ALL: [&str; 15] = [
+    pub const ALL: [&str; 19] = [
         MATMUL_SCALAR,
         MATMUL_BLOCKED,
         MATMUL_T_SCALAR,
@@ -57,9 +64,19 @@ pub mod names {
         DECODE_OCC1,
         DECODE_OCC4,
         DECODE_OCC8,
+        DECODE_OCC8_PAGED,
+        DECODE_CHURN_PAGED,
+        PREFILL_SEQ,
+        PREFILL_BATCHED,
     ];
-    pub const ALL_DERIVED: [&str; 4] =
-        [SPEEDUP_MATMUL, SPEEDUP_MATMUL_T, SPEEDUP_QUANT, SPEEDUP_DECODE];
+    pub const ALL_DERIVED: [&str; 6] = [
+        SPEEDUP_MATMUL,
+        SPEEDUP_MATMUL_T,
+        SPEEDUP_QUANT,
+        SPEEDUP_DECODE,
+        SPEEDUP_PREFILL_BATCHED,
+        RATIO_DECODE_PAGED,
+    ];
 }
 
 /// Print one result and add it to the suite.
@@ -223,17 +240,123 @@ pub fn decode_benches(suite: &mut BenchSuite, budget: Duration) {
     });
     pair(suite, names::SPEEDUP_DECODE, recompute, cached);
 
+    // Batched steps at fixed fill: step once, truncate the appended row —
+    // the bench measures the decode step itself, not a warm-cache clone.
+    let mut occ8_result: Option<crate::util::bench::BenchResult> = None;
     for (occ, name) in
         [(1usize, names::DECODE_OCC1), (4, names::DECODE_OCC4), (8, names::DECODE_OCC8)]
     {
         let toks: Vec<i32> = (0..occ).map(|i| ((i * 5 + 1) % arch.vocab) as i32).collect();
+        let mut owned: Vec<KvState> = (0..occ).map(|_| kv0.clone()).collect();
         let r = bench(name, Some(occ as u64), budget, || {
-            let mut owned: Vec<KvState> = (0..occ).map(|_| kv0.clone()).collect();
-            let mut kvs: Vec<&mut KvState> = owned.iter_mut().collect();
-            black_box(forward_step_batch(&arch, &pm, &toks, &mut kvs, None).unwrap());
+            {
+                let mut kvs: Vec<&mut KvState> = owned.iter_mut().collect();
+                black_box(forward_step_batch(&arch, &pm, &toks, &mut kvs, None).unwrap());
+            }
+            for kv in &mut owned {
+                kv.truncate(prompt_len);
+            }
         });
+        if occ == 8 {
+            occ8_result = Some(r.clone());
+        }
         keep(suite, r);
     }
+
+    paged_benches(suite, budget, &arch, &pm, &prompt, occ8_result);
+}
+
+/// Paged-arena decode/prefill workloads at the d512 preset: the occupancy-8
+/// batched step over **paged** sessions (page-gather reads plus the
+/// page-boundary alloc/free on the hot path; its min-time ratio against the
+/// contiguous occupancy-8 step is `ratio_decode_paged_occ8_d512` — the
+/// paged-decode floor CI gates), a high-session-churn variant cycling
+/// admit → prefill_batch → step → retire over one shared pool, and
+/// sequential-vs-batched prefill of 8 prompts with the derived
+/// `speedup_prefill_batched_d512`.
+fn paged_benches(
+    suite: &mut BenchSuite,
+    budget: Duration,
+    arch: &ModelArch,
+    pm: &std::collections::HashMap<&str, &[f32]>,
+    prompt: &[i32],
+    occ8_contiguous: Option<crate::util::bench::BenchResult>,
+) {
+    use crate::model::kv::KvPool;
+
+    let prompt_len = prompt.len();
+    let occ = 8usize;
+    let pages = 4 * KvPool::pages_for_session(arch.n_layers, arch.max_seq);
+    let pool = KvPool::new(arch, KvPrecision::Fp16, pages);
+    let toks: Vec<i32> = (0..occ).map(|i| ((i * 5 + 1) % arch.vocab) as i32).collect();
+
+    // Paged occ-8 step at fixed fill (same body shape as the contiguous
+    // occ benches: step + truncate, so the ratio isolates the paging).
+    let mut owned: Vec<KvState> = (0..occ)
+        .map(|_| {
+            let mut kv = KvState::new_paged(arch, &pool);
+            forward_prefill(arch, pm, prompt, None, &mut kv).expect("paged prefill");
+            kv
+        })
+        .collect();
+    let r = bench(names::DECODE_OCC8_PAGED, Some(occ as u64), budget, || {
+        {
+            let mut kvs: Vec<&mut KvState> = owned.iter_mut().collect();
+            black_box(forward_step_batch(arch, pm, &toks, &mut kvs, None).unwrap());
+        }
+        for kv in &mut owned {
+            kv.truncate(prompt_len);
+        }
+    });
+    if let Some(base) = occ8_contiguous {
+        let ratio = base.min.as_secs_f64() / r.min.as_secs_f64().max(1e-12);
+        println!("  -> {} {ratio:.2}x", names::RATIO_DECODE_PAGED);
+        suite.derive(names::RATIO_DECODE_PAGED, ratio);
+    }
+    keep(suite, r);
+    drop(owned); // pages back to the free list before the churn bench
+
+    // High session churn: every iteration admits 8 fresh sessions through
+    // the batched prefill, steps them once, and retires them — the pool's
+    // alloc/free cycling under continuous batching.
+    let prompts: Vec<Vec<i32>> = (0..occ)
+        .map(|i| (0..prompt_len).map(|t| ((t * 7 + i * 13 + 1) % arch.vocab) as i32).collect())
+        .collect();
+    let pviews: Vec<&[i32]> = prompts.iter().map(|p| p.as_slice()).collect();
+    let r = bench(
+        names::DECODE_CHURN_PAGED,
+        Some((occ * (prompt_len + 1)) as u64),
+        budget,
+        || {
+            let mut kvs: Vec<KvState> = (0..occ).map(|_| KvState::new_paged(arch, &pool)).collect();
+            {
+                let mut refs: Vec<&mut KvState> = kvs.iter_mut().collect();
+                black_box(forward_prefill_batch(arch, pm, &pviews, None, &mut refs).unwrap());
+            }
+            {
+                let mut refs: Vec<&mut KvState> = kvs.iter_mut().collect();
+                black_box(forward_step_batch(arch, pm, &toks, &mut refs, None).unwrap());
+            }
+            // kvs drop here: retirement returns every page.
+        },
+    );
+    keep(suite, r);
+
+    // Sequential vs batched prefill of the same 8 prompts (flat caches on
+    // both sides, so the ratio isolates the matmul amortization).
+    let seq = bench(names::PREFILL_SEQ, Some((occ * prompt_len) as u64), budget, || {
+        for p in &prompts {
+            let mut kv = KvState::new(arch, KvPrecision::Fp16);
+            black_box(forward_prefill(arch, pm, p, None, &mut kv).unwrap());
+        }
+    });
+    let bat = bench(names::PREFILL_BATCHED, Some((occ * prompt_len) as u64), budget, || {
+        let mut kvs: Vec<KvState> =
+            (0..occ).map(|_| KvState::new(arch, KvPrecision::Fp16)).collect();
+        let mut refs: Vec<&mut KvState> = kvs.iter_mut().collect();
+        black_box(forward_prefill_batch(arch, pm, &pviews, None, &mut refs).unwrap());
+    });
+    pair(suite, names::SPEEDUP_PREFILL_BATCHED, seq, bat);
 }
 
 #[cfg(test)]
@@ -261,9 +384,12 @@ mod tests {
                 "baseline derived '{key}' is not produced by fgmp::benchsuite"
             );
         }
-        // The acceptance floors themselves: the blocked matmul and the
-        // cached-decode-vs-recompute speedup must both be gated.
+        // The acceptance floors themselves: the blocked matmul, the
+        // cached-decode-vs-recompute speedup, the batched-prefill speedup,
+        // and the paged-decode ratio must all be gated.
         assert!(baseline.derived.get(names::SPEEDUP_MATMUL).is_some_and(|&v| v >= 2.0));
         assert!(baseline.derived.get(names::SPEEDUP_DECODE).is_some_and(|&v| v >= 1.0));
+        assert!(baseline.derived.get(names::SPEEDUP_PREFILL_BATCHED).is_some_and(|&v| v >= 0.9));
+        assert!(baseline.derived.get(names::RATIO_DECODE_PAGED).is_some_and(|&v| v >= 0.5));
     }
 }

@@ -1,7 +1,12 @@
 //! Dynamic batcher: packs queued score rows into fixed-shape device batches
 //! under a (max size, max wait) policy — the standard dynamic-batching
-//! trade-off between padding waste and queueing latency.
+//! trade-off between padding waste and queueing latency. A deferred queue
+//! in front of the channel supports admission backpressure: requests the
+//! executor cannot place yet (e.g. the KV page pool is exhausted) are
+//! handed back via [`Batcher::defer`] and re-offered, oldest first, before
+//! any newer arrival — deferral never reorders.
 
+use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::time::{Duration, Instant};
 
@@ -27,19 +32,32 @@ impl Default for BatchPolicy {
 pub struct Batcher {
     pub policy: BatchPolicy,
     rx: Receiver<Request>,
+    /// Requests handed back by the executor (admission backpressure),
+    /// re-offered ahead of the channel in their original order.
+    deferred: VecDeque<Request>,
 }
 
 impl Batcher {
     pub fn new(policy: BatchPolicy, rx: Receiver<Request>) -> Self {
-        Batcher { policy, rx }
+        Batcher { policy, rx, deferred: VecDeque::new() }
     }
 
     /// Block for the next batch: returns `None` when the queue is closed
-    /// and drained. Invariants (exercised by tests/coordinator_props.rs):
+    /// and drained (deferred included). Invariants (exercised by
+    /// tests/coordinator_props.rs):
     ///  * 1 <= len <= max_batch
-    ///  * arrival order is preserved within and across batches
+    ///  * arrival order is preserved within and across batches (deferred
+    ///    requests are older than anything in the channel)
     ///  * once a request heads the batch, it waits at most ~max_wait.
+    /// Deferred requests are already past their wait, so a non-empty
+    /// deferred queue yields a batch immediately (topped up with whatever
+    /// the channel has ready) rather than blocking.
     pub fn next_batch(&mut self) -> Option<Vec<Request>> {
+        if !self.deferred.is_empty() {
+            let mut batch = Vec::new();
+            self.drain_ready(&mut batch);
+            return Some(batch);
+        }
         let first = self.rx.recv().ok()?;
         let mut batch = vec![first];
         let deadline = Instant::now() + self.policy.max_wait;
@@ -68,14 +86,42 @@ impl Batcher {
     /// calls this between steps with `cap = free session slots`, so a
     /// waiting request is picked up within one decode step of capacity
     /// opening (never parked past its deadline while slots are free;
-    /// exercised by tests/coordinator_props.rs).
+    /// exercised by tests/coordinator_props.rs). Deferred requests go
+    /// first — they are the oldest waiting work.
     pub fn drain_ready_capped(&mut self, batch: &mut Vec<Request>, cap: usize) {
         while batch.len() < cap {
+            if let Some(req) = self.deferred.pop_front() {
+                batch.push(req);
+                continue;
+            }
             match self.rx.try_recv() {
                 Ok(req) => batch.push(req),
                 Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
             }
         }
+    }
+
+    /// Hand requests back to the *front* of the queue, preserving their
+    /// relative order — the admission-backpressure path: the decode loop
+    /// defers admits the KV page pool cannot hold yet and re-drains them,
+    /// still FIFO, once retirement frees pages.
+    pub fn defer(&mut self, reqs: Vec<Request>) {
+        for req in reqs.into_iter().rev() {
+            self.deferred.push_front(req);
+        }
+    }
+
+    /// Requests currently parked by [`Batcher::defer`].
+    pub fn deferred_len(&self) -> usize {
+        self.deferred.len()
+    }
+
+    /// The oldest parked request, if any — the admission gate inspects it
+    /// to avoid pulling work it cannot place yet (head-of-line semantics:
+    /// deferral is strictly FIFO, so nothing behind the head may run
+    /// before it).
+    pub fn peek_deferred(&self) -> Option<&Request> {
+        self.deferred.front()
     }
 }
 
@@ -124,6 +170,35 @@ mod tests {
         let mut b = Batcher::new(BatchPolicy::default(), rx);
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.len(), 1);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn deferred_requests_lead_and_keep_order() {
+        let (tx, rx) = sync_channel(64);
+        for i in 0..6 {
+            tx.send(req(i)).unwrap();
+        }
+        let mut b = Batcher::new(
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) }, rx);
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        // Executor could only place id 0; 1..3 bounce back.
+        let bounced: Vec<Request> = batch.into_iter().skip(1).collect();
+        b.defer(bounced);
+        assert_eq!(b.deferred_len(), 3);
+        // Deferred lead the next drain, ahead of channel ids 4, 5.
+        let mut again = Vec::new();
+        b.drain_ready_capped(&mut again, 4);
+        assert_eq!(again.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2, 3, 4]);
+        assert_eq!(b.deferred_len(), 0);
+        // next_batch with deferred work returns immediately (no blocking).
+        b.defer(again);
+        drop(tx);
+        let flush = b.next_batch().unwrap();
+        assert_eq!(flush.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2, 3, 4]);
+        let last = b.next_batch().unwrap();
+        assert_eq!(last.iter().map(|r| r.id).collect::<Vec<_>>(), vec![5]);
         assert!(b.next_batch().is_none());
     }
 

@@ -27,6 +27,14 @@ struct Inner {
     decode_rows: u64,
     decode_slot_rows: u64,
     decode_busy: Duration,
+    // KV page-pool accounting (paged engines).
+    pool_samples: u64,
+    pool_total_pages: u64,
+    pool_in_use_sum: u64,
+    pool_peak_pages: u64,
+    kv_slots_used_sum: u64,
+    kv_slots_cap_sum: u64,
+    deferred_admissions: u64,
 }
 
 /// A point-in-time snapshot.
@@ -61,6 +69,18 @@ pub struct Snapshot {
     /// Time-to-first-token: submit → prefilled logits, p50 / p95 (ms).
     pub ttft_p50_ms: f64,
     pub ttft_p95_ms: f64,
+    // --- KV page pool (paged engines; zeros on the windowed fallback) ---
+    /// Pool capacity in pages.
+    pub kv_pool_pages: u64,
+    /// High-water pages in use over the run.
+    pub kv_pool_peak_pages: u64,
+    /// Mean fraction of the pool handed out, sampled once per decode step.
+    pub kv_pool_occupancy: f64,
+    /// Mean fraction of *allocated* page slots holding live tokens — the
+    /// internal-fragmentation complement (1.0 = no page-tail waste).
+    pub kv_page_fill: f64,
+    /// Admissions deferred because the pool could not hold the session yet.
+    pub deferred_admissions: u64,
 }
 
 impl Metrics {
@@ -122,6 +142,32 @@ impl Metrics {
         m.energy_fp8_pj += energy_fp8_pj;
     }
 
+    /// One KV pool sample (taken at admission and after each decode step):
+    /// pages in use of `total` with the pool's exact high-water mark
+    /// `peak`, plus the live-token slot fill of the allocated pages
+    /// (`used_slots` tokens cached out of `cap_slots` page-slot capacity).
+    pub fn record_pool(
+        &self,
+        in_use: usize,
+        total: usize,
+        peak: usize,
+        used_slots: u64,
+        cap_slots: u64,
+    ) {
+        let mut m = self.inner.lock().unwrap();
+        m.pool_samples += 1;
+        m.pool_total_pages = total as u64;
+        m.pool_in_use_sum += in_use as u64;
+        m.pool_peak_pages = m.pool_peak_pages.max(peak as u64).max(in_use as u64);
+        m.kv_slots_used_sum += used_slots;
+        m.kv_slots_cap_sum += cap_slots;
+    }
+
+    /// `n` admissions were deferred for lack of KV pages this round.
+    pub fn record_deferred(&self, n: u64) {
+        self.inner.lock().unwrap().deferred_admissions += n;
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let m = self.inner.lock().unwrap();
         let mut lats = m.latencies_us.clone();
@@ -181,6 +227,19 @@ impl Metrics {
             },
             ttft_p50_ms: pct_of(&ttfts, 0.50),
             ttft_p95_ms: pct_of(&ttfts, 0.95),
+            kv_pool_pages: m.pool_total_pages,
+            kv_pool_peak_pages: m.pool_peak_pages,
+            kv_pool_occupancy: if m.pool_samples == 0 || m.pool_total_pages == 0 {
+                0.0
+            } else {
+                m.pool_in_use_sum as f64 / (m.pool_samples * m.pool_total_pages) as f64
+            },
+            kv_page_fill: if m.kv_slots_cap_sum == 0 {
+                0.0
+            } else {
+                m.kv_slots_used_sum as f64 / m.kv_slots_cap_sum as f64
+            },
+            deferred_admissions: m.deferred_admissions,
         }
     }
 }
@@ -214,6 +273,27 @@ mod tests {
         assert_eq!(s.mean_decode_occupancy, 0.0);
         assert_eq!(s.decode_tok_per_s, 0.0);
         assert_eq!(s.ttft_p50_ms, 0.0);
+        assert_eq!(s.kv_pool_pages, 0);
+        assert_eq!(s.kv_pool_occupancy, 0.0);
+        assert_eq!(s.kv_page_fill, 0.0);
+        assert_eq!(s.deferred_admissions, 0);
+    }
+
+    #[test]
+    fn pool_accounting_reconciles() {
+        let m = Metrics::new();
+        // Two samples over a 10-page pool: 4 then 6 pages in use (pool
+        // high-water 7, seen between samples), with live-token slot fill
+        // 32/64 then 80/96.
+        m.record_pool(4, 10, 4, 32, 64);
+        m.record_pool(6, 10, 7, 80, 96);
+        m.record_deferred(3);
+        let s = m.snapshot();
+        assert_eq!(s.kv_pool_pages, 10);
+        assert_eq!(s.kv_pool_peak_pages, 7);
+        assert!((s.kv_pool_occupancy - 0.5).abs() < 1e-9);
+        assert!((s.kv_page_fill - 112.0 / 160.0).abs() < 1e-9);
+        assert_eq!(s.deferred_admissions, 3);
     }
 
     #[test]

@@ -8,11 +8,15 @@
 //! executor thread runs the one-shot executable → responses resolve
 //! per-request oneshots. Generation instead runs a continuous-batching
 //! decode loop over the stateful `runtime::Engine`: requests are admitted
-//! between decode steps, prefilled into KV-cached sessions, stepped
-//! together as one batched forward, and retired individually. Energy
-//! accounting per batch/step comes from the hwsim model — including
-//! KV-cache traffic at the session KV precision — so the serving report
-//! carries the paper's joules-per-token story.
+//! between decode steps (bounded by the engine's shared KV **page pool** —
+//! admits the pool cannot hold yet are deferred back to the batcher FIFO,
+//! not failed), prefilled **as one batched forward** into paged KV
+//! sessions, stepped together, and retired individually — returning their
+//! pages to the pool. Energy accounting per batch/step comes from the
+//! hwsim model — including KV-cache traffic at the session KV precision —
+//! and `Metrics` adds pool occupancy / page fill / deferral counts, so the
+//! serving report carries the paper's joules-per-token story plus the
+//! arena's utilization.
 
 pub mod batcher;
 pub mod metrics;

@@ -5,12 +5,19 @@
 //! Scoring runs the stateless one-shot graph as before. Generation runs a
 //! **continuous-batching decode loop** over the stateful [`Engine`]: new
 //! requests are admitted from the batcher *between* decode steps (up to the
-//! decode batch capacity), each is prefilled once into a KV-cached
-//! [`Session`], all live sessions advance one token per step as a single
-//! batched forward over the blocked kernels, and finished sessions retire
-//! immediately — no request waits for another's completion. Per-step energy
-//! includes the KV-cache read traffic at the sessions' KV precision via
-//! [`crate::hwsim::kvcache::kv_cache_bits`].
+//! decode batch capacity **and** the KV pool's committed-pages budget of
+//! per-request worst cases — requests the pool cannot hold yet are
+//! deferred back to the batcher, FIFO, instead of failed), every admitted
+//! prompt of a round is
+//! prefilled in one batched forward ([`Engine::prefill_batch`]), all live
+//! sessions advance one token per step as a single batched forward over
+//! the blocked kernels, and finished sessions retire immediately —
+//! returning their KV pages to the pool's free list, which is what unparks
+//! deferred admissions. Per-step energy includes the KV-cache read traffic
+//! at the sessions' KV precision via
+//! [`crate::hwsim::kvcache::kv_cache_bits`] — pooled pages are charged
+//! identically to flat buffers (live tokens × bits/value). Pool occupancy,
+//! page fill, and deferral counts land in [`Metrics`].
 
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
@@ -20,7 +27,7 @@ use crate::hwsim::energy::EnergyModel;
 use crate::hwsim::kvcache::{kv_cache_bits, KvModelDims};
 use crate::hwsim::{simulate_matmul, DatapathConfig, LayerProfile, MatmulJob};
 use crate::model::kv::KvPrecision;
-use crate::runtime::{ArgValue, Engine, ExecSpec, Executable, Runtime, Session};
+use crate::runtime::{ArgValue, Engine, EngineOptions, ExecSpec, Executable, Runtime, Session};
 use crate::Result;
 
 use super::batcher::{BatchPolicy, Batcher};
@@ -42,6 +49,10 @@ pub struct ServerConfig {
     /// Max live sessions the decode loop advances per step (continuous-
     /// batching capacity; independent of the score graph's frozen B).
     pub decode_batch: usize,
+    /// KV page-pool capacity of the generation engine, in pages
+    /// ([`crate::model::kv::PAGE_TOKENS`] tokens each); `None` keeps the
+    /// engine default. The serve `--kv-pages` flag.
+    pub kv_pages: Option<usize>,
 }
 
 /// A running coordinator instance.
@@ -82,7 +93,8 @@ impl Server {
             let (cfg, metrics) = (cfg.clone(), metrics.clone());
             handles.push(std::thread::spawn(move || {
                 let rt = Runtime::cpu().expect("runtime (gen worker)");
-                match Engine::new(&rt, &logits_spec, logits_args_tail, cfg.kv_precision) {
+                let opts = EngineOptions { kv: cfg.kv_precision, kv_pages: cfg.kv_pages };
+                match Engine::with_options(&rt, &logits_spec, logits_args_tail, opts) {
                     Ok(engine) => generate_worker(cfg, engine, gen_rx, metrics),
                     Err(e) => {
                         eprintln!("gen worker: engine init failed: {e}");
@@ -238,15 +250,21 @@ struct LiveGen {
     sess: Session,
     want: usize,
     produced: Vec<i32>,
+    /// Worst-case pool pages this session was admitted against
+    /// ([`Engine::kv_pages_worst_for`]) — released from the committed
+    /// budget at retirement.
+    worst_pages: usize,
 }
 
 /// Send responses for every session that has produced its token budget,
-/// removing it from the live set (continuous retirement).
-fn retire_finished(live: &mut Vec<LiveGen>, metrics: &Metrics) {
+/// removing it from the live set (continuous retirement) and releasing
+/// its worst-case pages from the admission budget.
+fn retire_finished(live: &mut Vec<LiveGen>, metrics: &Metrics, committed: &mut usize) {
     let mut i = 0;
     while i < live.len() {
         if live[i].produced.len() >= live[i].want {
             let lg = live.swap_remove(i);
+            *committed = committed.saturating_sub(lg.worst_pages);
             metrics.record_generated(lg.want as u64);
             let _ = lg.req.reply.send(Response {
                 id: lg.req.id,
@@ -260,11 +278,32 @@ fn retire_finished(live: &mut Vec<LiveGen>, metrics: &Metrics) {
     }
 }
 
+/// One KV pool sample: pages in use / total (with the pool's exact
+/// high-water mark), plus live-token slot fill of the allocated pages.
+/// No-op on the windowed fallback, which has no pool.
+fn sample_pool(engine: &Engine, metrics: &Metrics, live: &[LiveGen], slots_per_token: u64) {
+    if let Some(stats) = engine.pool_stats() {
+        let used_slots: u64 =
+            live.iter().map(|lg| lg.sess.cached_tokens() as u64).sum::<u64>() * slots_per_token;
+        let cap_slots = (stats.in_use_pages * stats.page_tokens) as u64;
+        metrics.record_pool(
+            stats.in_use_pages,
+            stats.total_pages,
+            stats.peak_in_use,
+            used_slots,
+            cap_slots,
+        );
+    }
+}
+
 /// The continuous-batching decode loop. Each iteration: admit waiting
 /// requests into free session slots (blocking only when no session is
-/// live), prefill them (TTFT ends here — the first token's logits exist),
-/// retire anything already satisfied, then advance every live session one
-/// token in a single batched [`Engine::decode_step`].
+/// live), deferring any the KV page pool cannot hold yet back to the
+/// batcher (FIFO — retirement frees pages and unparks them), prefill the
+/// whole admitted round as **one batched forward** (TTFT ends here — every
+/// first token's logits exist), retire anything already satisfied, then
+/// advance every live session one token in a single batched
+/// [`Engine::decode_step`], sampling pool occupancy alongside.
 fn generate_worker(
     cfg: ServerConfig,
     engine: Engine,
@@ -278,19 +317,53 @@ fn generate_worker(
     let mut batcher = Batcher::new(policy, rx);
     let kv_dims = kv_dims_from_profiles(&cfg.layer_shapes);
     let kv_bits = engine.kv_precision().bits_per_value();
+    // Admission budget: Σ per-request worst-case pages of live sessions
+    // stays within the pool, so prefill/decode/roll can never hit an
+    // exhausted pool mid-stream (None = windowed fallback, unbounded).
+    let pool_total: Option<usize> = engine.pool_stats().map(|s| s.total_pages);
+    let slots_per_token = 2 * engine.arch().n_layers as u64;
     let mut live: Vec<LiveGen> = Vec::new();
+    let mut committed: usize = 0;
+
+    // Worst-case pages a request commits at admission (0 when unbounded).
+    let worst_for = |req: &Request| -> usize {
+        match &req.kind {
+            RequestKind::Generate { prompt, n_tokens } => {
+                engine.kv_pages_worst_for(prompt.len(), *n_tokens)
+            }
+            _ => 0,
+        }
+    };
 
     loop {
-        // Admit new work between steps.
+        // Admit new work between steps. The drain is gated on decode slots
+        // *and* on the budget fitting the oldest parked request (if any),
+        // so a parked head is not pulled-and-re-deferred every step while
+        // the pool is full.
         let mut admitted = Vec::new();
         if live.is_empty() {
             match batcher.next_batch() {
                 Some(batch) => admitted = batch,
                 None => break, // queue closed and drained; nothing live
             }
-        } else if live.len() < cap {
-            batcher.drain_ready_capped(&mut admitted, cap - live.len());
+        } else {
+            let room = cap.saturating_sub(live.len());
+            let head_fits = match (pool_total, batcher.peek_deferred()) {
+                (Some(total), Some(head)) => committed + worst_for(head) <= total,
+                _ => true,
+            };
+            if room > 0 && head_fits {
+                batcher.drain_ready_capped(&mut admitted, room);
+            }
         }
+
+        // Admit in strict arrival order against the pool budget. The first
+        // request whose worst case does not fit *yet* blocks everything
+        // behind it (head-of-line: deferral must never reorder); only
+        // requests that could never fit even an empty pool are failed.
+        let mut ready: Vec<(Request, usize, usize)> = Vec::new();
+        let mut prompts: Vec<Vec<i32>> = Vec::new();
+        let mut deferred: Vec<Request> = Vec::new();
         for req in admitted {
             let (prompt, want) = match &req.kind {
                 RequestKind::Generate { prompt, n_tokens } => (prompt.clone(), *n_tokens),
@@ -301,17 +374,56 @@ fn generate_worker(
                     continue;
                 }
             };
-            match engine.prefill(&prompt) {
-                Ok(sess) => {
-                    metrics.record_ttft(req.submitted_at.elapsed());
-                    let mut lg = LiveGen { req, sess, want, produced: Vec::with_capacity(want) };
-                    lg.produced.push(lg.sess.next_token());
-                    live.push(lg);
-                }
-                Err(_) => fail_request(req),
+            let worst = engine.kv_pages_worst_for(prompt.len(), want);
+            if pool_total.is_some_and(|total| worst > total) {
+                fail_request(req); // never satisfiable, even in an empty pool
+                continue;
+            }
+            let fits =
+                pool_total.map(|total| committed + worst <= total).unwrap_or(true);
+            if fits && deferred.is_empty() {
+                committed += worst;
+                ready.push((req, want, worst));
+                prompts.push(prompt);
+            } else {
+                deferred.push(req);
             }
         }
-        retire_finished(&mut live, &metrics);
+        if !deferred.is_empty() {
+            metrics.record_deferred(deferred.len() as u64);
+            batcher.defer(deferred);
+        }
+
+        // Batched prefill: every admitted prompt in one forward.
+        if !ready.is_empty() {
+            match engine.prefill_batch(&prompts) {
+                Ok(sessions) => {
+                    for ((req, want, worst_pages), sess) in ready.into_iter().zip(sessions) {
+                        metrics.record_ttft(req.submitted_at.elapsed());
+                        let mut lg = LiveGen {
+                            req,
+                            sess,
+                            want,
+                            produced: Vec::with_capacity(want),
+                            worst_pages,
+                        };
+                        lg.produced.push(lg.sess.next_token());
+                        live.push(lg);
+                    }
+                    // Sample pool occupancy while the admitted sessions
+                    // still hold their pages (a gen-tokens=1 request
+                    // retires before any decode step would sample).
+                    sample_pool(&engine, &metrics, &live, slots_per_token);
+                }
+                Err(_) => {
+                    for (req, _, worst) in ready {
+                        committed = committed.saturating_sub(worst);
+                        fail_request(req);
+                    }
+                }
+            }
+        }
+        retire_finished(&mut live, &metrics, &mut committed);
         if live.is_empty() {
             continue;
         }
@@ -338,13 +450,16 @@ fn generate_worker(
                 for lg in &mut live {
                     lg.produced.push(lg.sess.next_token());
                 }
+                // Pool occupancy sample for this step (paged engines).
+                sample_pool(&engine, &metrics, &live, slots_per_token);
             }
             Err(_) => {
+                committed = 0;
                 for lg in live.drain(..) {
                     fail_request(lg.req);
                 }
             }
         }
-        retire_finished(&mut live, &metrics);
+        retire_finished(&mut live, &metrics, &mut committed);
     }
 }

@@ -47,15 +47,18 @@ COMMANDS
   hwsim
   report     --linear blk0.fc1 --fp4 0.9 --rows 24
   serve      --fp4 0.7 --requests 64 [--gen 8] [--gen-tokens 16]
-             [--kv fp16|fp8] [--decode-batch 8]
+             [--kv fp16|fp8] [--decode-batch 8] [--kv-pages N]
              score + generate traffic through the coordinator: scoring
              batches the one-shot graph, generation runs the KV-cached
-             continuous-batching decode loop (--kv picks the cache
-             precision, --decode-batch its occupancy cap)
+             continuous-batching decode loop over a paged KV arena
+             (--kv picks the cache precision, --decode-batch its
+             occupancy cap, --kv-pages the page-pool capacity; admits
+             the pool cannot hold yet are deferred, not failed)
   generate   --prompt-len 16 --tokens 32 [--sessions 4] [--kv fp16|fp8]
-             drive the stateful Engine directly: prefill each session
-             from the corpus, decode all sessions batched, print tokens
-             and decode throughput
+             [--kv-pages N]
+             drive the stateful Engine directly: prefill all sessions
+             as one batched forward over corpus prompts, decode them
+             batched, print tokens + decode throughput + pool occupancy
   bench      [--out .] [--name hotpath] [--budget-ms 300] [--baseline FILE]
              run blocked-vs-scalar kernel + forward + decode benchmarks,
              write BENCH_<name>.json; with --baseline, exit non-zero on
@@ -113,6 +116,9 @@ impl Cli {
     }
     fn bool(&self, key: &str) -> bool {
         self.flags.contains_key(key)
+    }
+    fn opt_usize(&self, key: &str) -> Option<usize> {
+        self.flags.get(key).and_then(|v| v.parse().ok())
     }
     fn f64_list(&self, key: &str, default: &[f64]) -> Vec<f64> {
         match self.flags.get(key) {
@@ -387,6 +393,7 @@ fn cmd_serve(cli: &Cli, fp4: f64, requests: usize) -> Result<()> {
         queue_depth: 256,
         kv_precision,
         decode_batch: cli.usize("decode_batch", 8),
+        kv_pages: cli.opt_usize("kv_pages"),
     };
     let windows = ev.eval_windows(requests.div_ceil(ev.batch));
     let seq = ev.seq;
@@ -459,6 +466,12 @@ fn cmd_serve(cli: &Cli, fp4: f64, requests: usize) -> Result<()> {
     println!("kv: {} cache, {:.0} B/token ({:.0} B/token at fp16)",
              kv_precision.label(), kv_bytes_per_tok,
              kv_cache_bits(&kv_dims, 1, 16.0) as f64 / 8.0);
+    if snap.kv_pool_pages > 0 {
+        println!("kv pool: {} pages  peak {}  occupancy {:.0}%  page fill {:.0}%  deferred {}",
+                 snap.kv_pool_pages, snap.kv_pool_peak_pages,
+                 snap.kv_pool_occupancy * 100.0, snap.kv_page_fill * 100.0,
+                 snap.deferred_admissions);
+    }
     println!("sim energy {:.3} mJ vs FP8 {:.3} mJ  (savings {:.1}%, incl. KV traffic)",
              snap.energy_j * 1e3, snap.energy_fp8_j * 1e3, snap.energy_savings * 100.0);
     server.shutdown();
@@ -471,7 +484,7 @@ fn cmd_serve(cli: &Cli, fp4: f64, requests: usize) -> Result<()> {
 /// the `serve` coordinator does continuously.
 fn cmd_generate(cli: &Cli) -> Result<()> {
     use fgmp::model::KvPrecision;
-    use fgmp::runtime::Engine;
+    use fgmp::runtime::{Engine, EngineOptions};
 
     let rt = Runtime::cpu()?;
     let ev = Evaluator::load(&rt, &cli.artifacts, &cli.model)?;
@@ -480,21 +493,21 @@ fn cmd_generate(cli: &Cli) -> Result<()> {
     let tail = ev.quant_arg_tail(&cfg, &qm)?;
     let spec = ExecSpec::new(&cli.artifacts, &cli.model, GraphKind::LogitsQuant);
     let kv = KvPrecision::parse(&cli.str("kv", "fp16"))?;
-    let engine = Engine::new(&rt, &spec, tail, kv)?;
+    let opts = EngineOptions { kv, kv_pages: cli.opt_usize("kv_pages") };
+    let engine = Engine::with_options(&rt, &spec, tail, opts)?;
 
     let prompt_len = cli.usize("prompt_len", 16).clamp(1, ev.test_stream.len().max(1));
     let n_tokens = cli.usize("tokens", 32);
     let n_sessions = cli.usize("sessions", 4).max(1);
 
     let t0 = std::time::Instant::now();
-    let mut sessions = Vec::with_capacity(n_sessions);
     let mut prompts = Vec::with_capacity(n_sessions);
     for i in 0..n_sessions {
         let off = (i * prompt_len) % ev.test_stream.len().saturating_sub(prompt_len).max(1);
-        let prompt = &ev.test_stream[off..off + prompt_len];
-        prompts.push(prompt.to_vec());
-        sessions.push(engine.prefill(prompt)?);
+        prompts.push(ev.test_stream[off..off + prompt_len].to_vec());
     }
+    // All sessions prefill as one batched forward over the blocked kernels.
+    let mut sessions = engine.prefill_batch(&prompts)?;
     let prefill_t = t0.elapsed();
 
     let mut produced: Vec<Vec<i32>> = sessions.iter().map(|s| vec![s.next_token()]).collect();
@@ -533,9 +546,16 @@ fn cmd_generate(cli: &Cli) -> Result<()> {
                  shown.join(" "));
     }
     let kv_bits: u64 = sessions.iter().map(|s| s.kv_bits()).sum();
-    println!("prefill {:.1}ms  decode {} steps in {:.1}ms  ({:.1} tok/s)",
+    let kv_pages: usize = sessions.iter().map(|s| s.kv_pages()).sum();
+    println!("prefill {:.1}ms (batched)  decode {} steps in {:.1}ms  ({:.1} tok/s)",
              prefill_t.as_secs_f64() * 1e3, steps, decode_t.as_secs_f64() * 1e3,
              total as f64 / decode_t.as_secs_f64().max(1e-9));
-    println!("kv held: {:.1} KiB across sessions", kv_bits as f64 / 8.0 / 1024.0);
+    println!("kv held: {:.1} KiB across sessions ({kv_pages} pages)",
+             kv_bits as f64 / 8.0 / 1024.0);
+    if let Some(stats) = engine.pool_stats() {
+        println!("kv pool: {}/{} pages in use (peak {}, {} tok/page, {} exhaustion events)",
+                 stats.in_use_pages, stats.total_pages, stats.peak_in_use,
+                 stats.page_tokens, stats.exhausted_events);
+    }
     Ok(())
 }

@@ -528,12 +528,34 @@ fn attend_row(
     }
 }
 
+/// Reusable decode-on-read scratch: one `(K, V)` buffer pair per session,
+/// shared across the layers of one prefill or decode step. Materializing a
+/// cache clears-and-extends its pair, so capacity is paid once per step
+/// instead of once per layer per step (the gather/dequant still runs per
+/// layer — only the allocation is amortized).
+struct KvScratch {
+    bufs: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+impl KvScratch {
+    fn for_sessions(n: usize) -> KvScratch {
+        KvScratch { bufs: (0..n).map(|_| (Vec::new(), Vec::new())).collect() }
+    }
+}
+
 /// Prefill attention over `s` fused qkv rows `(s, 3D)` → `(s, D)` (one
 /// sequence), appending every position's post-RoPE key and value to `lkv`
 /// and attending over the cache *as stored* — so an FP8 cache sees its own
 /// round-tripped keys/values from the first token, consistent with later
 /// decode steps. With an FP16 cache this is bit-identical to [`attention`].
-fn attention_prefill(arch: &ModelArch, qkv: &[f32], s: usize, lkv: &mut LayerKv) -> Vec<f32> {
+/// `scratch` is the caller's reusable materialize pair.
+fn attention_prefill(
+    arch: &ModelArch,
+    qkv: &[f32],
+    s: usize,
+    lkv: &mut LayerKv,
+    scratch: &mut (Vec<f32>, Vec<f32>),
+) -> Vec<f32> {
     let d = arch.d_model;
     let h = arch.n_heads;
     let dh = arch.head_dim();
@@ -560,9 +582,9 @@ fn attention_prefill(arch: &ModelArch, qkv: &[f32], s: usize, lkv: &mut LayerKv)
         lkv.v.push_row(&row[2 * d..]);
     }
 
-    let (mut ks, mut vs) = (Vec::new(), Vec::new());
-    let kmat = lkv.k.materialize(&mut ks);
-    let vmat = lkv.v.materialize(&mut vs);
+    let (ks, vs) = scratch;
+    let kmat = lkv.k.materialize(ks);
+    let vmat = lkv.v.materialize(vs);
 
     let heads: Vec<usize> = (0..h).collect();
     let outs = par_map(&heads, |&hi| {
@@ -605,6 +627,7 @@ fn attention_step(
     qkv: &[f32],
     caches: &mut [&mut LayerKv],
     positions: &[usize],
+    scratch: &mut KvScratch,
 ) -> Vec<f32> {
     let n = positions.len();
     let d = arch.d_model;
@@ -632,12 +655,14 @@ fn attention_step(
         caches[i].v.push_row(&row[2 * d..]);
     }
 
-    // Materialize each session's cache once (decodes FP8 bytes), then fan
-    // the (session, head) attention rows out across threads.
-    let mut scratch: Vec<(Vec<f32>, Vec<f32>)> = (0..n).map(|_| (Vec::new(), Vec::new())).collect();
+    // Materialize each session's cache once (decodes FP8 bytes / gathers
+    // pages), then fan the (session, head) attention rows out across
+    // threads. The scratch pairs come from the caller and persist across
+    // the layers of this step.
+    debug_assert!(scratch.bufs.len() >= n);
     let mats: Vec<(&[f32], &[f32])> = caches
         .iter()
-        .zip(scratch.iter_mut())
+        .zip(scratch.bufs.iter_mut())
         .map(|(c, (ks, vs))| (c.k.materialize(ks), c.v.materialize(vs)))
         .collect();
 
@@ -905,6 +930,9 @@ pub fn forward_prefill(
     anyhow::ensure!(s <= arch.max_seq, "prompt length {s} exceeds max_seq {}", arch.max_seq);
     anyhow::ensure!(kv.is_empty(), "prefill requires an empty KV cache");
     anyhow::ensure!(kv.layers.len() == arch.n_layers, "KV cache layer count");
+    // Paged caches grab their pages here, before any compute — running out
+    // surfaces as the typed KvPoolExhausted admission-backpressure error.
+    kv.reserve(s)?;
 
     let linears = arch.linears();
     if let Some(q) = quant {
@@ -915,6 +943,7 @@ pub fn forward_prefill(
     let positions: Vec<usize> = (0..s).collect();
     let mut x = embed_rows(arch, params, tokens, &positions)?;
     let mut li = 0usize;
+    let mut scratch = (Vec::new(), Vec::new());
     for (l, lkv) in kv.layers.iter_mut().enumerate() {
         block_forward(
             arch,
@@ -927,11 +956,116 @@ pub fn forward_prefill(
             &mut li,
             &mut fracs,
             &mut None,
-            |qkv| attention_prefill(arch, qkv, s, lkv),
+            |qkv| attention_prefill(arch, qkv, s, lkv, &mut scratch),
         )?;
     }
     kv.advance(s);
     let logits = lm_head(arch, params, &x, &[s - 1])?;
+    Ok(ForwardOut { logits, act_fp8: fracs })
+}
+
+/// Prefill `n` independent sessions in one batched forward: the prompts'
+/// rows are concatenated into a single `(Σsᵢ, d)` activation matrix so the
+/// four linears of every block run as *one* blocked matmul over all
+/// admitted prompts (the admission-amortization the serving coordinator
+/// uses), while attention and the KV appends stay per-sequence. Returns the
+/// last-position logits `(n, V)` in prompt order.
+///
+/// Per-row arithmetic is identical to [`forward_prefill`] — the blocked
+/// kernels accumulate each output row independently of its tile mates — so
+/// batched prefill is bit-exact against prefilling each prompt alone
+/// (property-tested in `tests/decode_props.rs`). Page reservations happen
+/// for every session before any compute; on [`KvPoolExhausted`] no session
+/// has cached anything (earlier sessions may hold unused reservations —
+/// dropping or clearing them returns the pages).
+///
+/// [`KvPoolExhausted`]: crate::model::kv::KvPoolExhausted
+pub fn forward_prefill_batch(
+    arch: &ModelArch,
+    params: &HashMap<&str, &[f32]>,
+    prompts: &[&[i32]],
+    quant: Option<&QuantInputs<'_>>,
+    kvs: &mut [&mut KvState],
+) -> Result<ForwardOut> {
+    let n = prompts.len();
+    anyhow::ensure!(n > 0, "batched prefill needs at least one prompt");
+    anyhow::ensure!(kvs.len() == n, "prompts/sessions length mismatch");
+    for (i, p) in prompts.iter().enumerate() {
+        anyhow::ensure!(!p.is_empty(), "prompt {i}: prefill needs at least one token");
+        anyhow::ensure!(
+            p.len() <= arch.max_seq,
+            "prompt {i}: length {} exceeds max_seq {}",
+            p.len(),
+            arch.max_seq
+        );
+    }
+    for (i, kv) in kvs.iter().enumerate() {
+        anyhow::ensure!(kv.is_empty(), "session {i}: prefill requires an empty KV cache");
+        anyhow::ensure!(kv.layers.len() == arch.n_layers, "session {i}: cache layer count");
+    }
+    for (kv, p) in kvs.iter_mut().zip(prompts) {
+        kv.reserve(p.len())?;
+    }
+
+    let linears = arch.linears();
+    if let Some(q) = quant {
+        anyhow::ensure!(q.act_weights.len() == linears.len(), "act_weights count");
+        anyhow::ensure!(q.thresholds.len() == linears.len(), "thresholds count");
+    }
+    let mut fracs = vec![0.0f32; if quant.is_some() { linears.len() } else { 0 }];
+
+    // Ragged layout: prompt i owns rows offs[i]..offs[i]+lens[i].
+    let lens: Vec<usize> = prompts.iter().map(|p| p.len()).collect();
+    let mut offs = Vec::with_capacity(n);
+    let mut tokens: Vec<i32> = Vec::new();
+    let mut positions: Vec<usize> = Vec::new();
+    let mut m = 0usize;
+    for p in prompts {
+        offs.push(m);
+        tokens.extend_from_slice(p);
+        positions.extend(0..p.len());
+        m += p.len();
+    }
+
+    let mut x = embed_rows(arch, params, &tokens, &positions)?;
+    let mut li = 0usize;
+    let mut scratch = (Vec::new(), Vec::new());
+    let d = arch.d_model;
+    for l in 0..arch.n_layers {
+        let mut caches: Vec<&mut LayerKv> = kvs.iter_mut().map(|kv| &mut kv.layers[l]).collect();
+        block_forward(
+            arch,
+            &linears,
+            params,
+            quant,
+            l,
+            &mut x,
+            m,
+            &mut li,
+            &mut fracs,
+            &mut None,
+            |qkv| {
+                let mut out = vec![0.0f32; m * d];
+                for (i, lkv) in caches.iter_mut().enumerate() {
+                    let (off, s_i) = (offs[i], lens[i]);
+                    let o = attention_prefill(
+                        arch,
+                        &qkv[off * 3 * d..(off + s_i) * 3 * d],
+                        s_i,
+                        lkv,
+                        &mut scratch,
+                    );
+                    out[off * d..(off + s_i) * d].copy_from_slice(&o);
+                }
+                out
+            },
+        )?;
+    }
+    for (kv, &s_i) in kvs.iter_mut().zip(&lens) {
+        kv.advance(s_i);
+    }
+    let take: Vec<usize> = (0..n).map(|i| offs[i] + lens[i] - 1).collect();
+    let logits = lm_head(arch, params, &x, &take)?;
     Ok(ForwardOut { logits, act_fp8: fracs })
 }
 
@@ -960,6 +1094,12 @@ pub fn forward_step_batch(
         );
         anyhow::ensure!(kv.layers.len() == arch.n_layers, "session {i}: cache layer count");
     }
+    // Page reservations before any compute or cache mutation: a paged
+    // session crossing a page boundary grabs its next page here, and an
+    // exhausted pool surfaces as the typed error with every cache intact.
+    for kv in kvs.iter_mut() {
+        kv.reserve(1)?;
+    }
 
     let linears = arch.linears();
     if let Some(q) = quant {
@@ -969,6 +1109,8 @@ pub fn forward_step_batch(
     let mut fracs = vec![0.0f32; if quant.is_some() { linears.len() } else { 0 }];
     let mut x = embed_rows(arch, params, tokens, &positions)?;
     let mut li = 0usize;
+    // One materialize-scratch set for the whole step, reused across layers.
+    let mut scratch = KvScratch::for_sessions(n);
     for l in 0..arch.n_layers {
         let mut caches: Vec<&mut LayerKv> = kvs.iter_mut().map(|kv| &mut kv.layers[l]).collect();
         block_forward(
@@ -982,7 +1124,7 @@ pub fn forward_step_batch(
             &mut li,
             &mut fracs,
             &mut None,
-            |qkv| attention_step(arch, qkv, &mut caches, &positions),
+            |qkv| attention_step(arch, qkv, &mut caches, &positions, &mut scratch),
         )?;
     }
     for kv in kvs.iter_mut() {

@@ -1,4 +1,5 @@
-//! Per-session KV cache for incremental decoding.
+//! Per-session KV cache for incremental decoding, backed either by owned
+//! flat buffers or by a shared **paged arena** ([`KvPool`]).
 //!
 //! [`KvState`] holds one transformer session's cached keys and values: one
 //! [`LayerKv`] per block, each an append-only `(tokens, d_model)` buffer of
@@ -11,14 +12,37 @@
 //! footnote discusses — and decodes on read, so decode steps attend over
 //! exactly the values a byte-packed accelerator cache would hold.
 //!
+//! Storage comes in two shapes:
+//!
+//!  * **flat** ([`KvState::new`]) — each buffer owns a contiguous `Vec`,
+//!    the PR 3 layout. Still the default for standalone `forward_*` use.
+//!  * **paged** ([`KvState::new_paged`]) — buffers hold *page tables* into
+//!    a shared [`KvPool`]: fixed-size pages of [`PAGE_TOKENS`] rows handed
+//!    out from a free list. Admission cost and footprint are proportional
+//!    to pages actually used (never the max window), pages return to the
+//!    free list on retirement/clear/drop, and running out surfaces as the
+//!    typed [`KvPoolExhausted`] backpressure error *before* any compute.
+//!    Reads gather pages into a caller-provided scratch via the
+//!    gather kernels in [`crate::util::kernels`] (decode-on-read for FP8).
+//!
 //! With `Fp16` the cached rows are bit-identical to what the full-sequence
-//! forward computes internally, which is what makes the prefill+step path
-//! bit-exact against full recompute (property-tested in
-//! `tests/decode_props.rs`). With `Fp8` the divergence is bounded by the
-//! E4M3 round-trip error on K/V (documented tolerance in the same test).
+//! forward computes internally — flat or paged, since the gather is a pure
+//! copy — which is what makes the prefill+step path bit-exact against full
+//! recompute (property-tested in `tests/decode_props.rs`). With `Fp8` the
+//! divergence is bounded by the E4M3 round-trip error on K/V (documented
+//! tolerance in the same test).
+
+use std::sync::{Arc, Mutex};
 
 use crate::model::forward::ModelArch;
-use crate::quant::fp8::{decode_e4m3, encode_e4m3};
+use crate::quant::fp8::encode_e4m3;
+use crate::util::kernels;
+
+/// Rows (tokens) per KV page — the granularity the paged arena allocates
+/// and the unit precision/occupancy accounting works in. 16 matches the
+/// FGMP quantization block size, so a page is also a whole number of
+/// precision blocks for any future block-granular KV policy.
+pub const PAGE_TOKENS: usize = 16;
 
 /// Storage precision of a session's KV cache.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -56,18 +80,284 @@ impl KvPrecision {
     }
 }
 
+// ---------------------------------------------------------------------------
+// The shared page pool
+// ---------------------------------------------------------------------------
+
+/// Typed admission-backpressure error: a page reservation could not be
+/// satisfied. Carried as the source of the `anyhow` error the forward/
+/// engine paths return, so callers (the coordinator's admission loop)
+/// recover it with `err.downcast_ref::<KvPoolExhausted>()` and defer the
+/// request instead of failing it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvPoolExhausted {
+    /// Pages the reservation asked for.
+    pub requested: usize,
+    /// Pages that were free at that moment.
+    pub free: usize,
+}
+
+impl std::fmt::Display for KvPoolExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "KV page pool exhausted: requested {} page(s), {} free — \
+             defer admission or grow --kv-pages",
+            self.requested, self.free
+        )
+    }
+}
+
+impl std::error::Error for KvPoolExhausted {}
+
+/// Point-in-time pool accounting (occupancy / fragmentation inputs).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KvPoolStats {
+    pub total_pages: usize,
+    pub free_pages: usize,
+    pub in_use_pages: usize,
+    /// High-water mark of `in_use_pages` over the pool's lifetime.
+    pub peak_in_use: usize,
+    pub page_tokens: usize,
+    /// Failed reservations (each one a typed backpressure event).
+    pub exhausted_events: u64,
+}
+
+impl KvPoolStats {
+    /// Fraction of the pool currently handed out.
+    pub fn occupancy(&self) -> f64 {
+        if self.total_pages == 0 {
+            0.0
+        } else {
+            self.in_use_pages as f64 / self.total_pages as f64
+        }
+    }
+}
+
+struct PoolInner {
+    /// FP16 arena: `total_pages × PAGE_TOKENS × width` f32s (empty for FP8).
+    f32_data: Vec<f32>,
+    /// FP8 arena: one E4M3 byte per element (empty for FP16).
+    u8_data: Vec<u8>,
+    /// Free page ids, popped LIFO (hot pages get reused first).
+    free: Vec<u32>,
+    peak_in_use: usize,
+    exhausted_events: u64,
+}
+
+/// A shared, fixed-capacity KV page arena. One pool serves every session of
+/// an engine: all buffers (K and V, every layer) share the same row width
+/// (`d_model`), so pages are uniform and any buffer can use any page. The
+/// pool hands out pages all-or-nothing per reservation and takes them back
+/// on clear/drop; storage is allocated eagerly at construction so serving
+/// capacity is a startup decision, not a decode-time reallocation.
+pub struct KvPool {
+    inner: Mutex<PoolInner>,
+    precision: KvPrecision,
+    width: usize,
+    total_pages: usize,
+}
+
+impl std::fmt::Debug for KvPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        f.debug_struct("KvPool")
+            .field("precision", &self.precision)
+            .field("width", &self.width)
+            .field("total_pages", &self.total_pages)
+            .field("free_pages", &s.free_pages)
+            .finish()
+    }
+}
+
+impl KvPool {
+    /// Build a pool of `pages` pages for `arch`-shaped caches at
+    /// `precision`. Pages are `PAGE_TOKENS × d_model` values each.
+    pub fn new(arch: &ModelArch, precision: KvPrecision, pages: usize) -> Arc<KvPool> {
+        let elems = pages * PAGE_TOKENS * arch.d_model;
+        let (f32_data, u8_data) = match precision {
+            KvPrecision::Fp16 => (vec![0.0f32; elems], Vec::new()),
+            KvPrecision::Fp8 => (Vec::new(), vec![0u8; elems]),
+        };
+        // LIFO pop order: page 0 first.
+        let free: Vec<u32> = (0..pages as u32).rev().collect();
+        Arc::new(KvPool {
+            inner: Mutex::new(PoolInner {
+                f32_data,
+                u8_data,
+                free,
+                peak_in_use: 0,
+                exhausted_events: 0,
+            }),
+            precision,
+            width: arch.d_model,
+            total_pages: pages,
+        })
+    }
+
+    /// Pages one K-or-V buffer needs to hold `tokens` rows.
+    pub fn pages_for_tokens(tokens: usize) -> usize {
+        tokens.div_ceil(PAGE_TOKENS)
+    }
+
+    /// Pages a whole session (K+V, every layer) holding `tokens` needs.
+    pub fn pages_for_session(n_layers: usize, tokens: usize) -> usize {
+        2 * n_layers * Self::pages_for_tokens(tokens)
+    }
+
+    pub fn precision(&self) -> KvPrecision {
+        self.precision
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.total_pages
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.inner.lock().unwrap().free.len()
+    }
+
+    pub fn stats(&self) -> KvPoolStats {
+        let g = self.inner.lock().unwrap();
+        KvPoolStats {
+            total_pages: self.total_pages,
+            free_pages: g.free.len(),
+            in_use_pages: self.total_pages - g.free.len(),
+            peak_in_use: g.peak_in_use,
+            page_tokens: PAGE_TOKENS,
+            exhausted_events: g.exhausted_events,
+        }
+    }
+
+    /// Grab `n` pages, all-or-nothing. On failure the pool is untouched
+    /// apart from the exhaustion counter.
+    fn alloc(&self, n: usize) -> Result<Vec<u32>, KvPoolExhausted> {
+        let mut g = self.inner.lock().unwrap();
+        if g.free.len() < n {
+            g.exhausted_events += 1;
+            return Err(KvPoolExhausted { requested: n, free: g.free.len() });
+        }
+        let at = g.free.len() - n;
+        let out = g.free.split_off(at);
+        let in_use = self.total_pages - g.free.len();
+        g.peak_in_use = g.peak_in_use.max(in_use);
+        Ok(out)
+    }
+
+    /// Return pages to the free list.
+    fn release(&self, pages: &[u32]) {
+        if pages.is_empty() {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.free.extend_from_slice(pages);
+        debug_assert!(g.free.len() <= self.total_pages, "double free into KV pool");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-buffer storage
+// ---------------------------------------------------------------------------
+
+/// Page-table storage of one K-or-V buffer: which pool pages hold its rows.
+struct PagedStore {
+    pool: Arc<KvPool>,
+    pages: Vec<u32>,
+    /// Live rows (tokens); `pages` may run ahead after a reservation.
+    rows: usize,
+}
+
+impl PagedStore {
+    fn release_all(&mut self) {
+        self.pool.release(&self.pages);
+        self.pages.clear();
+        self.rows = 0;
+    }
+
+    /// `(arena base, element count)` of each page holding live rows, in
+    /// token order (the last span may be a partial page). The one
+    /// definition of the page walk shared by materialize and Clone.
+    fn live_spans(&self, width: usize) -> Vec<(usize, usize)> {
+        let pe = PAGE_TOKENS * width;
+        let live = self.rows * width;
+        let mut taken = 0usize;
+        self.pages[..KvPool::pages_for_tokens(self.rows)]
+            .iter()
+            .map(|&pg| {
+                let take = (live - taken).min(pe);
+                taken += take;
+                (pg as usize * pe, take)
+            })
+            .collect()
+    }
+}
+
+impl Drop for PagedStore {
+    fn drop(&mut self) {
+        self.release_all();
+    }
+}
+
+impl std::fmt::Debug for PagedStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PagedStore")
+            .field("rows", &self.rows)
+            .field("pages", &self.pages.len())
+            .finish()
+    }
+}
+
 /// One append-only `(rows, width)` tensor at the cache precision.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 enum KvData {
     F32(Vec<f32>),
     Fp8(Vec<u8>),
+    Paged(PagedStore),
 }
 
 /// A precision-aware K or V buffer for one layer.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct KvBuf {
     data: KvData,
     width: usize,
+}
+
+impl Clone for KvBuf {
+    /// Flat buffers clone plainly. Cloning a *paged* buffer snapshots it
+    /// into a flat buffer at the same precision (identical bytes/values):
+    /// clones are private decode oracles and bench fixtures, and must not
+    /// be able to fail on pool exhaustion or double-book pages.
+    fn clone(&self) -> Self {
+        let data = match &self.data {
+            KvData::F32(v) => KvData::F32(v.clone()),
+            KvData::Fp8(v) => KvData::Fp8(v.clone()),
+            KvData::Paged(p) => {
+                let spans = p.live_spans(self.width);
+                let g = p.pool.inner.lock().unwrap();
+                match p.pool.precision {
+                    KvPrecision::Fp16 => {
+                        let mut flat = Vec::with_capacity(p.rows * self.width);
+                        for &(base, take) in &spans {
+                            flat.extend_from_slice(&g.f32_data[base..base + take]);
+                        }
+                        KvData::F32(flat)
+                    }
+                    KvPrecision::Fp8 => {
+                        let mut flat = Vec::with_capacity(p.rows * self.width);
+                        for &(base, take) in &spans {
+                            flat.extend_from_slice(&g.u8_data[base..base + take]);
+                        }
+                        KvData::Fp8(flat)
+                    }
+                }
+            }
+        };
+        KvBuf { data, width: self.width }
+    }
 }
 
 impl KvBuf {
@@ -79,42 +369,119 @@ impl KvBuf {
         KvBuf { data, width }
     }
 
+    fn new_paged(pool: &Arc<KvPool>) -> Self {
+        KvBuf {
+            data: KvData::Paged(PagedStore { pool: pool.clone(), pages: Vec::new(), rows: 0 }),
+            width: pool.width,
+        }
+    }
+
     /// Cached rows (tokens).
     pub fn rows(&self) -> usize {
         match &self.data {
             KvData::F32(v) => v.len() / self.width,
             KvData::Fp8(v) => v.len() / self.width,
+            KvData::Paged(p) => p.rows,
+        }
+    }
+
+    /// Pages held (0 for flat buffers).
+    pub fn pages(&self) -> usize {
+        match &self.data {
+            KvData::Paged(p) => p.pages.len(),
+            _ => 0,
         }
     }
 
     /// Append one `width`-wide row, quantizing to the cache precision.
+    /// Paged buffers write into pages reserved beforehand via
+    /// [`KvState::reserve`]; pushing past the reservation is a logic error.
+    /// The paged write takes the (engine-private, uncontended) pool lock
+    /// once per row — cheap next to the `width`-float copy/encode; batch
+    /// the lock per append span if engines ever share a pool across
+    /// threads.
     pub fn push_row(&mut self, row: &[f32]) {
         debug_assert_eq!(row.len(), self.width);
         match &mut self.data {
             KvData::F32(v) => v.extend_from_slice(row),
             KvData::Fp8(v) => v.extend(row.iter().map(|&x| encode_e4m3(x))),
+            KvData::Paged(p) => {
+                let page_idx = p.rows / PAGE_TOKENS;
+                assert!(
+                    page_idx < p.pages.len(),
+                    "KV push_row past reservation (row {}, {} pages) — \
+                     KvState::reserve must precede appends",
+                    p.rows,
+                    p.pages.len()
+                );
+                let pe = PAGE_TOKENS * self.width;
+                let off = p.pages[page_idx] as usize * pe + (p.rows % PAGE_TOKENS) * self.width;
+                let mut g = p.pool.inner.lock().unwrap();
+                match p.pool.precision {
+                    KvPrecision::Fp16 => {
+                        g.f32_data[off..off + self.width].copy_from_slice(row);
+                    }
+                    KvPrecision::Fp8 => {
+                        for (o, &x) in g.u8_data[off..off + self.width].iter_mut().zip(row) {
+                            *o = encode_e4m3(x);
+                        }
+                    }
+                }
+                p.rows += 1;
+            }
         }
     }
 
-    /// Borrow the whole buffer as f32 rows. The FP16 cache is returned
-    /// in place; the FP8 cache is decoded into `scratch` (resized as
-    /// needed) — the read-side dequant a mixed-precision cache pays.
+    /// Borrow the whole buffer as f32 rows. The flat FP16 cache is returned
+    /// in place; the flat FP8 cache is decoded into `scratch`; paged caches
+    /// gather their pages into `scratch` through the kernels in
+    /// [`crate::util::kernels`] (a pure copy for FP16 — identical bits —
+    /// and the table-lookup dequant for FP8). `scratch` is resized as
+    /// needed and its capacity is reusable across calls.
     pub fn materialize<'a>(&'a self, scratch: &'a mut Vec<f32>) -> &'a [f32] {
         match &self.data {
             KvData::F32(v) => v,
             KvData::Fp8(v) => {
-                scratch.clear();
-                scratch.extend(v.iter().map(|&b| decode_e4m3(b)));
+                // One contiguous "page" through the same LUT gather as the
+                // paged path (no per-byte branchy decode).
+                kernels::gather_e4m3_pages(&[v.as_slice()], scratch);
+                scratch
+            }
+            KvData::Paged(p) => {
+                let spans = p.live_spans(self.width);
+                let g = p.pool.inner.lock().unwrap();
+                match p.pool.precision {
+                    KvPrecision::Fp16 => {
+                        let views: Vec<&[f32]> =
+                            spans.iter().map(|&(b, t)| &g.f32_data[b..b + t]).collect();
+                        kernels::gather_f32_pages(&views, scratch);
+                    }
+                    KvPrecision::Fp8 => {
+                        let views: Vec<&[u8]> =
+                            spans.iter().map(|&(b, t)| &g.u8_data[b..b + t]).collect();
+                        kernels::gather_e4m3_pages(&views, scratch);
+                    }
+                }
                 scratch
             }
         }
     }
 
-    /// Physical bits held (excluding Vec capacity slack).
+    /// Physical bits held for live tokens (excluding Vec capacity slack and
+    /// page-tail slack — pool occupancy accounts for whole pages).
     pub fn stored_bits(&self) -> u64 {
         match &self.data {
             KvData::F32(v) => 32 * v.len() as u64,
             KvData::Fp8(v) => 8 * v.len() as u64,
+            KvData::Paged(p) => {
+                // Same physical accounting as the flat stores: f32 rows for
+                // the FP16 arena, one byte per value for FP8.
+                let values = (p.rows * self.width) as u64;
+                match p.pool.precision {
+                    KvPrecision::Fp16 => 32 * values,
+                    KvPrecision::Fp8 => 8 * values,
+                }
+            }
         }
     }
 
@@ -122,6 +489,24 @@ impl KvBuf {
         match &mut self.data {
             KvData::F32(v) => v.clear(),
             KvData::Fp8(v) => v.clear(),
+            KvData::Paged(p) => p.release_all(),
+        }
+    }
+
+    fn truncate_rows(&mut self, len: usize) {
+        match &mut self.data {
+            KvData::F32(v) => v.truncate(len * self.width),
+            KvData::Fp8(v) => v.truncate(len * self.width),
+            KvData::Paged(p) => {
+                if len < p.rows {
+                    p.rows = len;
+                }
+                let keep = KvPool::pages_for_tokens(p.rows);
+                if keep < p.pages.len() {
+                    let extra = p.pages.split_off(keep);
+                    p.pool.release(&extra);
+                }
+            }
         }
     }
 }
@@ -145,6 +530,7 @@ pub struct KvState {
 }
 
 impl KvState {
+    /// Flat (owned-buffer) cache — the PR 3 layout.
     pub fn new(arch: &ModelArch, precision: KvPrecision) -> Self {
         let layers = (0..arch.n_layers)
             .map(|_| LayerKv {
@@ -153,6 +539,66 @@ impl KvState {
             })
             .collect();
         KvState { layers, precision, len: 0 }
+    }
+
+    /// Paged cache over a shared pool. Allocates **zero** pages up front —
+    /// admission cost is deferred to [`KvState::reserve`], which sizes by
+    /// tokens actually arriving, never by `max_seq`.
+    pub fn new_paged(arch: &ModelArch, pool: &Arc<KvPool>) -> Self {
+        assert_eq!(pool.width, arch.d_model, "KV pool width must match d_model");
+        let layers = (0..arch.n_layers)
+            .map(|_| LayerKv { k: KvBuf::new_paged(pool), v: KvBuf::new_paged(pool) })
+            .collect();
+        KvState { layers, precision: pool.precision, len: 0 }
+    }
+
+    /// Whether this cache lives on a shared page pool.
+    pub fn is_paged(&self) -> bool {
+        self.layers
+            .first()
+            .is_some_and(|l| matches!(l.k.data, KvData::Paged(_)))
+    }
+
+    /// Pages currently held across every layer's K and V (0 when flat).
+    pub fn kv_pages(&self) -> usize {
+        self.layers.iter().map(|l| l.k.pages() + l.v.pages()).sum()
+    }
+
+    /// Ensure capacity for `additional` more tokens in every buffer. Flat
+    /// caches always succeed (Vecs grow). Paged caches reserve the missing
+    /// pages from the pool in a single all-or-nothing grab; on
+    /// [`KvPoolExhausted`] nothing changed and no compute was spent — the
+    /// typed error is the admission-backpressure signal.
+    pub fn reserve(&mut self, additional: usize) -> Result<(), KvPoolExhausted> {
+        if additional == 0 || !self.is_paged() {
+            return Ok(());
+        }
+        let need = KvPool::pages_for_tokens(self.len + additional);
+        // All buffers advance in lockstep, so they hold identical tables.
+        let have = self.layers[0].k.pages();
+        let delta = need.saturating_sub(have);
+        if delta == 0 {
+            return Ok(());
+        }
+        let pool = match &self.layers[0].k.data {
+            KvData::Paged(p) => p.pool.clone(),
+            _ => unreachable!("is_paged checked above"),
+        };
+        let total = delta * 2 * self.layers.len();
+        let mut grabbed = pool.alloc(total)?;
+        for l in &mut self.layers {
+            for buf in [&mut l.k, &mut l.v] {
+                match &mut buf.data {
+                    KvData::Paged(p) => {
+                        debug_assert_eq!(p.pages.len(), have, "page tables in lockstep");
+                        p.pages.extend(grabbed.drain(..delta));
+                    }
+                    _ => unreachable!("paged state mixes storage kinds"),
+                }
+            }
+        }
+        debug_assert!(grabbed.is_empty());
+        Ok(())
     }
 
     /// Tokens cached so far — the position the *next* token will occupy.
@@ -171,7 +617,25 @@ impl KvState {
         debug_assert!(self.layers.iter().all(|l| l.k.rows() == self.len && l.v.rows() == self.len));
     }
 
-    /// Drop all cached tokens (the rolling re-prefill path).
+    /// Drop cached tokens beyond `len` (newest first) — the rollback seam
+    /// decode benches and draft-session (speculative-decode) flows use.
+    /// Paged caches release pages no longer holding live rows, including
+    /// any reservation slack — so `truncate(self.len())` is the idiom for
+    /// returning pages a reservation grabbed but a failed step never
+    /// filled.
+    pub fn truncate(&mut self, len: usize) {
+        if len > self.len {
+            return;
+        }
+        for l in &mut self.layers {
+            l.k.truncate_rows(len);
+            l.v.truncate_rows(len);
+        }
+        self.len = len;
+    }
+
+    /// Drop all cached tokens (the rolling re-prefill path). Paged caches
+    /// return every page to the pool's free list.
     pub fn clear(&mut self) {
         for l in &mut self.layers {
             l.k.clear();
@@ -180,7 +644,7 @@ impl KvState {
         self.len = 0;
     }
 
-    /// Physical bits this cache holds right now.
+    /// Physical bits this cache holds right now (live tokens).
     pub fn stored_bits(&self) -> u64 {
         self.layers.iter().map(|l| l.k.stored_bits() + l.v.stored_bits()).sum()
     }
@@ -262,5 +726,163 @@ mod tests {
         assert!(KvPrecision::parse("int3").is_err());
         assert_eq!(KvPrecision::Fp8.bits_per_value(), 8.0);
         assert_eq!(KvPrecision::Fp16.bits_per_value(), 16.0);
+    }
+
+    // -- paged arena --------------------------------------------------------
+
+    fn push_rows(kv: &mut KvState, rng: &mut Rng, n: usize, d: usize) {
+        for _ in 0..n {
+            let row = rng.normal_vec(d, 1.5);
+            for l in &mut kv.layers {
+                l.k.push_row(&row);
+                l.v.push_row(&row);
+            }
+            kv.advance(1);
+        }
+    }
+
+    #[test]
+    fn paged_matches_flat_for_both_precisions() {
+        let a = arch();
+        for prec in [KvPrecision::Fp16, KvPrecision::Fp8] {
+            let pool = KvPool::new(&a, prec, 64);
+            let mut flat = KvState::new(&a, prec);
+            let mut paged = KvState::new_paged(&a, &pool);
+            assert!(paged.is_paged() && !flat.is_paged());
+            assert_eq!(paged.kv_pages(), 0, "construction allocates nothing");
+
+            // Cross a page boundary: PAGE_TOKENS + 3 rows.
+            let n = PAGE_TOKENS + 3;
+            paged.reserve(n).unwrap();
+            let mut r1 = Rng::new(11);
+            let mut r2 = Rng::new(11);
+            push_rows(&mut flat, &mut r1, n, a.d_model);
+            push_rows(&mut paged, &mut r2, n, a.d_model);
+
+            let (mut s1, mut s2) = (Vec::new(), Vec::new());
+            for l in 0..a.n_layers {
+                let want = flat.layers[l].k.materialize(&mut s1).to_vec();
+                let got = paged.layers[l].k.materialize(&mut s2).to_vec();
+                assert_eq!(got.len(), want.len());
+                for (g, w) in got.iter().zip(&want) {
+                    assert_eq!(g.to_bits(), w.to_bits(), "{prec:?} layer {l}");
+                }
+            }
+            assert_eq!(paged.stored_bits(), flat.stored_bits(), "{prec:?}");
+            // 2 pages per buffer × 2 buffers × n_layers.
+            assert_eq!(paged.kv_pages(), 2 * 2 * a.n_layers);
+
+            // Clone is a flat snapshot with identical values.
+            let snap = paged.clone();
+            assert!(!snap.is_paged());
+            let (mut s3, mut s4) = (Vec::new(), Vec::new());
+            assert_eq!(
+                snap.layers[0].v.materialize(&mut s3),
+                paged.layers[0].v.materialize(&mut s4)
+            );
+        }
+    }
+
+    #[test]
+    fn pool_alloc_free_reuse_under_interleaving() {
+        // Property: over random interleaved reserve/clear/drop sequences the
+        // pool conserves pages — in_use always equals the pages sessions
+        // hold, every release makes them reallocatable, no page is ever
+        // double-booked (checked via the free-list length invariant).
+        let a = arch();
+        let pool = KvPool::new(&a, KvPrecision::Fp16, 48);
+        let mut rng = Rng::new(0xA6ED_u64);
+        let mut live: Vec<KvState> = Vec::new();
+        for _ in 0..400 {
+            let action = rng.below(3);
+            if action == 0 || live.is_empty() {
+                let mut kv = KvState::new_paged(&a, &pool);
+                let want = 1 + rng.below(2 * PAGE_TOKENS);
+                if kv.reserve(want).is_ok() {
+                    live.push(kv);
+                }
+            } else if action == 1 {
+                let i = rng.below(live.len());
+                live.swap_remove(i); // drop returns pages
+            } else {
+                let i = rng.below(live.len());
+                live[i].clear();
+                let _ = live[i].reserve(1 + rng.below(PAGE_TOKENS));
+            }
+            let held: usize = live.iter().map(|kv| kv.kv_pages()).sum();
+            let s = pool.stats();
+            assert_eq!(s.in_use_pages, held, "pool accounting drifted");
+            assert_eq!(s.free_pages + s.in_use_pages, s.total_pages);
+        }
+        drop(live);
+        assert_eq!(pool.stats().free_pages, 48, "all pages recycled");
+        assert!(pool.stats().peak_in_use > 0);
+    }
+
+    #[test]
+    fn exhaustion_is_typed_all_or_nothing_and_counted() {
+        let a = arch();
+        // 2 layers × 2 buffers: one token needs 4 pages; give the pool 3.
+        let pool = KvPool::new(&a, KvPrecision::Fp16, 3);
+        let mut kv = KvState::new_paged(&a, &pool);
+        let err = kv.reserve(1).unwrap_err();
+        assert_eq!(err, KvPoolExhausted { requested: 4, free: 3 });
+        assert_eq!(kv.kv_pages(), 0, "failed reservation must not hold pages");
+        assert_eq!(pool.free_pages(), 3, "all-or-nothing");
+        assert_eq!(pool.stats().exhausted_events, 1);
+        // The typed error survives anyhow conversion (the engine path).
+        let any: anyhow::Error = err.into();
+        assert!(any.downcast_ref::<KvPoolExhausted>().is_some());
+
+        // Reserve slack is idempotent: a partially-filled page satisfies
+        // further tokens without new pages.
+        let pool2 = KvPool::new(&a, KvPrecision::Fp16, 8);
+        let mut kv2 = KvState::new_paged(&a, &pool2);
+        kv2.reserve(3).unwrap();
+        assert_eq!(kv2.kv_pages(), 4);
+        kv2.reserve(PAGE_TOKENS - 3).unwrap(); // still within page 0
+        assert_eq!(kv2.kv_pages(), 4);
+    }
+
+    #[test]
+    fn truncate_rolls_back_rows_and_pages() {
+        let a = arch();
+        let pool = KvPool::new(&a, KvPrecision::Fp16, 64);
+        let mut kv = KvState::new_paged(&a, &pool);
+        let n = PAGE_TOKENS + 4;
+        kv.reserve(n).unwrap();
+        let mut rng = Rng::new(5);
+        push_rows(&mut kv, &mut rng, n, a.d_model);
+        assert_eq!(kv.kv_pages(), 2 * 2 * a.n_layers);
+
+        kv.truncate(PAGE_TOKENS - 1); // back under one page
+        assert_eq!(kv.len(), PAGE_TOKENS - 1);
+        assert_eq!(kv.kv_pages(), 2 * a.n_layers, "second pages released");
+        assert_eq!(pool.stats().in_use_pages, kv.kv_pages());
+        // No-op when len > current.
+        kv.truncate(PAGE_TOKENS);
+        assert_eq!(kv.len(), PAGE_TOKENS - 1);
+        // Reservation slack releases via truncate(len()) — the idiom for
+        // returning pages a failed step reserved but never filled.
+        kv.reserve(5).unwrap();
+        assert_eq!(kv.kv_pages(), 2 * 2 * a.n_layers, "reserve ran ahead");
+        kv.truncate(kv.len());
+        assert_eq!(kv.kv_pages(), 2 * a.n_layers, "slack released");
+        assert_eq!(kv.len(), PAGE_TOKENS - 1);
+        // Flat caches truncate their vecs too.
+        let mut flat = KvState::new(&a, KvPrecision::Fp8);
+        push_rows(&mut flat, &mut rng, 3, a.d_model);
+        flat.truncate(1);
+        assert_eq!(flat.len(), 1);
+        assert_eq!(flat.stored_bits(), (2 * a.n_layers * a.d_model * 8) as u64);
+    }
+
+    #[test]
+    fn pages_for_session_math() {
+        assert_eq!(KvPool::pages_for_tokens(0), 0);
+        assert_eq!(KvPool::pages_for_tokens(1), 1);
+        assert_eq!(KvPool::pages_for_tokens(PAGE_TOKENS), 1);
+        assert_eq!(KvPool::pages_for_tokens(PAGE_TOKENS + 1), 2);
+        assert_eq!(KvPool::pages_for_session(4, 17), 2 * 4 * 2);
     }
 }

@@ -22,12 +22,25 @@
 //! path is bit-identical to recompute with an FP16 cache (see
 //! `tests/decode_props.rs`) and rolls — re-prefilling the trailing half
 //! window — when a session outgrows `max_seq`.
+//!
+//! KV storage is **paged**: the engine owns a shared
+//! [`KvPool`](crate::model::kv::KvPool) and sessions hold page tables into
+//! it instead of privately grown buffers, so admission cost is proportional
+//! to tokens actually cached, retirement returns pages to the free list,
+//! and an exhausted pool surfaces as the typed
+//! [`KvPoolExhausted`](crate::model::kv::KvPoolExhausted) backpressure
+//! error before any compute. [`Engine::prefill_batch`] amortizes the
+//! blocked matmuls across every prompt admitted in one round. Pool capacity
+//! comes from [`EngineOptions::kv_pages`] (the serve `--kv-pages` flag).
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::io::Manifest;
-use crate::model::forward::{forward_prefill, forward_step_batch, ModelArch, QuantInputs};
-use crate::model::kv::{KvPrecision, KvState};
+use crate::model::forward::{
+    forward_prefill, forward_prefill_batch, forward_step_batch, ModelArch, QuantInputs,
+};
+use crate::model::kv::{KvPool, KvPoolStats, KvPrecision, KvState};
 use crate::Result;
 
 use super::args::ArgValue;
@@ -70,7 +83,33 @@ impl Session {
     pub fn kv_bits(&self) -> u64 {
         self.kv.as_ref().map(|kv| kv.stored_bits()).unwrap_or(0)
     }
+
+    /// Pool pages the session's cache holds (0 on the windowed fallback).
+    /// Pages return to the engine's free list when the session drops.
+    pub fn kv_pages(&self) -> usize {
+        self.kv.as_ref().map(|kv| kv.kv_pages()).unwrap_or(0)
+    }
 }
+
+/// Engine construction knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineOptions {
+    /// KV-cache storage precision of new sessions.
+    pub kv: KvPrecision,
+    /// KV pool capacity in pages ([`crate::model::kv::PAGE_TOKENS`] tokens
+    /// each). `None` sizes for [`DEFAULT_POOL_SESSIONS`] full-window
+    /// sessions — a startup decision, like a device's HBM carve-out.
+    pub kv_pages: Option<usize>,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        EngineOptions { kv: KvPrecision::Fp16, kv_pages: None }
+    }
+}
+
+/// Default pool sizing: full-window worst case for this many sessions.
+pub const DEFAULT_POOL_SESSIONS: usize = 16;
 
 /// Per-step report for metrics/energy accounting.
 #[derive(Debug, Clone, Default)]
@@ -92,6 +131,8 @@ struct CachedEngine {
     act_weights: Vec<Vec<f32>>,
     thresholds: Vec<f32>,
     kv: KvPrecision,
+    /// The shared page arena every session of this engine draws from.
+    pool: Arc<KvPool>,
 }
 
 impl CachedEngine {
@@ -139,6 +180,16 @@ impl Engine {
         tail: Vec<ArgValue>,
         kv: KvPrecision,
     ) -> Result<Self> {
+        Engine::with_options(rt, spec, tail, EngineOptions { kv, kv_pages: None })
+    }
+
+    /// [`Engine::new`] with explicit pool sizing (`--kv-pages`).
+    pub fn with_options(
+        rt: &Runtime,
+        spec: &ExecSpec,
+        tail: Vec<ArgValue>,
+        opts: EngineOptions,
+    ) -> Result<Self> {
         anyhow::ensure!(
             spec.kind == GraphKind::LogitsQuant,
             "Engine drives the logits_quant graph, got {:?}",
@@ -148,13 +199,20 @@ impl Engine {
         match exe {
             Executable::Native(g) => {
                 let (params, act_weights, thresholds) = parse_tail(g.manifest(), &tail)?;
+                let arch = g.arch().clone();
+                let pages = opts.kv_pages.unwrap_or_else(|| {
+                    DEFAULT_POOL_SESSIONS
+                        * KvPool::pages_for_session(arch.n_layers, arch.max_seq)
+                });
+                let pool = KvPool::new(&arch, opts.kv, pages);
                 Ok(Engine {
                     inner: Inner::Cached(CachedEngine {
-                        arch: g.arch().clone(),
+                        arch,
                         params,
                         act_weights,
                         thresholds,
-                        kv,
+                        kv: opts.kv,
+                        pool,
                     }),
                 })
             }
@@ -209,14 +267,20 @@ impl Engine {
     /// predict the first generated token. Prompts longer than the model's
     /// context are truncated to the trailing window; an empty prompt is
     /// treated as the single token 0 (matching the legacy zero-padded
-    /// window).
+    /// window). The session's KV pages come from the engine's shared pool
+    /// — proportional to the prompt's length, never the max window — and a
+    /// full pool fails *before* any compute with a
+    /// [`crate::model::kv::KvPoolExhausted`]-sourced error the caller can
+    /// downcast and treat as admission backpressure.
     pub fn prefill(&self, prompt: &[i32]) -> Result<Session> {
         let prompt = if prompt.is_empty() { &[0i32][..] } else { prompt };
         match &self.inner {
             Inner::Cached(ce) => {
                 let keep = prompt.len().min(ce.arch.max_seq);
                 let kept = &prompt[prompt.len() - keep..];
-                let mut kv = KvState::new(&ce.arch, ce.kv);
+                // Pages are reserved inside forward_prefill; dropping the
+                // state on any error releases them.
+                let mut kv = KvState::new_paged(&ce.arch, &ce.pool);
                 let quant = ce.quant_inputs();
                 let out = forward_prefill(&ce.arch, &ce.param_map(), kept, Some(&quant), &mut kv)?;
                 Ok(Session {
@@ -239,6 +303,102 @@ impl Engine {
                 }
                 Ok(sess)
             }
+        }
+    }
+
+    /// Prefill many prompts as **one batched forward**: the blocked matmuls
+    /// of every layer run once over all prompts' concatenated rows
+    /// ([`forward_prefill_batch`]), amortizing admission cost across the
+    /// round — per-prompt logits and caches are bit-identical to
+    /// [`Engine::prefill`] one at a time. All page reservations happen
+    /// before any compute; on pool exhaustion nothing is cached and the
+    /// typed error propagates (the windowed fallback prefills serially).
+    pub fn prefill_batch(&self, prompts: &[Vec<i32>]) -> Result<Vec<Session>> {
+        if prompts.is_empty() {
+            return Ok(Vec::new());
+        }
+        match &self.inner {
+            Inner::Cached(ce) => {
+                let kept: Vec<&[i32]> = prompts
+                    .iter()
+                    .map(|p| {
+                        if p.is_empty() {
+                            &[0i32][..]
+                        } else {
+                            &p[p.len() - p.len().min(ce.arch.max_seq)..]
+                        }
+                    })
+                    .collect();
+                let mut kvs_owned: Vec<KvState> =
+                    (0..kept.len()).map(|_| KvState::new_paged(&ce.arch, &ce.pool)).collect();
+                let pm = ce.param_map();
+                let quant = ce.quant_inputs();
+                let out = {
+                    let mut kv_refs: Vec<&mut KvState> = kvs_owned.iter_mut().collect();
+                    // On error kvs_owned drops → reserved pages released.
+                    forward_prefill_batch(&ce.arch, &pm, &kept, Some(&quant), &mut kv_refs)?
+                };
+                let vocab = ce.arch.vocab;
+                Ok(kvs_owned
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, kv)| Session {
+                        tokens: kept[i].to_vec(),
+                        last_logits: out.logits[i * vocab..(i + 1) * vocab].to_vec(),
+                        steps: 0,
+                        kv: Some(kv),
+                    })
+                    .collect())
+            }
+            Inner::Windowed(_) => prompts.iter().map(|p| self.prefill(p)).collect(),
+        }
+    }
+
+    /// Live accounting of the engine's KV page pool (None on the windowed
+    /// fallback, which holds no cache).
+    pub fn pool_stats(&self) -> Option<KvPoolStats> {
+        match &self.inner {
+            Inner::Cached(ce) => Some(ce.pool.stats()),
+            Inner::Windowed(_) => None,
+        }
+    }
+
+    /// Worst-case pages one session can ever hold (a full `max_seq`
+    /// window; rolling re-prefill shrinks usage back below this).
+    pub fn kv_pages_per_session(&self) -> usize {
+        match &self.inner {
+            Inner::Cached(ce) => KvPool::pages_for_session(ce.arch.n_layers, ce.arch.max_seq),
+            Inner::Windowed(_) => 0,
+        }
+    }
+
+    /// Sessions the pool sustains at worst case — the coarse admission
+    /// bound (unbounded on the windowed fallback). The coordinator uses
+    /// the tighter per-request bound [`Engine::kv_pages_worst_for`].
+    pub fn max_live_sessions(&self) -> usize {
+        match &self.inner {
+            Inner::Cached(ce) => {
+                ce.pool.total_pages() / self.kv_pages_per_session().max(1)
+            }
+            Inner::Windowed(_) => usize::MAX,
+        }
+    }
+
+    /// Sound per-request worst-case page bound: a request admitted with
+    /// this many tokens of prompt and a `want`-token budget can never hold
+    /// more pages than this at any point of its life (context is capped by
+    /// `max_seq`, rolls only shrink it, and the session retires once
+    /// `want` tokens exist). Admitting only while Σ worst-cases of live
+    /// sessions stays within the pool guarantees prefill, decode, and roll
+    /// can never hit an exhausted pool (0 on the windowed fallback).
+    pub fn kv_pages_worst_for(&self, prompt_len: usize, want: usize) -> usize {
+        match &self.inner {
+            Inner::Cached(ce) => {
+                let kept = prompt_len.min(ce.arch.max_seq).max(1);
+                let peak = (kept + want).min(ce.arch.max_seq);
+                KvPool::pages_for_session(ce.arch.n_layers, peak)
+            }
+            Inner::Windowed(_) => 0,
         }
     }
 

@@ -31,7 +31,7 @@ pub mod literal;
 use std::path::{Path, PathBuf};
 
 pub use args::ArgValue;
-pub use engine::{Engine, Session, StepOut};
+pub use engine::{Engine, EngineOptions, Session, StepOut};
 #[cfg(feature = "pjrt")]
 pub use client::PjrtRuntime;
 #[cfg(feature = "pjrt")]

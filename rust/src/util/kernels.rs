@@ -124,6 +124,42 @@ pub fn absmax(x: &[f32]) -> f32 {
     x.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
 }
 
+// ---------------------------------------------------------------------------
+// Paged KV gather kernels (decode-on-read over non-contiguous pages)
+// ---------------------------------------------------------------------------
+
+/// The 256-entry E4M3 decode table, built once from the scalar codec — so
+/// the lattice is identical to [`crate::quant::fp8::decode_e4m3`] by
+/// construction, and a lookup per byte keeps the gather loops memory-bound.
+fn e4m3_lut() -> &'static [f32; 256] {
+    static LUT: std::sync::OnceLock<[f32; 256]> = std::sync::OnceLock::new();
+    LUT.get_or_init(|| std::array::from_fn(|b| crate::quant::fp8::decode_e4m3(b as u8)))
+}
+
+/// Gather non-contiguous f32 page slices into one contiguous row buffer —
+/// the FP16 paged-KV read path. Pages arrive in token order; the last page
+/// may be partial (the caller slices it to the live rows).
+pub fn gather_f32_pages(pages: &[&[f32]], out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(pages.iter().map(|p| p.len()).sum());
+    for p in pages {
+        out.extend_from_slice(p);
+    }
+}
+
+/// Gather + decode E4M3 byte pages into contiguous f32 rows — the FP8
+/// KV read path, flat (one page spanning the buffer) or paged (one
+/// table-lookup pass per page, appended directly: no zero-fill of the
+/// scratch before the overwrite).
+pub fn gather_e4m3_pages(pages: &[&[u8]], out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(pages.iter().map(|p| p.len()).sum());
+    let lut = e4m3_lut();
+    for p in pages {
+        out.extend(p.iter().map(|&b| lut[b as usize]));
+    }
+}
+
 /// The PPU (paper §4.2) on one activation row: round-trip each 16-block to
 /// FP8 or NVFP4 per the impact score (Eq. 8) against `threshold`, writing
 /// dequantized values to `out`. Returns the FP8 block count. Identical
@@ -467,6 +503,38 @@ mod tests {
         let only_a = a.iter().zip(&b).filter(|(&x, &y)| x && !y).count() as u64;
         assert_eq!(and_popcount(&pa, &pb), both);
         assert_eq!(andnot_popcount(&pa, &pb), only_a);
+    }
+
+    #[test]
+    fn e4m3_gather_matches_scalar_codec_on_all_bytes() {
+        let bytes: Vec<u8> = (0..=255u8).collect();
+        let mut out = Vec::new();
+        gather_e4m3_pages(&[bytes.as_slice()], &mut out);
+        assert_eq!(out.len(), 256);
+        for (b, &got) in bytes.iter().zip(&out) {
+            let want = crate::quant::fp8::decode_e4m3(*b);
+            assert_eq!(got.to_bits(), want.to_bits(), "byte {b:#x}");
+        }
+    }
+
+    #[test]
+    fn page_gathers_concatenate_in_order() {
+        let mut rng = Rng::new(7);
+        let flat = rng.normal_vec(40, 1.0);
+        let pages: Vec<&[f32]> = vec![&flat[..16], &flat[16..32], &flat[32..]];
+        let mut out = Vec::new();
+        gather_f32_pages(&pages, &mut out);
+        assert_eq!(out, flat);
+
+        let bytes: Vec<u8> = (0..40u8).map(|i| i.wrapping_mul(37)).collect();
+        let bpages: Vec<&[u8]> = vec![&bytes[..16], &bytes[16..32], &bytes[32..]];
+        let mut fout = Vec::new();
+        gather_e4m3_pages(&bpages, &mut fout);
+        let want: Vec<f32> = bytes.iter().map(|&b| crate::quant::fp8::decode_e4m3(b)).collect();
+        assert_eq!(fout, want);
+        // Scratch is reusable: a second gather into the same Vec resizes.
+        gather_f32_pages(&pages[..1], &mut out);
+        assert_eq!(out, &flat[..16]);
     }
 
     #[test]

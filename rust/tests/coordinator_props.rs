@@ -218,6 +218,7 @@ fn continuous_batching_preserves_per_request_streams() {
         queue_depth: 64,
         kv_precision: KvPrecision::Fp16,
         decode_batch: 3,
+        kv_pages: None,
     };
     let fwd_spec = ExecSpec::new(&dir, "tiny-llama", GraphKind::FwdQuant);
     let server = Server::start(scfg, fwd_spec, tail.clone(), logits_spec, tail).unwrap();
@@ -246,6 +247,113 @@ fn continuous_batching_preserves_per_request_streams() {
     assert_eq!(
         snap.generated_tokens,
         cases.iter().map(|(_, n)| *n as u64).sum::<u64>()
+    );
+    server.shutdown();
+}
+
+/// Out-of-pages backpressure: with a KV pool sized for exactly two
+/// worst-case sessions and more requests than that in flight, the decode
+/// loop must *defer* admissions (never fail them), keep admission FIFO, and
+/// still produce every request's exact single-session stream once
+/// retirement frees pages. Earlier-submitted requests finish no later than
+/// requests two pool-generations behind them.
+#[test]
+fn pool_backpressure_defers_admissions_and_preserves_streams() {
+    use fgmp::coordinator::{Server, ServerConfig};
+    use fgmp::eval::Evaluator;
+    use fgmp::model::{KvPool, KvPrecision, QuantConfig, QuantizedModel};
+    use fgmp::runtime::{Engine, ExecSpec, GraphKind, Runtime};
+
+    let dir = std::env::temp_dir().join("fgmp_coordinator_pool_artifacts");
+    let _ = std::fs::remove_dir_all(&dir);
+    fgmp::io::synth::ensure_model(&dir, "tiny-llama", 42).expect("synthesize artifacts");
+
+    let rt = Runtime::native();
+    let ev = Evaluator::load(&rt, &dir, "tiny-llama").unwrap();
+    let arch = ev.arts.manifest.arch().unwrap();
+    let cfg = QuantConfig::fgmp(0.7);
+    let qm = QuantizedModel::quantize(&ev.arts, &cfg).unwrap();
+    let tail = ev.quant_arg_tail(&cfg, &qm).unwrap();
+    let shapes = qm.layer_profiles(&ev.arts.manifest, ev.batch * ev.seq, &[]);
+    let logits_spec = ExecSpec::new(&dir, "tiny-llama", GraphKind::LogitsQuant);
+
+    // Room for exactly 2 worst-case *requests* (prompt 6 + 4 generated
+    // tokens → `pages_for_session(layers, 10)` committed each by the
+    // admission budget), but a decode batch of 4: admission is
+    // pool-budget-bound, not batch-bound.
+    let n_tokens = 4usize;
+    let per_request = KvPool::pages_for_session(arch.n_layers, 6 + n_tokens);
+    let kv_pages = 2 * per_request;
+
+    // Reference streams from a dedicated single-session engine.
+    let engine = Engine::new(&rt, &logits_spec, tail.clone(), KvPrecision::Fp16).unwrap();
+    let cases: Vec<Vec<i32>> =
+        (0..8).map(|i| ev.test_stream[i * 20..i * 20 + 6].to_vec()).collect();
+    let expected: Vec<Vec<i32>> = cases
+        .iter()
+        .map(|prompt| {
+            let mut sess = engine.prefill(prompt).unwrap();
+            let mut produced = vec![sess.next_token()];
+            while produced.len() < n_tokens {
+                let mut refs = [&mut sess];
+                engine.decode_step(&mut refs).unwrap();
+                produced.push(sess.next_token());
+            }
+            produced.truncate(n_tokens);
+            produced
+        })
+        .collect();
+
+    let scfg = ServerConfig {
+        batch: ev.batch,
+        seq: ev.seq,
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+        layer_shapes: shapes,
+        queue_depth: 64,
+        kv_precision: KvPrecision::Fp16,
+        decode_batch: 4,
+        kv_pages: Some(kv_pages),
+    };
+    let fwd_spec = ExecSpec::new(&dir, "tiny-llama", GraphKind::FwdQuant);
+    let server = Server::start(scfg, fwd_spec, tail.clone(), logits_spec, tail).unwrap();
+
+    // Submit everything up front so the pool bound must bite.
+    let mut rxs = Vec::new();
+    for (id, prompt) in cases.iter().enumerate() {
+        let (req, resp_rx) = Request::new(
+            id as u64,
+            RequestKind::Generate { prompt: prompt.clone(), n_tokens },
+        );
+        server.router.submit(req).unwrap();
+        rxs.push(resp_rx);
+    }
+    let mut latencies = Vec::new();
+    for (i, resp_rx) in rxs.into_iter().enumerate() {
+        let resp = resp_rx.recv().expect("generate response");
+        let got = resp.generated.unwrap_or_else(|| panic!("request {i} failed under backpressure"));
+        assert_eq!(got, expected[i], "request {i}: stream perturbed by deferral");
+        latencies.push(resp.latency);
+    }
+    // FIFO deferral ordering: with equal budgets and 2 slots, the first
+    // pair must complete well before the last pair (which waits out three
+    // pool generations).
+    let first = latencies[0].max(latencies[1]);
+    let last = latencies[6].min(latencies[7]);
+    assert!(
+        first <= last,
+        "deferral reordered completion: first pair {first:?} vs last pair {last:?}"
+    );
+
+    let snap = server.metrics.snapshot();
+    assert!(snap.deferred_admissions > 0, "the pool bound never bit");
+    assert_eq!(snap.kv_pool_pages, kv_pages as u64);
+    assert!(snap.kv_pool_peak_pages <= snap.kv_pool_pages);
+    assert!(snap.kv_pool_occupancy > 0.0 && snap.kv_pool_occupancy <= 1.0);
+    assert!(snap.kv_page_fill > 0.0 && snap.kv_page_fill <= 1.0);
+    assert_eq!(
+        snap.generated_tokens,
+        (cases.len() * n_tokens) as u64,
+        "every deferred request still completed in full"
     );
     server.shutdown();
 }

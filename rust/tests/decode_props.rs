@@ -26,10 +26,10 @@ use std::path::PathBuf;
 use std::sync::OnceLock;
 
 use fgmp::model::forward::{
-    forward, forward_prefill, forward_step, forward_step_batch, Act, ModelArch, NormKind,
-    PosKind, QuantInputs,
+    forward, forward_prefill, forward_prefill_batch, forward_step, forward_step_batch, Act,
+    ModelArch, NormKind, PosKind, QuantInputs,
 };
-use fgmp::model::kv::{KvPrecision, KvState};
+use fgmp::model::kv::{KvPool, KvPoolExhausted, KvPrecision, KvState, PAGE_TOKENS};
 use fgmp::util::Rng;
 
 fn arch_rope() -> ModelArch {
@@ -235,6 +235,196 @@ fn fp8_kv_within_documented_tolerance() {
     }
 }
 
+/// **Acceptance criterion:** FP16 *paged* decode is bit-for-bit identical
+/// to the contiguous KV path — prefill plus every step, across page
+/// boundaries, both arch families. The paged read is a pure gather of the
+/// same f32 rows, so attention consumes identical inputs in identical
+/// order.
+#[test]
+fn paged_fp16_decode_is_bit_exact_vs_contiguous() {
+    let mut rng = Rng::new(0xDEC4);
+    for (ai, arch) in [arch_rope(), arch_learned()].iter().enumerate() {
+        let params = random_params(arch, 400 + ai as u64);
+        let pm = param_map(&params);
+        let pool = KvPool::new(arch, KvPrecision::Fp16, 64);
+        // Splits that stay inside a page, end exactly on a boundary, and
+        // cross it mid-stream (max_seq = 32 bounds s0 + n).
+        for &(s0, n) in &[(1usize, 3usize), (5, 4), (PAGE_TOKENS, 3), (PAGE_TOKENS - 1, 5)] {
+            let tokens = random_tokens(&mut rng, s0 + n, arch.vocab);
+            let mut flat = KvState::new(arch, KvPrecision::Fp16);
+            let mut paged = KvState::new_paged(arch, &pool);
+            let out_f = forward_prefill(arch, &pm, &tokens[..s0], None, &mut flat).unwrap();
+            let out_p = forward_prefill(arch, &pm, &tokens[..s0], None, &mut paged).unwrap();
+            assert_bits_eq(&out_p.logits, &out_f.logits, &format!("arch {ai} prefill s0={s0}"));
+            for j in 0..n {
+                let of = forward_step(arch, &pm, tokens[s0 + j], &mut flat, None).unwrap();
+                let op = forward_step(arch, &pm, tokens[s0 + j], &mut paged, None).unwrap();
+                assert_bits_eq(&op.logits, &of.logits, &format!("arch {ai} s0={s0} step {j}"));
+            }
+            assert_eq!(paged.len(), flat.len());
+            assert_eq!(paged.stored_bits(), flat.stored_bits());
+        }
+        assert_eq!(pool.stats().in_use_pages, 0, "arch {ai}: all pages recycled");
+    }
+}
+
+/// Paged FP8 stores the same E4M3 bytes as the flat FP8 cache and decodes
+/// them through the same lattice, so the two are bit-exact against each
+/// other — and both stay within the documented tolerance of the fp32
+/// oracle (rel L2 ≤ 0.15, same bound as `fp8_kv_within_documented_tolerance`).
+#[test]
+fn paged_fp8_matches_flat_fp8_bit_exact_and_oracle_within_tolerance() {
+    let mut rng = Rng::new(0xDEC5);
+    let arch = arch_rope();
+    let params = random_params(&arch, 410);
+    let pm = param_map(&params);
+    let pool = KvPool::new(&arch, KvPrecision::Fp8, 64);
+    let (s0, n) = (9usize, 8usize); // crosses the first page boundary
+    let s = s0 + n;
+    let tokens = random_tokens(&mut rng, s, arch.vocab);
+    let full = forward(&arch, &pm, &tokens, 1, s, None, None, true).unwrap();
+
+    let mut flat = KvState::new(&arch, KvPrecision::Fp8);
+    let mut paged = KvState::new_paged(&arch, &pool);
+    let mut out_f = forward_prefill(&arch, &pm, &tokens[..s0], None, &mut flat).unwrap();
+    let mut out_p = forward_prefill(&arch, &pm, &tokens[..s0], None, &mut paged).unwrap();
+    for j in 0..n {
+        out_f = forward_step(&arch, &pm, tokens[s0 + j], &mut flat, None).unwrap();
+        out_p = forward_step(&arch, &pm, tokens[s0 + j], &mut paged, None).unwrap();
+    }
+    assert_bits_eq(&out_p.logits, &out_f.logits, "paged FP8 vs flat FP8");
+    let mut d2 = 0.0f64;
+    let mut r2 = 0.0f64;
+    for (a, b) in out_p.logits.iter().zip(&full.logits) {
+        d2 += ((a - b) as f64).powi(2);
+        r2 += (*b as f64).powi(2);
+    }
+    let rel = (d2 / r2.max(1e-30)).sqrt();
+    assert!(rel < 0.15, "paged FP8-KV rel L2 {rel}");
+    assert!(d2 > 0.0, "FP8 paging should still quantize");
+}
+
+/// **Acceptance criterion:** admission allocates proportionally to tokens
+/// actually cached — never a window-sized buffer. Construction is free,
+/// prefill of `t` tokens holds exactly `pages_for_session(layers, t)`
+/// pages, and retirement returns them all.
+#[test]
+fn paged_prefill_allocates_proportional_to_tokens_not_window() {
+    let arch = arch_rope(); // max_seq 32: a full window would be 2 pages/buf
+    let params = random_params(&arch, 77);
+    let pm = param_map(&params);
+    let pool = KvPool::new(&arch, KvPrecision::Fp16, 64);
+    let mut kv = KvState::new_paged(&arch, &pool);
+    assert_eq!(pool.stats().in_use_pages, 0, "construction must allocate nothing");
+    let tokens: Vec<i32> = (0..5).collect();
+    forward_prefill(&arch, &pm, &tokens, None, &mut kv).unwrap();
+    assert_eq!(kv.kv_pages(), KvPool::pages_for_session(arch.n_layers, 5));
+    assert_eq!(pool.stats().in_use_pages, kv.kv_pages());
+    assert!(
+        kv.kv_pages() < KvPool::pages_for_session(arch.n_layers, arch.max_seq),
+        "5-token admission must cost less than the max window"
+    );
+    drop(kv);
+    assert_eq!(pool.stats().free_pages, 64, "retirement returns every page");
+}
+
+/// Batched prefill equals sequential prefills bit-for-bit — mixed prompt
+/// lengths, with and without the PPU quantizer — and decode continues
+/// identically from the batched caches.
+#[test]
+fn batched_prefill_matches_sequential_bit_exact() {
+    let mut rng = Rng::new(0xDEC6);
+    let arch = arch_rope();
+    let params = random_params(&arch, 501);
+    let pm = param_map(&params);
+    let linears = arch.linears();
+    let aw: Vec<Vec<f32>> = linears.iter().map(|l| vec![1.0f32; l.k_in]).collect();
+    let awr: Vec<&[f32]> = aw.iter().map(|v| v.as_slice()).collect();
+    let thresholds: Vec<f32> = (0..linears.len())
+        .map(|i| if i % 2 == 0 { -1.0 } else { f32::INFINITY })
+        .collect();
+    let q = QuantInputs { act_weights: awr, thresholds: &thresholds };
+
+    for quant in [None, Some(&q)] {
+        let lens = [3usize, PAGE_TOKENS, 7, 1];
+        let prompts: Vec<Vec<i32>> =
+            lens.iter().map(|&l| random_tokens(&mut rng, l, arch.vocab)).collect();
+
+        // Sequential oracle over flat caches.
+        let mut want_logits = Vec::new();
+        let mut flat_kvs = Vec::new();
+        for p in &prompts {
+            let mut kv = KvState::new(&arch, KvPrecision::Fp16);
+            let out = forward_prefill(&arch, &pm, p, quant, &mut kv).unwrap();
+            want_logits.push(out.logits);
+            flat_kvs.push(kv);
+        }
+
+        // One batched forward into paged caches.
+        let pool = KvPool::new(&arch, KvPrecision::Fp16, 64);
+        let mut kvs: Vec<KvState> =
+            prompts.iter().map(|_| KvState::new_paged(&arch, &pool)).collect();
+        let pviews: Vec<&[i32]> = prompts.iter().map(|p| p.as_slice()).collect();
+        let out = {
+            let mut refs: Vec<&mut KvState> = kvs.iter_mut().collect();
+            forward_prefill_batch(&arch, &pm, &pviews, quant, &mut refs).unwrap()
+        };
+        let v = arch.vocab;
+        for (i, want) in want_logits.iter().enumerate() {
+            assert_bits_eq(
+                &out.logits[i * v..(i + 1) * v],
+                want,
+                &format!("prompt {i} (quant {})", quant.is_some()),
+            );
+        }
+        for (kv, p) in kvs.iter().zip(&prompts) {
+            assert_eq!(kv.len(), p.len());
+        }
+
+        // Decode continues bit-identically from either prefill.
+        let steps: Vec<i32> = random_tokens(&mut rng, prompts.len(), arch.vocab);
+        let mut flat_refs: Vec<&mut KvState> = flat_kvs.iter_mut().collect();
+        let of = forward_step_batch(&arch, &pm, &steps, &mut flat_refs, quant).unwrap();
+        let mut paged_refs: Vec<&mut KvState> = kvs.iter_mut().collect();
+        let op = forward_step_batch(&arch, &pm, &steps, &mut paged_refs, quant).unwrap();
+        assert_bits_eq(&op.logits, &of.logits, "post-prefill batched step");
+    }
+}
+
+/// Pool exhaustion is a *typed*, compute-free, all-or-nothing failure: a
+/// too-big prefill leaves the cache empty and the pool untouched, and a
+/// starved decode step leaves every session's cache intact.
+#[test]
+fn pool_exhaustion_is_typed_and_spends_no_compute() {
+    let mut rng = Rng::new(0xDEC7);
+    let arch = arch_rope();
+    let params = random_params(&arch, 88);
+    let pm = param_map(&params);
+
+    // One token needs 2·n_layers = 4 pages; give the pool 3.
+    let pool = KvPool::new(&arch, KvPrecision::Fp16, 3);
+    let mut kv = KvState::new_paged(&arch, &pool);
+    let err = forward_prefill(&arch, &pm, &[1, 2, 3], None, &mut kv).unwrap_err();
+    assert!(err.downcast_ref::<KvPoolExhausted>().is_some(), "untyped: {err}");
+    assert!(kv.is_empty(), "failed prefill must cache nothing");
+    assert_eq!(pool.stats().in_use_pages, 0);
+    assert_eq!(pool.stats().exhausted_events, 1);
+
+    // Fill exactly one page per buffer, then starve the boundary step.
+    let pool2 = KvPool::new(&arch, KvPrecision::Fp16, 4);
+    let mut kv2 = KvState::new_paged(&arch, &pool2);
+    let prompt = random_tokens(&mut rng, PAGE_TOKENS, arch.vocab);
+    let pre = forward_prefill(&arch, &pm, &prompt, None, &mut kv2).unwrap();
+    let err = forward_step(&arch, &pm, 1, &mut kv2, None).unwrap_err();
+    assert!(err.downcast_ref::<KvPoolExhausted>().is_some(), "untyped: {err}");
+    assert_eq!(kv2.len(), PAGE_TOKENS, "failed step must leave the cache intact");
+    // The session still decodes correctly once capacity appears elsewhere
+    // (here: nothing to free, so just re-verify the cache is coherent by
+    // re-running the last-position logits from scratch).
+    let full = forward(&arch, &pm, &prompt, 1, prompt.len(), None, None, true).unwrap();
+    assert_bits_eq(&pre.logits, &full.logits, "cache coherent after failed step");
+}
+
 /// Guard rails: stepping a full cache errors (the Engine rolls before this
 /// can happen), prefill needs an empty cache and a non-empty prompt.
 #[test]
@@ -409,4 +599,80 @@ fn engine_rolls_past_max_seq() {
     let got = greedy(&engine, &prompt, n);
     assert_eq!(got.len(), n);
     assert!(got.iter().all(|&t| (t as usize) < arch.vocab));
+}
+
+/// `Engine::prefill_batch` returns sessions bit-identical to serial
+/// `Engine::prefill`, every session draws its pages from the engine's
+/// shared pool proportionally to its prompt, and retirement (dropping the
+/// sessions) returns every page to the free list.
+#[test]
+fn engine_prefill_batch_matches_serial_and_recycles_pages() {
+    let fx = engine_fixture();
+    let engine =
+        fgmp::runtime::Engine::new(&fx.rt, &fx.spec, fx.tail.clone(), KvPrecision::Fp16).unwrap();
+    let arch = fx.ev.arts.manifest.arch().unwrap();
+    let prompts: Vec<Vec<i32>> = [5usize, 17, 9, 1]
+        .iter()
+        .enumerate()
+        .map(|(i, &len)| fx.ev.test_stream[i * 24..i * 24 + len].to_vec())
+        .collect();
+
+    let serial: Vec<fgmp::runtime::Session> =
+        prompts.iter().map(|p| engine.prefill(p).unwrap()).collect();
+    let batch = engine.prefill_batch(&prompts).unwrap();
+    assert_eq!(batch.len(), prompts.len());
+    for (i, (s, b)) in serial.iter().zip(&batch).enumerate() {
+        assert_eq!(s.tokens, b.tokens, "session {i} context");
+        assert_bits_eq(&b.last_logits, &s.last_logits, &format!("session {i} logits"));
+        assert_eq!(s.cached_tokens(), b.cached_tokens());
+        assert_eq!(
+            b.kv_pages(),
+            fgmp::model::KvPool::pages_for_session(arch.n_layers, prompts[i].len()),
+            "session {i} pages proportional to its prompt"
+        );
+    }
+    let stats = engine.pool_stats().expect("cached engine has a pool");
+    let held: usize = serial.iter().chain(batch.iter()).map(|s| s.kv_pages()).sum();
+    assert_eq!(stats.in_use_pages, held, "pool accounting matches sessions");
+    drop(serial);
+    drop(batch);
+    assert_eq!(engine.pool_stats().unwrap().in_use_pages, 0, "retirement recycles");
+}
+
+/// Engine-level backpressure: a pool sized for exactly one worst-case
+/// session admits one, refuses the next over-budget prefill with the typed
+/// error, admits it after retirement frees the pages — and rolling keeps a
+/// long-running session inside the same bound, so decode never starves.
+#[test]
+fn engine_pool_backpressure_and_roll_stay_within_bound() {
+    use fgmp::runtime::EngineOptions;
+    let fx = engine_fixture();
+    let arch = fx.ev.arts.manifest.arch().unwrap();
+    let per_session = KvPool::pages_for_session(arch.n_layers, arch.max_seq);
+    let opts =
+        EngineOptions { kv: KvPrecision::Fp16, kv_pages: Some(per_session) };
+    let engine =
+        fgmp::runtime::Engine::with_options(&fx.rt, &fx.spec, fx.tail.clone(), opts).unwrap();
+    assert_eq!(engine.max_live_sessions(), 1);
+    assert_eq!(engine.kv_pages_per_session(), per_session);
+
+    let short: Vec<i32> = fx.ev.test_stream[..8].to_vec();
+    let long: Vec<i32> = fx.ev.test_stream[..arch.max_seq - 8].to_vec();
+    let held = engine.prefill(&short).unwrap();
+    let err = engine.prefill(&long).unwrap_err();
+    assert!(err.downcast_ref::<KvPoolExhausted>().is_some(), "untyped backpressure: {err}");
+    drop(held); // retire → pages free
+    let mut sess = engine.prefill(&long).unwrap();
+    assert_eq!(sess.cached_tokens(), long.len());
+
+    // Decode across the roll boundary: the worst-case bound means the pool
+    // never starves mid-stream, and the roll returns pages.
+    for _ in 0..20 {
+        let mut refs = [&mut sess];
+        engine.decode_step(&mut refs).unwrap();
+    }
+    let stats = engine.pool_stats().unwrap();
+    assert!(stats.in_use_pages <= per_session);
+    assert_eq!(stats.in_use_pages, sess.kv_pages());
+    assert!(sess.cached_tokens() > 0);
 }

@@ -212,6 +212,7 @@ fn coordinator_serves_score_requests_natively() {
         queue_depth: 64,
         kv_precision: fgmp::model::KvPrecision::Fp8,
         decode_batch: 4,
+        kv_pages: None,
     };
     let fwd = ExecSpec::new(dir, "tiny-llama", GraphKind::FwdQuant);
     let logits = ExecSpec::new(dir, "tiny-llama", GraphKind::LogitsQuant);

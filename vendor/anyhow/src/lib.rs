@@ -28,6 +28,15 @@ impl Error {
     pub fn context<C: fmt::Display>(self, c: C) -> Self {
         Error { msg: format!("{c}: {}", self.msg), source: self.source }
     }
+
+    /// View the underlying source as a concrete error type. The source is
+    /// set whenever the error was built through the blanket `From`
+    /// conversion (i.e. a typed `std::error::Error` bubbled up via `?`),
+    /// and context layers preserve it — so typed conditions like
+    /// backpressure errors survive `anyhow` plumbing, as upstream.
+    pub fn downcast_ref<E: std::error::Error + 'static>(&self) -> Option<&E> {
+        self.source.as_deref().and_then(|s| s.downcast_ref::<E>())
+    }
 }
 
 impl fmt::Display for Error {
@@ -158,6 +167,25 @@ mod tests {
         let v: Option<u8> = None;
         let err = v.with_context(|| format!("missing {}", "thing")).unwrap_err();
         assert_eq!(err.to_string(), "missing thing");
+    }
+
+    #[test]
+    fn downcast_ref_sees_through_context() {
+        #[derive(Debug)]
+        struct Marker(u32);
+        impl fmt::Display for Marker {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "marker {}", self.0)
+            }
+        }
+        impl std::error::Error for Marker {}
+
+        let err: Error = Error::from(Marker(7));
+        assert_eq!(err.downcast_ref::<Marker>().unwrap().0, 7);
+        let wrapped = err.context("outer");
+        assert_eq!(wrapped.downcast_ref::<Marker>().unwrap().0, 7);
+        assert!(wrapped.downcast_ref::<std::fmt::Error>().is_none());
+        assert!(Error::msg("plain").downcast_ref::<Marker>().is_none());
     }
 
     #[test]
