@@ -8,14 +8,18 @@ use std::time::Duration;
 
 use crate::io::synth::SynthConfig;
 use crate::model::forward::{
-    fgmp_matmul, forward, forward_prefill, forward_prefill_batch, forward_step,
-    forward_step_batch, ModelArch,
+    fgmp_matmul, fgmp_matmul_packed, forward, forward_prefill, forward_prefill_batch,
+    forward_step, forward_step_batch, ModelArch, Params,
 };
 use crate::model::kv::{KvPrecision, KvState};
 use crate::quant::fp8::quant_e4m3_slice;
-use crate::quant::{nvfp4_roundtrip, quant_e4m3, sw_clip_tensor};
+use crate::quant::{
+    nvfp4_roundtrip, quant_e4m3, sw_clip_tensor, FgmpTensor, PackedPanels, Precision,
+};
 use crate::util::bench::{bench, black_box, BenchResult, BenchSuite};
+use crate::util::kernels::MatmulScratch;
 use crate::util::{kernels, Rng};
+use crate::BLOCK;
 
 /// Canonical bench + derived-metric names. `ci/bench-baseline.json` gates
 /// on these strings; the `baseline_gates_on_known_names` test pins the
@@ -23,6 +27,8 @@ use crate::util::{kernels, Rng};
 pub mod names {
     pub const MATMUL_SCALAR: &str = "matmul_scalar_256x512x1536";
     pub const MATMUL_BLOCKED: &str = "matmul_blocked_256x512x1536";
+    pub const MATMUL_DEQUANT: &str = "matmul_dequant_256x512x1536";
+    pub const MATMUL_PACKED: &str = "matmul_packed_256x512x1536";
     pub const MATMUL_T_SCALAR: &str = "matmul_t_scalar_256x512x256";
     pub const MATMUL_T_BLOCKED: &str = "matmul_t_blocked_256x512x256";
     pub const QUANT_E4M3_SCALAR: &str = "quant_e4m3_scalar_64k";
@@ -30,6 +36,7 @@ pub mod names {
     pub const NVFP4_ROUNDTRIP: &str = "nvfp4_roundtrip_64k";
     pub const SW_CLIP: &str = "sw_clip_256x512";
     pub const FGMP_MATMUL: &str = "fgmp_matmul_256x512x1536";
+    pub const FGMP_MATMUL_PACKED: &str = "fgmp_matmul_packed_256x512x1536";
     pub const FORWARD_D512: &str = "forward_d512_b1s32";
     pub const DECODE_RECOMPUTE: &str = "decode_recompute_d512_p16_g8";
     pub const DECODE_CACHED: &str = "decode_cached_d512_p16_g8";
@@ -47,10 +54,19 @@ pub mod names {
     pub const SPEEDUP_DECODE: &str = "speedup_decode_cached_d512";
     pub const SPEEDUP_PREFILL_BATCHED: &str = "speedup_prefill_batched_d512";
     pub const RATIO_DECODE_PAGED: &str = "ratio_decode_paged_occ8_d512";
+    /// Packed-kernel min-time throughput over the dequant-f32 kernel on
+    /// the same quantized weight (≥ 0.9 floor: executing off the bits must
+    /// not cost more than 10% even on the scalar build).
+    pub const RATIO_MATMUL_PACKED: &str = "ratio_matmul_packed_d512";
+    /// Fractional resident weight-memory saving of the packed execution
+    /// tensor vs a dequantized f32 copy (≥ 0.30 floor).
+    pub const WEIGHT_MEM_SAVING_PACKED: &str = "weight_mem_saving_packed_d512";
 
-    pub const ALL: [&str; 19] = [
+    pub const ALL: [&str; 22] = [
         MATMUL_SCALAR,
         MATMUL_BLOCKED,
+        MATMUL_DEQUANT,
+        MATMUL_PACKED,
         MATMUL_T_SCALAR,
         MATMUL_T_BLOCKED,
         QUANT_E4M3_SCALAR,
@@ -58,6 +74,7 @@ pub mod names {
         NVFP4_ROUNDTRIP,
         SW_CLIP,
         FGMP_MATMUL,
+        FGMP_MATMUL_PACKED,
         FORWARD_D512,
         DECODE_RECOMPUTE,
         DECODE_CACHED,
@@ -69,13 +86,15 @@ pub mod names {
         PREFILL_SEQ,
         PREFILL_BATCHED,
     ];
-    pub const ALL_DERIVED: [&str; 6] = [
+    pub const ALL_DERIVED: [&str; 8] = [
         SPEEDUP_MATMUL,
         SPEEDUP_MATMUL_T,
         SPEEDUP_QUANT,
         SPEEDUP_DECODE,
         SPEEDUP_PREFILL_BATCHED,
         RATIO_DECODE_PAGED,
+        RATIO_MATMUL_PACKED,
+        WEIGHT_MEM_SAVING_PACKED,
     ];
 }
 
@@ -94,6 +113,25 @@ fn pair(suite: &mut BenchSuite, key: &str, scalar: BenchResult, fast: BenchResul
     suite.push(scalar);
     suite.push(fast);
     suite.derive(key, s);
+}
+
+/// Quantize a dense `(K, N)` weight to the paper's 30% FP8 / 70% NVFP4
+/// block mix and return its k-panelized execution tensor plus the
+/// dequantized f32 copy (the packed-vs-dequant bench inputs).
+fn quantized_panels(w: &[f32], k: usize, n: usize) -> (PackedPanels, Vec<f32>) {
+    let kb = k / BLOCK;
+    let mut data_t = vec![0.0f32; k * n];
+    for ki in 0..k {
+        for ni in 0..n {
+            data_t[ni * k + ki] = w[ki * n + ni];
+        }
+    }
+    let prec: Vec<Precision> =
+        (0..n * kb).map(|i| if i % 10 < 3 { Precision::Fp8 } else { Precision::Fp4 }).collect();
+    let t = FgmpTensor::pack(&[n, k], &data_t, &prec, None);
+    let panels = PackedPanels::from_tensor(&t, kernels::NR);
+    let deq = panels.unpack_kn();
+    (panels, deq)
 }
 
 /// Blocked-vs-scalar kernel comparisons at the d_model=512 shape class:
@@ -115,6 +153,28 @@ pub fn kernel_benches(suite: &mut BenchSuite, budget: Duration) {
         kernels::matmul(black_box(&x), &w, m, k, n)
     });
     pair(suite, names::SPEEDUP_MATMUL, scalar, fast);
+
+    // Packed vs dequant at the same shape: quantize the weight to the
+    // paper's 30% FP8 / 70% NVFP4 mix, then multiply (a) the blocked f32
+    // kernel over the dequantized copy — yesterday's execution path — vs
+    // (b) the packed kernel decoding the same bits in-register. The weight
+    // -memory saving of the packed resident form is recorded alongside.
+    let (panels, deq) = quantized_panels(&w, k, n);
+    let dequant = bench(names::MATMUL_DEQUANT, Some(macs), budget, || {
+        kernels::matmul(black_box(&x), &deq, m, k, n)
+    });
+    let packed = bench(names::MATMUL_PACKED, Some(macs), budget, || {
+        kernels::matmul_packed(black_box(&x), &panels, m)
+    });
+    pair(suite, names::RATIO_MATMUL_PACKED, dequant, packed);
+    let saving = 1.0 - panels.resident_bytes() as f64 / panels.f32_equiv_bytes() as f64;
+    println!(
+        "  -> {} {saving:.3} ({} B packed vs {} B f32)",
+        names::WEIGHT_MEM_SAVING_PACKED,
+        panels.resident_bytes(),
+        panels.f32_equiv_bytes()
+    );
+    suite.derive(names::WEIGHT_MEM_SAVING_PACKED, saving);
 
     // Transposed matmul (the tied LM head).
     let (tm, tk, tn) = (256usize, 512usize, 256usize);
@@ -168,15 +228,24 @@ pub fn pipeline_benches(suite: &mut BenchSuite, budget: Duration) {
     let x = rng.normal_vec(m * k, 1.0);
     let w = rng.normal_vec(k * n, 0.05);
     let cw = vec![1.0f32; k];
+    let scratch = MatmulScratch::new();
     let r = bench(names::FGMP_MATMUL, Some((m * k * n) as u64), budget, || {
-        fgmp_matmul(black_box(&x), &w, m, k, n, &cw, 0.5)
+        fgmp_matmul(black_box(&x), &w, m, k, n, &cw, 0.5, &scratch)
+    });
+    keep(suite, r);
+
+    // The same datapath off the packed bits (PPU + in-register decode).
+    let (panels, _) = quantized_panels(&w, k, n);
+    let r = bench(names::FGMP_MATMUL_PACKED, Some((m * k * n) as u64), budget, || {
+        fgmp_matmul_packed(black_box(&x), &panels, m, &cw, 0.5, &scratch)
     });
     keep(suite, r);
 
     // The d512 preset architecture — one definition, shared with synth.
     let (arch, params) = d512_model(&mut rng);
-    let pm: std::collections::HashMap<&str, &[f32]> =
-        params.iter().map(|(nm, v)| (nm.as_str(), v.as_slice())).collect();
+    let pm = Params::from_dense(
+        params.iter().map(|(nm, v)| (nm.as_str(), v.as_slice())).collect(),
+    );
     let (b, s) = (1usize, 32usize);
     let tokens: Vec<i32> = (0..b * s).map(|i| (i % arch.vocab) as i32).collect();
     let r = bench(names::FORWARD_D512, Some((b * s) as u64), budget, || {
@@ -212,8 +281,9 @@ fn d512_model(rng: &mut Rng) -> (ModelArch, Vec<(String, Vec<f32>)>) {
 pub fn decode_benches(suite: &mut BenchSuite, budget: Duration) {
     let mut rng = Rng::new(44);
     let (arch, params) = d512_model(&mut rng);
-    let pm: std::collections::HashMap<&str, &[f32]> =
-        params.iter().map(|(nm, v)| (nm.as_str(), v.as_slice())).collect();
+    let pm = Params::from_dense(
+        params.iter().map(|(nm, v)| (nm.as_str(), v.as_slice())).collect(),
+    );
 
     let prompt_len = 16usize;
     let gen = 8usize;
@@ -278,7 +348,7 @@ fn paged_benches(
     suite: &mut BenchSuite,
     budget: Duration,
     arch: &ModelArch,
-    pm: &std::collections::HashMap<&str, &[f32]>,
+    pm: &Params<'_>,
     prompt: &[i32],
     occ8_contiguous: Option<crate::util::bench::BenchResult>,
 ) {
@@ -386,10 +456,17 @@ mod tests {
         }
         // The acceptance floors themselves: the blocked matmul, the
         // cached-decode-vs-recompute speedup, the batched-prefill speedup,
-        // and the paged-decode ratio must all be gated.
+        // the paged-decode ratio, and the packed-execution floors
+        // (throughput parity + resident weight-memory saving) must all be
+        // gated.
         assert!(baseline.derived.get(names::SPEEDUP_MATMUL).is_some_and(|&v| v >= 2.0));
         assert!(baseline.derived.get(names::SPEEDUP_DECODE).is_some_and(|&v| v >= 1.0));
         assert!(baseline.derived.get(names::SPEEDUP_PREFILL_BATCHED).is_some_and(|&v| v >= 0.9));
         assert!(baseline.derived.get(names::RATIO_DECODE_PAGED).is_some_and(|&v| v >= 0.5));
+        assert!(baseline.derived.get(names::RATIO_MATMUL_PACKED).is_some_and(|&v| v >= 0.9));
+        assert!(baseline
+            .derived
+            .get(names::WEIGHT_MEM_SAVING_PACKED)
+            .is_some_and(|&v| v >= 0.30));
     }
 }

@@ -54,23 +54,25 @@ impl Evaluator {
     }
 
     /// The non-tokens argument tail of the fwd_quant graph for a config:
-    /// params (quantized weights substituted), act weightings, thresholds.
+    /// params (quantized weights substituted **in packed execution form**),
+    /// act weightings, thresholds. The native backend runs the packed bits
+    /// directly; PJRT materializes them at literal conversion.
     pub fn quant_arg_tail(&self, cfg: &QuantConfig, qm: &QuantizedModel) -> Result<Vec<ArgValue>> {
         let m = &self.arts.manifest;
         let mut args = Vec::with_capacity(m.param_names.len() + m.num_linears + 1);
         // Parameters in manifest order, with each linear's weight replaced
-        // by its FGMP round-trip.
+        // by its packed FGMP tensor (Arc-shared — tail clones stay cheap).
         for name in &m.param_names {
             let shape = m.param_shapes[name].clone();
-            let data = if let Some(qlin) = name
+            if let Some(qlin) = name
                 .strip_suffix(".w")
                 .and_then(|base| qm.linears.iter().find(|l| l.name == base))
             {
-                qlin.dequant.clone()
+                args.push(ArgValue::PackedW { shape, panels: qlin.panels.clone() });
             } else {
-                self.arts.weights.get(name)?.as_f32()?.to_vec()
-            };
-            args.push(ArgValue::F32 { shape, data });
+                let data = self.arts.weights.get(name)?.as_f32()?.to_vec();
+                args.push(ArgValue::F32 { shape, data });
+            }
         }
         // Per-linear activation channel weightings for the PPU score.
         for spec in &m.linears {
@@ -97,20 +99,24 @@ impl Evaluator {
     }
 
     /// fwd_ref tail with FGMP-quantized weights substituted: *weight-only*
-    /// quantization with BF16 activations (paper Table 1 regime).
+    /// quantization with BF16 activations (paper Table 1 regime). Weights
+    /// travel packed here too — the unquantized graph multiplies them the
+    /// same way, just without the PPU on the activation side.
     pub fn ref_arg_tail_with(&self, qm: &QuantizedModel) -> Result<Vec<ArgValue>> {
         let m = &self.arts.manifest;
         m.param_names
             .iter()
             .map(|name| {
-                let data = if let Some(qlin) = name
+                if let Some(qlin) = name
                     .strip_suffix(".w")
                     .and_then(|base| qm.linears.iter().find(|l| l.name == base))
                 {
-                    qlin.dequant.clone()
-                } else {
-                    self.arts.weights.get(name)?.as_f32()?.to_vec()
-                };
+                    return Ok(ArgValue::PackedW {
+                        shape: m.param_shapes[name].clone(),
+                        panels: qlin.panels.clone(),
+                    });
+                }
+                let data = self.arts.weights.get(name)?.as_f32()?.to_vec();
                 Ok(ArgValue::F32 { shape: m.param_shapes[name].clone(), data })
             })
             .collect()

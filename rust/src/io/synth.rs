@@ -456,10 +456,9 @@ pub fn build_model(artifacts: &Path, cfg: &SynthConfig) -> Result<()> {
     let corpus = TensorFile::load(artifacts.join("corpus.fgtn"))?;
     let train = corpus.get("train")?.as_i32()?;
     let pnames = arch.param_names();
-    let mut params: std::collections::HashMap<&str, &[f32]> =
-        std::collections::HashMap::with_capacity(pnames.len());
+    let mut params = crate::model::forward::Params::new();
     for n in &pnames {
-        params.insert(n.as_str(), weights.get(n)?.as_f32()?);
+        params.insert_dense(n.as_str(), weights.get(n)?.as_f32()?);
     }
     let mut calib_rng = Rng::new(cfg.seed ^ 0xCA11B);
     let (b, s) = (cfg.batch, cfg.seq);

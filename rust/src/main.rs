@@ -201,6 +201,12 @@ fn main() -> Result<()> {
             println!("packed bits/w : {:.3}", fgmpm.bits_per_element());
             println!("memory        : {:.3} MiB (FP8 baseline {:.3} MiB, save {:.1}%)",
                      fgmpm.total_mib(), fp8m.total_mib(), savings * 100.0);
+            let wm = qm.weight_memory();
+            println!("resident exec : {:.3} MiB packed vs {:.3} MiB f32 ({:.1}% smaller — the \
+                      kernels run off these bytes)",
+                     wm.packed_bytes as f64 / (1 << 20) as f64,
+                     wm.f32_equiv_bytes as f64 / (1 << 20) as f64,
+                     wm.saving_vs_f32() * 100.0);
             println!("quantize time : {:?}", t0.elapsed());
             for l in qm.linears.iter().take(4) {
                 println!("  {:<16} fp8 {:>6.2}%", l.name, l.packed.fp8_fraction() * 100.0);
@@ -466,6 +472,10 @@ fn cmd_serve(cli: &Cli, fp4: f64, requests: usize) -> Result<()> {
     println!("kv: {} cache, {:.0} B/token ({:.0} B/token at fp16)",
              kv_precision.label(), kv_bytes_per_tok,
              kv_cache_bits(&kv_dims, 1, 16.0) as f64 / 8.0);
+    let wm = qm.weight_memory();
+    println!("exec weights: {:.3} MiB packed in-engine ({} linears) vs {:.3} MiB f32 — {:.1}% smaller",
+             wm.packed_bytes as f64 / (1 << 20) as f64, wm.linears,
+             wm.f32_equiv_bytes as f64 / (1 << 20) as f64, wm.saving_vs_f32() * 100.0);
     if snap.kv_pool_pages > 0 {
         println!("kv pool: {} pages  peak {}  occupancy {:.0}%  page fill {:.0}%  deferred {}",
                  snap.kv_pool_pages, snap.kv_pool_peak_pages,
@@ -539,6 +549,16 @@ fn cmd_generate(cli: &Cli) -> Result<()> {
         if engine.is_cached() { "cached" } else { "windowed-recompute" },
         engine.kv_precision().label(),
     );
+    let wm = engine.weight_memory();
+    if wm.linears > 0 {
+        println!(
+            "weights: {:.3} MiB resident packed ({} linears) vs {:.3} MiB f32 — {:.1}% smaller",
+            wm.packed_bytes as f64 / (1 << 20) as f64,
+            wm.linears,
+            wm.f32_equiv_bytes as f64 / (1 << 20) as f64,
+            wm.saving_vs_f32() * 100.0
+        );
+    }
     for (i, p) in produced.iter().enumerate() {
         let shown: Vec<String> = p[..p.len().min(n_tokens)].iter().map(|t| t.to_string()).collect();
         println!("  s{i} [{}...] -> {}", prompts[i][..4.min(prompts[i].len())]

@@ -19,6 +19,8 @@ use std::collections::HashMap;
 
 use crate::io::manifest::{LinearSpec, Manifest};
 use crate::model::kv::{KvState, LayerKv};
+use crate::quant::PackedPanels;
+use crate::util::kernels::MatmulScratch;
 use crate::util::{kernels, par_map, Json};
 use crate::{Result, BLOCK};
 
@@ -263,6 +265,68 @@ fn spec(name: String, layer: usize, kind: &str, k_in: usize, n_out: usize) -> Li
     LinearSpec { name, layer, kind: kind.to_string(), k_in, n_out }
 }
 
+/// One linear layer's weight in execution form.
+#[derive(Clone, Copy)]
+pub enum WeightView<'a> {
+    /// Row-major `(K, N)` f32 — already-round-tripped (or raw) values.
+    Dense(&'a [f32]),
+    /// The k-panelized FGMP bits; the kernels decode blocks in-register.
+    Packed(&'a PackedPanels),
+}
+
+/// The parameter set a forward pass executes against: dense f32 buffers
+/// (embeddings, norms, unquantized weights) plus, per linear weight, an
+/// optional **packed** FGMP tensor that takes precedence — the execution
+/// format of the quantized datapath. Borrowed views, like the old
+/// `HashMap<&str, &[f32]>` this replaces.
+#[derive(Default)]
+pub struct Params<'a> {
+    dense: HashMap<&'a str, &'a [f32]>,
+    packed: HashMap<&'a str, &'a PackedPanels>,
+}
+
+impl<'a> Params<'a> {
+    pub fn new() -> Params<'a> {
+        Params::default()
+    }
+
+    /// Wrap a plain name → f32 buffer map (the all-dense legacy layout).
+    pub fn from_dense(dense: HashMap<&'a str, &'a [f32]>) -> Params<'a> {
+        Params { dense, packed: HashMap::new() }
+    }
+
+    pub fn insert_dense(&mut self, name: &'a str, data: &'a [f32]) {
+        self.dense.insert(name, data);
+    }
+
+    pub fn insert_packed(&mut self, name: &'a str, w: &'a PackedPanels) {
+        self.packed.insert(name, w);
+    }
+
+    /// A parameter that must be dense (embeddings, norms, biases).
+    pub fn dense(&self, name: &str) -> Result<&'a [f32]> {
+        if let Some(&d) = self.dense.get(name) {
+            return Ok(d);
+        }
+        if self.packed.contains_key(name) {
+            anyhow::bail!("parameter '{name}' is packed; this consumer needs dense f32");
+        }
+        anyhow::bail!("missing parameter '{name}'")
+    }
+
+    /// A linear weight in whichever execution form is loaded (packed wins
+    /// when both are present).
+    pub fn weight(&self, name: &str) -> Result<WeightView<'a>> {
+        if let Some(&p) = self.packed.get(name) {
+            return Ok(WeightView::Packed(p));
+        }
+        if let Some(&d) = self.dense.get(name) {
+            return Ok(WeightView::Dense(d));
+        }
+        anyhow::bail!("missing parameter '{name}'")
+    }
+}
+
 /// Per-linear activation-quantization inputs (the fwd_quant graph tail).
 pub struct QuantInputs<'a> {
     /// Per-linear per-input-channel weighting, each of length `k_in`.
@@ -298,6 +362,10 @@ pub fn matmul_transposed(x: &[f32], wt: &[f32], m: usize, k: usize, n: usize) ->
 /// the native equivalent of `ref.fgmp_matmul_ref`. Quantization and the
 /// multiply both run block-structured: the PPU kernel round-trips whole
 /// 16-blocks at a time and the product reuses the blocked matmul tiles.
+/// `scratch` is a caller-held [`MatmulScratch`] pool the per-tile
+/// quantize/output buffers are checked out of — thread one through a whole
+/// forward pass so the 4·n_layers linears reuse the same allocations.
+#[allow(clippy::too_many_arguments)]
 pub fn fgmp_matmul(
     x: &[f32],
     w: &[f32],
@@ -306,31 +374,81 @@ pub fn fgmp_matmul(
     n: usize,
     chan_weight: &[f32],
     threshold: f32,
+    scratch: &MatmulScratch,
 ) -> (Vec<f32>, f32) {
     assert_eq!(x.len(), m * k);
     assert_eq!(w.len(), k * n);
     assert_eq!(chan_weight.len(), k);
     assert_eq!(k % BLOCK, 0);
+    fgmp_tiles(x, m, k, n, chan_weight, threshold, scratch, |xq, rows, tile| {
+        kernels::matmul_rows(xq, w, rows, k, n, tile)
+    })
+}
+
+/// [`fgmp_matmul`] straight off the packed bits: the PPU quantizes the new
+/// activation rows exactly as the dense variant does, and the product runs
+/// [`kernels::matmul_rows_packed`] — FGMP blocks decoded in-register inside
+/// the tile loop, no resident dequantized weight copy anywhere. Bit-exact
+/// against [`fgmp_matmul`] over [`PackedPanels::unpack_kn`].
+pub fn fgmp_matmul_packed(
+    x: &[f32],
+    w: &PackedPanels,
+    m: usize,
+    chan_weight: &[f32],
+    threshold: f32,
+    scratch: &MatmulScratch,
+) -> (Vec<f32>, f32) {
+    let (k, n) = (w.k, w.n);
+    assert_eq!(x.len(), m * k);
+    assert_eq!(chan_weight.len(), k);
+    assert_eq!(k % BLOCK, 0);
+    fgmp_tiles(x, m, k, n, chan_weight, threshold, scratch, |xq, rows, tile| {
+        kernels::matmul_rows_packed(xq, w, rows, tile)
+    })
+}
+
+/// Shared tile loop of the FGMP matmuls: PPU-quantize each MR-row tile of
+/// `x` into pooled scratch, hand it to `mul` (dense or packed row kernel),
+/// and collect tiles + FP8 block counts. Per-tile buffers come from (and
+/// return to) `scratch`, so back-to-back calls stop reallocating.
+#[allow(clippy::too_many_arguments)]
+fn fgmp_tiles(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    chan_weight: &[f32],
+    threshold: f32,
+    scratch: &MatmulScratch,
+    mul: impl Fn(&[f32], usize, &mut [f32]) + Sync,
+) -> (Vec<f32>, f32) {
     let blocks_per_row = k / BLOCK;
     let tiles: Vec<usize> = (0..m.div_ceil(kernels::MR)).collect();
     let out = par_map(&tiles, |&t| {
         let r0 = t * kernels::MR;
         let rows = kernels::MR.min(m - r0);
-        let mut xq = vec![0.0f32; rows * k];
+        let mut xq = scratch.take();
+        kernels::scratch_resize(&mut xq, rows * k);
         let mut n_fp8 = 0usize;
         for r in 0..rows {
             let xr = &x[(r0 + r) * k..(r0 + r + 1) * k];
             let xq_row = &mut xq[r * k..(r + 1) * k];
             n_fp8 += kernels::ppu_quantize_row(xr, chan_weight, threshold, xq_row);
         }
-        let mut tile = vec![0.0f32; rows * n];
-        kernels::matmul_rows(&xq, w, rows, k, n, &mut tile);
+        let mut tile = scratch.take();
+        kernels::scratch_resize(&mut tile, rows * n);
+        mul(&xq, rows, &mut tile);
+        // The quantize buffer is dead the moment the multiply returns —
+        // hand it back immediately so in-flight copies stay bounded by
+        // worker concurrency, not by the tile count.
+        scratch.put(xq);
         (tile, n_fp8)
     });
     let total_fp8: usize = out.iter().map(|(_, f)| *f).sum();
     let mut flat = Vec::with_capacity(m * n);
     for (tile, _) in out {
         flat.extend_from_slice(&tile);
+        scratch.put(tile);
     }
     let frac = total_fp8 as f32 / (m * blocks_per_row).max(1) as f32;
     (flat, frac)
@@ -686,48 +804,73 @@ fn attention_step(
 }
 
 /// One linear application in execution order: optional calibration capture,
-/// then the plain or FGMP-quantized matmul (`li` indexes the inventory).
+/// then the plain or FGMP-quantized matmul (`li` indexes the inventory),
+/// off whichever weight form is loaded — dense f32 or the packed bits.
 #[allow(clippy::too_many_arguments)]
 fn apply_linear(
     linears: &[LinearSpec],
-    params: &HashMap<&str, &[f32]>,
+    params: &Params<'_>,
     quant: Option<&QuantInputs<'_>>,
     h: &[f32],
     rows: usize,
     li: usize,
     fracs: &mut [f32],
     capture: &mut Option<&mut Vec<Vec<f32>>>,
+    scratch: &MatmulScratch,
 ) -> Result<Vec<f32>> {
     let spec = &linears[li];
     let wname = format!("{}.w", spec.name);
-    let w = params
-        .get(wname.as_str())
-        .copied()
-        .ok_or_else(|| anyhow::anyhow!("missing parameter '{wname}'"))?;
-    anyhow::ensure!(
-        w.len() == spec.k_in * spec.n_out,
-        "weight {} size {} != {}x{}",
-        spec.name,
-        w.len(),
-        spec.k_in,
-        spec.n_out
-    );
+    let wview = params.weight(&wname)?;
+    match wview {
+        WeightView::Dense(w) => anyhow::ensure!(
+            w.len() == spec.k_in * spec.n_out,
+            "weight {} size {} != {}x{}",
+            spec.name,
+            w.len(),
+            spec.k_in,
+            spec.n_out
+        ),
+        WeightView::Packed(p) => anyhow::ensure!(
+            p.k == spec.k_in && p.n == spec.n_out,
+            "packed weight {} shape ({},{}) != ({},{})",
+            spec.name,
+            p.k,
+            p.n,
+            spec.k_in,
+            spec.n_out
+        ),
+    }
     if let Some(cap) = capture.as_mut() {
         cap.push(h.to_vec());
     }
-    match quant {
-        None => Ok(matmul(h, w, rows, spec.k_in, spec.n_out)),
-        Some(q) => {
-            anyhow::ensure!(
-                q.act_weights[li].len() == spec.k_in,
-                "act weighting {} length",
-                spec.name
-            );
-            let (y, frac) =
-                fgmp_matmul(h, w, rows, spec.k_in, spec.n_out, q.act_weights[li], q.thresholds[li]);
-            fracs[li] = frac;
-            Ok(y)
-        }
+    if let Some(q) = quant {
+        anyhow::ensure!(
+            q.act_weights[li].len() == spec.k_in,
+            "act weighting {} length",
+            spec.name
+        );
+        let (y, frac) = match wview {
+            WeightView::Dense(w) => fgmp_matmul(
+                h,
+                w,
+                rows,
+                spec.k_in,
+                spec.n_out,
+                q.act_weights[li],
+                q.thresholds[li],
+                scratch,
+            ),
+            WeightView::Packed(p) => {
+                fgmp_matmul_packed(h, p, rows, q.act_weights[li], q.thresholds[li], scratch)
+            }
+        };
+        fracs[li] = frac;
+        Ok(y)
+    } else {
+        Ok(match wview {
+            WeightView::Dense(w) => matmul(h, w, rows, spec.k_in, spec.n_out),
+            WeightView::Packed(p) => kernels::matmul_packed(h, p, rows),
+        })
     }
 }
 
@@ -738,7 +881,7 @@ fn apply_linear(
 /// per batch row (the serving/generation graph).
 pub fn forward(
     arch: &ModelArch,
-    params: &HashMap<&str, &[f32]>,
+    params: &Params<'_>,
     tokens: &[i32],
     b: usize,
     s: usize,
@@ -758,6 +901,7 @@ pub fn forward(
     let positions: Vec<usize> = (0..m).map(|i| i % s).collect();
     let mut x = embed_rows(arch, params, tokens, &positions)?;
     let mut li = 0usize;
+    let scratch = MatmulScratch::new();
 
     for l in 0..arch.n_layers {
         block_forward(
@@ -771,6 +915,7 @@ pub fn forward(
             &mut li,
             &mut fracs,
             &mut capture,
+            &scratch,
             |qkv| attention(arch, qkv, b, s),
         )?;
     }
@@ -789,15 +934,12 @@ pub fn forward(
 /// positional rows `positions[i]` when the arch uses them.
 fn embed_rows(
     arch: &ModelArch,
-    params: &HashMap<&str, &[f32]>,
+    params: &Params<'_>,
     tokens: &[i32],
     positions: &[usize],
 ) -> Result<Vec<f32>> {
     let d = arch.d_model;
-    let embed = params
-        .get("embed")
-        .copied()
-        .ok_or_else(|| anyhow::anyhow!("missing parameter 'embed'"))?;
+    let embed = params.dense("embed")?;
     anyhow::ensure!(embed.len() == arch.vocab * d, "embed size mismatch");
     let mut x = vec![0.0f32; tokens.len() * d];
     for (i, &t) in tokens.iter().enumerate() {
@@ -806,10 +948,7 @@ fn embed_rows(
         x[i * d..(i + 1) * d].copy_from_slice(&embed[t * d..(t + 1) * d]);
     }
     if arch.pos == PosKind::Learned {
-        let pe = params
-            .get("pos_embed")
-            .copied()
-            .ok_or_else(|| anyhow::anyhow!("missing parameter 'pos_embed'"))?;
+        let pe = params.dense("pos_embed")?;
         for (i, &pos) in positions.iter().enumerate() {
             anyhow::ensure!(pe.len() >= (pos + 1) * d, "pos_embed shorter than position {pos}");
             for (a, &p) in x[i * d..(i + 1) * d].iter_mut().zip(&pe[pos * d..(pos + 1) * d]) {
@@ -830,7 +969,7 @@ fn embed_rows(
 fn block_forward(
     arch: &ModelArch,
     linears: &[LinearSpec],
-    params: &HashMap<&str, &[f32]>,
+    params: &Params<'_>,
     quant: Option<&QuantInputs<'_>>,
     l: usize,
     x: &mut [f32],
@@ -838,42 +977,37 @@ fn block_forward(
     li: &mut usize,
     fracs: &mut [f32],
     capture: &mut Option<&mut Vec<Vec<f32>>>,
+    scratch: &MatmulScratch,
     attn: impl FnOnce(&[f32]) -> Vec<f32>,
 ) -> Result<()> {
     let d = arch.d_model;
-    let get = |name: &str| -> Result<&[f32]> {
-        params
-            .get(name)
-            .copied()
-            .ok_or_else(|| anyhow::anyhow!("missing parameter '{name}'"))
-    };
-    let g1 = get(&format!("blk{l}.norm1"))?;
+    let g1 = params.dense(&format!("blk{l}.norm1"))?;
     let b1 = if arch.norm == NormKind::LayerNorm {
-        Some(get(&format!("blk{l}.norm1.b"))?)
+        Some(params.dense(&format!("blk{l}.norm1.b"))?)
     } else {
         None
     };
     let h = norm_rows(arch.norm, x, d, g1, b1);
-    let qkv = apply_linear(linears, params, quant, &h, rows, *li, fracs, capture)?;
+    let qkv = apply_linear(linears, params, quant, &h, rows, *li, fracs, capture, scratch)?;
     *li += 1;
     let mixed = attn(&qkv);
-    let o = apply_linear(linears, params, quant, &mixed, rows, *li, fracs, capture)?;
+    let o = apply_linear(linears, params, quant, &mixed, rows, *li, fracs, capture, scratch)?;
     *li += 1;
     for (a, &v) in x.iter_mut().zip(&o) {
         *a += v;
     }
 
-    let g2 = get(&format!("blk{l}.norm2"))?;
+    let g2 = params.dense(&format!("blk{l}.norm2"))?;
     let b2 = if arch.norm == NormKind::LayerNorm {
-        Some(get(&format!("blk{l}.norm2.b"))?)
+        Some(params.dense(&format!("blk{l}.norm2.b"))?)
     } else {
         None
     };
     let h = norm_rows(arch.norm, x, d, g2, b2);
-    let f1 = apply_linear(linears, params, quant, &h, rows, *li, fracs, capture)?;
+    let f1 = apply_linear(linears, params, quant, &h, rows, *li, fracs, capture, scratch)?;
     *li += 1;
     let act = mlp_act(arch.act, &f1, rows, arch.fc1_out(), arch.d_ff);
-    let f2 = apply_linear(linears, params, quant, &act, rows, *li, fracs, capture)?;
+    let f2 = apply_linear(linears, params, quant, &act, rows, *li, fracs, capture, scratch)?;
     *li += 1;
     for (a, &v) in x.iter_mut().zip(&f2) {
         *a += v;
@@ -885,20 +1019,14 @@ fn block_forward(
 /// the row indices in `take` (e.g. the last position for serving).
 fn lm_head(
     arch: &ModelArch,
-    params: &HashMap<&str, &[f32]>,
+    params: &Params<'_>,
     x: &[f32],
     take: &[usize],
 ) -> Result<Vec<f32>> {
     let d = arch.d_model;
-    let get = |name: &str| -> Result<&[f32]> {
-        params
-            .get(name)
-            .copied()
-            .ok_or_else(|| anyhow::anyhow!("missing parameter '{name}'"))
-    };
-    let gf = get("final_norm")?;
+    let gf = params.dense("final_norm")?;
     let bf = if arch.norm == NormKind::LayerNorm {
-        Some(get("final_norm.b")?)
+        Some(params.dense("final_norm.b")?)
     } else {
         None
     };
@@ -907,7 +1035,7 @@ fn lm_head(
     for (i, &r) in take.iter().enumerate() {
         sel[i * d..(i + 1) * d].copy_from_slice(&xn[r * d..(r + 1) * d]);
     }
-    let embed = get("embed")?;
+    let embed = params.dense("embed")?;
     Ok(matmul_transposed(&sel, embed, take.len(), d, arch.vocab))
 }
 
@@ -920,7 +1048,7 @@ fn lm_head(
 /// (tolerance documented in `tests/decode_props.rs`).
 pub fn forward_prefill(
     arch: &ModelArch,
-    params: &HashMap<&str, &[f32]>,
+    params: &Params<'_>,
     tokens: &[i32],
     quant: Option<&QuantInputs<'_>>,
     kv: &mut KvState,
@@ -944,6 +1072,7 @@ pub fn forward_prefill(
     let mut x = embed_rows(arch, params, tokens, &positions)?;
     let mut li = 0usize;
     let mut scratch = (Vec::new(), Vec::new());
+    let mm_scratch = MatmulScratch::new();
     for (l, lkv) in kv.layers.iter_mut().enumerate() {
         block_forward(
             arch,
@@ -956,6 +1085,7 @@ pub fn forward_prefill(
             &mut li,
             &mut fracs,
             &mut None,
+            &mm_scratch,
             |qkv| attention_prefill(arch, qkv, s, lkv, &mut scratch),
         )?;
     }
@@ -982,7 +1112,7 @@ pub fn forward_prefill(
 /// [`KvPoolExhausted`]: crate::model::kv::KvPoolExhausted
 pub fn forward_prefill_batch(
     arch: &ModelArch,
-    params: &HashMap<&str, &[f32]>,
+    params: &Params<'_>,
     prompts: &[&[i32]],
     quant: Option<&QuantInputs<'_>>,
     kvs: &mut [&mut KvState],
@@ -1030,6 +1160,7 @@ pub fn forward_prefill_batch(
     let mut x = embed_rows(arch, params, &tokens, &positions)?;
     let mut li = 0usize;
     let mut scratch = (Vec::new(), Vec::new());
+    let mm_scratch = MatmulScratch::new();
     let d = arch.d_model;
     for l in 0..arch.n_layers {
         let mut caches: Vec<&mut LayerKv> = kvs.iter_mut().map(|kv| &mut kv.layers[l]).collect();
@@ -1044,6 +1175,7 @@ pub fn forward_prefill_batch(
             &mut li,
             &mut fracs,
             &mut None,
+            &mm_scratch,
             |qkv| {
                 let mut out = vec![0.0f32; m * d];
                 for (i, lkv) in caches.iter_mut().enumerate() {
@@ -1076,7 +1208,7 @@ pub fn forward_prefill_batch(
 /// reads each session's own cache. Returns the next-token logits `(n, V)`.
 pub fn forward_step_batch(
     arch: &ModelArch,
-    params: &HashMap<&str, &[f32]>,
+    params: &Params<'_>,
     tokens: &[i32],
     kvs: &mut [&mut KvState],
     quant: Option<&QuantInputs<'_>>,
@@ -1109,8 +1241,10 @@ pub fn forward_step_batch(
     let mut fracs = vec![0.0f32; if quant.is_some() { linears.len() } else { 0 }];
     let mut x = embed_rows(arch, params, tokens, &positions)?;
     let mut li = 0usize;
-    // One materialize-scratch set for the whole step, reused across layers.
+    // One materialize-scratch set for the whole step, reused across layers
+    // (and one matmul scratch pool, likewise).
     let mut scratch = KvScratch::for_sessions(n);
+    let mm_scratch = MatmulScratch::new();
     for l in 0..arch.n_layers {
         let mut caches: Vec<&mut LayerKv> = kvs.iter_mut().map(|kv| &mut kv.layers[l]).collect();
         block_forward(
@@ -1124,6 +1258,7 @@ pub fn forward_step_batch(
             &mut li,
             &mut fracs,
             &mut None,
+            &mm_scratch,
             |qkv| attention_step(arch, qkv, &mut caches, &positions, &mut scratch),
         )?;
     }
@@ -1138,7 +1273,7 @@ pub fn forward_step_batch(
 /// Single-session convenience wrapper over [`forward_step_batch`].
 pub fn forward_step(
     arch: &ModelArch,
-    params: &HashMap<&str, &[f32]>,
+    params: &Params<'_>,
     token: i32,
     kv: &mut KvState,
     quant: Option<&QuantInputs<'_>>,
@@ -1218,8 +1353,8 @@ mod tests {
             .collect()
     }
 
-    fn param_map<'a>(params: &'a [(String, Vec<f32>)]) -> HashMap<&'a str, &'a [f32]> {
-        params.iter().map(|(n, v)| (n.as_str(), v.as_slice())).collect()
+    fn param_map(params: &[(String, Vec<f32>)]) -> Params<'_> {
+        Params::from_dense(params.iter().map(|(n, v)| (n.as_str(), v.as_slice())).collect())
     }
 
     #[test]
@@ -1242,15 +1377,16 @@ mod tests {
         let x = rng.normal_vec(m * k, 2.0);
         let w = rng.normal_vec(k * n, 0.2);
         let cw = vec![1.0f32; k];
+        let scratch = MatmulScratch::new();
         // threshold −1: every block FP8 (scores ≥ 0)
-        let (y8, f8) = fgmp_matmul(&x, &w, m, k, n, &cw, -1.0);
+        let (y8, f8) = fgmp_matmul(&x, &w, m, k, n, &cw, -1.0, &scratch);
         assert_eq!(f8, 1.0);
         // matches an e4m3 pre-roundtrip + plain matmul
         let xq: Vec<f32> = x.iter().map(|&v| crate::quant::quant_e4m3(v)).collect();
         let want = matmul(&xq, &w, m, k, n);
         assert_eq!(y8, want);
         // +inf: every block NVFP4
-        let (_, f4) = fgmp_matmul(&x, &w, m, k, n, &cw, f32::INFINITY);
+        let (_, f4) = fgmp_matmul(&x, &w, m, k, n, &cw, f32::INFINITY, &scratch);
         assert_eq!(f4, 0.0);
     }
 

@@ -10,4 +10,4 @@ pub mod weights;
 pub use config::{QuantConfig, RatioSpec};
 pub use forward::{Act, ModelArch, NormKind, PosKind};
 pub use kv::{KvPool, KvPoolExhausted, KvPoolStats, KvPrecision, KvState, PAGE_TOKENS};
-pub use weights::{ModelArtifacts, QuantizedModel};
+pub use weights::{ModelArtifacts, QuantizedModel, WeightMemory};

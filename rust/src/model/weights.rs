@@ -1,12 +1,17 @@
 //! Checkpoint loading and the offline weight-quantization pipeline:
 //! score blocks (policy weighting) → calibrate threshold (global or local)
-//! → assign precisions → SW-Clip the FP4 blocks → pack + dequantize.
+//! → assign precisions → SW-Clip the FP4 blocks → pack + panelize.
 //!
-//! The dequantized values feed the PJRT executable (numerically exactly
-//! what the FGMP datapath would consume); the packed form feeds the memory
+//! The packed bits are the **execution format**: each linear carries its
+//! k-panelized [`PackedPanels`] layout, which the native kernels decode
+//! in-register ([`crate::util::kernels::matmul_rows_packed`]) — no resident
+//! dequantized f32 copy. The PJRT/export path materializes one on demand
+//! via [`QuantizedLinear::dequant`] (numerically exactly what the FGMP
+//! datapath consumes). The storage-format [`FgmpTensor`] feeds the memory
 //! model; the per-layer FP8 fractions feed the energy model.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 
 use crate::hwsim::LayerProfile;
@@ -17,7 +22,8 @@ use crate::policy::{
     assign_tensor, block_impact_scores, threshold_for_fp4_fraction, Assignment, Policy,
     ThresholdMode,
 };
-use crate::quant::{sw_clip_tensor, FgmpTensor};
+use crate::quant::{sw_clip_tensor, FgmpTensor, PackedPanels};
+use crate::util::kernels;
 use crate::Result;
 
 /// Everything `make artifacts` produced for one model.
@@ -101,13 +107,43 @@ fn ensure_shape(shape: &[usize], nl: usize) -> Result<()> {
     Ok(())
 }
 
-/// One quantized linear layer.
+/// One quantized linear layer. Holds only packed forms — the storage-order
+/// tensor for footprint accounting and the k-panelized execution layout
+/// the native kernels run on. No dequantized f32 copy stays resident.
 pub struct QuantizedLinear {
     pub name: String,
     pub packed: FgmpTensor,
-    /// Dequantized values (row-major K×N) for the PJRT executable.
-    pub dequant: Vec<f32>,
+    /// The execution format: the same bits panel-reordered for the blocked
+    /// matmul (shared behind `Arc` so argument tails clone cheaply).
+    pub panels: Arc<PackedPanels>,
     pub assignment: Assignment,
+}
+
+impl QuantizedLinear {
+    /// On-demand dequantized values (row-major K×N) for the PJRT/export
+    /// path — bit-identical to what the packed kernels decode in-register.
+    pub fn dequant(&self) -> Vec<f32> {
+        self.panels.unpack_kn()
+    }
+}
+
+/// Resident weight-memory accounting across a model's packed linears.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WeightMemory {
+    /// Bytes the packed execution tensors keep resident (payload + scales
+    /// + meta bits + panel tables).
+    pub packed_bytes: usize,
+    /// Bytes the same linears would occupy as dequantized f32.
+    pub f32_equiv_bytes: usize,
+    /// Number of linears counted.
+    pub linears: usize,
+}
+
+impl WeightMemory {
+    /// Fractional saving vs a resident f32 copy (0.30 = 30% smaller).
+    pub fn saving_vs_f32(&self) -> f64 {
+        1.0 - self.packed_bytes as f64 / (self.f32_equiv_bytes as f64).max(1.0)
+    }
 }
 
 /// A fully weight-quantized model.
@@ -225,18 +261,29 @@ impl QuantizedModel {
                     &assignment.precision,
                     clip_scales.as_deref(),
                 );
-                // Dequantize and transpose back to (K, N) for the executor.
-                let deq_t = packed.unpack();
-                let mut dequant = vec![0.0f32; deq_t.len()];
-                for ni in 0..j.n {
-                    for ki in 0..j.k {
-                        dequant[ki * j.n + ni] = deq_t[ni * j.k + ki];
-                    }
-                }
-                QuantizedLinear { name: j.name.clone(), packed, dequant, assignment }
+                // Panel-reorder the same bits into the execution layout —
+                // the transpose to (K, N) happens in-register at use.
+                let panels = Arc::new(PackedPanels::from_tensor(&packed, kernels::NR));
+                QuantizedLinear { name: j.name.clone(), packed, panels, assignment }
             });
 
         Ok(QuantizedModel { config: cfg.clone(), linears, thresholds })
+    }
+
+    /// Resident weight bytes of the packed **execution** tensors vs their
+    /// f32 equivalents — the number the engine/serve reports print (an
+    /// engine built from the argument tail holds exactly these bytes,
+    /// `Arc`-shared). The quantize/report CLIs additionally keep the
+    /// storage-order [`FgmpTensor`] alive for the Fig-8 footprint model
+    /// and the precision maps; that copy is the same packed bits and is
+    /// accounted by `footprint_bits`, not here.
+    pub fn weight_memory(&self) -> WeightMemory {
+        self.linears.iter().fold(WeightMemory::default(), |mut m, l| {
+            m.packed_bytes += l.panels.resident_bytes();
+            m.f32_equiv_bytes += l.panels.f32_equiv_bytes();
+            m.linears += 1;
+            m
+        })
     }
 
     /// Overall FP8 block fraction across all weight tensors.

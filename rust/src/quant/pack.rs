@@ -123,6 +123,26 @@ impl FgmpTensor {
         out
     }
 
+    /// Payload byte offset and FP4-scale index of every block, by block
+    /// index — the random-access tables the panelizer walks with (the
+    /// payload stride is 16 bytes for FP8 blocks, 8 for FP4).
+    fn block_offsets(&self) -> (Vec<usize>, Vec<usize>) {
+        let mut pay = Vec::with_capacity(self.n_blocks);
+        let mut sc = Vec::with_capacity(self.n_blocks);
+        let (mut po, mut so) = (0usize, 0usize);
+        for bi in 0..self.n_blocks {
+            pay.push(po);
+            sc.push(so);
+            if self.is_fp8(bi) {
+                po += BLOCK;
+            } else {
+                po += BLOCK / 2;
+                so += 1;
+            }
+        }
+        (pay, sc)
+    }
+
     /// Storage size in bits, split into (payload, scales, metadata) — the
     /// three bars of the paper's Fig. 8 breakdown.
     pub fn footprint_bits(&self) -> (usize, usize, usize) {
@@ -136,6 +156,172 @@ impl FgmpTensor {
     /// Fraction of blocks kept in FP8.
     pub fn fp8_fraction(&self) -> f64 {
         self.n_fp8 as f64 / self.n_blocks.max(1) as f64
+    }
+}
+
+/// The k-panelized **execution** layout of a packed weight tensor: the same
+/// bits as [`FgmpTensor`] (1 meta bit, E4M3 bytes / E2M1 nibbles, E4M3
+/// scale byte per FP4 block) reordered to the blocked matmul's panel walk,
+/// so the kernel streams them front-to-back while it tiles.
+///
+/// The source tensor is the offline pipeline's transposed `(N, K)` pack —
+/// output channel `n`'s K-dim blocks contiguous, exactly as the datapath
+/// consumes them. The walk regroups those blocks panel-major:
+///
+/// ```text
+///   for panel p over output columns [p·NR, p·NR+width):   // width ≤ NR
+///     for k-block kb in 0..K/BLOCK:
+///       for column j in 0..width:   block (p·NR+j, kb)
+/// ```
+///
+/// which is the exact order `matmul_rows_packed` decodes — one cursor, no
+/// index arithmetic in the hot loop, and the transpose to the executor's
+/// `(K, N)` orientation happens in-register (fc2 included: no dequantized
+/// f32 copy is ever materialized). Per-panel start offsets keep edge
+/// panels addressable and let callers parallelize over panels if needed.
+#[derive(Debug, Clone)]
+pub struct PackedPanels {
+    /// Input (reduction) dimension — a multiple of [`BLOCK`].
+    pub k: usize,
+    /// Output dimension (panel axis).
+    pub n: usize,
+    /// Panel width the layout was built for (the matmul kernel's NR).
+    pub nr: usize,
+    /// 1 bit per block in walk order, LSB-first; 1 = FP8.
+    pub meta: Vec<u8>,
+    /// Mixed payload in walk order (16 bytes per FP8 block, 8 per FP4).
+    pub payload: Vec<u8>,
+    /// E4M3 scale byte per FP4 block, in walk order.
+    pub scales: Vec<u8>,
+    /// Per-panel start offset into `payload`.
+    pub panel_payload_off: Vec<usize>,
+    /// Per-panel start index into `scales`.
+    pub panel_scale_off: Vec<usize>,
+    /// Per-panel start block index (into the walk-order meta bits).
+    pub panel_block_off: Vec<usize>,
+    pub n_blocks: usize,
+    pub n_fp8: usize,
+}
+
+impl PackedPanels {
+    /// Reorder a transposed-layout `(N, K)` [`FgmpTensor`] into the panel
+    /// walk for `nr`-wide output tiles. Pure byte shuffling — no value is
+    /// decoded or re-encoded, so the bits (and therefore the dequantized
+    /// lattice) are exactly the storage tensor's.
+    pub fn from_tensor(t: &FgmpTensor, nr: usize) -> Self {
+        assert_eq!(t.shape.len(), 2, "panelizer wants a (N, K) tensor, got {:?}", t.shape);
+        let (n, k) = (t.shape[0], t.shape[1]);
+        assert!(nr > 0);
+        assert_eq!(k % BLOCK, 0, "K={k} must tile into {BLOCK}-blocks");
+        let kb_count = k / BLOCK;
+        let (pay_off, sc_off) = t.block_offsets();
+
+        let n_panels = n.div_ceil(nr);
+        let mut out = PackedPanels {
+            k,
+            n,
+            nr,
+            meta: vec![0u8; t.n_blocks.div_ceil(8)],
+            payload: Vec::with_capacity(t.payload.len()),
+            scales: Vec::with_capacity(t.scales.len()),
+            panel_payload_off: Vec::with_capacity(n_panels),
+            panel_scale_off: Vec::with_capacity(n_panels),
+            panel_block_off: Vec::with_capacity(n_panels),
+            n_blocks: t.n_blocks,
+            n_fp8: t.n_fp8,
+        };
+        let mut widx = 0usize; // walk-order block index
+        for p in 0..n_panels {
+            let nc = p * nr;
+            let width = nr.min(n - nc);
+            out.panel_payload_off.push(out.payload.len());
+            out.panel_scale_off.push(out.scales.len());
+            out.panel_block_off.push(widx);
+            for kb in 0..kb_count {
+                for j in 0..width {
+                    let bi = (nc + j) * kb_count + kb;
+                    if t.is_fp8(bi) {
+                        out.meta[widx / 8] |= 1 << (widx % 8);
+                        out.payload
+                            .extend_from_slice(&t.payload[pay_off[bi]..pay_off[bi] + BLOCK]);
+                    } else {
+                        out.payload
+                            .extend_from_slice(&t.payload[pay_off[bi]..pay_off[bi] + BLOCK / 2]);
+                        out.scales.push(t.scales[sc_off[bi]]);
+                    }
+                    widx += 1;
+                }
+            }
+        }
+        out
+    }
+
+    /// Is walk-order block `widx` stored in FP8?
+    #[inline]
+    pub fn is_fp8_walk(&self, widx: usize) -> bool {
+        self.meta[widx / 8] & (1 << (widx % 8)) != 0
+    }
+
+    /// Number of `nr`-wide panels.
+    pub fn n_panels(&self) -> usize {
+        self.n.div_ceil(self.nr)
+    }
+
+    /// Dequantize into the executor's `(K, N)` row-major orientation — the
+    /// on-demand materializer for the PJRT/export path (value-identical to
+    /// transposing [`FgmpTensor::unpack`], property-tested).
+    pub fn unpack_kn(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.k * self.n];
+        let kb_count = self.k / BLOCK;
+        for p in 0..self.n_panels() {
+            let nc = p * self.nr;
+            let width = self.nr.min(self.n - nc);
+            let mut off = self.panel_payload_off[p];
+            let mut sci = self.panel_scale_off[p];
+            let mut widx = self.panel_block_off[p];
+            for kb in 0..kb_count {
+                for j in 0..width {
+                    let col = nc + j;
+                    if self.is_fp8_walk(widx) {
+                        for kk in 0..BLOCK {
+                            out[(kb * BLOCK + kk) * self.n + col] =
+                                decode_e4m3(self.payload[off + kk]);
+                        }
+                        off += BLOCK;
+                    } else {
+                        let s = decode_e4m3(self.scales[sci]);
+                        sci += 1;
+                        let s = if s > 0.0 { s } else { 0.0 };
+                        for kk2 in 0..BLOCK / 2 {
+                            let b = self.payload[off + kk2];
+                            out[(kb * BLOCK + 2 * kk2) * self.n + col] = decode_e2m1(b & 0x0f) * s;
+                            out[(kb * BLOCK + 2 * kk2 + 1) * self.n + col] =
+                                decode_e2m1(b >> 4) * s;
+                        }
+                        off += BLOCK / 2;
+                    }
+                    widx += 1;
+                }
+            }
+        }
+        out
+    }
+
+    /// Bytes this tensor keeps resident for execution: payload + scales +
+    /// meta bits + the per-panel offset tables. This is the number the
+    /// engine/serve weight-memory report compares against `4·K·N`.
+    pub fn resident_bytes(&self) -> usize {
+        let tables =
+            self.panel_payload_off.len() + self.panel_scale_off.len() + self.panel_block_off.len();
+        self.payload.len()
+            + self.scales.len()
+            + self.meta.len()
+            + tables * std::mem::size_of::<usize>()
+    }
+
+    /// The f32 bytes a dequantized resident copy would occupy.
+    pub fn f32_equiv_bytes(&self) -> usize {
+        self.k * self.n * 4
     }
 }
 
@@ -205,6 +391,68 @@ mod tests {
         assert_eq!(s, 6 * 8);
         assert_eq!(m, 8);
         assert_eq!(t.payload.len(), 2 * 16 + 6 * 8);
+    }
+
+    #[test]
+    fn panelized_unpack_matches_tensor_unpack_transposed() {
+        // (N, K) tensors with N off the panel grid and mixed assignments:
+        // the panel walk must be a pure reordering of the same bits.
+        const CASES: &[(usize, usize, usize, u64)] = &[
+            (1, 1, 8, 10),
+            (5, 2, 8, 11),
+            (8, 3, 8, 12),
+            (9, 1, 8, 13),
+            (23, 4, 8, 14),
+            (16, 2, 4, 15),
+        ];
+        for &(n, kb, nr, seed) in CASES {
+            let k = kb * BLOCK;
+            let x = data(n * k, 6.0, seed);
+            let prec: Vec<Precision> = (0..n * kb)
+                .map(|i| {
+                    if (i * 7 + seed as usize) % 3 == 0 {
+                        Precision::Fp8
+                    } else {
+                        Precision::Fp4
+                    }
+                })
+                .collect();
+            let t = FgmpTensor::pack(&[n, k], &x, &prec, None);
+            let p = PackedPanels::from_tensor(&t, nr);
+            assert_eq!(p.n_blocks, t.n_blocks);
+            assert_eq!(p.n_fp8, t.n_fp8);
+            assert_eq!(p.payload.len(), t.payload.len());
+            assert_eq!(p.scales.len(), t.scales.len());
+            let deq_nk = t.unpack(); // (N, K)
+            let deq_kn = p.unpack_kn(); // (K, N)
+            for ni in 0..n {
+                for ki in 0..k {
+                    assert_eq!(
+                        deq_kn[ki * n + ni].to_bits(),
+                        deq_nk[ni * k + ki].to_bits(),
+                        "(n={n},k={k},nr={nr}) elem ({ni},{ki})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn panelized_resident_bytes_beat_f32() {
+        let (n, kb) = (24usize, 4usize);
+        let k = kb * BLOCK;
+        let x = data(n * k, 3.0, 21);
+        // 30% FP8 / 70% FP4 — the paper's headline mix.
+        let prec: Vec<Precision> =
+            (0..n * kb).map(|i| if i % 10 < 3 { Precision::Fp8 } else { Precision::Fp4 }).collect();
+        let t = FgmpTensor::pack(&[n, k], &x, &prec, None);
+        let p = PackedPanels::from_tensor(&t, 8);
+        assert!(
+            (p.resident_bytes() as f64) < 0.25 * p.f32_equiv_bytes() as f64,
+            "packed {} B vs f32 {} B",
+            p.resident_bytes(),
+            p.f32_equiv_bytes()
+        );
     }
 
     #[test]

@@ -1,15 +1,27 @@
 //! Backend-neutral host-side tensor arguments.
 //!
 //! `ArgValue` is what the evaluator and the serving coordinator traffic in:
-//! plain shaped `Vec<f32>` / `Vec<i32>` buffers. The native backend consumes
-//! them directly; the PJRT backend (feature `pjrt`) converts them to
-//! `xla::Literal`s in the feature-gated `literal` module.
+//! plain shaped `Vec<f32>` / `Vec<i32>` buffers, plus **packed** FGMP
+//! weight tensors in their k-panelized execution layout. The native
+//! backend consumes dense buffers directly and runs packed weights
+//! straight off their bits; the PJRT backend (feature `pjrt`) converts
+//! dense values to `xla::Literal`s in the feature-gated `literal` module
+//! and materializes packed weights on demand there (the only place a
+//! dequantized f32 copy ever exists).
+
+use std::sync::Arc;
+
+use crate::quant::PackedPanels;
 
 /// A host-side argument value.
 #[derive(Debug, Clone)]
 pub enum ArgValue {
     F32 { shape: Vec<usize>, data: Vec<f32> },
     I32 { shape: Vec<usize>, data: Vec<i32> },
+    /// A linear weight in the packed FGMP execution format. `shape` is the
+    /// logical dense shape `[k_in, n_out]`; the `Arc` makes tail clones
+    /// (one per worker / per batch) byte-cheap.
+    PackedW { shape: Vec<usize>, panels: Arc<PackedPanels> },
 }
 
 impl ArgValue {
@@ -21,11 +33,15 @@ impl ArgValue {
         ArgValue::F32 { shape: vec![data.len()], data }
     }
 
-    /// Logical element count.
+    /// Logical element count. For packed weights this is the panels'
+    /// actual `k·n` (not the self-reported shape), so the load-time size
+    /// checks in the engine/native graph compare real tensor dimensions
+    /// against the manifest — exactly as `data.len()` does for dense.
     pub fn elements(&self) -> usize {
         match self {
             ArgValue::F32 { data, .. } => data.len(),
             ArgValue::I32 { data, .. } => data.len(),
+            ArgValue::PackedW { panels, .. } => panels.k * panels.n,
         }
     }
 
@@ -33,14 +49,20 @@ impl ArgValue {
         match self {
             ArgValue::F32 { shape, .. } => shape,
             ArgValue::I32 { shape, .. } => shape,
+            ArgValue::PackedW { shape, .. } => shape,
         }
     }
 
     /// Borrow as f32 data, or error with the argument's position context.
+    /// Packed weights refuse: consumers either execute off the bits
+    /// (native) or materialize explicitly (PJRT literal conversion).
     pub fn as_f32(&self) -> crate::Result<&[f32]> {
         match self {
             ArgValue::F32 { data, .. } => Ok(data),
             ArgValue::I32 { .. } => anyhow::bail!("expected f32 argument, got i32"),
+            ArgValue::PackedW { .. } => {
+                anyhow::bail!("expected f32 argument, got packed weight (materialize explicitly)")
+            }
         }
     }
 
@@ -48,7 +70,7 @@ impl ArgValue {
     pub fn as_i32(&self) -> crate::Result<&[i32]> {
         match self {
             ArgValue::I32 { data, .. } => Ok(data),
-            ArgValue::F32 { .. } => anyhow::bail!("expected i32 argument, got f32"),
+            _ => anyhow::bail!("expected i32 argument"),
         }
     }
 }

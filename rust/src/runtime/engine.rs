@@ -33,14 +33,15 @@
 //! blocked matmuls across every prompt admitted in one round. Pool capacity
 //! comes from [`EngineOptions::kv_pages`] (the serve `--kv-pages` flag).
 
-use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::io::Manifest;
 use crate::model::forward::{
-    forward_prefill, forward_prefill_batch, forward_step_batch, ModelArch, QuantInputs,
+    forward_prefill, forward_prefill_batch, forward_step_batch, ModelArch, Params, QuantInputs,
 };
 use crate::model::kv::{KvPool, KvPoolStats, KvPrecision, KvState};
+use crate::model::WeightMemory;
+use crate::quant::PackedPanels;
 use crate::Result;
 
 use super::args::ArgValue;
@@ -124,10 +125,17 @@ pub struct StepOut {
     pub kv_tokens: u64,
 }
 
+/// One owned parameter of the cached engine: dense f32, or the packed
+/// FGMP execution tensor (no resident dequantized copy).
+enum ParamData {
+    Dense(Vec<f32>),
+    Packed(Arc<PackedPanels>),
+}
+
 /// The model-owning state of the cached native path.
 struct CachedEngine {
     arch: ModelArch,
-    params: Vec<(String, Vec<f32>)>,
+    params: Vec<(String, ParamData)>,
     act_weights: Vec<Vec<f32>>,
     thresholds: Vec<f32>,
     kv: KvPrecision,
@@ -136,8 +144,26 @@ struct CachedEngine {
 }
 
 impl CachedEngine {
-    fn param_map(&self) -> HashMap<&str, &[f32]> {
-        self.params.iter().map(|(n, v)| (n.as_str(), v.as_slice())).collect()
+    fn param_map(&self) -> Params<'_> {
+        let mut p = Params::new();
+        for (n, d) in &self.params {
+            match d {
+                ParamData::Dense(v) => p.insert_dense(n, v),
+                ParamData::Packed(pw) => p.insert_packed(n, pw),
+            }
+        }
+        p
+    }
+
+    fn weight_memory(&self) -> WeightMemory {
+        self.params.iter().fold(WeightMemory::default(), |mut m, (_, d)| {
+            if let ParamData::Packed(pw) = d {
+                m.packed_bytes += pw.resident_bytes();
+                m.f32_equiv_bytes += pw.f32_equiv_bytes();
+                m.linears += 1;
+            }
+            m
+        })
     }
 
     fn quant_inputs(&self) -> QuantInputs<'_> {
@@ -354,6 +380,17 @@ impl Engine {
         }
     }
 
+    /// Resident weight-memory accounting of the loaded model: bytes the
+    /// packed execution tensors actually hold vs the f32 bytes a
+    /// dequantized copy would need. Zero-linears on the windowed fallback
+    /// (whose weights live inside the one-shot executable's tail).
+    pub fn weight_memory(&self) -> WeightMemory {
+        match &self.inner {
+            Inner::Cached(ce) => ce.weight_memory(),
+            Inner::Windowed(_) => WeightMemory::default(),
+        }
+    }
+
     /// Live accounting of the engine's KV page pool (None on the windowed
     /// fallback, which holds no cache).
     pub fn pool_stats(&self) -> Option<KvPoolStats> {
@@ -512,12 +549,14 @@ impl WindowedEngine {
 
 /// Split a `logits_quant` argument tail into owned (params, activation
 /// weightings, thresholds) following the manifest's parameter inventory —
-/// the same layout `NativeGraph::run` consumes positionally.
+/// the same layout `NativeGraph::run` consumes positionally. Packed weight
+/// arguments stay packed (`Arc`-shared with the caller's tail): the engine
+/// holds no dequantized f32 weight copy.
 #[allow(clippy::type_complexity)]
 fn parse_tail(
     man: &Manifest,
     tail: &[ArgValue],
-) -> Result<(Vec<(String, Vec<f32>)>, Vec<Vec<f32>>, Vec<f32>)> {
+) -> Result<(Vec<(String, ParamData)>, Vec<Vec<f32>>, Vec<f32>)> {
     let np = man.param_names.len();
     let nl = man.num_linears;
     anyhow::ensure!(
@@ -534,7 +573,11 @@ fn parse_tail(
             "parameter '{name}' has {} elements, want {want}",
             a.elements()
         );
-        params.push((name.clone(), a.as_f32()?.to_vec()));
+        let data = match a {
+            ArgValue::PackedW { panels, .. } => ParamData::Packed(panels.clone()),
+            other => ParamData::Dense(other.as_f32()?.to_vec()),
+        };
+        params.push((name.clone(), data));
     }
     let mut act_weights = Vec::with_capacity(nl);
     for i in 0..nl {

@@ -12,6 +12,9 @@ impl ArgValue {
         match self {
             ArgValue::F32 { shape, data } => lit_f32(data, shape),
             ArgValue::I32 { shape, data } => lit_i32(data, shape),
+            // PJRT consumes dense tensors: materialize the packed weight
+            // here, on demand — the one place a dequantized copy exists.
+            ArgValue::PackedW { shape, panels } => lit_f32(&panels.unpack_kn(), shape),
         }
     }
 }

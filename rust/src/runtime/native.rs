@@ -4,11 +4,10 @@
 //! AOT graph signatures recorded in `manifest.json`, so the evaluator and
 //! the serving coordinator are backend-agnostic.
 
-use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::io::Manifest;
-use crate::model::forward::{forward, masked_nll, ModelArch, QuantInputs};
+use crate::model::forward::{forward, masked_nll, ModelArch, Params, QuantInputs};
 use crate::Result;
 
 use super::args::ArgValue;
@@ -76,7 +75,7 @@ impl NativeGraph {
         let mask = if has_mask { Some(args[1].as_f32()?) } else { None };
         let poff = 1 + usize::from(has_mask);
 
-        let mut params: HashMap<&str, &[f32]> = HashMap::with_capacity(np);
+        let mut params = Params::new();
         for (i, pname) in man.param_names.iter().enumerate() {
             let want: usize = man.param_shapes[pname].iter().product();
             let a = &args[poff + i];
@@ -86,7 +85,12 @@ impl NativeGraph {
                 self.name,
                 a.elements()
             );
-            params.insert(pname.as_str(), a.as_f32()?);
+            // Packed weights execute straight off their bits — the native
+            // backend never materializes a dequantized copy.
+            match a {
+                ArgValue::PackedW { panels, .. } => params.insert_packed(pname, panels),
+                other => params.insert_dense(pname, other.as_f32()?),
+            }
         }
 
         let quant = if has_quant {

@@ -18,9 +18,12 @@
 //!    vectorize them at the SSE2 baseline — no `round_ties_even` libcall
 //!    in the hot loops.
 
+use std::sync::Mutex;
+
 use crate::quant::fp4::{E2M1_MAX, E2M1_MIN_NORMAL, E2M1_QUANTUM_SUBNORMAL};
 use crate::quant::fp8::{E4M3_MAX, E4M3_MIN_NORMAL, E4M3_QUANTUM_SUBNORMAL};
 use crate::quant::nvfp4_scale;
+use crate::quant::pack::PackedPanels;
 use crate::util::par_map;
 use crate::BLOCK;
 
@@ -32,6 +35,112 @@ pub const MR: usize = 4;
 pub const NR: usize = 8;
 /// Partial-sum lanes of the transposed (dot-product) kernel.
 pub const LANES: usize = 16;
+
+// ---------------------------------------------------------------------------
+// The f32x8 microkernel vector type (shared by the f32 and packed matmuls)
+// ---------------------------------------------------------------------------
+
+// The register kernels assume one accumulator vector spans a full NR panel.
+const _: () = assert!(NR == 8, "F32x8 microkernel is written for NR = 8");
+
+/// Explicit SSE build of the 8-lane vector (feature `simd` on x86_64): two
+/// `__m128` halves, loads/mul/add as single instructions. `mul_acc` is a
+/// separate IEEE multiply then add per lane — **not** an FMA — so results
+/// are bit-identical to the autovectorized array form and to the scalar
+/// references.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod vec8 {
+    use core::arch::x86_64::*;
+
+    /// 8 f32 lanes the MR×NR microkernel accumulates in.
+    #[derive(Clone, Copy)]
+    pub struct F32x8(__m128, __m128);
+
+    impl F32x8 {
+        #[inline(always)]
+        pub fn zero() -> F32x8 {
+            // SSE2 is part of the x86_64 baseline; these intrinsics are
+            // unconditionally available.
+            unsafe { F32x8(_mm_setzero_ps(), _mm_setzero_ps()) }
+        }
+
+        #[inline(always)]
+        pub fn splat(v: f32) -> F32x8 {
+            unsafe { F32x8(_mm_set1_ps(v), _mm_set1_ps(v)) }
+        }
+
+        #[inline(always)]
+        pub fn load(s: &[f32]) -> F32x8 {
+            assert!(s.len() >= 8);
+            unsafe { F32x8(_mm_loadu_ps(s.as_ptr()), _mm_loadu_ps(s.as_ptr().add(4))) }
+        }
+
+        /// `self + a·b`, lanewise (multiply then add — no FMA contraction).
+        #[inline(always)]
+        pub fn mul_acc(self, a: F32x8, b: F32x8) -> F32x8 {
+            unsafe {
+                F32x8(
+                    _mm_add_ps(self.0, _mm_mul_ps(a.0, b.0)),
+                    _mm_add_ps(self.1, _mm_mul_ps(a.1, b.1)),
+                )
+            }
+        }
+
+        #[inline(always)]
+        pub fn store(self, d: &mut [f32]) {
+            assert!(d.len() >= 8);
+            unsafe {
+                _mm_storeu_ps(d.as_mut_ptr(), self.0);
+                _mm_storeu_ps(d.as_mut_ptr().add(4), self.1);
+            }
+        }
+    }
+}
+
+/// Portable build: an 8-wide array with lanewise loops LLVM can
+/// autovectorize at the SSE2 baseline. Same per-lane operations in the
+/// same order as the intrinsics build, so the two are bit-identical.
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+mod vec8 {
+    /// 8 f32 lanes the MR×NR microkernel accumulates in.
+    #[derive(Clone, Copy)]
+    pub struct F32x8([f32; 8]);
+
+    impl F32x8 {
+        #[inline(always)]
+        pub fn zero() -> F32x8 {
+            F32x8([0.0; 8])
+        }
+
+        #[inline(always)]
+        pub fn splat(v: f32) -> F32x8 {
+            F32x8([v; 8])
+        }
+
+        #[inline(always)]
+        pub fn load(s: &[f32]) -> F32x8 {
+            let a: &[f32; 8] = s[..8].try_into().unwrap();
+            F32x8(*a)
+        }
+
+        /// `self + a·b`, lanewise (multiply then add — no FMA contraction).
+        #[inline(always)]
+        pub fn mul_acc(self, a: F32x8, b: F32x8) -> F32x8 {
+            let mut out = self.0;
+            for ((o, &av), &bv) in out.iter_mut().zip(&a.0).zip(&b.0) {
+                *o += av * bv;
+            }
+            F32x8(out)
+        }
+
+        #[inline(always)]
+        pub fn store(self, d: &mut [f32]) {
+            d[..8].copy_from_slice(&self.0);
+        }
+    }
+}
+
+pub use vec8::F32x8;
 
 // ---------------------------------------------------------------------------
 // Branch-free scalar quantizers (the vector lanes of the slice kernels)
@@ -257,24 +366,23 @@ pub fn matmul_rows(x: &[f32], w: &[f32], rows: usize, k: usize, n: usize, out: &
     }
 }
 
-/// The `MR × NR` register microkernel: accumulators live in registers for
-/// the whole K loop; each `w` panel row is loaded once and reused by all
-/// MR rows of `x`.
+/// The `MR × NR` register microkernel: accumulators live in [`F32x8`]
+/// vectors for the whole K loop; each `w` panel row is loaded once and
+/// reused by all MR rows of `x`. The packed-weight kernel accumulates with
+/// the same vector ops over its decoded tiles, so the two paths share one
+/// microkernel definition.
 #[inline(always)]
 fn kernel_full(x: &[f32], w: &[f32], k: usize, n: usize, nc: usize, out: &mut [f32]) {
-    let mut acc = [[0.0f32; NR]; MR];
+    let mut acc = [F32x8::zero(); MR];
     for ki in 0..k {
         let base = ki * n + nc;
-        let wv: &[f32; NR] = w[base..base + NR].try_into().unwrap();
-        for r in 0..MR {
-            let xv = x[r * k + ki];
-            for j in 0..NR {
-                acc[r][j] += xv * wv[j];
-            }
+        let wv = F32x8::load(&w[base..base + NR]);
+        for (r, a) in acc.iter_mut().enumerate() {
+            *a = a.mul_acc(F32x8::splat(x[r * k + ki]), wv);
         }
     }
-    for (r, accr) in acc.iter().enumerate() {
-        out[r * n + nc..r * n + nc + NR].copy_from_slice(accr);
+    for (r, a) in acc.iter().enumerate() {
+        a.store(&mut out[r * n + nc..r * n + nc + NR]);
     }
 }
 
@@ -304,6 +412,250 @@ fn kernel_edge(
     for (r, accr) in acc.iter().enumerate().take(rows) {
         out[r * n + nc..r * n + nc + width].copy_from_slice(&accr[..width]);
     }
+}
+
+// ---------------------------------------------------------------------------
+// Packed-weight matmul: decode FGMP blocks in-register inside the tile loop
+// ---------------------------------------------------------------------------
+
+/// The 16-entry E2M1 nibble decode table, built once from the scalar codec
+/// — identical lattice to [`crate::quant::fp4::decode_e2m1`] by
+/// construction. One lookup + one scale multiply per weight is the whole
+/// NVFP4 decode.
+fn e2m1_lut() -> &'static [f32; 16] {
+    static LUT: std::sync::OnceLock<[f32; 16]> = std::sync::OnceLock::new();
+    LUT.get_or_init(|| std::array::from_fn(|n| crate::quant::fp4::decode_e2m1(n as u8)))
+}
+
+/// Streaming cursor over one panel of a [`PackedPanels`] tensor.
+struct PanelCursor {
+    widx: usize,
+    pay: usize,
+    sc: usize,
+}
+
+/// Decode the `width` blocks of one k-panel row (k-block `kb`, all panel
+/// columns) into a `(BLOCK, NR)` row-major register tile: `wtile[kk·NR+j]`
+/// is weight `(kb·BLOCK+kk, nc+j)`. E4M3 bytes go through the 256-entry
+/// LUT, NVFP4 nibbles through the 16-entry LUT times the block's decoded
+/// E4M3 scale — exactly [`FgmpTensor::unpack`]'s numerics (`s > 0` guard
+/// included), so the packed product is bit-identical to multiplying the
+/// dequantized copy.
+///
+/// [`FgmpTensor::unpack`]: crate::quant::FgmpTensor::unpack
+#[inline(always)]
+fn decode_panel_kblock(
+    w: &PackedPanels,
+    cur: &mut PanelCursor,
+    width: usize,
+    wtile: &mut [f32; BLOCK * NR],
+) {
+    let lut8 = e4m3_lut();
+    let lut4 = e2m1_lut();
+    for j in 0..width {
+        if w.is_fp8_walk(cur.widx) {
+            for kk in 0..BLOCK {
+                wtile[kk * NR + j] = lut8[w.payload[cur.pay + kk] as usize];
+            }
+            cur.pay += BLOCK;
+        } else {
+            let s = lut8[w.scales[cur.sc] as usize];
+            cur.sc += 1;
+            let s = if s > 0.0 { s } else { 0.0 };
+            for kk2 in 0..BLOCK / 2 {
+                let b = w.payload[cur.pay + kk2];
+                wtile[(2 * kk2) * NR + j] = lut4[(b & 0x0f) as usize] * s;
+                wtile[(2 * kk2 + 1) * NR + j] = lut4[(b >> 4) as usize] * s;
+            }
+            cur.pay += BLOCK / 2;
+        }
+        cur.widx += 1;
+    }
+}
+
+/// Multiply `rows ≤ MR` rows of `x (rows,K)` against a panelized packed
+/// weight tensor into `out (rows,N)`, decoding each `BLOCK × NR` weight
+/// tile in-register as the K loop walks the panel — the forward path never
+/// touches a dequantized f32 weight buffer. Per-output accumulation is
+/// ascending-K, so the result equals [`matmul_scalar`] over
+/// [`PackedPanels::unpack_kn`] bit-for-bit; full tiles accumulate through
+/// the same [`F32x8`] microkernel ops as the dense [`matmul_rows`].
+pub fn matmul_rows_packed(x: &[f32], w: &PackedPanels, rows: usize, out: &mut [f32]) {
+    debug_assert!(rows <= MR);
+    // Hard check: the panel walk below hardcodes NR-wide panels, so a
+    // layout built for any other width would silently desync the decode
+    // cursor in release builds if this were only a debug assert.
+    assert_eq!(w.nr, NR, "panel layout width {} != kernel NR {NR}", w.nr);
+    let (k, n) = (w.k, w.n);
+    debug_assert_eq!(x.len(), rows * k);
+    debug_assert_eq!(out.len(), rows * n);
+    let kb_count = k / BLOCK;
+    let mut wtile = [0.0f32; BLOCK * NR];
+    for p in 0..w.n_panels() {
+        let nc = p * NR;
+        let width = NR.min(n - nc);
+        let mut cur = PanelCursor {
+            widx: w.panel_block_off[p],
+            pay: w.panel_payload_off[p],
+            sc: w.panel_scale_off[p],
+        };
+        if rows == MR && width == NR {
+            // Full tile: F32x8 accumulators across the whole K loop.
+            let mut acc = [F32x8::zero(); MR];
+            for kb in 0..kb_count {
+                decode_panel_kblock(w, &mut cur, width, &mut wtile);
+                for kk in 0..BLOCK {
+                    let ki = kb * BLOCK + kk;
+                    let wv = F32x8::load(&wtile[kk * NR..kk * NR + NR]);
+                    for (r, a) in acc.iter_mut().enumerate() {
+                        *a = a.mul_acc(F32x8::splat(x[r * k + ki]), wv);
+                    }
+                }
+            }
+            for (r, a) in acc.iter().enumerate() {
+                a.store(&mut out[r * n + nc..r * n + nc + NR]);
+            }
+        } else {
+            // Edge panel / bottom row tile: same ascending-K order, scalar
+            // lanes over the live width.
+            let mut acc = [[0.0f32; NR]; MR];
+            for kb in 0..kb_count {
+                decode_panel_kblock(w, &mut cur, width, &mut wtile);
+                for kk in 0..BLOCK {
+                    let ki = kb * BLOCK + kk;
+                    let wr = &wtile[kk * NR..kk * NR + width];
+                    for (r, accr) in acc.iter_mut().enumerate().take(rows) {
+                        let xv = x[r * k + ki];
+                        for (a, &wv) in accr[..width].iter_mut().zip(wr) {
+                            *a += xv * wv;
+                        }
+                    }
+                }
+            }
+            for (r, accr) in acc.iter().enumerate().take(rows) {
+                out[r * n + nc..r * n + nc + width].copy_from_slice(&accr[..width]);
+            }
+        }
+    }
+}
+
+/// Dense-activation × packed-weight product `y = x·W` for row-major
+/// `x (M,K)` against a panelized packed tensor `(K,N)`: parallel over
+/// `MR`-row tiles of [`matmul_rows_packed`]. Bit-identical to
+/// [`matmul`] over the dequantized copy.
+pub fn matmul_packed(x: &[f32], w: &PackedPanels, m: usize) -> Vec<f32> {
+    let (k, n) = (w.k, w.n);
+    assert_eq!(x.len(), m * k);
+    let tiles: Vec<usize> = (0..m.div_ceil(MR)).collect();
+    let out = par_map(&tiles, |&t| {
+        let r0 = t * MR;
+        let rows = MR.min(m - r0);
+        let mut tile = vec![0.0f32; rows * n];
+        matmul_rows_packed(&x[r0 * k..(r0 + rows) * k], w, rows, &mut tile);
+        tile
+    });
+    flatten(out, m * n)
+}
+
+/// Scalar reference sibling of [`matmul_packed`]: walks the same panel
+/// order with the same LUT decode, accumulating each output element in
+/// ascending-K order one product at a time — no register tiles. The
+/// bit-exactness oracle for the packed kernel (and itself equal to
+/// [`matmul_scalar`] over the dequantized copy).
+pub fn matmul_packed_scalar(x: &[f32], w: &PackedPanels, m: usize) -> Vec<f32> {
+    let (k, n) = (w.k, w.n);
+    assert_eq!(x.len(), m * k);
+    let kb_count = k / BLOCK;
+    let rows: Vec<usize> = (0..m).collect();
+    let lut8 = e4m3_lut();
+    let lut4 = e2m1_lut();
+    let out = par_map(&rows, |&mi| {
+        let xr = &x[mi * k..(mi + 1) * k];
+        let mut acc = vec![0.0f32; n];
+        let mut wb = [0.0f32; BLOCK];
+        for p in 0..w.n_panels() {
+            let nc = p * w.nr;
+            let width = w.nr.min(n - nc);
+            let mut widx = w.panel_block_off[p];
+            let mut pay = w.panel_payload_off[p];
+            let mut sci = w.panel_scale_off[p];
+            for kb in 0..kb_count {
+                for j in 0..width {
+                    if w.is_fp8_walk(widx) {
+                        for kk in 0..BLOCK {
+                            wb[kk] = lut8[w.payload[pay + kk] as usize];
+                        }
+                        pay += BLOCK;
+                    } else {
+                        let s = lut8[w.scales[sci] as usize];
+                        sci += 1;
+                        let s = if s > 0.0 { s } else { 0.0 };
+                        for kk2 in 0..BLOCK / 2 {
+                            let b = w.payload[pay + kk2];
+                            wb[2 * kk2] = lut4[(b & 0x0f) as usize] * s;
+                            wb[2 * kk2 + 1] = lut4[(b >> 4) as usize] * s;
+                        }
+                        pay += BLOCK / 2;
+                    }
+                    widx += 1;
+                    let a = &mut acc[nc + j];
+                    for (kk, &wv) in wb.iter().enumerate() {
+                        *a += xr[kb * BLOCK + kk] * wv;
+                    }
+                }
+            }
+        }
+        acc
+    });
+    flatten(out, m * n)
+}
+
+// ---------------------------------------------------------------------------
+// Reusable matmul tile scratch
+// ---------------------------------------------------------------------------
+
+/// A pool of scratch buffers shared across the tile-parallel matmul calls
+/// of one forward pass. [`crate::util::par_map`] spawns fresh scoped
+/// threads per call, so per-thread storage cannot persist — instead each
+/// in-flight tile checks buffers out of the pool and returns them as soon
+/// as it is done with them (the quantize buffer right after the multiply,
+/// so live copies stay bounded by worker concurrency; output tiles after
+/// they are flattened), and the pool itself is threaded through the pass
+/// the way `KvScratch` is threaded through a decode step. Capacity is paid
+/// once per (shape × concurrency) instead of once per tile per linear.
+#[derive(Default)]
+pub struct MatmulScratch {
+    free: Mutex<Vec<Vec<f32>>>,
+}
+
+impl MatmulScratch {
+    pub fn new() -> MatmulScratch {
+        MatmulScratch::default()
+    }
+
+    /// Check a buffer out of the pool (empty when the pool has none —
+    /// first use at each concurrency level allocates). The returned buffer
+    /// may carry a stale length/contents; size it with [`scratch_resize`].
+    pub fn take(&self) -> Vec<f32> {
+        self.free.lock().map(|mut v| v.pop()).ok().flatten().unwrap_or_default()
+    }
+
+    /// Return a buffer for the next tile to reuse (contents kept — no
+    /// clear, so re-sizing to the same shape costs nothing).
+    pub fn put(&self, buf: Vec<f32>) {
+        if let Ok(mut v) = self.free.lock() {
+            v.push(buf);
+        }
+    }
+}
+
+/// Size `buf` to exactly `len` elements. Only newly grown capacity is
+/// zero-filled (`Vec::resize` semantics); retained elements keep their
+/// stale values — every kernel fed from this scratch overwrites all of
+/// them, so no full memset is paid on reuse.
+#[inline]
+pub fn scratch_resize(buf: &mut Vec<f32>, len: usize) {
+    buf.resize(len, 0.0);
 }
 
 // ---------------------------------------------------------------------------
@@ -535,6 +887,63 @@ mod tests {
         // Scratch is reusable: a second gather into the same Vec resizes.
         gather_f32_pages(&pages[..1], &mut out);
         assert_eq!(out, &flat[..16]);
+    }
+
+    #[test]
+    fn f32x8_matches_scalar_lanes_bit_exact() {
+        let a: Vec<f32> = (0..8).map(|i| i as f32 * 0.3 - 1.0).collect();
+        let b: Vec<f32> = (0..8).map(|i| 2.5 - i as f32 * 0.7).collect();
+        let acc = F32x8::splat(0.25).mul_acc(F32x8::load(&a), F32x8::load(&b));
+        let mut out = [0.0f32; 8];
+        acc.store(&mut out);
+        for j in 0..8 {
+            let want = 0.25f32 + a[j] * b[j];
+            assert_eq!(out[j].to_bits(), want.to_bits(), "lane {j}");
+        }
+    }
+
+    #[test]
+    fn packed_matmul_smoke_against_dense_on_unpacked() {
+        use crate::quant::{FgmpTensor, Precision};
+        let mut rng = Rng::new(0x9001);
+        let (m, k, n) = (5usize, 2 * BLOCK, 11usize);
+        let x = rng.normal_vec(m * k, 1.5);
+        // Transposed (N, K) pack with a mixed assignment.
+        let w = rng.normal_vec(k * n, 0.4);
+        let mut data_t = vec![0.0f32; k * n];
+        for ki in 0..k {
+            for ni in 0..n {
+                data_t[ni * k + ki] = w[ki * n + ni];
+            }
+        }
+        let kb = k / BLOCK;
+        let prec: Vec<Precision> = (0..n * kb)
+            .map(|i| if i % 3 == 0 { Precision::Fp8 } else { Precision::Fp4 })
+            .collect();
+        let t = FgmpTensor::pack(&[n, k], &data_t, &prec, None);
+        let p = PackedPanels::from_tensor(&t, NR);
+        let deq = p.unpack_kn();
+        let want = matmul_scalar(&x, &deq, m, k, n);
+        assert_eq!(matmul_packed(&x, &p, m), want);
+        assert_eq!(matmul_packed_scalar(&x, &p, m), want);
+    }
+
+    #[test]
+    fn matmul_scratch_pool_reuses_buffers() {
+        let pool = MatmulScratch::new();
+        let mut b = pool.take();
+        scratch_resize(&mut b, 128);
+        b[0] = 7.0;
+        let cap = b.capacity();
+        pool.put(b);
+        // LIFO: the next take hands the same allocation back (stale
+        // contents included — scratch_resize does not re-zero it).
+        let mut b2 = pool.take();
+        assert!(b2.capacity() >= cap, "pooled capacity must persist");
+        assert_eq!(b2[0], 7.0);
+        scratch_resize(&mut b2, 64);
+        assert_eq!(b2.len(), 64);
+        assert!(pool.take().is_empty(), "pool empty again after the re-take");
     }
 
     #[test]

@@ -21,13 +21,12 @@
 //! fallback reproduces the legacy zero-padded window semantics, and
 //! rolling re-prefill keeps sessions decoding past `max_seq`.
 
-use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::OnceLock;
 
 use fgmp::model::forward::{
     forward, forward_prefill, forward_prefill_batch, forward_step, forward_step_batch, Act,
-    ModelArch, NormKind, PosKind, QuantInputs,
+    ModelArch, NormKind, Params, PosKind, QuantInputs,
 };
 use fgmp::model::kv::{KvPool, KvPoolExhausted, KvPrecision, KvState, PAGE_TOKENS};
 use fgmp::util::Rng;
@@ -78,8 +77,25 @@ fn random_params(arch: &ModelArch, seed: u64) -> Vec<(String, Vec<f32>)> {
         .collect()
 }
 
-fn param_map(params: &[(String, Vec<f32>)]) -> HashMap<&str, &[f32]> {
-    params.iter().map(|(n, v)| (n.as_str(), v.as_slice())).collect()
+fn param_map(params: &[(String, Vec<f32>)]) -> Params<'_> {
+    Params::from_dense(params.iter().map(|(n, v)| (n.as_str(), v.as_slice())).collect())
+}
+
+/// Build a forward-pass [`Params`] view from an engine argument tail:
+/// packed weights stay packed (the execution format), everything else is
+/// dense — exactly how `NativeGraph::run` consumes the same tail.
+fn params_from_tail<'a>(
+    names: &'a [String],
+    tail: &'a [fgmp::runtime::ArgValue],
+) -> Params<'a> {
+    let mut pm = Params::new();
+    for (i, n) in names.iter().enumerate() {
+        match &tail[i] {
+            fgmp::runtime::ArgValue::PackedW { panels, .. } => pm.insert_packed(n, panels),
+            other => pm.insert_dense(n, other.as_f32().unwrap()),
+        }
+    }
+    pm
 }
 
 fn random_tokens(rng: &mut Rng, n: usize, vocab: usize) -> Vec<i32> {
@@ -509,15 +525,10 @@ fn engine_cached_greedy_matches_full_recompute_oracle() {
 
     let man = &fx.ev.arts.manifest;
     let arch = man.arch().unwrap();
-    // Rebuild the oracle's param map + quant inputs from the same tail.
+    // Rebuild the oracle's param map + quant inputs from the same tail
+    // (weights stay in the packed execution format on both sides).
     let np = man.param_names.len();
-    let params: Vec<(&str, &[f32])> = man
-        .param_names
-        .iter()
-        .enumerate()
-        .map(|(i, n)| (n.as_str(), fx.tail[i].as_f32().unwrap()))
-        .collect();
-    let pm: HashMap<&str, &[f32]> = params.iter().cloned().collect();
+    let pm = params_from_tail(&man.param_names, &fx.tail);
     let aw: Vec<&[f32]> =
         (0..man.num_linears).map(|i| fx.tail[np + i].as_f32().unwrap()).collect();
     let thresholds = fx.tail[np + man.num_linears].as_f32().unwrap();
@@ -675,4 +686,57 @@ fn engine_pool_backpressure_and_roll_stay_within_bound() {
     assert!(stats.in_use_pages <= per_session);
     assert_eq!(stats.in_use_pages, sess.kv_pages());
     assert!(sess.cached_tokens() > 0);
+}
+
+/// The packed execution path is bit-exact against the dequant-f32 path:
+/// an engine fed the packed tail and an engine fed the same tail with
+/// every packed weight materialized to dense f32 produce identical
+/// prefill logits and greedy decode streams — and only the packed engine
+/// holds packed (sub-f32) resident weight bytes.
+#[test]
+fn engine_packed_tail_matches_dense_materialized_tail() {
+    use fgmp::runtime::ArgValue;
+    let fx = engine_fixture();
+    // The quantized tail carries packed weights.
+    assert!(
+        fx.tail.iter().any(|a| matches!(a, ArgValue::PackedW { .. })),
+        "quant_arg_tail should carry packed weights"
+    );
+    let dense_tail: Vec<ArgValue> = fx
+        .tail
+        .iter()
+        .map(|a| match a {
+            ArgValue::PackedW { shape, panels } => {
+                ArgValue::F32 { shape: shape.clone(), data: panels.unpack_kn() }
+            }
+            other => other.clone(),
+        })
+        .collect();
+
+    let packed_eng =
+        fgmp::runtime::Engine::new(&fx.rt, &fx.spec, fx.tail.clone(), KvPrecision::Fp16).unwrap();
+    let dense_eng =
+        fgmp::runtime::Engine::new(&fx.rt, &fx.spec, dense_tail, KvPrecision::Fp16).unwrap();
+
+    let wm = packed_eng.weight_memory();
+    assert!(wm.linears > 0, "packed engine should count packed linears");
+    assert!(
+        (wm.packed_bytes as f64) < 0.25 * wm.f32_equiv_bytes as f64,
+        "resident packed bytes {} vs f32 {}",
+        wm.packed_bytes,
+        wm.f32_equiv_bytes
+    );
+    assert_eq!(dense_eng.weight_memory().linears, 0, "dense engine holds no packed linears");
+
+    let prompt: Vec<i32> = fx.ev.test_stream[4..15].to_vec();
+    let sp = packed_eng.prefill(&prompt).unwrap();
+    let sd = dense_eng.prefill(&prompt).unwrap();
+    assert_bits_eq(&sp.last_logits, &sd.last_logits, "packed vs dense prefill logits");
+
+    let n = 7usize;
+    assert_eq!(
+        greedy(&packed_eng, &prompt, n),
+        greedy(&dense_eng, &prompt, n),
+        "packed vs dense greedy stream"
+    );
 }

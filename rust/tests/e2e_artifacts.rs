@@ -94,11 +94,14 @@ fn swclip_reduces_weight_roundtrip_error() {
         let spec = arts.manifest.linear(&lc.name).unwrap();
         let w = arts.weights.get(&format!("{}.w", lc.name)).unwrap().as_f32().unwrap();
         let f = arts.fisher_w.get(&format!("{}.w.fisher", lc.name)).unwrap().as_f32().unwrap();
+        // On-demand materialization — no resident dequant copy anymore.
+        let lcd = lc.dequant();
+        let lnd = ln.dequant();
         for ki in 0..spec.k_in {
             for ni in 0..spec.n_out {
                 let idx = ki * spec.n_out + ni;
-                let d1 = (lc.dequant[idx] - w[idx]) as f64;
-                let d2 = (ln.dequant[idx] - w[idx]) as f64;
+                let d1 = (lcd[idx] - w[idx]) as f64;
+                let d2 = (lnd[idx] - w[idx]) as f64;
                 err_clip += f[idx] as f64 * d1 * d1;
                 err_noclip += f[idx] as f64 * d2 * d2;
             }

@@ -4,13 +4,15 @@
 //! lane-interleaved for dot products), and the branch-free quantizer
 //! lanes share the reference lattice.
 
-use fgmp::model::forward::fgmp_matmul;
+use fgmp::model::forward::{fgmp_matmul, fgmp_matmul_packed};
 use fgmp::policy::impact_score_block;
 use fgmp::quant::fp4::quant_e2m1_slice;
 use fgmp::quant::fp8::quant_e4m3_slice;
 use fgmp::quant::nvfp4::nvfp4_roundtrip_block;
 use fgmp::quant::{nvfp4_roundtrip, nvfp4_scale, quant_e2m1, quant_e4m3};
+use fgmp::quant::{FgmpTensor, PackedPanels, Precision};
 use fgmp::util::kernels;
+use fgmp::util::kernels::MatmulScratch;
 use fgmp::util::Rng;
 use fgmp::BLOCK;
 
@@ -97,7 +99,8 @@ fn fgmp_matmul_matches_scalar_reference_pipeline() {
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let threshold = sorted[sorted.len() / 2] as f32;
 
-        let (got, frac) = fgmp_matmul(&x, &w, m, k, n, &cw, threshold);
+        let scratch = MatmulScratch::new();
+        let (got, frac) = fgmp_matmul(&x, &w, m, k, n, &cw, threshold, &scratch);
 
         // Scalar reference pipeline.
         let mut xq = vec![0.0f32; m * k];
@@ -123,6 +126,98 @@ fn fgmp_matmul_matches_scalar_reference_pipeline() {
         let want_frac = n_fp8 as f32 / (m * kb) as f32;
         assert_eq!(frac, want_frac);
         assert!(frac > 0.0 && frac < 1.0, "median threshold must split blocks, got {frac}");
+    }
+}
+
+/// Pack a dense `(K, N)` weight into the k-panelized execution layout with
+/// a deterministic mixed precision assignment (plus all-FP8 / all-FP4
+/// extremes via `mode`), returning the panels and their dequantized copy.
+fn panelize(w: &[f32], k: usize, n: usize, mode: usize, salt: usize) -> (PackedPanels, Vec<f32>) {
+    assert_eq!(k % BLOCK, 0);
+    let kb = k / BLOCK;
+    // Transposed (N, K) layout — blocks contiguous along K, as the offline
+    // pipeline packs weights.
+    let mut data_t = vec![0.0f32; k * n];
+    for ki in 0..k {
+        for ni in 0..n {
+            data_t[ni * k + ki] = w[ki * n + ni];
+        }
+    }
+    let prec: Vec<Precision> = (0..n * kb)
+        .map(|i| match mode {
+            0 => Precision::Fp8,
+            1 => Precision::Fp4,
+            _ => {
+                if (i * 7 + salt) % 3 == 0 {
+                    Precision::Fp8
+                } else {
+                    Precision::Fp4
+                }
+            }
+        })
+        .collect();
+    let t = FgmpTensor::pack(&[n, k], &data_t, &prec, None);
+    let p = PackedPanels::from_tensor(&t, kernels::NR);
+    let deq = p.unpack_kn();
+    (p, deq)
+}
+
+/// K must tile into 16-blocks; N runs off the NR grid (odd widths, < NR,
+/// NR-aligned control) — including an fc2-like deep-K shape where K is the
+/// d_ff axis and N the model width (the transpose-free path).
+const PACKED_SHAPES: &[(usize, usize, usize)] = &[
+    (1, 16, 1),
+    (3, 16, 5),
+    (5, 32, 9),
+    (4, 48, 8),
+    (7, 64, 17),
+    (13, 80, 29),
+    (6, 96, 32),  // fc2-like: K = d_ff (96) down to N = d_model (32)
+    (9, 512, 19), // deep-K odd-N
+];
+
+#[test]
+fn packed_matmul_matches_scalar_on_dequantized_weights() {
+    // The packed kernel (in-register block decode) and its scalar sibling
+    // must both equal the dense scalar matmul over the dequantized copy —
+    // bit-for-bit, over all assignment modes.
+    let mut rng = Rng::new(0xACED);
+    for &(m, k, n) in PACKED_SHAPES {
+        for mode in 0..3usize {
+            let x = rng.normal_vec(m * k, 2.0);
+            let w = rng.normal_vec(k * n, 0.3);
+            let (panels, deq) = panelize(&w, k, n, mode, m + n);
+            let want = kernels::matmul_scalar(&x, &deq, m, k, n);
+            let fast = kernels::matmul_packed(&x, &panels, m);
+            let scalar = kernels::matmul_packed_scalar(&x, &panels, m);
+            for (i, ((a, b), c)) in fast.iter().zip(&want).zip(&scalar).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "({m},{k},{n}) mode {mode} elem {i} fast");
+                assert_eq!(c.to_bits(), b.to_bits(), "({m},{k},{n}) mode {mode} elem {i} scalar");
+            }
+        }
+    }
+}
+
+#[test]
+fn fgmp_matmul_packed_matches_dense_pipeline_bit_exact() {
+    // The full FGMP datapath (PPU activation quantize + multiply) off the
+    // packed bits equals the dequant-f32 path: same outputs, same FP8
+    // fractions, bit-for-bit.
+    let mut rng = Rng::new(0x9A7);
+    let scratch = MatmulScratch::new();
+    for &(m, k, n) in &[(3usize, 32usize, 5usize), (8, 64, 17), (13, 48, 8), (5, 96, 32)] {
+        let x = rng.normal_vec(m * k, 2.0);
+        let w = rng.normal_vec(k * n, 0.3);
+        let cw: Vec<f32> = (0..k).map(|_| rng.f32() + 0.01).collect();
+        let (panels, deq) = panelize(&w, k, n, 2, k);
+        // A threshold that splits blocks (reuse a mid-range score).
+        let threshold = 1e-4f32;
+        let (want, want_frac) = fgmp_matmul(&x, &deq, m, k, n, &cw, threshold, &scratch);
+        let (got, got_frac) = fgmp_matmul_packed(&x, &panels, m, &cw, threshold, &scratch);
+        assert_eq!(got_frac, want_frac, "({m},{k},{n}) fp8 fraction");
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "({m},{k},{n}) elem {i}");
+        }
     }
 }
 

@@ -6,7 +6,7 @@ use fgmp::quant::nvfp4::{nvfp4_roundtrip, nvfp4_roundtrip_block};
 use fgmp::quant::{
     fp4::{decode_e2m1, encode_e2m1},
     fp8::{decode_e4m3, encode_e4m3},
-    nvfp4_scale, quant_e2m1, quant_e4m3, sw_clip_block, FgmpTensor, Precision,
+    nvfp4_scale, quant_e2m1, quant_e4m3, sw_clip_block, FgmpTensor, PackedPanels, Precision,
 };
 use fgmp::util::Rng;
 use fgmp::BLOCK;
@@ -182,6 +182,66 @@ fn pack_unpack_pack_byte_identical_with_same_scales() {
         assert_eq!(t1.meta, t2.meta, "metadata stable");
         // and the values themselves are a fixed point under re-unpacking
         assert_eq!(deq, t2.unpack(), "values stable");
+    }
+}
+
+#[test]
+fn panel_pack_unpack_roundtrip_random_shapes() {
+    // The k-panelized execution layout is a pure byte reordering of the
+    // storage tensor: over random odd (N, K) shapes, panel widths, mixed
+    // assignments (incl. clip scales) and both all-FP8/all-FP4 extremes,
+    // unpack_kn must equal the transposed FgmpTensor::unpack bit-for-bit,
+    // with byte/scale/meta counts conserved.
+    let mut rng = Rng::new(0x9A17);
+    for trial in 0..60 {
+        let n = 1 + rng.below(40);
+        let kb = 1 + rng.below(6);
+        let k = kb * BLOCK;
+        let nr = [4usize, 8, 8, 8, 16][rng.below(5)];
+        let data: Vec<f32> = (0..n * k).map(|_| (rng.normal() * 4.0) as f32).collect();
+        let prec: Vec<Precision> = (0..n * kb)
+            .map(|_| match trial % 3 {
+                0 => {
+                    if rng.f64() < 0.3 {
+                        Precision::Fp8
+                    } else {
+                        Precision::Fp4
+                    }
+                }
+                1 => Precision::Fp8,
+                _ => Precision::Fp4,
+            })
+            .collect();
+        let n_fp4 = prec.iter().filter(|&&p| p == Precision::Fp4).count();
+        let clip: Option<Vec<f32>> = if trial % 2 == 0 {
+            Some((0..n_fp4).map(|_| 0.125 + rng.f32()).collect())
+        } else {
+            None
+        };
+        let t = FgmpTensor::pack(&[n, k], &data, &prec, clip.as_deref());
+        let p = PackedPanels::from_tensor(&t, nr);
+        assert_eq!(p.n_blocks, t.n_blocks);
+        assert_eq!(p.n_fp8, t.n_fp8);
+        assert_eq!(p.payload.len(), t.payload.len(), "payload bytes conserved");
+        assert_eq!(p.scales.len(), t.scales.len(), "scale bytes conserved");
+        assert_eq!(p.n_panels(), n.div_ceil(nr));
+        let deq_nk = t.unpack();
+        let deq_kn = p.unpack_kn();
+        for ni in 0..n {
+            for ki in 0..k {
+                assert_eq!(
+                    deq_kn[ki * n + ni].to_bits(),
+                    deq_nk[ni * k + ki].to_bits(),
+                    "trial {trial} (n={n},k={k},nr={nr}) elem ({ni},{ki})"
+                );
+            }
+        }
+        // Resident accounting: the packed bytes match the storage-format
+        // footprint (payload+scales+meta) plus the small panel tables.
+        let (pb, sb, mb) = t.footprint_bits();
+        let format_bytes = pb / 8 + sb / 8 + mb.div_ceil(8);
+        assert!(p.resident_bytes() >= format_bytes);
+        assert!(p.resident_bytes() <= format_bytes + 7 + 3 * 8 * p.n_panels());
     }
 }
 
