@@ -9,7 +9,7 @@ use std::time::Duration;
 use crate::io::synth::SynthConfig;
 use crate::model::forward::{
     fgmp_matmul, fgmp_matmul_packed, forward, forward_prefill, forward_prefill_batch,
-    forward_step, forward_step_batch, ModelArch, Params,
+    forward_step, forward_step_batch, Act, ModelArch, NormKind, Params, PosKind,
 };
 use crate::model::kv::{KvPrecision, KvState};
 use crate::quant::fp8::quant_e4m3_slice;
@@ -47,6 +47,8 @@ pub mod names {
     pub const DECODE_CHURN_PAGED: &str = "decode_paged_churn_d512";
     pub const PREFILL_SEQ: &str = "prefill_sequential_d512_p16x8";
     pub const PREFILL_BATCHED: &str = "prefill_batched_d512_p16x8";
+    pub const DECODE_LONGCTX_FP16: &str = "decode_step_longctx_d512_w4k_fp16";
+    pub const DECODE_LONGCTX_FP8: &str = "decode_step_longctx_d512_w4k_fp8";
 
     pub const SPEEDUP_MATMUL: &str = "speedup_matmul_d512";
     pub const SPEEDUP_MATMUL_T: &str = "speedup_matmul_t_d512";
@@ -61,8 +63,12 @@ pub mod names {
     /// Fractional resident weight-memory saving of the packed execution
     /// tensor vs a dequantized f32 copy (≥ 0.30 floor).
     pub const WEIGHT_MEM_SAVING_PACKED: &str = "weight_mem_saving_packed_d512";
+    /// FP16-step min time over FP8-step min time at the 4k window (≥ 0.7
+    /// floor: reading stored E4M3 bytes through the in-register LUT must
+    /// stay within ~1.4x of the f32 read path even on the scalar build).
+    pub const RATIO_DECODE_LONGCTX_FP8: &str = "ratio_decode_longctx_fp8_d512";
 
-    pub const ALL: [&str; 22] = [
+    pub const ALL: [&str; 24] = [
         MATMUL_SCALAR,
         MATMUL_BLOCKED,
         MATMUL_DEQUANT,
@@ -85,8 +91,10 @@ pub mod names {
         DECODE_CHURN_PAGED,
         PREFILL_SEQ,
         PREFILL_BATCHED,
+        DECODE_LONGCTX_FP16,
+        DECODE_LONGCTX_FP8,
     ];
-    pub const ALL_DERIVED: [&str; 8] = [
+    pub const ALL_DERIVED: [&str; 9] = [
         SPEEDUP_MATMUL,
         SPEEDUP_MATMUL_T,
         SPEEDUP_QUANT,
@@ -95,6 +103,7 @@ pub mod names {
         RATIO_DECODE_PAGED,
         RATIO_MATMUL_PACKED,
         WEIGHT_MEM_SAVING_PACKED,
+        RATIO_DECODE_LONGCTX_FP8,
     ];
 }
 
@@ -429,6 +438,79 @@ fn paged_benches(
     pair(suite, names::SPEEDUP_PREFILL_BATCHED, seq, bat);
 }
 
+/// Long-context decode at d512: one occupancy-1 decode step against a
+/// ~4k-token KV window, FP16-stored vs FP8-stored cache. The FP8 step runs
+/// the LUT-decode attention kernels straight off the stored E4M3 bytes (no
+/// per-step f32 materialize), so its min-time ratio against the FP16 step
+/// — `ratio_decode_longctx_fp8_d512` — is the CI floor guarding the
+/// dequantize-free read path at the window sizes where attention reads
+/// dominate the step. The window is filled by direct row appends (the
+/// `small-llama` preset stops at max_seq 128, so this arch is built here).
+pub fn longctx_benches(suite: &mut BenchSuite, budget: Duration) {
+    let mut rng = Rng::new(45);
+    let arch = ModelArch {
+        vocab: 256,
+        d_model: 512,
+        n_layers: 2,
+        n_heads: 8,
+        d_ff: 1536,
+        act: Act::SwiGlu,
+        norm: NormKind::Rms,
+        pos: PosKind::Rope,
+        max_seq: 4096,
+    };
+    let params: Vec<(String, Vec<f32>)> = arch
+        .param_names()
+        .iter()
+        .map(|nm| {
+            let len: usize = arch.param_shape(nm).iter().product();
+            let data =
+                if nm.contains("norm") { vec![1.0f32; len] } else { rng.normal_vec(len, 0.02) };
+            (nm.clone(), data)
+        })
+        .collect();
+    let pm = Params::from_dense(
+        params.iter().map(|(nm, v)| (nm.as_str(), v.as_slice())).collect(),
+    );
+
+    let window = 4094usize; // leaves room for the stepped row under max_seq
+    let row = rng.normal_vec(arch.d_model, 0.05);
+    let tok = [3i32];
+    let mut fp16_min: Option<f64> = None;
+    for (i, (prec, name)) in [
+        (KvPrecision::Fp16, names::DECODE_LONGCTX_FP16),
+        (KvPrecision::Fp8, names::DECODE_LONGCTX_FP8),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let mut kv = KvState::new(&arch, prec);
+        for layer in &mut kv.layers {
+            for _ in 0..window {
+                layer.k.push_row(&row);
+                layer.v.push_row(&row);
+            }
+        }
+        kv.advance(window);
+        let mut owned = [kv];
+        let r = bench(name, Some(1), budget, || {
+            {
+                let mut kvs: Vec<&mut KvState> = owned.iter_mut().collect();
+                black_box(forward_step_batch(&arch, &pm, &tok, &mut kvs, None).unwrap());
+            }
+            owned[0].truncate(window);
+        });
+        if i == 0 {
+            fp16_min = Some(r.min.as_secs_f64());
+        } else if let Some(base) = fp16_min {
+            let ratio = base / r.min.as_secs_f64().max(1e-12);
+            println!("  -> {} {ratio:.2}x", names::RATIO_DECODE_LONGCTX_FP8);
+            suite.derive(names::RATIO_DECODE_LONGCTX_FP8, ratio);
+        }
+        keep(suite, r);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -468,5 +550,11 @@ mod tests {
             .derived
             .get(names::WEIGHT_MEM_SAVING_PACKED)
             .is_some_and(|&v| v >= 0.30));
+        // The long-context stored-precision floor: FP8-KV attention through
+        // the LUT-decode kernel must stay within ~1.4x of the f32 path.
+        assert!(baseline
+            .derived
+            .get(names::RATIO_DECODE_LONGCTX_FP8)
+            .is_some_and(|&v| v >= 0.7));
     }
 }

@@ -35,6 +35,9 @@ struct Inner {
     kv_slots_used_sum: u64,
     kv_slots_cap_sum: u64,
     deferred_admissions: u64,
+    // KV read traffic at stored precision (attention inputs).
+    kv_read_tokens: u64,
+    kv_bits_weighted: f64,
 }
 
 /// A point-in-time snapshot.
@@ -81,6 +84,10 @@ pub struct Snapshot {
     pub kv_page_fill: f64,
     /// Admissions deferred because the pool could not hold the session yet.
     pub deferred_admissions: u64,
+    /// Token-weighted mean bits/value the attention kernels read from the
+    /// KV cache across decode steps — the *stored* precision (FP16, FP8,
+    /// or the attention PPU's realized FGMP mix), not the compute width.
+    pub kv_read_bits_per_value: f64,
 }
 
 impl Metrics {
@@ -168,6 +175,18 @@ impl Metrics {
         self.inner.lock().unwrap().deferred_admissions += n;
     }
 
+    /// One decode step read `kv_tokens` cached tokens at a stored width of
+    /// `bits_per_value` bits per cached value (token-weighted when the
+    /// step's sessions mix precisions).
+    pub fn record_kv_traffic(&self, kv_tokens: u64, bits_per_value: f64) {
+        if kv_tokens == 0 {
+            return;
+        }
+        let mut m = self.inner.lock().unwrap();
+        m.kv_read_tokens += kv_tokens;
+        m.kv_bits_weighted += bits_per_value * kv_tokens as f64;
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let m = self.inner.lock().unwrap();
         let mut lats = m.latencies_us.clone();
@@ -240,6 +259,11 @@ impl Metrics {
                 m.kv_slots_used_sum as f64 / m.kv_slots_cap_sum as f64
             },
             deferred_admissions: m.deferred_admissions,
+            kv_read_bits_per_value: if m.kv_read_tokens == 0 {
+                0.0
+            } else {
+                m.kv_bits_weighted / m.kv_read_tokens as f64
+            },
         }
     }
 }
@@ -277,6 +301,18 @@ mod tests {
         assert_eq!(s.kv_pool_occupancy, 0.0);
         assert_eq!(s.kv_page_fill, 0.0);
         assert_eq!(s.deferred_admissions, 0);
+        assert_eq!(s.kv_read_bits_per_value, 0.0);
+    }
+
+    #[test]
+    fn kv_traffic_is_token_weighted() {
+        let m = Metrics::new();
+        // 100 tokens read at FP16, 300 at FP8 → (100·16 + 300·8) / 400.
+        m.record_kv_traffic(100, 16.0);
+        m.record_kv_traffic(300, 8.0);
+        m.record_kv_traffic(0, 4.0); // empty step: ignored
+        let s = m.snapshot();
+        assert!((s.kv_read_bits_per_value - 10.0).abs() < 1e-9);
     }
 
     #[test]

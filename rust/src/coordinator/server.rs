@@ -53,6 +53,14 @@ pub struct ServerConfig {
     /// ([`crate::model::kv::PAGE_TOKENS`] tokens each); `None` keeps the
     /// engine default. The serve `--kv-pages` flag.
     pub kv_pages: Option<usize>,
+    /// Accelerator energy model both workers price batches against
+    /// (previously hardcoded to `EnergyModel::default()` inside the
+    /// energy helpers — now an explicit serving-config decision).
+    pub energy: EnergyModel,
+    /// Attention-input PPU threshold forwarded to the engine
+    /// ([`EngineOptions::attn_threshold`]); `None` keeps attention inputs
+    /// full-precision.
+    pub attn_threshold: Option<f32>,
 }
 
 /// A running coordinator instance.
@@ -93,7 +101,11 @@ impl Server {
             let (cfg, metrics) = (cfg.clone(), metrics.clone());
             handles.push(std::thread::spawn(move || {
                 let rt = Runtime::cpu().expect("runtime (gen worker)");
-                let opts = EngineOptions { kv: cfg.kv_precision, kv_pages: cfg.kv_pages };
+                let opts = EngineOptions {
+                    kv: cfg.kv_precision,
+                    kv_pages: cfg.kv_pages,
+                    attn_threshold: cfg.attn_threshold,
+                };
                 match Engine::with_options(&rt, &logits_spec, logits_args_tail, opts) {
                     Ok(engine) => generate_worker(cfg, engine, gen_rx, metrics),
                     Err(e) => {
@@ -119,11 +131,15 @@ impl Server {
     }
 }
 
-/// Simulated accelerator energy of one forward over `m` token rows:
-/// (fgmp_pj, all-fp8 baseline pj).
-pub fn batch_energy(shapes: &[LayerProfile], act_fp8: &[f32], m: usize) -> (f64, f64) {
+/// Simulated accelerator energy of one forward over `m` token rows under
+/// `em`: (fgmp_pj, all-fp8 baseline pj).
+pub fn batch_energy(
+    shapes: &[LayerProfile],
+    act_fp8: &[f32],
+    m: usize,
+    em: &EnergyModel,
+) -> (f64, f64) {
     let dp = DatapathConfig::default();
-    let em = EnergyModel::default();
     let mut fgmp = 0.0;
     let mut fp8 = 0.0;
     for (i, p) in shapes.iter().enumerate() {
@@ -134,17 +150,24 @@ pub fn batch_energy(shapes: &[LayerProfile], act_fp8: &[f32], m: usize) -> (f64,
             weight_fp8: p.weight_fp8,
             act_fp8: act_fp8.get(i).copied().unwrap_or(0.0) as f64,
         };
-        fgmp += simulate_matmul(&dp, &em, &job, true).total_energy_pj();
+        fgmp += simulate_matmul(&dp, em, &job, true).total_energy_pj();
         let j8 = MatmulJob { weight_fp8: 1.0, act_fp8: 1.0, ..job };
-        let r8 = simulate_matmul(&dp, &em, &j8, true);
+        let r8 = simulate_matmul(&dp, em, &j8, true);
         fp8 += r8.total_energy_pj() - em.e_mux_tax * r8.vmacs as f64;
     }
     (fgmp, fp8)
 }
 
 /// KV-sizing dims recovered from the serving layer profiles (n_layers from
-/// the layer indices, d_model from the qkv input width).
-pub fn kv_dims_from_profiles(shapes: &[LayerProfile]) -> KvModelDims {
+/// the layer indices, d_model from the qkv input width). Malformed or
+/// empty profiles are an **error** — previously they silently produced
+/// zeroed dims, making every energy report claim zero KV/attention
+/// traffic; callers must either propagate or log-and-degrade explicitly.
+pub fn kv_dims_from_profiles(shapes: &[LayerProfile]) -> Result<KvModelDims> {
+    anyhow::ensure!(
+        !shapes.is_empty(),
+        "no layer profiles: cannot size the KV model (energy would report zero cache traffic)"
+    );
     let n_layers = shapes.iter().map(|p| p.layer + 1).max().unwrap_or(0);
     let d_model = shapes
         .iter()
@@ -152,16 +175,24 @@ pub fn kv_dims_from_profiles(shapes: &[LayerProfile]) -> KvModelDims {
         .map(|p| p.k)
         .or_else(|| shapes.first().map(|p| p.k))
         .unwrap_or(0);
+    anyhow::ensure!(
+        n_layers > 0 && d_model > 0,
+        "malformed layer profiles (n_layers {n_layers}, d_model {d_model}): \
+         KV traffic would be charged as zero"
+    );
     let weight_elements = shapes.iter().map(|p| (p.k * p.n) as u64).sum();
-    KvModelDims { n_layers, d_model, weight_elements }
+    Ok(KvModelDims { n_layers, d_model, weight_elements })
 }
 
-/// Simulated energy of one decode step: the datapath compute over `rows`
-/// new token rows **plus** the KV-cache read traffic — every step streams
-/// each live session's whole cache (`kv_tokens` tokens in total) through
-/// the attention units at `kv_bits_per_value`. The baseline is all-FP8
-/// compute with the paper's 16-bit KV cache, so an FP8 cache's traffic
-/// savings show up in `energy_savings` alongside the datapath's.
+/// Simulated energy of one decode step under `em`: the datapath compute
+/// over `rows` new token rows **plus** the KV-cache read traffic — every
+/// step streams each live session's whole cache (`kv_tokens` tokens in
+/// total) through the attention units at `kv_bits_per_value`, the *stored*
+/// precision the attend kernels actually read (8-bit E4M3 bytes for FP8
+/// caches, or the PPU's realized FGMP mix). The baseline is all-FP8
+/// compute with the paper's 16-bit KV cache, so a quantized cache's
+/// traffic savings show up in `energy_savings` alongside the datapath's.
+#[allow(clippy::too_many_arguments)]
 pub fn decode_step_energy(
     shapes: &[LayerProfile],
     act_fp8: &[f32],
@@ -169,9 +200,9 @@ pub fn decode_step_energy(
     dims: &KvModelDims,
     kv_tokens: u64,
     kv_bits_per_value: f64,
+    em: &EnergyModel,
 ) -> (f64, f64) {
-    let (fgmp, fp8) = batch_energy(shapes, act_fp8, rows);
-    let em = EnergyModel::default();
+    let (fgmp, fp8) = batch_energy(shapes, act_fp8, rows, em);
     let kv = kv_cache_bits(dims, kv_tokens, kv_bits_per_value) as f64 * em.e_kv_bit;
     let kv16 = kv_cache_bits(dims, kv_tokens, 16.0) as f64 * em.e_kv_bit;
     (fgmp + kv, fp8 + kv16)
@@ -221,7 +252,7 @@ fn score_worker(
                 let (nll, ntok, act_fp8) = (&out[0], &out[1], &out[2]);
                 let rows = batch.len();
                 let tokens_scored: f64 = ntok.iter().map(|&v| v as f64).sum();
-                let (e, e8) = batch_energy(&cfg.layer_shapes, act_fp8, b * s);
+                let (e, e8) = batch_energy(&cfg.layer_shapes, act_fp8, b * s, &cfg.energy);
                 let now = Instant::now();
                 let lats: Vec<_> =
                     batch.iter().map(|r| now.duration_since(r.submitted_at)).collect();
@@ -315,8 +346,15 @@ fn generate_worker(
     // the decode batch, not the score graph's B.
     let policy = BatchPolicy { max_batch: cap, ..cfg.policy.clone() };
     let mut batcher = Batcher::new(policy, rx);
-    let kv_dims = kv_dims_from_profiles(&cfg.layer_shapes);
-    let kv_bits = engine.kv_precision().bits_per_value();
+    // Malformed profiles degrade loudly: warn once and charge no KV
+    // traffic, instead of the old silent zeroed dims.
+    let kv_dims = match kv_dims_from_profiles(&cfg.layer_shapes) {
+        Ok(dims) => dims,
+        Err(e) => {
+            eprintln!("gen worker: {e}; KV/attention traffic will not be charged");
+            KvModelDims { n_layers: 0, d_model: 0, weight_elements: 0 }
+        }
+    };
     // Admission budget: Σ per-request worst-case pages of live sessions
     // stays within the pool, so prefill/decode/roll can never hit an
     // exhausted pool mid-stream (None = windowed fallback, unbounded).
@@ -438,15 +476,20 @@ fn generate_worker(
         let busy = t0.elapsed();
         match stepped {
             Ok(step) => {
+                // KV traffic priced at the *stored* bits the attend
+                // kernels actually read this step (precision nominal, or
+                // the attention PPU's realized FGMP mix).
                 let (e, e8) = decode_step_energy(
                     &cfg.layer_shapes,
                     &step.act_fp8,
                     step.rows,
                     &kv_dims,
                     step.kv_tokens,
-                    kv_bits,
+                    step.kv_bits_per_value,
+                    &cfg.energy,
                 );
                 metrics.record_decode_step(step.rows, cap, busy, e, e8);
+                metrics.record_kv_traffic(step.kv_tokens, step.kv_bits_per_value);
                 for lg in &mut live {
                     lg.produced.push(lg.sess.next_token());
                 }

@@ -48,12 +48,15 @@ COMMANDS
   report     --linear blk0.fc1 --fp4 0.9 --rows 24
   serve      --fp4 0.7 --requests 64 [--gen 8] [--gen-tokens 16]
              [--kv fp16|fp8] [--decode-batch 8] [--kv-pages N]
+             [--attn-ppu T]
              score + generate traffic through the coordinator: scoring
              batches the one-shot graph, generation runs the KV-cached
              continuous-batching decode loop over a paged KV arena
              (--kv picks the cache precision, --decode-batch its
              occupancy cap, --kv-pages the page-pool capacity; admits
-             the pool cannot hold yet are deferred, not failed)
+             the pool cannot hold yet are deferred, not failed;
+             --attn-ppu runs the FGMP PPU over attention inputs at
+             impact threshold T and prices KV reads at the realized mix)
   generate   --prompt-len 16 --tokens 32 [--sessions 4] [--kv fp16|fp8]
              [--kv-pages N]
              drive the stateful Engine directly: prefill all sessions
@@ -328,7 +331,7 @@ fn cmd_tasks(cli: &Cli, fp4: &[f64], max_items: usize) -> Result<()> {
 /// more than 2x against the checked-in baseline, or a derived speedup
 /// falls below its floor.
 fn cmd_bench(cli: &Cli) -> Result<()> {
-    use fgmp::benchsuite::{decode_benches, kernel_benches, pipeline_benches};
+    use fgmp::benchsuite::{decode_benches, kernel_benches, longctx_benches, pipeline_benches};
     use fgmp::util::bench::{budget_from_env, BenchSuite};
     use std::time::Duration;
 
@@ -346,6 +349,7 @@ fn cmd_bench(cli: &Cli) -> Result<()> {
     kernel_benches(&mut suite, budget);
     pipeline_benches(&mut suite, budget);
     decode_benches(&mut suite, budget);
+    longctx_benches(&mut suite, budget);
 
     let path = suite.write(&out_dir)?;
     println!("wrote {}", path.display());
@@ -389,7 +393,10 @@ fn cmd_serve(cli: &Cli, fp4: f64, requests: usize) -> Result<()> {
     let kv_precision = KvPrecision::parse(&cli.str("kv", "fp16"))?;
     let gen_requests = cli.usize("gen", 8);
     let gen_tokens = cli.usize("gen_tokens", 16);
-    let kv_dims = kv_dims_from_profiles(&shapes);
+    let kv_dims = kv_dims_from_profiles(&shapes)?;
+    // `--attn-ppu T` routes attention inputs (Q rows and appended K/V
+    // rows) through the FGMP PPU at threshold T before the dot products.
+    let attn_threshold = cli.flags.get("attn_ppu").and_then(|v| v.parse::<f32>().ok());
 
     let scfg = ServerConfig {
         batch: ev.batch,
@@ -400,6 +407,8 @@ fn cmd_serve(cli: &Cli, fp4: f64, requests: usize) -> Result<()> {
         kv_precision,
         decode_batch: cli.usize("decode_batch", 8),
         kv_pages: cli.opt_usize("kv_pages"),
+        energy: fgmp::hwsim::energy::EnergyModel::default(),
+        attn_threshold,
     };
     let windows = ev.eval_windows(requests.div_ceil(ev.batch));
     let seq = ev.seq;
@@ -472,6 +481,10 @@ fn cmd_serve(cli: &Cli, fp4: f64, requests: usize) -> Result<()> {
     println!("kv: {} cache, {:.0} B/token ({:.0} B/token at fp16)",
              kv_precision.label(), kv_bytes_per_tok,
              kv_cache_bits(&kv_dims, 1, 16.0) as f64 / 8.0);
+    if snap.kv_read_bits_per_value > 0.0 {
+        println!("kv reads: {:.2} bits/value stored precision (token-weighted over decode)",
+                 snap.kv_read_bits_per_value);
+    }
     let wm = qm.weight_memory();
     println!("exec weights: {:.3} MiB packed in-engine ({} linears) vs {:.3} MiB f32 — {:.1}% smaller",
              wm.packed_bytes as f64 / (1 << 20) as f64, wm.linears,

@@ -18,7 +18,7 @@
 use std::collections::HashMap;
 
 use crate::io::manifest::{LinearSpec, Manifest};
-use crate::model::kv::{KvState, LayerKv};
+use crate::model::kv::{lock_pools, KvState, KvView, LayerKv};
 use crate::quant::PackedPanels;
 use crate::util::kernels::MatmulScratch;
 use crate::util::{kernels, par_map, Json};
@@ -333,6 +333,14 @@ pub struct QuantInputs<'a> {
     pub act_weights: Vec<&'a [f32]>,
     /// Per-linear impact-score thresholds.
     pub thresholds: &'a [f32],
+    /// Attention-input PPU threshold (paper §4.2 applied to the attention
+    /// datapath): when set, post-RoPE Q rows and every new K/V row are
+    /// round-tripped block-wise to mixed FP8/NVFP4 (unit channel weighting)
+    /// before use/storage, and the per-buffer high/low block mix feeds
+    /// [`KvState::effective_kv_bits`]. `None` keeps attention inputs at
+    /// full precision — the prior behavior, bit-for-bit. Requires
+    /// `d_model % BLOCK == 0`.
+    pub attn_threshold: Option<f32>,
 }
 
 /// Forward result.
@@ -646,33 +654,52 @@ fn attend_row(
     }
 }
 
-/// Reusable decode-on-read scratch: one `(K, V)` buffer pair per session,
-/// shared across the layers of one prefill or decode step. Materializing a
-/// cache clears-and-extends its pair, so capacity is paid once per step
-/// instead of once per layer per step (the gather/dequant still runs per
-/// layer — only the allocation is amortized).
-struct KvScratch {
-    bufs: Vec<(Vec<f32>, Vec<f32>)>,
-}
-
-impl KvScratch {
-    fn for_sessions(n: usize) -> KvScratch {
-        KvScratch { bufs: (0..n).map(|_| (Vec::new(), Vec::new())).collect() }
+/// One causal attention output row straight off a KV cache's stored pages:
+/// dispatch on the view precision into the matching stored-precision kernel
+/// from [`kernels`]. FP16 caches attend over their f32 spans (identical
+/// arithmetic to [`attend_row`] over the materialized copy — a pure copy
+/// elimination) and FP8 caches attend over raw E4M3 bytes with the decode
+/// LUT inside the dot-product loops (bit-identical to materialize-then-dot
+/// because `lut[b] == decode_e4m3(b)`; property-tested in
+/// `tests/kernel_props.rs`).
+#[allow(clippy::too_many_arguments)]
+fn attend_view(
+    qr: &[f32],
+    kview: &KvView<'_>,
+    vview: &KvView<'_>,
+    len: usize,
+    d: usize,
+    hi: usize,
+    dh: usize,
+    scale: f32,
+    sc: &mut [f32],
+    or: &mut [f32],
+) {
+    match (kview, vview) {
+        (KvView::F32 { pages: kp }, KvView::F32 { pages: vp }) => {
+            kernels::attend_row_f32_pages(qr, kp, vp, len, d, hi, dh, scale, sc, or)
+        }
+        (KvView::Fp8 { pages: kp }, KvView::Fp8 { pages: vp }) => {
+            kernels::attend_row_e4m3_pages(qr, kp, vp, len, d, hi, dh, scale, sc, or)
+        }
+        _ => unreachable!("K and V buffers of one layer share a precision"),
     }
 }
 
 /// Prefill attention over `s` fused qkv rows `(s, 3D)` → `(s, D)` (one
 /// sequence), appending every position's post-RoPE key and value to `lkv`
-/// and attending over the cache *as stored* — so an FP8 cache sees its own
-/// round-tripped keys/values from the first token, consistent with later
-/// decode steps. With an FP16 cache this is bit-identical to [`attention`].
-/// `scratch` is the caller's reusable materialize pair.
+/// and attending over the cache *as stored* — FP8 caches are read as raw
+/// E4M3 bytes through the LUT-in-loop kernels, never materialized to f32 —
+/// so an FP8 cache sees its own round-tripped keys/values from the first
+/// token, consistent with later decode steps. With an FP16 cache this is
+/// bit-identical to [`attention`]. `attn_ppu` is the optional attention
+/// PPU threshold from [`QuantInputs::attn_threshold`].
 fn attention_prefill(
     arch: &ModelArch,
     qkv: &[f32],
     s: usize,
     lkv: &mut LayerKv,
-    scratch: &mut (Vec<f32>, Vec<f32>),
+    attn_ppu: Option<f32>,
 ) -> Vec<f32> {
     let d = arch.d_model;
     let h = arch.n_heads;
@@ -682,9 +709,16 @@ fn attention_prefill(
     let (cos, sin) = if rope { rope_tables(s, half) } else { (Vec::new(), Vec::new()) };
     let scale = 1.0 / (dh as f32).sqrt();
 
-    // Split fused rows; rotate q and k per head; append k/v to the cache.
+    // Split fused rows; rotate q and k per head; PPU-assign blocks when the
+    // attention PPU is on; append k/v to the cache.
     let mut q = vec![0.0f32; s * d];
     let mut kbuf = vec![0.0f32; d];
+    let (mut unit, mut ppu_tmp) = (Vec::new(), Vec::new());
+    if attn_ppu.is_some() {
+        unit = vec![1.0f32; d];
+        ppu_tmp = vec![0.0f32; d];
+    }
+    let nb = d / BLOCK;
     for si in 0..s {
         let row = &qkv[si * 3 * d..(si + 1) * 3 * d];
         q[si * d..(si + 1) * d].copy_from_slice(&row[..d]);
@@ -696,13 +730,29 @@ fn attention_prefill(
                 rotate(&mut kbuf[hi * dh..(hi + 1) * dh], c, sn, half);
             }
         }
-        lkv.k.push_row(&kbuf);
-        lkv.v.push_row(&row[2 * d..]);
+        if let Some(t) = attn_ppu {
+            // Q rows feed the datapath only (not stored): round-trip in
+            // place, hi count uncounted.
+            let qrow = &mut q[si * d..(si + 1) * d];
+            kernels::ppu_quantize_row(qrow, &unit, t, &mut ppu_tmp);
+            qrow.copy_from_slice(&ppu_tmp);
+            let hi_k = kernels::ppu_quantize_row(&kbuf, &unit, t, &mut ppu_tmp);
+            lkv.k.push_row(&ppu_tmp);
+            lkv.k.note_ppu(hi_k, nb);
+            let hi_v = kernels::ppu_quantize_row(&row[2 * d..], &unit, t, &mut ppu_tmp);
+            lkv.v.push_row(&ppu_tmp);
+            lkv.v.note_ppu(hi_v, nb);
+        } else {
+            lkv.k.push_row(&kbuf);
+            lkv.v.push_row(&row[2 * d..]);
+        }
     }
 
-    let (ks, vs) = scratch;
-    let kmat = lkv.k.materialize(ks);
-    let vmat = lkv.v.materialize(vs);
+    // All appends are done: take the pool read lock once (a no-op for flat
+    // caches) and attend over the stored pages directly.
+    let lock = lock_pools([&lkv.k, &lkv.v]);
+    let kview = lkv.k.view(&lock);
+    let vview = lkv.v.view(&lock);
 
     let heads: Vec<usize> = (0..h).collect();
     let outs = par_map(&heads, |&hi| {
@@ -710,10 +760,10 @@ fn attention_prefill(
         let mut sc = vec![0.0f32; s];
         for si in 0..s {
             let qr = &q[si * d + hi * dh..si * d + (hi + 1) * dh];
-            attend_row(
+            attend_view(
                 qr,
-                kmat,
-                vmat,
+                &kview,
+                &vview,
                 si + 1,
                 d,
                 hi,
@@ -739,13 +789,15 @@ fn attention_prefill(
 /// One decode step of attention for `n` independent sessions: fused qkv
 /// rows `(n, 3D)`, one per session, each appended to its own cache at its
 /// own position, then attended over that cache → `(n, D)`. Parallel over
-/// (session, head) pairs like [`attention`] is over (batch, head).
+/// (session, head) pairs like [`attention`] is over (batch, head). The
+/// caches are read at stored precision (page views, LUT decode in-loop for
+/// FP8) — no per-step materialize scratch exists on this path.
 fn attention_step(
     arch: &ModelArch,
     qkv: &[f32],
     caches: &mut [&mut LayerKv],
     positions: &[usize],
-    scratch: &mut KvScratch,
+    attn_ppu: Option<f32>,
 ) -> Vec<f32> {
     let n = positions.len();
     let d = arch.d_model;
@@ -758,6 +810,12 @@ fn attention_step(
     let mut q = vec![0.0f32; n * d];
     let mut kbuf = vec![0.0f32; d];
     let (mut cos, mut sin) = (vec![0.0f32; half], vec![0.0f32; half]);
+    let (mut unit, mut ppu_tmp) = (Vec::new(), Vec::new());
+    if attn_ppu.is_some() {
+        unit = vec![1.0f32; d];
+        ppu_tmp = vec![0.0f32; d];
+    }
+    let nb = d / BLOCK;
     for i in 0..n {
         let row = &qkv[i * 3 * d..(i + 1) * 3 * d];
         q[i * d..(i + 1) * d].copy_from_slice(&row[..d]);
@@ -769,30 +827,40 @@ fn attention_step(
                 rotate(&mut kbuf[hi * dh..(hi + 1) * dh], &cos, &sin, half);
             }
         }
-        caches[i].k.push_row(&kbuf);
-        caches[i].v.push_row(&row[2 * d..]);
+        if let Some(t) = attn_ppu {
+            let qrow = &mut q[i * d..(i + 1) * d];
+            kernels::ppu_quantize_row(qrow, &unit, t, &mut ppu_tmp);
+            qrow.copy_from_slice(&ppu_tmp);
+            let hi_k = kernels::ppu_quantize_row(&kbuf, &unit, t, &mut ppu_tmp);
+            caches[i].k.push_row(&ppu_tmp);
+            caches[i].k.note_ppu(hi_k, nb);
+            let hi_v = kernels::ppu_quantize_row(&row[2 * d..], &unit, t, &mut ppu_tmp);
+            caches[i].v.push_row(&ppu_tmp);
+            caches[i].v.note_ppu(hi_v, nb);
+        } else {
+            caches[i].k.push_row(&kbuf);
+            caches[i].v.push_row(&row[2 * d..]);
+        }
     }
 
-    // Materialize each session's cache once (decodes FP8 bytes / gathers
-    // pages), then fan the (session, head) attention rows out across
-    // threads. The scratch pairs come from the caller and persist across
-    // the layers of this step.
-    debug_assert!(scratch.bufs.len() >= n);
-    let mats: Vec<(&[f32], &[f32])> = caches
-        .iter()
-        .zip(scratch.bufs.iter_mut())
-        .map(|(c, (ks, vs))| (c.k.materialize(ks), c.v.materialize(vs)))
-        .collect();
+    // Appends done for every session: lock each distinct pool once (dedup —
+    // engine sessions share one pool), build per-session stored-precision
+    // views, then fan the (session, head) attention rows out across
+    // threads. The guard stays on this thread; the views are plain slices.
+    let caches_ro: Vec<&LayerKv> = caches.iter().map(|c| &**c).collect();
+    let lock = lock_pools(caches_ro.iter().flat_map(|c| [&c.k, &c.v]));
+    let views: Vec<(KvView<'_>, KvView<'_>)> =
+        caches_ro.iter().map(|c| (c.k.view(&lock), c.v.view(&lock))).collect();
 
     let pairs: Vec<(usize, usize)> =
         (0..n).flat_map(|i| (0..h).map(move |hi| (i, hi))).collect();
     let rows = par_map(&pairs, |&(i, hi)| {
-        let (kmat, vmat) = mats[i];
+        let (kview, vview) = &views[i];
         let len = positions[i] + 1;
         let qr = &q[i * d + hi * dh..i * d + (hi + 1) * dh];
         let mut sc = vec![0.0f32; len];
         let mut o = vec![0.0f32; dh];
-        attend_row(qr, kmat, vmat, len, d, hi, dh, scale, &mut sc, &mut o);
+        attend_view(qr, kview, vview, len, d, hi, dh, scale, &mut sc, &mut o);
         o
     });
 
@@ -1039,6 +1107,20 @@ fn lm_head(
     Ok(matmul_transposed(&sel, embed, take.len(), d, arch.vocab))
 }
 
+/// The attention PPU blocks whole rows of width `d_model`, so the knob
+/// requires a block-aligned model width (every shipped preset satisfies
+/// this; it fails loudly instead of mis-blocking otherwise).
+fn ensure_attn_ppu_shape(arch: &ModelArch, q: &QuantInputs<'_>) -> Result<()> {
+    if q.attn_threshold.is_some() {
+        anyhow::ensure!(
+            arch.d_model % BLOCK == 0,
+            "attention PPU requires d_model % {BLOCK} == 0 (d_model {})",
+            arch.d_model
+        );
+    }
+    Ok(())
+}
+
 /// Prefill one session: run the full prompt through the transformer (one
 /// sequence, `b = 1`), populating `kv` with every layer's post-RoPE K and V
 /// rows, and return the **last position's** logits `(1, V)` — the serving
@@ -1066,12 +1148,13 @@ pub fn forward_prefill(
     if let Some(q) = quant {
         anyhow::ensure!(q.act_weights.len() == linears.len(), "act_weights count");
         anyhow::ensure!(q.thresholds.len() == linears.len(), "thresholds count");
+        ensure_attn_ppu_shape(arch, q)?;
     }
+    let attn_ppu = quant.and_then(|q| q.attn_threshold);
     let mut fracs = vec![0.0f32; if quant.is_some() { linears.len() } else { 0 }];
     let positions: Vec<usize> = (0..s).collect();
     let mut x = embed_rows(arch, params, tokens, &positions)?;
     let mut li = 0usize;
-    let mut scratch = (Vec::new(), Vec::new());
     let mm_scratch = MatmulScratch::new();
     for (l, lkv) in kv.layers.iter_mut().enumerate() {
         block_forward(
@@ -1086,7 +1169,7 @@ pub fn forward_prefill(
             &mut fracs,
             &mut None,
             &mm_scratch,
-            |qkv| attention_prefill(arch, qkv, s, lkv, &mut scratch),
+            |qkv| attention_prefill(arch, qkv, s, lkv, attn_ppu),
         )?;
     }
     kv.advance(s);
@@ -1141,7 +1224,9 @@ pub fn forward_prefill_batch(
     if let Some(q) = quant {
         anyhow::ensure!(q.act_weights.len() == linears.len(), "act_weights count");
         anyhow::ensure!(q.thresholds.len() == linears.len(), "thresholds count");
+        ensure_attn_ppu_shape(arch, q)?;
     }
+    let attn_ppu = quant.and_then(|q| q.attn_threshold);
     let mut fracs = vec![0.0f32; if quant.is_some() { linears.len() } else { 0 }];
 
     // Ragged layout: prompt i owns rows offs[i]..offs[i]+lens[i].
@@ -1159,7 +1244,6 @@ pub fn forward_prefill_batch(
 
     let mut x = embed_rows(arch, params, &tokens, &positions)?;
     let mut li = 0usize;
-    let mut scratch = (Vec::new(), Vec::new());
     let mm_scratch = MatmulScratch::new();
     let d = arch.d_model;
     for l in 0..arch.n_layers {
@@ -1185,7 +1269,7 @@ pub fn forward_prefill_batch(
                         &qkv[off * 3 * d..(off + s_i) * 3 * d],
                         s_i,
                         lkv,
-                        &mut scratch,
+                        attn_ppu,
                     );
                     out[off * d..(off + s_i) * d].copy_from_slice(&o);
                 }
@@ -1237,13 +1321,12 @@ pub fn forward_step_batch(
     if let Some(q) = quant {
         anyhow::ensure!(q.act_weights.len() == linears.len(), "act_weights count");
         anyhow::ensure!(q.thresholds.len() == linears.len(), "thresholds count");
+        ensure_attn_ppu_shape(arch, q)?;
     }
+    let attn_ppu = quant.and_then(|q| q.attn_threshold);
     let mut fracs = vec![0.0f32; if quant.is_some() { linears.len() } else { 0 }];
     let mut x = embed_rows(arch, params, tokens, &positions)?;
     let mut li = 0usize;
-    // One materialize-scratch set for the whole step, reused across layers
-    // (and one matmul scratch pool, likewise).
-    let mut scratch = KvScratch::for_sessions(n);
     let mm_scratch = MatmulScratch::new();
     for l in 0..arch.n_layers {
         let mut caches: Vec<&mut LayerKv> = kvs.iter_mut().map(|kv| &mut kv.layers[l]).collect();
@@ -1259,7 +1342,7 @@ pub fn forward_step_batch(
             &mut fracs,
             &mut None,
             &mm_scratch,
-            |qkv| attention_step(arch, qkv, &mut caches, &positions, &mut scratch),
+            |qkv| attention_step(arch, qkv, &mut caches, &positions, attn_ppu),
         )?;
     }
     for kv in kvs.iter_mut() {
@@ -1438,11 +1521,11 @@ mod tests {
         let aw: Vec<Vec<f32>> = linears.iter().map(|l| vec![1.0f32; l.k_in]).collect();
         let awr: Vec<&[f32]> = aw.iter().map(|v| v.as_slice()).collect();
         let thr_fp8 = vec![-1.0f32; linears.len()];
-        let q = QuantInputs { act_weights: awr.clone(), thresholds: &thr_fp8 };
+        let q = QuantInputs { act_weights: awr.clone(), thresholds: &thr_fp8, attn_threshold: None };
         let out8 = forward(&arch, &pm, &tokens, b, s, Some(&q), None, false).unwrap();
         assert!(out8.act_fp8.iter().all(|&f| f == 1.0));
         let thr_fp4 = vec![f32::INFINITY; linears.len()];
-        let q4 = QuantInputs { act_weights: awr, thresholds: &thr_fp4 };
+        let q4 = QuantInputs { act_weights: awr, thresholds: &thr_fp4, attn_threshold: None };
         let out4 = forward(&arch, &pm, &tokens, b, s, Some(&q4), None, false).unwrap();
         assert!(out4.act_fp8.iter().all(|&f| f == 0.0));
         assert_ne!(out8.logits, out4.logits);

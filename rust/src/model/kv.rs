@@ -32,11 +32,19 @@
 //! divergence is bounded by the E4M3 round-trip error on K/V (documented
 //! tolerance in the same test).
 
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::model::forward::ModelArch;
 use crate::quant::fp8::encode_e4m3;
 use crate::util::kernels;
+
+/// Effective stored bits per value of an FGMP-mixed block population:
+/// FP8 blocks hold 8 bits/value, NVFP4 blocks 4.5625 (16×4-bit mantissas +
+/// one 8-bit E4M3 scale + one precision flag bit per 16-element block) —
+/// the same convention `hwsim::kvcache` documents for quantized-cache
+/// comparators.
+pub const FP8_BITS_PER_VALUE: f64 = 8.0;
+pub const NVFP4_BITS_PER_VALUE: f64 = 4.5625;
 
 /// Rows (tokens) per KV page — the granularity the paged arena allocates
 /// and the unit precision/occupancy accounting works in. 16 matches the
@@ -324,6 +332,13 @@ enum KvData {
 pub struct KvBuf {
     data: KvData,
     width: usize,
+    /// Attention-PPU accounting: 16-element blocks the PPU kept at FP8
+    /// out of all blocks it assigned while filling this buffer. Both stay
+    /// zero when the attention threshold knob is off; aggregate counters
+    /// (not per-row maps) because only the effective-bits ratio feeds the
+    /// energy model.
+    ppu_hi_blocks: u64,
+    ppu_blocks: u64,
 }
 
 impl Clone for KvBuf {
@@ -356,7 +371,12 @@ impl Clone for KvBuf {
                 }
             }
         };
-        KvBuf { data, width: self.width }
+        KvBuf {
+            data,
+            width: self.width,
+            ppu_hi_blocks: self.ppu_hi_blocks,
+            ppu_blocks: self.ppu_blocks,
+        }
     }
 }
 
@@ -366,13 +386,15 @@ impl KvBuf {
             KvPrecision::Fp16 => KvData::F32(Vec::new()),
             KvPrecision::Fp8 => KvData::Fp8(Vec::new()),
         };
-        KvBuf { data, width }
+        KvBuf { data, width, ppu_hi_blocks: 0, ppu_blocks: 0 }
     }
 
     fn new_paged(pool: &Arc<KvPool>) -> Self {
         KvBuf {
             data: KvData::Paged(PagedStore { pool: pool.clone(), pages: Vec::new(), rows: 0 }),
             width: pool.width,
+            ppu_hi_blocks: 0,
+            ppu_blocks: 0,
         }
     }
 
@@ -485,15 +507,32 @@ impl KvBuf {
         }
     }
 
+    /// Record an attention-PPU block assignment made while quantizing rows
+    /// pushed into this buffer: `hi` of `total` 16-element blocks were kept
+    /// at FP8 (the rest went NVFP4).
+    pub fn note_ppu(&mut self, hi: usize, total: usize) {
+        self.ppu_hi_blocks += hi as u64;
+        self.ppu_blocks += total as u64;
+    }
+
+    /// `(fp8_blocks, total_blocks)` the attention PPU assigned into this
+    /// buffer — `(0, 0)` when the knob is off.
+    pub fn ppu_counts(&self) -> (u64, u64) {
+        (self.ppu_hi_blocks, self.ppu_blocks)
+    }
+
     fn clear(&mut self) {
         match &mut self.data {
             KvData::F32(v) => v.clear(),
             KvData::Fp8(v) => v.clear(),
             KvData::Paged(p) => p.release_all(),
         }
+        self.ppu_hi_blocks = 0;
+        self.ppu_blocks = 0;
     }
 
     fn truncate_rows(&mut self, len: usize) {
+        let before = self.rows();
         match &mut self.data {
             KvData::F32(v) => v.truncate(len * self.width),
             KvData::Fp8(v) => v.truncate(len * self.width),
@@ -505,6 +544,96 @@ impl KvBuf {
                 if keep < p.pages.len() {
                     let extra = p.pages.split_off(keep);
                     p.pool.release(&extra);
+                }
+            }
+        }
+        // Counters are aggregate, not per-row, so truncation scales them
+        // proportionally — an approximation that is exact when block mix is
+        // uniform across rows. Truncation only serves bench rollback and
+        // failed-step unwind, never the accounting-bearing serve path.
+        let after = self.rows();
+        if after < before && self.ppu_blocks > 0 {
+            let scale = after as f64 / before as f64;
+            self.ppu_hi_blocks = (self.ppu_hi_blocks as f64 * scale).round() as u64;
+            self.ppu_blocks = (self.ppu_blocks as f64 * scale).round() as u64;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Zero-copy read views (attention at stored precision)
+// ---------------------------------------------------------------------------
+
+/// A borrowed, page-granular view of one K-or-V buffer **at its stored
+/// precision**: f32 spans for FP16 caches, raw E4M3 byte spans for FP8.
+/// Spans arrive in token order; the last may be a partial page. Flat
+/// buffers view as a single span. This is what the attend kernels in
+/// [`crate::util::kernels`] consume directly — no materialize scratch.
+#[derive(Debug)]
+pub enum KvView<'a> {
+    F32 { pages: Vec<&'a [f32]> },
+    Fp8 { pages: Vec<&'a [u8]> },
+}
+
+/// Read guards over every distinct [`KvPool`] a set of buffers lives on,
+/// acquired once up front so per-page views borrow straight from the arena.
+/// Holds raw pool pointers for identity only (never dereferenced); the
+/// `Arc`s in the buffers keep the pools alive for `'p`.
+pub struct PoolReadLock<'p> {
+    guards: Vec<(*const KvPool, MutexGuard<'p, PoolInner>)>,
+}
+
+impl<'p> PoolReadLock<'p> {
+    fn inner_for(&self, pool: *const KvPool) -> &PoolInner {
+        self.guards
+            .iter()
+            .find(|(p, _)| *p == pool)
+            .map(|(_, g)| &**g)
+            .expect("KvBuf::view: buffer's pool not covered by this PoolReadLock")
+    }
+}
+
+/// Lock every distinct pool behind `bufs` (deduplicated by pool identity —
+/// the pool mutex is not reentrant, so each is taken exactly once). Flat
+/// buffers need no lock and contribute nothing. Acquire this *after* all
+/// appends for the step are done, then build [`KvBuf::view`]s against it;
+/// the guard stays on the calling thread while the views (plain slices,
+/// `Sync`) fan out across the attention heads.
+pub fn lock_pools<'p, I>(bufs: I) -> PoolReadLock<'p>
+where
+    I: IntoIterator<Item = &'p KvBuf>,
+{
+    let mut guards: Vec<(*const KvPool, MutexGuard<'p, PoolInner>)> = Vec::new();
+    for buf in bufs {
+        if let KvData::Paged(p) = &buf.data {
+            let ptr = Arc::as_ptr(&p.pool);
+            if !guards.iter().any(|(q, _)| *q == ptr) {
+                guards.push((ptr, p.pool.inner.lock().unwrap()));
+            }
+        }
+    }
+    PoolReadLock { guards }
+}
+
+impl KvBuf {
+    /// Borrow this buffer's live rows at stored precision. Flat buffers
+    /// return a single-span view of their own storage; paged buffers slice
+    /// the pool arena through `lock` (which must have been built over a set
+    /// of buffers including this one).
+    pub fn view<'a>(&'a self, lock: &'a PoolReadLock<'_>) -> KvView<'a> {
+        match &self.data {
+            KvData::F32(v) => KvView::F32 { pages: vec![v.as_slice()] },
+            KvData::Fp8(v) => KvView::Fp8 { pages: vec![v.as_slice()] },
+            KvData::Paged(p) => {
+                let spans = p.live_spans(self.width);
+                let inner = lock.inner_for(Arc::as_ptr(&p.pool));
+                match p.pool.precision {
+                    KvPrecision::Fp16 => KvView::F32 {
+                        pages: spans.iter().map(|&(b, t)| &inner.f32_data[b..b + t]).collect(),
+                    },
+                    KvPrecision::Fp8 => KvView::Fp8 {
+                        pages: spans.iter().map(|&(b, t)| &inner.u8_data[b..b + t]).collect(),
+                    },
                 }
             }
         }
@@ -647,6 +776,26 @@ impl KvState {
     /// Physical bits this cache holds right now (live tokens).
     pub fn stored_bits(&self) -> u64 {
         self.layers.iter().map(|l| l.k.stored_bits() + l.v.stored_bits()).sum()
+    }
+
+    /// Effective stored bits per KV value for the energy model. Without the
+    /// attention PPU this is the precision's nominal width (16 or 8). With
+    /// it, the FGMP mix prices FP8 blocks at 8 bits/value and NVFP4 blocks
+    /// at 4.5625 (nibbles + per-block E4M3 scale + flag), weighted by the
+    /// fraction `f` of blocks the PPU kept high:
+    /// `8·f + 4.5625·(1−f)`.
+    pub fn effective_kv_bits(&self) -> f64 {
+        let (hi, total) = self.layers.iter().fold((0u64, 0u64), |(h, t), l| {
+            let (hk, tk) = l.k.ppu_counts();
+            let (hv, tv) = l.v.ppu_counts();
+            (h + hk + hv, t + tk + tv)
+        });
+        if total == 0 {
+            self.precision.bits_per_value()
+        } else {
+            let f = hi as f64 / total as f64;
+            FP8_BITS_PER_VALUE * f + NVFP4_BITS_PER_VALUE * (1.0 - f)
+        }
     }
 }
 
@@ -875,6 +1024,92 @@ mod tests {
         flat.truncate(1);
         assert_eq!(flat.len(), 1);
         assert_eq!(flat.stored_bits(), (2 * a.n_layers * a.d_model * 8) as u64);
+    }
+
+    #[test]
+    fn views_cover_live_rows_at_stored_precision() {
+        let a = arch();
+        for prec in [KvPrecision::Fp16, KvPrecision::Fp8] {
+            let pool = KvPool::new(&a, prec, 64);
+            let mut flat = KvState::new(&a, prec);
+            let mut paged = KvState::new_paged(&a, &pool);
+            let n = PAGE_TOKENS + 5; // multi-span with a partial last page
+            paged.reserve(n).unwrap();
+            let mut r1 = Rng::new(77);
+            let mut r2 = Rng::new(77);
+            push_rows(&mut flat, &mut r1, n, a.d_model);
+            push_rows(&mut paged, &mut r2, n, a.d_model);
+
+            for kv in [&flat, &paged] {
+                // Snapshot the oracle *before* taking the read lock (clone
+                // of a paged buffer itself locks the pool).
+                let mut scratch = Vec::new();
+                let want = kv.layers[1].k.clone();
+                let want = want.materialize(&mut scratch);
+                let lkv = &kv.layers[1];
+                let lock = lock_pools([&lkv.k, &lkv.v]);
+                let kview = lkv.k.view(&lock);
+                match (prec, &kview) {
+                    (KvPrecision::Fp16, KvView::F32 { pages }) => {
+                        let got: Vec<f32> = pages.concat();
+                        assert_eq!(got.len(), n * a.d_model);
+                        for (g, w) in got.iter().zip(want) {
+                            assert_eq!(g.to_bits(), w.to_bits());
+                        }
+                    }
+                    (KvPrecision::Fp8, KvView::Fp8 { pages }) => {
+                        let bytes: Vec<u8> = pages.concat();
+                        assert_eq!(bytes.len(), n * a.d_model);
+                        let mut dec = Vec::new();
+                        kernels::gather_e4m3_pages(&[&bytes], &mut dec);
+                        for (g, w) in dec.iter().zip(want) {
+                            assert_eq!(g.to_bits(), w.to_bits());
+                        }
+                    }
+                    _ => panic!("view precision mismatch for {prec:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shared_pool_locks_once_across_buffers() {
+        // K and V of every layer share one pool: lock_pools must dedup or
+        // this deadlocks (the pool mutex is not reentrant).
+        let a = arch();
+        let pool = KvPool::new(&a, KvPrecision::Fp8, 64);
+        let mut kv = KvState::new_paged(&a, &pool);
+        kv.reserve(3).unwrap();
+        let mut rng = Rng::new(9);
+        push_rows(&mut kv, &mut rng, 3, a.d_model);
+        let bufs: Vec<&KvBuf> =
+            kv.layers.iter().flat_map(|l| [&l.k, &l.v]).collect();
+        let lock = lock_pools(bufs.iter().copied());
+        for b in &bufs {
+            match b.view(&lock) {
+                KvView::Fp8 { pages } => {
+                    assert_eq!(pages.iter().map(|p| p.len()).sum::<usize>(), 3 * a.d_model)
+                }
+                _ => panic!("fp8 pool must view as bytes"),
+            }
+        }
+    }
+
+    #[test]
+    fn effective_bits_follow_ppu_mix() {
+        let a = arch();
+        let mut kv = KvState::new(&a, KvPrecision::Fp8);
+        assert_eq!(kv.effective_kv_bits(), 8.0, "no PPU data → nominal bits");
+        // Half the blocks high: 0.5·8 + 0.5·4.5625.
+        kv.layers[0].k.note_ppu(2, 4);
+        assert!((kv.effective_kv_bits() - (0.5 * 8.0 + 0.5 * 4.5625)).abs() < 1e-12);
+        assert_eq!(kv.layers[0].k.ppu_counts(), (2, 4));
+        kv.clear();
+        assert_eq!(kv.effective_kv_bits(), 8.0, "clear resets PPU counters");
+        let mut kv16 = KvState::new(&a, KvPrecision::Fp16);
+        assert_eq!(kv16.effective_kv_bits(), 16.0);
+        kv16.layers[1].v.note_ppu(4, 4);
+        assert_eq!(kv16.effective_kv_bits(), 8.0, "all-high mix prices FP8");
     }
 
     #[test]

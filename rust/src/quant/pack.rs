@@ -10,6 +10,8 @@
 //! This is exactly the memory-footprint accounting of the paper's Fig. 8:
 //! FP4 block = 64 + 8 (scale) + 1 (meta) bits, FP8 block = 128 + 1 bits.
 
+use std::sync::OnceLock;
+
 use crate::BLOCK;
 
 use super::fp4::{decode_e2m1, encode_e2m1};
@@ -201,6 +203,12 @@ pub struct PackedPanels {
     pub panel_block_off: Vec<usize>,
     pub n_blocks: usize,
     pub n_fp8: usize,
+    /// Lazily-materialized dense `(K, N)` copy for the lowering paths that
+    /// need f32 (PJRT literals). Deduped per tensor: every clone of a
+    /// `ServerConfig`/arg-tail shares the same `Arc<PackedPanels>`, so the
+    /// dequantize runs once per weight instead of once per executable
+    /// build.
+    dense_cache: OnceLock<Vec<f32>>,
 }
 
 impl PackedPanels {
@@ -229,6 +237,7 @@ impl PackedPanels {
             panel_block_off: Vec::with_capacity(n_panels),
             n_blocks: t.n_blocks,
             n_fp8: t.n_fp8,
+            dense_cache: OnceLock::new(),
         };
         let mut widx = 0usize; // walk-order block index
         for p in 0..n_panels {
@@ -305,6 +314,16 @@ impl PackedPanels {
             }
         }
         out
+    }
+
+    /// [`Self::unpack_kn`], memoized: the first call dequantizes and every
+    /// later call on the same tensor returns the cached slice. Intended for
+    /// shared `Arc<PackedPanels>` handles whose dense form is requested
+    /// repeatedly (e.g. re-lowering the same weights into several
+    /// executables); the one-shot native path should keep calling
+    /// `unpack_kn` and let the copy drop.
+    pub fn unpack_kn_cached(&self) -> &[f32] {
+        self.dense_cache.get_or_init(|| self.unpack_kn())
     }
 
     /// Bytes this tensor keeps resident for execution: payload + scales +
@@ -435,6 +454,25 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn unpack_kn_cached_memoizes_per_tensor() {
+        let (n, kb) = (9usize, 2usize);
+        let k = kb * BLOCK;
+        let x = data(n * k, 4.0, 33);
+        let prec: Vec<Precision> =
+            (0..n * kb).map(|i| if i % 2 == 0 { Precision::Fp8 } else { Precision::Fp4 }).collect();
+        let t = FgmpTensor::pack(&[n, k], &x, &prec, None);
+        let p = PackedPanels::from_tensor(&t, 8);
+        let fresh = p.unpack_kn();
+        let a = p.unpack_kn_cached();
+        assert_eq!(a, fresh.as_slice(), "cached dense copy must equal unpack_kn");
+        let b = p.unpack_kn_cached();
+        assert_eq!(a.as_ptr(), b.as_ptr(), "second call must reuse the cached allocation");
+        // A clone carries an independent cache with the same values.
+        let q = p.clone();
+        assert_eq!(q.unpack_kn_cached(), fresh.as_slice());
     }
 
     #[test]

@@ -101,11 +101,17 @@ pub struct EngineOptions {
     /// each). `None` sizes for [`DEFAULT_POOL_SESSIONS`] full-window
     /// sessions — a startup decision, like a device's HBM carve-out.
     pub kv_pages: Option<usize>,
+    /// Attention-input PPU threshold
+    /// ([`QuantInputs::attn_threshold`]): when set, Q rows and new K/V
+    /// rows are block-assigned to FP8/NVFP4 on the fly and the realized
+    /// mix prices KV traffic in [`StepOut::kv_bits_per_value`]. `None`
+    /// (the default) keeps attention inputs full-precision.
+    pub attn_threshold: Option<f32>,
 }
 
 impl Default for EngineOptions {
     fn default() -> Self {
-        EngineOptions { kv: KvPrecision::Fp16, kv_pages: None }
+        EngineOptions { kv: KvPrecision::Fp16, kv_pages: None, attn_threshold: None }
     }
 }
 
@@ -123,6 +129,13 @@ pub struct StepOut {
     /// Total KV-cache tokens attended over this step (Σ per-session
     /// context) — the cache-traffic input to the energy report.
     pub kv_tokens: u64,
+    /// Effective stored bits per KV value attended this step
+    /// (token-weighted across sessions): the precision's nominal width
+    /// (16/8), or the FGMP mix `8·f + 4.5625·(1−f)` when the attention
+    /// PPU assigned the blocks. 0 on the empty step; 16 on the windowed
+    /// fallback (recompute reads activations, priced as the FP16 cache
+    /// baseline).
+    pub kv_bits_per_value: f64,
 }
 
 /// One owned parameter of the cached engine: dense f32, or the packed
@@ -139,6 +152,7 @@ struct CachedEngine {
     act_weights: Vec<Vec<f32>>,
     thresholds: Vec<f32>,
     kv: KvPrecision,
+    attn_threshold: Option<f32>,
     /// The shared page arena every session of this engine draws from.
     pool: Arc<KvPool>,
 }
@@ -170,6 +184,7 @@ impl CachedEngine {
         QuantInputs {
             act_weights: self.act_weights.iter().map(|v| v.as_slice()).collect(),
             thresholds: &self.thresholds,
+            attn_threshold: self.attn_threshold,
         }
     }
 }
@@ -206,7 +221,7 @@ impl Engine {
         tail: Vec<ArgValue>,
         kv: KvPrecision,
     ) -> Result<Self> {
-        Engine::with_options(rt, spec, tail, EngineOptions { kv, kv_pages: None })
+        Engine::with_options(rt, spec, tail, EngineOptions { kv, ..EngineOptions::default() })
     }
 
     /// [`Engine::new`] with explicit pool sizing (`--kv-pages`).
@@ -238,6 +253,7 @@ impl Engine {
                         act_weights,
                         thresholds,
                         kv: opts.kv,
+                        attn_threshold: opts.attn_threshold,
                         pool,
                     }),
                 })
@@ -459,17 +475,43 @@ impl Engine {
                 }
                 let pm = ce.param_map();
                 let quant = ce.quant_inputs();
-                for sess in sessions.iter_mut() {
-                    let kv = sess.kv.as_mut().expect("checked above");
-                    if kv.len() >= ce.arch.max_seq {
-                        // Roll: rebuild the cache from the trailing half
-                        // window of the already-consumed context.
-                        let w = (ce.arch.max_seq / 2).max(1);
-                        let kept: Vec<i32> =
-                            sess.tokens[sess.tokens.len().saturating_sub(w)..].to_vec();
-                        kv.clear();
-                        forward_prefill(&ce.arch, &pm, &kept, Some(&quant), kv)?;
-                        sess.tokens = kept;
+                // Roll every session whose cache hit max_seq as ONE ragged
+                // re-prefill batch: each cache is rebuilt from the trailing
+                // half window of its already-consumed context, with the
+                // blocked matmuls amortized across all rolled sessions
+                // (bit-exact vs rolling one at a time — batched prefill
+                // accumulates each row independently). The prefill logits
+                // are discarded: the next input token comes from the
+                // pre-roll `last_logits`, exactly like the serial roll did.
+                let w = (ce.arch.max_seq / 2).max(1);
+                let mut roll_idx: Vec<usize> = Vec::new();
+                let mut roll_prompts: Vec<Vec<i32>> = Vec::new();
+                for (i, sess) in sessions.iter().enumerate() {
+                    if sess.kv.as_ref().expect("checked above").len() >= ce.arch.max_seq {
+                        roll_idx.push(i);
+                        roll_prompts
+                            .push(sess.tokens[sess.tokens.len().saturating_sub(w)..].to_vec());
+                    }
+                }
+                if !roll_idx.is_empty() {
+                    {
+                        let mut want = roll_idx.iter().copied().peekable();
+                        let mut kv_refs: Vec<&mut KvState> =
+                            Vec::with_capacity(roll_idx.len());
+                        for (i, sess) in sessions.iter_mut().enumerate() {
+                            if want.peek() == Some(&i) {
+                                want.next();
+                                let kv = sess.kv.as_mut().expect("checked above");
+                                kv.clear();
+                                kv_refs.push(kv);
+                            }
+                        }
+                        let prompts: Vec<&[i32]> =
+                            roll_prompts.iter().map(|p| p.as_slice()).collect();
+                        forward_prefill_batch(&ce.arch, &pm, &prompts, Some(&quant), &mut kv_refs)?;
+                    }
+                    for (&i, kept) in roll_idx.iter().zip(roll_prompts) {
+                        sessions[i].tokens = kept;
                     }
                 }
                 let inputs: Vec<i32> = sessions.iter().map(|s| s.next_token()).collect();
@@ -493,12 +535,30 @@ impl Engine {
                 };
                 let vocab = ce.arch.vocab;
                 let mut kv_tokens = 0u64;
+                let mut bits_weighted = 0.0f64;
                 for (i, sess) in sessions.iter_mut().enumerate() {
                     sess.last_logits = out.logits[i * vocab..(i + 1) * vocab].to_vec();
                     sess.steps += 1;
-                    kv_tokens += sess.cached_tokens() as u64;
+                    let t = sess.cached_tokens() as u64;
+                    kv_tokens += t;
+                    let bits = sess
+                        .kv
+                        .as_ref()
+                        .map(|kv| kv.effective_kv_bits())
+                        .unwrap_or_else(|| ce.kv.bits_per_value());
+                    bits_weighted += bits * t as f64;
                 }
-                Ok(StepOut { rows: sessions.len(), act_fp8: out.act_fp8, kv_tokens })
+                let kv_bits_per_value = if kv_tokens > 0 {
+                    bits_weighted / kv_tokens as f64
+                } else {
+                    ce.kv.bits_per_value()
+                };
+                Ok(StepOut {
+                    rows: sessions.len(),
+                    act_fp8: out.act_fp8,
+                    kv_tokens,
+                    kv_bits_per_value,
+                })
             }
             Inner::Windowed(we) => {
                 let inputs: Vec<i32> = sessions.iter().map(|s| s.next_token()).collect();
@@ -514,7 +574,12 @@ impl Engine {
                 for sess in sessions.iter_mut() {
                     sess.steps += 1;
                 }
-                Ok(StepOut { rows: sessions.len(), act_fp8: Vec::new(), kv_tokens: 0 })
+                Ok(StepOut {
+                    rows: sessions.len(),
+                    act_fp8: Vec::new(),
+                    kv_tokens: 0,
+                    kv_bits_per_value: 16.0,
+                })
             }
         }
     }

@@ -13,8 +13,10 @@ impl ArgValue {
             ArgValue::F32 { shape, data } => lit_f32(data, shape),
             ArgValue::I32 { shape, data } => lit_i32(data, shape),
             // PJRT consumes dense tensors: materialize the packed weight
-            // here, on demand — the one place a dequantized copy exists.
-            ArgValue::PackedW { shape, panels } => lit_f32(&panels.unpack_kn(), shape),
+            // on demand, memoized per shared `Arc<PackedPanels>` so
+            // re-lowering the same weights (rebuilds, multi-executable
+            // servers) dequantizes each tensor once, not per literal.
+            ArgValue::PackedW { shape, panels } => lit_f32(panels.unpack_kn_cached(), shape),
         }
     }
 }

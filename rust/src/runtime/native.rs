@@ -99,7 +99,7 @@ impl NativeGraph {
                 .collect::<Result<_>>()?;
             let thresholds = args[poff + np + nl].as_f32()?;
             anyhow::ensure!(thresholds.len() == nl, "{}: thresholds length", self.name);
-            Some(QuantInputs { act_weights: aw, thresholds })
+            Some(QuantInputs { act_weights: aw, thresholds, attn_threshold: None })
         } else {
             None
         };

@@ -269,6 +269,144 @@ pub fn gather_e4m3_pages(pages: &[&[u8]], out: &mut Vec<f32>) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Attention at stored precision (LUT-decode inside the dot-product loop)
+// ---------------------------------------------------------------------------
+//
+// These two kernels compute one causal attention output row straight off
+// the KV cache's page spans — f32 spans for FP16 caches, raw E4M3 byte
+// spans for FP8, where the 256-entry decode LUT moves *inside* the QK^T
+// and AV loops (decode-in-register, no materialized f32 copy of the
+// cache). Accumulation order is exactly `model::forward::attend_row`'s:
+// scores ascending-j with a sequential dot, running max, stable softmax,
+// then the ascending-j weighted value sum with the `p == 0.0` skip. Since
+// `lut[b] == decode_e4m3(b)` by construction, the E4M3 kernel is
+// bit-identical to gathering the pages to f32 first and attending over the
+// copy (property-tested in `tests/kernel_props.rs`).
+
+/// One attention row over f32 KV page spans (FP16 caches, flat or paged):
+/// query `qr` (dh) against the first `len` cached rows of head `hi`, pages
+/// in token order with `d`-wide rows, last span possibly partial. `sc` is
+/// caller scratch of at least `len`; the output row lands in `or` (dh).
+#[allow(clippy::too_many_arguments)]
+pub fn attend_row_f32_pages(
+    qr: &[f32],
+    k_pages: &[&[f32]],
+    v_pages: &[&[f32]],
+    len: usize,
+    d: usize,
+    hi: usize,
+    dh: usize,
+    scale: f32,
+    sc: &mut [f32],
+    or: &mut [f32],
+) {
+    debug_assert!(sc.len() >= len);
+    let mut mx = f32::NEG_INFINITY;
+    let mut j = 0usize;
+    'score: for kp in k_pages {
+        for r in 0..kp.len() / d {
+            if j >= len {
+                break 'score;
+            }
+            let kr = &kp[r * d + hi * dh..r * d + (hi + 1) * dh];
+            let mut dot = 0.0f32;
+            for (a, b2) in qr.iter().zip(kr) {
+                dot += a * b2;
+            }
+            sc[j] = dot * scale;
+            mx = mx.max(sc[j]);
+            j += 1;
+        }
+    }
+    debug_assert_eq!(j, len, "pages hold fewer than len rows");
+    let mut z = 0.0f32;
+    for scj in sc.iter_mut().take(len) {
+        *scj = (*scj - mx).exp();
+        z += *scj;
+    }
+    or.fill(0.0);
+    let mut j = 0usize;
+    'av: for vp in v_pages {
+        for r in 0..vp.len() / d {
+            if j >= len {
+                break 'av;
+            }
+            let p = sc[j] / z;
+            j += 1;
+            if p == 0.0 {
+                continue;
+            }
+            let vr = &vp[r * d + hi * dh..r * d + (hi + 1) * dh];
+            for (a, &vv) in or.iter_mut().zip(vr) {
+                *a += p * vv;
+            }
+        }
+    }
+}
+
+/// One attention row over E4M3 byte KV page spans (FP8 caches, flat or
+/// paged): identical accumulation order to [`attend_row_f32_pages`], with
+/// each key/value byte decoded through the 256-entry LUT at the moment it
+/// enters the dot product — the cache is never materialized to f32.
+#[allow(clippy::too_many_arguments)]
+pub fn attend_row_e4m3_pages(
+    qr: &[f32],
+    k_pages: &[&[u8]],
+    v_pages: &[&[u8]],
+    len: usize,
+    d: usize,
+    hi: usize,
+    dh: usize,
+    scale: f32,
+    sc: &mut [f32],
+    or: &mut [f32],
+) {
+    debug_assert!(sc.len() >= len);
+    let lut = e4m3_lut();
+    let mut mx = f32::NEG_INFINITY;
+    let mut j = 0usize;
+    'score: for kp in k_pages {
+        for r in 0..kp.len() / d {
+            if j >= len {
+                break 'score;
+            }
+            let kr = &kp[r * d + hi * dh..r * d + (hi + 1) * dh];
+            let mut dot = 0.0f32;
+            for (a, &b2) in qr.iter().zip(kr) {
+                dot += a * lut[b2 as usize];
+            }
+            sc[j] = dot * scale;
+            mx = mx.max(sc[j]);
+            j += 1;
+        }
+    }
+    debug_assert_eq!(j, len, "pages hold fewer than len rows");
+    let mut z = 0.0f32;
+    for scj in sc.iter_mut().take(len) {
+        *scj = (*scj - mx).exp();
+        z += *scj;
+    }
+    or.fill(0.0);
+    let mut j = 0usize;
+    'av: for vp in v_pages {
+        for r in 0..vp.len() / d {
+            if j >= len {
+                break 'av;
+            }
+            let p = sc[j] / z;
+            j += 1;
+            if p == 0.0 {
+                continue;
+            }
+            let vr = &vp[r * d + hi * dh..r * d + (hi + 1) * dh];
+            for (a, &vv) in or.iter_mut().zip(vr) {
+                *a += p * lut[vv as usize];
+            }
+        }
+    }
+}
+
 /// The PPU (paper §4.2) on one activation row: round-trip each 16-block to
 /// FP8 or NVFP4 per the impact score (Eq. 8) against `threshold`, writing
 /// dequantized values to `out`. Returns the FP8 block count. Identical
@@ -620,9 +758,9 @@ pub fn matmul_packed_scalar(x: &[f32], w: &PackedPanels, m: usize) -> Vec<f32> {
 /// in-flight tile checks buffers out of the pool and returns them as soon
 /// as it is done with them (the quantize buffer right after the multiply,
 /// so live copies stay bounded by worker concurrency; output tiles after
-/// they are flattened), and the pool itself is threaded through the pass
-/// the way `KvScratch` is threaded through a decode step. Capacity is paid
-/// once per (shape × concurrency) instead of once per tile per linear.
+/// they are flattened), and the pool itself is threaded through the whole
+/// pass as one long-lived allocation. Capacity is paid once per
+/// (shape × concurrency) instead of once per tile per linear.
 #[derive(Default)]
 pub struct MatmulScratch {
     free: Mutex<Vec<Vec<f32>>>,

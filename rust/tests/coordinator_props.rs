@@ -219,6 +219,8 @@ fn continuous_batching_preserves_per_request_streams() {
         kv_precision: KvPrecision::Fp16,
         decode_batch: 3,
         kv_pages: None,
+        energy: fgmp::hwsim::EnergyModel::default(),
+        attn_threshold: None,
     };
     let fwd_spec = ExecSpec::new(&dir, "tiny-llama", GraphKind::FwdQuant);
     let server = Server::start(scfg, fwd_spec, tail.clone(), logits_spec, tail).unwrap();
@@ -313,6 +315,8 @@ fn pool_backpressure_defers_admissions_and_preserves_streams() {
         kv_precision: KvPrecision::Fp16,
         decode_batch: 4,
         kv_pages: Some(kv_pages),
+        energy: fgmp::hwsim::EnergyModel::default(),
+        attn_threshold: None,
     };
     let fwd_spec = ExecSpec::new(&dir, "tiny-llama", GraphKind::FwdQuant);
     let server = Server::start(scfg, fwd_spec, tail.clone(), logits_spec, tail).unwrap();

@@ -151,7 +151,7 @@ fn quantized_prefill_plus_steps_match_quantized_forward() {
     let thresholds: Vec<f32> = (0..linears.len())
         .map(|i| if i % 2 == 0 { -1.0 } else { f32::INFINITY })
         .collect();
-    let q = QuantInputs { act_weights: awr, thresholds: &thresholds };
+    let q = QuantInputs { act_weights: awr, thresholds: &thresholds, attn_threshold: None };
 
     for &(s0, n) in &[(1usize, 3usize), (5, 4), (8, 5)] {
         let s = s0 + n;
@@ -359,7 +359,7 @@ fn batched_prefill_matches_sequential_bit_exact() {
     let thresholds: Vec<f32> = (0..linears.len())
         .map(|i| if i % 2 == 0 { -1.0 } else { f32::INFINITY })
         .collect();
-    let q = QuantInputs { act_weights: awr, thresholds: &thresholds };
+    let q = QuantInputs { act_weights: awr, thresholds: &thresholds, attn_threshold: None };
 
     for quant in [None, Some(&q)] {
         let lens = [3usize, PAGE_TOKENS, 7, 1];
@@ -532,7 +532,7 @@ fn engine_cached_greedy_matches_full_recompute_oracle() {
     let aw: Vec<&[f32]> =
         (0..man.num_linears).map(|i| fx.tail[np + i].as_f32().unwrap()).collect();
     let thresholds = fx.tail[np + man.num_linears].as_f32().unwrap();
-    let q = QuantInputs { act_weights: aw, thresholds };
+    let q = QuantInputs { act_weights: aw, thresholds, attn_threshold: None };
 
     let prompt: Vec<i32> = fx.ev.test_stream[..8].to_vec();
     let n = 6usize;
@@ -660,8 +660,11 @@ fn engine_pool_backpressure_and_roll_stay_within_bound() {
     let fx = engine_fixture();
     let arch = fx.ev.arts.manifest.arch().unwrap();
     let per_session = KvPool::pages_for_session(arch.n_layers, arch.max_seq);
-    let opts =
-        EngineOptions { kv: KvPrecision::Fp16, kv_pages: Some(per_session) };
+    let opts = EngineOptions {
+        kv: KvPrecision::Fp16,
+        kv_pages: Some(per_session),
+        ..EngineOptions::default()
+    };
     let engine =
         fgmp::runtime::Engine::with_options(&fx.rt, &fx.spec, fx.tail.clone(), opts).unwrap();
     assert_eq!(engine.max_live_sessions(), 1);
@@ -739,4 +742,271 @@ fn engine_packed_tail_matches_dense_materialized_tail() {
         greedy(&dense_eng, &prompt, n),
         "packed vs dense greedy stream"
     );
+}
+
+// ---------------------------------------------------------------------------
+// Roll semantics and the attention-input PPU
+// ---------------------------------------------------------------------------
+
+fn argmax(logits: &[f32]) -> i32 {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i as i32)
+        .unwrap()
+}
+
+fn rel_l2(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut d2 = 0.0f64;
+    let mut r2 = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        d2 += ((x - y) as f64).powi(2);
+        r2 += (*y as f64).powi(2);
+    }
+    (d2 / r2.max(1e-30)).sqrt()
+}
+
+/// Rolling past `max_seq` is storage-layout invariant: driving the same
+/// greedy stream across engine-style rolls (rebuild the cache from the
+/// trailing half window, discard the re-prefill logits) produces
+/// bit-identical token streams from a flat and a paged KV cache — FP16
+/// and FP8.
+#[test]
+fn rolled_greedy_stream_is_storage_layout_invariant() {
+    let mut rng = Rng::new(0xDEC8);
+    let arch = arch_rope(); // max_seq 32
+    let params = random_params(&arch, 911);
+    let pm = param_map(&params);
+    let w = (arch.max_seq / 2).max(1);
+    let total = arch.max_seq + 12; // guarantees at least one roll
+    let prompt = random_tokens(&mut rng, 6, arch.vocab);
+
+    for prec in [KvPrecision::Fp16, KvPrecision::Fp8] {
+        let pool = KvPool::new(&arch, prec, 64);
+        let fresh_kv = |paged: bool| {
+            if paged { KvState::new_paged(&arch, &pool) } else { KvState::new(&arch, prec) }
+        };
+        let mut streams: Vec<Vec<i32>> = Vec::new();
+        for paged in [false, true] {
+            let mut kv = fresh_kv(paged);
+            let mut logits =
+                forward_prefill(&arch, &pm, &prompt, None, &mut kv).unwrap().logits;
+            let mut tokens = prompt.clone();
+            let mut produced = Vec::new();
+            let mut rolls = 0usize;
+            while produced.len() < total {
+                if kv.len() >= arch.max_seq {
+                    // Engine roll semantics: rebuild from the trailing
+                    // half window, re-prefill logits discarded.
+                    let kept = tokens[tokens.len() - w..].to_vec();
+                    kv = fresh_kv(paged);
+                    forward_prefill(&arch, &pm, &kept, None, &mut kv).unwrap();
+                    tokens = kept;
+                    rolls += 1;
+                }
+                let t = argmax(&logits);
+                produced.push(t);
+                tokens.push(t);
+                logits = forward_step(&arch, &pm, t, &mut kv, None).unwrap().logits;
+            }
+            assert!(rolls >= 1, "{prec:?} paged={paged}: stream must cross a roll");
+            streams.push(produced);
+        }
+        assert_eq!(streams[0], streams[1], "{prec:?}: flat vs paged rolled stream");
+    }
+}
+
+/// A session forced past `max_seq` (rolled) continues bit-identically to
+/// a fresh session prefilled on exactly the kept window — FP16 and FP8
+/// KV. The roll discards the re-prefill logits and keeps decoding from
+/// the pre-roll ones, so the fresh session is handed those before
+/// stepping; from there both token streams and logits must agree
+/// bit-for-bit. The step's `kv_bits_per_value` reports the cache's
+/// nominal width when the attention PPU is off.
+#[test]
+fn engine_rolled_session_matches_fresh_prefill_on_kept_window() {
+    let fx = engine_fixture();
+    let arch = fx.ev.arts.manifest.arch().unwrap();
+    let w = (arch.max_seq / 2).max(1);
+    for kv in [KvPrecision::Fp16, KvPrecision::Fp8] {
+        let engine =
+            fgmp::runtime::Engine::new(&fx.rt, &fx.spec, fx.tail.clone(), kv).unwrap();
+        // Prefill just short of the window, then decode until the cache is
+        // exactly full: the next step must roll.
+        let prompt: Vec<i32> = fx.ev.test_stream[..arch.max_seq - 3].to_vec();
+        let mut sess = engine.prefill(&prompt).unwrap();
+        while sess.cached_tokens() < arch.max_seq {
+            let mut refs = [&mut sess];
+            engine.decode_step(&mut refs).unwrap();
+        }
+        let kept = sess.tokens[sess.tokens.len() - w..].to_vec();
+        let mut fresh = engine.prefill(&kept).unwrap();
+        fresh.last_logits = sess.last_logits.clone();
+        let want_bits = if kv == KvPrecision::Fp16 { 16.0 } else { 8.0 };
+        for step in 0..6 {
+            let out = {
+                let mut refs = [&mut sess];
+                engine.decode_step(&mut refs).unwrap()
+            };
+            if step == 0 {
+                // The first step performs the roll: the cache shrinks to
+                // the kept window plus the token just consumed.
+                assert_eq!(sess.cached_tokens(), w + 1, "{kv:?}: roll window");
+            }
+            assert_eq!(out.rows, 1);
+            assert_eq!(out.kv_tokens, sess.cached_tokens() as u64);
+            assert_eq!(out.kv_bits_per_value, want_bits, "{kv:?}: nominal pricing");
+            {
+                let mut refs = [&mut fresh];
+                engine.decode_step(&mut refs).unwrap();
+            }
+            assert_bits_eq(
+                &sess.last_logits,
+                &fresh.last_logits,
+                &format!("{kv:?} step {step}: logits"),
+            );
+        }
+        assert_eq!(sess.tokens, fresh.tokens, "{kv:?}: rolled vs fresh token stream");
+    }
+}
+
+/// The batched ragged re-prefill that services rolls: two sessions
+/// hitting `max_seq` in the same decode batch (alongside one mid-stream
+/// session that does not roll) step bit-identically to the same sessions
+/// stepped alone.
+#[test]
+fn engine_batched_roll_matches_serial_roll_bit_exact() {
+    let fx = engine_fixture();
+    let arch = fx.ev.arts.manifest.arch().unwrap();
+    let engine =
+        fgmp::runtime::Engine::new(&fx.rt, &fx.spec, fx.tail.clone(), KvPrecision::Fp16)
+            .unwrap();
+    // Full-window prompts sit exactly at the roll boundary.
+    let full_a: Vec<i32> = fx.ev.test_stream[..arch.max_seq].to_vec();
+    let full_b: Vec<i32> = fx.ev.test_stream[64..64 + arch.max_seq].to_vec();
+    let mid: Vec<i32> = fx.ev.test_stream[32..48].to_vec();
+
+    // Prefill is deterministic, so two sessions prefilled on the same
+    // prompt are bit-identical twins.
+    let mut a1 = engine.prefill(&full_a).unwrap();
+    let mut a2 = engine.prefill(&full_a).unwrap();
+    let mut b1 = engine.prefill(&full_b).unwrap();
+    let mut b2 = engine.prefill(&full_b).unwrap();
+    let mut m1 = engine.prefill(&mid).unwrap();
+    let mut m2 = engine.prefill(&mid).unwrap();
+
+    for step in 0..4 {
+        {
+            let mut refs = [&mut a1, &mut m1, &mut b1];
+            engine.decode_step(&mut refs).unwrap();
+        }
+        for s in [&mut a2, &mut m2, &mut b2] {
+            let mut refs = [s];
+            engine.decode_step(&mut refs).unwrap();
+        }
+        for (name, x, y) in [("a", &a1, &a2), ("m", &m1, &m2), ("b", &b1, &b2)] {
+            assert_eq!(x.tokens, y.tokens, "{name} step {step}: tokens");
+            assert_bits_eq(&x.last_logits, &y.last_logits, &format!("{name} step {step}"));
+        }
+    }
+    // The rolled sessions stayed inside the window bound.
+    assert!(a1.cached_tokens() <= arch.max_seq);
+    assert!(b1.cached_tokens() <= arch.max_seq);
+}
+
+/// The attention-input PPU knob: threshold −1 routes every Q/K/V block
+/// through the FP8 branch — logits stay within the documented FP8
+/// tolerance of the knob-off run and the realized mix prices the cache
+/// at exactly 8 bits/value; threshold +∞ routes everything through NVFP4
+/// and prices it at 4.5625; a `d_model` that doesn't tile into 16-element
+/// blocks is rejected before any compute.
+#[test]
+fn attention_ppu_prices_kv_at_realized_mix_within_tolerance() {
+    use fgmp::model::kv::{FP8_BITS_PER_VALUE, NVFP4_BITS_PER_VALUE};
+    let mut rng = Rng::new(0xDEC9);
+    let arch = arch_rope(); // d_model 32 = two 16-element blocks per row
+    let params = random_params(&arch, 777);
+    let pm = param_map(&params);
+    let linears = arch.linears();
+    let aw: Vec<Vec<f32>> = linears.iter().map(|l| vec![1.0f32; l.k_in]).collect();
+    let thresholds = vec![-1.0f32; linears.len()]; // linear PPU pinned all-FP8
+    let (s0, n) = (6usize, 5usize);
+    let tokens = random_tokens(&mut rng, s0 + n, arch.vocab);
+
+    let run = |attn: Option<f32>| {
+        let awr: Vec<&[f32]> = aw.iter().map(|v| v.as_slice()).collect();
+        let q = QuantInputs { act_weights: awr, thresholds: &thresholds, attn_threshold: attn };
+        let mut kv = KvState::new(&arch, KvPrecision::Fp16);
+        let mut out = forward_prefill(&arch, &pm, &tokens[..s0], Some(&q), &mut kv).unwrap();
+        for j in 0..n {
+            out = forward_step(&arch, &pm, tokens[s0 + j], &mut kv, Some(&q)).unwrap();
+        }
+        (out.logits, kv.effective_kv_bits(), kv.stored_bits())
+    };
+
+    let (base, base_bits, base_stored) = run(None);
+    assert_eq!(base_bits, 16.0, "knob off: nominal FP16 pricing");
+
+    let (hi, hi_bits, hi_stored) = run(Some(-1.0));
+    assert_eq!(hi_bits, FP8_BITS_PER_VALUE, "all-high mix prices at 8 bits/value");
+    assert_eq!(hi_stored, base_stored, "the PPU reprices traffic, not the store layout");
+    let rel = rel_l2(&hi, &base);
+    assert!(rel < 0.15, "all-FP8 attention inputs rel L2 {rel}");
+    assert!(rel > 0.0, "the attention PPU should actually perturb");
+
+    let (lo, lo_bits, _) = run(Some(f32::INFINITY));
+    assert_eq!(lo_bits, NVFP4_BITS_PER_VALUE, "all-low mix prices at 4.5625 bits/value");
+    assert!(lo.iter().all(|v| v.is_finite()));
+    assert!(rel_l2(&lo, &base) > 0.0, "the NVFP4 branch should actually perturb");
+
+    // d_model 24 does not tile into 16-element blocks: rejected up front.
+    let bad = ModelArch { d_model: 24, ..arch_rope() };
+    let bparams = random_params(&bad, 778);
+    let bpm = param_map(&bparams);
+    let blin = bad.linears();
+    let baw: Vec<Vec<f32>> = blin.iter().map(|l| vec![1.0f32; l.k_in]).collect();
+    let bawr: Vec<&[f32]> = baw.iter().map(|v| v.as_slice()).collect();
+    let bthr = vec![-1.0f32; blin.len()];
+    let bq = QuantInputs { act_weights: bawr, thresholds: &bthr, attn_threshold: Some(-1.0) };
+    let mut bkv = KvState::new(&bad, KvPrecision::Fp16);
+    let err = forward_prefill(&bad, &bpm, &tokens[..s0], Some(&bq), &mut bkv).unwrap_err();
+    assert!(err.to_string().contains("attention PPU"), "shape gate: {err}");
+    assert!(bkv.is_empty(), "shape gate must fire before any compute");
+}
+
+/// `EngineOptions::attn_threshold` threads the attention PPU into the
+/// serving path: the decode step's `kv_bits_per_value` reports the
+/// realized FGMP mix of the stored cache instead of the nominal width,
+/// which is what the serve energy report prices KV reads at.
+#[test]
+fn engine_attn_ppu_reports_realized_kv_mix() {
+    use fgmp::model::kv::{FP8_BITS_PER_VALUE, NVFP4_BITS_PER_VALUE};
+    use fgmp::runtime::EngineOptions;
+    let fx = engine_fixture();
+    let prompt: Vec<i32> = fx.ev.test_stream[..8].to_vec();
+    for (thr, want) in [
+        (None, 8.0), // nominal FP8, knob off
+        (Some(-1.0), FP8_BITS_PER_VALUE),
+        (Some(f32::INFINITY), NVFP4_BITS_PER_VALUE),
+    ] {
+        let opts = EngineOptions {
+            kv: KvPrecision::Fp8,
+            attn_threshold: thr,
+            ..EngineOptions::default()
+        };
+        let engine =
+            fgmp::runtime::Engine::with_options(&fx.rt, &fx.spec, fx.tail.clone(), opts)
+                .unwrap();
+        let mut sess = engine.prefill(&prompt).unwrap();
+        let out = {
+            let mut refs = [&mut sess];
+            engine.decode_step(&mut refs).unwrap()
+        };
+        assert_eq!(out.rows, 1);
+        assert_eq!(out.kv_tokens, (prompt.len() + 1) as u64, "thr {thr:?}");
+        assert_eq!(out.kv_bits_per_value, want, "thr {thr:?}");
+        assert!(sess.last_logits.iter().all(|v| v.is_finite()), "thr {thr:?}");
+    }
 }

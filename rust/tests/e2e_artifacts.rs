@@ -216,6 +216,8 @@ fn coordinator_serves_score_requests_natively() {
         kv_precision: fgmp::model::KvPrecision::Fp8,
         decode_batch: 4,
         kv_pages: None,
+        energy: fgmp::hwsim::EnergyModel::default(),
+        attn_threshold: None,
     };
     let fwd = ExecSpec::new(dir, "tiny-llama", GraphKind::FwdQuant);
     let logits = ExecSpec::new(dir, "tiny-llama", GraphKind::LogitsQuant);

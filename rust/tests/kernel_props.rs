@@ -221,6 +221,157 @@ fn fgmp_matmul_packed_matches_dense_pipeline_bit_exact() {
     }
 }
 
+/// Split `rows` into page-sized row counts (`page` rows each, partial tail).
+fn page_spans(rows: usize, page: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut left = rows;
+    while left > 0 {
+        let take = page.min(left);
+        out.push(take);
+        left -= take;
+    }
+    out
+}
+
+/// Slice a flat `rows x d` buffer into page spans of the given row counts.
+fn split_pages<'a, T>(flat: &'a [T], d: usize, spans: &[usize]) -> Vec<&'a [T]> {
+    let mut out = Vec::new();
+    let mut off = 0usize;
+    for &s in spans {
+        out.push(&flat[off * d..(off + s) * d]);
+        off += s;
+    }
+    out
+}
+
+/// Scalar attention reference over contiguous f32 KV rows, replicating
+/// `model::forward::attend_row`'s accumulation order exactly: ascending-j
+/// sequential score dots with a running max, stable softmax, then the
+/// ascending-j weighted value sum with the `p == 0.0` skip.
+#[allow(clippy::too_many_arguments)]
+fn attend_flat(
+    qr: &[f32],
+    kf: &[f32],
+    vf: &[f32],
+    len: usize,
+    d: usize,
+    hi: usize,
+    dh: usize,
+    scale: f32,
+) -> Vec<f32> {
+    let mut sc = vec![0.0f32; len];
+    let mut mx = f32::NEG_INFINITY;
+    for (j, scj) in sc.iter_mut().enumerate() {
+        let kr = &kf[j * d + hi * dh..j * d + (hi + 1) * dh];
+        let mut dot = 0.0f32;
+        for (a, b) in qr.iter().zip(kr) {
+            dot += a * b;
+        }
+        *scj = dot * scale;
+        mx = mx.max(*scj);
+    }
+    let mut z = 0.0f32;
+    for scj in sc.iter_mut() {
+        *scj = (*scj - mx).exp();
+        z += *scj;
+    }
+    let mut or = vec![0.0f32; dh];
+    for (j, &scj) in sc.iter().enumerate() {
+        let p = scj / z;
+        if p == 0.0 {
+            continue;
+        }
+        let vr = &vf[j * d + hi * dh..j * d + (hi + 1) * dh];
+        for (a, &vv) in or.iter_mut().zip(vr) {
+            *a += p * vv;
+        }
+    }
+    or
+}
+
+/// Head-count / head-dim / cached-row shape classes for the attend kernels,
+/// plus the page splits each is exercised under: one flat span (the
+/// contiguous-cache case), 7-row pages (every span edge lands mid-head-row
+/// grid), and 16-row pages (the real `PAGE_TOKENS`, partial tail).
+const ATTEND_SHAPES: &[(usize, usize, usize)] =
+    &[(1, 8, 1), (2, 8, 5), (2, 4, 16), (4, 16, 23), (3, 8, 40)];
+
+#[test]
+fn attend_row_f32_pages_matches_gather_then_attend_bit_exact() {
+    let mut rng = Rng::new(0xA77E);
+    for &(nh, dh, rows) in ATTEND_SHAPES {
+        let d = nh * dh;
+        let kf = rng.normal_vec(rows * d, 1.0);
+        let vf = rng.normal_vec(rows * d, 1.0);
+        let scale = 1.0 / (dh as f32).sqrt();
+        for spans in [vec![rows], page_spans(rows, 7), page_spans(rows, 16)] {
+            let k_pages = split_pages(&kf, d, &spans);
+            let v_pages = split_pages(&vf, d, &spans);
+            // Full window and a shorter live prefix (pages hold more rows
+            // than the kernel may read — the mid-decode shape).
+            for len in [rows, (rows + 1) / 2] {
+                for hi in 0..nh {
+                    let qr = rng.normal_vec(dh, 1.0);
+                    let want = attend_flat(&qr, &kf, &vf, len, d, hi, dh, scale);
+                    let mut sc = vec![0.0f32; len];
+                    let mut or = vec![0.0f32; dh];
+                    kernels::attend_row_f32_pages(
+                        &qr, &k_pages, &v_pages, len, d, hi, dh, scale, &mut sc, &mut or,
+                    );
+                    for (i, (a, b)) in or.iter().zip(&want).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "(nh={nh},dh={dh},rows={rows}) spans {spans:?} len {len} head {hi} elem {i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn attend_row_e4m3_pages_matches_materialize_then_attend_bit_exact() {
+    use fgmp::quant::fp8::encode_e4m3;
+
+    let mut rng = Rng::new(0xE433);
+    for &(nh, dh, rows) in ATTEND_SHAPES {
+        let d = nh * dh;
+        let kb: Vec<u8> = rng.normal_vec(rows * d, 2.0).iter().map(|&v| encode_e4m3(v)).collect();
+        let vb: Vec<u8> = rng.normal_vec(rows * d, 2.0).iter().map(|&v| encode_e4m3(v)).collect();
+        let scale = 1.0 / (dh as f32).sqrt();
+        for spans in [vec![rows], page_spans(rows, 7), page_spans(rows, 16)] {
+            let k_pages = split_pages(&kb, d, &spans);
+            let v_pages = split_pages(&vb, d, &spans);
+            // The yesterday-path reference: materialize the bytes to f32
+            // through the same decode table, then attend over the copy.
+            let mut kf = Vec::new();
+            let mut vf = Vec::new();
+            kernels::gather_e4m3_pages(&k_pages, &mut kf);
+            kernels::gather_e4m3_pages(&v_pages, &mut vf);
+            for len in [rows, (rows + 1) / 2] {
+                for hi in 0..nh {
+                    let qr = rng.normal_vec(dh, 1.0);
+                    let want = attend_flat(&qr, &kf, &vf, len, d, hi, dh, scale);
+                    let mut sc = vec![0.0f32; len];
+                    let mut or = vec![0.0f32; dh];
+                    kernels::attend_row_e4m3_pages(
+                        &qr, &k_pages, &v_pages, len, d, hi, dh, scale, &mut sc, &mut or,
+                    );
+                    for (i, (a, b)) in or.iter().zip(&want).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "(nh={nh},dh={dh},rows={rows}) spans {spans:?} len {len} head {hi} elem {i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[test]
 fn quant_slices_match_scalar_codecs() {
     let mut rng = Rng::new(0x5E3D);
