@@ -49,6 +49,8 @@ pub mod names {
     pub const PREFILL_BATCHED: &str = "prefill_batched_d512_p16x8";
     pub const DECODE_LONGCTX_FP16: &str = "decode_step_longctx_d512_w4k_fp16";
     pub const DECODE_LONGCTX_FP8: &str = "decode_step_longctx_d512_w4k_fp8";
+    pub const DECODE_TP_W1: &str = "decode_step_tp_w1_d512_occ8";
+    pub const DECODE_TP_W2: &str = "decode_step_tp_w2_d512_occ8";
 
     pub const SPEEDUP_MATMUL: &str = "speedup_matmul_d512";
     pub const SPEEDUP_MATMUL_T: &str = "speedup_matmul_t_d512";
@@ -67,8 +69,13 @@ pub mod names {
     /// floor: reading stored E4M3 bytes through the in-register LUT must
     /// stay within ~1.4x of the f32 read path even on the scalar build).
     pub const RATIO_DECODE_LONGCTX_FP8: &str = "ratio_decode_longctx_fp8_d512";
+    /// 2-worker sharded decode throughput over the single-worker batched
+    /// step at the same occupancy-8 workload (≥ 1.15 floor: splitting the
+    /// per-layer linears and attention heads across two threads must beat
+    /// one worker by a sane margin despite the fork/join overhead).
+    pub const SCALING_EFF_DECODE_W2: &str = "scaling_eff_decode_w2_d512";
 
-    pub const ALL: [&str; 24] = [
+    pub const ALL: [&str; 26] = [
         MATMUL_SCALAR,
         MATMUL_BLOCKED,
         MATMUL_DEQUANT,
@@ -93,8 +100,10 @@ pub mod names {
         PREFILL_BATCHED,
         DECODE_LONGCTX_FP16,
         DECODE_LONGCTX_FP8,
+        DECODE_TP_W1,
+        DECODE_TP_W2,
     ];
-    pub const ALL_DERIVED: [&str; 9] = [
+    pub const ALL_DERIVED: [&str; 10] = [
         SPEEDUP_MATMUL,
         SPEEDUP_MATMUL_T,
         SPEEDUP_QUANT,
@@ -104,6 +113,7 @@ pub mod names {
         RATIO_MATMUL_PACKED,
         WEIGHT_MEM_SAVING_PACKED,
         RATIO_DECODE_LONGCTX_FP8,
+        SCALING_EFF_DECODE_W2,
     ];
 }
 
@@ -511,6 +521,85 @@ pub fn longctx_benches(suite: &mut BenchSuite, budget: Duration) {
     }
 }
 
+/// Tensor-parallel decode scaling at the d512 preset: the same occupancy-8
+/// decode step run (a) through the plain single-worker `forward_step_batch`
+/// and (b) through the 2-worker sharded `forward_step_batch_tp` over
+/// per-worker head-slice caches — exactly the split `ShardedEngine` serves
+/// with. Their min-time ratio, `scaling_eff_decode_w2_d512`, is the CI
+/// scaling floor: two workers must buy at least 1.15× single-worker decode
+/// throughput (bit-identical logits, so this is pure wall-clock).
+pub fn sharded_benches(suite: &mut BenchSuite, budget: Duration) {
+    use crate::model::forward::{forward_prefill_batch_tp, forward_step_batch_tp};
+    use crate::model::tp::{shard_arch, ShardPlan, ThreadCollective};
+
+    let mut rng = Rng::new(46);
+    let (arch, params) = d512_model(&mut rng);
+    let pm = Params::from_dense(
+        params.iter().map(|(nm, v)| (nm.as_str(), v.as_slice())).collect(),
+    );
+
+    let occ = 8usize;
+    let prompt_len = 16usize;
+    let prompt: Vec<i32> = (0..prompt_len).map(|i| ((i * 7) % arch.vocab) as i32).collect();
+    let toks: Vec<i32> = (0..occ).map(|i| ((i * 5 + 1) % arch.vocab) as i32).collect();
+
+    // Single-worker reference: the plain batched step (what the one-worker
+    // engine runs), same body shape as the occ benches (step + truncate).
+    let mut kv0 = KvState::new(&arch, KvPrecision::Fp16);
+    forward_prefill(&arch, &pm, &prompt, None, &mut kv0).expect("prefill");
+    let mut owned: Vec<KvState> = (0..occ).map(|_| kv0.clone()).collect();
+    let base = bench(names::DECODE_TP_W1, Some(occ as u64), budget, || {
+        {
+            let mut kvs: Vec<&mut KvState> = owned.iter_mut().collect();
+            black_box(forward_step_batch(&arch, &pm, &toks, &mut kvs, None).unwrap());
+        }
+        for kv in &mut owned {
+            kv.truncate(prompt_len);
+        }
+    });
+    keep(suite, base.clone());
+
+    // 2-worker sharded step over per-worker head-slice shard caches.
+    let world = 2usize;
+    let plan = ShardPlan::new(&arch, world).expect("shard plan");
+    let arches: Vec<ModelArch> = plan
+        .heads
+        .iter()
+        .filter(|(h0, h1)| h1 > h0)
+        .map(|&(h0, h1)| shard_arch(&arch, h0, h1))
+        .collect();
+    let coll = ThreadCollective { world };
+    let mut shards: Vec<Vec<KvState>> = (0..occ)
+        .map(|_| arches.iter().map(|sa| KvState::new(sa, KvPrecision::Fp16)).collect())
+        .collect();
+    {
+        let prefs: Vec<&[i32]> = (0..occ).map(|_| prompt.as_slice()).collect();
+        let mut kvs: Vec<Vec<&mut KvState>> =
+            shards.iter_mut().map(|s| s.iter_mut().collect()).collect();
+        forward_prefill_batch_tp(&arch, &arches, &plan, &pm, &coll, &prefs, None, &mut kvs)
+            .expect("tp prefill");
+    }
+    let r = bench(names::DECODE_TP_W2, Some(occ as u64), budget, || {
+        {
+            let mut kvs: Vec<Vec<&mut KvState>> =
+                shards.iter_mut().map(|s| s.iter_mut().collect()).collect();
+            black_box(
+                forward_step_batch_tp(&arch, &arches, &plan, &pm, &coll, &toks, &mut kvs, None)
+                    .unwrap(),
+            );
+        }
+        for s in &mut shards {
+            for kv in s.iter_mut() {
+                kv.truncate(prompt_len);
+            }
+        }
+    });
+    let eff = base.min.as_secs_f64() / r.min.as_secs_f64().max(1e-12);
+    println!("  -> {} {eff:.2}x", names::SCALING_EFF_DECODE_W2);
+    suite.derive(names::SCALING_EFF_DECODE_W2, eff);
+    keep(suite, r);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -556,5 +645,11 @@ mod tests {
             .derived
             .get(names::RATIO_DECODE_LONGCTX_FP8)
             .is_some_and(|&v| v >= 0.7));
+        // The tensor-parallel scaling floor: two workers must beat one on
+        // the occupancy-8 decode step.
+        assert!(baseline
+            .derived
+            .get(names::SCALING_EFF_DECODE_W2)
+            .is_some_and(|&v| v >= 1.15));
     }
 }

@@ -27,7 +27,9 @@ use crate::hwsim::energy::EnergyModel;
 use crate::hwsim::kvcache::{kv_cache_bits, KvModelDims};
 use crate::hwsim::{simulate_matmul, DatapathConfig, LayerProfile, MatmulJob};
 use crate::model::kv::KvPrecision;
-use crate::runtime::{ArgValue, Engine, EngineOptions, ExecSpec, Executable, Runtime, Session};
+use crate::runtime::{
+    build_engine, ArgValue, EngineOptions, ExecSpec, Executable, InferenceEngine, Runtime, Session,
+};
 use crate::Result;
 
 use super::batcher::{BatchPolicy, Batcher};
@@ -61,6 +63,10 @@ pub struct ServerConfig {
     /// ([`EngineOptions::attn_threshold`]); `None` keeps attention inputs
     /// full-precision.
     pub attn_threshold: Option<f32>,
+    /// Tensor-parallel worker count of the generation engine; > 1 serves
+    /// over a [`crate::runtime::ShardedEngine`] (bit-identical streams,
+    /// the serve `--workers` flag).
+    pub workers: usize,
 }
 
 /// A running coordinator instance.
@@ -101,13 +107,13 @@ impl Server {
             let (cfg, metrics) = (cfg.clone(), metrics.clone());
             handles.push(std::thread::spawn(move || {
                 let rt = Runtime::cpu().expect("runtime (gen worker)");
-                let opts = EngineOptions {
-                    kv: cfg.kv_precision,
-                    kv_pages: cfg.kv_pages,
-                    attn_threshold: cfg.attn_threshold,
-                };
-                match Engine::with_options(&rt, &logits_spec, logits_args_tail, opts) {
-                    Ok(engine) => generate_worker(cfg, engine, gen_rx, metrics),
+                let opts = EngineOptions::default()
+                    .kv(cfg.kv_precision)
+                    .pages(cfg.kv_pages)
+                    .attn(cfg.attn_threshold)
+                    .workers(cfg.workers);
+                match build_engine(&rt, &logits_spec, logits_args_tail, opts) {
+                    Ok(engine) => generate_worker(cfg, engine.as_ref(), gen_rx, metrics),
                     Err(e) => {
                         eprintln!("gen worker: engine init failed: {e}");
                         while let Ok(req) = gen_rx.recv() {
@@ -208,6 +214,36 @@ pub fn decode_step_energy(
     (fgmp + kv, fp8 + kv16)
 }
 
+/// Tensor-parallel variant of [`decode_step_energy`]: each worker streams
+/// the same `kv_tokens` tokens but at its **own** shard width and its own
+/// realized precision mix, so its traffic must be priced per worker and
+/// summed — averaging the mixes first and multiplying by the full width
+/// over-charges workers whose shard quantized harder (and under-charges the
+/// rest) whenever per-worker mixes diverge. The all-FP8 baseline keeps the
+/// single 16-bit full-width cache read (worker widths tile `d_model`, so
+/// the totals are comparable). With a single-entry mix this reduces exactly
+/// to [`decode_step_energy`].
+pub fn decode_step_energy_tp(
+    shapes: &[LayerProfile],
+    act_fp8: &[f32],
+    rows: usize,
+    dims: &KvModelDims,
+    kv_tokens: u64,
+    kv_mix: &[(usize, f64)],
+    em: &EnergyModel,
+) -> (f64, f64) {
+    let (fgmp, fp8) = batch_energy(shapes, act_fp8, rows, em);
+    let kv: f64 = kv_mix
+        .iter()
+        .map(|&(width, bits)| {
+            let wdims = KvModelDims { d_model: width, ..dims.clone() };
+            kv_cache_bits(&wdims, kv_tokens, bits) as f64 * em.e_kv_bit
+        })
+        .sum();
+    let kv16 = kv_cache_bits(dims, kv_tokens, 16.0) as f64 * em.e_kv_bit;
+    (fgmp + kv, fp8 + kv16)
+}
+
 fn fail_request(req: Request) {
     let _ = req.reply.send(Response {
         id: req.id,
@@ -282,8 +318,8 @@ struct LiveGen {
     want: usize,
     produced: Vec<i32>,
     /// Worst-case pool pages this session was admitted against
-    /// ([`Engine::kv_pages_worst_for`]) — released from the committed
-    /// budget at retirement.
+    /// ([`InferenceEngine::kv_pages_worst_for`]) — released from the
+    /// committed budget at retirement.
     worst_pages: usize,
 }
 
@@ -312,7 +348,12 @@ fn retire_finished(live: &mut Vec<LiveGen>, metrics: &Metrics, committed: &mut u
 /// One KV pool sample: pages in use / total (with the pool's exact
 /// high-water mark), plus live-token slot fill of the allocated pages.
 /// No-op on the windowed fallback, which has no pool.
-fn sample_pool(engine: &Engine, metrics: &Metrics, live: &[LiveGen], slots_per_token: u64) {
+fn sample_pool<E: InferenceEngine + ?Sized>(
+    engine: &E,
+    metrics: &Metrics,
+    live: &[LiveGen],
+    slots_per_token: u64,
+) {
     if let Some(stats) = engine.pool_stats() {
         let used_slots: u64 =
             live.iter().map(|lg| lg.sess.cached_tokens() as u64).sum::<u64>() * slots_per_token;
@@ -334,10 +375,13 @@ fn sample_pool(engine: &Engine, metrics: &Metrics, live: &[LiveGen], slots_per_t
 /// whole admitted round as **one batched forward** (TTFT ends here — every
 /// first token's logits exist), retire anything already satisfied, then
 /// advance every live session one token in a single batched
-/// [`Engine::decode_step`], sampling pool occupancy alongside.
-fn generate_worker(
+/// [`InferenceEngine::decode_step`], sampling pool occupancy alongside.
+/// Generic over the engine surface: the single-worker [`crate::runtime::Engine`]
+/// and the tensor-parallel [`crate::runtime::ShardedEngine`] drive the same
+/// loop.
+fn generate_worker<E: InferenceEngine + ?Sized>(
     cfg: ServerConfig,
-    engine: Engine,
+    engine: &E,
     rx: Receiver<Request>,
     metrics: Arc<Metrics>,
 ) {
@@ -451,7 +495,7 @@ fn generate_worker(
                     // Sample pool occupancy while the admitted sessions
                     // still hold their pages (a gen-tokens=1 request
                     // retires before any decode step would sample).
-                    sample_pool(&engine, &metrics, &live, slots_per_token);
+                    sample_pool(engine, &metrics, &live, slots_per_token);
                 }
                 Err(_) => {
                     for (req, _, worst) in ready {
@@ -478,23 +522,37 @@ fn generate_worker(
             Ok(step) => {
                 // KV traffic priced at the *stored* bits the attend
                 // kernels actually read this step (precision nominal, or
-                // the attention PPU's realized FGMP mix).
-                let (e, e8) = decode_step_energy(
-                    &cfg.layer_shapes,
-                    &step.act_fp8,
-                    step.rows,
-                    &kv_dims,
-                    step.kv_tokens,
-                    step.kv_bits_per_value,
-                    &cfg.energy,
-                );
+                // the attention PPU's realized FGMP mix). Sharded steps
+                // report one mix entry per worker and each worker's reads
+                // are priced at its own shard width and realized mix.
+                let (e, e8) = if step.kv_mix.len() > 1 {
+                    decode_step_energy_tp(
+                        &cfg.layer_shapes,
+                        &step.act_fp8,
+                        step.rows,
+                        &kv_dims,
+                        step.kv_tokens,
+                        &step.kv_mix,
+                        &cfg.energy,
+                    )
+                } else {
+                    decode_step_energy(
+                        &cfg.layer_shapes,
+                        &step.act_fp8,
+                        step.rows,
+                        &kv_dims,
+                        step.kv_tokens,
+                        step.kv_bits_per_value,
+                        &cfg.energy,
+                    )
+                };
                 metrics.record_decode_step(step.rows, cap, busy, e, e8);
                 metrics.record_kv_traffic(step.kv_tokens, step.kv_bits_per_value);
                 for lg in &mut live {
                     lg.produced.push(lg.sess.next_token());
                 }
                 // Pool occupancy sample for this step (paged engines).
-                sample_pool(&engine, &metrics, &live, slots_per_token);
+                sample_pool(engine, &metrics, &live, slots_per_token);
             }
             Err(_) => {
                 committed = 0;

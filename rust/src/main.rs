@@ -17,10 +17,10 @@ use fgmp::hwsim::area::AreaModel;
 use fgmp::hwsim::energy::EnergyModel;
 use fgmp::hwsim::memory::weight_memory_report;
 use fgmp::io::synth;
-use fgmp::model::{ModelArtifacts, QuantConfig, QuantizedModel, RatioSpec};
+use fgmp::model::{KvPrecision, ModelArtifacts, QuantConfig, QuantizedModel, RatioSpec};
 use fgmp::policy::{Policy, ThresholdMode};
 use fgmp::quant::Precision;
-use fgmp::runtime::{ExecSpec, GraphKind, Runtime};
+use fgmp::runtime::{EngineOptions, ExecSpec, GraphKind, Runtime};
 use fgmp::Result;
 
 /// Hand-rolled CLI (offline build: no clap; DESIGN.md SSDeps).
@@ -48,7 +48,7 @@ COMMANDS
   report     --linear blk0.fc1 --fp4 0.9 --rows 24
   serve      --fp4 0.7 --requests 64 [--gen 8] [--gen-tokens 16]
              [--kv fp16|fp8] [--decode-batch 8] [--kv-pages N]
-             [--attn-ppu T]
+             [--attn-ppu T] [--workers N]
              score + generate traffic through the coordinator: scoring
              batches the one-shot graph, generation runs the KV-cached
              continuous-batching decode loop over a paged KV arena
@@ -56,12 +56,15 @@ COMMANDS
              occupancy cap, --kv-pages the page-pool capacity; admits
              the pool cannot hold yet are deferred, not failed;
              --attn-ppu runs the FGMP PPU over attention inputs at
-             impact threshold T and prices KV reads at the realized mix)
+             impact threshold T and prices KV reads at the realized mix;
+             --workers N > 1 serves over the tensor-parallel sharded
+             engine — streams stay bit-identical to one worker)
   generate   --prompt-len 16 --tokens 32 [--sessions 4] [--kv fp16|fp8]
-             [--kv-pages N]
-             drive the stateful Engine directly: prefill all sessions
+             [--kv-pages N] [--attn-ppu T] [--workers N]
+             drive the stateful engine directly: prefill all sessions
              as one batched forward over corpus prompts, decode them
              batched, print tokens + decode throughput + pool occupancy
+             (--workers N > 1 decodes on the sharded engine)
   bench      [--out .] [--name hotpath] [--budget-ms 300] [--baseline FILE]
              run blocked-vs-scalar kernel + forward + decode benchmarks,
              write BENCH_<name>.json; with --baseline, exit non-zero on
@@ -128,6 +131,39 @@ impl Cli {
             Some(v) => v.split(',').filter_map(|x| x.parse().ok()).collect(),
             None => default.to_vec(),
         }
+    }
+}
+
+/// Engine-facing options `serve` and `generate` share, parsed once from
+/// the same flags (`--kv`, `--kv-pages`, `--attn-ppu`, `--decode-batch`,
+/// `--workers`) instead of per-command duplicates.
+struct EngineCliOpts {
+    kv: KvPrecision,
+    kv_pages: Option<usize>,
+    attn_ppu: Option<f32>,
+    decode_batch: usize,
+    workers: usize,
+}
+
+impl EngineCliOpts {
+    fn parse(cli: &Cli) -> Result<EngineCliOpts> {
+        Ok(EngineCliOpts {
+            kv: KvPrecision::parse(&cli.str("kv", "fp16"))?,
+            kv_pages: cli.opt_usize("kv_pages"),
+            attn_ppu: cli.flags.get("attn_ppu").and_then(|v| v.parse::<f32>().ok()),
+            decode_batch: cli.usize("decode_batch", 8),
+            workers: cli.usize("workers", 1).max(1),
+        })
+    }
+
+    /// The single flags → [`EngineOptions`] path. `workers > 1` makes the
+    /// engine builder return the tensor-parallel sharded engine.
+    fn to_engine_options(&self) -> EngineOptions {
+        EngineOptions::default()
+            .kv(self.kv)
+            .pages(self.kv_pages)
+            .attn(self.attn_ppu)
+            .workers(self.workers)
     }
 }
 
@@ -331,7 +367,9 @@ fn cmd_tasks(cli: &Cli, fp4: &[f64], max_items: usize) -> Result<()> {
 /// more than 2x against the checked-in baseline, or a derived speedup
 /// falls below its floor.
 fn cmd_bench(cli: &Cli) -> Result<()> {
-    use fgmp::benchsuite::{decode_benches, kernel_benches, longctx_benches, pipeline_benches};
+    use fgmp::benchsuite::{
+        decode_benches, kernel_benches, longctx_benches, pipeline_benches, sharded_benches,
+    };
     use fgmp::util::bench::{budget_from_env, BenchSuite};
     use std::time::Duration;
 
@@ -350,6 +388,7 @@ fn cmd_bench(cli: &Cli) -> Result<()> {
     pipeline_benches(&mut suite, budget);
     decode_benches(&mut suite, budget);
     longctx_benches(&mut suite, budget);
+    sharded_benches(&mut suite, budget);
 
     let path = suite.write(&out_dir)?;
     println!("wrote {}", path.display());
@@ -378,7 +417,6 @@ fn cmd_serve(cli: &Cli, fp4: f64, requests: usize) -> Result<()> {
         kv_dims_from_profiles, BatchPolicy, Request, RequestKind, Server, ServerConfig,
     };
     use fgmp::hwsim::kvcache::kv_cache_bits;
-    use fgmp::model::KvPrecision;
 
     let rt = Runtime::cpu()?;
     let ev = Evaluator::load(&rt, &cli.artifacts, &cli.model)?;
@@ -390,13 +428,11 @@ fn cmd_serve(cli: &Cli, fp4: f64, requests: usize) -> Result<()> {
     let logits_spec = ExecSpec::new(&cli.artifacts, &cli.model, GraphKind::LogitsQuant);
     let logits_tail = fwd_tail.clone();
     let shapes = qm.layer_profiles(&ev.arts.manifest, ev.batch * ev.seq, &[]);
-    let kv_precision = KvPrecision::parse(&cli.str("kv", "fp16"))?;
+    let eopts = EngineCliOpts::parse(cli)?;
+    let kv_precision = eopts.kv;
     let gen_requests = cli.usize("gen", 8);
     let gen_tokens = cli.usize("gen_tokens", 16);
     let kv_dims = kv_dims_from_profiles(&shapes)?;
-    // `--attn-ppu T` routes attention inputs (Q rows and appended K/V
-    // rows) through the FGMP PPU at threshold T before the dot products.
-    let attn_threshold = cli.flags.get("attn_ppu").and_then(|v| v.parse::<f32>().ok());
 
     let scfg = ServerConfig {
         batch: ev.batch,
@@ -405,10 +441,11 @@ fn cmd_serve(cli: &Cli, fp4: f64, requests: usize) -> Result<()> {
         layer_shapes: shapes,
         queue_depth: 256,
         kv_precision,
-        decode_batch: cli.usize("decode_batch", 8),
-        kv_pages: cli.opt_usize("kv_pages"),
+        decode_batch: eopts.decode_batch,
+        kv_pages: eopts.kv_pages,
         energy: fgmp::hwsim::energy::EnergyModel::default(),
-        attn_threshold,
+        attn_threshold: eopts.attn_ppu,
+        workers: eopts.workers,
     };
     let windows = ev.eval_windows(requests.div_ceil(ev.batch));
     let seq = ev.seq;
@@ -473,9 +510,9 @@ fn cmd_serve(cli: &Cli, fp4: f64, requests: usize) -> Result<()> {
              snap.mean_batch_fill * 100.0);
     println!("gen: {gen_toks} tokens / {} reqs  {:.1} tok/s decode  ttft p50 {:.1}ms p95 {:.1}ms",
              gen_rxs.len(), snap.decode_tok_per_s, snap.ttft_p50_ms, snap.ttft_p95_ms);
-    println!("decode: {} steps  occupancy {:.2} ({:.0}% of {})",
+    println!("decode: {} steps  occupancy {:.2} ({:.0}% of {})  workers {}",
              snap.decode_steps, snap.mean_decode_occupancy, snap.decode_fill * 100.0,
-             cli.usize("decode_batch", 8));
+             eopts.decode_batch, eopts.workers);
     let kv_bytes_per_tok =
         kv_cache_bits(&kv_dims, 1, kv_precision.bits_per_value()) as f64 / 8.0;
     println!("kv: {} cache, {:.0} B/token ({:.0} B/token at fp16)",
@@ -501,13 +538,16 @@ fn cmd_serve(cli: &Cli, fp4: f64, requests: usize) -> Result<()> {
     Ok(())
 }
 
-/// `fgmp generate`: drive the stateful [`fgmp::runtime::Engine`] directly —
-/// prefill one or more sessions from corpus windows, decode them batched,
-/// and report tokens + decode throughput. The single-process view of what
-/// the `serve` coordinator does continuously.
+/// `fgmp generate`: drive the stateful engine directly — prefill one or
+/// more sessions from corpus windows, decode them batched, and report
+/// tokens + decode throughput. The single-process view of what the `serve`
+/// coordinator does continuously. Drives whatever
+/// [`fgmp::runtime::build_engine`] returns for the flags — the
+/// single-worker [`fgmp::runtime::Engine`], or the tensor-parallel
+/// [`fgmp::runtime::ShardedEngine`] under `--workers N > 1` — through the
+/// [`fgmp::runtime::InferenceEngine`] surface.
 fn cmd_generate(cli: &Cli) -> Result<()> {
-    use fgmp::model::KvPrecision;
-    use fgmp::runtime::{Engine, EngineOptions};
+    use fgmp::runtime::build_engine;
 
     let rt = Runtime::cpu()?;
     let ev = Evaluator::load(&rt, &cli.artifacts, &cli.model)?;
@@ -515,9 +555,8 @@ fn cmd_generate(cli: &Cli) -> Result<()> {
     let qm = QuantizedModel::quantize(&ev.arts, &cfg)?;
     let tail = ev.quant_arg_tail(&cfg, &qm)?;
     let spec = ExecSpec::new(&cli.artifacts, &cli.model, GraphKind::LogitsQuant);
-    let kv = KvPrecision::parse(&cli.str("kv", "fp16"))?;
-    let opts = EngineOptions { kv, kv_pages: cli.opt_usize("kv_pages") };
-    let engine = Engine::with_options(&rt, &spec, tail, opts)?;
+    let eopts = EngineCliOpts::parse(cli)?;
+    let engine = build_engine(&rt, &spec, tail, eopts.to_engine_options())?;
 
     let prompt_len = cli.usize("prompt_len", 16).clamp(1, ev.test_stream.len().max(1));
     let n_tokens = cli.usize("tokens", 32);
@@ -557,10 +596,11 @@ fn cmd_generate(cli: &Cli) -> Result<()> {
 
     let total: usize = produced.iter().map(|p| p.len().min(n_tokens)).sum();
     println!(
-        "engine: {} path, kv {}  |  {n_sessions} sessions, prompt {prompt_len}, \
-         {n_tokens} tokens each",
+        "engine: {} path, kv {}, {} worker(s)  |  {n_sessions} sessions, \
+         prompt {prompt_len}, {n_tokens} tokens each",
         if engine.is_cached() { "cached" } else { "windowed-recompute" },
         engine.kv_precision().label(),
+        engine.workers(),
     );
     let wm = engine.weight_memory();
     if wm.linears > 0 {

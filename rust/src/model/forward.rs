@@ -19,6 +19,9 @@ use std::collections::HashMap;
 
 use crate::io::manifest::{LinearSpec, Manifest};
 use crate::model::kv::{lock_pools, KvState, KvView, LayerKv};
+use crate::model::tp::{
+    concat_col_blocks, gather_qkv_cols, scatter_cols, split_range, Collective, Job, ShardPlan,
+};
 use crate::quant::PackedPanels;
 use crate::util::kernels::MatmulScratch;
 use crate::util::{kernels, par_map, Json};
@@ -460,6 +463,55 @@ fn fgmp_tiles(
     }
     let frac = total_fp8 as f32 / (m * blocks_per_row).max(1) as f32;
     (flat, frac)
+}
+
+/// One worker's shard of [`fgmp_matmul_packed`]: PPU-quantize the full-K
+/// activation rows (per-16-block decisions are independent of the column
+/// split, so every worker makes bit-identical choices) and multiply against
+/// panels `[p0, p1)` only. Returns the `(m, cols-in-range)` partial product
+/// plus the FP8 block count. Serial over row tiles — the tensor-parallel
+/// driver already runs one thread per worker, so nesting [`par_map`] here
+/// would oversubscribe the machine.
+fn fgmp_matmul_packed_range(
+    x: &[f32],
+    w: &PackedPanels,
+    m: usize,
+    chan_weight: &[f32],
+    threshold: f32,
+    scratch: &MatmulScratch,
+    p0: usize,
+    p1: usize,
+) -> (Vec<f32>, usize) {
+    let (k, n) = (w.k, w.n);
+    assert_eq!(x.len(), m * k);
+    assert_eq!(chan_weight.len(), k);
+    assert_eq!(k % BLOCK, 0);
+    let ncols = (p1 * w.nr).min(n) - (p0 * w.nr).min(n);
+    if ncols == 0 {
+        return (Vec::new(), 0);
+    }
+    let mut out = vec![0.0f32; m * ncols];
+    let mut n_fp8 = 0usize;
+    let mut xq = scratch.take();
+    for t in 0..m.div_ceil(kernels::MR) {
+        let r0 = t * kernels::MR;
+        let rows = kernels::MR.min(m - r0);
+        kernels::scratch_resize(&mut xq, rows * k);
+        for r in 0..rows {
+            let xr = &x[(r0 + r) * k..(r0 + r + 1) * k];
+            n_fp8 += kernels::ppu_quantize_row(xr, chan_weight, threshold, &mut xq[r * k..(r + 1) * k]);
+        }
+        kernels::matmul_rows_packed_range(
+            &xq[..rows * k],
+            w,
+            rows,
+            p0,
+            p1,
+            &mut out[r0 * ncols..(r0 + rows) * ncols],
+        );
+    }
+    scratch.put(xq);
+    (out, n_fp8)
 }
 
 fn norm_rows(kind: NormKind, x: &[f32], d: usize, g: &[f32], b: Option<&[f32]>) -> Vec<f32> {
@@ -942,6 +994,78 @@ fn apply_linear(
     }
 }
 
+/// Tensor-parallel [`apply_linear`]: split the packed weight's NR-panel axis
+/// into `coll.world()` contiguous byte ranges ([`split_range`]), run one
+/// partial matmul per worker through the [`Collective`], and reassemble with
+/// the fixed-order [`concat_col_blocks`] all-reduce. Every per-output-column
+/// dot product stays whole on one worker, so the result is bit-for-bit the
+/// single-worker product. Dense (non-packed) weights fall back to the
+/// unsharded path — trivially bit-exact, and rare on the packed serving
+/// path this exists for.
+#[allow(clippy::too_many_arguments)]
+fn apply_linear_tp<C: Collective>(
+    linears: &[LinearSpec],
+    params: &Params<'_>,
+    quant: Option<&QuantInputs<'_>>,
+    h: &[f32],
+    rows: usize,
+    li: usize,
+    fracs: &mut [f32],
+    scratch: &MatmulScratch,
+    coll: &C,
+) -> Result<Vec<f32>> {
+    let spec = &linears[li];
+    let wname = format!("{}.w", spec.name);
+    let p = match params.weight(&wname)? {
+        WeightView::Dense(_) => {
+            return apply_linear(linears, params, quant, h, rows, li, fracs, &mut None, scratch)
+        }
+        WeightView::Packed(p) => p,
+    };
+    anyhow::ensure!(
+        p.k == spec.k_in && p.n == spec.n_out,
+        "packed weight {} shape ({},{}) != ({},{})",
+        spec.name,
+        p.k,
+        p.n,
+        spec.k_in,
+        spec.n_out
+    );
+    let splits = split_range(p.n_panels(), coll.world());
+    if let Some(q) = quant {
+        anyhow::ensure!(
+            q.act_weights[li].len() == spec.k_in,
+            "act weighting {} length",
+            spec.name
+        );
+        let (cw, th) = (q.act_weights[li], q.thresholds[li]);
+        let jobs: Vec<Job<'_, (Vec<f32>, usize)>> = splits
+            .iter()
+            .map(|&(p0, p1)| {
+                Box::new(move || fgmp_matmul_packed_range(h, p, rows, cw, th, scratch, p0, p1))
+                    as Job<'_, (Vec<f32>, usize)>
+            })
+            .collect();
+        let outs = coll.run(jobs);
+        // Every worker PPU-quantizes the same full-K rows, so all non-empty
+        // shards report the identical block count; `max` skips empty shards.
+        let total_fp8 = outs.iter().map(|(_, c)| *c).max().unwrap_or(0);
+        fracs[li] = total_fp8 as f32 / (rows * (p.k / BLOCK)).max(1) as f32;
+        let blocks: Vec<Vec<f32>> = outs.into_iter().map(|(b, _)| b).collect();
+        Ok(concat_col_blocks(rows, p.n, p.nr, &splits, &blocks))
+    } else {
+        let jobs: Vec<Job<'_, Vec<f32>>> = splits
+            .iter()
+            .map(|&(p0, p1)| {
+                Box::new(move || kernels::matmul_packed_range(h, p, rows, p0, p1))
+                    as Job<'_, Vec<f32>>
+            })
+            .collect();
+        let blocks = coll.run(jobs);
+        Ok(concat_col_blocks(rows, p.n, p.nr, &splits, &blocks))
+    }
+}
+
 /// Run the transformer. `params` maps manifest parameter names to row-major
 /// buffers; `quant` switches every linear onto the FGMP datapath; `capture`
 /// (when given) receives each linear's input `(rows·k)` in execution order —
@@ -970,22 +1094,12 @@ pub fn forward(
     let mut x = embed_rows(arch, params, tokens, &positions)?;
     let mut li = 0usize;
     let scratch = MatmulScratch::new();
+    let mut lin = |h: &[f32], li: usize| {
+        apply_linear(&linears, params, quant, h, m, li, &mut fracs, &mut capture, &scratch)
+    };
 
     for l in 0..arch.n_layers {
-        block_forward(
-            arch,
-            &linears,
-            params,
-            quant,
-            l,
-            &mut x,
-            m,
-            &mut li,
-            &mut fracs,
-            &mut capture,
-            &scratch,
-            |qkv| attention(arch, qkv, b, s),
-        )?;
+        block_forward(arch, params, l, &mut x, &mut li, &mut lin, |qkv| attention(arch, qkv, b, s))?;
     }
 
     let take: Vec<usize> = if last_only {
@@ -1029,23 +1143,20 @@ fn embed_rows(
 
 /// Run one transformer block (attention + MLP sublayers) over `rows`
 /// activation rows in `x`, with `attn` supplying the attention mixing for
-/// this layer's post-qkv rows. `li` indexes the linear inventory and is
-/// advanced past the four linears consumed. Shared verbatim by the
-/// full-sequence, prefill, and decode-step paths — the structural reason
-/// they agree bit-for-bit outside of attention's K/V source.
-#[allow(clippy::too_many_arguments)]
+/// this layer's post-qkv rows and `lin` applying linear `li` of the
+/// inventory to its input rows (single-engine callers close over
+/// [`apply_linear`]; the tensor-parallel path closes over the sharded
+/// variant). `li` is advanced past the four linears consumed. Shared
+/// verbatim by the full-sequence, prefill, decode-step, and sharded paths —
+/// the structural reason they agree bit-for-bit outside of attention's K/V
+/// source.
 fn block_forward(
     arch: &ModelArch,
-    linears: &[LinearSpec],
     params: &Params<'_>,
-    quant: Option<&QuantInputs<'_>>,
     l: usize,
     x: &mut [f32],
-    rows: usize,
     li: &mut usize,
-    fracs: &mut [f32],
-    capture: &mut Option<&mut Vec<Vec<f32>>>,
-    scratch: &MatmulScratch,
+    lin: &mut dyn FnMut(&[f32], usize) -> Result<Vec<f32>>,
     attn: impl FnOnce(&[f32]) -> Vec<f32>,
 ) -> Result<()> {
     let d = arch.d_model;
@@ -1056,10 +1167,10 @@ fn block_forward(
         None
     };
     let h = norm_rows(arch.norm, x, d, g1, b1);
-    let qkv = apply_linear(linears, params, quant, &h, rows, *li, fracs, capture, scratch)?;
+    let qkv = lin(&h, *li)?;
     *li += 1;
     let mixed = attn(&qkv);
-    let o = apply_linear(linears, params, quant, &mixed, rows, *li, fracs, capture, scratch)?;
+    let o = lin(&mixed, *li)?;
     *li += 1;
     for (a, &v) in x.iter_mut().zip(&o) {
         *a += v;
@@ -1072,10 +1183,11 @@ fn block_forward(
         None
     };
     let h = norm_rows(arch.norm, x, d, g2, b2);
-    let f1 = apply_linear(linears, params, quant, &h, rows, *li, fracs, capture, scratch)?;
+    let f1 = lin(&h, *li)?;
     *li += 1;
+    let rows = f1.len() / arch.fc1_out();
     let act = mlp_act(arch.act, &f1, rows, arch.fc1_out(), arch.d_ff);
-    let f2 = apply_linear(linears, params, quant, &act, rows, *li, fracs, capture, scratch)?;
+    let f2 = lin(&act, *li)?;
     *li += 1;
     for (a, &v) in x.iter_mut().zip(&f2) {
         *a += v;
@@ -1156,21 +1268,13 @@ pub fn forward_prefill(
     let mut x = embed_rows(arch, params, tokens, &positions)?;
     let mut li = 0usize;
     let mm_scratch = MatmulScratch::new();
+    let mut lin = |h: &[f32], li: usize| {
+        apply_linear(&linears, params, quant, h, s, li, &mut fracs, &mut None, &mm_scratch)
+    };
     for (l, lkv) in kv.layers.iter_mut().enumerate() {
-        block_forward(
-            arch,
-            &linears,
-            params,
-            quant,
-            l,
-            &mut x,
-            s,
-            &mut li,
-            &mut fracs,
-            &mut None,
-            &mm_scratch,
-            |qkv| attention_prefill(arch, qkv, s, lkv, attn_ppu),
-        )?;
+        block_forward(arch, params, l, &mut x, &mut li, &mut lin, |qkv| {
+            attention_prefill(arch, qkv, s, lkv, attn_ppu)
+        })?;
     }
     kv.advance(s);
     let logits = lm_head(arch, params, &x, &[s - 1])?;
@@ -1246,36 +1350,26 @@ pub fn forward_prefill_batch(
     let mut li = 0usize;
     let mm_scratch = MatmulScratch::new();
     let d = arch.d_model;
+    let mut lin = |h: &[f32], li: usize| {
+        apply_linear(&linears, params, quant, h, m, li, &mut fracs, &mut None, &mm_scratch)
+    };
     for l in 0..arch.n_layers {
         let mut caches: Vec<&mut LayerKv> = kvs.iter_mut().map(|kv| &mut kv.layers[l]).collect();
-        block_forward(
-            arch,
-            &linears,
-            params,
-            quant,
-            l,
-            &mut x,
-            m,
-            &mut li,
-            &mut fracs,
-            &mut None,
-            &mm_scratch,
-            |qkv| {
-                let mut out = vec![0.0f32; m * d];
-                for (i, lkv) in caches.iter_mut().enumerate() {
-                    let (off, s_i) = (offs[i], lens[i]);
-                    let o = attention_prefill(
-                        arch,
-                        &qkv[off * 3 * d..(off + s_i) * 3 * d],
-                        s_i,
-                        lkv,
-                        attn_ppu,
-                    );
-                    out[off * d..(off + s_i) * d].copy_from_slice(&o);
-                }
-                out
-            },
-        )?;
+        block_forward(arch, params, l, &mut x, &mut li, &mut lin, |qkv| {
+            let mut out = vec![0.0f32; m * d];
+            for (i, lkv) in caches.iter_mut().enumerate() {
+                let (off, s_i) = (offs[i], lens[i]);
+                let o = attention_prefill(
+                    arch,
+                    &qkv[off * 3 * d..(off + s_i) * 3 * d],
+                    s_i,
+                    lkv,
+                    attn_ppu,
+                );
+                out[off * d..(off + s_i) * d].copy_from_slice(&o);
+            }
+            out
+        })?;
     }
     for (kv, &s_i) in kvs.iter_mut().zip(&lens) {
         kv.advance(s_i);
@@ -1328,22 +1422,14 @@ pub fn forward_step_batch(
     let mut x = embed_rows(arch, params, tokens, &positions)?;
     let mut li = 0usize;
     let mm_scratch = MatmulScratch::new();
+    let mut lin = |h: &[f32], li: usize| {
+        apply_linear(&linears, params, quant, h, n, li, &mut fracs, &mut None, &mm_scratch)
+    };
     for l in 0..arch.n_layers {
         let mut caches: Vec<&mut LayerKv> = kvs.iter_mut().map(|kv| &mut kv.layers[l]).collect();
-        block_forward(
-            arch,
-            &linears,
-            params,
-            quant,
-            l,
-            &mut x,
-            n,
-            &mut li,
-            &mut fracs,
-            &mut None,
-            &mm_scratch,
-            |qkv| attention_step(arch, qkv, &mut caches, &positions, attn_ppu),
-        )?;
+        block_forward(arch, params, l, &mut x, &mut li, &mut lin, |qkv| {
+            attention_step(arch, qkv, &mut caches, &positions, attn_ppu)
+        })?;
     }
     for kv in kvs.iter_mut() {
         kv.advance(1);
@@ -1362,6 +1448,285 @@ pub fn forward_step(
     quant: Option<&QuantInputs<'_>>,
 ) -> Result<ForwardOut> {
     forward_step_batch(arch, params, &[token], &mut [kv], quant)
+}
+
+/// Shared validation for the tensor-parallel entry points: plan/shard-arch
+/// consistency, and (when the attention PPU is on) that every active
+/// worker's column range starts on a 16-block boundary — the per-row PPU
+/// blocks width `d_model`, so shard boundaries must fall *between* blocks
+/// for the sharded quantization decisions to match the unsharded ones
+/// bit-for-bit.
+fn ensure_tp_shapes(
+    arch: &ModelArch,
+    shard_arches: &[ModelArch],
+    plan: &ShardPlan,
+    quant: Option<&QuantInputs<'_>>,
+) -> Result<()> {
+    anyhow::ensure!(plan.heads.len() == plan.world, "shard plan heads/world mismatch");
+    anyhow::ensure!(
+        shard_arches.len() == plan.active(),
+        "need one shard arch per active worker ({} != {})",
+        shard_arches.len(),
+        plan.active()
+    );
+    let dh = arch.head_dim();
+    for (w, sa) in shard_arches.iter().enumerate() {
+        let (h0, h1) = plan.heads[w];
+        anyhow::ensure!(
+            sa.n_heads == h1 - h0 && sa.d_model == (h1 - h0) * dh,
+            "shard arch {w} does not match head range [{h0}, {h1})"
+        );
+    }
+    if let Some(q) = quant {
+        if q.attn_threshold.is_some() {
+            ensure_attn_ppu_shape(arch, q)?;
+            for (w, &(h0, _)) in plan.heads.iter().take(shard_arches.len()).enumerate() {
+                anyhow::ensure!(
+                    (h0 * dh) % BLOCK == 0,
+                    "attention PPU requires worker boundaries on {BLOCK}-wide blocks; worker {w} \
+                     starts at column {} (head {h0} x head_dim {dh}) — pick a worker count whose \
+                     head split lands on block boundaries",
+                    h0 * dh
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Tensor-parallel [`forward_prefill_batch`]: every linear runs
+/// column-sharded across all `plan.world` workers ([`apply_linear_tp`]) and
+/// attention fans out over the active workers' head-slices, each worker
+/// appending post-RoPE K/V to its own shard of the session's KV state
+/// (`kvs[session][worker]`). Per-column dot products and per-head attention
+/// are untouched by the split, so logits are bit-for-bit the single-worker
+/// batched prefill at any worker count.
+#[allow(clippy::too_many_arguments)]
+pub fn forward_prefill_batch_tp<C: Collective>(
+    arch: &ModelArch,
+    shard_arches: &[ModelArch],
+    plan: &ShardPlan,
+    params: &Params<'_>,
+    coll: &C,
+    prompts: &[&[i32]],
+    quant: Option<&QuantInputs<'_>>,
+    kvs: &mut [Vec<&mut KvState>],
+) -> Result<ForwardOut> {
+    let n = prompts.len();
+    anyhow::ensure!(n > 0, "batched prefill needs at least one prompt");
+    anyhow::ensure!(kvs.len() == n, "prompts/sessions length mismatch");
+    anyhow::ensure!(coll.world() == plan.world, "collective world != shard plan world");
+    ensure_tp_shapes(arch, shard_arches, plan, quant)?;
+    let active = shard_arches.len();
+    for (i, p) in prompts.iter().enumerate() {
+        anyhow::ensure!(!p.is_empty(), "prompt {i}: prefill needs at least one token");
+        anyhow::ensure!(
+            p.len() <= arch.max_seq,
+            "prompt {i}: length {} exceeds max_seq {}",
+            p.len(),
+            arch.max_seq
+        );
+    }
+    for (i, shards) in kvs.iter().enumerate() {
+        anyhow::ensure!(shards.len() == active, "session {i}: shard count != active workers");
+        for (w, kv) in shards.iter().enumerate() {
+            anyhow::ensure!(
+                kv.is_empty(),
+                "session {i} shard {w}: prefill requires an empty KV cache"
+            );
+            anyhow::ensure!(
+                kv.layers.len() == arch.n_layers,
+                "session {i} shard {w}: cache layer count"
+            );
+        }
+    }
+    for (shards, p) in kvs.iter_mut().zip(prompts) {
+        for kv in shards.iter_mut() {
+            kv.reserve(p.len())?;
+        }
+    }
+
+    let linears = arch.linears();
+    if let Some(q) = quant {
+        anyhow::ensure!(q.act_weights.len() == linears.len(), "act_weights count");
+        anyhow::ensure!(q.thresholds.len() == linears.len(), "thresholds count");
+    }
+    let attn_ppu = quant.and_then(|q| q.attn_threshold);
+    let mut fracs = vec![0.0f32; if quant.is_some() { linears.len() } else { 0 }];
+
+    let lens: Vec<usize> = prompts.iter().map(|p| p.len()).collect();
+    let mut offs = Vec::with_capacity(n);
+    let mut tokens: Vec<i32> = Vec::new();
+    let mut positions: Vec<usize> = Vec::new();
+    let mut m = 0usize;
+    for p in prompts {
+        offs.push(m);
+        tokens.extend_from_slice(p);
+        positions.extend(0..p.len());
+        m += p.len();
+    }
+
+    let mut x = embed_rows(arch, params, &tokens, &positions)?;
+    let mut li = 0usize;
+    let mm_scratch = MatmulScratch::new();
+    let d = arch.d_model;
+    let dh = arch.head_dim();
+    let mut lin = |h: &[f32], li: usize| {
+        apply_linear_tp(&linears, params, quant, h, m, li, &mut fracs, &mm_scratch, coll)
+    };
+    for l in 0..arch.n_layers {
+        let mut caches: Vec<Vec<&mut LayerKv>> =
+            (0..active).map(|_| Vec::with_capacity(n)).collect();
+        for shards in kvs.iter_mut() {
+            for (w, kv) in shards.iter_mut().enumerate() {
+                caches[w].push(&mut kv.layers[l]);
+            }
+        }
+        block_forward(arch, params, l, &mut x, &mut li, &mut lin, |qkv| {
+            let jobs: Vec<Job<'_, Vec<f32>>> = caches
+                .into_iter()
+                .enumerate()
+                .map(|(w, mut cache_w)| {
+                    let sarch = &shard_arches[w];
+                    let (h0, _) = plan.heads[w];
+                    let dw = sarch.d_model;
+                    let qkv_w = gather_qkv_cols(qkv, m, d, h0 * dh, h0 * dh + dw);
+                    let (offs, lens) = (&offs, &lens);
+                    Box::new(move || {
+                        let mut out_w = vec![0.0f32; m * dw];
+                        for (i, lkv) in cache_w.iter_mut().enumerate() {
+                            let (off, s_i) = (offs[i], lens[i]);
+                            let o = attention_prefill(
+                                sarch,
+                                &qkv_w[off * 3 * dw..(off + s_i) * 3 * dw],
+                                s_i,
+                                lkv,
+                                attn_ppu,
+                            );
+                            out_w[off * dw..(off + s_i) * dw].copy_from_slice(&o);
+                        }
+                        out_w
+                    }) as Job<'_, Vec<f32>>
+                })
+                .collect();
+            let outs = coll.run(jobs);
+            let mut mixed = vec![0.0f32; m * d];
+            for (w, o) in outs.iter().enumerate() {
+                let (h0, _) = plan.heads[w];
+                scatter_cols(o, m, shard_arches[w].d_model, &mut mixed, d, h0 * dh);
+            }
+            mixed
+        })?;
+    }
+    for (shards, &s_i) in kvs.iter_mut().zip(&lens) {
+        for kv in shards.iter_mut() {
+            kv.advance(s_i);
+        }
+    }
+    let take: Vec<usize> = (0..n).map(|i| offs[i] + lens[i] - 1).collect();
+    let logits = lm_head(arch, params, &x, &take)?;
+    Ok(ForwardOut { logits, act_fp8: fracs })
+}
+
+/// Tensor-parallel [`forward_step_batch`]: one decode step for `n` sessions
+/// whose KV lives in per-worker shards (`kvs[session][worker]`, one entry
+/// per *active* worker of `plan`). Bit-for-bit identical logits to the
+/// single-worker step at any worker count.
+pub fn forward_step_batch_tp<C: Collective>(
+    arch: &ModelArch,
+    shard_arches: &[ModelArch],
+    plan: &ShardPlan,
+    params: &Params<'_>,
+    coll: &C,
+    tokens: &[i32],
+    kvs: &mut [Vec<&mut KvState>],
+    quant: Option<&QuantInputs<'_>>,
+) -> Result<ForwardOut> {
+    let n = tokens.len();
+    anyhow::ensure!(n > 0, "decode step needs at least one session");
+    anyhow::ensure!(kvs.len() == n, "tokens/sessions length mismatch");
+    anyhow::ensure!(coll.world() == plan.world, "collective world != shard plan world");
+    ensure_tp_shapes(arch, shard_arches, plan, quant)?;
+    let active = shard_arches.len();
+    for (i, shards) in kvs.iter().enumerate() {
+        anyhow::ensure!(shards.len() == active, "session {i}: shard count != active workers");
+        let len0 = shards.first().map(|kv| kv.len()).unwrap_or(0);
+        anyhow::ensure!(len0 > 0, "session {i}: decode before prefill");
+        anyhow::ensure!(
+            len0 < arch.max_seq,
+            "session {i}: KV cache full at max_seq {} — roll before stepping",
+            arch.max_seq
+        );
+        for (w, kv) in shards.iter().enumerate() {
+            anyhow::ensure!(kv.len() == len0, "session {i} shard {w}: shard lengths diverged");
+            anyhow::ensure!(
+                kv.layers.len() == arch.n_layers,
+                "session {i} shard {w}: cache layer count"
+            );
+        }
+    }
+    let positions: Vec<usize> = kvs.iter().map(|shards| shards[0].len()).collect();
+    for shards in kvs.iter_mut() {
+        for kv in shards.iter_mut() {
+            kv.reserve(1)?;
+        }
+    }
+
+    let linears = arch.linears();
+    if let Some(q) = quant {
+        anyhow::ensure!(q.act_weights.len() == linears.len(), "act_weights count");
+        anyhow::ensure!(q.thresholds.len() == linears.len(), "thresholds count");
+    }
+    let attn_ppu = quant.and_then(|q| q.attn_threshold);
+    let mut fracs = vec![0.0f32; if quant.is_some() { linears.len() } else { 0 }];
+    let mut x = embed_rows(arch, params, tokens, &positions)?;
+    let mut li = 0usize;
+    let mm_scratch = MatmulScratch::new();
+    let d = arch.d_model;
+    let dh = arch.head_dim();
+    let mut lin = |h: &[f32], li: usize| {
+        apply_linear_tp(&linears, params, quant, h, n, li, &mut fracs, &mm_scratch, coll)
+    };
+    for l in 0..arch.n_layers {
+        let mut caches: Vec<Vec<&mut LayerKv>> =
+            (0..active).map(|_| Vec::with_capacity(n)).collect();
+        for shards in kvs.iter_mut() {
+            for (w, kv) in shards.iter_mut().enumerate() {
+                caches[w].push(&mut kv.layers[l]);
+            }
+        }
+        block_forward(arch, params, l, &mut x, &mut li, &mut lin, |qkv| {
+            let jobs: Vec<Job<'_, Vec<f32>>> = caches
+                .into_iter()
+                .enumerate()
+                .map(|(w, mut cache_w)| {
+                    let sarch = &shard_arches[w];
+                    let (h0, _) = plan.heads[w];
+                    let dw = sarch.d_model;
+                    let qkv_w = gather_qkv_cols(qkv, n, d, h0 * dh, h0 * dh + dw);
+                    let positions = &positions;
+                    Box::new(move || {
+                        attention_step(sarch, &qkv_w, &mut cache_w, positions, attn_ppu)
+                    }) as Job<'_, Vec<f32>>
+                })
+                .collect();
+            let outs = coll.run(jobs);
+            let mut mixed = vec![0.0f32; n * d];
+            for (w, o) in outs.iter().enumerate() {
+                let (h0, _) = plan.heads[w];
+                scatter_cols(o, n, shard_arches[w].d_model, &mut mixed, d, h0 * dh);
+            }
+            mixed
+        })?;
+    }
+    for shards in kvs.iter_mut() {
+        for kv in shards.iter_mut() {
+            kv.advance(1);
+        }
+    }
+    let take: Vec<usize> = (0..n).collect();
+    let logits = lm_head(arch, params, &x, &take)?;
+    Ok(ForwardOut { logits, act_fp8: fracs })
 }
 
 /// Masked next-token NLL per batch row — `model.py::nll` semantics: position
@@ -1571,5 +1936,105 @@ mod tests {
         assert_eq!(back.norm, arch.norm);
         assert_eq!(back.pos, arch.pos);
         assert_eq!(back.param_names(), arch.param_names());
+    }
+
+    #[test]
+    fn tp_forward_bit_exact_vs_single_worker() {
+        use crate::model::kv::KvPrecision;
+        use crate::model::tp::{shard_arch, ThreadCollective};
+        use crate::quant::{FgmpTensor, Precision};
+
+        // Two layers + PPU attention over packed linears — the full sharded
+        // datapath (column-split matmuls, head-split attention, per-shard
+        // KV) against the unsharded oracle, bit for bit.
+        let arch = ModelArch { n_layers: 2, ..tiny_arch() };
+        let dense = random_params(&arch, 23);
+        let linears = arch.linears();
+        let mut rng = Rng::new(29);
+        let packed: Vec<(String, PackedPanels)> = linears
+            .iter()
+            .map(|l| {
+                let kb = l.k_in / BLOCK;
+                let w = rng.normal_vec(l.n_out * l.k_in, 0.1);
+                let prec: Vec<Precision> = (0..l.n_out * kb)
+                    .map(|i| if i % 3 == 0 { Precision::Fp8 } else { Precision::Fp4 })
+                    .collect();
+                let t = FgmpTensor::pack(&[l.n_out, l.k_in], &w, &prec, None);
+                (format!("{}.w", l.name), PackedPanels::from_tensor(&t, kernels::NR))
+            })
+            .collect();
+        let mut pm = Params::new();
+        for (n, v) in &dense {
+            if !n.contains("qkv_proj") && !n.contains("o_proj") && !n.contains("fc") {
+                pm.insert_dense(n, v);
+            }
+        }
+        for (n, p) in &packed {
+            pm.insert_packed(n, p);
+        }
+        let aw: Vec<Vec<f32>> = linears.iter().map(|l| vec![1.0f32; l.k_in]).collect();
+        let awr: Vec<&[f32]> = aw.iter().map(|v| v.as_slice()).collect();
+        let thr = vec![0.3f32; linears.len()];
+        let q = QuantInputs { act_weights: awr, thresholds: &thr, attn_threshold: Some(0.5) };
+
+        let prompts: Vec<Vec<i32>> = vec![(1..7).collect(), (3..11).collect()];
+        let prefs: Vec<&[i32]> = prompts.iter().map(|p| p.as_slice()).collect();
+        let steps = 4usize;
+
+        for precision in [KvPrecision::Fp16, KvPrecision::Fp8] {
+            // Single-worker oracle.
+            let mut kv_ref: Vec<KvState> =
+                prompts.iter().map(|_| KvState::new(&arch, precision)).collect();
+            let mut want = Vec::new();
+            {
+                let mut kvs: Vec<&mut KvState> = kv_ref.iter_mut().collect();
+                let out =
+                    forward_prefill_batch(&arch, &pm, &prefs, Some(&q), &mut kvs).unwrap();
+                want.push((out.logits, out.act_fp8));
+                for st in 0..steps {
+                    let toks: Vec<i32> = (0..prompts.len()).map(|i| (st * 3 + i) as i32).collect();
+                    let out = forward_step_batch(&arch, &pm, &toks, &mut kvs, Some(&q)).unwrap();
+                    want.push((out.logits, out.act_fp8));
+                }
+            }
+
+            for world in [1usize, 2, 4] {
+                let plan = ShardPlan::new(&arch, world).unwrap();
+                let arches: Vec<ModelArch> = plan
+                    .heads
+                    .iter()
+                    .filter(|(h0, h1)| h1 > h0)
+                    .map(|&(h0, h1)| shard_arch(&arch, h0, h1))
+                    .collect();
+                let coll = ThreadCollective { world };
+                let mut shards: Vec<Vec<KvState>> = prompts
+                    .iter()
+                    .map(|_| arches.iter().map(|sa| KvState::new(sa, precision)).collect())
+                    .collect();
+                let mut kvs: Vec<Vec<&mut KvState>> =
+                    shards.iter_mut().map(|s| s.iter_mut().collect()).collect();
+                let out = forward_prefill_batch_tp(
+                    &arch, &arches, &plan, &pm, &coll, &prefs, Some(&q), &mut kvs,
+                )
+                .unwrap();
+                assert_eq!(out.logits, want[0].0, "prefill logits world={world}");
+                assert_eq!(out.act_fp8, want[0].1, "prefill fracs world={world}");
+                for st in 0..steps {
+                    let toks: Vec<i32> = (0..prompts.len()).map(|i| (st * 3 + i) as i32).collect();
+                    let out = forward_step_batch_tp(
+                        &arch, &arches, &plan, &pm, &coll, &toks, &mut kvs, Some(&q),
+                    )
+                    .unwrap();
+                    assert_eq!(out.logits, want[st + 1].0, "step {st} logits world={world}");
+                    assert_eq!(out.act_fp8, want[st + 1].1, "step {st} fracs world={world}");
+                }
+                // The shards jointly hold exactly the oracle's rows.
+                for (sess, refkv) in shards.iter().zip(&kv_ref) {
+                    assert_eq!(sess.iter().map(|s| s.len()).max().unwrap(), refkv.len());
+                    let bits: u64 = sess.iter().map(|s| s.stored_bits()).sum();
+                    assert_eq!(bits, refkv.stored_bits(), "stored bits world={world}");
+                }
+            }
+        }
     }
 }

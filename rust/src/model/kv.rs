@@ -1120,4 +1120,167 @@ mod tests {
         assert_eq!(KvPool::pages_for_tokens(PAGE_TOKENS + 1), 2);
         assert_eq!(KvPool::pages_for_session(4, 17), 2 * 4 * 2);
     }
+
+    // -- worker-sharded pools (tensor parallelism) --------------------------
+
+    /// The sharded engine gives each worker its own pool over a head-slice
+    /// arch. Page *geometry* is token-based (layers × tokens), so every
+    /// worker pool's page accounting must mirror the single full-width pool
+    /// exactly, while physical value capacity — pages × page width — tiles:
+    /// summed across workers it equals the single pool's.
+    #[test]
+    fn worker_shard_pool_stats_mirror_single_pool() {
+        let a = arch(); // d_model 16, 2 heads
+        let shard = |d: usize, h: usize| ModelArch { d_model: d, n_heads: h, ..arch() };
+        let shards = [shard(8, 1), shard(8, 1)]; // head-split: 8 + 8 = 16
+
+        let pool = KvPool::new(&a, KvPrecision::Fp8, 64);
+        let pools: Vec<_> =
+            shards.iter().map(|sa| KvPool::new(sa, KvPrecision::Fp8, 64)).collect();
+
+        let mut full = KvState::new_paged(&a, &pool);
+        let mut halves: Vec<KvState> =
+            shards.iter().zip(&pools).map(|(sa, p)| KvState::new_paged(sa, p)).collect();
+
+        let n = PAGE_TOKENS + 3; // multi-page with a partial tail
+        full.reserve(n).unwrap();
+        for h in &mut halves {
+            h.reserve(n).unwrap();
+        }
+        let mut rng = Rng::new(0x5A4D);
+        for _ in 0..n {
+            let row = rng.normal_vec(a.d_model, 1.5);
+            for l in &mut full.layers {
+                l.k.push_row(&row);
+                l.v.push_row(&row);
+            }
+            full.advance(1);
+            // Column-sliced rows into each worker's shard cache.
+            let mut off = 0;
+            for (h, sa) in halves.iter_mut().zip(&shards) {
+                let cols = &row[off..off + sa.d_model];
+                for l in &mut h.layers {
+                    l.k.push_row(cols);
+                    l.v.push_row(cols);
+                }
+                h.advance(1);
+                off += sa.d_model;
+            }
+        }
+
+        let s = pool.stats();
+        let mut summed_bits = 0u64;
+        let mut summed_values = 0usize;
+        for ((h, p), sa) in halves.iter().zip(&pools).zip(&shards) {
+            let ws = p.stats();
+            // Per-worker page accounting is identical to the single pool.
+            assert_eq!(ws.in_use_pages, s.in_use_pages, "page counts are token-based");
+            assert_eq!(ws.total_pages, s.total_pages);
+            assert_eq!(ws.page_tokens, s.page_tokens);
+            assert_eq!(h.kv_pages(), full.kv_pages());
+            assert_eq!(h.len(), full.len());
+            summed_bits += h.stored_bits();
+            summed_values += ws.in_use_pages * ws.page_tokens * sa.d_model;
+        }
+        // Physical capacity and live bits tile across the shard widths.
+        assert_eq!(summed_bits, full.stored_bits(), "stored bits tile across workers");
+        assert_eq!(summed_values, s.in_use_pages * s.page_tokens * a.d_model);
+
+        // Retirement drains every pool independently.
+        drop(halves);
+        for p in &pools {
+            assert_eq!(p.stats().in_use_pages, 0, "worker pool recycled");
+        }
+        drop(full);
+        assert_eq!(pool.stats().in_use_pages, 0);
+    }
+
+    /// Attention-PPU pricing across worker shards: per-shard block totals
+    /// are proportional to shard width, so the width-weighted mean of the
+    /// shards' `effective_kv_bits` reproduces the single full-width cache's
+    /// value — and `truncate` scales each shard's hi/total counters
+    /// proportionally, leaving every shard's realized mix (and hence its
+    /// energy price) unchanged.
+    #[test]
+    fn effective_bits_tile_and_truncate_scales_per_shard() {
+        // 16-wide PPU blocks need shard widths that are block multiples.
+        let a = ModelArch { d_model: 32, n_heads: 2, ..arch() };
+        let shards =
+            [ModelArch { d_model: 16, n_heads: 1, ..arch() }, ModelArch { d_model: 16, n_heads: 1, ..arch() }];
+
+        let n = 8usize; // rows pushed per buffer
+        let mut full = KvState::new(&a, KvPrecision::Fp8);
+        let mut parts: Vec<KvState> =
+            shards.iter().map(|sa| KvState::new(sa, KvPrecision::Fp8)).collect();
+        let mut rng = Rng::new(0x9B1);
+        // Shard 0 keeps most blocks high, shard 1 quantizes hard: the mixes
+        // diverge, which is exactly when averaging (instead of
+        // width-weighting) would misprice.
+        let hi_per_row = [1usize, 0usize]; // of 1 block per 16-wide row
+        for _ in 0..n {
+            let row = rng.normal_vec(a.d_model, 1.0);
+            let mut off = 0;
+            let mut hi_row = 0;
+            for ((part, sa), &hi) in parts.iter_mut().zip(&shards).zip(&hi_per_row) {
+                let cols = &row[off..off + sa.d_model];
+                let blocks = sa.d_model / 16;
+                for l in &mut part.layers {
+                    l.k.push_row(cols);
+                    l.k.note_ppu(hi, blocks);
+                    l.v.push_row(cols);
+                    l.v.note_ppu(hi, blocks);
+                }
+                part.advance(1);
+                off += sa.d_model;
+                hi_row += hi;
+            }
+            let full_blocks = a.d_model / 16;
+            for l in &mut full.layers {
+                l.k.push_row(&row);
+                l.k.note_ppu(hi_row, full_blocks);
+                l.v.push_row(&row);
+                l.v.note_ppu(hi_row, full_blocks);
+            }
+            full.advance(1);
+        }
+
+        // Width-weighted shard mix == full-width mix (t_w ∝ width makes the
+        // algebra exact; FP evaluation agrees to rounding).
+        let weighted: f64 = parts
+            .iter()
+            .zip(&shards)
+            .map(|(p, sa)| p.effective_kv_bits() * sa.d_model as f64 / a.d_model as f64)
+            .sum();
+        let single = full.effective_kv_bits();
+        assert!(
+            (weighted - single).abs() < 1e-12,
+            "width-weighted shard bits {weighted} vs full-width {single}"
+        );
+        // Divergent mixes: the *plain* mean over shards would misprice.
+        let plain: f64 =
+            parts.iter().map(|p| p.effective_kv_bits()).sum::<f64>() / parts.len() as f64;
+        assert!((plain - single).abs() < 1e-12, "equal widths: plain mean happens to agree");
+        assert!(
+            (parts[0].effective_kv_bits() - parts[1].effective_kv_bits()).abs() > 1.0,
+            "shard mixes must actually diverge for this test to bite"
+        );
+
+        // Truncate to half: every shard buffer scales hi and total counts
+        // proportionally (rounded), so each shard's realized mix — and the
+        // price its worker reports — is preserved.
+        let before: Vec<(u64, u64)> =
+            parts.iter().map(|p| p.layers[0].k.ppu_counts()).collect();
+        let prices: Vec<f64> = parts.iter().map(|p| p.effective_kv_bits()).collect();
+        for p in parts.iter_mut() {
+            p.truncate(n / 2);
+        }
+        full.truncate(n / 2);
+        for ((p, &(h0, t0)), &price) in parts.iter().zip(&before).zip(&prices) {
+            let (h1, t1) = p.layers[0].k.ppu_counts();
+            assert_eq!(h1, (h0 as f64 * 0.5).round() as u64, "hi scales with rows");
+            assert_eq!(t1, (t0 as f64 * 0.5).round() as u64, "total scales with rows");
+            assert!((p.effective_kv_bits() - price).abs() < 1e-12, "mix preserved");
+        }
+        assert!((full.effective_kv_bits() - single).abs() < 1e-12);
+    }
 }

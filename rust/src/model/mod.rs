@@ -5,9 +5,11 @@
 pub mod config;
 pub mod forward;
 pub mod kv;
+pub mod tp;
 pub mod weights;
 
 pub use config::{QuantConfig, RatioSpec};
 pub use forward::{Act, ModelArch, NormKind, PosKind};
 pub use kv::{KvPool, KvPoolExhausted, KvPoolStats, KvPrecision, KvState, PAGE_TOKENS};
+pub use tp::{Collective, ShardPlan, ThreadCollective};
 pub use weights::{ModelArtifacts, QuantizedModel, WeightMemory};

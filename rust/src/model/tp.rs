@@ -1,0 +1,291 @@
+//! Tensor-parallel sharding primitives for the multi-worker engine.
+//!
+//! The serving-side tensor parallelism (DESIGN.md / ROADMAP "tensor-parallel
+//! serving") is column parallelism over the *stored* FGMP layout: each packed
+//! linear is split along its NR-panel axis into contiguous byte ranges
+//! (`PackedPanels::panel_range` — no re-pack, no decode), and attention is
+//! split along the head axis so each worker owns a head-slice of the KV pool.
+//! Both splits keep every per-output-column dot product whole on exactly one
+//! worker, so the combine step is a *fixed-order concatenation* of disjoint
+//! column blocks — pure data movement, never floating-point summation — and
+//! sharded logits are bit-for-bit identical to the single-worker engine at
+//! any worker count.
+//!
+//! The worker-communication boundary is the [`Collective`] trait. The
+//! in-process [`ThreadCollective`] runs one scoped thread per worker
+//! ([`crate::util::par_run_once`]); a process- or RPC-backed transport can
+//! slot in later by implementing the same scatter/join contract. Under
+//! shared memory "broadcast" is free (workers capture shared slices) and the
+//! all-reduce is [`concat_col_blocks`]; a remote transport would make both
+//! explicit sends.
+
+use anyhow::Result;
+
+use super::forward::ModelArch;
+use crate::util::par_run_once;
+
+/// One worker's unit of work: runs once on that worker, returns its shard
+/// result. Boxed so a [`Collective`] can ship heterogeneous closures.
+pub type Job<'env, R> = Box<dyn FnOnce() -> R + Send + 'env>;
+
+/// Scatter/join boundary between the tensor-parallel driver and its workers.
+///
+/// `run` hands job `w` to worker `w` and returns the results in worker order
+/// (the deterministic "fixed order" the bit-exactness guarantee leans on).
+/// Implementations must run all jobs to completion even when they block on
+/// each other — see [`par_run_once`].
+pub trait Collective: Sync {
+    /// Number of workers jobs are split across.
+    fn world(&self) -> usize;
+    /// Execute one job per worker; results in worker (input) order.
+    fn run<R: Send>(&self, jobs: Vec<Job<'_, R>>) -> Vec<R>;
+}
+
+/// In-process transport: one scoped thread per worker, job 0 inline.
+#[derive(Debug, Clone, Copy)]
+pub struct ThreadCollective {
+    pub world: usize,
+}
+
+impl Collective for ThreadCollective {
+    fn world(&self) -> usize {
+        self.world
+    }
+    fn run<R: Send>(&self, jobs: Vec<Job<'_, R>>) -> Vec<R> {
+        par_run_once(jobs)
+    }
+}
+
+/// Split `0..n` into `world` contiguous ranges, the first `n % world` of
+/// them one longer. Ranges may be empty when `world > n`; they always tile
+/// `0..n` in order.
+pub fn split_range(n: usize, world: usize) -> Vec<(usize, usize)> {
+    assert!(world >= 1, "worker count must be >= 1");
+    let base = n / world;
+    let extra = n % world;
+    let mut out = Vec::with_capacity(world);
+    let mut at = 0;
+    for w in 0..world {
+        let len = base + usize::from(w < extra);
+        out.push((at, at + len));
+        at += len;
+    }
+    debug_assert_eq!(at, n);
+    out
+}
+
+/// How a model is carved across `world` workers.
+///
+/// Linears are split `world` ways along the packed NR-panel axis regardless
+/// of head layout; attention is split along heads, so when
+/// `world > n_heads` the trailing workers own zero heads (their linear
+/// shards still run — only the "active" prefix participates in attention).
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    pub world: usize,
+    /// Per-worker head ranges `[h0, h1)`; trailing ranges may be empty.
+    pub heads: Vec<(usize, usize)>,
+}
+
+impl ShardPlan {
+    pub fn new(arch: &ModelArch, world: usize) -> Result<ShardPlan> {
+        anyhow::ensure!(world >= 1, "worker count must be >= 1, got {world}");
+        Ok(ShardPlan { world, heads: split_range(arch.n_heads, world) })
+    }
+
+    /// Number of workers that own at least one attention head.
+    pub fn active(&self) -> usize {
+        self.heads.iter().filter(|(h0, h1)| h1 > h0).count()
+    }
+}
+
+/// The architecture one attention worker sees: its head-slice presented as a
+/// self-contained model (`n_heads = h1 - h0`, `d_model` shrunk to match) so
+/// the existing single-engine attention kernels run unchanged over the
+/// shard. RoPE depends only on position and head_dim — both preserved — so
+/// per-head numerics are identical to the unsharded pass.
+pub fn shard_arch(arch: &ModelArch, h0: usize, h1: usize) -> ModelArch {
+    debug_assert!(h0 < h1 && h1 <= arch.n_heads);
+    let dh = arch.head_dim();
+    ModelArch { n_heads: h1 - h0, d_model: (h1 - h0) * dh, ..arch.clone() }
+}
+
+/// Gather one worker's fused-QKV column slice: rows of `[q | k | v]` at full
+/// width `d` become rows of `[q[c0..c1] | k[c0..c1] | v[c0..c1]]`, the fused
+/// layout `attention_prefill`/`attention_step` expect at shard width.
+pub fn gather_qkv_cols(qkv: &[f32], rows: usize, d: usize, c0: usize, c1: usize) -> Vec<f32> {
+    debug_assert!(c0 <= c1 && c1 <= d);
+    debug_assert_eq!(qkv.len(), rows * 3 * d);
+    let w = c1 - c0;
+    let mut out = vec![0.0f32; rows * 3 * w];
+    for r in 0..rows {
+        let src = &qkv[r * 3 * d..(r + 1) * 3 * d];
+        let dst = &mut out[r * 3 * w..(r + 1) * 3 * w];
+        dst[..w].copy_from_slice(&src[c0..c1]);
+        dst[w..2 * w].copy_from_slice(&src[d + c0..d + c1]);
+        dst[2 * w..].copy_from_slice(&src[2 * d + c0..2 * d + c1]);
+    }
+    out
+}
+
+/// Scatter one worker's `rows x wcols` output block into columns
+/// `[c0, c0 + wcols)` of the full-width `rows x d` buffer.
+pub fn scatter_cols(block: &[f32], rows: usize, wcols: usize, out: &mut [f32], d: usize, c0: usize) {
+    debug_assert_eq!(block.len(), rows * wcols);
+    debug_assert!(out.len() >= rows * d && c0 + wcols <= d);
+    for r in 0..rows {
+        out[r * d + c0..r * d + c0 + wcols].copy_from_slice(&block[r * wcols..(r + 1) * wcols]);
+    }
+}
+
+/// The deterministic all-reduce of the column-parallel matmul: concatenate
+/// per-worker column blocks (panel ranges `splits`, panel width `nr`) back
+/// into the full `rows x n` product, in fixed worker order. Because ranges
+/// are disjoint this is a pure copy — no summation — which is what makes
+/// sharded logits bit-exact.
+pub fn concat_col_blocks(
+    rows: usize,
+    n: usize,
+    nr: usize,
+    splits: &[(usize, usize)],
+    blocks: &[Vec<f32>],
+) -> Vec<f32> {
+    debug_assert_eq!(splits.len(), blocks.len());
+    let mut out = vec![0.0f32; rows * n];
+    for (&(p0, p1), block) in splits.iter().zip(blocks) {
+        let c0 = (p0 * nr).min(n);
+        let c1 = (p1 * nr).min(n);
+        let w = c1 - c0;
+        if w == 0 {
+            continue;
+        }
+        debug_assert_eq!(block.len(), rows * w);
+        for r in 0..rows {
+            out[r * n + c0..r * n + c1].copy_from_slice(&block[r * w..(r + 1) * w]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::forward::{Act, NormKind, PosKind};
+
+    fn arch(d: usize, h: usize) -> ModelArch {
+        ModelArch {
+            vocab: 11,
+            d_model: d,
+            n_layers: 2,
+            n_heads: h,
+            d_ff: 2 * d,
+            act: Act::SwiGlu,
+            norm: NormKind::Rms,
+            pos: PosKind::Rope,
+            max_seq: 16,
+        }
+    }
+
+    #[test]
+    fn split_range_tiles_in_order() {
+        for n in [0usize, 1, 3, 7, 16] {
+            for world in 1..=5usize {
+                let s = split_range(n, world);
+                assert_eq!(s.len(), world);
+                assert_eq!(s[0].0, 0);
+                assert_eq!(s[world - 1].1, n);
+                for w in 1..world {
+                    assert_eq!(s[w].0, s[w - 1].1, "contiguous at {w}");
+                }
+                // Longest-first by at most one, so shards stay balanced.
+                let lens: Vec<usize> = s.iter().map(|(a, b)| b - a).collect();
+                assert!(lens.iter().max().unwrap() - lens.iter().min().unwrap() <= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_handles_more_workers_than_heads() {
+        let a = arch(96, 3);
+        let plan = ShardPlan::new(&a, 4).unwrap();
+        assert_eq!(plan.world, 4);
+        assert_eq!(plan.heads, vec![(0, 1), (1, 2), (2, 3), (3, 3)]);
+        assert_eq!(plan.active(), 3);
+        assert!(ShardPlan::new(&a, 0).is_err());
+    }
+
+    #[test]
+    fn shard_arch_keeps_head_dim() {
+        let a = arch(96, 3);
+        let s = shard_arch(&a, 1, 3);
+        assert_eq!(s.n_heads, 2);
+        assert_eq!(s.d_model, 64);
+        assert_eq!(s.head_dim(), a.head_dim());
+        assert_eq!(s.max_seq, a.max_seq);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip_tiles_qkv() {
+        let (rows, d) = (3usize, 8usize);
+        let qkv: Vec<f32> = (0..rows * 3 * d).map(|i| i as f32).collect();
+        let splits = split_range(d, 3);
+        // Gathering every column range and scattering the q/k/v thirds back
+        // reconstructs the original fused buffer exactly.
+        let mut back = vec![0.0f32; rows * 3 * d];
+        for &(c0, c1) in &splits {
+            let w = c1 - c0;
+            let g = gather_qkv_cols(&qkv, rows, d, c0, c1);
+            for part in 0..3 {
+                let mut third = vec![0.0f32; rows * w];
+                for r in 0..rows {
+                    third[r * w..(r + 1) * w]
+                        .copy_from_slice(&g[r * 3 * w + part * w..r * 3 * w + (part + 1) * w]);
+                }
+                // Scatter into the matching q/k/v stripe of each fused row.
+                for r in 0..rows {
+                    back[r * 3 * d + part * d + c0..r * 3 * d + part * d + c1]
+                        .copy_from_slice(&third[r * w..(r + 1) * w]);
+                }
+            }
+        }
+        assert_eq!(back, qkv);
+        // scatter_cols places a block at its column offset.
+        let mut out = vec![0.0f32; rows * d];
+        scatter_cols(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], rows, 2, &mut out, d, 4);
+        assert_eq!(out[4..6], [1.0, 2.0]);
+        assert_eq!(out[d + 4..d + 6], [3.0, 4.0]);
+        assert_eq!(out[2 * d + 4..2 * d + 6], [5.0, 6.0]);
+    }
+
+    #[test]
+    fn concat_col_blocks_reassembles_product() {
+        let (rows, n, nr) = (2usize, 11usize, 4usize);
+        let full: Vec<f32> = (0..rows * n).map(|i| (i * 7 % 13) as f32).collect();
+        let np = n.div_ceil(nr);
+        for world in 1..=4usize {
+            let splits = split_range(np, world);
+            let blocks: Vec<Vec<f32>> = splits
+                .iter()
+                .map(|&(p0, p1)| {
+                    let c0 = (p0 * nr).min(n);
+                    let c1 = (p1 * nr).min(n);
+                    let mut b = Vec::new();
+                    for r in 0..rows {
+                        b.extend_from_slice(&full[r * n + c0..r * n + c1]);
+                    }
+                    b
+                })
+                .collect();
+            assert_eq!(concat_col_blocks(rows, n, nr, &splits, &blocks), full, "world {world}");
+        }
+    }
+
+    #[test]
+    fn thread_collective_runs_jobs_in_worker_order() {
+        let coll = ThreadCollective { world: 3 };
+        assert_eq!(coll.world(), 3);
+        let jobs: Vec<Job<'_, usize>> =
+            (0..3).map(|w| Box::new(move || w * 10) as Job<'_, usize>).collect();
+        assert_eq!(coll.run(jobs), vec![0, 10, 20]);
+    }
+}

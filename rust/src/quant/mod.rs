@@ -15,4 +15,4 @@ pub use clip::{sw_clip_block, sw_clip_tensor};
 pub use fp4::{quant_e2m1, E2M1_MAX};
 pub use fp8::{encode_e4m3, decode_e4m3, quant_e4m3, E4M3_MAX};
 pub use nvfp4::{nvfp4_roundtrip, nvfp4_scale, NvFp4Block};
-pub use pack::{FgmpTensor, PackedPanels, Precision};
+pub use pack::{FgmpTensor, PackedPanels, PanelRangeView, Precision};

@@ -342,6 +342,66 @@ impl PackedPanels {
     pub fn f32_equiv_bytes(&self) -> usize {
         self.k * self.n * 4
     }
+
+    /// Zero-copy view of the contiguous panel range `[p0, p1)` — the unit
+    /// a tensor-parallel worker owns. Because the walk is panel-major, a
+    /// panel range is a single contiguous byte-range of `payload` and
+    /// `scales` plus a walk-order block interval: sharding a linear across
+    /// workers is pure pointer arithmetic over the per-panel offset
+    /// tables, no re-pack and no copied bytes.
+    pub fn panel_range(&self, p0: usize, p1: usize) -> PanelRangeView<'_> {
+        let np = self.n_panels();
+        assert!(p0 <= p1 && p1 <= np, "panel range [{p0}, {p1}) out of {np} panels");
+        let pay0 = self.panel_payload_off.get(p0).copied().unwrap_or(self.payload.len());
+        let pay1 = if p1 < np { self.panel_payload_off[p1] } else { self.payload.len() };
+        let sc0 = self.panel_scale_off.get(p0).copied().unwrap_or(self.scales.len());
+        let sc1 = if p1 < np { self.panel_scale_off[p1] } else { self.scales.len() };
+        let b0 = self.panel_block_off.get(p0).copied().unwrap_or(self.n_blocks);
+        let b1 = if p1 < np { self.panel_block_off[p1] } else { self.n_blocks };
+        PanelRangeView {
+            p0,
+            p1,
+            col0: (p0 * self.nr).min(self.n),
+            col1: (p1 * self.nr).min(self.n),
+            payload: &self.payload[pay0..pay1],
+            scales: &self.scales[sc0..sc1],
+            block0: b0,
+            block1: b1,
+        }
+    }
+}
+
+/// Borrowed byte-range of a [`PackedPanels`] covering panels `[p0, p1)`
+/// (output columns `[col0, col1)`) — see [`PackedPanels::panel_range`].
+#[derive(Debug, Clone, Copy)]
+pub struct PanelRangeView<'a> {
+    pub p0: usize,
+    pub p1: usize,
+    /// First output column owned by the range.
+    pub col0: usize,
+    /// One past the last output column owned by the range.
+    pub col1: usize,
+    /// The range's contiguous payload bytes.
+    pub payload: &'a [u8],
+    /// The range's contiguous FP4 scale bytes.
+    pub scales: &'a [u8],
+    /// First walk-order block index of the range.
+    pub block0: usize,
+    /// One past the last walk-order block index of the range.
+    pub block1: usize,
+}
+
+impl PanelRangeView<'_> {
+    /// Output columns owned by this range.
+    pub fn cols(&self) -> usize {
+        self.col1 - self.col0
+    }
+
+    /// Bytes a worker holding only this range would keep resident
+    /// (payload + scales + its share of the meta bits, byte-rounded).
+    pub fn resident_bytes(&self) -> usize {
+        self.payload.len() + self.scales.len() + (self.block1 - self.block0).div_ceil(8)
+    }
 }
 
 #[cfg(test)]
@@ -491,6 +551,54 @@ mod tests {
             p.resident_bytes(),
             p.f32_equiv_bytes()
         );
+    }
+
+    #[test]
+    fn panel_ranges_tile_the_packed_arrays() {
+        // Consecutive panel ranges must partition payload, scales, blocks
+        // and columns exactly — the invariant worker sharding rests on.
+        for &(n, kb, nr, seed) in
+            &[(23usize, 4usize, 8usize, 14u64), (9, 2, 8, 13), (16, 3, 4, 15)]
+        {
+            let k = kb * BLOCK;
+            let x = data(n * k, 6.0, seed);
+            let prec: Vec<Precision> = (0..n * kb)
+                .map(|i| {
+                    if (i * 7 + seed as usize) % 3 == 0 { Precision::Fp8 } else { Precision::Fp4 }
+                })
+                .collect();
+            let t = FgmpTensor::pack(&[n, k], &x, &prec, None);
+            let p = PackedPanels::from_tensor(&t, nr);
+            let np = p.n_panels();
+            for world in 1..=4usize {
+                let base = np / world;
+                let extra = np % world;
+                let mut p0 = 0usize;
+                let (mut pay, mut sc) = (Vec::new(), Vec::new());
+                let (mut blocks, mut cols, mut bytes) = (0usize, 0usize, 0usize);
+                for w in 0..world {
+                    let take = base + usize::from(w < extra);
+                    let v = p.panel_range(p0, p0 + take);
+                    assert_eq!(v.col0, (p0 * nr).min(n));
+                    pay.extend_from_slice(v.payload);
+                    sc.extend_from_slice(v.scales);
+                    blocks += v.block1 - v.block0;
+                    cols += v.cols();
+                    bytes += v.resident_bytes();
+                    p0 += take;
+                }
+                assert_eq!(pay, p.payload, "payload tiles (n={n} world={world})");
+                assert_eq!(sc, p.scales, "scales tile (n={n} world={world})");
+                assert_eq!(blocks, p.n_blocks);
+                assert_eq!(cols, n);
+                // Byte-rounding of per-range meta can only add, never lose.
+                assert!(bytes >= p.payload.len() + p.scales.len() + p.meta.len());
+            }
+            // Degenerate empty range at either end is well-formed.
+            let e = p.panel_range(np, np);
+            assert_eq!(e.cols(), 0);
+            assert!(e.payload.is_empty() && e.scales.is_empty());
+        }
     }
 
     #[test]

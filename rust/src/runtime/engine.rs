@@ -58,7 +58,13 @@ pub struct Session {
     pub last_logits: Vec<f32>,
     /// Decode steps taken since prefill.
     pub steps: usize,
-    kv: Option<KvState>,
+    /// Single-engine cached KV (`None` on the windowed fallback and on
+    /// sharded sessions).
+    pub(crate) kv: Option<KvState>,
+    /// Per-active-worker KV shards of a sharded-engine session (empty on
+    /// single-engine sessions). Shards advance in lockstep, so shard 0's
+    /// length is the session's cached-token count.
+    pub(crate) kv_shards: Vec<KvState>,
 }
 
 impl Session {
@@ -77,18 +83,29 @@ impl Session {
     /// Tokens currently held in the KV cache (0 on the windowed fallback,
     /// which caches nothing).
     pub fn cached_tokens(&self) -> usize {
-        self.kv.as_ref().map(|kv| kv.len()).unwrap_or(0)
+        if let Some(kv) = &self.kv {
+            return kv.len();
+        }
+        self.kv_shards.first().map(|kv| kv.len()).unwrap_or(0)
     }
 
-    /// Physical bits the session's cache holds right now.
+    /// Physical bits the session's cache holds right now (summed across
+    /// worker shards on a sharded session).
     pub fn kv_bits(&self) -> u64 {
-        self.kv.as_ref().map(|kv| kv.stored_bits()).unwrap_or(0)
+        if let Some(kv) = &self.kv {
+            return kv.stored_bits();
+        }
+        self.kv_shards.iter().map(|kv| kv.stored_bits()).sum()
     }
 
-    /// Pool pages the session's cache holds (0 on the windowed fallback).
-    /// Pages return to the engine's free list when the session drops.
+    /// Pool pages the session's cache holds (0 on the windowed fallback;
+    /// summed across the per-worker pools on a sharded session). Pages
+    /// return to the engine's free list(s) when the session drops.
     pub fn kv_pages(&self) -> usize {
-        self.kv.as_ref().map(|kv| kv.kv_pages()).unwrap_or(0)
+        if let Some(kv) = &self.kv {
+            return kv.kv_pages();
+        }
+        self.kv_shards.iter().map(|kv| kv.kv_pages()).sum()
     }
 }
 
@@ -107,11 +124,58 @@ pub struct EngineOptions {
     /// mix prices KV traffic in [`StepOut::kv_bits_per_value`]. `None`
     /// (the default) keeps attention inputs full-precision.
     pub attn_threshold: Option<f32>,
+    /// Tensor-parallel worker count. [`Engine`] itself is always
+    /// single-worker and ignores this; the engine builder
+    /// ([`build_engine`](crate::runtime::sharded::build_engine)) returns a
+    /// [`ShardedEngine`](crate::runtime::sharded::ShardedEngine) when it
+    /// is > 1.
+    pub workers: usize,
+    /// Force the windowed-recompute fallback regardless of backend (the
+    /// PJRT path always takes it; tests use it as the parity oracle).
+    pub windowed: bool,
+}
+
+impl EngineOptions {
+    /// Chainable setter for [`EngineOptions::kv`].
+    pub fn kv(mut self, kv: KvPrecision) -> Self {
+        self.kv = kv;
+        self
+    }
+
+    /// Chainable setter for [`EngineOptions::kv_pages`].
+    pub fn pages(mut self, pages: Option<usize>) -> Self {
+        self.kv_pages = pages;
+        self
+    }
+
+    /// Chainable setter for [`EngineOptions::attn_threshold`].
+    pub fn attn(mut self, threshold: Option<f32>) -> Self {
+        self.attn_threshold = threshold;
+        self
+    }
+
+    /// Chainable setter for [`EngineOptions::workers`].
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// Chainable setter for [`EngineOptions::windowed`].
+    pub fn windowed(mut self, windowed: bool) -> Self {
+        self.windowed = windowed;
+        self
+    }
 }
 
 impl Default for EngineOptions {
     fn default() -> Self {
-        EngineOptions { kv: KvPrecision::Fp16, kv_pages: None, attn_threshold: None }
+        EngineOptions {
+            kv: KvPrecision::Fp16,
+            kv_pages: None,
+            attn_threshold: None,
+            workers: 1,
+            windowed: false,
+        }
     }
 }
 
@@ -136,51 +200,72 @@ pub struct StepOut {
     /// fallback (recompute reads activations, priced as the FP16 cache
     /// baseline).
     pub kv_bits_per_value: f64,
+    /// Per-worker KV traffic mix: `(kv width in values per token-layer,
+    /// effective stored bits per value)` for each worker that attended this
+    /// step. Single entry `(d_model, kv_bits_per_value)` on the cached
+    /// single-worker path; one entry per active worker under tensor
+    /// parallelism, where each worker reads `kv_tokens` tokens at its own
+    /// width and its own realized precision mix (the energy model must
+    /// price each worker's traffic at its own width — not an average);
+    /// empty on the windowed fallback.
+    pub kv_mix: Vec<(usize, f64)>,
 }
 
 /// One owned parameter of the cached engine: dense f32, or the packed
 /// FGMP execution tensor (no resident dequantized copy).
-enum ParamData {
+pub(crate) enum ParamData {
     Dense(Vec<f32>),
     Packed(Arc<PackedPanels>),
 }
 
-/// The model-owning state of the cached native path.
-struct CachedEngine {
-    arch: ModelArch,
-    params: Vec<(String, ParamData)>,
-    act_weights: Vec<Vec<f32>>,
-    thresholds: Vec<f32>,
-    kv: KvPrecision,
-    attn_threshold: Option<f32>,
+/// Build a borrow-map over owned engine parameters (shared by the cached
+/// and sharded engines).
+pub(crate) fn params_map(params: &[(String, ParamData)]) -> Params<'_> {
+    let mut p = Params::new();
+    for (n, d) in params {
+        match d {
+            ParamData::Dense(v) => p.insert_dense(n, v),
+            ParamData::Packed(pw) => p.insert_packed(n, pw),
+        }
+    }
+    p
+}
+
+/// Resident-vs-f32 weight accounting over owned engine parameters.
+pub(crate) fn params_weight_memory(params: &[(String, ParamData)]) -> WeightMemory {
+    params.iter().fold(WeightMemory::default(), |mut m, (_, d)| {
+        if let ParamData::Packed(pw) = d {
+            m.packed_bytes += pw.resident_bytes();
+            m.f32_equiv_bytes += pw.f32_equiv_bytes();
+            m.linears += 1;
+        }
+        m
+    })
+}
+
+/// The model-owning state of the cached native path (shared with the
+/// sharded engine, which swaps the single pool for per-worker pools).
+pub(crate) struct CachedEngine {
+    pub(crate) arch: ModelArch,
+    pub(crate) params: Vec<(String, ParamData)>,
+    pub(crate) act_weights: Vec<Vec<f32>>,
+    pub(crate) thresholds: Vec<f32>,
+    pub(crate) kv: KvPrecision,
+    pub(crate) attn_threshold: Option<f32>,
     /// The shared page arena every session of this engine draws from.
-    pool: Arc<KvPool>,
+    pub(crate) pool: Arc<KvPool>,
 }
 
 impl CachedEngine {
-    fn param_map(&self) -> Params<'_> {
-        let mut p = Params::new();
-        for (n, d) in &self.params {
-            match d {
-                ParamData::Dense(v) => p.insert_dense(n, v),
-                ParamData::Packed(pw) => p.insert_packed(n, pw),
-            }
-        }
-        p
+    pub(crate) fn param_map(&self) -> Params<'_> {
+        params_map(&self.params)
     }
 
-    fn weight_memory(&self) -> WeightMemory {
-        self.params.iter().fold(WeightMemory::default(), |mut m, (_, d)| {
-            if let ParamData::Packed(pw) = d {
-                m.packed_bytes += pw.resident_bytes();
-                m.f32_equiv_bytes += pw.f32_equiv_bytes();
-                m.linears += 1;
-            }
-            m
-        })
+    pub(crate) fn weight_memory(&self) -> WeightMemory {
+        params_weight_memory(&self.params)
     }
 
-    fn quant_inputs(&self) -> QuantInputs<'_> {
+    pub(crate) fn quant_inputs(&self) -> QuantInputs<'_> {
         QuantInputs {
             act_weights: self.act_weights.iter().map(|v| v.as_slice()).collect(),
             thresholds: &self.thresholds,
@@ -221,10 +306,14 @@ impl Engine {
         tail: Vec<ArgValue>,
         kv: KvPrecision,
     ) -> Result<Self> {
-        Engine::with_options(rt, spec, tail, EngineOptions { kv, ..EngineOptions::default() })
+        Engine::with_options(rt, spec, tail, EngineOptions::default().kv(kv))
     }
 
-    /// [`Engine::new`] with explicit pool sizing (`--kv-pages`).
+    /// The one real constructor — [`Engine::new`] and
+    /// [`Engine::new_windowed`] are thin delegates. `opts.workers` is
+    /// ignored here (an [`Engine`] is always single-worker); route through
+    /// [`build_engine`](crate::runtime::sharded::build_engine) to get a
+    /// sharded engine for `workers > 1`.
     pub fn with_options(
         rt: &Runtime,
         spec: &ExecSpec,
@@ -237,6 +326,9 @@ impl Engine {
             spec.kind
         );
         let exe = rt.load_spec(spec)?;
+        if opts.windowed {
+            return Engine::windowed_from(spec, exe, tail);
+        }
         match exe {
             Executable::Native(g) => {
                 let (params, act_weights, thresholds) = parse_tail(g.manifest(), &tail)?;
@@ -266,13 +358,7 @@ impl Engine {
     /// Force the windowed-recompute fallback regardless of backend (the
     /// PJRT path always takes this; tests use it as the parity oracle).
     pub fn new_windowed(rt: &Runtime, spec: &ExecSpec, tail: Vec<ArgValue>) -> Result<Self> {
-        anyhow::ensure!(
-            spec.kind == GraphKind::LogitsQuant,
-            "Engine drives the logits_quant graph, got {:?}",
-            spec.kind
-        );
-        let exe = rt.load_spec(spec)?;
-        Engine::windowed_from(spec, exe, tail)
+        Engine::with_options(rt, spec, tail, EngineOptions::default().windowed(true))
     }
 
     fn windowed_from(spec: &ExecSpec, exe: Executable, tail: Vec<ArgValue>) -> Result<Self> {
@@ -330,6 +416,7 @@ impl Engine {
                     last_logits: out.logits,
                     steps: 0,
                     kv: Some(kv),
+                    kv_shards: Vec::new(),
                 })
             }
             Inner::Windowed(we) => {
@@ -338,6 +425,7 @@ impl Engine {
                     last_logits: Vec::new(),
                     steps: 0,
                     kv: None,
+                    kv_shards: Vec::new(),
                 };
                 {
                     let mut refs = [&mut sess];
@@ -389,6 +477,7 @@ impl Engine {
                         last_logits: out.logits[i * vocab..(i + 1) * vocab].to_vec(),
                         steps: 0,
                         kv: Some(kv),
+                        kv_shards: Vec::new(),
                     })
                     .collect())
             }
@@ -558,6 +647,7 @@ impl Engine {
                     act_fp8: out.act_fp8,
                     kv_tokens,
                     kv_bits_per_value,
+                    kv_mix: vec![(ce.arch.d_model, kv_bits_per_value)],
                 })
             }
             Inner::Windowed(we) => {
@@ -579,6 +669,7 @@ impl Engine {
                     act_fp8: Vec::new(),
                     kv_tokens: 0,
                     kv_bits_per_value: 16.0,
+                    kv_mix: Vec::new(),
                 })
             }
         }
@@ -618,7 +709,7 @@ impl WindowedEngine {
 /// arguments stay packed (`Arc`-shared with the caller's tail): the engine
 /// holds no dequantized f32 weight copy.
 #[allow(clippy::type_complexity)]
-fn parse_tail(
+pub(crate) fn parse_tail(
     man: &Manifest,
     tail: &[ArgValue],
 ) -> Result<(Vec<(String, ParamData)>, Vec<Vec<f32>>, Vec<f32>)> {

@@ -22,6 +22,7 @@
 pub mod args;
 pub mod engine;
 pub mod native;
+pub mod sharded;
 
 #[cfg(feature = "pjrt")]
 pub mod client;
@@ -32,6 +33,7 @@ use std::path::{Path, PathBuf};
 
 pub use args::ArgValue;
 pub use engine::{Engine, EngineOptions, Session, StepOut};
+pub use sharded::{build_engine, InferenceEngine, ShardedEngine};
 #[cfg(feature = "pjrt")]
 pub use client::PjrtRuntime;
 #[cfg(feature = "pjrt")]

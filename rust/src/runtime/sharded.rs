@@ -1,0 +1,489 @@
+//! Tensor-parallel multi-worker serving: [`ShardedEngine`] and the engine
+//! surface both engines share ([`InferenceEngine`]).
+//!
+//! A sharded engine carves one loaded model across `workers` in-process
+//! workers (a [`ThreadCollective`] of scoped threads — the
+//! [`Collective`](crate::model::tp::Collective) boundary keeps the door open
+//! for process/RPC transports later):
+//!
+//!  * every packed linear is **column-sharded along its NR-panel axis** —
+//!    contiguous byte ranges of the stored FGMP payload
+//!    ([`crate::quant::PackedPanels::panel_range`]), no re-pack, no decode —
+//!    and the per-worker partial products are recombined by fixed-order
+//!    concatenation of disjoint column blocks (pure data movement, never
+//!    floating-point summation);
+//!  * attention is **head-sharded**: each worker owns a head-slice of the KV
+//!    state backed by its *own* page pool at shard width, so KV reads,
+//!    page accounting, and the attention PPU all run per worker exactly as
+//!    they do on the single engine.
+//!
+//! Both splits keep every dot product whole on exactly one worker, which is
+//! the determinism guarantee: logits — and therefore greedy decode streams —
+//! are **bit-for-bit identical** to the single-worker [`Engine`] at any
+//! worker count (property-tested in `tests/decode_props.rs`).
+//!
+//! [`build_engine`] is the one entry point callers should use: it returns a
+//! boxed [`InferenceEngine`] — an [`Engine`] for `workers <= 1`, a
+//! [`ShardedEngine`] otherwise — so the coordinator's generate worker and
+//! the CLI drive either engine through the same surface.
+
+use std::sync::Arc;
+
+use crate::model::forward::{
+    forward_prefill_batch_tp, forward_step_batch_tp, ModelArch, Params, QuantInputs,
+};
+use crate::model::kv::{KvPool, KvPoolStats, KvPrecision, KvState};
+use crate::model::tp::{shard_arch, Collective, ShardPlan, ThreadCollective};
+use crate::model::WeightMemory;
+use crate::{Result, BLOCK};
+
+use super::args::ArgValue;
+use super::engine::{
+    params_map, params_weight_memory, parse_tail, ParamData, DEFAULT_POOL_SESSIONS,
+};
+use super::{Engine, EngineOptions, ExecSpec, Executable, GraphKind, Runtime, Session, StepOut};
+
+/// The engine surface the serving stack programs against, implemented by
+/// the single-worker [`Engine`] and the tensor-parallel [`ShardedEngine`].
+///
+/// Object-safe on purpose: the coordinator's generate worker and the
+/// `fgmp generate` CLI hold a `Box<dyn InferenceEngine>` from
+/// [`build_engine`] and never know which concrete engine they drive.
+pub trait InferenceEngine {
+    /// The model architecture.
+    fn arch(&self) -> &ModelArch;
+
+    /// Whether sessions run a KV-cached incremental path (vs windowed
+    /// recompute).
+    fn is_cached(&self) -> bool;
+
+    /// KV storage precision of new sessions.
+    fn kv_precision(&self) -> KvPrecision;
+
+    /// Tensor-parallel worker count (1 on the single-worker engine).
+    fn workers(&self) -> usize;
+
+    /// Run one prompt to completion; the returned session's logits already
+    /// predict the first generated token.
+    fn prefill(&self, prompt: &[i32]) -> Result<Session>;
+
+    /// Prefill many prompts as one batched forward (bit-identical to
+    /// [`InferenceEngine::prefill`] one at a time).
+    fn prefill_batch(&self, prompts: &[Vec<i32>]) -> Result<Vec<Session>>;
+
+    /// Advance every session by one token in a single batched forward.
+    fn decode_step(&self, sessions: &mut [&mut Session]) -> Result<StepOut>;
+
+    /// Resident weight-memory accounting of the loaded model.
+    fn weight_memory(&self) -> WeightMemory;
+
+    /// Live accounting of the engine's KV page pool (`None` when the
+    /// engine holds no cache). On a sharded engine every worker's pool has
+    /// identical capacity and identical page usage — page counts depend on
+    /// layers and tokens, not row width — so worker 0's stats stand for
+    /// the fleet.
+    fn pool_stats(&self) -> Option<KvPoolStats>;
+
+    /// Worst-case pages one session can ever hold (per worker pool on a
+    /// sharded engine — every pool sees the same count).
+    fn kv_pages_per_session(&self) -> usize;
+
+    /// Sessions the pool sustains at worst case (coarse admission bound).
+    fn max_live_sessions(&self) -> usize;
+
+    /// Sound per-request worst-case page bound for admission control.
+    fn kv_pages_worst_for(&self, prompt_len: usize, want: usize) -> usize;
+}
+
+impl InferenceEngine for Engine {
+    fn arch(&self) -> &ModelArch {
+        Engine::arch(self)
+    }
+    fn is_cached(&self) -> bool {
+        Engine::is_cached(self)
+    }
+    fn kv_precision(&self) -> KvPrecision {
+        Engine::kv_precision(self)
+    }
+    fn workers(&self) -> usize {
+        1
+    }
+    fn prefill(&self, prompt: &[i32]) -> Result<Session> {
+        Engine::prefill(self, prompt)
+    }
+    fn prefill_batch(&self, prompts: &[Vec<i32>]) -> Result<Vec<Session>> {
+        Engine::prefill_batch(self, prompts)
+    }
+    fn decode_step(&self, sessions: &mut [&mut Session]) -> Result<StepOut> {
+        Engine::decode_step(self, sessions)
+    }
+    fn weight_memory(&self) -> WeightMemory {
+        Engine::weight_memory(self)
+    }
+    fn pool_stats(&self) -> Option<KvPoolStats> {
+        Engine::pool_stats(self)
+    }
+    fn kv_pages_per_session(&self) -> usize {
+        Engine::kv_pages_per_session(self)
+    }
+    fn max_live_sessions(&self) -> usize {
+        Engine::max_live_sessions(self)
+    }
+    fn kv_pages_worst_for(&self, prompt_len: usize, want: usize) -> usize {
+        Engine::kv_pages_worst_for(self, prompt_len, want)
+    }
+}
+
+/// The tensor-parallel engine: one model, `world` workers, per-worker KV
+/// pools at shard width. Always the cached native path — there is no
+/// windowed fallback to shard.
+pub struct ShardedEngine<C: Collective = ThreadCollective> {
+    arch: ModelArch,
+    params: Vec<(String, ParamData)>,
+    act_weights: Vec<Vec<f32>>,
+    thresholds: Vec<f32>,
+    kv: KvPrecision,
+    attn_threshold: Option<f32>,
+    plan: ShardPlan,
+    /// One arch per *active* worker (workers owning >= 1 attention head).
+    shard_arches: Vec<ModelArch>,
+    /// One page pool per active worker, at that worker's shard width. Same
+    /// page count each — page geometry depends on layers/tokens, not width
+    /// — so total KV memory across pools matches the single-engine pool.
+    pools: Vec<Arc<KvPool>>,
+    coll: C,
+}
+
+impl ShardedEngine<ThreadCollective> {
+    /// Build a sharded engine over the in-process thread transport. Same
+    /// spec/tail contract as [`Engine::with_options`]; requires the native
+    /// backend (there is nothing to shard inside an opaque executable).
+    pub fn with_options(
+        rt: &Runtime,
+        spec: &ExecSpec,
+        tail: Vec<ArgValue>,
+        opts: EngineOptions,
+    ) -> Result<Self> {
+        let world = opts.workers.max(1);
+        Self::with_collective(rt, spec, tail, opts, ThreadCollective { world })
+    }
+}
+
+impl<C: Collective> ShardedEngine<C> {
+    /// Build over an explicit transport (the seam a process/RPC-backed
+    /// [`Collective`] slots into).
+    pub fn with_collective(
+        rt: &Runtime,
+        spec: &ExecSpec,
+        tail: Vec<ArgValue>,
+        opts: EngineOptions,
+        coll: C,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            spec.kind == GraphKind::LogitsQuant,
+            "ShardedEngine drives the logits_quant graph, got {:?}",
+            spec.kind
+        );
+        anyhow::ensure!(!opts.windowed, "the windowed fallback cannot be sharded");
+        let world = opts.workers.max(1);
+        anyhow::ensure!(
+            coll.world() == world,
+            "collective world {} != requested workers {world}",
+            coll.world()
+        );
+        let exe = rt.load_spec(spec)?;
+        let g = match exe {
+            Executable::Native(g) => g,
+            #[cfg(feature = "pjrt")]
+            Executable::Pjrt(_) => {
+                anyhow::bail!("sharded serving requires the native backend")
+            }
+        };
+        let (params, act_weights, thresholds) = parse_tail(g.manifest(), &tail)?;
+        let arch = g.arch().clone();
+        let plan = ShardPlan::new(&arch, world)?;
+        let shard_arches: Vec<ModelArch> = plan
+            .heads
+            .iter()
+            .filter(|(h0, h1)| h1 > h0)
+            .map(|&(h0, h1)| shard_arch(&arch, h0, h1))
+            .collect();
+        if opts.attn_threshold.is_some() {
+            // Fail at construction, not at the first prefill: the attention
+            // PPU quantizes 16-wide blocks, so every active worker's column
+            // range must start on a block boundary.
+            let dh = arch.head_dim();
+            for (w, &(h0, _)) in plan.heads.iter().take(shard_arches.len()).enumerate() {
+                anyhow::ensure!(
+                    (h0 * dh) % BLOCK == 0,
+                    "attention PPU requires worker boundaries on {BLOCK}-wide blocks; worker \
+                     {w} would start at column {} — pick a worker count whose head split lands \
+                     on block boundaries",
+                    h0 * dh
+                );
+            }
+        }
+        let pages = opts.kv_pages.unwrap_or_else(|| {
+            DEFAULT_POOL_SESSIONS * KvPool::pages_for_session(arch.n_layers, arch.max_seq)
+        });
+        let pools: Vec<Arc<KvPool>> =
+            shard_arches.iter().map(|sa| KvPool::new(sa, opts.kv, pages)).collect();
+        Ok(ShardedEngine {
+            arch,
+            params,
+            act_weights,
+            thresholds,
+            kv: opts.kv,
+            attn_threshold: opts.attn_threshold,
+            plan,
+            shard_arches,
+            pools,
+            coll,
+        })
+    }
+
+    fn param_map(&self) -> Params<'_> {
+        params_map(&self.params)
+    }
+
+    fn quant_inputs(&self) -> QuantInputs<'_> {
+        QuantInputs {
+            act_weights: self.act_weights.iter().map(|v| v.as_slice()).collect(),
+            thresholds: &self.thresholds,
+            attn_threshold: self.attn_threshold,
+        }
+    }
+
+    /// Fresh per-worker KV shards for one new session; page reservations
+    /// happen inside prefill, and dropping the shards releases them.
+    fn new_shards(&self) -> Vec<KvState> {
+        self.shard_arches
+            .iter()
+            .zip(&self.pools)
+            .map(|(sa, pool)| KvState::new_paged(sa, pool))
+            .collect()
+    }
+
+    fn prefill_batch_impl(&self, prompts: &[Vec<i32>]) -> Result<Vec<Session>> {
+        if prompts.is_empty() {
+            return Ok(Vec::new());
+        }
+        let kept: Vec<&[i32]> = prompts
+            .iter()
+            .map(|p| {
+                if p.is_empty() {
+                    &[0i32][..]
+                } else {
+                    &p[p.len() - p.len().min(self.arch.max_seq)..]
+                }
+            })
+            .collect();
+        let mut shards_owned: Vec<Vec<KvState>> =
+            (0..kept.len()).map(|_| self.new_shards()).collect();
+        let pm = self.param_map();
+        let quant = self.quant_inputs();
+        let out = {
+            let mut kv_refs: Vec<Vec<&mut KvState>> =
+                shards_owned.iter_mut().map(|s| s.iter_mut().collect()).collect();
+            // On error shards_owned drops → reserved pages released.
+            forward_prefill_batch_tp(
+                &self.arch,
+                &self.shard_arches,
+                &self.plan,
+                &pm,
+                &self.coll,
+                &kept,
+                Some(&quant),
+                &mut kv_refs,
+            )?
+        };
+        let vocab = self.arch.vocab;
+        Ok(shards_owned
+            .into_iter()
+            .enumerate()
+            .map(|(i, shards)| Session {
+                tokens: kept[i].to_vec(),
+                last_logits: out.logits[i * vocab..(i + 1) * vocab].to_vec(),
+                steps: 0,
+                kv: None,
+                kv_shards: shards,
+            })
+            .collect())
+    }
+
+    fn decode_step_impl(&self, sessions: &mut [&mut Session]) -> Result<StepOut> {
+        if sessions.is_empty() {
+            return Ok(StepOut::default());
+        }
+        let active = self.shard_arches.len();
+        // Validate and roll before consuming any token, mirroring the
+        // single-worker engine's step semantics exactly.
+        for (i, sess) in sessions.iter().enumerate() {
+            anyhow::ensure!(
+                sess.kv.is_none() && sess.kv_shards.len() == active,
+                "session {i} was not prefilled on this sharded engine"
+            );
+        }
+        let pm = self.param_map();
+        let quant = self.quant_inputs();
+        let w = (self.arch.max_seq / 2).max(1);
+        let mut roll_idx: Vec<usize> = Vec::new();
+        let mut roll_prompts: Vec<Vec<i32>> = Vec::new();
+        for (i, sess) in sessions.iter().enumerate() {
+            if sess.kv_shards[0].len() >= self.arch.max_seq {
+                roll_idx.push(i);
+                roll_prompts.push(sess.tokens[sess.tokens.len().saturating_sub(w)..].to_vec());
+            }
+        }
+        if !roll_idx.is_empty() {
+            {
+                let mut want = roll_idx.iter().copied().peekable();
+                let mut kv_refs: Vec<Vec<&mut KvState>> = Vec::with_capacity(roll_idx.len());
+                for (i, sess) in sessions.iter_mut().enumerate() {
+                    if want.peek() == Some(&i) {
+                        want.next();
+                        for kv in sess.kv_shards.iter_mut() {
+                            kv.clear();
+                        }
+                        kv_refs.push(sess.kv_shards.iter_mut().collect());
+                    }
+                }
+                let prompts: Vec<&[i32]> = roll_prompts.iter().map(|p| p.as_slice()).collect();
+                forward_prefill_batch_tp(
+                    &self.arch,
+                    &self.shard_arches,
+                    &self.plan,
+                    &pm,
+                    &self.coll,
+                    &prompts,
+                    Some(&quant),
+                    &mut kv_refs,
+                )?;
+            }
+            for (&i, kept) in roll_idx.iter().zip(roll_prompts) {
+                sessions[i].tokens = kept;
+            }
+        }
+        let inputs: Vec<i32> = sessions.iter().map(|s| s.next_token()).collect();
+        for (sess, &t) in sessions.iter_mut().zip(&inputs) {
+            sess.tokens.push(t);
+        }
+        let mut kvs: Vec<Vec<&mut KvState>> =
+            sessions.iter_mut().map(|s| s.kv_shards.iter_mut().collect()).collect();
+        let out = match forward_step_batch_tp(
+            &self.arch,
+            &self.shard_arches,
+            &self.plan,
+            &pm,
+            &self.coll,
+            &inputs,
+            &mut kvs,
+            Some(&quant),
+        ) {
+            Ok(out) => out,
+            Err(e) => {
+                for sess in sessions.iter_mut() {
+                    sess.tokens.pop();
+                }
+                return Err(e);
+            }
+        };
+        let vocab = self.arch.vocab;
+        let mut kv_tokens = 0u64;
+        for (i, sess) in sessions.iter_mut().enumerate() {
+            sess.last_logits = out.logits[i * vocab..(i + 1) * vocab].to_vec();
+            sess.steps += 1;
+            kv_tokens += sess.cached_tokens() as u64;
+        }
+        // Per-worker KV traffic: each worker attends over the same token
+        // count at its own shard width and its own realized precision mix.
+        // The mix is reported per worker so energy accounting can price each
+        // worker's traffic at its own stored width — a token-weighted
+        // average across shards would misprice mixed-precision shards.
+        let d = self.arch.d_model as f64;
+        let mut kv_mix: Vec<(usize, f64)> = Vec::with_capacity(active);
+        let mut global = 0.0f64;
+        for (wi, sa) in self.shard_arches.iter().enumerate() {
+            let mut weighted = 0.0f64;
+            for sess in sessions.iter() {
+                let t = sess.cached_tokens() as u64;
+                weighted += sess.kv_shards[wi].effective_kv_bits() * t as f64;
+            }
+            let bits_w = if kv_tokens > 0 {
+                weighted / kv_tokens as f64
+            } else {
+                self.kv.bits_per_value()
+            };
+            kv_mix.push((sa.d_model, bits_w));
+            global += bits_w * sa.d_model as f64 / d;
+        }
+        let kv_bits_per_value = if kv_tokens > 0 { global } else { self.kv.bits_per_value() };
+        Ok(StepOut {
+            rows: sessions.len(),
+            act_fp8: out.act_fp8,
+            kv_tokens,
+            kv_bits_per_value,
+            kv_mix,
+        })
+    }
+}
+
+impl<C: Collective> InferenceEngine for ShardedEngine<C> {
+    fn arch(&self) -> &ModelArch {
+        &self.arch
+    }
+    fn is_cached(&self) -> bool {
+        true
+    }
+    fn kv_precision(&self) -> KvPrecision {
+        self.kv
+    }
+    fn workers(&self) -> usize {
+        self.plan.world
+    }
+    fn prefill(&self, prompt: &[i32]) -> Result<Session> {
+        let mut v = self.prefill_batch_impl(&[prompt.to_vec()])?;
+        Ok(v.pop().expect("one session per prompt"))
+    }
+    fn prefill_batch(&self, prompts: &[Vec<i32>]) -> Result<Vec<Session>> {
+        self.prefill_batch_impl(prompts)
+    }
+    fn decode_step(&self, sessions: &mut [&mut Session]) -> Result<StepOut> {
+        self.decode_step_impl(sessions)
+    }
+    fn weight_memory(&self) -> WeightMemory {
+        params_weight_memory(&self.params)
+    }
+    fn pool_stats(&self) -> Option<KvPoolStats> {
+        self.pools.first().map(|p| p.stats())
+    }
+    fn kv_pages_per_session(&self) -> usize {
+        KvPool::pages_for_session(self.arch.n_layers, self.arch.max_seq)
+    }
+    fn max_live_sessions(&self) -> usize {
+        let per = self.kv_pages_per_session().max(1);
+        self.pools.first().map(|p| p.total_pages() / per).unwrap_or(0)
+    }
+    fn kv_pages_worst_for(&self, prompt_len: usize, want: usize) -> usize {
+        let kept = prompt_len.min(self.arch.max_seq).max(1);
+        let peak = (kept + want).min(self.arch.max_seq);
+        KvPool::pages_for_session(self.arch.n_layers, peak)
+    }
+}
+
+/// Build the engine a worker-count asks for: a plain [`Engine`] for
+/// `workers <= 1` (or when the windowed fallback is forced — there is
+/// nothing to shard in a recompute loop), a [`ShardedEngine`] otherwise.
+/// Callers hold the trait object and never branch on the concrete type.
+pub fn build_engine(
+    rt: &Runtime,
+    spec: &ExecSpec,
+    tail: Vec<ArgValue>,
+    opts: EngineOptions,
+) -> Result<Box<dyn InferenceEngine>> {
+    if opts.workers > 1 && !opts.windowed {
+        Ok(Box::new(ShardedEngine::with_options(rt, spec, tail, opts)?))
+    } else {
+        Ok(Box::new(Engine::with_options(rt, spec, tail, opts)?))
+    }
+}

@@ -619,19 +619,41 @@ fn decode_panel_kblock(
 /// [`PackedPanels::unpack_kn`] bit-for-bit; full tiles accumulate through
 /// the same [`F32x8`] microkernel ops as the dense [`matmul_rows`].
 pub fn matmul_rows_packed(x: &[f32], w: &PackedPanels, rows: usize, out: &mut [f32]) {
+    matmul_rows_packed_range(x, w, rows, 0, w.n_panels(), out)
+}
+
+/// [`matmul_rows_packed`] restricted to the panel range `[p0, p1)` — the
+/// per-worker kernel of the tensor-parallel path. `out` is `(rows, cols)`
+/// where `cols = min(p1·NR, N) − p0·NR`: output columns are written
+/// relative to the range's first column, so a worker's partial product is
+/// a dense block the driver can splice into the full output by pure copy.
+/// The walk, decode and ascending-K accumulation order are identical to
+/// the full kernel, so concatenating every worker's block reproduces the
+/// single-worker result bit-for-bit.
+pub fn matmul_rows_packed_range(
+    x: &[f32],
+    w: &PackedPanels,
+    rows: usize,
+    p0: usize,
+    p1: usize,
+    out: &mut [f32],
+) {
     debug_assert!(rows <= MR);
     // Hard check: the panel walk below hardcodes NR-wide panels, so a
     // layout built for any other width would silently desync the decode
     // cursor in release builds if this were only a debug assert.
     assert_eq!(w.nr, NR, "panel layout width {} != kernel NR {NR}", w.nr);
     let (k, n) = (w.k, w.n);
+    debug_assert!(p0 <= p1 && p1 <= w.n_panels());
+    let ncols = (p1 * NR).min(n) - (p0 * NR).min(n);
     debug_assert_eq!(x.len(), rows * k);
-    debug_assert_eq!(out.len(), rows * n);
+    debug_assert_eq!(out.len(), rows * ncols);
     let kb_count = k / BLOCK;
     let mut wtile = [0.0f32; BLOCK * NR];
-    for p in 0..w.n_panels() {
-        let nc = p * NR;
-        let width = NR.min(n - nc);
+    for p in p0..p1 {
+        // Column offset inside this range's output block.
+        let nc = p * NR - p0 * NR;
+        let width = NR.min(n - p * NR);
         let mut cur = PanelCursor {
             widx: w.panel_block_off[p],
             pay: w.panel_payload_off[p],
@@ -651,7 +673,7 @@ pub fn matmul_rows_packed(x: &[f32], w: &PackedPanels, rows: usize, out: &mut [f
                 }
             }
             for (r, a) in acc.iter().enumerate() {
-                a.store(&mut out[r * n + nc..r * n + nc + NR]);
+                a.store(&mut out[r * ncols + nc..r * ncols + nc + NR]);
             }
         } else {
             // Edge panel / bottom row tile: same ascending-K order, scalar
@@ -671,7 +693,7 @@ pub fn matmul_rows_packed(x: &[f32], w: &PackedPanels, rows: usize, out: &mut [f
                 }
             }
             for (r, accr) in acc.iter().enumerate().take(rows) {
-                out[r * n + nc..r * n + nc + width].copy_from_slice(&accr[..width]);
+                out[r * ncols + nc..r * ncols + nc + width].copy_from_slice(&accr[..width]);
             }
         }
     }
@@ -693,6 +715,31 @@ pub fn matmul_packed(x: &[f32], w: &PackedPanels, m: usize) -> Vec<f32> {
         tile
     });
     flatten(out, m * n)
+}
+
+/// [`matmul_packed`] restricted to the panel range `[p0, p1)`: one
+/// worker's partial product, a dense `(M, cols)` block of the full output
+/// columns `[p0·NR, min(p1·NR, N))`. Runs the tile loop serially — the
+/// tensor-parallel driver already owns one thread per worker, and nesting
+/// `par_map` inside it would oversubscribe.
+pub fn matmul_packed_range(x: &[f32], w: &PackedPanels, m: usize, p0: usize, p1: usize) -> Vec<f32> {
+    let (k, n) = (w.k, w.n);
+    assert_eq!(x.len(), m * k);
+    let ncols = (p1 * NR).min(n) - (p0 * NR).min(n);
+    let mut out = vec![0.0f32; m * ncols];
+    for t in 0..m.div_ceil(MR) {
+        let r0 = t * MR;
+        let rows = MR.min(m - r0);
+        matmul_rows_packed_range(
+            &x[r0 * k..(r0 + rows) * k],
+            w,
+            rows,
+            p0,
+            p1,
+            &mut out[r0 * ncols..(r0 + rows) * ncols],
+        );
+    }
+    out
 }
 
 /// Scalar reference sibling of [`matmul_packed`]: walks the same panel
@@ -1064,6 +1111,44 @@ mod tests {
         let want = matmul_scalar(&x, &deq, m, k, n);
         assert_eq!(matmul_packed(&x, &p, m), want);
         assert_eq!(matmul_packed_scalar(&x, &p, m), want);
+    }
+
+    #[test]
+    fn packed_range_blocks_splice_into_full_product() {
+        use crate::quant::{FgmpTensor, Precision};
+        let mut rng = Rng::new(0x9002);
+        // N off the panel grid (edge panel) to exercise the partial tail.
+        let (m, k, n) = (6usize, 3 * BLOCK, 23usize);
+        let x = rng.normal_vec(m * k, 1.0);
+        let w = rng.normal_vec(n * k, 0.4);
+        let kb = k / BLOCK;
+        let prec: Vec<Precision> = (0..n * kb)
+            .map(|i| if i % 3 == 0 { Precision::Fp8 } else { Precision::Fp4 })
+            .collect();
+        let t = FgmpTensor::pack(&[n, k], &w, &prec, None);
+        let p = PackedPanels::from_tensor(&t, NR);
+        let full = matmul_packed(&x, &p, m);
+        let np = p.n_panels();
+        for world in 1..=4usize {
+            let mut spliced = vec![0.0f32; m * n];
+            let (base, extra) = (np / world, np % world);
+            let mut p0 = 0usize;
+            for wi in 0..world {
+                let p1 = p0 + base + usize::from(wi < extra);
+                let c0 = (p0 * NR).min(n);
+                let c1 = (p1 * NR).min(n);
+                let block = matmul_packed_range(&x, &p, m, p0, p1);
+                assert_eq!(block.len(), m * (c1 - c0));
+                for r in 0..m {
+                    spliced[r * n + c0..r * n + c1]
+                        .copy_from_slice(&block[r * (c1 - c0)..(r + 1) * (c1 - c0)]);
+                }
+                p0 = p1;
+            }
+            for (a, b) in spliced.iter().zip(&full) {
+                assert_eq!(a.to_bits(), b.to_bits(), "world={world}");
+            }
+        }
     }
 
     #[test]

@@ -10,5 +10,5 @@ pub mod parallel;
 pub mod rng;
 
 pub use json::Json;
-pub use parallel::par_map;
+pub use parallel::{par_map, par_run_once};
 pub use rng::Rng;

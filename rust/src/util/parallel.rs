@@ -42,6 +42,32 @@ where
     })
 }
 
+/// Run a set of one-shot jobs concurrently on scoped threads, returning
+/// their results in input order. Unlike [`par_map`] this gives every job
+/// its own thread (no work-stealing index): it is the fork/join primitive
+/// of the tensor-parallel engine, where each job *is* one worker's whole
+/// shard step and must run even when `jobs.len()` exceeds the core count
+/// (a worker blocking would deadlock a collective). Job 0 runs inline on
+/// the calling thread, so a single-worker "fleet" costs no spawn at all.
+pub fn par_run_once<'env, R: Send>(jobs: Vec<Box<dyn FnOnce() -> R + Send + 'env>>) -> Vec<R> {
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut it = jobs.into_iter();
+    let first = it.next().expect("n >= 1");
+    let rest: Vec<_> = it.collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = rest.into_iter().map(|j| s.spawn(j)).collect();
+        let mut out = Vec::with_capacity(n);
+        out.push(first());
+        for h in handles {
+            out.push(h.join().expect("tensor-parallel worker panicked"));
+        }
+        out
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -58,6 +84,19 @@ mod tests {
         let e: Vec<u32> = vec![];
         assert!(par_map(&e, |&x| x).is_empty());
         assert_eq!(par_map(&[5u32], |&x| x + 1), vec![6]);
+    }
+
+    #[test]
+    fn run_once_ordered_and_handles_empty() {
+        let empty: Vec<Box<dyn FnOnce() -> u32 + Send>> = vec![];
+        assert!(par_run_once(empty).is_empty());
+        let data = vec![10u32, 20, 30, 40, 50];
+        let jobs: Vec<Box<dyn FnOnce() -> u32 + Send + '_>> = data
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| Box::new(move || v + i as u32) as Box<dyn FnOnce() -> u32 + Send>)
+            .collect();
+        assert_eq!(par_run_once(jobs), vec![10, 21, 32, 43, 54]);
     }
 
     #[test]

@@ -221,6 +221,7 @@ fn continuous_batching_preserves_per_request_streams() {
         kv_pages: None,
         energy: fgmp::hwsim::EnergyModel::default(),
         attn_threshold: None,
+        workers: 1,
     };
     let fwd_spec = ExecSpec::new(&dir, "tiny-llama", GraphKind::FwdQuant);
     let server = Server::start(scfg, fwd_spec, tail.clone(), logits_spec, tail).unwrap();
@@ -317,6 +318,7 @@ fn pool_backpressure_defers_admissions_and_preserves_streams() {
         kv_pages: Some(kv_pages),
         energy: fgmp::hwsim::EnergyModel::default(),
         attn_threshold: None,
+        workers: 1,
     };
     let fwd_spec = ExecSpec::new(&dir, "tiny-llama", GraphKind::FwdQuant);
     let server = Server::start(scfg, fwd_spec, tail.clone(), logits_spec, tail).unwrap();
@@ -360,6 +362,78 @@ fn pool_backpressure_defers_admissions_and_preserves_streams() {
         "every deferred request still completed in full"
     );
     server.shutdown();
+}
+
+/// Tensor-parallel KV energy pricing: over random shard splits and
+/// per-worker precision mixes, `decode_step_energy_tp`
+/// (1) reduces *exactly* to `decode_step_energy` for a single full-width
+///     entry,
+/// (2) equals the sum of per-worker prices (each worker billed at its own
+///     stored width × its own realized bits), and
+/// (3) strictly under-prices vs the buggy average-then-multiply formula
+///     whenever wide shards quantized harder than narrow ones (and
+///     over-prices in the mirror case) — the misprice the per-worker sum
+///     exists to fix.
+#[test]
+fn decode_step_energy_tp_prices_each_shard_at_its_own_width() {
+    use fgmp::coordinator::{decode_step_energy, decode_step_energy_tp};
+    use fgmp::hwsim::kvcache::KvModelDims;
+    use fgmp::hwsim::EnergyModel;
+
+    let em = EnergyModel::default();
+    let mut rng = Rng::new(0xE4E26);
+    for case in 0..200 {
+        let n_layers = 1 + rng.below(6);
+        let world = 1 + rng.below(4);
+        // Worker widths tile d_model in 16-wide blocks, like panel shards.
+        let widths: Vec<usize> = (0..world).map(|_| 16 * (1 + rng.below(8))).collect();
+        let d_model: usize = widths.iter().sum();
+        let dims = KvModelDims { n_layers, d_model, weight_elements: 0 };
+        let kv_tokens = 1 + rng.below(500) as u64;
+        let mix: Vec<(usize, f64)> =
+            widths.iter().map(|&w| (w, 4.0 + 12.0 * rng.f64())).collect();
+
+        // (1) Single entry at full width reduces exactly.
+        let bits0 = mix[0].1;
+        let (a, a8) =
+            decode_step_energy_tp(&[], &[], 1, &dims, kv_tokens, &[(d_model, bits0)], &em);
+        let (b, b8) = decode_step_energy(&[], &[], 1, &dims, kv_tokens, bits0, &em);
+        assert_eq!(a.to_bits(), b.to_bits(), "case {case}: single-entry fgmp");
+        assert_eq!(a8.to_bits(), b8.to_bits(), "case {case}: single-entry baseline");
+
+        // (2) Multi-entry = Σ_w price(width_w, bits_w); baselines agree
+        // (the all-FP8 comparison point reads one full-width 16-bit cache).
+        let (tp, tp8) = decode_step_energy_tp(&[], &[], 1, &dims, kv_tokens, &mix, &em);
+        let want: f64 = mix
+            .iter()
+            .map(|&(w, bits)| {
+                let wdims = KvModelDims { d_model: w, ..dims.clone() };
+                decode_step_energy(&[], &[], 1, &wdims, kv_tokens, bits, &em).0
+            })
+            .sum();
+        assert!(
+            (tp - want).abs() <= 1e-9 * want.max(1.0),
+            "case {case}: per-worker sum {want} vs tp {tp}"
+        );
+        assert_eq!(tp8.to_bits(), b8.to_bits(), "case {case}: shared baseline");
+
+        // (3) The average-then-multiply formula misprices by exactly
+        // (mean − width-weighted-mean) × total cache values × e_kv_bit,
+        // up to per-term u64 truncation in `kv_cache_bits` — so averaging
+        // is only correct when all shards share one mix or one width.
+        let mean_bits: f64 = mix.iter().map(|&(_, b)| b).sum::<f64>() / mix.len() as f64;
+        let weighted: f64 =
+            mix.iter().map(|&(w, b)| b * w as f64).sum::<f64>() / d_model as f64;
+        let (avg, _) = decode_step_energy(&[], &[], 1, &dims, kv_tokens, mean_bits, &em);
+        let values = (2 * n_layers as u64 * kv_tokens * d_model as u64) as f64;
+        let expected_delta = (mean_bits - weighted) * values * em.e_kv_bit;
+        let tol = (world as f64 + 2.0) * em.e_kv_bit + 1e-9 * expected_delta.abs();
+        assert!(
+            ((avg - tp) - expected_delta).abs() <= tol,
+            "case {case}: misprice {} vs expected {expected_delta}",
+            avg - tp
+        );
+    }
 }
 
 /// Metrics accounting: sums of random batch records reconcile exactly.

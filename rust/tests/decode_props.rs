@@ -500,8 +500,9 @@ fn engine_fixture() -> EngineFixture {
     EngineFixture { ev, spec, tail, rt }
 }
 
-/// Greedy-decode `n` tokens from a prepared engine.
-fn greedy(engine: &fgmp::runtime::Engine, prompt: &[i32], n: usize) -> Vec<i32> {
+/// Greedy-decode `n` tokens from a prepared engine (any implementation of
+/// the shared engine surface — the single-worker `Engine` coerces).
+fn greedy(engine: &dyn fgmp::runtime::InferenceEngine, prompt: &[i32], n: usize) -> Vec<i32> {
     let mut sess = engine.prefill(prompt).unwrap();
     let mut produced = vec![sess.next_token()];
     while produced.len() < n {
@@ -974,6 +975,188 @@ fn attention_ppu_prices_kv_at_realized_mix_within_tolerance() {
     let err = forward_prefill(&bad, &bpm, &tokens[..s0], Some(&bq), &mut bkv).unwrap_err();
     assert!(err.to_string().contains("attention PPU"), "shape gate: {err}");
     assert!(bkv.is_empty(), "shape gate must fire before any compute");
+}
+
+// ---------------------------------------------------------------------------
+// Sharded-engine parity (tensor parallelism)
+// ---------------------------------------------------------------------------
+
+/// **Acceptance criterion:** the tensor-parallel sharded engine is
+/// bit-for-bit identical to the single-worker engine — batched prefill
+/// logits, every decode step's logits, and the realized activation FP8
+/// fractions — across worker counts {1, 2, 4} × KV {FP16, FP8} ×
+/// {attn-PPU off, on}. Worker 4 exceeds tiny-llama's 3 heads, so the
+/// empty-tail-shard path is exercised too. Metrics that are *derived*
+/// (`kv_bits_per_value`) agree to FP summation order; everything the token
+/// stream depends on agrees exactly.
+#[test]
+fn sharded_engine_matches_single_worker_bit_exact() {
+    use fgmp::runtime::{build_engine, EngineOptions};
+    let fx = engine_fixture();
+    let d_model = fx.ev.arts.manifest.arch().unwrap().d_model;
+    let prompts: Vec<Vec<i32>> = [5usize, 17, 9]
+        .iter()
+        .enumerate()
+        .map(|(i, &len)| fx.ev.test_stream[i * 24..i * 24 + len].to_vec())
+        .collect();
+    let steps = 5usize;
+
+    for kv in [KvPrecision::Fp16, KvPrecision::Fp8] {
+        for attn in [None, Some(0.5f32)] {
+            let base = EngineOptions::default().kv(kv).attn(attn);
+            let single = build_engine(&fx.rt, &fx.spec, fx.tail.clone(), base).unwrap();
+            assert_eq!(single.workers(), 1);
+
+            // Oracle: batched prefill + `steps` batched decode steps.
+            let mut oracle = single.prefill_batch(&prompts).unwrap();
+            let prefill_logits: Vec<Vec<f32>> =
+                oracle.iter().map(|s| s.last_logits.clone()).collect();
+            let mut step_logits: Vec<Vec<Vec<f32>>> = Vec::new();
+            let mut step_outs = Vec::new();
+            for _ in 0..steps {
+                let out = {
+                    let mut refs: Vec<&mut fgmp::runtime::Session> =
+                        oracle.iter_mut().collect();
+                    single.decode_step(&mut refs).unwrap()
+                };
+                step_logits.push(oracle.iter().map(|s| s.last_logits.clone()).collect());
+                step_outs.push(out);
+            }
+            let oracle_kv_bits: u64 = oracle.iter().map(|s| s.kv_bits()).sum();
+
+            for world in [1usize, 2, 4] {
+                let tag = format!("{kv:?} attn={attn:?} w{world}");
+                let eng =
+                    build_engine(&fx.rt, &fx.spec, fx.tail.clone(), base.workers(world))
+                        .unwrap();
+                assert_eq!(eng.workers(), world, "{tag}");
+                assert!(eng.is_cached(), "{tag}");
+                assert_eq!(eng.kv_precision(), kv, "{tag}");
+                let mut sessions = eng.prefill_batch(&prompts).unwrap();
+                for (i, (s, want)) in sessions.iter().zip(&prefill_logits).enumerate() {
+                    assert_eq!(s.tokens, oracle_tokens_at(&oracle, i, steps), "{tag} ctx {i}");
+                    assert_bits_eq(&s.last_logits, want, &format!("{tag} prefill {i}"));
+                }
+                for step in 0..steps {
+                    let out = {
+                        let mut refs: Vec<&mut fgmp::runtime::Session> =
+                            sessions.iter_mut().collect();
+                        eng.decode_step(&mut refs).unwrap()
+                    };
+                    for (i, want) in step_logits[step].iter().enumerate() {
+                        assert_bits_eq(
+                            &sessions[i].last_logits,
+                            want,
+                            &format!("{tag} step {step} session {i}"),
+                        );
+                    }
+                    let o = &step_outs[step];
+                    assert_eq!(out.rows, o.rows, "{tag} step {step}");
+                    assert_eq!(out.kv_tokens, o.kv_tokens, "{tag} step {step}");
+                    assert_eq!(out.act_fp8, o.act_fp8, "{tag} step {step} act fracs");
+                    // Worker widths tile d_model and the width-weighted mix
+                    // reproduces the single-engine token-weighted bits (up
+                    // to FP summation order).
+                    let wsum: usize = out.kv_mix.iter().map(|(w, _)| *w).sum();
+                    assert_eq!(wsum, d_model, "{tag} step {step} mix widths");
+                    let rebuilt: f64 = out
+                        .kv_mix
+                        .iter()
+                        .map(|&(w, b)| b * w as f64 / d_model as f64)
+                        .sum();
+                    assert!(
+                        (rebuilt - o.kv_bits_per_value).abs()
+                            <= 1e-9 * o.kv_bits_per_value.max(1.0),
+                        "{tag} step {step}: mix {rebuilt} vs {}",
+                        o.kv_bits_per_value
+                    );
+                }
+                // Same context and same physical cache bits, sharded or not.
+                for (i, s) in sessions.iter().enumerate() {
+                    assert_eq!(s.tokens, oracle[i].tokens, "{tag} final ctx {i}");
+                    assert_eq!(s.cached_tokens(), oracle[i].cached_tokens(), "{tag} {i}");
+                }
+                let shard_kv_bits: u64 = sessions.iter().map(|s| s.kv_bits()).sum();
+                assert_eq!(shard_kv_bits, oracle_kv_bits, "{tag} stored bits");
+            }
+        }
+    }
+}
+
+/// Context snapshot helper for the parity test: the oracle sessions have
+/// already decoded `steps` tokens, so a freshly prefilled session's context
+/// must equal the oracle's context minus those trailing tokens.
+fn oracle_tokens_at(oracle: &[fgmp::runtime::Session], i: usize, steps: usize) -> Vec<i32> {
+    let t = &oracle[i].tokens;
+    t[..t.len() - steps].to_vec()
+}
+
+/// Greedy decode streams are identical through the sharded engine — across
+/// the rolling re-prefill boundary, so the windowed-roll path is sharded
+/// correctly too (FP8 KV, the precision where any divergence would show).
+#[test]
+fn sharded_greedy_stream_matches_single_worker_across_roll() {
+    use fgmp::runtime::{build_engine, EngineOptions};
+    let fx = engine_fixture();
+    let arch = fx.ev.arts.manifest.arch().unwrap();
+    let prompt: Vec<i32> = fx.ev.test_stream[..8].to_vec();
+    let n = arch.max_seq + 10; // crosses at least one roll
+    let opts = EngineOptions::default().kv(KvPrecision::Fp8);
+    let single = build_engine(&fx.rt, &fx.spec, fx.tail.clone(), opts).unwrap();
+    let sharded = build_engine(&fx.rt, &fx.spec, fx.tail.clone(), opts.workers(2)).unwrap();
+    let want = greedy(single.as_ref(), &prompt, n);
+    let got = greedy(sharded.as_ref(), &prompt, n);
+    assert_eq!(got, want, "sharded greedy stream vs single worker across roll");
+}
+
+/// Sharded pool accounting: per-worker pools have the same page capacity
+/// and the same per-session page usage as the single engine's pool (page
+/// geometry depends on layers/tokens, not row width), sessions report
+/// pages summed across shards, and a session prefilled on one engine kind
+/// is rejected by the other's decode step.
+#[test]
+fn sharded_pool_accounting_and_session_validation() {
+    use fgmp::runtime::{build_engine, EngineOptions};
+    let fx = engine_fixture();
+    let opts = EngineOptions::default().kv(KvPrecision::Fp16);
+    let single = build_engine(&fx.rt, &fx.spec, fx.tail.clone(), opts).unwrap();
+    let sharded = build_engine(&fx.rt, &fx.spec, fx.tail.clone(), opts.workers(2)).unwrap();
+    assert_eq!(sharded.kv_pages_per_session(), single.kv_pages_per_session());
+    assert_eq!(sharded.max_live_sessions(), single.max_live_sessions());
+    assert_eq!(
+        sharded.kv_pages_worst_for(10, 20),
+        single.kv_pages_worst_for(10, 20)
+    );
+    let stats_s = single.pool_stats().unwrap();
+    let stats_t = sharded.pool_stats().unwrap();
+    assert_eq!(stats_t.total_pages, stats_s.total_pages, "same per-pool capacity");
+
+    let prompt: Vec<i32> = fx.ev.test_stream[..9].to_vec();
+    let mut a = single.prefill(&prompt).unwrap();
+    let mut b = sharded.prefill(&prompt).unwrap();
+    // Each worker pool mirrors the single pool's usage; the session's own
+    // page count sums across its two shards.
+    assert_eq!(sharded.pool_stats().unwrap().in_use_pages, a.kv_pages());
+    assert_eq!(b.kv_pages(), 2 * a.kv_pages());
+    assert_eq!(b.cached_tokens(), a.cached_tokens());
+
+    // Cross-engine sessions are rejected up front, tokens untouched.
+    let before = b.tokens.clone();
+    {
+        let mut refs = [&mut b];
+        assert!(single.decode_step(&mut refs).is_err(), "sharded session on Engine");
+    }
+    assert_eq!(b.tokens, before);
+    let before = a.tokens.clone();
+    {
+        let mut refs = [&mut a];
+        assert!(sharded.decode_step(&mut refs).is_err(), "Engine session on sharded");
+    }
+    assert_eq!(a.tokens, before);
+
+    // Retirement returns every page to every worker pool.
+    drop(b);
+    assert_eq!(sharded.pool_stats().unwrap().in_use_pages, 0);
 }
 
 /// `EngineOptions::attn_threshold` threads the attention PPU into the

@@ -218,6 +218,7 @@ fn coordinator_serves_score_requests_natively() {
         kv_pages: None,
         energy: fgmp::hwsim::EnergyModel::default(),
         attn_threshold: None,
+        workers: 1,
     };
     let fwd = ExecSpec::new(dir, "tiny-llama", GraphKind::FwdQuant);
     let logits = ExecSpec::new(dir, "tiny-llama", GraphKind::LogitsQuant);
