@@ -57,6 +57,10 @@ fn main() -> fgmp::Result<()> {
         kv_precision: fgmp::model::KvPrecision::Fp8,
         decode_batch: 4,
         kv_pages: None,
+        energy: fgmp::hwsim::EnergyModel::default(),
+        attn_threshold: None,
+        workers: 1,
+        spec: None,
     };
     let windows = ev.eval_windows(16);
     let seq = ev.seq;

@@ -51,6 +51,8 @@ pub mod names {
     pub const DECODE_LONGCTX_FP8: &str = "decode_step_longctx_d512_w4k_fp8";
     pub const DECODE_TP_W1: &str = "decode_step_tp_w1_d512_occ8";
     pub const DECODE_TP_W2: &str = "decode_step_tp_w2_d512_occ8";
+    pub const DECODE_SPEC_PLAIN: &str = "decode_step_packed_d512_occ1";
+    pub const DECODE_SPEC_ROUND: &str = "decode_spec_round_d512_occ1_k4";
 
     pub const SPEEDUP_MATMUL: &str = "speedup_matmul_d512";
     pub const SPEEDUP_MATMUL_T: &str = "speedup_matmul_t_d512";
@@ -74,8 +76,20 @@ pub mod names {
     /// per-layer linears and attention heads across two threads must beat
     /// one worker by a sane margin despite the fork/join overhead).
     pub const SCALING_EFF_DECODE_W2: &str = "scaling_eff_decode_w2_d512";
+    /// Tokens/s of the self-speculative decode round (fork + k−1 all-NVFP4
+    /// draft steps + one k-row batched verify + rollback) over plain
+    /// token-at-a-time FGMP decode at occupancy 1, on the draft-lossless
+    /// lattice fixture where every round accepts all k−1 guesses (≥ 1.5
+    /// floor at k = 4: drafting at half the weight-read bytes plus the
+    /// batched verify's weight-reuse must beat stepping one token at a
+    /// time).
+    pub const SPEEDUP_DECODE_SPEC: &str = "speedup_decode_spec_occ1_d512";
+    /// Resident bytes of the paper-mix (30% FP8) execution tensor over its
+    /// all-NVFP4 draft view (≥ 1.15 floor: the draft view must stay a real
+    /// weight-memory shrink, not a second full-size artifact).
+    pub const DRAFT_VIEW_SHRINK: &str = "draft_view_shrink_d512";
 
-    pub const ALL: [&str; 26] = [
+    pub const ALL: [&str; 28] = [
         MATMUL_SCALAR,
         MATMUL_BLOCKED,
         MATMUL_DEQUANT,
@@ -102,8 +116,10 @@ pub mod names {
         DECODE_LONGCTX_FP8,
         DECODE_TP_W1,
         DECODE_TP_W2,
+        DECODE_SPEC_PLAIN,
+        DECODE_SPEC_ROUND,
     ];
-    pub const ALL_DERIVED: [&str; 10] = [
+    pub const ALL_DERIVED: [&str; 12] = [
         SPEEDUP_MATMUL,
         SPEEDUP_MATMUL_T,
         SPEEDUP_QUANT,
@@ -114,7 +130,117 @@ pub mod names {
         WEIGHT_MEM_SAVING_PACKED,
         RATIO_DECODE_LONGCTX_FP8,
         SCALING_EFF_DECODE_W2,
+        SPEEDUP_DECODE_SPEC,
+        DRAFT_VIEW_SHRINK,
     ];
+}
+
+/// One entry per bench function: group name, the function, the bench names
+/// it pushes, and the derived metrics it records. This is the `--filter`
+/// unit — pairs and ratios need their in-group siblings, so a filter
+/// selects whole groups, and the registry is what guarantees a filtered
+/// baseline slice (`BenchSuite::filtered` over the same substring) only
+/// gates names the selected groups actually produce.
+type BenchFn = fn(&mut BenchSuite, Duration);
+pub const GROUPS: [(&str, BenchFn, &[&str], &[&str]); 6] = [
+    (
+        "kernel",
+        kernel_benches,
+        &[
+            names::MATMUL_SCALAR,
+            names::MATMUL_BLOCKED,
+            names::MATMUL_DEQUANT,
+            names::MATMUL_PACKED,
+            names::MATMUL_T_SCALAR,
+            names::MATMUL_T_BLOCKED,
+            names::QUANT_E4M3_SCALAR,
+            names::QUANT_E4M3_SLICE,
+            names::NVFP4_ROUNDTRIP,
+        ],
+        &[
+            names::SPEEDUP_MATMUL,
+            names::RATIO_MATMUL_PACKED,
+            names::WEIGHT_MEM_SAVING_PACKED,
+            names::SPEEDUP_MATMUL_T,
+            names::SPEEDUP_QUANT,
+        ],
+    ),
+    (
+        "pipeline",
+        pipeline_benches,
+        &[names::SW_CLIP, names::FGMP_MATMUL, names::FGMP_MATMUL_PACKED, names::FORWARD_D512],
+        &[],
+    ),
+    (
+        "decode",
+        decode_benches,
+        &[
+            names::DECODE_RECOMPUTE,
+            names::DECODE_CACHED,
+            names::DECODE_OCC1,
+            names::DECODE_OCC4,
+            names::DECODE_OCC8,
+            names::DECODE_OCC8_PAGED,
+            names::DECODE_CHURN_PAGED,
+            names::PREFILL_SEQ,
+            names::PREFILL_BATCHED,
+        ],
+        &[names::SPEEDUP_DECODE, names::RATIO_DECODE_PAGED, names::SPEEDUP_PREFILL_BATCHED],
+    ),
+    (
+        "longctx",
+        longctx_benches,
+        &[names::DECODE_LONGCTX_FP16, names::DECODE_LONGCTX_FP8],
+        &[names::RATIO_DECODE_LONGCTX_FP8],
+    ),
+    (
+        "sharded",
+        sharded_benches,
+        &[names::DECODE_TP_W1, names::DECODE_TP_W2],
+        &[names::SCALING_EFF_DECODE_W2],
+    ),
+    (
+        "spec",
+        spec_benches,
+        &[names::DECODE_SPEC_PLAIN, names::DECODE_SPEC_ROUND],
+        &[names::SPEEDUP_DECODE_SPEC, names::DRAFT_VIEW_SHRINK],
+    ),
+];
+
+/// Does the group run under this filter? `None` runs everything; a
+/// substring selects every group whose name, bench names, or derived
+/// metric names contain it.
+pub fn group_matches(
+    filter: Option<&str>,
+    group: &str,
+    benches: &[&str],
+    derived: &[&str],
+) -> bool {
+    match filter {
+        None => true,
+        Some(sub) => {
+            group.contains(sub)
+                || benches.iter().any(|n| n.contains(sub))
+                || derived.iter().any(|n| n.contains(sub))
+        }
+    }
+}
+
+/// Run the whole suite — or, with a `--filter` substring, only the groups
+/// it names. Skipped groups are announced so a filtered `BENCH_*.json` is
+/// never mistaken for a full run, and the filter is recorded in the
+/// suite's metadata.
+pub fn run_benches(suite: &mut BenchSuite, budget: Duration, filter: Option<&str>) {
+    for (group, f, benches, derived) in GROUPS {
+        if group_matches(filter, group, benches, derived) {
+            f(suite, budget);
+        } else {
+            println!("-- skipping group '{group}' ({} benches; filter)", benches.len());
+        }
+    }
+    if let Some(sub) = filter {
+        suite.set_meta("filter", sub);
+    }
 }
 
 /// Print one result and add it to the suite.
@@ -353,6 +479,7 @@ pub fn decode_benches(suite: &mut BenchSuite, budget: Duration) {
     }
 
     paged_benches(suite, budget, &arch, &pm, &prompt, occ8_result);
+    suite.set_meta("decode.kv", "fp16 (flat + paged)");
 }
 
 /// Paged-arena decode/prefill workloads at the d512 preset: the occupancy-8
@@ -519,6 +646,7 @@ pub fn longctx_benches(suite: &mut BenchSuite, budget: Duration) {
         }
         keep(suite, r);
     }
+    suite.set_meta("longctx.kv", "fp16+fp8 @ w4k");
 }
 
 /// Tensor-parallel decode scaling at the d512 preset: the same occupancy-8
@@ -598,6 +726,170 @@ pub fn sharded_benches(suite: &mut BenchSuite, budget: Duration) {
     println!("  -> {} {eff:.2}x", names::SCALING_EFF_DECODE_W2);
     suite.derive(names::SCALING_EFF_DECODE_W2, eff);
     keep(suite, r);
+    suite.set_meta("sharded.workers", "1+2");
+}
+
+/// Fill one weight block with NVFP4-lattice values: every element is
+/// `±m·2^e` with `m` on the E2M1 lattice and the block absmax pinned to
+/// `6·2^e`, so the E4M3 encoding stores the values exactly AND the draft
+/// view's NVFP4 re-encoding (block scale exactly `2^e`) is lossless — the
+/// all-FP4 draft decodes bit-identically to the FP8 target, which pins the
+/// speculative round at full accept (see `lattice_draft_view_is_lossless`).
+fn fp4_lattice_block(rng: &mut Rng, out: &mut [f32]) {
+    const M: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+    let e = rng.below(3) as i32 - 6; // 2^-6..2^-4: weight-sized magnitudes
+    let s = (2.0f32).powi(e);
+    for v in out.iter_mut() {
+        let m = M[rng.below(8)];
+        *v = if rng.below(2) == 0 { m * s } else { -m * s };
+    }
+    out[0] = 6.0 * s; // pin the absmax so the draft scale is exactly 2^e
+}
+
+/// Greedy next token off one logits row — `Session::next_token`'s
+/// last-max-wins argmax.
+fn argmax_row(row: &[f32]) -> i32 {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i as i32)
+        .unwrap()
+}
+
+/// Self-speculative decode at the d512 preset on a **draft-lossless**
+/// fixture: every linear is quantized all-FP8 with block values pinned to
+/// the NVFP4 lattice ([`fp4_lattice_block`]), so the all-NVFP4 draft view
+/// decodes bit-identically to the target and every round accepts all k−1
+/// guesses — the round is measured at its accept ceiling. One round =
+/// session fork + (k−1) occupancy-1 draft steps off the NVFP4 view + one
+/// k-row batched verify over the real cache + the rollback truncate —
+/// exactly `SpecEngine::decode_step`'s datapath. The plain side decodes
+/// the same k tokens with k occupancy-1 FGMP steps over the same packed
+/// target; their per-token min-time ratio is `speedup_decode_spec_occ1_
+/// d512` (CI floor 1.5). `draft_view_shrink_d512` prices the draft view
+/// against the paper-mix (30% FP8) tensor it derives from (floor 1.15).
+pub fn spec_benches(suite: &mut BenchSuite, budget: Duration) {
+    use crate::model::forward::{forward_extend_batch, QuantInputs};
+    use crate::model::kv::KvPool;
+
+    let k = 4usize;
+    let mut rng = Rng::new(47);
+    let (arch, dense) = d512_model(&mut rng);
+    let linears = arch.linears();
+
+    // Lattice-pinned all-FP8 packed linears + their all-NVFP4 draft view.
+    let packed: Vec<(String, PackedPanels)> = linears
+        .iter()
+        .map(|l| {
+            let mut w = vec![0.0f32; l.n_out * l.k_in];
+            for b in w.chunks_exact_mut(BLOCK) {
+                fp4_lattice_block(&mut rng, b);
+            }
+            let prec = vec![Precision::Fp8; l.n_out * (l.k_in / BLOCK)];
+            let t = FgmpTensor::pack(&[l.n_out, l.k_in], &w, &prec, None);
+            (format!("{}.w", l.name), PackedPanels::from_tensor(&t, kernels::NR))
+        })
+        .collect();
+    let drafts: Vec<(String, PackedPanels)> =
+        packed.iter().map(|(n, p)| (n.clone(), p.to_all_fp4())).collect();
+
+    let mut pm = Params::new();
+    let mut pm_d = Params::new();
+    for (n, v) in &dense {
+        if !packed.iter().any(|(pn, _)| pn == n) {
+            pm.insert_dense(n, v);
+            pm_d.insert_dense(n, v);
+        }
+    }
+    for (n, p) in &packed {
+        pm.insert_packed(n, p);
+    }
+    for (n, p) in &drafts {
+        pm_d.insert_packed(n, p);
+    }
+    let aw: Vec<Vec<f32>> = linears.iter().map(|l| vec![1.0f32; l.k_in]).collect();
+    let awr: Vec<&[f32]> = aw.iter().map(|v| v.as_slice()).collect();
+    let thr = vec![0.3f32; linears.len()];
+    let q = QuantInputs { act_weights: awr, thresholds: &thr, attn_threshold: None };
+
+    // One paged FP8-KV session at fixed fill — the serving decode shape.
+    let prompt_len = 16usize;
+    let prompt: Vec<i32> = (0..prompt_len).map(|i| ((i * 7) % arch.vocab) as i32).collect();
+    let pages = 8 * KvPool::pages_for_session(arch.n_layers, arch.max_seq);
+    let pool = KvPool::new(&arch, KvPrecision::Fp8, pages);
+    let mut kv = KvState::new_paged(&arch, &pool);
+    forward_prefill(&arch, &pm, &prompt, Some(&q), &mut kv).expect("spec prefill");
+
+    // Fixture sanity outside the timed region: off the lattice weights the
+    // draft chain must equal the target chain token for token — that (not
+    // hope) is what pins the measured round at full accept.
+    let chain_of = |pmx: &Params<'_>, kv: &KvState| -> Vec<i32> {
+        let mut f = kv.fork().expect("fork for chain check");
+        let mut t = 1i32;
+        let mut chain = vec![t];
+        for _ in 1..k {
+            let out = forward_step(&arch, pmx, t, &mut f, Some(&q)).unwrap();
+            t = argmax_row(&out.logits);
+            chain.push(t);
+        }
+        chain
+    };
+    assert_eq!(
+        chain_of(&pm, &kv),
+        chain_of(&pm_d, &kv),
+        "lattice fixture must make the NVFP4 draft lossless"
+    );
+
+    // Plain side: the same k tokens, one greedy FGMP step at a time.
+    let plain = bench(names::DECODE_SPEC_PLAIN, Some(k as u64), budget, || {
+        let mut t = 1i32;
+        for _ in 0..k {
+            let out = forward_step(&arch, &pm, t, &mut kv, Some(&q)).unwrap();
+            t = argmax_row(&out.logits);
+        }
+        black_box(t);
+        kv.truncate(prompt_len);
+    });
+
+    // Speculative side: one full-accept round producing the same k tokens
+    // (the chain head rides in free on the previous round's logits).
+    let spec = bench(names::DECODE_SPEC_ROUND, Some(k as u64), budget, || {
+        let mut draft = kv.fork().expect("draft fork");
+        let mut chain = Vec::with_capacity(k);
+        let mut t = 1i32;
+        chain.push(t);
+        for _ in 1..k {
+            let out = forward_step(&arch, &pm_d, t, &mut draft, Some(&q)).unwrap();
+            t = argmax_row(&out.logits);
+            chain.push(t);
+        }
+        drop(draft); // draft pages return to the pool before the verify
+        {
+            let mut kvs: Vec<&mut KvState> = vec![&mut kv];
+            let c: &[i32] = &chain;
+            black_box(forward_extend_batch(&arch, &pm, &[c], &mut kvs, Some(&q)).unwrap());
+        }
+        kv.truncate(prompt_len); // rollback + fixed-fill reset in one
+    });
+    pair(suite, names::SPEEDUP_DECODE_SPEC, plain, spec);
+
+    // Draft-view weight memory at the paper's 30% FP8 serving mix:
+    // resident bytes of the mixed execution tensor over its all-NVFP4
+    // draft view (computed arithmetically — same number serve reports).
+    let w = rng.normal_vec(512 * 1536, 0.05);
+    let (panels, _) = quantized_panels(&w, 512, 1536);
+    let shrink = panels.resident_bytes() as f64 / panels.all_fp4_resident_bytes() as f64;
+    println!(
+        "  -> {} {shrink:.3} ({} B mixed vs {} B draft view)",
+        names::DRAFT_VIEW_SHRINK,
+        panels.resident_bytes(),
+        panels.all_fp4_resident_bytes()
+    );
+    suite.derive(names::DRAFT_VIEW_SHRINK, shrink);
+
+    suite.set_meta("spec.k", "4");
+    suite.set_meta("spec.kv", "fp8-paged");
+    suite.set_meta("spec.weights", "all-fp8 pinned to the nvfp4 lattice (lossless draft)");
 }
 
 #[cfg(test)]
@@ -651,5 +943,71 @@ mod tests {
             .derived
             .get(names::SCALING_EFF_DECODE_W2)
             .is_some_and(|&v| v >= 1.15));
+        // The self-speculative decode floors: a full-accept k=4 round must
+        // beat token-at-a-time decode by 1.5x, and the all-NVFP4 draft
+        // view must be a real memory shrink over the paper-mix tensor.
+        assert!(baseline.derived.get(names::SPEEDUP_DECODE_SPEC).is_some_and(|&v| v >= 1.5));
+        assert!(baseline.derived.get(names::DRAFT_VIEW_SHRINK).is_some_and(|&v| v >= 1.15));
+    }
+
+    #[test]
+    fn groups_cover_exactly_the_canonical_names() {
+        // The `--filter` registry and the canonical name lists must agree:
+        // every bench and derived metric belongs to exactly one group, so
+        // any baseline name a filter substring matches is guaranteed to be
+        // produced by the groups that same substring selects.
+        let mut benches: Vec<&str> = Vec::new();
+        let mut derived: Vec<&str> = Vec::new();
+        for (_, _, b, d) in GROUPS {
+            benches.extend_from_slice(b);
+            derived.extend_from_slice(d);
+        }
+        let mut all = names::ALL.to_vec();
+        let mut all_derived = names::ALL_DERIVED.to_vec();
+        benches.sort_unstable();
+        derived.sort_unstable();
+        all.sort_unstable();
+        all_derived.sort_unstable();
+        assert_eq!(benches, all, "GROUPS bench names out of sync with names::ALL");
+        assert_eq!(derived, all_derived, "GROUPS derived names out of sync");
+    }
+
+    #[test]
+    fn filter_selects_by_group_bench_and_derived_names() {
+        let sel = |sub: &str| -> Vec<&str> {
+            GROUPS
+                .iter()
+                .filter(|(g, _, b, d)| group_matches(Some(sub), g, b, d))
+                .map(|(g, _, _, _)| *g)
+                .collect()
+        };
+        assert_eq!(sel("spec"), vec!["spec"], "group name hit");
+        assert_eq!(sel("longctx"), vec!["longctx"], "bench-name hit");
+        assert_eq!(sel("shrink"), vec!["spec"], "derived-only names select their group");
+        assert_eq!(sel("no_such_bench"), Vec::<&str>::new());
+        // No filter runs everything.
+        assert!(GROUPS.iter().all(|(g, _, b, d)| group_matches(None, g, b, d)));
+    }
+
+    #[test]
+    fn lattice_draft_view_is_lossless() {
+        // The property the spec bench fixture (and its 1.5x floor at full
+        // accept) stands on: an all-FP8 tensor whose blocks sit on the
+        // NVFP4 lattice with absmax 6·2^e re-quantizes to the all-NVFP4
+        // draft view with zero error — the two packed forms decode to
+        // bit-identical f32 weights.
+        let (k, n) = (64usize, 48usize);
+        let mut rng = Rng::new(9);
+        let mut w = vec![0.0f32; n * k];
+        for b in w.chunks_exact_mut(BLOCK) {
+            fp4_lattice_block(&mut rng, b);
+        }
+        let prec = vec![Precision::Fp8; n * (k / BLOCK)];
+        let t = FgmpTensor::pack(&[n, k], &w, &prec, None);
+        let p = PackedPanels::from_tensor(&t, kernels::NR);
+        let d = p.to_all_fp4();
+        assert_eq!(p.unpack_kn(), d.unpack_kn(), "draft view must decode bit-identically");
+        assert!(d.resident_bytes() < p.resident_bytes(), "draft view must shrink");
+        assert_eq!(d.resident_bytes(), p.all_fp4_resident_bytes());
     }
 }

@@ -38,6 +38,9 @@ struct Inner {
     // KV read traffic at stored precision (attention inputs).
     kv_read_tokens: u64,
     kv_bits_weighted: f64,
+    // Speculative decoding (draft/verify rounds).
+    spec_drafted: u64,
+    spec_accepted: u64,
 }
 
 /// A point-in-time snapshot.
@@ -88,6 +91,15 @@ pub struct Snapshot {
     /// KV cache across decode steps — the *stored* precision (FP16, FP8,
     /// or the attention PPU's realized FGMP mix), not the compute width.
     pub kv_read_bits_per_value: f64,
+    // --- speculative decoding (zeros on non-speculative engines) ---
+    /// Draft tokens proposed through the all-NVFP4 draft view.
+    pub spec_drafted: u64,
+    /// Drafted tokens the mixed-precision verify pass accepted.
+    pub spec_accepted: u64,
+    /// Aggregate accept rate (`accepted / drafted`) — a live accuracy
+    /// proxy for how closely the all-NVFP4 weight assignment tracks the
+    /// served FGMP mix, reported alongside the latency/energy numbers.
+    pub spec_accept_rate: f64,
 }
 
 impl Metrics {
@@ -175,6 +187,19 @@ impl Metrics {
         self.inner.lock().unwrap().deferred_admissions += n;
     }
 
+    /// One speculative round drafted `drafted` tokens and accepted
+    /// `accepted` of them (per
+    /// [`StepOut::drafted`](crate::runtime::StepOut) counters); the
+    /// running ratio is the serve report's accept rate.
+    pub fn record_spec(&self, drafted: u64, accepted: u64) {
+        if drafted == 0 {
+            return;
+        }
+        let mut m = self.inner.lock().unwrap();
+        m.spec_drafted += drafted;
+        m.spec_accepted += accepted;
+    }
+
     /// One decode step read `kv_tokens` cached tokens at a stored width of
     /// `bits_per_value` bits per cached value (token-weighted when the
     /// step's sessions mix precisions).
@@ -242,7 +267,9 @@ impl Metrics {
             decode_tok_per_s: if m.decode_busy.is_zero() {
                 0.0
             } else {
-                m.decode_rows as f64 / m.decode_busy.as_secs_f64()
+                // Speculative rounds produce their accepted tokens on top
+                // of the one-per-row a plain step yields.
+                (m.decode_rows + m.spec_accepted) as f64 / m.decode_busy.as_secs_f64()
             },
             ttft_p50_ms: pct_of(&ttfts, 0.50),
             ttft_p95_ms: pct_of(&ttfts, 0.95),
@@ -263,6 +290,13 @@ impl Metrics {
                 0.0
             } else {
                 m.kv_bits_weighted / m.kv_read_tokens as f64
+            },
+            spec_drafted: m.spec_drafted,
+            spec_accepted: m.spec_accepted,
+            spec_accept_rate: if m.spec_drafted == 0 {
+                0.0
+            } else {
+                m.spec_accepted as f64 / m.spec_drafted as f64
             },
         }
     }
@@ -302,6 +336,32 @@ mod tests {
         assert_eq!(s.kv_page_fill, 0.0);
         assert_eq!(s.deferred_admissions, 0);
         assert_eq!(s.kv_read_bits_per_value, 0.0);
+        assert_eq!(s.spec_drafted, 0);
+        assert_eq!(s.spec_accept_rate, 0.0);
+    }
+
+    #[test]
+    fn spec_accept_rate_aggregates_across_rounds() {
+        let m = Metrics::new();
+        // Two rounds: 6 drafted / 4 accepted, then 6 / 2 → 6/12 overall.
+        m.record_spec(6, 4);
+        m.record_spec(6, 2);
+        m.record_spec(0, 0); // non-speculative step: ignored
+        let s = m.snapshot();
+        assert_eq!(s.spec_drafted, 12);
+        assert_eq!(s.spec_accepted, 6);
+        assert!((s.spec_accept_rate - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accepted_tokens_count_toward_decode_throughput() {
+        let m = Metrics::new();
+        // One step advancing 2 sessions in 1s that also accepted 3 drafted
+        // tokens → 5 decode-produced tokens per second.
+        m.record_decode_step(2, 4, Duration::from_secs(1), 10.0, 20.0);
+        m.record_spec(6, 3);
+        let s = m.snapshot();
+        assert!((s.decode_tok_per_s - 5.0).abs() < 1e-9);
     }
 
     #[test]

@@ -67,6 +67,12 @@ pub struct ServerConfig {
     /// over a [`crate::runtime::ShardedEngine`] (bit-identical streams,
     /// the serve `--workers` flag).
     pub workers: usize,
+    /// Self-speculative decoding chain length (`--spec k`): `Some(k >= 2)`
+    /// wraps the generation engine in a
+    /// [`SpecEngine`](crate::runtime::SpecEngine) drafting `k-1` tokens
+    /// per round through the all-NVFP4 draft view. Streams stay bit-exact;
+    /// the accept rate lands in [`Metrics`].
+    pub spec: Option<usize>,
 }
 
 /// A running coordinator instance.
@@ -111,7 +117,8 @@ impl Server {
                     .kv(cfg.kv_precision)
                     .pages(cfg.kv_pages)
                     .attn(cfg.attn_threshold)
-                    .workers(cfg.workers);
+                    .workers(cfg.workers)
+                    .spec(cfg.spec);
                 match build_engine(&rt, &logits_spec, logits_args_tail, opts) {
                     Ok(engine) => generate_worker(cfg, engine.as_ref(), gen_rx, metrics),
                     Err(e) => {
@@ -162,6 +169,38 @@ pub fn batch_energy(
         fp8 += r8.total_energy_pj() - em.e_mux_tax * r8.vmacs as f64;
     }
     (fgmp, fp8)
+}
+
+/// Simulated accelerator energy of `m` **draft** token rows: the same
+/// datapath as [`batch_energy`]'s FGMP side but with every weight read
+/// priced at NVFP4 width (`weight_fp8 = 0`) — the all-NVFP4 draft view of
+/// a speculative round reads no E4M3 weight blocks, which is exactly where
+/// its speedup and energy advantage come from. Activation fractions reuse
+/// the round's realized per-linear mix.
+pub fn draft_energy(
+    shapes: &[LayerProfile],
+    act_fp8: &[f32],
+    m: usize,
+    em: &EnergyModel,
+) -> f64 {
+    if m == 0 {
+        return 0.0;
+    }
+    let dp = DatapathConfig::default();
+    shapes
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let job = MatmulJob {
+                m,
+                k: p.k,
+                n: p.n,
+                weight_fp8: 0.0,
+                act_fp8: act_fp8.get(i).copied().unwrap_or(0.0) as f64,
+            };
+            simulate_matmul(&dp, em, &job, true).total_energy_pj()
+        })
+        .sum()
 }
 
 /// KV-sizing dims recovered from the serving layer profiles (n_layers from
@@ -525,7 +564,7 @@ fn generate_worker<E: InferenceEngine + ?Sized>(
                 // the attention PPU's realized FGMP mix). Sharded steps
                 // report one mix entry per worker and each worker's reads
                 // are priced at its own shard width and realized mix.
-                let (e, e8) = if step.kv_mix.len() > 1 {
+                let (mut e, mut e8) = if step.kv_mix.len() > 1 {
                     decode_step_energy_tp(
                         &cfg.layer_shapes,
                         &step.act_fp8,
@@ -546,9 +585,42 @@ fn generate_worker<E: InferenceEngine + ?Sized>(
                         &cfg.energy,
                     )
                 };
+                // A speculative round does compute the plain-step pricing
+                // misses: the verify pass scores the `drafted` chain rows
+                // on top of the `rows` a plain step would, and the draft
+                // forward reads weights at NVFP4 width. The all-FP8
+                // baseline is charged the extra single-token steps it
+                // would need to produce the same `accepted` tokens.
+                if step.drafted > 0 {
+                    let (ev, _) = batch_energy(
+                        &cfg.layer_shapes,
+                        &step.act_fp8,
+                        step.drafted as usize,
+                        &cfg.energy,
+                    );
+                    e += ev
+                        + draft_energy(
+                            &cfg.layer_shapes,
+                            &step.act_fp8,
+                            step.drafted as usize,
+                            &cfg.energy,
+                        );
+                    let (_, eb) = batch_energy(
+                        &cfg.layer_shapes,
+                        &step.act_fp8,
+                        step.accepted as usize,
+                        &cfg.energy,
+                    );
+                    e8 += eb;
+                    metrics.record_spec(step.drafted, step.accepted);
+                }
                 metrics.record_decode_step(step.rows, cap, busy, e, e8);
                 metrics.record_kv_traffic(step.kv_tokens, step.kv_bits_per_value);
                 for lg in &mut live {
+                    // Speculative rounds accept extra tokens beyond the
+                    // usual one-per-step; they precede the current logits'
+                    // next_token in the stream (bit-exact greedy order).
+                    lg.produced.extend(lg.sess.take_accepted());
                     lg.produced.push(lg.sess.next_token());
                 }
                 // Pool occupancy sample for this step (paged engines).

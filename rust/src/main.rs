@@ -48,7 +48,7 @@ COMMANDS
   report     --linear blk0.fc1 --fp4 0.9 --rows 24
   serve      --fp4 0.7 --requests 64 [--gen 8] [--gen-tokens 16]
              [--kv fp16|fp8] [--decode-batch 8] [--kv-pages N]
-             [--attn-ppu T] [--workers N]
+             [--attn-ppu T] [--workers N] [--spec k]
              score + generate traffic through the coordinator: scoring
              batches the one-shot graph, generation runs the KV-cached
              continuous-batching decode loop over a paged KV arena
@@ -58,17 +58,24 @@ COMMANDS
              --attn-ppu runs the FGMP PPU over attention inputs at
              impact threshold T and prices KV reads at the realized mix;
              --workers N > 1 serves over the tensor-parallel sharded
-             engine — streams stay bit-identical to one worker)
+             engine — streams stay bit-identical to one worker;
+             --spec k >= 2 runs self-speculative decoding: k-1 tokens
+             drafted per round through the all-NVFP4 draft view of the
+             same packed weights, verified in one batched pass —
+             streams stay bit-exact and the accept rate is reported)
   generate   --prompt-len 16 --tokens 32 [--sessions 4] [--kv fp16|fp8]
-             [--kv-pages N] [--attn-ppu T] [--workers N]
+             [--kv-pages N] [--attn-ppu T] [--workers N] [--spec k]
              drive the stateful engine directly: prefill all sessions
              as one batched forward over corpus prompts, decode them
              batched, print tokens + decode throughput + pool occupancy
-             (--workers N > 1 decodes on the sharded engine)
+             (--workers N > 1 decodes on the sharded engine; --spec k
+             decodes speculatively off the all-NVFP4 draft view)
   bench      [--out .] [--name hotpath] [--budget-ms 300] [--baseline FILE]
+             [--filter substr]
              run blocked-vs-scalar kernel + forward + decode benchmarks,
              write BENCH_<name>.json; with --baseline, exit non-zero on
-             any >2x throughput regression (the CI perf gate)
+             any >2x throughput regression (the CI perf gate); --filter
+             runs only benches whose name contains substr
 
 Commands that need artifacts synthesize them on first use when the model
 directory is missing (hermetic default). Point --artifacts at a directory
@@ -136,34 +143,42 @@ impl Cli {
 
 /// Engine-facing options `serve` and `generate` share, parsed once from
 /// the same flags (`--kv`, `--kv-pages`, `--attn-ppu`, `--decode-batch`,
-/// `--workers`) instead of per-command duplicates.
+/// `--workers`, `--spec`) instead of per-command duplicates.
 struct EngineCliOpts {
     kv: KvPrecision,
     kv_pages: Option<usize>,
     attn_ppu: Option<f32>,
     decode_batch: usize,
     workers: usize,
+    spec: Option<usize>,
 }
 
 impl EngineCliOpts {
     fn parse(cli: &Cli) -> Result<EngineCliOpts> {
+        let spec = cli.opt_usize("spec");
+        if let Some(k) = spec {
+            anyhow::ensure!(k >= 2, "--spec k must be >= 2 (a round drafts k-1 tokens)");
+        }
         Ok(EngineCliOpts {
             kv: KvPrecision::parse(&cli.str("kv", "fp16"))?,
             kv_pages: cli.opt_usize("kv_pages"),
             attn_ppu: cli.flags.get("attn_ppu").and_then(|v| v.parse::<f32>().ok()),
             decode_batch: cli.usize("decode_batch", 8),
             workers: cli.usize("workers", 1).max(1),
+            spec,
         })
     }
 
     /// The single flags → [`EngineOptions`] path. `workers > 1` makes the
-    /// engine builder return the tensor-parallel sharded engine.
+    /// engine builder return the tensor-parallel sharded engine; `spec`
+    /// wraps whichever engine it returns in the speculative decoder.
     fn to_engine_options(&self) -> EngineOptions {
         EngineOptions::default()
             .kv(self.kv)
             .pages(self.kv_pages)
             .attn(self.attn_ppu)
             .workers(self.workers)
+            .spec(self.spec)
     }
 }
 
@@ -367,9 +382,7 @@ fn cmd_tasks(cli: &Cli, fp4: &[f64], max_items: usize) -> Result<()> {
 /// more than 2x against the checked-in baseline, or a derived speedup
 /// falls below its floor.
 fn cmd_bench(cli: &Cli) -> Result<()> {
-    use fgmp::benchsuite::{
-        decode_benches, kernel_benches, longctx_benches, pipeline_benches, sharded_benches,
-    };
+    use fgmp::benchsuite::run_benches;
     use fgmp::util::bench::{budget_from_env, BenchSuite};
     use std::time::Duration;
 
@@ -381,26 +394,35 @@ fn cmd_bench(cli: &Cli) -> Result<()> {
         .unwrap_or_else(|| budget_from_env(300));
     let name = cli.str("name", "hotpath");
     let out_dir = cli.str("out", ".");
+    let filter = cli.flags.get("filter").cloned();
     let mut suite = BenchSuite::new(&name);
-    println!("== fgmp bench: suite '{name}', budget {budget:?} ==");
+    match &filter {
+        Some(f) => println!("== fgmp bench: suite '{name}', budget {budget:?}, filter '{f}' =="),
+        None => println!("== fgmp bench: suite '{name}', budget {budget:?} =="),
+    }
 
-    kernel_benches(&mut suite, budget);
-    pipeline_benches(&mut suite, budget);
-    decode_benches(&mut suite, budget);
-    longctx_benches(&mut suite, budget);
-    sharded_benches(&mut suite, budget);
+    run_benches(&mut suite, budget, filter.as_deref());
+    suite.set_meta("budget_ms", budget.as_millis().to_string());
 
     let path = suite.write(&out_dir)?;
     println!("wrote {}", path.display());
 
     if let Some(bp) = cli.flags.get("baseline") {
-        let baseline = BenchSuite::load(bp)?;
+        // Under --filter, gate against the matching slice of the baseline:
+        // the groups that ran are exactly the ones producing names the
+        // same substring matches, so the sliced gate stays meaningful
+        // without failing on benches the filter deliberately skipped.
+        let mut baseline = BenchSuite::load(bp)?;
+        if let Some(sub) = filter.as_deref() {
+            baseline = baseline.filtered(sub);
+        }
         let fails = suite.check_regressions(&baseline, 2.0);
         if fails.is_empty() {
             println!(
-                "perf gate: OK ({} baseline benches, {} derived floors)",
+                "perf gate: OK ({} baseline benches, {} derived floors{})",
                 baseline.results.len(),
-                baseline.derived.len()
+                baseline.derived.len(),
+                if filter.is_some() { ", filtered" } else { "" }
             );
         } else {
             for f in &fails {
@@ -446,6 +468,7 @@ fn cmd_serve(cli: &Cli, fp4: f64, requests: usize) -> Result<()> {
         energy: fgmp::hwsim::energy::EnergyModel::default(),
         attn_threshold: eopts.attn_ppu,
         workers: eopts.workers,
+        spec: eopts.spec,
     };
     let windows = ev.eval_windows(requests.div_ceil(ev.batch));
     let seq = ev.seq;
@@ -526,6 +549,16 @@ fn cmd_serve(cli: &Cli, fp4: f64, requests: usize) -> Result<()> {
     println!("exec weights: {:.3} MiB packed in-engine ({} linears) vs {:.3} MiB f32 — {:.1}% smaller",
              wm.packed_bytes as f64 / (1 << 20) as f64, wm.linears,
              wm.f32_equiv_bytes as f64 / (1 << 20) as f64, wm.saving_vs_f32() * 100.0);
+    if let Some(k) = eopts.spec {
+        // The draft view is a second resident copy of the packed linears,
+        // every block at the uniform NVFP4 stride.
+        let draft_bytes: usize =
+            qm.linears.iter().map(|l| l.packed.all_fp4_resident_bytes()).sum();
+        println!("spec: k={k}  accept rate {:.1}% ({} accepted / {} drafted)  \
+                  draft view {:.3} MiB all-NVFP4 resident",
+                 snap.spec_accept_rate * 100.0, snap.spec_accepted, snap.spec_drafted,
+                 draft_bytes as f64 / (1 << 20) as f64);
+    }
     if snap.kv_pool_pages > 0 {
         println!("kv pool: {} pages  peak {}  occupancy {:.0}%  page fill {:.0}%  deferred {}",
                  snap.kv_pool_pages, snap.kv_pool_peak_pages,
@@ -588,6 +621,9 @@ fn cmd_generate(cli: &Cli) -> Result<()> {
             .collect();
         engine.decode_step(&mut stepping)?;
         for (slot, &i) in idx.iter().enumerate() {
+            // Speculative rounds accept extra tokens beyond one-per-step;
+            // they precede the current logits' next_token in the stream.
+            produced[i].extend(stepping[slot].take_accepted());
             produced[i].push(stepping[slot].next_token());
         }
         steps += 1;
@@ -610,6 +646,17 @@ fn cmd_generate(cli: &Cli) -> Result<()> {
             wm.linears,
             wm.f32_equiv_bytes as f64 / (1 << 20) as f64,
             wm.saving_vs_f32() * 100.0
+        );
+    }
+    if let Some(k) = engine.spec_k() {
+        let drafted: u64 = sessions.iter().map(|s| s.spec_drafted_total).sum();
+        let accepted: u64 = sessions.iter().map(|s| s.spec_accepted_total).sum();
+        let rate = if drafted > 0 { accepted as f64 / drafted as f64 } else { 0.0 };
+        println!(
+            "spec: k={k}  accept rate {:.1}% ({accepted} accepted / {drafted} drafted)  \
+             draft view {:.3} MiB all-NVFP4 resident",
+            rate * 100.0,
+            engine.spec_draft_bytes().unwrap_or(0) as f64 / (1 << 20) as f64
         );
     }
     for (i, p) in produced.iter().enumerate() {

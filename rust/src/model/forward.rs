@@ -588,12 +588,21 @@ fn rope_row(t: usize, half: usize, cos: &mut [f32], sin: &mut [f32]) {
     }
 }
 
-/// Rotary tables: `(cos, sin)`, each `s × half`, matching `model.py::_rope`.
-fn rope_tables(s: usize, half: usize) -> (Vec<f32>, Vec<f32>) {
+/// Rotary tables for positions `pos0..pos0+s`: `(cos, sin)`, each
+/// `s × half`, row `si` holding position `pos0 + si` — `pos0 = 0` matches
+/// `model.py::_rope`; nonzero starts serve the ragged cache-extension path,
+/// evaluating the same [`rope_row`] expression the incremental decode step
+/// uses, so the two agree bit-for-bit at every absolute position.
+fn rope_tables(pos0: usize, s: usize, half: usize) -> (Vec<f32>, Vec<f32>) {
     let mut cos = vec![0.0f32; s * half];
     let mut sin = vec![0.0f32; s * half];
     for t in 0..s {
-        rope_row(t, half, &mut cos[t * half..(t + 1) * half], &mut sin[t * half..(t + 1) * half]);
+        rope_row(
+            pos0 + t,
+            half,
+            &mut cos[t * half..(t + 1) * half],
+            &mut sin[t * half..(t + 1) * half],
+        );
     }
     (cos, sin)
 }
@@ -605,7 +614,7 @@ fn attention(arch: &ModelArch, qkv: &[f32], b: usize, s: usize) -> Vec<f32> {
     let dh = arch.head_dim();
     let half = dh / 2;
     let rope = arch.pos == PosKind::Rope;
-    let (cos, sin) = if rope { rope_tables(s, half) } else { (Vec::new(), Vec::new()) };
+    let (cos, sin) = if rope { rope_tables(0, s, half) } else { (Vec::new(), Vec::new()) };
     let scale = 1.0 / (dh as f32).sqrt();
 
     let pairs: Vec<(usize, usize)> =
@@ -738,18 +747,24 @@ fn attend_view(
     }
 }
 
-/// Prefill attention over `s` fused qkv rows `(s, 3D)` → `(s, D)` (one
-/// sequence), appending every position's post-RoPE key and value to `lkv`
-/// and attending over the cache *as stored* — FP8 caches are read as raw
-/// E4M3 bytes through the LUT-in-loop kernels, never materialized to f32 —
-/// so an FP8 cache sees its own round-tripped keys/values from the first
-/// token, consistent with later decode steps. With an FP16 cache this is
-/// bit-identical to [`attention`]. `attn_ppu` is the optional attention
-/// PPU threshold from [`QuantInputs::attn_threshold`].
+/// Prefill/extend attention over `s` fused qkv rows `(s, 3D)` → `(s, D)`
+/// (one sequence), appending every position's post-RoPE key and value to
+/// `lkv` and attending over the cache *as stored* — FP8 caches are read as
+/// raw E4M3 bytes through the LUT-in-loop kernels, never materialized to
+/// f32 — so an FP8 cache sees its own round-tripped keys/values from the
+/// first token, consistent with later decode steps. The new rows occupy
+/// absolute positions `pos0..pos0+s`; `pos0 = 0` over an empty cache is
+/// prefill (with an FP16 cache, bit-identical to [`attention`]), `pos0 =
+/// rows-already-cached` extends a live session — row `si` rotates at
+/// position `pos0+si` and attends over `pos0+si+1` cached rows, the exact
+/// arithmetic `s` sequential [`attention_step`] calls would do (property:
+/// the speculative verify pass rests on this agreement). `attn_ppu` is the
+/// optional attention PPU threshold from [`QuantInputs::attn_threshold`].
 fn attention_prefill(
     arch: &ModelArch,
     qkv: &[f32],
     s: usize,
+    pos0: usize,
     lkv: &mut LayerKv,
     attn_ppu: Option<f32>,
 ) -> Vec<f32> {
@@ -758,8 +773,9 @@ fn attention_prefill(
     let dh = arch.head_dim();
     let half = dh / 2;
     let rope = arch.pos == PosKind::Rope;
-    let (cos, sin) = if rope { rope_tables(s, half) } else { (Vec::new(), Vec::new()) };
+    let (cos, sin) = if rope { rope_tables(pos0, s, half) } else { (Vec::new(), Vec::new()) };
     let scale = 1.0 / (dh as f32).sqrt();
+    debug_assert_eq!(lkv.k.rows(), pos0, "pos0 must continue the cached rows");
 
     // Split fused rows; rotate q and k per head; PPU-assign blocks when the
     // attention PPU is on; append k/v to the cache.
@@ -809,14 +825,14 @@ fn attention_prefill(
     let heads: Vec<usize> = (0..h).collect();
     let outs = par_map(&heads, |&hi| {
         let mut o = vec![0.0f32; s * dh];
-        let mut sc = vec![0.0f32; s];
+        let mut sc = vec![0.0f32; pos0 + s];
         for si in 0..s {
             let qr = &q[si * d + hi * dh..si * d + (hi + 1) * dh];
             attend_view(
                 qr,
                 &kview,
                 &vview,
-                si + 1,
+                pos0 + si + 1,
                 d,
                 hi,
                 dh,
@@ -1273,7 +1289,7 @@ pub fn forward_prefill(
     };
     for (l, lkv) in kv.layers.iter_mut().enumerate() {
         block_forward(arch, params, l, &mut x, &mut li, &mut lin, |qkv| {
-            attention_prefill(arch, qkv, s, lkv, attn_ppu)
+            attention_prefill(arch, qkv, s, 0, lkv, attn_ppu)
         })?;
     }
     kv.advance(s);
@@ -1363,6 +1379,7 @@ pub fn forward_prefill_batch(
                     arch,
                     &qkv[off * 3 * d..(off + s_i) * 3 * d],
                     s_i,
+                    0,
                     lkv,
                     attn_ppu,
                 );
@@ -1448,6 +1465,110 @@ pub fn forward_step(
     quant: Option<&QuantInputs<'_>>,
 ) -> Result<ForwardOut> {
     forward_step_batch(arch, params, &[token], &mut [kv], quant)
+}
+
+/// Extend `n` live sessions by their drafted token chains in one batched
+/// ragged forward — the speculative **verify pass**. Chain `i` appends
+/// `chains[i].len()` rows to session `i`'s cache starting at its current
+/// length, the four linears of every block run as one `(Σkᵢ, K)` blocked
+/// matmul over all chains (the same admission-amortization batched prefill
+/// gets), and attention extends each cache via [`attention_prefill`] with
+/// `pos0 = kv.len()`. Returns logits for **every** row — `(Σkᵢ, V)` in
+/// chain order, row `j` of chain `i` scoring the next token after
+/// `chains[i][..=j]` — so one pass prices all k drafted positions.
+///
+/// Bit-exact against feeding the same tokens through `chains[i].len()`
+/// sequential [`forward_step_batch`] calls: rotation, cache append order,
+/// PPU decisions, and attention accumulation all evaluate the identical
+/// per-position expressions (property-tested in `tests/decode_props.rs`;
+/// the speculative decoder's exact-match acceptance rests on this).
+/// Reservations happen for every session before any compute, so
+/// [`KvPoolExhausted`] leaves all caches untouched (possibly with unused
+/// reservation slack, which `truncate` returns).
+///
+/// [`KvPoolExhausted`]: crate::model::kv::KvPoolExhausted
+pub fn forward_extend_batch(
+    arch: &ModelArch,
+    params: &Params<'_>,
+    chains: &[&[i32]],
+    kvs: &mut [&mut KvState],
+    quant: Option<&QuantInputs<'_>>,
+) -> Result<ForwardOut> {
+    let n = chains.len();
+    anyhow::ensure!(n > 0, "batched extend needs at least one chain");
+    anyhow::ensure!(kvs.len() == n, "chains/sessions length mismatch");
+    let starts: Vec<usize> = kvs.iter().map(|kv| kv.len()).collect();
+    for (i, (c, kv)) in chains.iter().zip(kvs.iter()).enumerate() {
+        anyhow::ensure!(!c.is_empty(), "chain {i}: extend needs at least one token");
+        anyhow::ensure!(!kv.is_empty(), "session {i}: extend before prefill");
+        anyhow::ensure!(
+            starts[i] + c.len() <= arch.max_seq,
+            "session {i}: extend to {} exceeds max_seq {}",
+            starts[i] + c.len(),
+            arch.max_seq
+        );
+        anyhow::ensure!(kv.layers.len() == arch.n_layers, "session {i}: cache layer count");
+    }
+    for (kv, c) in kvs.iter_mut().zip(chains) {
+        kv.reserve(c.len())?;
+    }
+
+    let linears = arch.linears();
+    if let Some(q) = quant {
+        anyhow::ensure!(q.act_weights.len() == linears.len(), "act_weights count");
+        anyhow::ensure!(q.thresholds.len() == linears.len(), "thresholds count");
+        ensure_attn_ppu_shape(arch, q)?;
+    }
+    let attn_ppu = quant.and_then(|q| q.attn_threshold);
+    let mut fracs = vec![0.0f32; if quant.is_some() { linears.len() } else { 0 }];
+
+    // Ragged layout: chain i owns rows offs[i]..offs[i]+lens[i], at
+    // absolute positions starts[i]..starts[i]+lens[i].
+    let lens: Vec<usize> = chains.iter().map(|c| c.len()).collect();
+    let mut offs = Vec::with_capacity(n);
+    let mut tokens: Vec<i32> = Vec::new();
+    let mut positions: Vec<usize> = Vec::new();
+    let mut m = 0usize;
+    for (c, &st) in chains.iter().zip(&starts) {
+        offs.push(m);
+        tokens.extend_from_slice(c);
+        positions.extend(st..st + c.len());
+        m += c.len();
+    }
+
+    let mut x = embed_rows(arch, params, &tokens, &positions)?;
+    let mut li = 0usize;
+    let mm_scratch = MatmulScratch::new();
+    let d = arch.d_model;
+    let mut lin = |h: &[f32], li: usize| {
+        apply_linear(&linears, params, quant, h, m, li, &mut fracs, &mut None, &mm_scratch)
+    };
+    for l in 0..arch.n_layers {
+        let mut caches: Vec<&mut LayerKv> = kvs.iter_mut().map(|kv| &mut kv.layers[l]).collect();
+        block_forward(arch, params, l, &mut x, &mut li, &mut lin, |qkv| {
+            let mut out = vec![0.0f32; m * d];
+            for (i, lkv) in caches.iter_mut().enumerate() {
+                let (off, s_i) = (offs[i], lens[i]);
+                let o = attention_prefill(
+                    arch,
+                    &qkv[off * 3 * d..(off + s_i) * 3 * d],
+                    s_i,
+                    starts[i],
+                    lkv,
+                    attn_ppu,
+                );
+                out[off * d..(off + s_i) * d].copy_from_slice(&o);
+            }
+            out
+        })?;
+    }
+    for (kv, &s_i) in kvs.iter_mut().zip(&lens) {
+        kv.advance(s_i);
+    }
+    // Every row feeds the LM head: the verify pass scores all k positions.
+    let take: Vec<usize> = (0..m).collect();
+    let logits = lm_head(arch, params, &x, &take)?;
+    Ok(ForwardOut { logits, act_fp8: fracs })
 }
 
 /// Shared validation for the tensor-parallel entry points: plan/shard-arch
@@ -1600,6 +1721,7 @@ pub fn forward_prefill_batch_tp<C: Collective>(
                                 sarch,
                                 &qkv_w[off * 3 * dw..(off + s_i) * 3 * dw],
                                 s_i,
+                                0,
                                 lkv,
                                 attn_ppu,
                             );
@@ -1725,6 +1847,139 @@ pub fn forward_step_batch_tp<C: Collective>(
         }
     }
     let take: Vec<usize> = (0..n).collect();
+    let logits = lm_head(arch, params, &x, &take)?;
+    Ok(ForwardOut { logits, act_fp8: fracs })
+}
+
+/// Tensor-parallel [`forward_extend_batch`]: the speculative verify pass
+/// over per-worker KV shards (`kvs[session][worker]`). Column-sharded
+/// linears + head-split cache extension, bit-for-bit the single-worker
+/// ragged extend at any worker count (the same argument as the prefill and
+/// step TP variants: per-column dot products and per-head attention are
+/// untouched by the split).
+#[allow(clippy::too_many_arguments)]
+pub fn forward_extend_batch_tp<C: Collective>(
+    arch: &ModelArch,
+    shard_arches: &[ModelArch],
+    plan: &ShardPlan,
+    params: &Params<'_>,
+    coll: &C,
+    chains: &[&[i32]],
+    kvs: &mut [Vec<&mut KvState>],
+    quant: Option<&QuantInputs<'_>>,
+) -> Result<ForwardOut> {
+    let n = chains.len();
+    anyhow::ensure!(n > 0, "batched extend needs at least one chain");
+    anyhow::ensure!(kvs.len() == n, "chains/sessions length mismatch");
+    anyhow::ensure!(coll.world() == plan.world, "collective world != shard plan world");
+    ensure_tp_shapes(arch, shard_arches, plan, quant)?;
+    let active = shard_arches.len();
+    let mut starts = Vec::with_capacity(n);
+    for (i, (c, shards)) in chains.iter().zip(kvs.iter()).enumerate() {
+        anyhow::ensure!(!c.is_empty(), "chain {i}: extend needs at least one token");
+        anyhow::ensure!(shards.len() == active, "session {i}: shard count != active workers");
+        let len0 = shards.first().map(|kv| kv.len()).unwrap_or(0);
+        anyhow::ensure!(len0 > 0, "session {i}: extend before prefill");
+        anyhow::ensure!(
+            len0 + c.len() <= arch.max_seq,
+            "session {i}: extend to {} exceeds max_seq {}",
+            len0 + c.len(),
+            arch.max_seq
+        );
+        for (w, kv) in shards.iter().enumerate() {
+            anyhow::ensure!(kv.len() == len0, "session {i} shard {w}: shard lengths diverged");
+            anyhow::ensure!(
+                kv.layers.len() == arch.n_layers,
+                "session {i} shard {w}: cache layer count"
+            );
+        }
+        starts.push(len0);
+    }
+    for (shards, c) in kvs.iter_mut().zip(chains) {
+        for kv in shards.iter_mut() {
+            kv.reserve(c.len())?;
+        }
+    }
+
+    let linears = arch.linears();
+    if let Some(q) = quant {
+        anyhow::ensure!(q.act_weights.len() == linears.len(), "act_weights count");
+        anyhow::ensure!(q.thresholds.len() == linears.len(), "thresholds count");
+    }
+    let attn_ppu = quant.and_then(|q| q.attn_threshold);
+    let mut fracs = vec![0.0f32; if quant.is_some() { linears.len() } else { 0 }];
+
+    let lens: Vec<usize> = chains.iter().map(|c| c.len()).collect();
+    let mut offs = Vec::with_capacity(n);
+    let mut tokens: Vec<i32> = Vec::new();
+    let mut positions: Vec<usize> = Vec::new();
+    let mut m = 0usize;
+    for (c, &st) in chains.iter().zip(&starts) {
+        offs.push(m);
+        tokens.extend_from_slice(c);
+        positions.extend(st..st + c.len());
+        m += c.len();
+    }
+
+    let mut x = embed_rows(arch, params, &tokens, &positions)?;
+    let mut li = 0usize;
+    let mm_scratch = MatmulScratch::new();
+    let d = arch.d_model;
+    let dh = arch.head_dim();
+    let mut lin = |h: &[f32], li: usize| {
+        apply_linear_tp(&linears, params, quant, h, m, li, &mut fracs, &mm_scratch, coll)
+    };
+    for l in 0..arch.n_layers {
+        let mut caches: Vec<Vec<&mut LayerKv>> =
+            (0..active).map(|_| Vec::with_capacity(n)).collect();
+        for shards in kvs.iter_mut() {
+            for (w, kv) in shards.iter_mut().enumerate() {
+                caches[w].push(&mut kv.layers[l]);
+            }
+        }
+        block_forward(arch, params, l, &mut x, &mut li, &mut lin, |qkv| {
+            let jobs: Vec<Job<'_, Vec<f32>>> = caches
+                .into_iter()
+                .enumerate()
+                .map(|(w, mut cache_w)| {
+                    let sarch = &shard_arches[w];
+                    let (h0, _) = plan.heads[w];
+                    let dw = sarch.d_model;
+                    let qkv_w = gather_qkv_cols(qkv, m, d, h0 * dh, h0 * dh + dw);
+                    let (offs, lens, starts) = (&offs, &lens, &starts);
+                    Box::new(move || {
+                        let mut out_w = vec![0.0f32; m * dw];
+                        for (i, lkv) in cache_w.iter_mut().enumerate() {
+                            let (off, s_i) = (offs[i], lens[i]);
+                            let o = attention_prefill(
+                                sarch,
+                                &qkv_w[off * 3 * dw..(off + s_i) * 3 * dw],
+                                s_i,
+                                starts[i],
+                                lkv,
+                                attn_ppu,
+                            );
+                            out_w[off * dw..(off + s_i) * dw].copy_from_slice(&o);
+                        }
+                        out_w
+                    }) as Job<'_, Vec<f32>>
+                })
+                .collect();
+            let outs = coll.run(jobs);
+            let mut mixed = vec![0.0f32; m * d];
+            for (w, o) in outs.iter().enumerate() {
+                let (h0, _) = plan.heads[w];
+                scatter_cols(o, m, shard_arches[w].d_model, &mut mixed, d, h0 * dh);
+            }
+            mixed
+        })?;
+    }
+    for (shards, &s_i) in kvs.iter_mut().zip(&lens) {
+        for kv in shards.iter_mut() {
+            kv.advance(s_i);
+        }
+    }
+    let take: Vec<usize> = (0..m).collect();
     let logits = lm_head(arch, params, &x, &take)?;
     Ok(ForwardOut { logits, act_fp8: fracs })
 }
@@ -1936,6 +2191,98 @@ mod tests {
         assert_eq!(back.norm, arch.norm);
         assert_eq!(back.pos, arch.pos);
         assert_eq!(back.param_names(), arch.param_names());
+    }
+
+    #[test]
+    fn extend_batch_matches_sequential_steps() {
+        use crate::model::kv::KvPrecision;
+        use crate::quant::{FgmpTensor, Precision};
+
+        // The speculative verify pass in miniature: a ragged batched extend
+        // over two live sessions must produce, row for row, the exact logits
+        // that stepping the same tokens one at a time would — across both KV
+        // precisions, over packed weights, with the attention PPU on.
+        let arch = ModelArch { n_layers: 2, ..tiny_arch() };
+        let dense = random_params(&arch, 41);
+        let linears = arch.linears();
+        let mut rng = Rng::new(43);
+        let packed: Vec<(String, PackedPanels)> = linears
+            .iter()
+            .map(|l| {
+                let kb = l.k_in / BLOCK;
+                let w = rng.normal_vec(l.n_out * l.k_in, 0.1);
+                let prec: Vec<Precision> = (0..l.n_out * kb)
+                    .map(|i| if i % 3 == 0 { Precision::Fp8 } else { Precision::Fp4 })
+                    .collect();
+                let t = FgmpTensor::pack(&[l.n_out, l.k_in], &w, &prec, None);
+                (format!("{}.w", l.name), PackedPanels::from_tensor(&t, kernels::NR))
+            })
+            .collect();
+        let mut pm = Params::new();
+        for (n, v) in &dense {
+            if !n.contains("qkv_proj") && !n.contains("o_proj") && !n.contains("fc") {
+                pm.insert_dense(n, v);
+            }
+        }
+        for (n, p) in &packed {
+            pm.insert_packed(n, p);
+        }
+        let aw: Vec<Vec<f32>> = linears.iter().map(|l| vec![1.0f32; l.k_in]).collect();
+        let awr: Vec<&[f32]> = aw.iter().map(|v| v.as_slice()).collect();
+        let thr = vec![0.3f32; linears.len()];
+        let q = QuantInputs { act_weights: awr, thresholds: &thr, attn_threshold: Some(0.5) };
+
+        let prompts: Vec<Vec<i32>> = vec![(1..6).collect(), (2..9).collect()];
+        let prefs: Vec<&[i32]> = prompts.iter().map(|p| p.as_slice()).collect();
+        let chains: Vec<Vec<i32>> = vec![vec![4, 9, 2], vec![7, 1]];
+        let crefs: Vec<&[i32]> = chains.iter().map(|c| c.as_slice()).collect();
+
+        for precision in [KvPrecision::Fp16, KvPrecision::Fp8] {
+            // Oracle: prefill, then feed each chain token one step at a time.
+            let mut kv_seq: Vec<KvState> =
+                prompts.iter().map(|_| KvState::new(&arch, precision)).collect();
+            {
+                let mut kvs: Vec<&mut KvState> = kv_seq.iter_mut().collect();
+                forward_prefill_batch(&arch, &pm, &prefs, Some(&q), &mut kvs).unwrap();
+            }
+            let mut want: Vec<Vec<Vec<f32>>> = Vec::new(); // [session][step] -> logits row
+            for (kv, chain) in kv_seq.iter_mut().zip(&chains) {
+                let mut rows = Vec::new();
+                for &t in chain.iter() {
+                    let out = forward_step(&arch, &pm, t, kv, Some(&q)).unwrap();
+                    rows.push(out.logits);
+                }
+                want.push(rows);
+            }
+
+            // Extend: same tokens in one ragged batched pass.
+            let mut kv_ext: Vec<KvState> =
+                prompts.iter().map(|_| KvState::new(&arch, precision)).collect();
+            {
+                let mut kvs: Vec<&mut KvState> = kv_ext.iter_mut().collect();
+                forward_prefill_batch(&arch, &pm, &prefs, Some(&q), &mut kvs).unwrap();
+                let out = forward_extend_batch(&arch, &pm, &crefs, &mut kvs, Some(&q)).unwrap();
+                let v = arch.vocab;
+                let mut off = 0usize;
+                for (i, chain) in chains.iter().enumerate() {
+                    for (j, row) in want[i].iter().enumerate() {
+                        let got = &out.logits[(off + j) * v..(off + j + 1) * v];
+                        assert_eq!(got, row.as_slice(), "chain {i} step {j} {precision:?}");
+                    }
+                    off += chain.len();
+                }
+            }
+            // Caches end bit-identical to the sequential path.
+            for (i, (a, b)) in kv_ext.iter().zip(&kv_seq).enumerate() {
+                assert_eq!(a.len(), b.len(), "session {i} len");
+                assert_eq!(a.stored_bits(), b.stored_bits(), "session {i} stored bits");
+                assert_eq!(
+                    a.effective_kv_bits(),
+                    b.effective_kv_bits(),
+                    "session {i} effective bits"
+                );
+            }
+        }
     }
 
     #[test]

@@ -531,6 +531,42 @@ impl KvBuf {
         self.ppu_blocks = 0;
     }
 
+    /// Fork a *paged* buffer onto freshly-allocated pages of the same pool:
+    /// the caller hands in exactly `pages_for_tokens(rows)` page ids (from
+    /// one grouped all-or-nothing grab) and the live spans are byte-copied
+    /// arena-to-arena under the pool lock. Unlike [`Clone`] — which
+    /// snapshots to a flat buffer — the fork stays paged, so the draft
+    /// session it backs has the same storage shape, backpressure behavior
+    /// and page accounting as its parent.
+    fn fork_paged(&self, pool: &Arc<KvPool>, pages: Vec<u32>) -> KvBuf {
+        let (src_spans, rows) = match &self.data {
+            KvData::Paged(p) => {
+                debug_assert!(std::ptr::eq(Arc::as_ptr(&p.pool), Arc::as_ptr(pool)));
+                (p.live_spans(self.width), p.rows)
+            }
+            _ => unreachable!("fork_paged on a flat buffer"),
+        };
+        debug_assert_eq!(pages.len(), KvPool::pages_for_tokens(rows));
+        let dst = PagedStore { pool: pool.clone(), pages, rows };
+        let dst_spans = dst.live_spans(self.width);
+        let mut g = pool.inner.lock().unwrap();
+        for (&(sb, st), &(db, dt)) in src_spans.iter().zip(&dst_spans) {
+            debug_assert_eq!(st, dt, "fork spans walk the same page grid");
+            // Freshly-allocated destination pages are disjoint from the
+            // source's, so copy_within never overlaps.
+            match pool.precision {
+                KvPrecision::Fp16 => g.f32_data.copy_within(sb..sb + st, db),
+                KvPrecision::Fp8 => g.u8_data.copy_within(sb..sb + st, db),
+            }
+        }
+        KvBuf {
+            data: KvData::Paged(dst),
+            width: self.width,
+            ppu_hi_blocks: self.ppu_hi_blocks,
+            ppu_blocks: self.ppu_blocks,
+        }
+    }
+
     fn truncate_rows(&mut self, len: usize) {
         let before = self.rows();
         match &mut self.data {
@@ -744,6 +780,39 @@ impl KvState {
     pub(crate) fn advance(&mut self, rows: usize) {
         self.len += rows;
         debug_assert!(self.layers.iter().all(|l| l.k.rows() == self.len && l.v.rows() == self.len));
+    }
+
+    /// Fork this cache into an independent same-shape snapshot — the
+    /// speculative-decode draft primitive ([`KvState::truncate`] is its
+    /// rollback counterpart). Flat caches clone their buffers. Paged caches
+    /// stay **paged**: fresh pages are taken from the same pool in one
+    /// grouped all-or-nothing grab (exactly the pages live rows need —
+    /// reservation slack is not inherited), then live spans are byte-copied
+    /// inside the arena. On [`KvPoolExhausted`] nothing changed, so callers
+    /// can fall back to non-speculative decoding under pool pressure; the
+    /// parent is untouched either way. A future prefix-sharing pool would
+    /// replace the byte copy with refcounted page mappings — this method is
+    /// that seam.
+    pub fn fork(&self) -> Result<KvState, KvPoolExhausted> {
+        if !self.is_paged() {
+            return Ok(self.clone());
+        }
+        let pool = match &self.layers[0].k.data {
+            KvData::Paged(p) => p.pool.clone(),
+            _ => unreachable!("is_paged checked above"),
+        };
+        let per_buf = KvPool::pages_for_tokens(self.len);
+        let mut grabbed = pool.alloc(per_buf * 2 * self.layers.len())?;
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| LayerKv {
+                k: l.k.fork_paged(&pool, grabbed.drain(..per_buf).collect()),
+                v: l.v.fork_paged(&pool, grabbed.drain(..per_buf).collect()),
+            })
+            .collect();
+        debug_assert!(grabbed.is_empty());
+        Ok(KvState { layers, precision: self.precision, len: self.len })
     }
 
     /// Drop cached tokens beyond `len` (newest first) — the rollback seam
@@ -1024,6 +1093,102 @@ mod tests {
         flat.truncate(1);
         assert_eq!(flat.len(), 1);
         assert_eq!(flat.stored_bits(), (2 * a.n_layers * a.d_model * 8) as u64);
+    }
+
+    #[test]
+    fn fork_is_paged_bit_identical_and_independent() {
+        let a = arch();
+        for prec in [KvPrecision::Fp16, KvPrecision::Fp8] {
+            let pool = KvPool::new(&a, prec, 64);
+            let mut kv = KvState::new_paged(&a, &pool);
+            let n = PAGE_TOKENS + 5; // multi-page with a partial tail
+            kv.reserve(n).unwrap();
+            let mut rng = Rng::new(31);
+            push_rows(&mut kv, &mut rng, n, a.d_model);
+            kv.layers[0].k.note_ppu(3, 7);
+
+            let held = pool.stats().in_use_pages;
+            let fork = kv.fork().unwrap();
+            assert!(fork.is_paged(), "fork keeps the paged shape");
+            assert_eq!(fork.len(), kv.len());
+            assert_eq!(fork.kv_pages(), kv.kv_pages(), "fork holds live-row pages only");
+            assert_eq!(pool.stats().in_use_pages, held + fork.kv_pages());
+            assert_eq!(fork.layers[0].k.ppu_counts(), (3, 7), "PPU counters carried");
+
+            // Values bit-identical, pages distinct.
+            let (mut s1, mut s2) = (Vec::new(), Vec::new());
+            for l in 0..a.n_layers {
+                let want = kv.layers[l].v.materialize(&mut s1).to_vec();
+                let got = fork.layers[l].v.materialize(&mut s2).to_vec();
+                assert_eq!(want.len(), got.len());
+                for (w, g) in want.iter().zip(&got) {
+                    assert_eq!(w.to_bits(), g.to_bits(), "{prec:?} layer {l}");
+                }
+            }
+
+            // Writes into the fork never reach the parent.
+            let mut fork = fork;
+            let before = kv.layers[1].k.materialize(&mut s1).to_vec();
+            let row = vec![9.0f32; a.d_model];
+            fork.reserve(1).unwrap();
+            for l in &mut fork.layers {
+                l.k.push_row(&row);
+                l.v.push_row(&row);
+            }
+            fork.advance(1);
+            assert_eq!(kv.layers[1].k.materialize(&mut s2), &before[..]);
+            assert_eq!(kv.len(), n);
+
+            // Dropping the fork returns every page it held.
+            drop(fork);
+            assert_eq!(pool.stats().in_use_pages, held, "fork pages recycled");
+
+            // Flat forks stay flat and never touch a pool.
+            let mut flat = KvState::new(&a, prec);
+            push_rows(&mut flat, &mut rng, 3, a.d_model);
+            let ff = flat.fork().unwrap();
+            assert!(!ff.is_paged());
+            assert_eq!(ff.len(), 3);
+            assert_eq!(ff.stored_bits(), flat.stored_bits());
+        }
+    }
+
+    #[test]
+    fn fork_exhaustion_is_typed_and_leaves_parent_untouched() {
+        let a = arch();
+        // A session of PAGE_TOKENS+1 rows holds 8 pages (2 pages per buffer
+        // × 2 layers × K+V); give the pool 12 so the parent fits with a
+        // partially-filled tail page, but a fork (8 more) cannot.
+        let pool = KvPool::new(&a, KvPrecision::Fp8, 12);
+        let mut kv = KvState::new_paged(&a, &pool);
+        let n = PAGE_TOKENS + 1;
+        kv.reserve(n).unwrap();
+        let mut rng = Rng::new(13);
+        push_rows(&mut kv, &mut rng, n, a.d_model);
+        let err = kv.fork().unwrap_err();
+        assert_eq!(err, KvPoolExhausted { requested: 8, free: 4 });
+        assert_eq!(pool.stats().in_use_pages, 8, "all-or-nothing: no pages leaked");
+        assert_eq!(kv.len(), n);
+        // The parent still works after the failed fork (the tail page has
+        // room, so no new reservation is needed).
+        kv.reserve(1).unwrap();
+        push_rows(&mut kv, &mut rng, 1, a.d_model);
+        assert_eq!(kv.len(), n + 1);
+    }
+
+    #[test]
+    fn fork_drops_reservation_slack() {
+        let a = arch();
+        let pool = KvPool::new(&a, KvPrecision::Fp16, 64);
+        let mut kv = KvState::new_paged(&a, &pool);
+        kv.reserve(3).unwrap();
+        let mut rng = Rng::new(17);
+        push_rows(&mut kv, &mut rng, 3, a.d_model);
+        kv.reserve(2 * PAGE_TOKENS).unwrap(); // slack the fork must not copy
+        assert_eq!(kv.kv_pages(), 3 * 2 * a.n_layers);
+        let fork = kv.fork().unwrap();
+        assert_eq!(fork.kv_pages(), 2 * a.n_layers, "fork sized by live rows");
+        assert_eq!(fork.len(), 3);
     }
 
     #[test]

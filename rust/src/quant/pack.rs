@@ -343,6 +343,87 @@ impl PackedPanels {
         self.k * self.n * 4
     }
 
+    /// Resident bytes the [`Self::to_all_fp4`] draft view of this tensor
+    /// occupies, computed without building it: every block at the uniform
+    /// NVFP4 stride (8 payload bytes + 1 scale byte), with the meta bits
+    /// and per-panel offset tables unchanged. Lets reports price the
+    /// speculative draft view's memory without re-quantizing.
+    pub fn all_fp4_resident_bytes(&self) -> usize {
+        let tables =
+            self.panel_payload_off.len() + self.panel_scale_off.len() + self.panel_block_off.len();
+        self.n_blocks * (BLOCK / 2)
+            + self.n_blocks
+            + self.meta.len()
+            + tables * std::mem::size_of::<usize>()
+    }
+
+    /// The all-NVFP4 **draft view** of this tensor: every FP8 block is
+    /// re-quantized to one NVFP4 block (decode the 16 E4M3 bytes, derive a
+    /// dynamic-max scale, re-encode as E2M1 nibbles — the exact
+    /// [`FgmpTensor::pack`] recipe), FP4 blocks are copied byte-for-byte.
+    /// The panel walk, grid and `nr` are unchanged, so the existing
+    /// LUT-decode packed matmul kernels execute it as-is; only the payload
+    /// strides become uniform (8 + 1 bytes per block), shrinking
+    /// weight-read bytes to the all-low-precision floor. This is the
+    /// self-speculative decoder's draft model: the same network, one
+    /// precision rung down, no second artifact.
+    pub fn to_all_fp4(&self) -> PackedPanels {
+        let kb_count = self.k / BLOCK;
+        let n_panels = self.n_panels();
+        let mut out = PackedPanels {
+            k: self.k,
+            n: self.n,
+            nr: self.nr,
+            meta: vec![0u8; self.n_blocks.div_ceil(8)],
+            payload: Vec::with_capacity(self.n_blocks * (BLOCK / 2)),
+            scales: Vec::with_capacity(self.n_blocks),
+            panel_payload_off: Vec::with_capacity(n_panels),
+            panel_scale_off: Vec::with_capacity(n_panels),
+            panel_block_off: Vec::with_capacity(n_panels),
+            n_blocks: self.n_blocks,
+            n_fp8: 0,
+            dense_cache: OnceLock::new(),
+        };
+        for p in 0..n_panels {
+            let nc = p * self.nr;
+            let width = self.nr.min(self.n - nc);
+            let mut off = self.panel_payload_off[p];
+            let mut sci = self.panel_scale_off[p];
+            let mut widx = self.panel_block_off[p];
+            out.panel_payload_off.push(out.payload.len());
+            out.panel_scale_off.push(out.scales.len());
+            out.panel_block_off.push(widx);
+            for _kb in 0..kb_count {
+                for _j in 0..width {
+                    if self.is_fp8_walk(widx) {
+                        let mut vals = [0.0f32; BLOCK];
+                        for (kk, v) in vals.iter_mut().enumerate() {
+                            *v = decode_e4m3(self.payload[off + kk]);
+                        }
+                        off += BLOCK;
+                        let absmax = vals.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                        let s = nvfp4_scale(absmax);
+                        out.scales.push(encode_e4m3(s));
+                        let sdec = decode_e4m3(encode_e4m3(s));
+                        let safe = if sdec > 0.0 { sdec } else { 1.0 };
+                        for pair in vals.chunks_exact(2) {
+                            let lo = encode_e2m1(pair[0] / safe);
+                            let hi = encode_e2m1(pair[1] / safe);
+                            out.payload.push(lo | (hi << 4));
+                        }
+                    } else {
+                        out.payload.extend_from_slice(&self.payload[off..off + BLOCK / 2]);
+                        off += BLOCK / 2;
+                        out.scales.push(self.scales[sci]);
+                        sci += 1;
+                    }
+                    widx += 1;
+                }
+            }
+        }
+        out
+    }
+
     /// Zero-copy view of the contiguous panel range `[p0, p1)` — the unit
     /// a tensor-parallel worker owns. Because the walk is panel-major, a
     /// panel range is a single contiguous byte-range of `payload` and
@@ -599,6 +680,100 @@ mod tests {
             assert_eq!(e.cols(), 0);
             assert!(e.payload.is_empty() && e.scales.is_empty());
         }
+    }
+
+    #[test]
+    fn to_all_fp4_rewrites_fp8_blocks_and_copies_fp4_blocks() {
+        for &(n, kb, nr, seed) in &[(23usize, 4usize, 8usize, 14u64), (9, 2, 8, 13), (16, 3, 4, 15)]
+        {
+            let k = kb * BLOCK;
+            let x = data(n * k, 6.0, seed);
+            let prec: Vec<Precision> = (0..n * kb)
+                .map(|i| {
+                    if (i * 7 + seed as usize) % 3 == 0 { Precision::Fp8 } else { Precision::Fp4 }
+                })
+                .collect();
+            let t = FgmpTensor::pack(&[n, k], &x, &prec, None);
+            let p = PackedPanels::from_tensor(&t, nr);
+            let d = p.to_all_fp4();
+            // Same walk grid, zero FP8 blocks, uniform 8+1-byte strides.
+            assert_eq!((d.k, d.n, d.nr, d.n_blocks), (p.k, p.n, p.nr, p.n_blocks));
+            assert_eq!(d.n_fp8, 0);
+            assert!(d.meta.iter().all(|&b| b == 0));
+            assert_eq!(d.payload.len(), d.n_blocks * (BLOCK / 2));
+            assert_eq!(d.scales.len(), d.n_blocks);
+            assert_eq!(d.panel_block_off, p.panel_block_off);
+            for (pi, &b0) in d.panel_block_off.iter().enumerate() {
+                assert_eq!(d.panel_payload_off[pi], b0 * (BLOCK / 2));
+                assert_eq!(d.panel_scale_off[pi], b0);
+            }
+            assert!(d.resident_bytes() < p.resident_bytes());
+            assert_eq!(d.resident_bytes(), p.all_fp4_resident_bytes());
+            // Block-by-block: FP4 blocks byte-identical; FP8 blocks equal
+            // the pack recipe applied to their decoded values.
+            let kb_count = k / BLOCK;
+            for pi in 0..p.n_panels() {
+                let nc = pi * nr;
+                let width = nr.min(n - nc);
+                let mut po = p.panel_payload_off[pi];
+                let mut ps = p.panel_scale_off[pi];
+                let mut widx = p.panel_block_off[pi];
+                let mut qo = d.panel_payload_off[pi];
+                let mut qs = d.panel_scale_off[pi];
+                for _ in 0..kb_count * width {
+                    if p.is_fp8_walk(widx) {
+                        let vals: Vec<f32> =
+                            (0..BLOCK).map(|kk| decode_e4m3(p.payload[po + kk])).collect();
+                        let r = FgmpTensor::pack(&[1, BLOCK], &vals, &[Precision::Fp4], None);
+                        assert_eq!(&d.payload[qo..qo + BLOCK / 2], &r.payload[..]);
+                        assert_eq!(d.scales[qs], r.scales[0]);
+                        po += BLOCK;
+                    } else {
+                        assert_eq!(&d.payload[qo..qo + BLOCK / 2], &p.payload[po..po + BLOCK / 2]);
+                        assert_eq!(d.scales[qs], p.scales[ps]);
+                        po += BLOCK / 2;
+                        ps += 1;
+                    }
+                    qo += BLOCK / 2;
+                    qs += 1;
+                    widx += 1;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn to_all_fp4_lossless_on_fp4_lattice() {
+        // FP8 blocks whose values already sit on the NVFP4 lattice with a
+        // power-of-two scale (absmax pinned at 6·2^e so the dynamic-max
+        // scale lands exactly on 2^e) re-quantize losslessly: the draft
+        // view decodes to bit-identical f32 weights. This is the property
+        // the 100%-accept speculative bench fixture rests on.
+        let (n, kb, nr) = (8usize, 2usize, 8usize);
+        let k = kb * BLOCK;
+        let lat = [0.0f32, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+        let mut seed = 77u64;
+        let mut x = vec![0.0f32; n * k];
+        for b in x.chunks_exact_mut(BLOCK) {
+            let e = ((lcg(&mut seed) * 8.0) as i32).clamp(-2, 2);
+            let s = (2.0f32).powi(e);
+            for v in b.iter_mut() {
+                let m = lat[((lcg(&mut seed) + 0.5) * 8.0) as usize % 8];
+                let sign = if lcg(&mut seed) > 0.0 { 1.0 } else { -1.0 };
+                *v = sign * m * s;
+            }
+            b[0] = 6.0 * s;
+        }
+        let t = FgmpTensor::pack(&[n, k], &x, &vec![Precision::Fp8; n * kb], None);
+        let p = PackedPanels::from_tensor(&t, nr);
+        let d = p.to_all_fp4();
+        let a = p.unpack_kn();
+        let b = d.unpack_kn();
+        for (i, (u, v)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(u.to_bits(), v.to_bits(), "elem {i}: {u} vs {v}");
+        }
+        // And the draft really is smaller: all-FP8 16 B/block down to 8.5.
+        assert!(d.payload.len() * 2 == p.payload.len());
     }
 
     #[test]

@@ -37,9 +37,10 @@ use std::sync::Arc;
 
 use crate::io::Manifest;
 use crate::model::forward::{
-    forward_prefill, forward_prefill_batch, forward_step_batch, ModelArch, Params, QuantInputs,
+    forward_extend_batch, forward_prefill, forward_prefill_batch, forward_step_batch, ForwardOut,
+    ModelArch, Params, QuantInputs,
 };
-use crate::model::kv::{KvPool, KvPoolStats, KvPrecision, KvState};
+use crate::model::kv::{KvPool, KvPoolExhausted, KvPoolStats, KvPrecision, KvState};
 use crate::model::WeightMemory;
 use crate::quant::PackedPanels;
 use crate::Result;
@@ -65,6 +66,18 @@ pub struct Session {
     /// single-engine sessions). Shards advance in lockstep, so shard 0's
     /// length is the session's cached-token count.
     pub(crate) kv_shards: Vec<KvState>,
+    /// Extra tokens a speculative round accepted beyond the one token a
+    /// plain decode step yields, not yet drained by the caller. Producers
+    /// must emit these (in order) *before* [`Session::next_token`] of the
+    /// post-round logits — [`Session::take_accepted`] drains them. Always
+    /// empty on non-speculative engines.
+    pub(crate) spec_accepted: Vec<i32>,
+    /// Lifetime draft tokens proposed for this session (speculative
+    /// engines only) — with [`Session::spec_accepted_total`], the
+    /// per-request accept rate.
+    pub spec_drafted_total: u64,
+    /// Lifetime draft tokens accepted for this session.
+    pub spec_accepted_total: u64,
 }
 
 impl Session {
@@ -107,6 +120,43 @@ impl Session {
         }
         self.kv_shards.iter().map(|kv| kv.kv_pages()).sum()
     }
+
+    /// Drain the tokens the last speculative round accepted beyond the
+    /// usual one-per-step. Callers that stream tokens must emit these (in
+    /// order) before the [`Session::next_token`] of the current logits —
+    /// together the two reproduce the non-speculative greedy stream
+    /// exactly. Always empty on non-speculative engines.
+    pub fn take_accepted(&mut self) -> Vec<i32> {
+        std::mem::take(&mut self.spec_accepted)
+    }
+
+    /// Fork this session into an independent draft session: same tokens,
+    /// logits, and step count, with every KV buffer (single-engine or
+    /// per-worker shards) deep-copied via [`KvState::fork`]. Paged caches
+    /// allocate fresh pages from their own pool — a typed
+    /// [`KvPoolExhausted`] means the pool cannot host a draft right now
+    /// and the caller should decode non-speculatively this round. Pages
+    /// already forked for earlier shards are released by drop on error.
+    pub fn fork(&self) -> std::result::Result<Session, KvPoolExhausted> {
+        let kv = match &self.kv {
+            Some(kv) => Some(kv.fork()?),
+            None => None,
+        };
+        let mut kv_shards = Vec::with_capacity(self.kv_shards.len());
+        for shard in &self.kv_shards {
+            kv_shards.push(shard.fork()?);
+        }
+        Ok(Session {
+            tokens: self.tokens.clone(),
+            last_logits: self.last_logits.clone(),
+            steps: self.steps,
+            kv,
+            kv_shards,
+            spec_accepted: Vec::new(),
+            spec_drafted_total: 0,
+            spec_accepted_total: 0,
+        })
+    }
 }
 
 /// Engine construction knobs.
@@ -133,6 +183,15 @@ pub struct EngineOptions {
     /// Force the windowed-recompute fallback regardless of backend (the
     /// PJRT path always takes it; tests use it as the parity oracle).
     pub windowed: bool,
+    /// Self-speculative decoding chain length `k`: when `Some(k >= 2)`,
+    /// the engine builder wraps the target engine in a
+    /// [`SpecEngine`](crate::runtime::spec::SpecEngine) that drafts `k-1`
+    /// greedy tokens per round through the all-NVFP4 draft view and
+    /// verifies them in one ragged batched pass. `None` (and `Some(k < 2)`,
+    /// which cannot draft anything) run plain decode. Ignored by
+    /// [`Engine::with_options`] itself — like `workers`, it is a builder
+    /// routing knob.
+    pub spec: Option<usize>,
 }
 
 impl EngineOptions {
@@ -165,6 +224,12 @@ impl EngineOptions {
         self.windowed = windowed;
         self
     }
+
+    /// Chainable setter for [`EngineOptions::spec`].
+    pub fn spec(mut self, k: Option<usize>) -> Self {
+        self.spec = k;
+        self
+    }
 }
 
 impl Default for EngineOptions {
@@ -175,6 +240,7 @@ impl Default for EngineOptions {
             attn_threshold: None,
             workers: 1,
             windowed: false,
+            spec: None,
         }
     }
 }
@@ -209,6 +275,16 @@ pub struct StepOut {
     /// price each worker's traffic at its own width — not an average);
     /// empty on the windowed fallback.
     pub kv_mix: Vec<(usize, f64)>,
+    /// Draft tokens proposed this step (0 on non-speculative engines):
+    /// each drafted token is one session×position forward through the
+    /// all-NVFP4 draft view, so the energy model prices these rows at
+    /// NVFP4 weight-read width (`weight_fp8 = 0`).
+    pub drafted: u64,
+    /// Drafted tokens the verify pass accepted — extra tokens this step
+    /// produced beyond the one a plain decode step yields. The aggregate
+    /// `accepted / drafted` is the speculative accept rate, a live proxy
+    /// for how close the all-NVFP4 assignment tracks the mixed model.
+    pub accepted: u64,
 }
 
 /// One owned parameter of the cached engine: dense f32, or the packed
@@ -417,6 +493,9 @@ impl Engine {
                     steps: 0,
                     kv: Some(kv),
                     kv_shards: Vec::new(),
+                    spec_accepted: Vec::new(),
+                    spec_drafted_total: 0,
+                    spec_accepted_total: 0,
                 })
             }
             Inner::Windowed(we) => {
@@ -426,6 +505,9 @@ impl Engine {
                     steps: 0,
                     kv: None,
                     kv_shards: Vec::new(),
+                    spec_accepted: Vec::new(),
+                    spec_drafted_total: 0,
+                    spec_accepted_total: 0,
                 };
                 {
                     let mut refs = [&mut sess];
@@ -478,6 +560,9 @@ impl Engine {
                         steps: 0,
                         kv: Some(kv),
                         kv_shards: Vec::new(),
+                        spec_accepted: Vec::new(),
+                        spec_drafted_total: 0,
+                        spec_accepted_total: 0,
                     })
                     .collect())
             }
@@ -648,6 +733,8 @@ impl Engine {
                     kv_tokens,
                     kv_bits_per_value,
                     kv_mix: vec![(ce.arch.d_model, kv_bits_per_value)],
+                    drafted: 0,
+                    accepted: 0,
                 })
             }
             Inner::Windowed(we) => {
@@ -670,9 +757,81 @@ impl Engine {
                     kv_tokens: 0,
                     kv_bits_per_value: 16.0,
                     kv_mix: Vec::new(),
+                    drafted: 0,
+                    accepted: 0,
                 })
             }
         }
+    }
+
+    /// The cached-engine state, when this engine runs the cached path
+    /// (`None` on the windowed fallback). The speculative decoder builds
+    /// its draft view from these parameters and drives the draft forward
+    /// with the same activation weightings/thresholds.
+    pub(crate) fn cached(&self) -> Option<&CachedEngine> {
+        match &self.inner {
+            Inner::Cached(ce) => Some(ce),
+            Inner::Windowed(_) => None,
+        }
+    }
+
+    /// The speculative **verify pass**: extend every session's cache by its
+    /// drafted token chain in one ragged batched forward
+    /// ([`forward_extend_batch`]) and return logits for *all* chain rows —
+    /// `(Σkᵢ, V)` in session order. Touches only KV and returns raw logits;
+    /// the caller owns token bookkeeping, acceptance, and rollback (via
+    /// [`KvState::truncate`] on the session's cache). Cached path only.
+    pub(crate) fn extend_batch(
+        &self,
+        sessions: &mut [&mut Session],
+        chains: &[&[i32]],
+    ) -> Result<ForwardOut> {
+        match &self.inner {
+            Inner::Cached(ce) => {
+                for (i, sess) in sessions.iter().enumerate() {
+                    anyhow::ensure!(sess.kv.is_some(), "session {i} was not prefilled cached");
+                }
+                let pm = ce.param_map();
+                let quant = ce.quant_inputs();
+                let mut kvs: Vec<&mut KvState> = sessions
+                    .iter_mut()
+                    .map(|s| s.kv.as_mut().expect("checked above"))
+                    .collect();
+                forward_extend_batch(&ce.arch, &pm, chains, &mut kvs, Some(&quant))
+            }
+            Inner::Windowed(_) => {
+                anyhow::bail!("windowed engine holds no cache to extend (speculative verify)")
+            }
+        }
+    }
+
+    /// KV-traffic accounting over the sessions' *current* cache state —
+    /// the same token-weighted mix [`Engine::decode_step`] reports, reused
+    /// by the speculative round after acceptance/rollback. Returns
+    /// `(kv_tokens, kv_bits_per_value, kv_mix)`.
+    pub(crate) fn kv_step_stats(&self, sessions: &[&mut Session]) -> (u64, f64, Vec<(usize, f64)>) {
+        let ce = match &self.inner {
+            Inner::Cached(ce) => ce,
+            Inner::Windowed(_) => return (0, 16.0, Vec::new()),
+        };
+        let mut kv_tokens = 0u64;
+        let mut bits_weighted = 0.0f64;
+        for sess in sessions.iter() {
+            let t = sess.cached_tokens() as u64;
+            kv_tokens += t;
+            let bits = sess
+                .kv
+                .as_ref()
+                .map(|kv| kv.effective_kv_bits())
+                .unwrap_or_else(|| ce.kv.bits_per_value());
+            bits_weighted += bits * t as f64;
+        }
+        let kv_bits_per_value = if kv_tokens > 0 {
+            bits_weighted / kv_tokens as f64
+        } else {
+            ce.kv.bits_per_value()
+        };
+        (kv_tokens, kv_bits_per_value, vec![(ce.arch.d_model, kv_bits_per_value)])
     }
 }
 

@@ -23,6 +23,7 @@ pub mod args;
 pub mod engine;
 pub mod native;
 pub mod sharded;
+pub mod spec;
 
 #[cfg(feature = "pjrt")]
 pub mod client;
@@ -34,6 +35,7 @@ use std::path::{Path, PathBuf};
 pub use args::ArgValue;
 pub use engine::{Engine, EngineOptions, Session, StepOut};
 pub use sharded::{build_engine, InferenceEngine, ShardedEngine};
+pub use spec::SpecEngine;
 #[cfg(feature = "pjrt")]
 pub use client::PjrtRuntime;
 #[cfg(feature = "pjrt")]

@@ -30,7 +30,8 @@
 use std::sync::Arc;
 
 use crate::model::forward::{
-    forward_prefill_batch_tp, forward_step_batch_tp, ModelArch, Params, QuantInputs,
+    forward_extend_batch_tp, forward_prefill_batch_tp, forward_step_batch_tp, ForwardOut,
+    ModelArch, Params, QuantInputs,
 };
 use crate::model::kv::{KvPool, KvPoolStats, KvPrecision, KvState};
 use crate::model::tp::{shard_arch, Collective, ShardPlan, ThreadCollective};
@@ -93,6 +94,20 @@ pub trait InferenceEngine {
 
     /// Sound per-request worst-case page bound for admission control.
     fn kv_pages_worst_for(&self, prompt_len: usize, want: usize) -> usize;
+
+    /// Speculative chain length `k` (`None` on non-speculative engines —
+    /// the default).
+    fn spec_k(&self) -> Option<usize> {
+        None
+    }
+
+    /// Resident bytes of the all-NVFP4 draft weight view a speculative
+    /// engine holds alongside the packed target weights (`None` on
+    /// non-speculative engines). The serve report prints this next to the
+    /// packed-vs-f32 accounting so the extra draft copy is visible.
+    fn spec_draft_bytes(&self) -> Option<u64> {
+        None
+    }
 }
 
 impl InferenceEngine for Engine {
@@ -307,6 +322,9 @@ impl<C: Collective> ShardedEngine<C> {
                 steps: 0,
                 kv: None,
                 kv_shards: shards,
+                spec_accepted: Vec::new(),
+                spec_drafted_total: 0,
+                spec_accepted_total: 0,
             })
             .collect())
     }
@@ -424,7 +442,106 @@ impl<C: Collective> ShardedEngine<C> {
             kv_tokens,
             kv_bits_per_value,
             kv_mix,
+            drafted: 0,
+            accepted: 0,
         })
+    }
+
+    /// Owned parameters — the speculative decoder builds its all-NVFP4
+    /// draft view from these.
+    pub(crate) fn params(&self) -> &[(String, ParamData)] {
+        &self.params
+    }
+
+    /// The engine's activation-quantization inputs (shared by the real and
+    /// draft datapaths — the draft differs only in its weight bits).
+    pub(crate) fn quant(&self) -> QuantInputs<'_> {
+        self.quant_inputs()
+    }
+
+    /// One batched decode step over *explicit* per-session KV shards with
+    /// an *explicit* parameter map: the speculative draft path runs the
+    /// all-NVFP4 view over forked caches through the exact TP machinery
+    /// the real step uses. No session bookkeeping happens here.
+    pub(crate) fn step_shards_with(
+        &self,
+        pm: &Params<'_>,
+        quant: &QuantInputs<'_>,
+        tokens: &[i32],
+        kvs: &mut [Vec<&mut KvState>],
+    ) -> Result<ForwardOut> {
+        forward_step_batch_tp(
+            &self.arch,
+            &self.shard_arches,
+            &self.plan,
+            pm,
+            &self.coll,
+            tokens,
+            kvs,
+            Some(quant),
+        )
+    }
+
+    /// The speculative **verify pass** over per-worker KV shards: extend
+    /// every session's shards by its drafted chain in one ragged batched
+    /// TP forward and return logits for all chain rows (`(Σkᵢ, V)` in
+    /// session order). The caller owns acceptance and rollback.
+    pub(crate) fn extend_batch(
+        &self,
+        sessions: &mut [&mut Session],
+        chains: &[&[i32]],
+    ) -> Result<ForwardOut> {
+        let active = self.shard_arches.len();
+        for (i, sess) in sessions.iter().enumerate() {
+            anyhow::ensure!(
+                sess.kv.is_none() && sess.kv_shards.len() == active,
+                "session {i} was not prefilled on this sharded engine"
+            );
+        }
+        let pm = self.param_map();
+        let quant = self.quant_inputs();
+        let mut kvs: Vec<Vec<&mut KvState>> =
+            sessions.iter_mut().map(|s| s.kv_shards.iter_mut().collect()).collect();
+        forward_extend_batch_tp(
+            &self.arch,
+            &self.shard_arches,
+            &self.plan,
+            &pm,
+            &self.coll,
+            chains,
+            &mut kvs,
+            Some(&quant),
+        )
+    }
+
+    /// KV-traffic accounting over the sessions' *current* cache state —
+    /// the same token-weighted per-worker mix [`Self::decode_step`]
+    /// reports, reused by the speculative round after acceptance/rollback.
+    /// Returns `(kv_tokens, kv_bits_per_value, kv_mix)`.
+    pub(crate) fn kv_step_stats(&self, sessions: &[&mut Session]) -> (u64, f64, Vec<(usize, f64)>) {
+        let mut kv_tokens = 0u64;
+        for sess in sessions.iter() {
+            kv_tokens += sess.cached_tokens() as u64;
+        }
+        let d = self.arch.d_model as f64;
+        let mut kv_mix: Vec<(usize, f64)> = Vec::with_capacity(self.shard_arches.len());
+        let mut global = 0.0f64;
+        for (wi, sa) in self.shard_arches.iter().enumerate() {
+            let mut weighted = 0.0f64;
+            for sess in sessions.iter() {
+                let t = sess.cached_tokens() as u64;
+                weighted += sess.kv_shards[wi].effective_kv_bits() * t as f64;
+            }
+            let bits_w = if kv_tokens > 0 {
+                weighted / kv_tokens as f64
+            } else {
+                self.kv.bits_per_value()
+            };
+            kv_mix.push((sa.d_model, bits_w));
+            global += bits_w * sa.d_model as f64 / d;
+        }
+        let kv_bits_per_value = if kv_tokens > 0 { global } else { self.kv.bits_per_value() };
+        (kv_tokens, kv_bits_per_value, kv_mix)
     }
 }
 
@@ -474,16 +591,32 @@ impl<C: Collective> InferenceEngine for ShardedEngine<C> {
 /// Build the engine a worker-count asks for: a plain [`Engine`] for
 /// `workers <= 1` (or when the windowed fallback is forced — there is
 /// nothing to shard in a recompute loop), a [`ShardedEngine`] otherwise.
-/// Callers hold the trait object and never branch on the concrete type.
+/// When [`EngineOptions::spec`] requests a chain length `k >= 2`, the
+/// target engine is wrapped in a
+/// [`SpecEngine`](crate::runtime::spec::SpecEngine) that drafts through
+/// the all-NVFP4 view and verifies in batched ragged passes (the windowed
+/// fallback holds no cache to fork, so it stays unwrapped). Callers hold
+/// the trait object and never branch on the concrete type.
 pub fn build_engine(
     rt: &Runtime,
     spec: &ExecSpec,
     tail: Vec<ArgValue>,
     opts: EngineOptions,
 ) -> Result<Box<dyn InferenceEngine>> {
+    let spec_k = opts.spec.filter(|&k| k >= 2);
     if opts.workers > 1 && !opts.windowed {
-        Ok(Box::new(ShardedEngine::with_options(rt, spec, tail, opts)?))
+        let eng = ShardedEngine::with_options(rt, spec, tail, opts)?;
+        if let Some(k) = spec_k {
+            return Ok(Box::new(super::spec::SpecEngine::over_sharded(eng, k)));
+        }
+        Ok(Box::new(eng))
     } else {
-        Ok(Box::new(Engine::with_options(rt, spec, tail, opts)?))
+        let eng = Engine::with_options(rt, spec, tail, opts)?;
+        if let Some(k) = spec_k {
+            if eng.is_cached() {
+                return Ok(Box::new(super::spec::SpecEngine::over_engine(eng, k)));
+            }
+        }
+        Ok(Box::new(eng))
     }
 }

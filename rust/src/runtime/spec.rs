@@ -1,0 +1,355 @@
+//! Self-speculative decoding off the quantization ladder.
+//!
+//! FGMP's packed weight tensor — blocks individually assigned FP8 or NVFP4
+//! by the Fisher-weighted sensitivity policy — contains its own draft
+//! model: re-quantize just the hi (E4M3) blocks down to NVFP4 nibbles
+//! ([`PackedPanels::to_all_fp4`]) and the *same* network becomes a cheaper
+//! forward of itself, with the same panel layout the LUT-decode packed
+//! kernels already execute. No second model artifact, no distillation.
+//!
+//! [`SpecEngine`] wraps a target engine (single-worker [`Engine`] or
+//! tensor-parallel [`ShardedEngine`]) and turns each decode step into a
+//! **draft/verify round**:
+//!
+//!  1. every session is forked ([`Session::fork`] — page-table snapshot
+//!     into fresh pool pages at shard width);
+//!  2. the forks decode `k−1` tokens greedily through the all-NVFP4 draft
+//!     view (weight-read bytes ≈ 4.56/8 of the hi blocks — the speedup
+//!     source);
+//!  3. one batched **ragged verify pass** extends the *real* caches by the
+//!     whole k-token chain (`[next_token, g₁ … g_{k−1}]`) and scores all k
+//!     positions with the mixed-precision weights
+//!     ([`forward_extend_batch`](crate::model::forward::forward_extend_batch));
+//!  4. the longest prefix of guesses agreeing with the verify argmaxes is
+//!     accepted; rejected rows roll back via [`KvState::truncate`]
+//!     (`crate::model::kv::KvState::truncate`), and the draft forks drop —
+//!     their pages return to the pool.
+//!
+//! Acceptance is **exact match**, so the emitted greedy stream is
+//! bit-for-bit the non-speculative stream at any `k` (property-tested in
+//! `tests/decode_props.rs`): a round always lands on a state some number
+//! of sequential [`Engine::decode_step`] calls would have produced. The
+//! **accept rate** (accepted / drafted, from [`StepOut::drafted`] /
+//! [`StepOut::accepted`]) is therefore a live, per-request proxy for how
+//! closely the all-NVFP4 assignment tracks the mixed model — the serving
+//! counterpart of the paper's <1%-degradation accuracy claim.
+//!
+//! Rounds degrade gracefully: when any session is within `k` tokens of
+//! `max_seq` (a roll is near) or a draft fork hits pool exhaustion, the
+//! round falls through to the target's plain decode step.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::model::forward::{forward_step_batch, ForwardOut, ModelArch, Params, QuantInputs};
+use crate::model::kv::{KvPoolStats, KvPrecision, KvState};
+use crate::model::WeightMemory;
+use crate::quant::PackedPanels;
+use crate::Result;
+
+use super::engine::ParamData;
+use super::sharded::InferenceEngine;
+use super::{Engine, Session, ShardedEngine, StepOut};
+
+/// The concrete engine a [`SpecEngine`] drafts for. Concrete (not a trait
+/// object) because the draft/verify passes reach the engines' internal
+/// forward machinery, not just the public session surface.
+enum Target {
+    Single(Engine),
+    Sharded(ShardedEngine),
+}
+
+impl Target {
+    fn as_dyn(&self) -> &dyn InferenceEngine {
+        match self {
+            Target::Single(e) => e,
+            Target::Sharded(e) => e,
+        }
+    }
+}
+
+/// Speculative wrapper engine: drives draft/verify rounds over a wrapped
+/// target engine. Implements [`InferenceEngine`], so the coordinator's
+/// continuous-batching loop and the CLI drive it unchanged — the only
+/// observable differences are multi-token steps ([`Session::take_accepted`])
+/// and the drafted/accepted counters on [`StepOut`].
+pub struct SpecEngine {
+    target: Target,
+    /// Chain length per round: 1 real token + `k-1` drafted guesses.
+    k: usize,
+    /// The all-NVFP4 draft view, built once at construction: for every
+    /// packed linear, the same panel grid with hi blocks re-quantized to
+    /// NVFP4 ([`PackedPanels::to_all_fp4`]). Dense parameters (norms,
+    /// embeddings) are shared with the target, not duplicated.
+    draft: HashMap<String, Arc<PackedPanels>>,
+    /// Resident bytes the draft view adds on top of the target weights.
+    draft_bytes: u64,
+}
+
+fn draft_view(params: &[(String, ParamData)]) -> (HashMap<String, Arc<PackedPanels>>, u64) {
+    let mut map = HashMap::new();
+    let mut bytes = 0u64;
+    for (name, data) in params {
+        if let ParamData::Packed(p) = data {
+            let f4 = Arc::new(p.to_all_fp4());
+            bytes += f4.resident_bytes() as u64;
+            map.insert(name.clone(), f4);
+        }
+    }
+    (map, bytes)
+}
+
+/// Parameter map for a draft forward: dense entries borrow the target's
+/// buffers, packed entries swap in the all-NVFP4 view.
+fn draft_params_map<'a>(
+    params: &'a [(String, ParamData)],
+    draft: &'a HashMap<String, Arc<PackedPanels>>,
+) -> Params<'a> {
+    let mut pm = Params::new();
+    for (name, data) in params {
+        match data {
+            ParamData::Dense(v) => pm.insert_dense(name, v),
+            ParamData::Packed(orig) => match draft.get(name) {
+                Some(f4) => pm.insert_packed(name, f4),
+                None => pm.insert_packed(name, orig),
+            },
+        }
+    }
+    pm
+}
+
+/// Greedy argmax with [`Session::next_token`]'s exact tie-breaking (the
+/// last maximum wins under `max_by`) — acceptance compares draft and
+/// verify argmaxes, so all three must break ties identically.
+fn argmax(row: &[f32]) -> i32 {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i as i32)
+        .unwrap_or(0)
+}
+
+impl SpecEngine {
+    /// Wrap a single-worker [`Engine`]. The draft view is re-quantized
+    /// here, once — construction cost proportional to the packed payload.
+    pub fn over_engine(target: Engine, k: usize) -> SpecEngine {
+        let (draft, draft_bytes) = match target.cached() {
+            Some(ce) => draft_view(&ce.params),
+            None => (HashMap::new(), 0),
+        };
+        SpecEngine { target: Target::Single(target), k: k.max(2), draft, draft_bytes }
+    }
+
+    /// Wrap a tensor-parallel [`ShardedEngine`]. The draft view is shared
+    /// by all workers exactly like the target weights are — drafts run
+    /// column-sharded through the same collective.
+    pub fn over_sharded(target: ShardedEngine, k: usize) -> SpecEngine {
+        let (draft, draft_bytes) = draft_view(target.params());
+        SpecEngine { target: Target::Sharded(target), k: k.max(2), draft, draft_bytes }
+    }
+
+    /// The configured chain length `k`.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Resident bytes of the all-NVFP4 draft view.
+    pub fn draft_resident_bytes(&self) -> u64 {
+        self.draft_bytes
+    }
+
+    /// One batched draft decode step over the forked sessions, through the
+    /// all-NVFP4 weight view. No token/step bookkeeping — the forks only
+    /// exist to grow their caches along the guessed chain.
+    fn draft_step(&self, inputs: &[i32], drafts: &mut [Session]) -> Result<ForwardOut> {
+        match &self.target {
+            Target::Single(eng) => {
+                let ce = eng.cached().expect("speculative target runs the cached path");
+                let pm = draft_params_map(&ce.params, &self.draft);
+                let quant: QuantInputs<'_> = ce.quant_inputs();
+                let mut kvs: Vec<&mut KvState> = drafts
+                    .iter_mut()
+                    .map(|d| d.kv.as_mut().expect("forked from a cached session"))
+                    .collect();
+                forward_step_batch(&ce.arch, &pm, inputs, &mut kvs, Some(&quant))
+            }
+            Target::Sharded(eng) => {
+                let pm = draft_params_map(eng.params(), &self.draft);
+                let quant = eng.quant();
+                let mut kvs: Vec<Vec<&mut KvState>> =
+                    drafts.iter_mut().map(|d| d.kv_shards.iter_mut().collect()).collect();
+                eng.step_shards_with(&pm, &quant, inputs, &mut kvs)
+            }
+        }
+    }
+
+    /// The verify pass: one ragged batched extend of the *real* caches by
+    /// each session's full k-token chain, scored with the target's
+    /// mixed-precision weights.
+    fn target_extend(
+        &self,
+        sessions: &mut [&mut Session],
+        chains: &[&[i32]],
+    ) -> Result<ForwardOut> {
+        match &self.target {
+            Target::Single(eng) => eng.extend_batch(sessions, chains),
+            Target::Sharded(eng) => eng.extend_batch(sessions, chains),
+        }
+    }
+
+    fn kv_step_stats(&self, sessions: &[&mut Session]) -> (u64, f64, Vec<(usize, f64)>) {
+        match &self.target {
+            Target::Single(eng) => eng.kv_step_stats(sessions),
+            Target::Sharded(eng) => eng.kv_step_stats(sessions),
+        }
+    }
+
+    /// One draft/verify round. See the module docs for the protocol; the
+    /// invariant is that on return every session sits in a state some
+    /// `1 + accepted_i` sequential plain decode steps would have produced,
+    /// with the extra tokens queued in [`Session::take_accepted`].
+    fn spec_round(&self, sessions: &mut [&mut Session]) -> Result<StepOut> {
+        let arch = self.target.as_dyn().arch();
+        let (max_seq, vocab) = (arch.max_seq, arch.vocab);
+        let n = sessions.len();
+
+        // Chain length this round: every session must fit k new cache rows
+        // (the verify pass extends all of them by the full chain). Within
+        // k of max_seq — or when a roll is due — fall back to the plain
+        // step, which owns the roll machinery.
+        let mut k_round = self.k;
+        for sess in sessions.iter() {
+            k_round = k_round.min(max_seq.saturating_sub(sess.cached_tokens()));
+        }
+        if k_round < 2 || !self.target.as_dyn().is_cached() {
+            return self.target.as_dyn().decode_step(sessions);
+        }
+
+        // Fork every session into a draft. A pool without room for the
+        // forks is backpressure, not an error: decode plainly this round
+        // (already-forked drafts drop and release their pages).
+        let mut drafts: Vec<Session> = Vec::with_capacity(n);
+        for sess in sessions.iter() {
+            match sess.fork() {
+                Ok(d) => drafts.push(d),
+                Err(_) => return self.target.as_dyn().decode_step(sessions),
+            }
+        }
+
+        // Chain head: the token a plain step would consume right now.
+        // Guesses follow from k-1 greedy all-NVFP4 draft steps.
+        let firsts: Vec<i32> = sessions.iter().map(|s| s.next_token()).collect();
+        let mut chains: Vec<Vec<i32>> = firsts.iter().map(|&t| vec![t]).collect();
+        let mut inputs = firsts;
+        for _ in 0..k_round - 1 {
+            let out = self.draft_step(&inputs, &mut drafts)?;
+            for (i, chain) in chains.iter_mut().enumerate() {
+                let g = argmax(&out.logits[i * vocab..(i + 1) * vocab]);
+                chain.push(g);
+                inputs[i] = g;
+            }
+        }
+        // The drafts' pages go back to the pool before the verify pass
+        // reserves the real caches' new rows.
+        drop(drafts);
+
+        let chain_refs: Vec<&[i32]> = chains.iter().map(|c| c.as_slice()).collect();
+        let out = self.target_extend(sessions, &chain_refs)?;
+
+        // Accept the longest agreeing prefix per session; roll the rest
+        // back. Verify row j scores the next token after chains[..=j], so
+        // guess j+1 is accepted iff it equals row j's argmax — exactly the
+        // token the plain greedy stream would have consumed next.
+        let mut accepted_total = 0u64;
+        for (i, sess) in sessions.iter_mut().enumerate() {
+            let base = i * k_round;
+            let chain = &chains[i];
+            let mut m = 0usize;
+            while m + 1 < k_round {
+                let row = &out.logits[(base + m) * vocab..(base + m + 1) * vocab];
+                if chain[m + 1] == argmax(row) {
+                    m += 1;
+                } else {
+                    break;
+                }
+            }
+            let new_len = sess.cached_tokens() - k_round + 1 + m;
+            if let Some(kv) = sess.kv.as_mut() {
+                kv.truncate(new_len);
+            }
+            for shard in sess.kv_shards.iter_mut() {
+                shard.truncate(new_len);
+            }
+            sess.tokens.extend_from_slice(&chain[..=m]);
+            let row = &out.logits[(base + m) * vocab..(base + m + 1) * vocab];
+            sess.last_logits = row.to_vec();
+            sess.steps += 1 + m;
+            sess.spec_accepted.extend_from_slice(&chain[1..=m]);
+            sess.spec_drafted_total += (k_round - 1) as u64;
+            sess.spec_accepted_total += m as u64;
+            accepted_total += m as u64;
+        }
+
+        let (kv_tokens, kv_bits_per_value, kv_mix) = self.kv_step_stats(sessions);
+        Ok(StepOut {
+            rows: n,
+            act_fp8: out.act_fp8,
+            kv_tokens,
+            kv_bits_per_value,
+            kv_mix,
+            drafted: (n * (k_round - 1)) as u64,
+            accepted: accepted_total,
+        })
+    }
+}
+
+impl InferenceEngine for SpecEngine {
+    fn arch(&self) -> &ModelArch {
+        self.target.as_dyn().arch()
+    }
+    fn is_cached(&self) -> bool {
+        self.target.as_dyn().is_cached()
+    }
+    fn kv_precision(&self) -> KvPrecision {
+        self.target.as_dyn().kv_precision()
+    }
+    fn workers(&self) -> usize {
+        self.target.as_dyn().workers()
+    }
+    fn prefill(&self, prompt: &[i32]) -> Result<Session> {
+        self.target.as_dyn().prefill(prompt)
+    }
+    fn prefill_batch(&self, prompts: &[Vec<i32>]) -> Result<Vec<Session>> {
+        self.target.as_dyn().prefill_batch(prompts)
+    }
+    fn decode_step(&self, sessions: &mut [&mut Session]) -> Result<StepOut> {
+        if sessions.is_empty() {
+            return Ok(StepOut::default());
+        }
+        self.spec_round(sessions)
+    }
+    fn weight_memory(&self) -> WeightMemory {
+        self.target.as_dyn().weight_memory()
+    }
+    fn pool_stats(&self) -> Option<KvPoolStats> {
+        self.target.as_dyn().pool_stats()
+    }
+    fn kv_pages_per_session(&self) -> usize {
+        self.target.as_dyn().kv_pages_per_session()
+    }
+    /// Draft forks transiently hold extra pages, but fork failure degrades
+    /// to a plain step instead of erroring — so admission bounds stay the
+    /// target's, and speculation simply pauses under pool pressure.
+    fn max_live_sessions(&self) -> usize {
+        self.target.as_dyn().max_live_sessions()
+    }
+    fn kv_pages_worst_for(&self, prompt_len: usize, want: usize) -> usize {
+        self.target.as_dyn().kv_pages_worst_for(prompt_len, want)
+    }
+    fn spec_k(&self) -> Option<usize> {
+        Some(self.k)
+    }
+    fn spec_draft_bytes(&self) -> Option<u64> {
+        Some(self.draft_bytes)
+    }
+}

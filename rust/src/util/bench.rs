@@ -88,11 +88,22 @@ pub struct BenchSuite {
     /// Derived metrics, e.g. `"speedup_matmul_d512" -> 3.4`. In a baseline
     /// file these act as *floors* the current run must meet.
     pub derived: BTreeMap<String, f64>,
+    /// Free-form run metadata carried into `BENCH_<name>.json` — the
+    /// engine configuration the workloads ran under (workers, KV
+    /// precision, speculation depth, budget, filter). Never compared by
+    /// the regression gate; omitted from the JSON when empty so baseline
+    /// files without it keep loading.
+    pub meta: BTreeMap<String, String>,
 }
 
 impl BenchSuite {
     pub fn new(name: &str) -> BenchSuite {
-        BenchSuite { name: name.to_string(), results: Vec::new(), derived: BTreeMap::new() }
+        BenchSuite {
+            name: name.to_string(),
+            results: Vec::new(),
+            derived: BTreeMap::new(),
+            meta: BTreeMap::new(),
+        }
     }
 
     pub fn push(&mut self, r: BenchResult) {
@@ -103,8 +114,30 @@ impl BenchSuite {
         self.derived.insert(key.to_string(), value);
     }
 
+    pub fn set_meta(&mut self, key: &str, value: impl Into<String>) {
+        self.meta.insert(key.to_string(), value.into());
+    }
+
     pub fn get(&self, name: &str) -> Option<&BenchResult> {
         self.results.iter().find(|r| r.name == name)
+    }
+
+    /// The sub-suite of results and derived metrics whose names contain
+    /// `substr` (metadata and suite name carry over). A `--filter` run
+    /// gates against the matching slice of the full baseline through
+    /// this, instead of failing on every bench it deliberately skipped.
+    pub fn filtered(&self, substr: &str) -> BenchSuite {
+        BenchSuite {
+            name: self.name.clone(),
+            results: self.results.iter().filter(|r| r.name.contains(substr)).cloned().collect(),
+            derived: self
+                .derived
+                .iter()
+                .filter(|(k, _)| k.contains(substr))
+                .map(|(k, &v)| (k.clone(), v))
+                .collect(),
+            meta: self.meta.clone(),
+        }
     }
 
     pub fn to_json(&self) -> Json {
@@ -117,6 +150,11 @@ impl BenchSuite {
         let derived: BTreeMap<String, Json> =
             self.derived.iter().map(|(k, &v)| (k.clone(), Json::Num(v))).collect();
         m.insert("derived".to_string(), Json::Obj(derived));
+        if !self.meta.is_empty() {
+            let meta: BTreeMap<String, Json> =
+                self.meta.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect();
+            m.insert("meta".to_string(), Json::Obj(meta));
+        }
         Json::Obj(m)
     }
 
@@ -133,7 +171,13 @@ impl BenchSuite {
                 derived.insert(k.clone(), x.as_f64()?);
             }
         }
-        Ok(BenchSuite { name: v.get("suite")?.as_str()?.to_string(), results, derived })
+        let mut meta = BTreeMap::new();
+        if let Some(d) = v.opt("meta") {
+            for (k, x) in d.as_obj()? {
+                meta.insert(k.clone(), x.as_str()?.to_string());
+            }
+        }
+        Ok(BenchSuite { name: v.get("suite")?.as_str()?.to_string(), results, derived, meta })
     }
 
     pub fn load(path: impl AsRef<Path>) -> Result<BenchSuite> {
@@ -279,6 +323,8 @@ mod tests {
         s.push(quick("a", Some(1000)));
         s.push(quick("b", None));
         s.derive("speedup_a_over_b", 2.5);
+        s.set_meta("workers", "2");
+        s.set_meta("spec.k", "4");
         let back = BenchSuite::from_json(&s.to_json()).unwrap();
         assert_eq!(back.name, "unit");
         assert_eq!(back.results.len(), 2);
@@ -286,8 +332,49 @@ mod tests {
         assert_eq!(back.results[0].elements, Some(1000));
         assert_eq!(back.results[1].elements, None);
         assert_eq!(back.derived["speedup_a_over_b"], 2.5);
+        assert_eq!(back.meta["workers"], "2");
+        assert_eq!(back.meta["spec.k"], "4");
         // durations survive to nanosecond precision
         assert_eq!(back.results[0].min, s.results[0].min);
+    }
+
+    #[test]
+    fn suite_without_meta_omits_key_and_still_loads() {
+        // Baselines checked in before metadata existed have no "meta" key;
+        // both directions must keep working.
+        let s = {
+            let mut s = BenchSuite::new("plain");
+            s.push(quick("a", Some(10)));
+            s
+        };
+        let j = s.to_json();
+        assert!(j.opt("meta").is_none(), "empty meta must not be serialized");
+        let back = BenchSuite::from_json(&j).unwrap();
+        assert!(back.meta.is_empty());
+    }
+
+    #[test]
+    fn filtered_restricts_results_and_derived_by_substring() {
+        let mut s = BenchSuite::new("full");
+        s.push(quick("decode_step_spec_x", Some(4)));
+        s.push(quick("matmul_blocked", Some(100)));
+        s.derive("speedup_decode_spec_x", 1.8);
+        s.derive("speedup_matmul", 3.0);
+        s.set_meta("spec.k", "4");
+        let f = s.filtered("spec");
+        assert_eq!(f.results.len(), 1);
+        assert_eq!(f.results[0].name, "decode_step_spec_x");
+        assert_eq!(f.derived.len(), 1);
+        assert!(f.derived.contains_key("speedup_decode_spec_x"));
+        assert_eq!(f.meta["spec.k"], "4", "metadata carries over");
+
+        // A filtered current run gates cleanly against the matching slice
+        // of a full baseline — and still fails on a real regression in it.
+        let cur = s.filtered("spec");
+        assert!(cur.check_regressions(&s.filtered("spec"), 2.0).is_empty());
+        let mut base = s.filtered("spec");
+        base.derive("speedup_decode_spec_x", 99.0);
+        assert_eq!(cur.check_regressions(&base, 2.0).len(), 1);
     }
 
     #[test]

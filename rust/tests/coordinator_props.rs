@@ -222,6 +222,7 @@ fn continuous_batching_preserves_per_request_streams() {
         energy: fgmp::hwsim::EnergyModel::default(),
         attn_threshold: None,
         workers: 1,
+        spec: None,
     };
     let fwd_spec = ExecSpec::new(&dir, "tiny-llama", GraphKind::FwdQuant);
     let server = Server::start(scfg, fwd_spec, tail.clone(), logits_spec, tail).unwrap();
@@ -319,6 +320,7 @@ fn pool_backpressure_defers_admissions_and_preserves_streams() {
         energy: fgmp::hwsim::EnergyModel::default(),
         attn_threshold: None,
         workers: 1,
+        spec: None,
     };
     let fwd_spec = ExecSpec::new(&dir, "tiny-llama", GraphKind::FwdQuant);
     let server = Server::start(scfg, fwd_spec, tail.clone(), logits_spec, tail).unwrap();

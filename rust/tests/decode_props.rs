@@ -1193,3 +1193,202 @@ fn engine_attn_ppu_reports_realized_kv_mix() {
         assert!(sess.last_logits.iter().all(|v| v.is_finite()), "thr {thr:?}");
     }
 }
+
+// ---------------------------------------------------------------------------
+// Speculative decoding: SpecEngine streams, fork/rollback, accept accounting
+// ---------------------------------------------------------------------------
+
+/// Greedy-decode `n` tokens from an engine that may be speculative. A spec
+/// round queues the extra accepted tokens on the session, and the stream
+/// contract is to emit them (in order) *before* the argmax of the
+/// post-round logits. On a non-speculative engine the drain is empty and
+/// this reproduces [`greedy`] exactly.
+fn greedy_spec(
+    engine: &dyn fgmp::runtime::InferenceEngine,
+    prompt: &[i32],
+    n: usize,
+) -> Vec<i32> {
+    let mut sess = engine.prefill(prompt).unwrap();
+    let mut produced = vec![sess.next_token()];
+    while produced.len() < n {
+        let mut refs = [&mut sess];
+        engine.decode_step(&mut refs).unwrap();
+        produced.extend(sess.take_accepted());
+        produced.push(sess.next_token());
+    }
+    produced.truncate(n);
+    produced
+}
+
+/// The speculative greedy stream is bit-exact against the non-speculative
+/// engine for every chain length × KV precision × worker count. The draft
+/// runs through a lossy all-NVFP4 weight view, so the *accept rate* varies
+/// — but verification always replays the chain through the target weights,
+/// so the emitted stream must never diverge.
+#[test]
+fn spec_greedy_stream_bit_exact_vs_plain_engine() {
+    use fgmp::runtime::{build_engine, EngineOptions};
+    let fx = engine_fixture();
+    let prompt: Vec<i32> = fx.ev.test_stream[..8].to_vec();
+    let n = 40usize; // spec rounds only; the roll boundary has its own test
+    for kv in [KvPrecision::Fp16, KvPrecision::Fp8] {
+        let opts = EngineOptions::default().kv(kv);
+        let plain = build_engine(&fx.rt, &fx.spec, fx.tail.clone(), opts).unwrap();
+        assert_eq!(plain.spec_k(), None, "kv {kv:?}: plain engine reports no chain");
+        let want = greedy(plain.as_ref(), &prompt, n);
+        for workers in [1usize, 2] {
+            for k in [2usize, 4, 8] {
+                let eng = build_engine(
+                    &fx.rt,
+                    &fx.spec,
+                    fx.tail.clone(),
+                    opts.workers(workers).spec(Some(k)),
+                )
+                .unwrap();
+                assert_eq!(eng.spec_k(), Some(k), "kv {kv:?} workers {workers} k {k}");
+                assert!(
+                    eng.spec_draft_bytes().unwrap() > 0,
+                    "kv {kv:?} workers {workers} k {k}: draft view must be resident"
+                );
+                let got = greedy_spec(eng.as_ref(), &prompt, n);
+                assert_eq!(got, want, "spec stream kv {kv:?} workers {workers} k {k}");
+            }
+        }
+    }
+}
+
+/// Near `max_seq` a spec round cannot fit `k` new cache rows and falls back
+/// to the plain step, which owns the rolling re-prefill; the stream must
+/// stay bit-exact across that hand-off and pick speculation back up on the
+/// shrunk post-roll cache. FP8 KV — the precision where divergence shows.
+#[test]
+fn spec_greedy_stream_bit_exact_across_roll() {
+    use fgmp::runtime::{build_engine, EngineOptions};
+    let fx = engine_fixture();
+    let arch = fx.ev.arts.manifest.arch().unwrap();
+    let prompt: Vec<i32> = fx.ev.test_stream[..8].to_vec();
+    let n = arch.max_seq + 10; // crosses at least one roll
+    let opts = EngineOptions::default().kv(KvPrecision::Fp8);
+    let plain = build_engine(&fx.rt, &fx.spec, fx.tail.clone(), opts).unwrap();
+    let want = greedy(plain.as_ref(), &prompt, n);
+    for workers in [1usize, 2] {
+        let eng = build_engine(
+            &fx.rt,
+            &fx.spec,
+            fx.tail.clone(),
+            opts.workers(workers).spec(Some(4)),
+        )
+        .unwrap();
+        let got = greedy_spec(eng.as_ref(), &prompt, n);
+        assert_eq!(got, want, "spec stream across roll, workers {workers}");
+    }
+}
+
+/// `Session::fork` + decode-on-the-fork + drop leaves the parent
+/// bit-identical — context, logits, stored cache bits, page count — and
+/// returns every draft page to the pool; the parent's subsequent stream
+/// matches a control session that was never forked. Covers both KV
+/// precisions × both engine kinds (one shared pool vs per-worker pools).
+#[test]
+fn spec_fork_decode_drop_leaves_parent_untouched() {
+    use fgmp::runtime::{build_engine, EngineOptions};
+    let fx = engine_fixture();
+    let prompt: Vec<i32> = fx.ev.test_stream[..8].to_vec();
+    for kv in [KvPrecision::Fp16, KvPrecision::Fp8] {
+        for workers in [1usize, 2] {
+            let tag = format!("kv {kv:?} workers {workers}");
+            let opts = EngineOptions::default().kv(kv).workers(workers);
+            let eng = build_engine(&fx.rt, &fx.spec, fx.tail.clone(), opts).unwrap();
+            let mut control = eng.prefill(&prompt).unwrap();
+            let mut parent = eng.prefill(&prompt).unwrap();
+            let base_pages = eng.pool_stats().unwrap().in_use_pages;
+            let tokens0 = parent.tokens.clone();
+            let logits0 = parent.last_logits.clone();
+            let (bits0, pages0) = (parent.kv_bits(), parent.kv_pages());
+            {
+                let mut fork = parent.fork().unwrap();
+                assert_eq!(fork.tokens, tokens0, "{tag}: fork copies the context");
+                assert_eq!(fork.kv_bits(), bits0, "{tag}: fork copies the cache");
+                assert!(
+                    eng.pool_stats().unwrap().in_use_pages > base_pages,
+                    "{tag}: fork allocates its own pages"
+                );
+                for _ in 0..3 {
+                    let mut refs = [&mut fork];
+                    eng.decode_step(&mut refs).unwrap();
+                }
+                assert_eq!(
+                    fork.cached_tokens(),
+                    parent.cached_tokens() + 3,
+                    "{tag}: fork grows independently"
+                );
+            }
+            assert_eq!(
+                eng.pool_stats().unwrap().in_use_pages,
+                base_pages,
+                "{tag}: dropped fork returns every page"
+            );
+            assert_eq!(parent.tokens, tokens0, "{tag}: parent context untouched");
+            assert_bits_eq(&parent.last_logits, &logits0, &format!("{tag}: parent logits"));
+            assert_eq!(parent.kv_bits(), bits0, "{tag}: parent cache bits untouched");
+            assert_eq!(parent.kv_pages(), pages0, "{tag}: parent pages untouched");
+            for step in 0..4 {
+                {
+                    let mut refs = [&mut control];
+                    eng.decode_step(&mut refs).unwrap();
+                }
+                {
+                    let mut refs = [&mut parent];
+                    eng.decode_step(&mut refs).unwrap();
+                }
+                assert_bits_eq(
+                    &parent.last_logits,
+                    &control.last_logits,
+                    &format!("{tag}: post-fork stream step {step}"),
+                );
+            }
+        }
+    }
+}
+
+/// Accept-rate bookkeeping: per-round `StepOut::{drafted, accepted}` sum to
+/// the session's lifetime totals, the queued accepted tokens drain exactly
+/// `accepted` per round, and steps/context advance by `1 + accepted` per
+/// round. Far from `max_seq` (48 cached tokens max here, window 128) no
+/// round may silently fall back to the plain step with a healthy pool.
+#[test]
+fn spec_step_accounting_matches_session_totals() {
+    use fgmp::runtime::{build_engine, EngineOptions};
+    let fx = engine_fixture();
+    let prompt: Vec<i32> = fx.ev.test_stream[..8].to_vec();
+    let k = 4usize;
+    let opts = EngineOptions::default().kv(KvPrecision::Fp8).spec(Some(k));
+    let eng = build_engine(&fx.rt, &fx.spec, fx.tail.clone(), opts).unwrap();
+    let mut sess = eng.prefill(&prompt).unwrap();
+    assert_eq!(sess.spec_drafted_total, 0);
+    assert!(sess.take_accepted().is_empty(), "nothing queued after prefill");
+
+    let rounds = 10usize;
+    let (mut drafted, mut accepted) = (0u64, 0u64);
+    for round in 0..rounds {
+        let out = {
+            let mut refs = [&mut sess];
+            eng.decode_step(&mut refs).unwrap()
+        };
+        assert_eq!(out.rows, 1, "round {round}");
+        assert_eq!(out.drafted, (k - 1) as u64, "round {round}: full chain drafted");
+        assert!(out.accepted <= out.drafted, "round {round}");
+        let queued = sess.take_accepted();
+        assert_eq!(queued.len() as u64, out.accepted, "round {round}: queue drains");
+        drafted += out.drafted;
+        accepted += out.accepted;
+    }
+    assert_eq!(sess.spec_drafted_total, drafted, "lifetime drafted total");
+    assert_eq!(sess.spec_accepted_total, accepted, "lifetime accepted total");
+    assert_eq!(sess.steps as u64, rounds as u64 + accepted, "steps per round");
+    assert_eq!(
+        sess.tokens.len() as u64,
+        prompt.len() as u64 + rounds as u64 + accepted,
+        "each round consumes 1 + accepted tokens"
+    );
+}

@@ -219,6 +219,7 @@ fn coordinator_serves_score_requests_natively() {
         energy: fgmp::hwsim::EnergyModel::default(),
         attn_threshold: None,
         workers: 1,
+        spec: None,
     };
     let fwd = ExecSpec::new(dir, "tiny-llama", GraphKind::FwdQuant);
     let logits = ExecSpec::new(dir, "tiny-llama", GraphKind::LogitsQuant);
