@@ -61,6 +61,7 @@ fn main() -> fgmp::Result<()> {
         attn_threshold: None,
         workers: 1,
         spec: None,
+        prefix_share: false,
     };
     let windows = ev.eval_windows(16);
     let seq = ev.seq;

@@ -53,6 +53,8 @@ pub mod names {
     pub const DECODE_TP_W2: &str = "decode_step_tp_w2_d512_occ8";
     pub const DECODE_SPEC_PLAIN: &str = "decode_step_packed_d512_occ1";
     pub const DECODE_SPEC_ROUND: &str = "decode_spec_round_d512_occ1_k4";
+    pub const SESSION_FORK_COPY: &str = "session_fork_copy_d512";
+    pub const SESSION_FORK_COW: &str = "session_fork_cow_d512";
 
     pub const SPEEDUP_MATMUL: &str = "speedup_matmul_d512";
     pub const SPEEDUP_MATMUL_T: &str = "speedup_matmul_t_d512";
@@ -88,8 +90,18 @@ pub mod names {
     /// all-NVFP4 draft view (≥ 1.15 floor: the draft view must stay a real
     /// weight-memory shrink, not a second full-size artifact).
     pub const DRAFT_VIEW_SHRINK: &str = "draft_view_shrink_d512";
+    /// Deep-fork min time over COW-fork min time on a 112-token paged
+    /// session (≥ 2.0 floor: a fork must be an O(page-table) refcount
+    /// bump, not an O(tokens) arena copy — the win speculative drafts and
+    /// session clones ride on).
+    pub const SPEEDUP_FORK_COW: &str = "speedup_fork_cow_d512";
+    /// Realized pool sharing factor (Σ refcounts / unique pages) with 64
+    /// live sessions admitted through the prefix trie into a pool sized
+    /// for 16 (≥ 2.0 floor: prefix sharing must actually multiply pool
+    /// capacity, not just deduplicate a page or two).
+    pub const SHARING_FACTOR_PREFIX: &str = "sharing_factor_prefix_d512";
 
-    pub const ALL: [&str; 28] = [
+    pub const ALL: [&str; 30] = [
         MATMUL_SCALAR,
         MATMUL_BLOCKED,
         MATMUL_DEQUANT,
@@ -118,8 +130,10 @@ pub mod names {
         DECODE_TP_W2,
         DECODE_SPEC_PLAIN,
         DECODE_SPEC_ROUND,
+        SESSION_FORK_COPY,
+        SESSION_FORK_COW,
     ];
-    pub const ALL_DERIVED: [&str; 12] = [
+    pub const ALL_DERIVED: [&str; 14] = [
         SPEEDUP_MATMUL,
         SPEEDUP_MATMUL_T,
         SPEEDUP_QUANT,
@@ -132,6 +146,8 @@ pub mod names {
         SCALING_EFF_DECODE_W2,
         SPEEDUP_DECODE_SPEC,
         DRAFT_VIEW_SHRINK,
+        SPEEDUP_FORK_COW,
+        SHARING_FACTOR_PREFIX,
     ];
 }
 
@@ -142,7 +158,7 @@ pub mod names {
 /// baseline slice (`BenchSuite::filtered` over the same substring) only
 /// gates names the selected groups actually produce.
 type BenchFn = fn(&mut BenchSuite, Duration);
-pub const GROUPS: [(&str, BenchFn, &[&str], &[&str]); 6] = [
+pub const GROUPS: [(&str, BenchFn, &[&str], &[&str]); 7] = [
     (
         "kernel",
         kernel_benches,
@@ -204,6 +220,12 @@ pub const GROUPS: [(&str, BenchFn, &[&str], &[&str]); 6] = [
         spec_benches,
         &[names::DECODE_SPEC_PLAIN, names::DECODE_SPEC_ROUND],
         &[names::SPEEDUP_DECODE_SPEC, names::DRAFT_VIEW_SHRINK],
+    ),
+    (
+        "prefix",
+        prefix_benches,
+        &[names::SESSION_FORK_COPY, names::SESSION_FORK_COW],
+        &[names::SPEEDUP_FORK_COW, names::SHARING_FACTOR_PREFIX],
     ),
 ];
 
@@ -892,6 +914,94 @@ pub fn spec_benches(suite: &mut BenchSuite, budget: Duration) {
     suite.set_meta("spec.weights", "all-fp8 pinned to the nvfp4 lattice (lossless draft)");
 }
 
+/// Append `n` synthetic rows to every K/V buffer of a paged cache. The
+/// page machinery never reads payloads — forward-level bit-exactness is
+/// covered by the decode property tests — so the prefix workloads run on
+/// fabricated rows and isolate the pool/trie costs from the matmuls.
+fn append_rows(kv: &mut KvState, d_model: usize, n: usize, rng: &mut Rng) {
+    kv.reserve(n).expect("pool sized for the workload");
+    for _ in 0..n {
+        let row = rng.normal_vec(d_model, 0.05);
+        for l in &mut kv.layers {
+            l.k.push_row(&row);
+            l.v.push_row(&row);
+        }
+        kv.advance(1);
+    }
+}
+
+/// Prefix-sharing workloads at the d512 preset: the O(page-table)
+/// copy-on-write session fork against the pre-COW deep fork — their
+/// min-time ratio is `speedup_fork_cow_d512` (CI floor 2.0) — plus the
+/// capacity demonstration the refcounted pool exists for: 64 live
+/// sessions admitted through the prefix trie into a pool sized for 16
+/// (4 shared 64-token system prompts, 8-token private suffixes — the
+/// `shared_prefix_prompts` traffic `fgmp serve --shared-prefix` drives),
+/// with the realized logical/unique sharing factor recorded as
+/// `sharing_factor_prefix_d512` (CI floor 2.0).
+pub fn prefix_benches(suite: &mut BenchSuite, budget: Duration) {
+    use crate::io::synth::shared_prefix_prompts;
+    use crate::model::kv::{KvPool, PAGE_TOKENS};
+    use crate::runtime::prefix::PrefixIndex;
+
+    let mut rng = Rng::new(48);
+    let arch = SynthConfig::preset("small-llama", 42).expect("small-llama preset").arch;
+
+    // -- fork cost: COW (page-table copy + refcount bumps) vs deep copy --
+    let ctx = 7 * PAGE_TOKENS; // 112-token parent context under max_seq 128
+    let pool = KvPool::new(
+        &arch,
+        KvPrecision::Fp16,
+        4 * KvPool::pages_for_session(arch.n_layers, arch.max_seq),
+    );
+    let mut parent = KvState::new_paged(&arch, &pool);
+    append_rows(&mut parent, arch.d_model, ctx, &mut rng);
+    let copy = bench(names::SESSION_FORK_COPY, Some(1), budget, || {
+        black_box(parent.fork_copy().expect("pool holds one full copy"));
+    });
+    let cow = bench(names::SESSION_FORK_COW, Some(1), budget, || {
+        black_box(parent.fork().expect("COW fork allocates nothing"));
+    });
+    pair(suite, names::SPEEDUP_FORK_COW, copy, cow);
+    drop(parent);
+
+    // -- capacity: 64 sessions through the trie over a 16-session pool --
+    let served = KvPool::new(
+        &arch,
+        KvPrecision::Fp8,
+        16 * KvPool::pages_for_session(arch.n_layers, arch.max_seq),
+    );
+    let mut ix = PrefixIndex::new(served.clone(), arch.n_layers);
+    let prompts = shared_prefix_prompts(48, 64, 4, 4 * PAGE_TOKENS, 8);
+    let mut live: Vec<KvState> = Vec::with_capacity(prompts.len());
+    for p in &prompts {
+        let mut kv = KvState::new_paged(&arch, &served);
+        let mapped = match ix.lookup(p) {
+            Some(hit) => {
+                kv.map_prefix(&hit.per_buf_refs(), hit.rows, &hit.ppu);
+                hit.rows
+            }
+            None => 0,
+        };
+        append_rows(&mut kv, arch.d_model, p.len() - mapped, &mut rng);
+        ix.register(p, &kv);
+        live.push(kv);
+    }
+    let s = served.stats();
+    let factor = s.sharing_factor();
+    println!(
+        "  -> {} {factor:.2}x ({} logical over {} unique pages; {} live sessions, \
+         16-session pool)",
+        names::SHARING_FACTOR_PREFIX,
+        s.logical_pages,
+        s.in_use_pages,
+        live.len()
+    );
+    suite.derive(names::SHARING_FACTOR_PREFIX, factor);
+    drop(live);
+    suite.set_meta("prefix.workload", "64 sessions x (4 shared 64-tok prefixes + 8-tok suffix)");
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -948,6 +1058,11 @@ mod tests {
         // view must be a real memory shrink over the paper-mix tensor.
         assert!(baseline.derived.get(names::SPEEDUP_DECODE_SPEC).is_some_and(|&v| v >= 1.5));
         assert!(baseline.derived.get(names::DRAFT_VIEW_SHRINK).is_some_and(|&v| v >= 1.15));
+        // The prefix-sharing floors: a COW fork must beat the deep fork
+        // by 2x, and trie admission must realize a ≥2x pool sharing
+        // factor on the shared-prefix workload.
+        assert!(baseline.derived.get(names::SPEEDUP_FORK_COW).is_some_and(|&v| v >= 2.0));
+        assert!(baseline.derived.get(names::SHARING_FACTOR_PREFIX).is_some_and(|&v| v >= 2.0));
     }
 
     #[test]
@@ -984,6 +1099,8 @@ mod tests {
         assert_eq!(sel("spec"), vec!["spec"], "group name hit");
         assert_eq!(sel("longctx"), vec!["longctx"], "bench-name hit");
         assert_eq!(sel("shrink"), vec!["spec"], "derived-only names select their group");
+        assert_eq!(sel("fork"), vec!["prefix"], "prefix benches select their group");
+        assert_eq!(sel("sharing_factor"), vec!["prefix"], "derived sharing metric too");
         assert_eq!(sel("no_such_bench"), Vec::<&str>::new());
         // No filter runs everything.
         assert!(GROUPS.iter().all(|(g, _, b, d)| group_matches(None, g, b, d)));

@@ -31,6 +31,8 @@ struct Inner {
     pool_samples: u64,
     pool_total_pages: u64,
     pool_in_use_sum: u64,
+    pool_logical_sum: u64,
+    pool_deduped_bytes_peak: u64,
     pool_peak_pages: u64,
     kv_slots_used_sum: u64,
     kv_slots_cap_sum: u64,
@@ -85,6 +87,14 @@ pub struct Snapshot {
     /// Mean fraction of *allocated* page slots holding live tokens — the
     /// internal-fragmentation complement (1.0 = no page-tail waste).
     pub kv_page_fill: f64,
+    /// Mean logical-over-unique page ratio across pool samples: how many
+    /// page references each physical page serves on average (1.0 = no
+    /// sharing; ≥ 2 when refcounted COW pages — forks, clones, prefix
+    /// mappings — let sessions share storage). Zero with no samples.
+    pub kv_sharing_factor: f64,
+    /// High-water bytes deduplication saved, in MiB: `(logical − unique)`
+    /// pages × page bytes at the moment the gap peaked.
+    pub kv_deduped_mib_peak: f64,
     /// Admissions deferred because the pool could not hold the session yet.
     pub deferred_admissions: u64,
     /// Token-weighted mean bits/value the attention kernels read from the
@@ -162,13 +172,18 @@ impl Metrics {
     }
 
     /// One KV pool sample (taken at admission and after each decode step):
-    /// pages in use of `total` with the pool's exact high-water mark
-    /// `peak`, plus the live-token slot fill of the allocated pages
-    /// (`used_slots` tokens cached out of `cap_slots` page-slot capacity).
+    /// `in_use` unique pages of `total` serving `logical` page references
+    /// (`logical ≥ in_use`; the gap is COW sharing worth `deduped_bytes`
+    /// of storage), with the pool's exact high-water mark `peak`, plus the
+    /// live-token slot fill of the allocated pages (`used_slots` tokens
+    /// cached out of `cap_slots` page-slot capacity).
+    #[allow(clippy::too_many_arguments)]
     pub fn record_pool(
         &self,
         in_use: usize,
         total: usize,
+        logical: usize,
+        deduped_bytes: u64,
         peak: usize,
         used_slots: u64,
         cap_slots: u64,
@@ -177,6 +192,8 @@ impl Metrics {
         m.pool_samples += 1;
         m.pool_total_pages = total as u64;
         m.pool_in_use_sum += in_use as u64;
+        m.pool_logical_sum += logical as u64;
+        m.pool_deduped_bytes_peak = m.pool_deduped_bytes_peak.max(deduped_bytes);
         m.pool_peak_pages = m.pool_peak_pages.max(peak as u64).max(in_use as u64);
         m.kv_slots_used_sum += used_slots;
         m.kv_slots_cap_sum += cap_slots;
@@ -285,6 +302,12 @@ impl Metrics {
             } else {
                 m.kv_slots_used_sum as f64 / m.kv_slots_cap_sum as f64
             },
+            kv_sharing_factor: if m.pool_in_use_sum == 0 {
+                0.0
+            } else {
+                m.pool_logical_sum as f64 / m.pool_in_use_sum as f64
+            },
+            kv_deduped_mib_peak: m.pool_deduped_bytes_peak as f64 / (1024.0 * 1024.0),
             deferred_admissions: m.deferred_admissions,
             kv_read_bits_per_value: if m.kv_read_tokens == 0 {
                 0.0
@@ -334,6 +357,8 @@ mod tests {
         assert_eq!(s.kv_pool_pages, 0);
         assert_eq!(s.kv_pool_occupancy, 0.0);
         assert_eq!(s.kv_page_fill, 0.0);
+        assert_eq!(s.kv_sharing_factor, 0.0);
+        assert_eq!(s.kv_deduped_mib_peak, 0.0);
         assert_eq!(s.deferred_admissions, 0);
         assert_eq!(s.kv_read_bits_per_value, 0.0);
         assert_eq!(s.spec_drafted, 0);
@@ -378,17 +403,21 @@ mod tests {
     #[test]
     fn pool_accounting_reconciles() {
         let m = Metrics::new();
-        // Two samples over a 10-page pool: 4 then 6 pages in use (pool
-        // high-water 7, seen between samples), with live-token slot fill
-        // 32/64 then 80/96.
-        m.record_pool(4, 10, 4, 32, 64);
-        m.record_pool(6, 10, 7, 80, 96);
+        // Two samples over a 10-page pool: 4 then 6 unique pages in use
+        // (pool high-water 7, seen between samples), serving 8 then 12
+        // logical references — COW sharing factor 2 — with the larger
+        // sample's dedup gap worth 6 MiB, and live-token slot fill 32/64
+        // then 80/96.
+        m.record_pool(4, 10, 8, 4 << 20, 4, 32, 64);
+        m.record_pool(6, 10, 12, 6 << 20, 7, 80, 96);
         m.record_deferred(3);
         let s = m.snapshot();
         assert_eq!(s.kv_pool_pages, 10);
         assert_eq!(s.kv_pool_peak_pages, 7);
         assert!((s.kv_pool_occupancy - 0.5).abs() < 1e-9);
         assert!((s.kv_page_fill - 112.0 / 160.0).abs() < 1e-9);
+        assert!((s.kv_sharing_factor - 2.0).abs() < 1e-9);
+        assert!((s.kv_deduped_mib_peak - 6.0).abs() < 1e-9);
         assert_eq!(s.deferred_admissions, 3);
     }
 

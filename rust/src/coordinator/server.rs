@@ -73,6 +73,16 @@ pub struct ServerConfig {
     /// per round through the all-NVFP4 draft view. Streams stay bit-exact;
     /// the accept rate lands in [`Metrics`].
     pub spec: Option<usize>,
+    /// Prefix sharing (`--prefix-share`): the generation engine keeps a
+    /// prefix trie over prefilled prompts and maps already-cached whole KV
+    /// pages into new sessions instead of re-prefilling them
+    /// ([`EngineOptions::prefix_share`]). Admission then charges each
+    /// request its *discounted* worst case
+    /// ([`InferenceEngine::kv_pages_worst_for_prompt`]) plus the index's
+    /// held pages, multiplying live-session capacity by the sharing
+    /// factor on shared-prefix traffic. Single-worker engines only (the
+    /// sharded engine ignores the flag).
+    pub prefix_share: bool,
 }
 
 /// A running coordinator instance.
@@ -118,7 +128,8 @@ impl Server {
                     .pages(cfg.kv_pages)
                     .attn(cfg.attn_threshold)
                     .workers(cfg.workers)
-                    .spec(cfg.spec);
+                    .spec(cfg.spec)
+                    .prefix_share(cfg.prefix_share);
                 match build_engine(&rt, &logits_spec, logits_args_tail, opts) {
                     Ok(engine) => generate_worker(cfg, engine.as_ref(), gen_rx, metrics),
                     Err(e) => {
@@ -357,7 +368,8 @@ struct LiveGen {
     want: usize,
     produced: Vec<i32>,
     /// Worst-case pool pages this session was admitted against
-    /// ([`InferenceEngine::kv_pages_worst_for`]) — released from the
+    /// ([`InferenceEngine::kv_pages_worst_for_prompt`] — discounted by any
+    /// prefix pages it mapped instead of allocating) — released from the
     /// committed budget at retirement.
     worst_pages: usize,
 }
@@ -400,6 +412,8 @@ fn sample_pool<E: InferenceEngine + ?Sized>(
         metrics.record_pool(
             stats.in_use_pages,
             stats.total_pages,
+            stats.logical_pages,
+            stats.deduped_bytes(),
             stats.peak_in_use,
             used_slots,
             cap_slots,
@@ -438,9 +452,14 @@ fn generate_worker<E: InferenceEngine + ?Sized>(
             KvModelDims { n_layers: 0, d_model: 0, weight_elements: 0 }
         }
     };
-    // Admission budget: Σ per-request worst-case pages of live sessions
-    // stays within the pool, so prefill/decode/roll can never hit an
-    // exhausted pool mid-stream (None = windowed fallback, unbounded).
+    // Admission budget: Σ per-request worst-case pages of live sessions —
+    // plus, under prefix sharing, the index's own held pages — stays
+    // within the pool, so prefill/decode/roll can never hit an exhausted
+    // pool mid-stream (None = windowed fallback, unbounded). With a
+    // prefix index each request is charged its *discounted* worst case
+    // (shared whole pages it will map rather than allocate), which is
+    // what lets shared-prefix traffic admit more live sessions than the
+    // pool could hold at full per-session cost.
     let pool_total: Option<usize> = engine.pool_stats().map(|s| s.total_pages);
     let slots_per_token = 2 * engine.arch().n_layers as u64;
     let mut live: Vec<LiveGen> = Vec::new();
@@ -450,7 +469,7 @@ fn generate_worker<E: InferenceEngine + ?Sized>(
     let worst_for = |req: &Request| -> usize {
         match &req.kind {
             RequestKind::Generate { prompt, n_tokens } => {
-                engine.kv_pages_worst_for(prompt.len(), *n_tokens)
+                engine.kv_pages_worst_for_prompt(prompt, *n_tokens)
             }
             _ => 0,
         }
@@ -461,6 +480,10 @@ fn generate_worker<E: InferenceEngine + ?Sized>(
         // *and* on the budget fitting the oldest parked request (if any),
         // so a parked head is not pulled-and-re-deferred every step while
         // the pool is full.
+        // Pages the prefix index holds this round: they back the
+        // discounted per-request bounds, so the budget must charge them
+        // once, on top of the per-session worst cases (0 with no index).
+        let index_held = engine.prefix_stats().map_or(0, |s| s.pages_held);
         let mut admitted = Vec::new();
         if live.is_empty() {
             match batcher.next_batch() {
@@ -470,7 +493,7 @@ fn generate_worker<E: InferenceEngine + ?Sized>(
         } else {
             let room = cap.saturating_sub(live.len());
             let head_fits = match (pool_total, batcher.peek_deferred()) {
-                (Some(total), Some(head)) => committed + worst_for(head) <= total,
+                (Some(total), Some(head)) => committed + index_held + worst_for(head) <= total,
                 _ => true,
             };
             if room > 0 && head_fits {
@@ -495,13 +518,16 @@ fn generate_worker<E: InferenceEngine + ?Sized>(
                     continue;
                 }
             };
-            let worst = engine.kv_pages_worst_for(prompt.len(), want);
-            if pool_total.is_some_and(|total| worst > total) {
+            // The satisfiability check stays on the *undiscounted* bound:
+            // a request that only fits thanks to index-held pages must
+            // defer (eviction could reclaim them), not fail.
+            if pool_total.is_some_and(|t| engine.kv_pages_worst_for(prompt.len(), want) > t) {
                 fail_request(req); // never satisfiable, even in an empty pool
                 continue;
             }
+            let worst = engine.kv_pages_worst_for_prompt(&prompt, want);
             let fits =
-                pool_total.map(|total| committed + worst <= total).unwrap_or(true);
+                pool_total.map(|total| committed + index_held + worst <= total).unwrap_or(true);
             if fits && deferred.is_empty() {
                 committed += worst;
                 ready.push((req, want, worst));

@@ -7,5 +7,5 @@ pub mod sweep;
 pub mod tasks;
 
 pub use perplexity::{Evaluator, PerplexityReport};
-pub use sweep::{run_sweep, SweepRow};
+pub use sweep::{run_accept_sweep, run_sweep, AcceptRow, SweepRow};
 pub use tasks::{score_suite, TaskSuite};

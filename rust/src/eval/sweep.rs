@@ -8,6 +8,7 @@ use crate::hwsim::layerprof::model_energy_clustered;
 use crate::hwsim::memory::fgmp_footprint;
 use crate::hwsim::DatapathConfig;
 use crate::model::{QuantConfig, QuantizedModel, RatioSpec};
+use crate::runtime::{build_engine, EngineOptions, ExecSpec, GraphKind, Runtime, Session};
 use crate::Result;
 
 use super::perplexity::Evaluator;
@@ -89,6 +90,108 @@ pub fn run_sweep(
         rows.push(row);
     }
     Ok(rows)
+}
+
+/// One point of the speculative-acceptance sweep: a Fisher-policy
+/// operating point and the accept rate the self-speculative decoder
+/// realizes there. The draft view is always all-NVFP4, so the sweep
+/// answers "how far can the target's high-precision fraction drop before
+/// the draft stops agreeing with it" — the quality/throughput trade the
+/// paper's Fisher policy navigates, seen from the decoder's side.
+#[derive(Debug, Clone)]
+pub struct AcceptRow {
+    pub label: String,
+    /// High-precision (FP8) weight-block fraction actually realized.
+    pub weight_fp8: f64,
+    /// Tokens the draft view proposed across all sessions and rounds.
+    pub drafted: u64,
+    /// Proposals the target verified and accepted.
+    pub accepted: u64,
+    /// `accepted / drafted` (0.0 when nothing was drafted).
+    pub accept_rate: f64,
+}
+
+/// Sweep speculative accept rate over Fisher-policy high-precision
+/// fractions: for each `--fp4` fraction, quantize the target, wrap it in
+/// the self-speculative engine at draft depth `k`, decode `n_tokens` per
+/// session over deterministic corpus prompts, and report how many drafted
+/// tokens the target accepted. Streams stay bit-exact to plain decode by
+/// construction, so accept rate is purely a throughput statistic.
+pub fn run_accept_sweep(
+    rt: &Runtime,
+    ev: &Evaluator,
+    dir: &str,
+    model: &str,
+    fractions: &[f64],
+    k: usize,
+    n_tokens: usize,
+) -> Result<Vec<AcceptRow>> {
+    let spec = ExecSpec::new(dir, model, GraphKind::LogitsQuant);
+    let prompt_len = 16.min(ev.test_stream.len().max(1));
+    let prompts: Vec<Vec<i32>> = (0..4)
+        .map(|i| {
+            let off = (i * prompt_len) % ev.test_stream.len().saturating_sub(prompt_len).max(1);
+            ev.test_stream[off..off + prompt_len].to_vec()
+        })
+        .collect();
+
+    let mut rows = Vec::with_capacity(fractions.len());
+    for &f in fractions {
+        let cfg = QuantConfig::fgmp(f);
+        let qm = QuantizedModel::quantize(&ev.arts, &cfg)?;
+        let tail = ev.quant_arg_tail(&cfg, &qm)?;
+        let engine = build_engine(rt, &spec, tail, EngineOptions::default().spec(Some(k)))?;
+
+        let mut sessions = engine.prefill_batch(&prompts)?;
+        // Count emitted tokens (prefill token + accepted + one per round)
+        // and retire sessions at their budget, like the serve decode loop.
+        let mut produced: Vec<usize> = vec![1; sessions.len()];
+        while produced.iter().any(|&n| n < n_tokens) {
+            let idx: Vec<usize> =
+                (0..sessions.len()).filter(|&i| produced[i] < n_tokens).collect();
+            let mut stepping: Vec<&mut Session> = sessions
+                .iter_mut()
+                .enumerate()
+                .filter(|(i, _)| produced[*i] < n_tokens)
+                .map(|(_, s)| s)
+                .collect();
+            engine.decode_step(&mut stepping)?;
+            for (slot, &i) in idx.iter().enumerate() {
+                produced[i] += stepping[slot].take_accepted().len() + 1;
+            }
+        }
+
+        let drafted: u64 = sessions.iter().map(|s| s.spec_drafted_total).sum();
+        let accepted: u64 = sessions.iter().map(|s| s.spec_accepted_total).sum();
+        rows.push(AcceptRow {
+            label: cfg.label(),
+            weight_fp8: qm.weight_fp8_fraction(),
+            drafted,
+            accepted,
+            accept_rate: if drafted > 0 { accepted as f64 / drafted as f64 } else { 0.0 },
+        });
+    }
+    Ok(rows)
+}
+
+/// Pretty-print the accept sweep as an aligned table.
+pub fn format_accept_rows(k: usize, rows: &[AcceptRow]) -> String {
+    let mut s = format!("speculative accept sweep (k={k}, all-NVFP4 draft view)\n");
+    s.push_str(&format!(
+        "{:<28} {:>7} {:>9} {:>9} {:>8}\n",
+        "config", "W-fp8%", "drafted", "accepted", "accept%"
+    ));
+    for r in rows {
+        s.push_str(&format!(
+            "{:<28} {:>7.1} {:>9} {:>9} {:>8.1}\n",
+            r.label,
+            r.weight_fp8 * 100.0,
+            r.drafted,
+            r.accepted,
+            r.accept_rate * 100.0
+        ));
+    }
+    s
 }
 
 /// Pretty-print rows as the aligned table the benches emit.

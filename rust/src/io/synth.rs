@@ -298,6 +298,44 @@ pub fn build_corpus(artifacts: &Path) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
+// Shared-prefix traffic
+// ---------------------------------------------------------------------------
+
+/// Deterministic shared-prefix generation traffic: `n_prefixes` synthetic
+/// "system prompts" of `prefix_len` tokens (distinct Markov walks off
+/// `seed`) shared round-robin across `n_prompts` requests, each appending
+/// its own `suffix_len`-token Markov "user turn". This is the workload
+/// prefix caching feeds on — many sessions whose KV pages agree for the
+/// first `prefix_len` tokens and diverge after — so the serve smoke and
+/// the benchsuite capacity bench can demonstrate the refcounted-COW
+/// sharing factor (`--shared-prefix` / `--prefix-tokens` on `fgmp serve`).
+pub fn shared_prefix_prompts(
+    seed: u64,
+    n_prompts: usize,
+    n_prefixes: usize,
+    prefix_len: usize,
+    suffix_len: usize,
+) -> Vec<Vec<i32>> {
+    let mut structure_rng = Rng::new(0xC0_0051);
+    let markov = Markov::new(VOCAB, &mut structure_rng);
+    let n_prefixes = n_prefixes.max(1);
+    let prefixes: Vec<Vec<i32>> = (0..n_prefixes)
+        .map(|i| {
+            let mut rng = Rng::new(seed ^ (0x5151 + i as u64));
+            markov.sample(prefix_len, &mut rng)
+        })
+        .collect();
+    (0..n_prompts)
+        .map(|j| {
+            let mut p = prefixes[j % n_prefixes].clone();
+            let mut rng = Rng::new(seed ^ 0xD1F ^ ((j as u64) << 16));
+            p.extend(markov.sample(suffix_len, &mut rng));
+            p
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
 // Tasks
 // ---------------------------------------------------------------------------
 
@@ -654,6 +692,25 @@ mod tests {
             }
         }
         assert!(!nexts.is_empty() && nexts.len() <= SUCC, "got {} successors", nexts.len());
+    }
+
+    #[test]
+    fn shared_prefix_traffic_is_deterministic_and_round_robin() {
+        let a = shared_prefix_prompts(7, 8, 2, 32, 8);
+        let b = shared_prefix_prompts(7, 8, 2, 32, 8);
+        assert_eq!(a, b, "same seed → same traffic");
+        assert_eq!(a.len(), 8);
+        for p in &a {
+            assert_eq!(p.len(), 40);
+            assert!(p.iter().all(|&t| (0..VOCAB as i32).contains(&t)));
+        }
+        // Round-robin prefixes: prompts j and j+2 share the whole 32-token
+        // system prompt (two whole 16-token KV pages), adjacent prompts do
+        // not, and every request's user suffix is its own.
+        assert_eq!(&a[0][..32], &a[2][..32]);
+        assert_eq!(&a[1][..32], &a[3][..32]);
+        assert_ne!(&a[0][..32], &a[1][..32]);
+        assert_ne!(&a[0][32..], &a[2][32..]);
     }
 
     #[test]

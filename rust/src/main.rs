@@ -43,12 +43,18 @@ COMMANDS
   quantize   --fp4 0.7 --policy fisher|qe|oe [--no-clip] [--local-threshold]
   eval       --fp4 0.7 --policy P [--no-clip] [--local-threshold] --batches 16
   sweep      --fp4 0.9,0.8,0.7,0.5,0.3,0.1 --policy P [--no-clip] [--local-threshold] --batches 8
+             [--spec k [--tokens 24]]
+             with --spec k, sweeps speculative accept rate instead: each
+             Fisher operating point decodes through the self-speculative
+             engine (all-NVFP4 draft view) and reports the fraction of
+             drafted tokens the target accepted
   tasks      --fp4 0.9,0.7 --max-items 64
   hwsim
   report     --linear blk0.fc1 --fp4 0.9 --rows 24
   serve      --fp4 0.7 --requests 64 [--gen 8] [--gen-tokens 16]
              [--kv fp16|fp8] [--decode-batch 8] [--kv-pages N]
-             [--attn-ppu T] [--workers N] [--spec k]
+             [--attn-ppu T] [--workers N] [--spec k] [--prefix-share]
+             [--shared-prefix P] [--prefix-tokens 32] [--suffix-tokens 8]
              score + generate traffic through the coordinator: scoring
              batches the one-shot graph, generation runs the KV-cached
              continuous-batching decode loop over a paged KV arena
@@ -62,9 +68,19 @@ COMMANDS
              --spec k >= 2 runs self-speculative decoding: k-1 tokens
              drafted per round through the all-NVFP4 draft view of the
              same packed weights, verified in one batched pass —
-             streams stay bit-exact and the accept rate is reported)
+             streams stay bit-exact and the accept rate is reported;
+             --prefix-share turns on the copy-on-write prefix index:
+             sessions whose prompts share whole 16-token pages map them
+             by reference and prefill only the divergent suffix;
+             --shared-prefix P > 0 draws generation prompts from the
+             synthetic shared-prefix workload — P distinct system
+             prompts of --prefix-tokens tokens, each request adding its
+             own --suffix-tokens user turn — so the report shows a
+             sharing factor > 1 and the admission budget stretches the
+             same pool over more live sessions)
   generate   --prompt-len 16 --tokens 32 [--sessions 4] [--kv fp16|fp8]
              [--kv-pages N] [--attn-ppu T] [--workers N] [--spec k]
+             [--prefix-share]
              drive the stateful engine directly: prefill all sessions
              as one batched forward over corpus prompts, decode them
              batched, print tokens + decode throughput + pool occupancy
@@ -100,7 +116,8 @@ impl Cli {
                 f if f.starts_with("--") => {
                     let key = f.trim_start_matches("--").replace('-', "_");
                     // boolean flags take no value
-                    let boolean = matches!(key.as_str(), "no_clip" | "local_threshold");
+                    let boolean =
+                        matches!(key.as_str(), "no_clip" | "local_threshold" | "prefix_share");
                     let val = if boolean {
                         "true".to_string()
                     } else {
@@ -151,6 +168,7 @@ struct EngineCliOpts {
     decode_batch: usize,
     workers: usize,
     spec: Option<usize>,
+    prefix: bool,
 }
 
 impl EngineCliOpts {
@@ -166,6 +184,7 @@ impl EngineCliOpts {
             decode_batch: cli.usize("decode_batch", 8),
             workers: cli.usize("workers", 1).max(1),
             spec,
+            prefix: cli.bool("prefix_share"),
         })
     }
 
@@ -179,6 +198,7 @@ impl EngineCliOpts {
             .attn(self.attn_ppu)
             .workers(self.workers)
             .spec(self.spec)
+            .prefix_share(self.prefix)
     }
 }
 
@@ -280,6 +300,20 @@ fn main() -> Result<()> {
         "sweep" => {
             let rt = Runtime::cpu()?;
             let ev = Evaluator::load(&rt, &cli.artifacts, &cli.model)?;
+            if let Some(k) = cli.opt_usize("spec") {
+                anyhow::ensure!(k >= 2, "--spec k must be >= 2 (a round drafts k-1 tokens)");
+                let rows = fgmp::eval::sweep::run_accept_sweep(
+                    &rt,
+                    &ev,
+                    &cli.artifacts,
+                    &cli.model,
+                    &cli.f64_list("fp4", &[0.9, 0.7, 0.5, 0.3, 0.1]),
+                    k,
+                    cli.usize("tokens", 24),
+                )?;
+                print!("{}", fgmp::eval::sweep::format_accept_rows(k, &rows));
+                return Ok(());
+            }
             let mut configs = vec![
                 QuantConfig { ratio: RatioSpec::Bf16, ..QuantConfig::fgmp(0.0) },
                 QuantConfig::all_fp8(),
@@ -469,6 +503,23 @@ fn cmd_serve(cli: &Cli, fp4: f64, requests: usize) -> Result<()> {
         attn_threshold: eopts.attn_ppu,
         workers: eopts.workers,
         spec: eopts.spec,
+        prefix_share: eopts.prefix,
+    };
+    // --shared-prefix P swaps the generation prompts for the synthetic
+    // shared-prefix workload: P system prompts reused round-robin, each
+    // request adding its own short user suffix. With --prefix-share this
+    // is the traffic that exercises the COW prefix index.
+    let shared_prefixes = cli.usize("shared_prefix", 0);
+    let gen_prompts: Vec<Vec<i32>> = if shared_prefixes > 0 {
+        synth::shared_prefix_prompts(
+            cli.usize("seed", 42) as u64,
+            gen_requests,
+            shared_prefixes,
+            cli.usize("prefix_tokens", 32),
+            cli.usize("suffix_tokens", 8),
+        )
+    } else {
+        Vec::new()
     };
     let windows = ev.eval_windows(requests.div_ceil(ev.batch));
     let seq = ev.seq;
@@ -488,7 +539,10 @@ fn cmd_serve(cli: &Cli, fp4: f64, requests: usize) -> Result<()> {
             rxs.push(rx);
             // Interleave generation traffic: one prompt per few score rows.
             if gen_rxs.len() < gen_requests && wi % 2 == 0 {
-                let prompt = row[..row.len().min(8)].to_vec();
+                let prompt = match gen_prompts.get(gen_rxs.len()) {
+                    Some(p) => p.clone(),
+                    None => row[..row.len().min(8)].to_vec(),
+                };
                 let (req, rx) =
                     Request::new(id, RequestKind::Generate { prompt, n_tokens: gen_tokens });
                 id += 1;
@@ -499,8 +553,9 @@ fn cmd_serve(cli: &Cli, fp4: f64, requests: usize) -> Result<()> {
     }
     // Top up if the window loop produced fewer gen requests than asked.
     while gen_rxs.len() < gen_requests {
-        let prompt =
-            windows.first().map(|w| w[..8.min(w.len())].to_vec()).unwrap_or_else(|| vec![0]);
+        let prompt = gen_prompts.get(gen_rxs.len()).cloned().unwrap_or_else(|| {
+            windows.first().map(|w| w[..8.min(w.len())].to_vec()).unwrap_or_else(|| vec![0])
+        });
         let (req, rx) = Request::new(id, RequestKind::Generate { prompt, n_tokens: gen_tokens });
         id += 1;
         server.router.submit(req)?;
@@ -564,6 +619,9 @@ fn cmd_serve(cli: &Cli, fp4: f64, requests: usize) -> Result<()> {
                  snap.kv_pool_pages, snap.kv_pool_peak_pages,
                  snap.kv_pool_occupancy * 100.0, snap.kv_page_fill * 100.0,
                  snap.deferred_admissions);
+        println!("kv sharing: {:.2}x logical/unique  deduped {:.3} MiB peak{}",
+                 snap.kv_sharing_factor, snap.kv_deduped_mib_peak,
+                 if eopts.prefix { "  (prefix sharing on)" } else { "" });
     }
     println!("sim energy {:.3} mJ vs FP8 {:.3} mJ  (savings {:.1}%, incl. KV traffic)",
              snap.energy_j * 1e3, snap.energy_fp8_j * 1e3, snap.energy_savings * 100.0);
@@ -676,6 +734,14 @@ fn cmd_generate(cli: &Cli) -> Result<()> {
         println!("kv pool: {}/{} pages in use (peak {}, {} tok/page, {} exhaustion events)",
                  stats.in_use_pages, stats.total_pages, stats.peak_in_use,
                  stats.page_tokens, stats.exhausted_events);
+        println!("kv sharing: {:.2}x ({} logical over {} unique pages, {} COW copies)",
+                 stats.sharing_factor(), stats.logical_pages, stats.in_use_pages,
+                 stats.cow_copies);
+    }
+    if let Some(ps) = engine.prefix_stats() {
+        println!("prefix index: {} pages held  {} hits / {} misses  {} tokens reused  \
+                  {} evictions",
+                 ps.pages_held, ps.hits, ps.misses, ps.tokens_reused, ps.evictions);
     }
     Ok(())
 }

@@ -1270,6 +1270,9 @@ pub fn forward_prefill(
     anyhow::ensure!(kv.layers.len() == arch.n_layers, "KV cache layer count");
     // Paged caches grab their pages here, before any compute — running out
     // surfaces as the typed KvPoolExhausted admission-backpressure error.
+    // reserve() is also the copy-on-write hook: every append below goes
+    // through it first, so a shared (forked/cloned/prefix-mapped) tail
+    // page is unshared before push_row ever writes.
     kv.reserve(s)?;
 
     let linears = arch.linears();
@@ -1424,6 +1427,9 @@ pub fn forward_step_batch(
     // Page reservations before any compute or cache mutation: a paged
     // session crossing a page boundary grabs its next page here, and an
     // exhausted pool surfaces as the typed error with every cache intact.
+    // This is also where a forked session diverges: reserve() copy-on-
+    // writes a shared tail page, so the append below never touches pages
+    // the parent (or a prefix-index entry) still references.
     for kv in kvs.iter_mut() {
         kv.reserve(1)?;
     }

@@ -25,6 +25,18 @@
 //!    Reads gather pages into a caller-provided scratch via the
 //!    gather kernels in [`crate::util::kernels`] (decode-on-read for FP8).
 //!
+//! Pages are **refcounted and copy-on-write**: [`KvState::fork`] (the
+//! speculative-decode draft primitive), paged [`Clone`], and prefix
+//! mapping ([`KvState::map_prefix`]) all share pages by reference —
+//! page-table copies + refcount bumps, O(page-table) — and the cache is
+//! append-only, so the *only* write that can touch a shared page is an
+//! append into a partially-filled shared tail. [`KvState::reserve`], which
+//! precedes every append, unshares exactly that page (payload cloned onto
+//! a fresh page) in the same all-or-nothing grab as its reservation.
+//! [`KvPoolStats`] tracks logical vs unique pages; their ratio is the
+//! pool's **sharing factor**, and exhaustion is charged on unique pages
+//! only.
+//!
 //! With `Fp16` the cached rows are bit-identical to what the full-sequence
 //! forward computes internally — flat or paged, since the gather is a pure
 //! copy — which is what makes the prefill+step path bit-exact against full
@@ -123,22 +135,49 @@ impl std::error::Error for KvPoolExhausted {}
 pub struct KvPoolStats {
     pub total_pages: usize,
     pub free_pages: usize,
+    /// **Unique** pages handed out (total − free): what physical capacity
+    /// and exhaustion are measured against.
     pub in_use_pages: usize,
+    /// **Logical** pages across every holder — Σ refcounts. With prefix
+    /// sharing / copy-on-write forks this exceeds `in_use_pages`; the gap
+    /// is the deduplicated storage.
+    pub logical_pages: usize,
     /// High-water mark of `in_use_pages` over the pool's lifetime.
     pub peak_in_use: usize,
     pub page_tokens: usize,
+    /// Bytes one page occupies in the arena (`PAGE_TOKENS × width ×
+    /// element size`) — the unit `deduped_bytes` is priced in.
+    pub page_bytes: usize,
     /// Failed reservations (each one a typed backpressure event).
     pub exhausted_events: u64,
+    /// Copy-on-write page copies performed (a shared page diverged).
+    pub cow_copies: u64,
 }
 
 impl KvPoolStats {
-    /// Fraction of the pool currently handed out.
+    /// Fraction of the pool currently handed out (unique pages).
     pub fn occupancy(&self) -> f64 {
         if self.total_pages == 0 {
             0.0
         } else {
             self.in_use_pages as f64 / self.total_pages as f64
         }
+    }
+
+    /// Logical pages per unique page — how many sessions each stored page
+    /// serves on average (1.0 when nothing is shared or the pool is idle).
+    pub fn sharing_factor(&self) -> f64 {
+        if self.in_use_pages == 0 {
+            1.0
+        } else {
+            self.logical_pages as f64 / self.in_use_pages as f64
+        }
+    }
+
+    /// Arena bytes sharing saved right now: what the logical pages would
+    /// occupy minus what the unique pages actually do.
+    pub fn deduped_bytes(&self) -> u64 {
+        (self.logical_pages.saturating_sub(self.in_use_pages) * self.page_bytes) as u64
     }
 }
 
@@ -149,8 +188,15 @@ struct PoolInner {
     u8_data: Vec<u8>,
     /// Free page ids, popped LIFO (hot pages get reused first).
     free: Vec<u32>,
+    /// Per-page reference counts: 0 = free, 1 = uniquely owned, > 1 =
+    /// shared (a prefix mapping or a copy-on-write fork). Shared pages are
+    /// immutable until [`KvPool::cow_alloc`] unshares them.
+    rc: Vec<u32>,
+    /// Σ rc — logical pages across every holder.
+    logical: usize,
     peak_in_use: usize,
     exhausted_events: u64,
+    cow_copies: u64,
 }
 
 /// A shared, fixed-capacity KV page arena. One pool serves every session of
@@ -194,8 +240,11 @@ impl KvPool {
                 f32_data,
                 u8_data,
                 free,
+                rc: vec![0; pages],
+                logical: 0,
                 peak_in_use: 0,
                 exhausted_events: 0,
+                cow_copies: 0,
             }),
             precision,
             width: arch.d_model,
@@ -231,39 +280,112 @@ impl KvPool {
 
     pub fn stats(&self) -> KvPoolStats {
         let g = self.inner.lock().unwrap();
+        let elem_bytes = match self.precision {
+            KvPrecision::Fp16 => std::mem::size_of::<f32>(),
+            KvPrecision::Fp8 => std::mem::size_of::<u8>(),
+        };
         KvPoolStats {
             total_pages: self.total_pages,
             free_pages: g.free.len(),
             in_use_pages: self.total_pages - g.free.len(),
+            logical_pages: g.logical,
             peak_in_use: g.peak_in_use,
             page_tokens: PAGE_TOKENS,
+            page_bytes: PAGE_TOKENS * self.width * elem_bytes,
             exhausted_events: g.exhausted_events,
+            cow_copies: g.cow_copies,
         }
     }
 
     /// Grab `n` pages, all-or-nothing. On failure the pool is untouched
-    /// apart from the exhaustion counter.
+    /// apart from the exhaustion counter. Each handed-out page starts at
+    /// refcount 1.
     fn alloc(&self, n: usize) -> Result<Vec<u32>, KvPoolExhausted> {
-        let mut g = self.inner.lock().unwrap();
-        if g.free.len() < n {
-            g.exhausted_events += 1;
-            return Err(KvPoolExhausted { requested: n, free: g.free.len() });
-        }
-        let at = g.free.len() - n;
-        let out = g.free.split_off(at);
-        let in_use = self.total_pages - g.free.len();
-        g.peak_in_use = g.peak_in_use.max(in_use);
-        Ok(out)
+        self.cow_alloc(&mut [], n)
     }
 
-    /// Return pages to the free list.
-    fn release(&self, pages: &[u32]) {
+    /// Bump the refcount of each page — a new holder now shares it. The
+    /// caller must already hold a reference to every page (sharing is
+    /// always seeded from a live page table), so this cannot fail.
+    /// `pub(crate)` for the prefix index (`runtime::prefix`), which holds
+    /// strong page references of its own.
+    pub(crate) fn retain(&self, pages: &[u32]) {
         if pages.is_empty() {
             return;
         }
         let mut g = self.inner.lock().unwrap();
-        g.free.extend_from_slice(pages);
-        debug_assert!(g.free.len() <= self.total_pages, "double free into KV pool");
+        for &p in pages {
+            debug_assert!(g.rc[p as usize] > 0, "retain of a free KV page");
+            g.rc[p as usize] += 1;
+        }
+        g.logical += pages.len();
+    }
+
+    /// Drop one reference per page; pages reaching refcount 0 return to
+    /// the free list.
+    pub(crate) fn release(&self, pages: &[u32]) {
+        if pages.is_empty() {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        for &p in pages {
+            let rc = &mut g.rc[p as usize];
+            debug_assert!(*rc > 0, "double free into KV pool (page {p})");
+            *rc -= 1;
+            if *rc == 0 {
+                g.free.push(p);
+            }
+        }
+        g.logical -= pages.len().min(g.logical);
+        debug_assert!(g.free.len() <= self.total_pages);
+    }
+
+    /// The copy-on-write hook + reservation, one all-or-nothing grab:
+    /// every id in `tail` that is currently **shared** (rc > 1) is cloned
+    /// onto a fresh page — arena payload copied at the pool's precision,
+    /// the caller's table entry rewritten in place, one reference moved
+    /// from the old page to the new — and `extra` additional fresh pages
+    /// are handed out, all under one lock. If the free list cannot cover
+    /// the divergence copies *plus* the extra pages, nothing changes and
+    /// the typed backpressure error reports the combined demand. Pages
+    /// already unique pass through untouched, which is what makes
+    /// append-after-fork O(1) in the common unshared case.
+    fn cow_alloc(&self, tail: &mut [u32], extra: usize) -> Result<Vec<u32>, KvPoolExhausted> {
+        let mut g = self.inner.lock().unwrap();
+        let shared = tail.iter().filter(|&&p| g.rc[p as usize] > 1).count();
+        let need = extra + shared;
+        if g.free.len() < need {
+            g.exhausted_events += 1;
+            return Err(KvPoolExhausted { requested: need, free: g.free.len() });
+        }
+        let pe = PAGE_TOKENS * self.width;
+        for t in tail.iter_mut() {
+            let old = *t as usize;
+            if g.rc[old] > 1 {
+                let fresh = g.free.pop().expect("counted above") as usize;
+                match self.precision {
+                    KvPrecision::Fp16 => {
+                        g.f32_data.copy_within(old * pe..(old + 1) * pe, fresh * pe)
+                    }
+                    KvPrecision::Fp8 => {
+                        g.u8_data.copy_within(old * pe..(old + 1) * pe, fresh * pe)
+                    }
+                }
+                g.rc[old] -= 1;
+                g.rc[fresh] = 1;
+                g.cow_copies += 1;
+                *t = fresh as u32;
+            }
+        }
+        let at = g.free.len() - extra;
+        let out = g.free.split_off(at);
+        for &p in &out {
+            g.rc[p as usize] = 1;
+        }
+        g.logical += extra; // a COW copy moves a reference; net logical 0
+        let in_use = self.total_pages - g.free.len();
+        g.peak_in_use = g.peak_in_use.max(in_use);
+        Ok(out)
     }
 }
 
@@ -342,40 +464,29 @@ pub struct KvBuf {
 }
 
 impl Clone for KvBuf {
-    /// Flat buffers clone plainly. Cloning a *paged* buffer snapshots it
-    /// into a flat buffer at the same precision (identical bytes/values):
-    /// clones are private decode oracles and bench fixtures, and must not
-    /// be able to fail on pool exhaustion or double-book pages.
+    /// Flat buffers clone plainly. Cloning a *paged* buffer **shares** its
+    /// live pages — a page-table copy plus refcount bumps, O(page-table),
+    /// never a payload copy and never fallible (fixing the PR 4 snapshot-
+    /// to-flat debt). The clone stays paged with identical bytes; writes
+    /// on either side diverge through the copy-on-write hook in
+    /// [`KvState::reserve`]. Reservation slack beyond the live rows is
+    /// not inherited (same rule as [`KvState::fork`]), which keeps slack
+    /// pages uniquely owned by their reserver.
     fn clone(&self) -> Self {
-        let data = match &self.data {
-            KvData::F32(v) => KvData::F32(v.clone()),
-            KvData::Fp8(v) => KvData::Fp8(v.clone()),
-            KvData::Paged(p) => {
-                let spans = p.live_spans(self.width);
-                let g = p.pool.inner.lock().unwrap();
-                match p.pool.precision {
-                    KvPrecision::Fp16 => {
-                        let mut flat = Vec::with_capacity(p.rows * self.width);
-                        for &(base, take) in &spans {
-                            flat.extend_from_slice(&g.f32_data[base..base + take]);
-                        }
-                        KvData::F32(flat)
-                    }
-                    KvPrecision::Fp8 => {
-                        let mut flat = Vec::with_capacity(p.rows * self.width);
-                        for &(base, take) in &spans {
-                            flat.extend_from_slice(&g.u8_data[base..base + take]);
-                        }
-                        KvData::Fp8(flat)
-                    }
-                }
-            }
-        };
-        KvBuf {
-            data,
-            width: self.width,
-            ppu_hi_blocks: self.ppu_hi_blocks,
-            ppu_blocks: self.ppu_blocks,
+        match &self.data {
+            KvData::F32(v) => KvBuf {
+                data: KvData::F32(v.clone()),
+                width: self.width,
+                ppu_hi_blocks: self.ppu_hi_blocks,
+                ppu_blocks: self.ppu_blocks,
+            },
+            KvData::Fp8(v) => KvBuf {
+                data: KvData::Fp8(v.clone()),
+                width: self.width,
+                ppu_hi_blocks: self.ppu_hi_blocks,
+                ppu_blocks: self.ppu_blocks,
+            },
+            KvData::Paged(_) => self.share_paged(),
         }
     }
 }
@@ -415,6 +526,16 @@ impl KvBuf {
         }
     }
 
+    /// The first `n` page ids of a paged buffer's table — what the prefix
+    /// index records (and retains) after a prefill. Panics on flat buffers
+    /// or `n` beyond the table.
+    pub(crate) fn page_ids(&self, n: usize) -> &[u32] {
+        match &self.data {
+            KvData::Paged(p) => &p.pages[..n],
+            _ => unreachable!("page_ids on a flat buffer"),
+        }
+    }
+
     /// Append one `width`-wide row, quantizing to the cache precision.
     /// Paged buffers write into pages reserved beforehand via
     /// [`KvState::reserve`]; pushing past the reservation is a logic error.
@@ -439,6 +560,12 @@ impl KvBuf {
                 let pe = PAGE_TOKENS * self.width;
                 let off = p.pages[page_idx] as usize * pe + (p.rows % PAGE_TOKENS) * self.width;
                 let mut g = p.pool.inner.lock().unwrap();
+                debug_assert_eq!(
+                    g.rc[p.pages[page_idx] as usize],
+                    1,
+                    "write into a shared KV page — KvState::reserve's copy-on-write \
+                     hook must unshare the tail before appends"
+                );
                 match p.pool.precision {
                     KvPrecision::Fp16 => {
                         g.f32_data[off..off + self.width].copy_from_slice(row);
@@ -531,13 +658,31 @@ impl KvBuf {
         self.ppu_blocks = 0;
     }
 
+    /// Share a *paged* buffer's live pages into a new buffer: page-table
+    /// copy + refcount bump, no payload copies. Reservation slack is not
+    /// inherited. This is the O(page-table) primitive behind paged
+    /// [`Clone`], [`KvState::fork`], and prefix mapping.
+    fn share_paged(&self) -> KvBuf {
+        let p = match &self.data {
+            KvData::Paged(p) => p,
+            _ => unreachable!("share_paged on a flat buffer"),
+        };
+        let pages = p.pages[..KvPool::pages_for_tokens(p.rows)].to_vec();
+        p.pool.retain(&pages);
+        KvBuf {
+            data: KvData::Paged(PagedStore { pool: p.pool.clone(), pages, rows: p.rows }),
+            width: self.width,
+            ppu_hi_blocks: self.ppu_hi_blocks,
+            ppu_blocks: self.ppu_blocks,
+        }
+    }
+
     /// Fork a *paged* buffer onto freshly-allocated pages of the same pool:
     /// the caller hands in exactly `pages_for_tokens(rows)` page ids (from
     /// one grouped all-or-nothing grab) and the live spans are byte-copied
-    /// arena-to-arena under the pool lock. Unlike [`Clone`] — which
-    /// snapshots to a flat buffer — the fork stays paged, so the draft
-    /// session it backs has the same storage shape, backpressure behavior
-    /// and page accounting as its parent.
+    /// arena-to-arena under the pool lock. This is the pre-COW deep fork,
+    /// kept as the [`KvState::fork_copy`] bench baseline the
+    /// `speedup_fork_cow_d512` gate measures the refcounted fork against.
     fn fork_paged(&self, pool: &Arc<KvPool>, pages: Vec<u32>) -> KvBuf {
         let (src_spans, rows) = match &self.data {
             KvData::Paged(p) => {
@@ -731,9 +876,14 @@ impl KvState {
 
     /// Ensure capacity for `additional` more tokens in every buffer. Flat
     /// caches always succeed (Vecs grow). Paged caches reserve the missing
-    /// pages from the pool in a single all-or-nothing grab; on
-    /// [`KvPoolExhausted`] nothing changed and no compute was spent — the
-    /// typed error is the admission-backpressure signal.
+    /// pages from the pool in a single all-or-nothing grab — and, because
+    /// every append lands here first, this is also the **copy-on-write
+    /// seam**: a partially-filled tail page still shared with a fork,
+    /// clone, or prefix mapping is unshared (payload cloned onto a fresh
+    /// page) in the same grab, so [`KvBuf::push_row`] only ever writes
+    /// uniquely-owned pages. On [`KvPoolExhausted`] nothing observable
+    /// changed and no compute was spent — the typed error is the
+    /// admission-backpressure signal, now covering divergence copies too.
     pub fn reserve(&mut self, additional: usize) -> Result<(), KvPoolExhausted> {
         if additional == 0 || !self.is_paged() {
             return Ok(());
@@ -742,15 +892,42 @@ impl KvState {
         // All buffers advance in lockstep, so they hold identical tables.
         let have = self.layers[0].k.pages();
         let delta = need.saturating_sub(have);
-        if delta == 0 {
+        // The page the next append writes into: only a partially-filled
+        // tail can hold rows another holder still reads — full pages are
+        // never rewritten (append-only), and fresh pages start unique.
+        let tail_idx = (self.len % PAGE_TOKENS != 0).then(|| self.len / PAGE_TOKENS);
+        if delta == 0 && tail_idx.is_none() {
             return Ok(());
         }
         let pool = match &self.layers[0].k.data {
             KvData::Paged(p) => p.pool.clone(),
             _ => unreachable!("is_paged checked above"),
         };
+        let mut tail: Vec<u32> = Vec::new();
+        if let Some(idx) = tail_idx {
+            for l in &self.layers {
+                for buf in [&l.k, &l.v] {
+                    match &buf.data {
+                        KvData::Paged(p) => tail.push(p.pages[idx]),
+                        _ => unreachable!("paged state mixes storage kinds"),
+                    }
+                }
+            }
+        }
         let total = delta * 2 * self.layers.len();
-        let mut grabbed = pool.alloc(total)?;
+        let mut grabbed = pool.cow_alloc(&mut tail, total)?;
+        // Write back any tail ids the COW hook swapped for fresh pages.
+        if let Some(idx) = tail_idx {
+            let mut t = tail.iter();
+            for l in &mut self.layers {
+                for buf in [&mut l.k, &mut l.v] {
+                    match &mut buf.data {
+                        KvData::Paged(p) => p.pages[idx] = *t.next().expect("tail per buffer"),
+                        _ => unreachable!("paged state mixes storage kinds"),
+                    }
+                }
+            }
+        }
         for l in &mut self.layers {
             for buf in [&mut l.k, &mut l.v] {
                 match &mut buf.data {
@@ -785,15 +962,32 @@ impl KvState {
     /// Fork this cache into an independent same-shape snapshot — the
     /// speculative-decode draft primitive ([`KvState::truncate`] is its
     /// rollback counterpart). Flat caches clone their buffers. Paged caches
-    /// stay **paged**: fresh pages are taken from the same pool in one
-    /// grouped all-or-nothing grab (exactly the pages live rows need —
-    /// reservation slack is not inherited), then live spans are byte-copied
-    /// inside the arena. On [`KvPoolExhausted`] nothing changed, so callers
-    /// can fall back to non-speculative decoding under pool pressure; the
-    /// parent is untouched either way. A future prefix-sharing pool would
-    /// replace the byte copy with refcounted page mappings — this method is
-    /// that seam.
+    /// stay **paged** and the fork is a page-table copy + refcount bump —
+    /// O(page-table), no payload copies, no new pages (reservation slack is
+    /// not inherited). The fork shares every live page with its parent
+    /// until one side appends into the shared tail, at which point
+    /// [`KvState::reserve`]'s copy-on-write hook clones exactly that page.
+    /// Allocation therefore cannot fail here; divergence is where pool
+    /// pressure surfaces (typed, before compute, parent untouched). The
+    /// `Result` stays for API stability with pre-COW callers that fell
+    /// back to plain decode on exhaustion.
     pub fn fork(&self) -> Result<KvState, KvPoolExhausted> {
+        if !self.is_paged() {
+            return Ok(self.clone());
+        }
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| LayerKv { k: l.k.share_paged(), v: l.v.share_paged() })
+            .collect();
+        Ok(KvState { layers, precision: self.precision, len: self.len })
+    }
+
+    /// The pre-COW deep fork: fresh pages from the same pool in one
+    /// grouped all-or-nothing grab, live spans byte-copied arena-to-arena.
+    /// Kept as the baseline the `speedup_fork_cow_d512` bench gate
+    /// measures [`KvState::fork`] against — O(tokens) vs O(page-table).
+    pub fn fork_copy(&self) -> Result<KvState, KvPoolExhausted> {
         if !self.is_paged() {
             return Ok(self.clone());
         }
@@ -813,6 +1007,41 @@ impl KvState {
             .collect();
         debug_assert!(grabbed.is_empty());
         Ok(KvState { layers, precision: self.precision, len: self.len })
+    }
+
+    /// Map a shared prompt prefix into this **empty** paged cache: for
+    /// each buffer (layer-major, K then V — the prefix index's order),
+    /// adopt `rows / PAGE_TOKENS` fully-filled pages by reference. Pages
+    /// are retained (refcount bump) — the index and every mapped session
+    /// each hold a strong reference, so page ids can never be recycled
+    /// under a reader. `ppu` seeds each buffer's attention-PPU counters
+    /// with the prefix's cumulative `(hi, total)` block counts so
+    /// [`KvState::effective_kv_bits`] prices the mapped rows like the
+    /// prefill that produced them.
+    pub fn map_prefix(&mut self, per_buf_pages: &[&[u32]], rows: usize, ppu: &[(u64, u64)]) {
+        assert!(self.is_paged() && self.is_empty(), "map_prefix needs an empty paged cache");
+        assert_eq!(rows % PAGE_TOKENS, 0, "prefix mapping is whole-page");
+        assert_eq!(per_buf_pages.len(), 2 * self.layers.len(), "one page list per K/V buffer");
+        assert_eq!(ppu.len(), per_buf_pages.len(), "one PPU seed per buffer");
+        let pages_each = rows / PAGE_TOKENS;
+        let mut it = per_buf_pages.iter().zip(ppu);
+        for l in &mut self.layers {
+            for buf in [&mut l.k, &mut l.v] {
+                let (pages, &(hi, total)) = it.next().expect("length checked above");
+                assert_eq!(pages.len(), pages_each, "prefix page table covers the rows");
+                match &mut buf.data {
+                    KvData::Paged(p) => {
+                        p.pool.retain(pages);
+                        p.pages = pages.to_vec();
+                        p.rows = rows;
+                    }
+                    _ => unreachable!("paged state mixes storage kinds"),
+                }
+                buf.ppu_hi_blocks = hi;
+                buf.ppu_blocks = total;
+            }
+        }
+        self.len = rows;
     }
 
     /// Drop cached tokens beyond `len` (newest first) — the rollback seam
@@ -990,14 +1219,22 @@ mod tests {
             // 2 pages per buffer × 2 buffers × n_layers.
             assert_eq!(paged.kv_pages(), 2 * 2 * a.n_layers);
 
-            // Clone is a flat snapshot with identical values.
+            // Clone stays paged and shares pages: no new unique pages,
+            // logical count doubles, identical values.
+            let before = pool.stats();
             let snap = paged.clone();
-            assert!(!snap.is_paged());
+            assert!(snap.is_paged(), "paged clone stays paged (PR 4 debt fixed)");
+            let after = pool.stats();
+            assert_eq!(after.in_use_pages, before.in_use_pages, "clone copies no pages");
+            assert_eq!(after.logical_pages, before.logical_pages + snap.kv_pages());
+            assert!(after.sharing_factor() > 1.0);
             let (mut s3, mut s4) = (Vec::new(), Vec::new());
             assert_eq!(
                 snap.layers[0].v.materialize(&mut s3),
                 paged.layers[0].v.materialize(&mut s4)
             );
+            drop(snap);
+            assert_eq!(pool.stats().logical_pages, before.logical_pages);
         }
     }
 
@@ -1031,6 +1268,9 @@ mod tests {
             let s = pool.stats();
             assert_eq!(s.in_use_pages, held, "pool accounting drifted");
             assert_eq!(s.free_pages + s.in_use_pages, s.total_pages);
+            // Nothing here shares, so logical == unique and factor is 1.
+            assert_eq!(s.logical_pages, held, "unshared logical == unique");
+            assert_eq!(s.sharing_factor(), 1.0);
         }
         drop(live);
         assert_eq!(pool.stats().free_pages, 48, "all pages recycled");
@@ -1112,7 +1352,11 @@ mod tests {
             assert!(fork.is_paged(), "fork keeps the paged shape");
             assert_eq!(fork.len(), kv.len());
             assert_eq!(fork.kv_pages(), kv.kv_pages(), "fork holds live-row pages only");
-            assert_eq!(pool.stats().in_use_pages, held + fork.kv_pages());
+            // COW fork: zero new unique pages, logical count doubled.
+            let s = pool.stats();
+            assert_eq!(s.in_use_pages, held, "fork copies no pages up front");
+            assert_eq!(s.logical_pages, held + fork.kv_pages());
+            assert!((s.sharing_factor() - 2.0).abs() < 1e-12);
             assert_eq!(fork.layers[0].k.ppu_counts(), (3, 7), "PPU counters carried");
 
             // Values bit-identical, pages distinct.
@@ -1126,11 +1370,16 @@ mod tests {
                 }
             }
 
-            // Writes into the fork never reach the parent.
+            // Writes into the fork never reach the parent: the shared
+            // partial tail diverges through the COW hook in reserve —
+            // one fresh page per buffer, everything else still shared.
             let mut fork = fork;
             let before = kv.layers[1].k.materialize(&mut s1).to_vec();
             let row = vec![9.0f32; a.d_model];
             fork.reserve(1).unwrap();
+            let s = pool.stats();
+            assert_eq!(s.in_use_pages, held + 2 * a.n_layers, "one tail per buffer");
+            assert_eq!(s.cow_copies, (2 * a.n_layers) as u64, "one COW copy per buffer");
             for l in &mut fork.layers {
                 l.k.push_row(&row);
                 l.v.push_row(&row);
@@ -1139,9 +1388,12 @@ mod tests {
             assert_eq!(kv.layers[1].k.materialize(&mut s2), &before[..]);
             assert_eq!(kv.len(), n);
 
-            // Dropping the fork returns every page it held.
+            // Dropping the fork returns every page it held (diverged tails
+            // free; shared pages drop back to the parent's refcount).
             drop(fork);
-            assert_eq!(pool.stats().in_use_pages, held, "fork pages recycled");
+            let s = pool.stats();
+            assert_eq!(s.in_use_pages, held, "fork pages recycled");
+            assert_eq!(s.logical_pages, held);
 
             // Flat forks stay flat and never touch a pool.
             let mut flat = KvState::new(&a, prec);
@@ -1154,26 +1406,159 @@ mod tests {
     }
 
     #[test]
-    fn fork_exhaustion_is_typed_and_leaves_parent_untouched() {
+    fn cow_divergence_exhaustion_is_typed_and_leaves_parent_untouched() {
         let a = arch();
-        // A session of PAGE_TOKENS+1 rows holds 8 pages (2 pages per buffer
-        // × 2 layers × K+V); give the pool 12 so the parent fits with a
-        // partially-filled tail page, but a fork (8 more) cannot.
-        let pool = KvPool::new(&a, KvPrecision::Fp8, 12);
+        // A session of PAGE_TOKENS+1 rows holds exactly 8 unique pages
+        // (2 pages per buffer × 2 layers × K+V). Size the pool to exactly
+        // that: the COW fork itself costs nothing — exhaustion moved from
+        // fork time to *divergence* time, and bites on unique pages only.
+        let pool = KvPool::new(&a, KvPrecision::Fp8, 8);
         let mut kv = KvState::new_paged(&a, &pool);
         let n = PAGE_TOKENS + 1;
         kv.reserve(n).unwrap();
         let mut rng = Rng::new(13);
         push_rows(&mut kv, &mut rng, n, a.d_model);
-        let err = kv.fork().unwrap_err();
-        assert_eq!(err, KvPoolExhausted { requested: 8, free: 4 });
+        assert_eq!(pool.free_pages(), 0);
+
+        // The old deep fork (bench baseline) needs 8 fresh pages — typed
+        // exhaustion, nothing leaked.
+        let err = kv.fork_copy().unwrap_err();
+        assert_eq!(err, KvPoolExhausted { requested: 8, free: 0 });
         assert_eq!(pool.stats().in_use_pages, 8, "all-or-nothing: no pages leaked");
+
+        // The COW fork succeeds in a full pool: logical pages double while
+        // unique pages (what exhaustion charges) stay put.
+        let mut fork = kv.fork().unwrap();
+        let s = pool.stats();
+        assert_eq!(s.in_use_pages, 8);
+        assert_eq!(s.logical_pages, 16);
+
+        // Appending into the fork must first unshare its 4 tail pages —
+        // which a full pool cannot host. Typed, all-or-nothing, and both
+        // caches still readable afterwards.
+        let err = fork.reserve(1).unwrap_err();
+        assert_eq!(err, KvPoolExhausted { requested: 4, free: 0 });
+        assert_eq!(fork.len(), n);
         assert_eq!(kv.len(), n);
-        // The parent still works after the failed fork (the tail page has
-        // room, so no new reservation is needed).
+        let (mut s1, mut s2) = (Vec::new(), Vec::new());
+        assert_eq!(
+            kv.layers[0].k.materialize(&mut s1),
+            fork.layers[0].k.materialize(&mut s2),
+            "failed divergence leaves the shared bytes intact"
+        );
+
+        // Dropping the fork restores headroom: the parent's own append
+        // then needs no COW (its tail is unique again) and no new page.
+        drop(fork);
+        assert_eq!(pool.stats().logical_pages, 8);
         kv.reserve(1).unwrap();
         push_rows(&mut kv, &mut rng, 1, a.d_model);
         assert_eq!(kv.len(), n + 1);
+        assert_eq!(pool.stats().cow_copies, 0, "no divergence ever completed");
+    }
+
+    #[test]
+    fn cow_truncate_and_drop_interleavings_reconcile_accounting() {
+        // Property: over random fork/clone/write/truncate/drop interleavings
+        // with sharing, the pool conserves pages — logical == Σ live page
+        // tables, unique + free == total, and everything recycles at the
+        // end. The free list can never double-book because release only
+        // frees at refcount 0.
+        let a = arch();
+        let pool = KvPool::new(&a, KvPrecision::Fp16, 96);
+        let mut rng = Rng::new(0xC0_57_u64);
+        let mut live: Vec<KvState> = Vec::new();
+        for _ in 0..500 {
+            let action = rng.below(5);
+            if action == 0 || live.is_empty() {
+                let mut kv = KvState::new_paged(&a, &pool);
+                let want = 1 + rng.below(2 * PAGE_TOKENS);
+                if kv.reserve(want).is_ok() {
+                    push_rows(&mut kv, &mut rng, want, a.d_model);
+                    live.push(kv);
+                }
+            } else if action == 1 {
+                // Fork (or clone — same sharing semantics) a random session.
+                let i = rng.below(live.len());
+                let forked =
+                    if rng.below(2) == 0 { live[i].fork().unwrap() } else { live[i].clone() };
+                live.push(forked);
+            } else if action == 2 {
+                // Diverge: append a row, COW-unsharing the tail if needed.
+                let i = rng.below(live.len());
+                if live[i].len() < 4 * PAGE_TOKENS && live[i].reserve(1).is_ok() {
+                    push_rows(&mut live[i], &mut rng, 1, a.d_model);
+                }
+            } else if action == 3 {
+                let i = rng.below(live.len());
+                let to = rng.below(live[i].len() + 1);
+                live[i].truncate(to);
+            } else {
+                let i = rng.below(live.len());
+                live.swap_remove(i);
+            }
+            let held: usize = live.iter().map(|kv| kv.kv_pages()).sum();
+            let s = pool.stats();
+            assert_eq!(s.logical_pages, held, "logical pages == Σ page tables");
+            assert_eq!(s.free_pages + s.in_use_pages, s.total_pages);
+            assert!(s.in_use_pages <= s.logical_pages, "sharing never inflates uniques");
+        }
+        drop(live);
+        let s = pool.stats();
+        assert_eq!(s.free_pages, 96, "all pages recycled");
+        assert_eq!(s.logical_pages, 0);
+    }
+
+    #[test]
+    fn cow_map_prefix_shares_full_pages_and_seeds_ppu() {
+        let a = arch();
+        let pool = KvPool::new(&a, KvPrecision::Fp8, 64);
+        let mut parent = KvState::new_paged(&a, &pool);
+        let n = 2 * PAGE_TOKENS; // two full pages per buffer
+        parent.reserve(n).unwrap();
+        let mut rng = Rng::new(0x9F);
+        push_rows(&mut parent, &mut rng, n, a.d_model);
+        parent.layers[0].k.note_ppu(5, 8);
+
+        // Collect the parent's page tables buffer-major (the index order).
+        let tables: Vec<Vec<u32>> = parent
+            .layers
+            .iter()
+            .flat_map(|l| [&l.k, &l.v])
+            .map(|b| match &b.data {
+                KvData::Paged(p) => p.pages.clone(),
+                _ => unreachable!(),
+            })
+            .collect();
+        let refs: Vec<&[u32]> = tables.iter().map(|t| t.as_slice()).collect();
+        let ppu: Vec<(u64, u64)> = parent
+            .layers
+            .iter()
+            .flat_map(|l| [l.k.ppu_counts(), l.v.ppu_counts()])
+            .collect();
+
+        let held = pool.stats().in_use_pages;
+        let mut mapped = KvState::new_paged(&a, &pool);
+        mapped.map_prefix(&refs, n, &ppu);
+        assert_eq!(mapped.len(), n);
+        assert_eq!(mapped.kv_pages(), parent.kv_pages());
+        assert_eq!(mapped.layers[0].k.ppu_counts(), (5, 8), "PPU seeded from prefix");
+        let s = pool.stats();
+        assert_eq!(s.in_use_pages, held, "mapping allocates nothing");
+        assert_eq!(s.logical_pages, 2 * held);
+
+        // Identical bytes; the mapped session then extends independently.
+        let (mut s1, mut s2) = (Vec::new(), Vec::new());
+        assert_eq!(
+            parent.layers[1].v.materialize(&mut s1),
+            mapped.layers[1].v.materialize(&mut s2)
+        );
+        mapped.reserve(1).unwrap();
+        push_rows(&mut mapped, &mut rng, 1, a.d_model);
+        assert_eq!(mapped.len(), n + 1);
+        assert_eq!(parent.len(), n);
+        // Full-page prefix: the append opens a fresh page, no COW copy.
+        assert_eq!(pool.stats().cow_copies, 0, "whole-page sharing never diverges");
     }
 
     #[test]

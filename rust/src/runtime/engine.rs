@@ -33,7 +33,7 @@
 //! blocked matmuls across every prompt admitted in one round. Pool capacity
 //! comes from [`EngineOptions::kv_pages`] (the serve `--kv-pages` flag).
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::io::Manifest;
 use crate::model::forward::{
@@ -46,6 +46,7 @@ use crate::quant::PackedPanels;
 use crate::Result;
 
 use super::args::ArgValue;
+use super::prefix::{PrefixIndex, PrefixIndexStats};
 use super::{ExecSpec, Executable, GraphKind, Runtime};
 
 /// One live generation session: the token context, the latest next-token
@@ -132,11 +133,13 @@ impl Session {
 
     /// Fork this session into an independent draft session: same tokens,
     /// logits, and step count, with every KV buffer (single-engine or
-    /// per-worker shards) deep-copied via [`KvState::fork`]. Paged caches
-    /// allocate fresh pages from their own pool — a typed
-    /// [`KvPoolExhausted`] means the pool cannot host a draft right now
-    /// and the caller should decode non-speculatively this round. Pages
-    /// already forked for earlier shards are released by drop on error.
+    /// per-worker shards) forked via [`KvState::fork`] — a page-table copy
+    /// plus refcount bumps, O(page-table), no payload copies. The draft
+    /// shares every cached page with its parent until one side appends
+    /// into the shared tail, where the copy-on-write hook clones exactly
+    /// that page; pool pressure therefore surfaces at *divergence* (typed
+    /// [`KvPoolExhausted`] out of `reserve`), not here. The `Result`
+    /// remains so speculative callers keep their decode-plain fallback.
     pub fn fork(&self) -> std::result::Result<Session, KvPoolExhausted> {
         let kv = match &self.kv {
             Some(kv) => Some(kv.fork()?),
@@ -192,6 +195,16 @@ pub struct EngineOptions {
     /// [`Engine::with_options`] itself — like `workers`, it is a builder
     /// routing knob.
     pub spec: Option<usize>,
+    /// Prefix sharing: when true the cached engine keeps a
+    /// [`PrefixIndex`] over its pool and [`Engine::prefill`] /
+    /// [`Engine::prefill_batch`] map fully-matching shared prompt pages
+    /// into new sessions by reference, prefilling only the divergent
+    /// suffix. Bit-exact vs plain prefill (causal attention makes shared
+    /// prefixes' KV independent of what follows); multiplies effective
+    /// session capacity by the pool's sharing factor on shared-prefix
+    /// traffic. Single-worker engines only — the sharded engine ignores
+    /// it (its per-worker pools have no shared index yet; see ROADMAP).
+    pub prefix: bool,
 }
 
 impl EngineOptions {
@@ -230,6 +243,12 @@ impl EngineOptions {
         self.spec = k;
         self
     }
+
+    /// Chainable setter for [`EngineOptions::prefix`].
+    pub fn prefix_share(mut self, on: bool) -> Self {
+        self.prefix = on;
+        self
+    }
 }
 
 impl Default for EngineOptions {
@@ -241,6 +260,7 @@ impl Default for EngineOptions {
             workers: 1,
             windowed: false,
             spec: None,
+            prefix: false,
         }
     }
 }
@@ -330,6 +350,10 @@ pub(crate) struct CachedEngine {
     pub(crate) attn_threshold: Option<f32>,
     /// The shared page arena every session of this engine draws from.
     pub(crate) pool: Arc<KvPool>,
+    /// Prefix-sharing admission index ([`EngineOptions::prefix`]); `None`
+    /// when the knob is off. The mutex guards trie structure only — page
+    /// lifetime is the pool's refcounts.
+    pub(crate) prefix: Option<Mutex<PrefixIndex>>,
 }
 
 impl CachedEngine {
@@ -347,6 +371,111 @@ impl CachedEngine {
             thresholds: &self.thresholds,
             attn_threshold: self.attn_threshold,
         }
+    }
+
+    /// Prefill through the prefix index: look up each (already
+    /// window-trimmed) prompt, map fully-matching shared pages into its
+    /// fresh cache by reference, prefill misses as one batch and hit
+    /// suffixes as one ragged extend, then register every resulting cache
+    /// so later prompts share it. Bit-exact vs plain prefill: attention is
+    /// causal, so the KV rows of a shared prefix are independent of what
+    /// follows them, and the extend path computes suffix rows at the same
+    /// positions with the same PPU decisions plain prefill would. Runs
+    /// under the index lock end to end — mapped pages can't be evicted
+    /// before the session retains them — and on pool exhaustion evicts
+    /// LRU index subtrees and retries before giving up (index pages are
+    /// cache; admissions are load).
+    fn prefill_shared(&self, kept: &[&[i32]]) -> Result<Vec<Session>> {
+        let ix = self.prefix.as_ref().expect("prefill_shared needs the prefix index");
+        let mut g = ix.lock().unwrap();
+        let pm = self.param_map();
+        let quant = self.quant_inputs();
+        let vocab = self.arch.vocab;
+        let mut kvs: Vec<KvState> =
+            kept.iter().map(|_| KvState::new_paged(&self.arch, &self.pool)).collect();
+        let mut hit_rows = vec![0usize; kept.len()];
+        for (i, p) in kept.iter().enumerate() {
+            if let Some(hit) = g.lookup(p) {
+                kvs[i].map_prefix(&hit.per_buf_refs(), hit.rows, &hit.ppu);
+                hit_rows[i] = hit.rows;
+            }
+        }
+        let miss: Vec<usize> = (0..kept.len()).filter(|&i| hit_rows[i] == 0).collect();
+        let hits: Vec<usize> = (0..kept.len()).filter(|&i| hit_rows[i] > 0).collect();
+        let mut logits = vec![Vec::new(); kept.len()];
+        if !miss.is_empty() {
+            let prompts: Vec<&[i32]> = miss.iter().map(|&i| kept[i]).collect();
+            let out = loop {
+                let mut refs: Vec<&mut KvState> = kvs
+                    .iter_mut()
+                    .enumerate()
+                    .filter(|(i, _)| hit_rows[*i] == 0)
+                    .map(|(_, kv)| kv)
+                    .collect();
+                match forward_prefill_batch(&self.arch, &pm, &prompts, Some(&quant), &mut refs) {
+                    Ok(out) => break out,
+                    // Reservations are idempotent (pages kept so far carry
+                    // over), so freeing index pages and retrying is safe
+                    // and monotone. The typed error propagates unwrapped —
+                    // the coordinator downcasts it for deferral.
+                    Err(e) if e.downcast_ref::<KvPoolExhausted>().is_some() => {
+                        if g.evict_lru() == 0 {
+                            return Err(e);
+                        }
+                    }
+                    Err(e) => return Err(e),
+                }
+            };
+            for (j, &i) in miss.iter().enumerate() {
+                logits[i] = out.logits[j * vocab..(j + 1) * vocab].to_vec();
+            }
+        }
+        if !hits.is_empty() {
+            let chains: Vec<&[i32]> = hits.iter().map(|&i| &kept[i][hit_rows[i]..]).collect();
+            let out = loop {
+                let mut refs: Vec<&mut KvState> = kvs
+                    .iter_mut()
+                    .enumerate()
+                    .filter(|(i, _)| hit_rows[*i] > 0)
+                    .map(|(_, kv)| kv)
+                    .collect();
+                match forward_extend_batch(&self.arch, &pm, &chains, &mut refs, Some(&quant)) {
+                    Ok(out) => break out,
+                    Err(e) if e.downcast_ref::<KvPoolExhausted>().is_some() => {
+                        if g.evict_lru() == 0 {
+                            return Err(e);
+                        }
+                    }
+                    Err(e) => return Err(e),
+                }
+            };
+            // Extend returns logits for *every* chain row; the session's
+            // next-token logits are each chain's last row.
+            let mut off = 0usize;
+            for (j, &i) in hits.iter().enumerate() {
+                let base = (off + chains[j].len() - 1) * vocab;
+                logits[i] = out.logits[base..base + vocab].to_vec();
+                off += chains[j].len();
+            }
+        }
+        for (i, kv) in kvs.iter().enumerate() {
+            g.register(kept[i], kv);
+        }
+        drop(g);
+        Ok(kvs
+            .into_iter()
+            .enumerate()
+            .map(|(i, kv)| Session {
+                tokens: kept[i].to_vec(),
+                last_logits: std::mem::take(&mut logits[i]),
+                steps: 0,
+                kv: Some(kv),
+                kv_shards: Vec::new(),
+                spec_accepted: Vec::new(),
+                spec_drafted_total: 0,
+                spec_accepted_total: 0,
+            })
+            .collect())
     }
 }
 
@@ -414,6 +543,9 @@ impl Engine {
                         * KvPool::pages_for_session(arch.n_layers, arch.max_seq)
                 });
                 let pool = KvPool::new(&arch, opts.kv, pages);
+                let prefix = opts
+                    .prefix
+                    .then(|| Mutex::new(PrefixIndex::new(pool.clone(), arch.n_layers)));
                 Ok(Engine {
                     inner: Inner::Cached(CachedEngine {
                         arch,
@@ -423,6 +555,7 @@ impl Engine {
                         kv: opts.kv,
                         attn_threshold: opts.attn_threshold,
                         pool,
+                        prefix,
                     }),
                 })
             }
@@ -482,6 +615,10 @@ impl Engine {
             Inner::Cached(ce) => {
                 let keep = prompt.len().min(ce.arch.max_seq);
                 let kept = &prompt[prompt.len() - keep..];
+                if ce.prefix.is_some() {
+                    let mut out = ce.prefill_shared(&[kept])?;
+                    return Ok(out.pop().expect("one session per prompt"));
+                }
                 // Pages are reserved inside forward_prefill; dropping the
                 // state on any error releases them.
                 let mut kv = KvState::new_paged(&ce.arch, &ce.pool);
@@ -541,6 +678,9 @@ impl Engine {
                         }
                     })
                     .collect();
+                if ce.prefix.is_some() {
+                    return ce.prefill_shared(&kept);
+                }
                 let mut kvs_owned: Vec<KvState> =
                     (0..kept.len()).map(|_| KvState::new_paged(&ce.arch, &ce.pool)).collect();
                 let pm = ce.param_map();
@@ -590,6 +730,15 @@ impl Engine {
         }
     }
 
+    /// Prefix-sharing index counters (None unless
+    /// [`EngineOptions::prefix`] built an index).
+    pub fn prefix_stats(&self) -> Option<PrefixIndexStats> {
+        match &self.inner {
+            Inner::Cached(ce) => ce.prefix.as_ref().map(|ix| ix.lock().unwrap().stats()),
+            Inner::Windowed(_) => None,
+        }
+    }
+
     /// Worst-case pages one session can ever hold (a full `max_seq`
     /// window; rolling re-prefill shrinks usage back below this).
     pub fn kv_pages_per_session(&self) -> usize {
@@ -604,9 +753,7 @@ impl Engine {
     /// the tighter per-request bound [`Engine::kv_pages_worst_for`].
     pub fn max_live_sessions(&self) -> usize {
         match &self.inner {
-            Inner::Cached(ce) => {
-                ce.pool.total_pages() / self.kv_pages_per_session().max(1)
-            }
+            Inner::Cached(ce) => ce.pool.total_pages() / self.kv_pages_per_session().max(1),
             Inner::Windowed(_) => usize::MAX,
         }
     }
@@ -627,6 +774,29 @@ impl Engine {
             }
             Inner::Windowed(_) => 0,
         }
+    }
+
+    /// Prompt-aware variant of [`Engine::kv_pages_worst_for`]: discounts
+    /// the whole shared pages the prefix index currently holds for this
+    /// prompt's longest registered prefix, which prefill maps into the
+    /// session instead of allocating. The discount is sound because mapped
+    /// prefix pages are append-only *whole* pages — copy-on-write can
+    /// never turn them into private copies, so the session's own demand is
+    /// exactly its suffix pages. Callers charging this discounted bound
+    /// must budget the index's held pages separately
+    /// ([`PrefixIndexStats::pages_held`]), as the coordinator's generate
+    /// worker does. Without an index this is the length-based bound.
+    pub fn kv_pages_worst_for_prompt(&self, prompt: &[i32], want: usize) -> usize {
+        let base = self.kv_pages_worst_for(prompt.len(), want);
+        let Inner::Cached(ce) = &self.inner else { return base };
+        let Some(ix) = &ce.prefix else { return base };
+        if prompt.is_empty() {
+            return base;
+        }
+        let kept = &prompt[prompt.len() - prompt.len().min(ce.arch.max_seq)..];
+        // probe's cap (< kept pages) keeps the discount strictly below the
+        // pages `base` budgets for the kept prompt — no underflow.
+        base - 2 * ce.arch.n_layers * ix.lock().unwrap().probe(kept)
     }
 
     /// Advance every session by one token: each consumes its own greedy

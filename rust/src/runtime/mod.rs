@@ -22,6 +22,7 @@
 pub mod args;
 pub mod engine;
 pub mod native;
+pub mod prefix;
 pub mod sharded;
 pub mod spec;
 
@@ -34,6 +35,7 @@ use std::path::{Path, PathBuf};
 
 pub use args::ArgValue;
 pub use engine::{Engine, EngineOptions, Session, StepOut};
+pub use prefix::{PrefixIndex, PrefixIndexStats};
 pub use sharded::{build_engine, InferenceEngine, ShardedEngine};
 pub use spec::SpecEngine;
 #[cfg(feature = "pjrt")]

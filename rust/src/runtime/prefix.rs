@@ -1,0 +1,408 @@
+//! Prefix-trie admission index: prefill shared prompt prefixes **once**.
+//!
+//! Real chat traffic serves a handful of system/few-shot prompts to huge
+//! user populations; without sharing, two sessions with identical prompt
+//! prefixes prefill and store identical KV pages twice. [`PrefixIndex`]
+//! keys a trie on whole [`PAGE_TOKENS`]-token chunks of the prompt: each
+//! node covers one chunk and holds the page ids (one per K/V buffer,
+//! layer-major K then V — the [`KvState::map_prefix`] order) that a prior
+//! prefill produced for exactly those tokens, plus the cumulative
+//! attention-PPU block counts up to that depth. The index holds **strong**
+//! refcounts on its pages (page ids are recycled by the pool, so weak
+//! references would be unsound);
+//! [`Engine::prefill`](crate::runtime::Engine::prefill) consults it, maps
+//! the deepest fully-matching chain of pages into the new session's table
+//! by reference, and prefills only the divergent suffix. The matched depth is
+//! capped below the full prompt so the suffix is never empty — the session
+//! always computes its own last-token logits.
+//!
+//! Under pool pressure the engine evicts the least-recently-used root
+//! subtree ([`PrefixIndex::evict_lru`]) and retries: index pages are a
+//! cache, sessions are load, and load wins. Everything here is
+//! engine-private behind a `Mutex` — the pool's own refcounts make the
+//! sharing itself thread-safe, the lock only guards the trie structure.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::model::kv::{KvPool, KvState, PAGE_TOKENS};
+
+/// One trie node: a single prompt chunk's pages plus subtree.
+struct Node {
+    /// Page ids holding this chunk's `PAGE_TOKENS` rows, one per K/V
+    /// buffer (layer-major K then V). Strongly retained by the index.
+    pages: Vec<u32>,
+    /// Cumulative PPU `(fp8_blocks, total_blocks)` per buffer covering
+    /// chunks `0..=this` — the seed [`KvState::map_prefix`] installs so
+    /// mapped rows price like the prefill that produced them. Scaled
+    /// proportionally from the registering session's aggregate counters
+    /// (the same approximation `KvState::truncate` applies).
+    ppu: Vec<(u64, u64)>,
+    children: HashMap<Vec<i32>, Node>,
+    /// Logical timestamp of the last lookup that traversed this node
+    /// (ticks, not wall time — deterministic). Eviction takes the root
+    /// subtree with the smallest value.
+    last_used: u64,
+}
+
+impl Node {
+    /// Pages held by this node and every descendant.
+    fn subtree_pages(&self, out: &mut Vec<u32>) {
+        out.extend_from_slice(&self.pages);
+        for c in self.children.values() {
+            c.subtree_pages(out);
+        }
+    }
+}
+
+/// A successful prefix match: everything [`KvState::map_prefix`] needs.
+/// Valid only while the index lock is held — eviction could otherwise
+/// release the pages before the session retains them.
+pub struct PrefixHit {
+    /// Matched whole-chunk rows (`depth × PAGE_TOKENS`), always less than
+    /// the looked-up prompt length.
+    pub rows: usize,
+    /// Per-buffer page chains (layer-major K then V), one id per chunk.
+    pub per_buf: Vec<Vec<u32>>,
+    /// Cumulative PPU seed per buffer at the matched depth.
+    pub ppu: Vec<(u64, u64)>,
+}
+
+impl PrefixHit {
+    /// Borrow the page chains in the `&[&[u32]]` shape `map_prefix` takes.
+    pub fn per_buf_refs(&self) -> Vec<&[u32]> {
+        self.per_buf.iter().map(|v| v.as_slice()).collect()
+    }
+}
+
+/// Running counters for the serve report.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PrefixIndexStats {
+    /// Lookups that mapped at least one chunk.
+    pub hits: u64,
+    /// Lookups that matched nothing (including too-short prompts).
+    pub misses: u64,
+    /// Whole-page tokens lookups mapped by reference instead of
+    /// re-prefilling — the compute the index saved.
+    pub tokens_reused: u64,
+    /// Pages the index itself currently holds references on.
+    pub pages_held: usize,
+    /// Root subtrees evicted under pool pressure.
+    pub evictions: u64,
+}
+
+/// The trie. One per [`Engine`](crate::runtime::Engine), guarding the
+/// shared pool's prefix pages.
+pub struct PrefixIndex {
+    pool: Arc<KvPool>,
+    /// K/V buffers per session (`2 × n_layers`) — every node's `pages`
+    /// and `ppu` have exactly this many entries.
+    bufs: usize,
+    roots: HashMap<Vec<i32>, Node>,
+    tick: u64,
+    pages_held: usize,
+    hits: u64,
+    misses: u64,
+    tokens_reused: u64,
+    evictions: u64,
+}
+
+impl PrefixIndex {
+    pub fn new(pool: Arc<KvPool>, n_layers: usize) -> Self {
+        PrefixIndex {
+            pool,
+            bufs: 2 * n_layers,
+            roots: HashMap::new(),
+            tick: 0,
+            pages_held: 0,
+            hits: 0,
+            misses: 0,
+            tokens_reused: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn stats(&self) -> PrefixIndexStats {
+        PrefixIndexStats {
+            hits: self.hits,
+            misses: self.misses,
+            tokens_reused: self.tokens_reused,
+            pages_held: self.pages_held,
+            evictions: self.evictions,
+        }
+    }
+
+    /// Walk the deepest chain of whole chunks of `prompt` the trie covers,
+    /// capped at `(prompt.len() − 1) / PAGE_TOKENS` chunks so the unshared
+    /// suffix is never empty. Returns `None` on no match. The returned
+    /// pages stay alive through the *index's* refcounts — map them into a
+    /// session (which retains its own references) before releasing the
+    /// index lock.
+    pub fn lookup(&mut self, prompt: &[i32]) -> Option<PrefixHit> {
+        self.tick += 1;
+        let max_chunks = prompt.len().saturating_sub(1) / PAGE_TOKENS;
+        let mut per_buf: Vec<Vec<u32>> = vec![Vec::new(); self.bufs];
+        let mut ppu: Vec<(u64, u64)> = Vec::new();
+        let mut depth = 0;
+        let mut level = &mut self.roots;
+        while depth < max_chunks {
+            let key = &prompt[depth * PAGE_TOKENS..(depth + 1) * PAGE_TOKENS];
+            let Some(node) = level.get_mut(key) else { break };
+            node.last_used = self.tick;
+            for (chain, &pg) in per_buf.iter_mut().zip(&node.pages) {
+                chain.push(pg);
+            }
+            ppu.clone_from(&node.ppu);
+            depth += 1;
+            level = &mut node.children;
+        }
+        if depth == 0 {
+            self.misses += 1;
+            return None;
+        }
+        self.hits += 1;
+        let rows = depth * PAGE_TOKENS;
+        self.tokens_reused += rows as u64;
+        Some(PrefixHit { rows, per_buf, ppu })
+    }
+
+    /// Non-mutating depth probe: how many whole chunks of `prompt` the
+    /// trie currently covers (same cap as [`PrefixIndex::lookup`], without
+    /// touching hit/miss counters or LRU ticks). Admission control uses
+    /// this to discount a request's worst-case page bound ahead of the
+    /// prefill that actually maps the pages.
+    pub fn probe(&self, prompt: &[i32]) -> usize {
+        let max_chunks = prompt.len().saturating_sub(1) / PAGE_TOKENS;
+        let mut depth = 0;
+        let mut level = &self.roots;
+        while depth < max_chunks {
+            let key = &prompt[depth * PAGE_TOKENS..(depth + 1) * PAGE_TOKENS];
+            let Some(node) = level.get(key) else { break };
+            depth += 1;
+            level = &node.children;
+        }
+        depth
+    }
+
+    /// Record a freshly-prefilled session's whole pages under its prompt:
+    /// every complete `PAGE_TOKENS` chunk of `prompt` gets (or already
+    /// has) a node, new nodes retaining that chunk's page per buffer.
+    /// `kv` must be the paged cache holding exactly `prompt`'s rows.
+    pub fn register(&mut self, prompt: &[i32], kv: &KvState) {
+        if !kv.is_paged() {
+            return;
+        }
+        debug_assert_eq!(kv.len(), prompt.len(), "register after a full prefill");
+        let whole = kv.len() / PAGE_TOKENS;
+        if whole == 0 {
+            return;
+        }
+        // Aggregate PPU counters per buffer (layer-major K then V), scaled
+        // to each depth below.
+        let buf_ppu: Vec<(u64, u64)> = kv
+            .layers
+            .iter()
+            .flat_map(|l| [l.k.ppu_counts(), l.v.ppu_counts()])
+            .collect();
+        debug_assert_eq!(buf_ppu.len(), self.bufs);
+        let tables: Vec<&[u32]> = kv
+            .layers
+            .iter()
+            .flat_map(|l| [&l.k, &l.v])
+            .map(|b| b.page_ids(whole))
+            .collect();
+        self.tick += 1;
+        let mut level = &mut self.roots;
+        for depth in 0..whole {
+            let key = prompt[depth * PAGE_TOKENS..(depth + 1) * PAGE_TOKENS].to_vec();
+            let node = level.entry(key).or_insert_with(|| {
+                let pages: Vec<u32> = tables.iter().map(|t| t[depth]).collect();
+                self.pool.retain(&pages);
+                self.pages_held += pages.len();
+                let scale = ((depth + 1) * PAGE_TOKENS) as f64 / kv.len() as f64;
+                let ppu = buf_ppu
+                    .iter()
+                    .map(|&(hi, total)| {
+                        (
+                            (hi as f64 * scale).round() as u64,
+                            (total as f64 * scale).round() as u64,
+                        )
+                    })
+                    .collect();
+                Node { pages, ppu, children: HashMap::new(), last_used: 0 }
+            });
+            node.last_used = self.tick;
+            level = &mut node.children;
+        }
+    }
+
+    /// Evict the least-recently-used **root subtree**, releasing every
+    /// page it held, and return how many references were dropped (0 when
+    /// the index is empty). Root granularity matches the workload: each
+    /// root is one system prompt's tree, and half-evicted trees would keep
+    /// their most-shared (earliest) pages unreachable anyway.
+    pub fn evict_lru(&mut self) -> usize {
+        let Some(key) =
+            self.roots.iter().min_by_key(|(_, n)| n.last_used).map(|(k, _)| k.clone())
+        else {
+            return 0;
+        };
+        let node = self.roots.remove(&key).expect("key found above");
+        let mut pages = Vec::new();
+        node.subtree_pages(&mut pages);
+        self.pool.release(&pages);
+        self.pages_held -= pages.len();
+        self.evictions += 1;
+        pages.len()
+    }
+
+    /// Drop every cached prefix (release all held pages).
+    pub fn clear(&mut self) {
+        while self.evict_lru() > 0 {}
+        self.evictions = 0;
+    }
+}
+
+impl Drop for PrefixIndex {
+    fn drop(&mut self) {
+        let mut pages = Vec::new();
+        for n in self.roots.values() {
+            n.subtree_pages(&mut pages);
+        }
+        self.pool.release(&pages);
+        self.roots.clear();
+        self.pages_held = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::forward::{Act, ModelArch, NormKind, PosKind};
+    use crate::model::kv::KvPrecision;
+    use crate::util::Rng;
+
+    fn arch() -> ModelArch {
+        ModelArch {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            act: Act::SwiGlu,
+            norm: NormKind::Rms,
+            pos: PosKind::Rope,
+            max_seq: 128,
+        }
+    }
+
+    /// A prompt of `n` tokens and a paged cache "prefilled" with one row
+    /// per token (synthetic rows — the index never reads payloads).
+    fn fake_prefill(a: &ModelArch, pool: &Arc<KvPool>, prompt: &[i32]) -> KvState {
+        let mut kv = KvState::new_paged(a, pool);
+        kv.reserve(prompt.len()).unwrap();
+        let mut rng = Rng::new(7);
+        for _ in 0..prompt.len() {
+            let row = rng.normal_vec(a.d_model, 1.0);
+            for l in &mut kv.layers {
+                l.k.push_row(&row);
+                l.v.push_row(&row);
+            }
+            kv.advance(1);
+        }
+        kv
+    }
+
+    fn prompt(seed: i32, n: usize) -> Vec<i32> {
+        (0..n as i32).map(|i| seed * 1000 + i).collect()
+    }
+
+    #[test]
+    fn prefix_trie_matches_whole_chunks_and_caps_below_prompt_len() {
+        let a = arch();
+        let pool = KvPool::new(&a, KvPrecision::Fp8, 256);
+        let mut ix = PrefixIndex::new(pool.clone(), a.n_layers);
+
+        // Register a 2.5-page prompt: 2 whole chunks enter the trie, each
+        // holding one page per K/V buffer.
+        let p = prompt(1, 2 * PAGE_TOKENS + 8);
+        let kv = fake_prefill(&a, &pool, &p);
+        let before = pool.stats();
+        ix.register(&p, &kv);
+        let s = pool.stats();
+        assert_eq!(ix.stats().pages_held, 2 * 2 * a.n_layers);
+        assert_eq!(s.in_use_pages, before.in_use_pages, "the index allocates nothing");
+        assert_eq!(s.logical_pages, before.logical_pages + ix.stats().pages_held);
+        // Re-registering the same prompt adds nothing.
+        ix.register(&p, &kv);
+        assert_eq!(ix.stats().pages_held, 2 * 2 * a.n_layers);
+
+        // The identical prompt matches both whole chunks (8 tokens of
+        // suffix remain); PPU seeds arrive per buffer.
+        let hit = ix.lookup(&p).expect("registered prefix must hit");
+        assert_eq!(hit.rows, 2 * PAGE_TOKENS);
+        assert_eq!(hit.per_buf.len(), 2 * a.n_layers);
+        assert!(hit.per_buf.iter().all(|c| c.len() == 2));
+        assert_eq!(hit.ppu.len(), 2 * a.n_layers);
+
+        // A prompt of exactly the registered whole pages is capped one
+        // chunk short — the divergent suffix is never empty.
+        let exact = &p[..2 * PAGE_TOKENS];
+        let hit = ix.lookup(exact).expect("shorter prefix still hits");
+        assert_eq!(hit.rows, PAGE_TOKENS, "cap keeps the last chunk unshared");
+
+        // A prompt diverging inside chunk 2 matches chunk 1 only; one
+        // diverging inside chunk 1 misses entirely.
+        let mut div = p.clone();
+        div[PAGE_TOKENS + 3] += 1;
+        assert_eq!(ix.lookup(&div).unwrap().rows, PAGE_TOKENS);
+        let mut div0 = p.clone();
+        div0[2] += 1;
+        assert!(ix.lookup(&div0).is_none());
+        assert!(ix.lookup(&p[..PAGE_TOKENS]).is_none(), "too short to share");
+
+        // The mapped-into-session flow: pages stay valid because both the
+        // index and the session hold references.
+        let mut mapped = KvState::new_paged(&a, &pool);
+        let hit = ix.lookup(&p).unwrap();
+        mapped.map_prefix(&hit.per_buf_refs(), hit.rows, &hit.ppu);
+        assert_eq!(mapped.len(), 2 * PAGE_TOKENS);
+        drop(kv); // the registering session retires; index still holds pages
+        assert_eq!(pool.stats().logical_pages, ix.stats().pages_held + mapped.kv_pages());
+    }
+
+    #[test]
+    fn prefix_eviction_is_lru_at_root_granularity_and_releases_pages() {
+        let a = arch();
+        let pool = KvPool::new(&a, KvPrecision::Fp16, 256);
+        let mut ix = PrefixIndex::new(pool.clone(), a.n_layers);
+
+        let p1 = prompt(1, PAGE_TOKENS + 4);
+        let p2 = prompt(2, PAGE_TOKENS + 4);
+        let kv1 = fake_prefill(&a, &pool, &p1);
+        let kv2 = fake_prefill(&a, &pool, &p2);
+        ix.register(&p1, &kv1);
+        ix.register(&p2, &kv2);
+        drop(kv1);
+        drop(kv2);
+        // Only the index holds the 2 × (1 page per buffer) now.
+        assert_eq!(pool.stats().in_use_pages, 2 * 2 * a.n_layers);
+        assert_eq!(pool.stats().logical_pages, ix.stats().pages_held);
+
+        // Touch p2 so p1 becomes LRU, then evict once.
+        let _ = ix.lookup(&p2);
+        let freed = ix.evict_lru();
+        assert_eq!(freed, 2 * a.n_layers);
+        assert!(ix.lookup(&p1).is_none(), "p1's subtree is gone");
+        assert!(ix.lookup(&p2).is_some(), "p2 survived eviction");
+        assert_eq!(pool.stats().in_use_pages, 2 * a.n_layers);
+
+        // clear() then drains the rest; dropped index releases nothing
+        // twice (free list bounded — debug asserts in the pool).
+        ix.clear();
+        assert_eq!(ix.stats().pages_held, 0);
+        assert_eq!(pool.stats().in_use_pages, 0);
+        drop(ix);
+        assert_eq!(pool.stats().free_pages, 256);
+    }
+}

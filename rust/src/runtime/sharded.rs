@@ -42,6 +42,7 @@ use super::args::ArgValue;
 use super::engine::{
     params_map, params_weight_memory, parse_tail, ParamData, DEFAULT_POOL_SESSIONS,
 };
+use super::prefix::PrefixIndexStats;
 use super::{Engine, EngineOptions, ExecSpec, Executable, GraphKind, Runtime, Session, StepOut};
 
 /// The engine surface the serving stack programs against, implemented by
@@ -108,6 +109,25 @@ pub trait InferenceEngine {
     fn spec_draft_bytes(&self) -> Option<u64> {
         None
     }
+
+    /// Prefix-sharing index counters (`None` when no index is enabled —
+    /// the default; today only the single-worker cached [`Engine`] built
+    /// with [`EngineOptions::prefix_share`] carries one).
+    fn prefix_stats(&self) -> Option<PrefixIndexStats> {
+        None
+    }
+
+    /// Prompt-aware admission bound: like
+    /// [`InferenceEngine::kv_pages_worst_for`] but may discount whole KV
+    /// pages the engine's prefix index already holds for this exact
+    /// prompt — prefill maps those (shared, append-only, never COW-copied)
+    /// instead of allocating them. Callers charging the discounted bound
+    /// must budget the index's held pages separately
+    /// ([`PrefixIndexStats::pages_held`]). Defaults to the length-based
+    /// bound.
+    fn kv_pages_worst_for_prompt(&self, prompt: &[i32], want: usize) -> usize {
+        self.kv_pages_worst_for(prompt.len(), want)
+    }
 }
 
 impl InferenceEngine for Engine {
@@ -146,6 +166,12 @@ impl InferenceEngine for Engine {
     }
     fn kv_pages_worst_for(&self, prompt_len: usize, want: usize) -> usize {
         Engine::kv_pages_worst_for(self, prompt_len, want)
+    }
+    fn prefix_stats(&self) -> Option<PrefixIndexStats> {
+        Engine::prefix_stats(self)
+    }
+    fn kv_pages_worst_for_prompt(&self, prompt: &[i32], want: usize) -> usize {
+        Engine::kv_pages_worst_for_prompt(self, prompt, want)
     }
 }
 
@@ -597,6 +623,10 @@ impl<C: Collective> InferenceEngine for ShardedEngine<C> {
 /// the all-NVFP4 view and verifies in batched ragged passes (the windowed
 /// fallback holds no cache to fork, so it stays unwrapped). Callers hold
 /// the trait object and never branch on the concrete type.
+/// [`EngineOptions::prefix`] routes only to the single-worker cached
+/// engine: the sharded engine's per-worker pools would each need their
+/// own coordinated trie, so it ignores the flag (ROADMAP debt) and
+/// reports no [`InferenceEngine::prefix_stats`].
 pub fn build_engine(
     rt: &Runtime,
     spec: &ExecSpec,

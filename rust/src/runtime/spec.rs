@@ -11,8 +11,9 @@
 //! tensor-parallel [`ShardedEngine`]) and turns each decode step into a
 //! **draft/verify round**:
 //!
-//!  1. every session is forked ([`Session::fork`] — page-table snapshot
-//!     into fresh pool pages at shard width);
+//!  1. every session is forked ([`Session::fork`] — an O(page-table)
+//!     refcount bump sharing the parent's pages; the fork's first append
+//!     copy-on-writes only its partial tail page);
 //!  2. the forks decode `k−1` tokens greedily through the all-NVFP4 draft
 //!     view (weight-read bytes ≈ 4.56/8 of the hi blocks — the speedup
 //!     source);
@@ -42,12 +43,13 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::model::forward::{forward_step_batch, ForwardOut, ModelArch, Params, QuantInputs};
-use crate::model::kv::{KvPoolStats, KvPrecision, KvState};
+use crate::model::kv::{KvPoolExhausted, KvPoolStats, KvPrecision, KvState};
 use crate::model::WeightMemory;
 use crate::quant::PackedPanels;
 use crate::Result;
 
 use super::engine::ParamData;
+use super::prefix::PrefixIndexStats;
 use super::sharded::InferenceEngine;
 use super::{Engine, Session, ShardedEngine, StepOut};
 
@@ -225,9 +227,10 @@ impl SpecEngine {
             return self.target.as_dyn().decode_step(sessions);
         }
 
-        // Fork every session into a draft. A pool without room for the
-        // forks is backpressure, not an error: decode plainly this round
-        // (already-forked drafts drop and release their pages).
+        // Fork every session into a draft: an O(page-table) refcount bump
+        // — no payload copies, no allocation, so forking itself no longer
+        // fails under pool pressure. The pressure surfaces later, when a
+        // draft's first append copy-on-writes its partial tail page.
         let mut drafts: Vec<Session> = Vec::with_capacity(n);
         for sess in sessions.iter() {
             match sess.fork() {
@@ -242,7 +245,19 @@ impl SpecEngine {
         let mut chains: Vec<Vec<i32>> = firsts.iter().map(|&t| vec![t]).collect();
         let mut inputs = firsts;
         for _ in 0..k_round - 1 {
-            let out = self.draft_step(&inputs, &mut drafts)?;
+            // COW moved the fork-time allocation to first-append
+            // divergence, so a full pool now surfaces here instead of at
+            // fork(). It is still backpressure, not an error: drop the
+            // drafts (parents are untouched — drafts own their caches)
+            // and decode plainly this round.
+            let out = match self.draft_step(&inputs, &mut drafts) {
+                Ok(out) => out,
+                Err(e) if e.downcast_ref::<KvPoolExhausted>().is_some() => {
+                    drop(drafts);
+                    return self.target.as_dyn().decode_step(sessions);
+                }
+                Err(e) => return Err(e),
+            };
             for (i, chain) in chains.iter_mut().enumerate() {
                 let g = argmax(&out.logits[i * vocab..(i + 1) * vocab]);
                 chain.push(g);
@@ -345,6 +360,12 @@ impl InferenceEngine for SpecEngine {
     }
     fn kv_pages_worst_for(&self, prompt_len: usize, want: usize) -> usize {
         self.target.as_dyn().kv_pages_worst_for(prompt_len, want)
+    }
+    fn prefix_stats(&self) -> Option<PrefixIndexStats> {
+        self.target.as_dyn().prefix_stats()
+    }
+    fn kv_pages_worst_for_prompt(&self, prompt: &[i32], want: usize) -> usize {
+        self.target.as_dyn().kv_pages_worst_for_prompt(prompt, want)
     }
     fn spec_k(&self) -> Option<usize> {
         Some(self.k)

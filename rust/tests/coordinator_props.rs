@@ -223,6 +223,7 @@ fn continuous_batching_preserves_per_request_streams() {
         attn_threshold: None,
         workers: 1,
         spec: None,
+        prefix_share: false,
     };
     let fwd_spec = ExecSpec::new(&dir, "tiny-llama", GraphKind::FwdQuant);
     let server = Server::start(scfg, fwd_spec, tail.clone(), logits_spec, tail).unwrap();
@@ -321,6 +322,7 @@ fn pool_backpressure_defers_admissions_and_preserves_streams() {
         attn_threshold: None,
         workers: 1,
         spec: None,
+        prefix_share: false,
     };
     let fwd_spec = ExecSpec::new(&dir, "tiny-llama", GraphKind::FwdQuant);
     let server = Server::start(scfg, fwd_spec, tail.clone(), logits_spec, tail).unwrap();

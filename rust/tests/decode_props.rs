@@ -1309,9 +1309,14 @@ fn spec_fork_decode_drop_leaves_parent_untouched() {
                 let mut fork = parent.fork().unwrap();
                 assert_eq!(fork.tokens, tokens0, "{tag}: fork copies the context");
                 assert_eq!(fork.kv_bits(), bits0, "{tag}: fork copies the cache");
+                let forked = eng.pool_stats().unwrap();
+                assert_eq!(
+                    forked.in_use_pages, base_pages,
+                    "{tag}: COW fork allocates no unique pages"
+                );
                 assert!(
-                    eng.pool_stats().unwrap().in_use_pages > base_pages,
-                    "{tag}: fork allocates its own pages"
+                    forked.logical_pages > forked.in_use_pages,
+                    "{tag}: fork shares its parent's pages"
                 );
                 for _ in 0..3 {
                     let mut refs = [&mut fork];
@@ -1322,6 +1327,12 @@ fn spec_fork_decode_drop_leaves_parent_untouched() {
                     parent.cached_tokens() + 3,
                     "{tag}: fork grows independently"
                 );
+                let diverged = eng.pool_stats().unwrap();
+                assert!(
+                    diverged.in_use_pages > base_pages,
+                    "{tag}: divergence pays for the fork's private pages"
+                );
+                assert!(diverged.cow_copies > 0, "{tag}: the shared tail was copy-on-written");
             }
             assert_eq!(
                 eng.pool_stats().unwrap().in_use_pages,
@@ -1390,5 +1401,361 @@ fn spec_step_accounting_matches_session_totals() {
         sess.tokens.len() as u64,
         prompt.len() as u64 + rounds as u64 + accepted,
         "each round consumes 1 + accepted tokens"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Copy-on-write fork accounting and prefix-sharing admission
+// ---------------------------------------------------------------------------
+
+/// Reconcile the pool's books against the page tables of the live caches:
+/// unique + free partitions the arena exactly, and the logical count is
+/// the sum of every holder's page-table length (no index in these tests).
+fn assert_pool_reconciles(pool: &KvPool, states: &[&KvState], what: &str) {
+    let s = pool.stats();
+    assert_eq!(s.in_use_pages + s.free_pages, s.total_pages, "{what}: arena partition");
+    let logical: usize = states.iter().map(|kv| kv.kv_pages()).sum();
+    assert_eq!(s.logical_pages, logical, "{what}: logical = sum of page tables");
+    assert!(s.in_use_pages <= s.logical_pages, "{what}: every unique page has a holder");
+    assert!(s.peak_in_use >= s.in_use_pages, "{what}: peak watermark");
+}
+
+/// **Acceptance criterion:** a COW fork is a page-table copy — it
+/// allocates no unique pages — and a write into the shared partial tail
+/// clones exactly that page per buffer, leaving the parent byte-identical:
+/// after the child diverges, the parent's next step is bit-equal to a
+/// flat never-forked oracle. Forking at an exact page boundary shares
+/// only full pages, so divergence allocates fresh pages with zero copies.
+#[test]
+fn cow_fork_shares_pages_and_write_copies_only_the_divergent_tail() {
+    let mut rng = Rng::new(0xC0C0);
+    let arch = arch_rope();
+    let bufs = 2 * arch.n_layers; // one K and one V buffer per layer
+    let params = random_params(&arch, 610);
+    let pm = param_map(&params);
+    let tokens = random_tokens(&mut rng, PAGE_TOKENS + 5, arch.vocab); // partial tail page
+    let (t, u) = (3i32, 7i32);
+
+    // Flat oracle: same prefill, the parent's next token.
+    let mut flat = KvState::new(&arch, KvPrecision::Fp16);
+    forward_prefill(&arch, &pm, &tokens, None, &mut flat).unwrap();
+    let want = forward_step(&arch, &pm, t, &mut flat, None).unwrap().logits;
+
+    let pool = KvPool::new(&arch, KvPrecision::Fp16, 64);
+    let mut parent = KvState::new_paged(&arch, &pool);
+    forward_prefill(&arch, &pm, &tokens, None, &mut parent).unwrap();
+    let base = pool.stats();
+    assert_eq!(base.logical_pages, base.in_use_pages, "no sharing before the fork");
+
+    let mut child = parent.fork().unwrap();
+    let s = pool.stats();
+    assert_eq!(s.in_use_pages, base.in_use_pages, "fork allocates no unique pages");
+    assert_eq!(s.logical_pages, 2 * base.in_use_pages, "fork doubles the logical count");
+    assert!(s.sharing_factor() > 1.99, "everything is shared right after the fork");
+    assert_eq!(s.cow_copies, 0);
+
+    // The child diverges on a different token: only the partially-filled
+    // tail page of each buffer is writable-shared, so exactly `bufs`
+    // pages are copy-on-written.
+    forward_step(&arch, &pm, u, &mut child, None).unwrap();
+    let s = pool.stats();
+    assert_eq!(s.cow_copies, bufs as u64, "one COW per K/V buffer tail");
+    assert_eq!(s.in_use_pages, base.in_use_pages + bufs, "divergence cost = tail pages");
+
+    // The parent's tail is unique again: its own step appends in place
+    // and its logits match the never-forked flat oracle bit-for-bit.
+    let got = forward_step(&arch, &pm, t, &mut parent, None).unwrap().logits;
+    assert_bits_eq(&got, &want, "parent stream after the child diverged");
+    assert_eq!(pool.stats().cow_copies, bufs as u64, "parent pays no further COW");
+
+    // Boundary fork: every shared page is full, so divergence allocates
+    // fresh pages and never copies payloads.
+    let pool2 = KvPool::new(&arch, KvPrecision::Fp16, 64);
+    let mut parent2 = KvState::new_paged(&arch, &pool2);
+    forward_prefill(&arch, &pm, &tokens[..PAGE_TOKENS], None, &mut parent2).unwrap();
+    let base2 = pool2.stats();
+    let mut child2 = parent2.fork().unwrap();
+    forward_step(&arch, &pm, u, &mut child2, None).unwrap();
+    let s2 = pool2.stats();
+    assert_eq!(s2.cow_copies, 0, "full shared pages are never rewritten");
+    assert_eq!(s2.in_use_pages, base2.in_use_pages + bufs, "fresh pages, not copies");
+}
+
+/// Exhaustion charges **unique** pages only: with a pool sized exactly
+/// for the parent, the deep `fork_copy` fails while the COW `fork`
+/// succeeds for free; pool pressure surfaces at divergence (typed, before
+/// compute, both caches intact), and dropping the fork un-shares the
+/// parent's tail so decode resumes bit-exactly with zero free pages.
+#[test]
+fn cow_exhaustion_charges_unique_pages_only() {
+    let mut rng = Rng::new(0xC0C1);
+    let arch = arch_rope();
+    let params = random_params(&arch, 611);
+    let pm = param_map(&params);
+    let tokens = random_tokens(&mut rng, 5, arch.vocab);
+
+    // Flat oracle for the post-drop resume step.
+    let mut flat = KvState::new(&arch, KvPrecision::Fp16);
+    forward_prefill(&arch, &pm, &tokens, None, &mut flat).unwrap();
+    let want = forward_step(&arch, &pm, 9, &mut flat, None).unwrap().logits;
+
+    let per = KvPool::pages_for_session(arch.n_layers, tokens.len());
+    let pool = KvPool::new(&arch, KvPrecision::Fp16, per);
+    let mut parent = KvState::new_paged(&arch, &pool);
+    forward_prefill(&arch, &pm, &tokens, None, &mut parent).unwrap();
+    assert_eq!(pool.stats().free_pages, 0, "pool sized exactly for the parent");
+
+    assert!(parent.fork_copy().is_err(), "a deep copy needs a full second page set");
+    assert_eq!(pool.stats().exhausted_events, 1);
+    let mut child = parent.fork().unwrap(); // the COW fork needs nothing
+    assert_eq!(pool.stats().logical_pages, 2 * per);
+
+    // Divergence needs a COW page neither side has: typed, all-or-nothing.
+    let err = forward_step(&arch, &pm, 9, &mut child, None).unwrap_err();
+    assert!(err.downcast_ref::<KvPoolExhausted>().is_some(), "untyped: {err}");
+    assert_eq!(child.len(), tokens.len(), "failed divergence leaves the child intact");
+    let s = pool.stats();
+    assert_eq!((s.in_use_pages, s.cow_copies), (per, 0), "no partial COW state");
+    assert_eq!(s.exhausted_events, 2);
+
+    // Retiring the fork un-shares the tail: the parent appends in place.
+    drop(child);
+    assert_eq!(pool.stats().logical_pages, per);
+    let got = forward_step(&arch, &pm, 9, &mut parent, None).unwrap().logits;
+    assert_bits_eq(&got, &want, "parent resumes bit-exactly at zero free pages");
+}
+
+/// Pool accounting reconciles with the live page tables across every
+/// phase of a fork's life: fork → divergence (COW) → growth across a page
+/// boundary → truncate back into the shared prefix → drops in both
+/// orders. `truncate` frees the fork's private pages and releases its
+/// references on shared ones; a unique page frees only when every holder
+/// lets go.
+#[test]
+fn cow_accounting_reconciles_across_fork_write_truncate_drop() {
+    let mut rng = Rng::new(0xC0C2);
+    let arch = arch_rope();
+    let bufs = 2 * arch.n_layers;
+    let params = random_params(&arch, 612);
+    let pm = param_map(&params);
+    let pool = KvPool::new(&arch, KvPrecision::Fp8, 64);
+    let tokens = random_tokens(&mut rng, PAGE_TOKENS + 5, arch.vocab);
+
+    let mut parent = KvState::new_paged(&arch, &pool);
+    forward_prefill(&arch, &pm, &tokens, None, &mut parent).unwrap();
+    assert_pool_reconciles(&pool, &[&parent], "after prefill");
+
+    let mut child = parent.fork().unwrap();
+    assert_pool_reconciles(&pool, &[&parent, &child], "after fork");
+
+    // Diverge, then grow the child across the next page boundary.
+    let steps = 2 * PAGE_TOKENS - child.len() + 1;
+    for i in 0..steps {
+        forward_step(&arch, &pm, (i % arch.vocab) as i32, &mut child, None).unwrap();
+    }
+    assert_eq!(child.len(), 2 * PAGE_TOKENS + 1);
+    let s = pool.stats();
+    assert_eq!(s.cow_copies, bufs as u64, "only the shared tail page was copied");
+    assert_pool_reconciles(&pool, &[&parent, &child], "after divergence");
+
+    // Truncate the child back into the shared prefix: its COW'd and
+    // fresh pages free, its references on shared pages drop, and the
+    // parent keeps every one of its own pages alive.
+    let in_use_before = pool.stats().in_use_pages;
+    child.truncate(PAGE_TOKENS);
+    assert_eq!(child.kv_pages(), bufs, "one shared page per buffer survives");
+    let s = pool.stats();
+    assert_eq!(s.in_use_pages, in_use_before - 2 * bufs, "COW'd + fresh pages freed");
+    assert_pool_reconciles(&pool, &[&parent, &child], "after truncate");
+
+    // The parent drops first: its privately-held tail frees, but the
+    // pages the child still references stay unique-held.
+    drop(parent);
+    let s = pool.stats();
+    assert_eq!(s.in_use_pages, bufs, "the child keeps the shared prefix alive");
+    assert_pool_reconciles(&pool, &[&child], "after parent drop");
+
+    drop(child);
+    let s = pool.stats();
+    assert_eq!((s.in_use_pages, s.logical_pages, s.free_pages), (0, 0, 64));
+    assert_eq!(s.peak_in_use, 4 * bufs, "high-water mark from the diverged phase");
+}
+
+/// **Acceptance criterion:** prefix-shared prefill is bit-exact vs the
+/// plain engine — a full hit, a cap-limited partial hit, and misses, over
+/// FP16 and FP8 KV with and without the attention PPU — and decode
+/// continues bit-identically from the mapped caches. The index's
+/// hit/miss/reuse counters match the traffic exactly.
+#[test]
+fn prefix_prefill_bit_exact_vs_plain_engine() {
+    use fgmp::runtime::{build_engine, EngineOptions};
+    let fx = engine_fixture();
+    let stream = &fx.ev.test_stream;
+    let prefix: Vec<i32> = stream[..3 * PAGE_TOKENS].to_vec();
+    let mut p1 = prefix.clone();
+    p1.extend_from_slice(&stream[100..104]); // miss; registers the 3-chunk prefix
+    let mut p2 = prefix.clone();
+    p2.extend_from_slice(&stream[110..118]); // full hit: 48 mapped, 8 extended
+    let mut p3 = stream[..2 * PAGE_TOKENS].to_vec();
+    p3.extend_from_slice(&stream[120..136]); // 48 tokens: the lookup cap maps 32
+    let p4: Vec<i32> = stream[60..75].to_vec(); // sub-page prompt: a miss
+    let prompts = [p1, p2, p3, p4];
+
+    for kv in [KvPrecision::Fp16, KvPrecision::Fp8] {
+        for attn in [None, Some(0.5f32)] {
+            let tag = format!("{kv:?} attn={attn:?}");
+            let base = EngineOptions::default().kv(kv).attn(attn);
+            let plain = build_engine(&fx.rt, &fx.spec, fx.tail.clone(), base).unwrap();
+            let shared =
+                build_engine(&fx.rt, &fx.spec, fx.tail.clone(), base.prefix_share(true))
+                    .unwrap();
+            assert!(plain.prefix_stats().is_none(), "{tag}: plain engine has no index");
+
+            // Serial prefills: later prompts hit what earlier ones registered.
+            let mut want: Vec<fgmp::runtime::Session> = Vec::new();
+            let mut got: Vec<fgmp::runtime::Session> = Vec::new();
+            for p in &prompts {
+                want.push(plain.prefill(p).unwrap());
+                got.push(shared.prefill(p).unwrap());
+            }
+            for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+                assert_eq!(g.tokens, w.tokens, "{tag} prompt {i}: context");
+                assert_bits_eq(&g.last_logits, &w.last_logits, &format!("{tag} prompt {i}"));
+                assert_eq!(g.kv_bits(), w.kv_bits(), "{tag} prompt {i}: stored cache");
+                assert_eq!(g.cached_tokens(), w.cached_tokens(), "{tag} prompt {i}");
+            }
+            let ps = shared.prefix_stats().unwrap();
+            assert_eq!((ps.hits, ps.misses), (2, 2), "{tag}: p2/p3 hit, p1/p4 miss");
+            assert_eq!(ps.tokens_reused, (5 * PAGE_TOKENS) as u64, "{tag}: 48 + 32 reused");
+            assert!(ps.pages_held > 0, "{tag}: the index holds the registered chunks");
+            assert!(
+                shared.pool_stats().unwrap().sharing_factor() > 1.0,
+                "{tag}: mapped pages are shared"
+            );
+
+            // Decode continues bit-identically from the mapped caches.
+            for step in 0..4 {
+                let ow = {
+                    let mut refs: Vec<&mut fgmp::runtime::Session> =
+                        want.iter_mut().collect();
+                    plain.decode_step(&mut refs).unwrap()
+                };
+                let og = {
+                    let mut refs: Vec<&mut fgmp::runtime::Session> =
+                        got.iter_mut().collect();
+                    shared.decode_step(&mut refs).unwrap()
+                };
+                assert_eq!((og.rows, og.kv_tokens), (ow.rows, ow.kv_tokens), "{tag} {step}");
+                if attn.is_none() {
+                    assert_eq!(og.kv_bits_per_value, ow.kv_bits_per_value, "{tag} {step}");
+                }
+                for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+                    assert_eq!(g.tokens, w.tokens, "{tag} step {step} prompt {i}: tokens");
+                    assert_bits_eq(
+                        &g.last_logits,
+                        &w.last_logits,
+                        &format!("{tag} step {step} prompt {i}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// **Acceptance criterion:** prefix sharing multiplies live-session
+/// capacity: a pool that holds exactly two private 52-token sessions
+/// serves five shared-prefix sessions (one full prefill + four mapped
+/// suffixes) at a sharing factor ≥ 2, keeps decoding at zero free pages
+/// (appends land in private tails), and at retirement only the index's
+/// own references keep prefix pages unique-held.
+#[test]
+fn prefix_sharing_multiplies_live_sessions_over_fixed_pool() {
+    use fgmp::runtime::{build_engine, EngineOptions};
+    let fx = engine_fixture();
+    let arch = fx.ev.arts.manifest.arch().unwrap();
+    let bufs = 2 * arch.n_layers;
+    let stream = &fx.ev.test_stream;
+    // 48-token shared prefix + 4-token private suffix = 4 pages per buffer.
+    let prompts: Vec<Vec<i32>> = (0..5)
+        .map(|i| {
+            let mut p = stream[..3 * PAGE_TOKENS].to_vec();
+            p.extend_from_slice(&stream[64 + 4 * i..64 + 4 * i + 4]);
+            p
+        })
+        .collect();
+    let per_private = 4 * bufs; // one session's cost without sharing
+    let pool_pages = 2 * per_private;
+
+    // The plain engine fits exactly two such sessions.
+    let opts = EngineOptions::default().kv(KvPrecision::Fp8).pages(Some(pool_pages));
+    let plain = build_engine(&fx.rt, &fx.spec, fx.tail.clone(), opts).unwrap();
+    let _a = plain.prefill(&prompts[0]).unwrap();
+    let _b = plain.prefill(&prompts[1]).unwrap();
+    let err = plain.prefill(&prompts[2]).unwrap_err();
+    assert!(err.downcast_ref::<KvPoolExhausted>().is_some(), "untyped: {err}");
+
+    // The shared engine fits five into the same pool: 16 + 4 × 4 pages.
+    let shared =
+        build_engine(&fx.rt, &fx.spec, fx.tail.clone(), opts.prefix_share(true)).unwrap();
+    let mut sessions: Vec<fgmp::runtime::Session> =
+        prompts.iter().map(|p| shared.prefill(p).unwrap()).collect();
+    let s = shared.pool_stats().unwrap();
+    assert_eq!(s.in_use_pages, pool_pages, "five sessions exactly fill the pool");
+    assert_eq!(s.free_pages, 0);
+    assert!(s.sharing_factor() >= 2.0, "factor {:.2} < 2", s.sharing_factor());
+    assert!(s.deduped_bytes() > 0);
+    assert_eq!(shared.prefix_stats().unwrap().pages_held, 3 * bufs, "3 chunks x buffers");
+
+    // Decode at zero free pages: every append lands in a private tail.
+    {
+        let mut refs: Vec<&mut fgmp::runtime::Session> = sessions.iter_mut().collect();
+        shared.decode_step(&mut refs).unwrap();
+    }
+    for (i, sess) in sessions.iter().enumerate() {
+        assert_eq!(sess.cached_tokens(), prompts[i].len() + 1, "session {i} advanced");
+    }
+
+    // Retirement: only the index's references survive.
+    drop(sessions);
+    let s = shared.pool_stats().unwrap();
+    assert_eq!(s.in_use_pages, 3 * bufs, "the index holds the shared prefix only");
+    assert_eq!(s.logical_pages, 3 * bufs);
+}
+
+/// The prompt-aware admission bound discounts exactly the whole pages the
+/// index already holds for a prompt's registered prefix — and nothing on
+/// an empty index or for unrelated prompts.
+#[test]
+fn prefix_admission_bound_discounts_indexed_pages() {
+    use fgmp::runtime::{build_engine, EngineOptions};
+    let fx = engine_fixture();
+    let arch = fx.ev.arts.manifest.arch().unwrap();
+    let engine = build_engine(
+        &fx.rt,
+        &fx.spec,
+        fx.tail.clone(),
+        EngineOptions::default().prefix_share(true),
+    )
+    .unwrap();
+    let prompt: Vec<i32> = fx.ev.test_stream[..3 * PAGE_TOKENS + 4].to_vec();
+    let want = 10usize;
+    let base = engine.kv_pages_worst_for(prompt.len(), want);
+    assert_eq!(
+        engine.kv_pages_worst_for_prompt(&prompt, want),
+        base,
+        "empty index: the length-based bound"
+    );
+    let _held = engine.prefill(&prompt).unwrap();
+    assert_eq!(
+        engine.kv_pages_worst_for_prompt(&prompt, want),
+        base - 2 * arch.n_layers * 3,
+        "three registered chunks discounted"
+    );
+    let mut stranger = prompt.clone();
+    stranger[0] ^= 1; // first chunk can no longer match the registered trie
+    assert_eq!(
+        engine.kv_pages_worst_for_prompt(&stranger, want),
+        base,
+        "no discount for unrelated prompts"
     );
 }

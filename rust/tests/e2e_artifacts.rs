@@ -220,6 +220,7 @@ fn coordinator_serves_score_requests_natively() {
         attn_threshold: None,
         workers: 1,
         spec: None,
+        prefix_share: false,
     };
     let fwd = ExecSpec::new(dir, "tiny-llama", GraphKind::FwdQuant);
     let logits = ExecSpec::new(dir, "tiny-llama", GraphKind::LogitsQuant);
