@@ -55,6 +55,11 @@ pub mod names {
     pub const DECODE_SPEC_ROUND: &str = "decode_spec_round_d512_occ1_k4";
     pub const SESSION_FORK_COPY: &str = "session_fork_copy_d512";
     pub const SESSION_FORK_COW: &str = "session_fork_cow_d512";
+    /// One preempt/resume cycle at the page level: look the donated
+    /// 112-token context up in the prefix trie, map its whole pages into a
+    /// fresh session, and append the one-token suffix — the coordinator's
+    /// resume fast path after a pressure preemption.
+    pub const PREEMPT_RESUME: &str = "preempt_resume_d512";
 
     pub const SPEEDUP_MATMUL: &str = "speedup_matmul_d512";
     pub const SPEEDUP_MATMUL_T: &str = "speedup_matmul_t_d512";
@@ -100,8 +105,13 @@ pub mod names {
     /// for 16 (≥ 2.0 floor: prefix sharing must actually multiply pool
     /// capacity, not just deduplicate a page or two).
     pub const SHARING_FACTOR_PREFIX: &str = "sharing_factor_prefix_d512";
+    /// Fraction of the resume context a preempted-then-resumed session
+    /// gets back from donated trie pages rather than recomputing (≥ 0.8
+    /// floor: resuming must be a whole-page map plus a short suffix, not a
+    /// hidden full re-prefill).
+    pub const RESUME_REUSE_FRAC: &str = "resume_reuse_frac_d512";
 
-    pub const ALL: [&str; 30] = [
+    pub const ALL: [&str; 31] = [
         MATMUL_SCALAR,
         MATMUL_BLOCKED,
         MATMUL_DEQUANT,
@@ -132,8 +142,9 @@ pub mod names {
         DECODE_SPEC_ROUND,
         SESSION_FORK_COPY,
         SESSION_FORK_COW,
+        PREEMPT_RESUME,
     ];
-    pub const ALL_DERIVED: [&str; 14] = [
+    pub const ALL_DERIVED: [&str; 15] = [
         SPEEDUP_MATMUL,
         SPEEDUP_MATMUL_T,
         SPEEDUP_QUANT,
@@ -148,6 +159,7 @@ pub mod names {
         DRAFT_VIEW_SHRINK,
         SPEEDUP_FORK_COW,
         SHARING_FACTOR_PREFIX,
+        RESUME_REUSE_FRAC,
     ];
 }
 
@@ -224,8 +236,8 @@ pub const GROUPS: [(&str, BenchFn, &[&str], &[&str]); 7] = [
     (
         "prefix",
         prefix_benches,
-        &[names::SESSION_FORK_COPY, names::SESSION_FORK_COW],
-        &[names::SPEEDUP_FORK_COW, names::SHARING_FACTOR_PREFIX],
+        &[names::SESSION_FORK_COPY, names::SESSION_FORK_COW, names::PREEMPT_RESUME],
+        &[names::SPEEDUP_FORK_COW, names::SHARING_FACTOR_PREFIX, names::RESUME_REUSE_FRAC],
     ),
 ];
 
@@ -933,6 +945,8 @@ fn append_rows(kv: &mut KvState, d_model: usize, n: usize, rng: &mut Rng) {
 /// Prefix-sharing workloads at the d512 preset: the O(page-table)
 /// copy-on-write session fork against the pre-COW deep fork — their
 /// min-time ratio is `speedup_fork_cow_d512` (CI floor 2.0) — plus the
+/// coordinator's preempt/resume fast path (map a donated context back out
+/// of the trie; `resume_reuse_frac_d512`, CI floor 0.8) and the
 /// capacity demonstration the refcounted pool exists for: 64 live
 /// sessions admitted through the prefix trie into a pool sized for 16
 /// (4 shared 64-token system prompts, 8-token private suffixes — the
@@ -964,6 +978,38 @@ pub fn prefix_benches(suite: &mut BenchSuite, budget: Duration) {
     });
     pair(suite, names::SPEEDUP_FORK_COW, copy, cow);
     drop(parent);
+
+    // -- preempt/resume: the coordinator's page-level resume fast path --
+    // On a pressure preemption the engine donates the victim's computed
+    // pages to the trie before retiring it; the resume prompt (context +
+    // the one produced-but-unconsumed token) then comes back as a
+    // whole-page map plus a one-row suffix instead of a full re-prefill.
+    let resume_ctx = 7 * PAGE_TOKENS + 1; // preempted context + produced token
+    let resume: Vec<i32> = (0..resume_ctx).map(|i| ((i * 7 + 5) % arch.vocab) as i32).collect();
+    let mut ix = PrefixIndex::new(pool.clone(), arch.n_layers);
+    let mut donor = KvState::new_paged(&arch, &pool);
+    append_rows(&mut donor, arch.d_model, resume_ctx - 1, &mut rng);
+    ix.register(&resume[..resume_ctx - 1], &donor);
+    drop(donor); // the preempted session retires; the trie holds its pages
+    let hit_rows = ix.lookup(&resume).map_or(0, |h| h.rows);
+    assert_eq!(hit_rows, resume_ctx - 1, "trie must hold the donated context");
+    let r = bench(names::PREEMPT_RESUME, Some(1), budget, || {
+        let mut kv = KvState::new_paged(&arch, &pool);
+        if let Some(hit) = ix.lookup(&resume) {
+            kv.map_prefix(&hit.per_buf_refs(), hit.rows, &hit.ppu);
+        }
+        append_rows(&mut kv, arch.d_model, resume.len() - hit_rows, &mut rng);
+        black_box(&kv);
+    });
+    keep(suite, r);
+    let frac = hit_rows as f64 / resume.len() as f64;
+    println!(
+        "  -> {} {frac:.3} ({hit_rows} of {} resume tokens from donated pages)",
+        names::RESUME_REUSE_FRAC,
+        resume.len()
+    );
+    suite.derive(names::RESUME_REUSE_FRAC, frac);
+    drop(ix); // donated pages back to the free list before the capacity run
 
     // -- capacity: 64 sessions through the trie over a 16-session pool --
     let served = KvPool::new(
@@ -1063,6 +1109,9 @@ mod tests {
         // factor on the shared-prefix workload.
         assert!(baseline.derived.get(names::SPEEDUP_FORK_COW).is_some_and(|&v| v >= 2.0));
         assert!(baseline.derived.get(names::SHARING_FACTOR_PREFIX).is_some_and(|&v| v >= 2.0));
+        // The preempt/resume floor: resuming a preempted request must come
+        // mostly from donated trie pages, not a hidden full re-prefill.
+        assert!(baseline.derived.get(names::RESUME_REUSE_FRAC).is_some_and(|&v| v >= 0.8));
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! handed back via [`Batcher::defer`] and re-offered, oldest first, before
 //! any newer arrival — deferral never reorders.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::time::{Duration, Instant};
 
@@ -35,11 +35,17 @@ pub struct Batcher {
     /// Requests handed back by the executor (admission backpressure),
     /// re-offered ahead of the channel in their original order.
     deferred: VecDeque<Request>,
+    /// When each deferred request was *first* deferred. The stamp survives
+    /// drain/re-defer bounces (a request that keeps failing admission keeps
+    /// aging) and is cleared only by [`Batcher::note_admitted`], so the
+    /// executor can bound how long head-of-line bypass may starve a big
+    /// request.
+    deferred_since: HashMap<u64, Instant>,
 }
 
 impl Batcher {
     pub fn new(policy: BatchPolicy, rx: Receiver<Request>) -> Self {
-        Batcher { policy, rx, deferred: VecDeque::new() }
+        Batcher { policy, rx, deferred: VecDeque::new(), deferred_since: HashMap::new() }
     }
 
     /// Block for the next batch: returns `None` when the queue is closed
@@ -106,9 +112,33 @@ impl Batcher {
     /// defers admits the KV page pool cannot hold yet and re-drains them,
     /// still FIFO, once retirement frees pages.
     pub fn defer(&mut self, reqs: Vec<Request>) {
+        let now = Instant::now();
         for req in reqs.into_iter().rev() {
+            self.deferred_since.entry(req.id).or_insert(now);
             self.deferred.push_front(req);
         }
+    }
+
+    /// Forget a request's deferral stamp: call when it is finally admitted
+    /// (or otherwise resolved — failed, deadline-rejected) so the age map
+    /// stays bounded by the number of genuinely waiting requests.
+    pub fn note_admitted(&mut self, id: u64) {
+        self.deferred_since.remove(&id);
+    }
+
+    /// How long the request at the *front* of the deferred queue has been
+    /// waiting since it was first deferred. `None` when nothing is parked.
+    /// This is the executor's starvation signal: once the head's age passes
+    /// the promotion bound, admission reverts to strict head-of-line.
+    pub fn head_deferred_age(&self) -> Option<Duration> {
+        let head = self.deferred.front()?;
+        self.deferred_since.get(&head.id).map(|t| t.elapsed())
+    }
+
+    /// Age of a specific deferred request (first-deferral stamp), whether it
+    /// is currently parked or mid-bounce in the executor's hands.
+    pub fn deferred_age(&self, id: u64) -> Option<Duration> {
+        self.deferred_since.get(&id).map(|t| t.elapsed())
     }
 
     /// Requests currently parked by [`Batcher::defer`].
@@ -200,6 +230,35 @@ mod tests {
         let last = b.next_batch().unwrap();
         assert_eq!(last.iter().map(|r| r.id).collect::<Vec<_>>(), vec![5]);
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn deferral_stamp_persists_across_bounces_until_admitted() {
+        let (tx, rx) = sync_channel(64);
+        tx.send(req(7)).unwrap();
+        let mut b = Batcher::new(
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) }, rx);
+        assert!(b.head_deferred_age().is_none(), "nothing parked yet");
+        let batch = b.next_batch().unwrap();
+        b.defer(batch);
+        let first = b.deferred_age(7).expect("stamped on first defer");
+        // Bounce: drain and re-defer. The stamp must survive (same origin
+        // instant), so the age only grows.
+        std::thread::sleep(Duration::from_millis(2));
+        let mut again = Vec::new();
+        b.drain_ready_capped(&mut again, 4);
+        assert!(b.deferred_age(7).is_some(), "stamp outlives the drain");
+        b.defer(again);
+        let later = b.deferred_age(7).unwrap();
+        assert!(later >= first, "age is monotone across bounces");
+        assert!(later >= Duration::from_millis(2));
+        assert!(b.head_deferred_age().is_some(), "id 7 heads the deferred queue");
+        // Admission clears the stamp.
+        let mut fin = Vec::new();
+        b.drain_ready_capped(&mut fin, 4);
+        b.note_admitted(7);
+        assert!(b.deferred_age(7).is_none(), "admitted requests stop aging");
+        assert!(b.head_deferred_age().is_none());
     }
 
     #[test]

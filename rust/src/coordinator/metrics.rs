@@ -43,6 +43,14 @@ struct Inner {
     // Speculative decoding (draft/verify rounds).
     spec_drafted: u64,
     spec_accepted: u64,
+    spec_cooldowns: u64,
+    // Robustness: preemption, deadlines, fault recovery.
+    preemptions: u64,
+    preempt_resumes: u64,
+    deadline_rejections: u64,
+    batch_retries: u64,
+    worker_failures: u64,
+    faults_injected: u64,
 }
 
 /// A point-in-time snapshot.
@@ -110,6 +118,32 @@ pub struct Snapshot {
     /// proxy for how closely the all-NVFP4 weight assignment tracks the
     /// served FGMP mix, reported alongside the latency/energy numbers.
     pub spec_accept_rate: f64,
+    /// Times the speculative engine disabled drafting for a cooldown
+    /// after repeated pool-exhaustion fallbacks (0 on non-speculative
+    /// engines or uncontended pools).
+    pub spec_cooldowns: u64,
+    // --- robustness (zeros on a fault-free, unpressured run) ---
+    /// Live sessions preempted under sustained pool pressure (pages
+    /// released, request parked for a backed-off bit-exact resume).
+    pub preemptions: u64,
+    /// Parked requests successfully resumed (each resume re-prefills the
+    /// preserved stream context, reusing donated prefix pages when a
+    /// prefix index is enabled).
+    pub preempt_resumes: u64,
+    /// Requests rejected with [`Rejection::DeadlineExceeded`]
+    /// (queued, parked, or mid-decode past `--deadline-ms`).
+    ///
+    /// [`Rejection::DeadlineExceeded`]: super::Rejection::DeadlineExceeded
+    pub deadline_rejections: u64,
+    /// Prefill/decode batches retried after a transient engine failure
+    /// (injected fault or worker panic).
+    pub batch_retries: u64,
+    /// Tensor-parallel worker panics caught and typed as
+    /// `EngineError::WorkerFailed` instead of killing the server.
+    pub worker_failures: u64,
+    /// Faults fired by the [`util::faults`](crate::util::faults) registry
+    /// over the run (0 unless a chaos harness armed it).
+    pub faults_injected: u64,
 }
 
 impl Metrics {
@@ -229,6 +263,49 @@ impl Metrics {
         m.kv_bits_weighted += bits_per_value * kv_tokens as f64;
     }
 
+    /// One live session was preempted (pages released, request parked).
+    pub fn record_preemption(&self) {
+        self.inner.lock().unwrap().preemptions += 1;
+    }
+
+    /// One parked request resumed decoding from its preserved context.
+    pub fn record_preempt_resume(&self) {
+        self.inner.lock().unwrap().preempt_resumes += 1;
+    }
+
+    /// One request was rejected for blowing its deadline.
+    pub fn record_deadline_rejection(&self) {
+        self.inner.lock().unwrap().deadline_rejections += 1;
+    }
+
+    /// One prefill/decode batch was retried after a transient failure.
+    pub fn record_batch_retry(&self) {
+        self.inner.lock().unwrap().batch_retries += 1;
+    }
+
+    /// One tensor-parallel worker panic was caught and typed.
+    pub fn record_worker_failure(&self) {
+        self.inner.lock().unwrap().worker_failures += 1;
+    }
+
+    /// `n` more faults fired since the last sample of the failpoint
+    /// registry's process-wide counter.
+    pub fn record_faults_injected(&self, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.inner.lock().unwrap().faults_injected += n;
+    }
+
+    /// `n` more draft-cooldown trips since the last sample of the
+    /// speculative engine's counter.
+    pub fn record_spec_cooldowns(&self, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.inner.lock().unwrap().spec_cooldowns += n;
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let m = self.inner.lock().unwrap();
         let mut lats = m.latencies_us.clone();
@@ -321,6 +398,13 @@ impl Metrics {
             } else {
                 m.spec_accepted as f64 / m.spec_drafted as f64
             },
+            spec_cooldowns: m.spec_cooldowns,
+            preemptions: m.preemptions,
+            preempt_resumes: m.preempt_resumes,
+            deadline_rejections: m.deadline_rejections,
+            batch_retries: m.batch_retries,
+            worker_failures: m.worker_failures,
+            faults_injected: m.faults_injected,
         }
     }
 }
@@ -363,6 +447,38 @@ mod tests {
         assert_eq!(s.kv_read_bits_per_value, 0.0);
         assert_eq!(s.spec_drafted, 0);
         assert_eq!(s.spec_accept_rate, 0.0);
+        assert_eq!(s.spec_cooldowns, 0);
+        assert_eq!(s.preemptions, 0);
+        assert_eq!(s.preempt_resumes, 0);
+        assert_eq!(s.deadline_rejections, 0);
+        assert_eq!(s.batch_retries, 0);
+        assert_eq!(s.worker_failures, 0);
+        assert_eq!(s.faults_injected, 0);
+    }
+
+    #[test]
+    fn robustness_counters_accumulate() {
+        let m = Metrics::new();
+        m.record_preemption();
+        m.record_preemption();
+        m.record_preempt_resume();
+        m.record_deadline_rejection();
+        m.record_batch_retry();
+        m.record_batch_retry();
+        m.record_batch_retry();
+        m.record_worker_failure();
+        m.record_faults_injected(5);
+        m.record_faults_injected(0); // no-op sample
+        m.record_spec_cooldowns(2);
+        m.record_spec_cooldowns(0); // no-op sample
+        let s = m.snapshot();
+        assert_eq!(s.preemptions, 2);
+        assert_eq!(s.preempt_resumes, 1);
+        assert_eq!(s.deadline_rejections, 1);
+        assert_eq!(s.batch_retries, 3);
+        assert_eq!(s.worker_failures, 1);
+        assert_eq!(s.faults_injected, 5);
+        assert_eq!(s.spec_cooldowns, 2);
     }
 
     #[test]

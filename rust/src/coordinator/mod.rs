@@ -25,7 +25,7 @@ pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::Metrics;
-pub use router::{Request, RequestKind, Response, Router};
+pub use router::{Rejection, Request, RequestKind, Response, Router};
 pub use server::{
     decode_step_energy, decode_step_energy_tp, kv_dims_from_profiles, Server, ServerConfig,
 };

@@ -35,6 +35,19 @@ impl Request {
     }
 }
 
+/// Why a request came back without a payload. `None` on the response
+/// means success; the typed variants let clients distinguish a blown
+/// deadline (retry with a longer budget, or shed) from an execution
+/// failure (the request itself may be at fault).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rejection {
+    /// The request sat past its `--deadline-ms` budget (queued, parked,
+    /// or mid-decode) and was cancelled; any pages it held were returned.
+    DeadlineExceeded,
+    /// Execution failed (engine error, malformed request, shutdown).
+    Failed,
+}
+
 /// What the client gets back.
 #[derive(Debug, Clone)]
 pub struct Response {
@@ -44,6 +57,8 @@ pub struct Response {
     /// Generate requests: the produced tokens.
     pub generated: Option<Vec<i32>>,
     pub latency: std::time::Duration,
+    /// `None` on success; the typed reason when the payload is missing.
+    pub rejection: Option<Rejection>,
 }
 
 /// Fans requests into per-kind bounded queues. Conservation (every accepted

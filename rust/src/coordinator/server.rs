@@ -18,23 +18,42 @@
 //! [`crate::hwsim::kvcache::kv_cache_bits`] — pooled pages are charged
 //! identically to flat buffers (live tokens × bits/value). Pool occupancy,
 //! page fill, and deferral counts land in [`Metrics`].
+//!
+//! **Robustness.** The generation loop is chaos-ready: per-request
+//! deadlines ([`ServerConfig::deadline_ms`]) cancel queued, parked, or
+//! mid-decode requests past budget with a typed
+//! [`Rejection::DeadlineExceeded`]; transient engine failures (injected
+//! faults, tensor-parallel worker panics typed as
+//! [`EngineError::WorkerFailed`]) are retried in place with bounded
+//! attempts — the engines restore session caches on every failed step, so
+//! a retry is bit-exact; and sustained pool pressure (a deferred head aged
+//! past [`ServerConfig::promote_after_ms`] that still cannot fit) preempts
+//! the youngest live session — its computed prefix is donated to the
+//! prefix index when one exists, its pages return to the pool, and the
+//! request parks with exponential backoff. The resume re-prefills the
+//! preserved context (mirroring the engine's roll normalization), so the
+//! emitted stream is bit-identical to an uninterrupted run. Preemptions,
+//! resumes, deadline rejections, batch retries, worker failures, and
+//! injected-fault counts all land in [`Metrics`].
 
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::hwsim::energy::EnergyModel;
 use crate::hwsim::kvcache::{kv_cache_bits, KvModelDims};
 use crate::hwsim::{simulate_matmul, DatapathConfig, LayerProfile, MatmulJob};
 use crate::model::kv::KvPrecision;
 use crate::runtime::{
-    build_engine, ArgValue, EngineOptions, ExecSpec, Executable, InferenceEngine, Runtime, Session,
+    build_engine, ArgValue, EngineError, EngineOptions, ExecSpec, Executable, InferenceEngine,
+    Runtime, Session,
 };
+use crate::util::faults;
 use crate::Result;
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
-use super::router::{Request, RequestKind, Response, Router};
+use super::router::{Rejection, Request, RequestKind, Response, Router};
 
 /// Server configuration.
 #[derive(Clone)]
@@ -83,6 +102,19 @@ pub struct ServerConfig {
     /// factor on shared-prefix traffic. Single-worker engines only (the
     /// sharded engine ignores the flag).
     pub prefix_share: bool,
+    /// Per-request deadline for generation (`--deadline-ms`): a request
+    /// that has not completed this long after submission — whether still
+    /// queued, parked by preemption, or mid-decode — is cancelled with a
+    /// typed [`Rejection::DeadlineExceeded`], returning every page it
+    /// held. `None` disables deadlines.
+    pub deadline_ms: Option<u64>,
+    /// Starvation bound for the deferred queue, in ms. While the oldest
+    /// deferred request is younger than this, later arrivals that fit the
+    /// pool may bypass it (better utilization); once it ages past the
+    /// bound, admission reverts to strict head-of-line and sustained
+    /// pressure preempts the youngest live session to make room. `0`
+    /// disables both bypass and preemption (strict FIFO throughout).
+    pub promote_after_ms: u64,
 }
 
 /// A running coordinator instance.
@@ -300,6 +332,19 @@ fn fail_request(req: Request) {
         nll: None,
         generated: None,
         latency: req.submitted_at.elapsed(),
+        rejection: Some(Rejection::Failed),
+    });
+}
+
+/// Cancel one request for blowing its deadline — typed, so clients can
+/// tell a timeout from [`fail_request`]'s execution failure.
+fn reject_deadline(req: Request) {
+    let _ = req.reply.send(Response {
+        id: req.id,
+        nll: None,
+        generated: None,
+        latency: req.submitted_at.elapsed(),
+        rejection: Some(Rejection::DeadlineExceeded),
     });
 }
 
@@ -349,6 +394,7 @@ fn score_worker(
                         nll: Some((nll[row] as f64, ntok[row] as f64)),
                         generated: None,
                         latency: now.duration_since(req.submitted_at),
+                        rejection: None,
                     });
                 }
             }
@@ -372,6 +418,136 @@ struct LiveGen {
     /// prefix pages it mapped instead of allocating) — released from the
     /// committed budget at retirement.
     worst_pages: usize,
+    /// Times this request has been preempted (drives the resume backoff).
+    attempt: u32,
+}
+
+/// A preempted generation request waiting out its backoff. Holds no pool
+/// pages and no committed budget — only the tokens needed to resume the
+/// stream exactly where it stopped.
+struct Parked {
+    req: Request,
+    /// Resume context: the victim's session tokens (roll-normalized when
+    /// the cache sat at capacity) plus the one produced-but-not-yet-
+    /// consumed token, so a fresh prefill reconstructs the exact causal
+    /// state the next decode step would have seen.
+    prompt: Vec<i32>,
+    /// Tokens still to produce (`want_total` minus produced so far).
+    remaining: usize,
+    produced: Vec<i32>,
+    want_total: usize,
+    attempt: u32,
+    resume_at: Instant,
+}
+
+/// Bounded in-place retries of a transient prefill failure.
+const PREFILL_RETRIES: u32 = 3;
+/// Bounded *consecutive* transient decode-step retries before the round
+/// is failed (a sustained fault storm, not an injected blip).
+const MAX_STEP_RETRIES: u32 = 32;
+
+/// Exponential preemption backoff: 1 ms doubling per attempt, capped at
+/// 128 ms so a repeatedly-preempted request keeps probing for pages.
+fn backoff_for(attempt: u32) -> Duration {
+    Duration::from_millis(1u64 << attempt.min(7))
+}
+
+/// Preempt the youngest live session (most recent submission — least sunk
+/// cost): donate its computed prefix to the prefix index when one exists
+/// (the resume then maps those pages back instead of recomputing them),
+/// release its budget and pages, and park the request for a backed-off
+/// resume. Returns `false` with nothing live to preempt.
+fn preempt_youngest<E: InferenceEngine + ?Sized>(
+    engine: &E,
+    live: &mut Vec<LiveGen>,
+    parked: &mut Vec<Parked>,
+    committed: &mut usize,
+) -> bool {
+    if live.is_empty() {
+        return false;
+    }
+    let mut vi = 0;
+    for (i, lg) in live.iter().enumerate() {
+        if lg.req.submitted_at > live[vi].req.submitted_at {
+            vi = i;
+        }
+    }
+    let lg = live.swap_remove(vi);
+    engine.preempt_donate(&lg.sess);
+    *committed = committed.saturating_sub(lg.worst_pages);
+    // Rebuild the exact causal context the next step would have seen. The
+    // session holds `prompt ++ produced[..n-1]` (the last produced token
+    // is not yet consumed). An uninterrupted run whose cache sat at
+    // capacity would roll down to the trailing half-window before
+    // consuming it, so the resume context mirrors that roll — the stream
+    // stays bit-exact either way.
+    let max_seq = engine.arch().max_seq;
+    let mut prompt = lg.sess.tokens.clone();
+    if prompt.len() >= max_seq {
+        let keep = (max_seq / 2).max(1);
+        prompt.drain(..prompt.len() - keep);
+    }
+    prompt.push(*lg.produced.last().expect("live sessions hold >= 1 produced token"));
+    let remaining = lg.want.saturating_sub(lg.produced.len()).max(1);
+    let attempt = lg.attempt + 1;
+    parked.push(Parked {
+        req: lg.req,
+        prompt,
+        remaining,
+        produced: lg.produced,
+        want_total: lg.want,
+        attempt,
+        resume_at: Instant::now() + backoff_for(attempt),
+    });
+    // Dropping the session here returns its pages to the pool (donated
+    // prefix pages stay alive through the index's references).
+    true
+}
+
+/// Prefill with bounded retries on *transient* failures (injected faults,
+/// caught worker panics). A failed attempt leaves nothing behind — the
+/// engines build fresh session state only on success — so an immediate
+/// retry is safe and bit-exact.
+fn prefill_with_retry<E: InferenceEngine + ?Sized>(
+    engine: &E,
+    prompts: &[Vec<i32>],
+    metrics: &Metrics,
+) -> Result<Vec<Session>> {
+    let mut attempts = 0u32;
+    loop {
+        match engine.prefill_batch(prompts) {
+            Ok(sessions) => return Ok(sessions),
+            Err(e) if EngineError::is_transient(&e) && attempts < PREFILL_RETRIES => {
+                attempts += 1;
+                if matches!(EngineError::classify(&e), Some(EngineError::WorkerFailed { .. })) {
+                    metrics.record_worker_failure();
+                }
+                metrics.record_batch_retry();
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Cancel live sessions past their deadline: drop the session (returning
+/// its pages), release its budget, and answer with the typed rejection.
+fn cancel_expired_live(
+    live: &mut Vec<LiveGen>,
+    deadline: Duration,
+    committed: &mut usize,
+    metrics: &Metrics,
+) {
+    let mut i = 0;
+    while i < live.len() {
+        if live[i].req.submitted_at.elapsed() >= deadline {
+            let lg = live.swap_remove(i);
+            *committed = committed.saturating_sub(lg.worst_pages);
+            metrics.record_deadline_rejection();
+            reject_deadline(lg.req);
+        } else {
+            i += 1;
+        }
+    }
 }
 
 /// Send responses for every session that has produced its token budget,
@@ -389,6 +565,7 @@ fn retire_finished(live: &mut Vec<LiveGen>, metrics: &Metrics, committed: &mut u
                 nll: None,
                 generated: Some(lg.produced[..lg.want].to_vec()),
                 latency: lg.req.submitted_at.elapsed(),
+                rejection: None,
             });
         } else {
             i += 1;
@@ -432,6 +609,12 @@ fn sample_pool<E: InferenceEngine + ?Sized>(
 /// Generic over the engine surface: the single-worker [`crate::runtime::Engine`]
 /// and the tensor-parallel [`crate::runtime::ShardedEngine`] drive the same
 /// loop.
+///
+/// Robustness (see the module docs): parked requests resume ahead of new
+/// admissions, deadlines cancel expired work at every stage, transient
+/// step failures retry in place against the engines' restored session
+/// state, and an aged deferred head that cannot fit preempts the
+/// youngest live session for a backed-off bit-exact resume.
 fn generate_worker<E: InferenceEngine + ?Sized>(
     cfg: ServerConfig,
     engine: &E,
@@ -462,8 +645,15 @@ fn generate_worker<E: InferenceEngine + ?Sized>(
     // pool could hold at full per-session cost.
     let pool_total: Option<usize> = engine.pool_stats().map(|s| s.total_pages);
     let slots_per_token = 2 * engine.arch().n_layers as u64;
+    let deadline = cfg.deadline_ms.map(Duration::from_millis);
+    let promote_after = Duration::from_millis(cfg.promote_after_ms);
+    let aging = cfg.promote_after_ms > 0;
     let mut live: Vec<LiveGen> = Vec::new();
+    let mut parked: Vec<Parked> = Vec::new();
     let mut committed: usize = 0;
+    let mut step_retries = 0u32;
+    let mut faults_seen = faults::injected();
+    let mut cooldowns_seen = engine.spec_cooldowns().unwrap_or(0);
 
     // Worst-case pages a request commits at admission (0 when unbounded).
     let worst_for = |req: &Request| -> usize {
@@ -476,19 +666,113 @@ fn generate_worker<E: InferenceEngine + ?Sized>(
     };
 
     loop {
-        // Admit new work between steps. The drain is gated on decode slots
-        // *and* on the budget fitting the oldest parked request (if any),
-        // so a parked head is not pulled-and-re-deferred every step while
-        // the pool is full.
+        // Fold any failpoint fires since the last sample into the metrics
+        // (stays 0 unless a chaos harness armed the registry), and any
+        // speculative draft-cooldown trips alongside.
+        let inj = faults::injected();
+        if inj > faults_seen {
+            metrics.record_faults_injected(inj - faults_seen);
+        }
+        faults_seen = inj;
+        if let Some(c) = engine.spec_cooldowns() {
+            if c > cooldowns_seen {
+                metrics.record_spec_cooldowns(c - cooldowns_seen);
+            }
+            cooldowns_seen = c;
+        }
+
         // Pages the prefix index holds this round: they back the
         // discounted per-request bounds, so the budget must charge them
         // once, on top of the per-session worst cases (0 with no index).
         let index_held = engine.prefix_stats().map_or(0, |s| s.pages_held);
+
+        // Parked requests first: cancel any past deadline, then resume
+        // those whose backoff elapsed and whose worst case fits again —
+        // they are the oldest work, so budget goes to them before new
+        // admissions.
+        let mut resumes: Vec<(Parked, usize)> = Vec::new();
+        if !parked.is_empty() {
+            let now = Instant::now();
+            let mut i = 0;
+            while i < parked.len() {
+                if deadline.is_some_and(|d| parked[i].req.submitted_at.elapsed() >= d) {
+                    let p = parked.remove(i);
+                    metrics.record_deadline_rejection();
+                    reject_deadline(p.req);
+                    continue;
+                }
+                if parked[i].resume_at <= now && live.len() + resumes.len() < cap {
+                    let p = &parked[i];
+                    let worst = engine.kv_pages_worst_for_prompt(&p.prompt, p.remaining);
+                    let fits =
+                        pool_total.map(|t| committed + index_held + worst <= t).unwrap_or(true);
+                    // With nothing live the budget can only free up via
+                    // index eviction, which prefill performs under real
+                    // pressure — force the resume rather than deadlock.
+                    if fits || (live.is_empty() && resumes.is_empty()) {
+                        committed += worst;
+                        resumes.push((parked.remove(i), worst));
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+        }
+        if !resumes.is_empty() {
+            let prompts: Vec<Vec<i32>> = resumes.iter().map(|(p, _)| p.prompt.clone()).collect();
+            match prefill_with_retry(engine, &prompts, &metrics) {
+                Ok(sessions) => {
+                    for ((p, worst), sess) in resumes.into_iter().zip(sessions) {
+                        metrics.record_preempt_resume();
+                        let mut lg = LiveGen {
+                            req: p.req,
+                            sess,
+                            want: p.want_total,
+                            produced: p.produced,
+                            worst_pages: worst,
+                            attempt: p.attempt,
+                        };
+                        // The resume context ends on the produced-but-not-
+                        // consumed token, so these logits are exactly the
+                        // ones the preempted stream was about to read.
+                        lg.produced.push(lg.sess.next_token());
+                        live.push(lg);
+                    }
+                    sample_pool(engine, &metrics, &live, slots_per_token);
+                }
+                Err(e) => {
+                    // Typed failures (exhaustion, a still-failing worker)
+                    // re-park with a longer backoff; anything untyped
+                    // fails the request.
+                    let repark = EngineError::classify(&e).is_some();
+                    for (mut p, worst) in resumes {
+                        committed = committed.saturating_sub(worst);
+                        if repark {
+                            p.attempt += 1;
+                            p.resume_at = Instant::now() + backoff_for(p.attempt);
+                            parked.push(p);
+                        } else {
+                            fail_request(p.req);
+                        }
+                    }
+                }
+            }
+        }
+
+        // Admit new work between steps. While the deferred head is young
+        // (under the promotion bound) later requests that fit may bypass
+        // it; once it ages past the bound admission turns strictly
+        // head-of-line — only the head is pulled — and sustained pressure
+        // preempts below. With aging disabled (promote_after_ms = 0) the
+        // drain is gated on the head fitting, the previous strict-FIFO
+        // behavior.
+        let head_aged =
+            aging && batcher.head_deferred_age().is_some_and(|age| age >= promote_after);
         let mut admitted = Vec::new();
-        if live.is_empty() {
+        if live.is_empty() && parked.is_empty() {
             match batcher.next_batch() {
                 Some(batch) => admitted = batch,
-                None => break, // queue closed and drained; nothing live
+                None => break, // queue closed and drained; nothing live or parked
             }
         } else {
             let room = cap.saturating_sub(live.len());
@@ -496,24 +780,39 @@ fn generate_worker<E: InferenceEngine + ?Sized>(
                 (Some(total), Some(head)) => committed + index_held + worst_for(head) <= total,
                 _ => true,
             };
-            if room > 0 && head_fits {
-                batcher.drain_ready_capped(&mut admitted, room);
+            if room > 0 {
+                if head_fits || (aging && !head_aged) {
+                    batcher.drain_ready_capped(&mut admitted, room);
+                } else if head_aged {
+                    // Strict head-of-line: pull exactly the aged head so
+                    // it is placed first (or triggers preemption below).
+                    batcher.drain_ready_capped(&mut admitted, 1);
+                }
             }
         }
 
-        // Admit in strict arrival order against the pool budget. The first
+        // Place in arrival order against the pool budget. The first
         // request whose worst case does not fit *yet* blocks everything
-        // behind it (head-of-line: deferral must never reorder); only
-        // requests that could never fit even an empty pool are failed.
+        // behind it (head-of-line: deferral never reorders) — unless
+        // aging allows a bounded bypass; only requests that could never
+        // fit even an empty pool are failed.
+        let bypass_ok = aging && !head_aged;
         let mut ready: Vec<(Request, usize, usize)> = Vec::new();
         let mut prompts: Vec<Vec<i32>> = Vec::new();
         let mut deferred: Vec<Request> = Vec::new();
         for req in admitted {
+            if deadline.is_some_and(|d| req.submitted_at.elapsed() >= d) {
+                batcher.note_admitted(req.id);
+                metrics.record_deadline_rejection();
+                reject_deadline(req);
+                continue;
+            }
             let (prompt, want) = match &req.kind {
                 RequestKind::Generate { prompt, n_tokens } => (prompt.clone(), *n_tokens),
                 // The router partitions by kind; anything else is a bug —
                 // fail it rather than wedge the loop.
                 _ => {
+                    batcher.note_admitted(req.id);
                     fail_request(req);
                     continue;
                 }
@@ -522,14 +821,21 @@ fn generate_worker<E: InferenceEngine + ?Sized>(
             // a request that only fits thanks to index-held pages must
             // defer (eviction could reclaim them), not fail.
             if pool_total.is_some_and(|t| engine.kv_pages_worst_for(prompt.len(), want) > t) {
+                batcher.note_admitted(req.id);
                 fail_request(req); // never satisfiable, even in an empty pool
                 continue;
             }
             let worst = engine.kv_pages_worst_for_prompt(&prompt, want);
             let fits =
                 pool_total.map(|total| committed + index_held + worst <= total).unwrap_or(true);
-            if fits && deferred.is_empty() {
+            // An aged head that still does not fit with nothing live to
+            // preempt is force-placed: decode-time exhaustion is now
+            // survivable (preemption) and prefill evicts index pages under
+            // real pressure, so refusing forever would starve it.
+            let force = head_aged && live.is_empty() && ready.is_empty() && deferred.is_empty();
+            if (fits || force) && (deferred.is_empty() || bypass_ok) {
                 committed += worst;
+                batcher.note_admitted(req.id);
                 ready.push((req, want, worst));
                 prompts.push(prompt);
             } else {
@@ -541,9 +847,24 @@ fn generate_worker<E: InferenceEngine + ?Sized>(
             batcher.defer(deferred);
         }
 
-        // Batched prefill: every admitted prompt in one forward.
+        // Sustained pressure: the deferred head has aged past the
+        // promotion bound and still cannot fit while sessions are live —
+        // preempt the youngest (one per iteration) so its pages unblock
+        // the head next time round.
+        if head_aged {
+            let pressure = match (pool_total, batcher.peek_deferred()) {
+                (Some(total), Some(head)) => committed + index_held + worst_for(head) > total,
+                _ => false,
+            };
+            if pressure && preempt_youngest(engine, &mut live, &mut parked, &mut committed) {
+                metrics.record_preemption();
+            }
+        }
+
+        // Batched prefill: every admitted prompt in one forward, with
+        // bounded retries on transient faults.
         if !ready.is_empty() {
-            match engine.prefill_batch(&prompts) {
+            match prefill_with_retry(engine, &prompts, &metrics) {
                 Ok(sessions) => {
                     for ((req, want, worst_pages), sess) in ready.into_iter().zip(sessions) {
                         metrics.record_ttft(req.submitted_at.elapsed());
@@ -553,6 +874,7 @@ fn generate_worker<E: InferenceEngine + ?Sized>(
                             want,
                             produced: Vec::with_capacity(want),
                             worst_pages,
+                            attempt: 0,
                         };
                         lg.produced.push(lg.sess.next_token());
                         live.push(lg);
@@ -561,6 +883,19 @@ fn generate_worker<E: InferenceEngine + ?Sized>(
                     // still hold their pages (a gen-tokens=1 request
                     // retires before any decode step would sample).
                     sample_pool(engine, &metrics, &live, slots_per_token);
+                }
+                Err(e) if EngineError::is_exhausted(&e) => {
+                    // The budget said fit but the pool disagreed (a forced
+                    // placement, or index-held pages): hand the round back
+                    // to the batcher and let retirement/preemption drain
+                    // the pressure instead of failing the requests.
+                    let mut back = Vec::new();
+                    for (req, _, worst) in ready {
+                        committed = committed.saturating_sub(worst);
+                        back.push(req);
+                    }
+                    metrics.record_deferred(back.len() as u64);
+                    batcher.defer(back);
                 }
                 Err(_) => {
                     for (req, _, worst) in ready {
@@ -571,7 +906,15 @@ fn generate_worker<E: InferenceEngine + ?Sized>(
             }
         }
         retire_finished(&mut live, &metrics, &mut committed);
+        if let Some(d) = deadline {
+            cancel_expired_live(&mut live, d, &mut committed, &metrics);
+        }
         if live.is_empty() {
+            // Nothing to step. Don't spin the admission loop hot while
+            // parked requests wait out their backoff.
+            if !parked.is_empty() {
+                std::thread::sleep(Duration::from_micros(200));
+            }
             continue;
         }
 
@@ -585,6 +928,7 @@ fn generate_worker<E: InferenceEngine + ?Sized>(
         let busy = t0.elapsed();
         match stepped {
             Ok(step) => {
+                step_retries = 0;
                 // KV traffic priced at the *stored* bits the attend
                 // kernels actually read this step (precision nominal, or
                 // the attention PPU's realized FGMP mix). Sharded steps
@@ -652,10 +996,50 @@ fn generate_worker<E: InferenceEngine + ?Sized>(
                 // Pool occupancy sample for this step (paged engines).
                 sample_pool(engine, &metrics, &live, slots_per_token);
             }
-            Err(_) => {
-                committed = 0;
-                for lg in live.drain(..) {
-                    fail_request(lg.req);
+            Err(e) => {
+                let classified = EngineError::classify(&e);
+                let is_worker = matches!(&classified, Some(EngineError::WorkerFailed { .. }));
+                match classified {
+                    // The pool genuinely ran dry mid-step (a roll's
+                    // transient double residency, or an earlier forced
+                    // placement). The failed step restored every session,
+                    // so preempt the youngest to free pages and retry.
+                    Some(EngineError::KvPoolExhausted(_)) => {
+                        if preempt_youngest(engine, &mut live, &mut parked, &mut committed) {
+                            metrics.record_preemption();
+                        } else {
+                            committed = 0;
+                            for lg in live.drain(..) {
+                                fail_request(lg.req);
+                            }
+                        }
+                    }
+                    // Transient: the engines restore session caches on a
+                    // failed step, so retrying in place is bit-exact.
+                    // Bounded, so a sustained fault storm still fails.
+                    Some(EngineError::WorkerFailed { .. }) | Some(EngineError::Injected { .. }) => {
+                        if is_worker {
+                            metrics.record_worker_failure();
+                        }
+                        metrics.record_batch_retry();
+                        step_retries += 1;
+                        if step_retries > MAX_STEP_RETRIES {
+                            step_retries = 0;
+                            committed = 0;
+                            for lg in live.drain(..) {
+                                fail_request(lg.req);
+                            }
+                        }
+                    }
+                    // Untyped failures stay fatal for the round: parked
+                    // requests hold no budget, so zeroing `committed`
+                    // after draining every live session is exact.
+                    _ => {
+                        committed = 0;
+                        for lg in live.drain(..) {
+                            fail_request(lg.req);
+                        }
+                    }
                 }
             }
         }

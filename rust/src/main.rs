@@ -55,6 +55,7 @@ COMMANDS
              [--kv fp16|fp8] [--decode-batch 8] [--kv-pages N]
              [--attn-ppu T] [--workers N] [--spec k] [--prefix-share]
              [--shared-prefix P] [--prefix-tokens 32] [--suffix-tokens 8]
+             [--deadline-ms D] [--promote-after-ms 250]
              score + generate traffic through the coordinator: scoring
              batches the one-shot graph, generation runs the KV-cached
              continuous-batching decode loop over a paged KV arena
@@ -77,7 +78,14 @@ COMMANDS
              prompts of --prefix-tokens tokens, each request adding its
              own --suffix-tokens user turn — so the report shows a
              sharing factor > 1 and the admission budget stretches the
-             same pool over more live sessions)
+             same pool over more live sessions;
+             --deadline-ms D cancels generation requests not finished
+             within D ms of submission with a typed DeadlineExceeded;
+             --promote-after-ms bounds deferred-queue starvation: young
+             deferred heads may be bypassed by later requests that fit,
+             an aged head turns admission strictly FIFO and preempts
+             the youngest live session — preempted requests park with
+             exponential backoff and resume bit-exact; 0 disables)
   generate   --prompt-len 16 --tokens 32 [--sessions 4] [--kv fp16|fp8]
              [--kv-pages N] [--attn-ppu T] [--workers N] [--spec k]
              [--prefix-share]
@@ -504,6 +512,8 @@ fn cmd_serve(cli: &Cli, fp4: f64, requests: usize) -> Result<()> {
         workers: eopts.workers,
         spec: eopts.spec,
         prefix_share: eopts.prefix,
+        deadline_ms: cli.flags.get("deadline_ms").and_then(|v| v.parse().ok()),
+        promote_after_ms: cli.usize("promote_after_ms", 250) as u64,
     };
     // --shared-prefix P swaps the generation prompts for the synthetic
     // shared-prefix workload: P system prompts reused round-robin, each
@@ -610,9 +620,9 @@ fn cmd_serve(cli: &Cli, fp4: f64, requests: usize) -> Result<()> {
         let draft_bytes: usize =
             qm.linears.iter().map(|l| l.packed.all_fp4_resident_bytes()).sum();
         println!("spec: k={k}  accept rate {:.1}% ({} accepted / {} drafted)  \
-                  draft view {:.3} MiB all-NVFP4 resident",
+                  draft view {:.3} MiB all-NVFP4 resident  cooldowns {}",
                  snap.spec_accept_rate * 100.0, snap.spec_accepted, snap.spec_drafted,
-                 draft_bytes as f64 / (1 << 20) as f64);
+                 draft_bytes as f64 / (1 << 20) as f64, snap.spec_cooldowns);
     }
     if snap.kv_pool_pages > 0 {
         println!("kv pool: {} pages  peak {}  occupancy {:.0}%  page fill {:.0}%  deferred {}",
@@ -622,6 +632,17 @@ fn cmd_serve(cli: &Cli, fp4: f64, requests: usize) -> Result<()> {
         println!("kv sharing: {:.2}x logical/unique  deduped {:.3} MiB peak{}",
                  snap.kv_sharing_factor, snap.kv_deduped_mib_peak,
                  if eopts.prefix { "  (prefix sharing on)" } else { "" });
+    }
+    if snap.preemptions > 0
+        || snap.deadline_rejections > 0
+        || snap.batch_retries > 0
+        || snap.worker_failures > 0
+        || snap.faults_injected > 0
+    {
+        println!("robustness: {} preempted ({} resumed)  {} deadline-rejected  \
+                  {} batch retries  {} worker failures  {} faults injected",
+                 snap.preemptions, snap.preempt_resumes, snap.deadline_rejections,
+                 snap.batch_retries, snap.worker_failures, snap.faults_injected);
     }
     println!("sim energy {:.3} mJ vs FP8 {:.3} mJ  (savings {:.1}%, incl. KV traffic)",
              snap.energy_j * 1e3, snap.energy_fp8_j * 1e3, snap.energy_savings * 100.0);

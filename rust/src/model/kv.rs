@@ -354,7 +354,13 @@ impl KvPool {
         let mut g = self.inner.lock().unwrap();
         let shared = tail.iter().filter(|&&p| g.rc[p as usize] > 1).count();
         let need = extra + shared;
-        if g.free.len() < need {
+        // Every reservation funnels through here (`alloc` delegates), so
+        // this one failpoint injects pool exhaustion for the whole arena:
+        // same typed error, same all-or-nothing books as the real thing.
+        let injected = g.free.len() >= need
+            && need > 0
+            && crate::util::faults::should_fail(crate::util::faults::KV_ALLOC);
+        if g.free.len() < need || injected {
             g.exhausted_events += 1;
             return Err(KvPoolExhausted { requested: need, free: g.free.len() });
         }

@@ -42,6 +42,15 @@ pub trait Collective: Sync {
 }
 
 /// In-process transport: one scoped thread per worker, job 0 inline.
+///
+/// Worker panics do not abort the process: [`par_run_once`] catches each
+/// job's panic, joins every worker, and re-raises the first failure as a
+/// typed [`crate::util::parallel::WorkerPanic`] payload that the engine's
+/// step boundary converts into `EngineError::WorkerFailed`. The
+/// [`crate::util::faults::WORKER_PANIC`] failpoint exercises exactly that
+/// path: when it fires, one job (the last worker — its lane picked on the
+/// calling thread so the seeded schedule stays off the racy worker
+/// threads) panics instead of running.
 #[derive(Debug, Clone, Copy)]
 pub struct ThreadCollective {
     pub world: usize,
@@ -52,6 +61,11 @@ impl Collective for ThreadCollective {
         self.world
     }
     fn run<R: Send>(&self, jobs: Vec<Job<'_, R>>) -> Vec<R> {
+        let mut jobs = jobs;
+        if !jobs.is_empty() && crate::util::faults::should_fail(crate::util::faults::WORKER_PANIC) {
+            let victim = jobs.len() - 1;
+            jobs[victim] = Box::new(|| panic!("injected fault: tp.worker_panic"));
+        }
         par_run_once(jobs)
     }
 }

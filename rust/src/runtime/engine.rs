@@ -43,9 +43,11 @@ use crate::model::forward::{
 use crate::model::kv::{KvPool, KvPoolExhausted, KvPoolStats, KvPrecision, KvState};
 use crate::model::WeightMemory;
 use crate::quant::PackedPanels;
+use crate::util::faults;
 use crate::Result;
 
 use super::args::ArgValue;
+use super::error::EngineError;
 use super::prefix::{PrefixIndex, PrefixIndexStats};
 use super::{ExecSpec, Executable, GraphKind, Runtime};
 
@@ -417,8 +419,8 @@ impl CachedEngine {
                     // Reservations are idempotent (pages kept so far carry
                     // over), so freeing index pages and retrying is safe
                     // and monotone. The typed error propagates unwrapped —
-                    // the coordinator downcasts it for deferral.
-                    Err(e) if e.downcast_ref::<KvPoolExhausted>().is_some() => {
+                    // the coordinator classifies it for deferral.
+                    Err(e) if EngineError::is_exhausted(&e) => {
                         if g.evict_lru() == 0 {
                             return Err(e);
                         }
@@ -441,7 +443,7 @@ impl CachedEngine {
                     .collect();
                 match forward_extend_batch(&self.arch, &pm, &chains, &mut refs, Some(&quant)) {
                     Ok(out) => break out,
-                    Err(e) if e.downcast_ref::<KvPoolExhausted>().is_some() => {
+                    Err(e) if EngineError::is_exhausted(&e) => {
                         if g.evict_lru() == 0 {
                             return Err(e);
                         }
@@ -610,6 +612,11 @@ impl Engine {
     /// [`crate::model::kv::KvPoolExhausted`]-sourced error the caller can
     /// downcast and treat as admission backpressure.
     pub fn prefill(&self, prompt: &[i32]) -> Result<Session> {
+        // Failpoint fires before any allocation or compute, so an injected
+        // prefill failure is indistinguishable from a pre-admission error.
+        if faults::should_fail(faults::ENGINE_PREFILL) {
+            return Err(EngineError::Injected { point: faults::ENGINE_PREFILL }.into());
+        }
         let prompt = if prompt.is_empty() { &[0i32][..] } else { prompt };
         match &self.inner {
             Inner::Cached(ce) => {
@@ -665,6 +672,9 @@ impl Engine {
     pub fn prefill_batch(&self, prompts: &[Vec<i32>]) -> Result<Vec<Session>> {
         if prompts.is_empty() {
             return Ok(Vec::new());
+        }
+        if faults::should_fail(faults::ENGINE_PREFILL) {
+            return Err(EngineError::Injected { point: faults::ENGINE_PREFILL }.into());
         }
         match &self.inner {
             Inner::Cached(ce) => {
@@ -739,6 +749,26 @@ impl Engine {
         }
     }
 
+    /// Donate a session's cache to the prefix index just before preempting
+    /// it: registering `tokens → pages` lets the request's eventual resume
+    /// map the already-computed prefix back in by reference instead of
+    /// re-prefilling it (the pages stay alive under the index's refcounts
+    /// after the session drops). Requires the cached path with prefix
+    /// sharing on and a cache covering exactly the session's tokens — the
+    /// between-steps invariant. Returns whether anything was registered;
+    /// `false` is never an error (resume then recomputes, still
+    /// bit-exact).
+    pub fn preempt_donate(&self, sess: &Session) -> bool {
+        let Inner::Cached(ce) = &self.inner else { return false };
+        let Some(ix) = &ce.prefix else { return false };
+        let Some(kv) = &sess.kv else { return false };
+        if kv.is_empty() || kv.len() != sess.tokens.len() {
+            return false;
+        }
+        ix.lock().unwrap().register(&sess.tokens, kv);
+        true
+    }
+
     /// Worst-case pages one session can ever hold (a full `max_seq`
     /// window; rolling re-prefill shrinks usage back below this).
     pub fn kv_pages_per_session(&self) -> usize {
@@ -810,6 +840,15 @@ impl Engine {
         if sessions.is_empty() {
             return Ok(StepOut::default());
         }
+        // Both failpoints sit before any session mutation: an injected
+        // failure is retryable as-is, and a slow step only stretches
+        // wall-clock (deadline pressure) without changing any token.
+        if faults::should_fail(faults::ENGINE_DECODE) {
+            return Err(EngineError::Injected { point: faults::ENGINE_DECODE }.into());
+        }
+        if faults::should_fail(faults::ENGINE_SLOW) {
+            std::thread::sleep(std::time::Duration::from_millis(faults::SLOW_STEP_MS));
+        }
         match &self.inner {
             Inner::Cached(ce) => {
                 // Validate and roll *before* consuming any token, so a
@@ -838,41 +877,51 @@ impl Engine {
                     }
                 }
                 if !roll_idx.is_empty() {
+                    // Rebuild each rolled cache in a FRESH paged state and
+                    // swap it in only once the batched re-prefill succeeds:
+                    // a mid-roll failure (exhaustion, injected fault) leaves
+                    // every live cache bit-identical to its pre-roll state,
+                    // and the partial rebuild's pages release when `fresh`
+                    // drops. The cost is transiently holding old + new pages
+                    // for the rolled sessions — pressure the coordinator
+                    // relieves by preempting a victim and retrying the step.
+                    let mut fresh: Vec<KvState> = roll_idx
+                        .iter()
+                        .map(|_| KvState::new_paged(&ce.arch, &ce.pool))
+                        .collect();
                     {
-                        let mut want = roll_idx.iter().copied().peekable();
-                        let mut kv_refs: Vec<&mut KvState> =
-                            Vec::with_capacity(roll_idx.len());
-                        for (i, sess) in sessions.iter_mut().enumerate() {
-                            if want.peek() == Some(&i) {
-                                want.next();
-                                let kv = sess.kv.as_mut().expect("checked above");
-                                kv.clear();
-                                kv_refs.push(kv);
-                            }
-                        }
+                        let mut kv_refs: Vec<&mut KvState> = fresh.iter_mut().collect();
                         let prompts: Vec<&[i32]> =
                             roll_prompts.iter().map(|p| p.as_slice()).collect();
                         forward_prefill_batch(&ce.arch, &pm, &prompts, Some(&quant), &mut kv_refs)?;
                     }
-                    for (&i, kept) in roll_idx.iter().zip(roll_prompts) {
+                    for ((&i, kept), kv) in roll_idx.iter().zip(roll_prompts).zip(fresh) {
                         sessions[i].tokens = kept;
+                        sessions[i].kv = Some(kv);
                     }
                 }
                 let inputs: Vec<i32> = sessions.iter().map(|s| s.next_token()).collect();
                 for (sess, &t) in sessions.iter_mut().zip(&inputs) {
                     sess.tokens.push(t);
                 }
+                let pre_lens: Vec<usize> = sessions.iter().map(|s| s.cached_tokens()).collect();
                 let mut kvs: Vec<&mut KvState> =
                     sessions.iter_mut().map(|s| s.kv.as_mut().expect("checked above")).collect();
                 let out = match forward_step_batch(&ce.arch, &pm, &inputs, &mut kvs, Some(&quant))
                 {
                     Ok(out) => out,
                     Err(e) => {
-                        // Un-consume the inputs so the caller's token view
-                        // stays coherent (the cache itself is undefined
-                        // after a failed step — drop such sessions).
-                        for sess in sessions.iter_mut() {
+                        // Restore every session to its pre-step state: a
+                        // failed forward never advanced any cache length,
+                        // but may have pushed physical rows into some
+                        // layers — truncate trims those and returns their
+                        // pages, and popping the input restores the token
+                        // view, so the same step can simply be retried.
+                        for (sess, &len) in sessions.iter_mut().zip(&pre_lens) {
                             sess.tokens.pop();
+                            if let Some(kv) = sess.kv.as_mut() {
+                                kv.truncate(len);
+                            }
                         }
                         return Err(e);
                     }

@@ -1,0 +1,162 @@
+//! Typed engine failure conditions.
+//!
+//! The engines speak `anyhow` (`crate::Result`) at their public surface,
+//! but the coordinator's recovery logic needs to *distinguish* failures:
+//! pool exhaustion is survivable backpressure (defer or preempt), a lost
+//! worker is transient (retry the batch), a blown deadline is a typed
+//! client-visible rejection — and anything else still fails the batch.
+//! [`EngineError`] is the one enum those decisions branch on, and
+//! [`EngineError::classify`] is the one place the ad-hoc `downcast_ref`
+//! chains were consolidated into. Because the vendored anyhow shim's
+//! blanket `From` captures any `std::error::Error + Send + Sync +
+//! 'static` as the error's source (and context layers preserve it),
+//! raising `EngineError` with `?`/`.into()` composes unchanged and
+//! classification survives `.context(...)` plumbing.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use crate::model::kv::KvPoolExhausted;
+use crate::util::parallel::WorkerPanic;
+use crate::Result;
+
+/// A typed engine failure the coordinator can branch on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EngineError {
+    /// KV page reservation failed — survivable backpressure: defer the
+    /// admission, evict prefix pages, or preempt a victim session.
+    KvPoolExhausted(KvPoolExhausted),
+    /// A tensor-parallel worker panicked mid-step. The engine restored
+    /// every session's cache to its pre-step state, so the batch is safe
+    /// to retry.
+    WorkerFailed { worker: usize, reason: String },
+    /// A request sat past its `--deadline-ms` budget and was rejected.
+    DeadlineExceeded { waited_ms: u64, deadline_ms: u64 },
+    /// A failpoint fired (`util::faults`): the step failed cleanly before
+    /// touching any state. Transient by construction — retry.
+    Injected { point: &'static str },
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::KvPoolExhausted(e) => write!(f, "{e}"),
+            EngineError::WorkerFailed { worker, reason } => {
+                write!(f, "tensor-parallel worker {worker} failed: {reason}")
+            }
+            EngineError::DeadlineExceeded { waited_ms, deadline_ms } => {
+                write!(f, "request deadline exceeded: waited {waited_ms} ms > {deadline_ms} ms")
+            }
+            EngineError::Injected { point } => write!(f, "injected fault at failpoint {point}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+impl From<KvPoolExhausted> for EngineError {
+    fn from(e: KvPoolExhausted) -> Self {
+        EngineError::KvPoolExhausted(e)
+    }
+}
+
+impl EngineError {
+    /// Recover the typed condition an `anyhow` error carries, through any
+    /// number of context layers: either an [`EngineError`] raised as such,
+    /// or a bare [`KvPoolExhausted`] from the pool/forward seams. Returns
+    /// `None` for untyped (non-recoverable) failures.
+    pub fn classify(err: &anyhow::Error) -> Option<EngineError> {
+        if let Some(e) = err.downcast_ref::<EngineError>() {
+            return Some(e.clone());
+        }
+        if let Some(e) = err.downcast_ref::<KvPoolExhausted>() {
+            return Some(EngineError::KvPoolExhausted(*e));
+        }
+        None
+    }
+
+    /// Whether `err` is typed KV pool exhaustion (either raised bare or
+    /// wrapped in an [`EngineError`]) — the predicate the evict-and-retry
+    /// and draft-fallback paths branch on.
+    pub fn is_exhausted(err: &anyhow::Error) -> bool {
+        matches!(Self::classify(err), Some(EngineError::KvPoolExhausted(_)))
+    }
+
+    /// Whether `err` is transient — the step left engine state restored
+    /// and the same call can simply be retried. Pool exhaustion is *not*
+    /// transient (retrying without freeing pages can't succeed); it is
+    /// survivable via deferral/preemption instead.
+    pub fn is_transient(err: &anyhow::Error) -> bool {
+        matches!(
+            Self::classify(err),
+            Some(EngineError::WorkerFailed { .. }) | Some(EngineError::Injected { .. })
+        )
+    }
+}
+
+/// Run `f`, converting a [`WorkerPanic`] unwinding out of a collective
+/// (see `util::par_run_once`) into the typed
+/// [`EngineError::WorkerFailed`]. Any other panic is not ours to swallow
+/// and resumes unwinding. This is the engine-side half of worker-failure
+/// recovery; callers restore session caches on the `Err` path.
+pub fn catch_worker<T>(f: impl FnOnce() -> Result<T>) -> Result<T> {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(r) => r,
+        Err(payload) => match payload.downcast_ref::<WorkerPanic>() {
+            Some(wp) => Err(EngineError::WorkerFailed {
+                worker: wp.worker,
+                reason: wp.reason.clone(),
+            }
+            .into()),
+            None => std::panic::resume_unwind(payload),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::Context;
+
+    #[test]
+    fn classify_sees_through_context_layers() {
+        let bare: anyhow::Error = KvPoolExhausted { requested: 4, free: 1 }.into();
+        assert!(EngineError::is_exhausted(&bare));
+        let wrapped = bare.context("prefill").context("serve");
+        assert_eq!(
+            EngineError::classify(&wrapped),
+            Some(EngineError::KvPoolExhausted(KvPoolExhausted { requested: 4, free: 1 }))
+        );
+        assert!(!EngineError::is_transient(&wrapped));
+
+        let worker: anyhow::Error =
+            EngineError::WorkerFailed { worker: 2, reason: "boom".into() }.into();
+        assert!(EngineError::is_transient(&worker));
+        assert!(!EngineError::is_exhausted(&worker));
+        let injected: anyhow::Error = EngineError::Injected { point: "engine.decode" }.into();
+        assert!(EngineError::is_transient(&injected));
+
+        let plain = anyhow::anyhow!("some other failure");
+        assert_eq!(EngineError::classify(&plain), None);
+        assert!(!EngineError::is_transient(&plain));
+    }
+
+    #[test]
+    fn catch_worker_types_worker_panics_and_passes_results() {
+        assert_eq!(catch_worker(|| Ok(7u32)).unwrap(), 7);
+        let err = catch_worker::<u32>(|| {
+            std::panic::panic_any(WorkerPanic { worker: 1, reason: "lost".into() })
+        })
+        .unwrap_err();
+        match EngineError::classify(&err) {
+            Some(EngineError::WorkerFailed { worker, reason }) => {
+                assert_eq!(worker, 1);
+                assert_eq!(reason, "lost");
+            }
+            other => panic!("expected WorkerFailed, got {other:?}"),
+        }
+        // Plain Err results pass through untouched (still classifiable).
+        let err = catch_worker::<u32>(|| Err(KvPoolExhausted { requested: 1, free: 0 }.into()))
+            .unwrap_err();
+        assert!(EngineError::is_exhausted(&err));
+    }
+}

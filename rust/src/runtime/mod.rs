@@ -21,6 +21,7 @@
 
 pub mod args;
 pub mod engine;
+pub mod error;
 pub mod native;
 pub mod prefix;
 pub mod sharded;
@@ -35,6 +36,7 @@ use std::path::{Path, PathBuf};
 
 pub use args::ArgValue;
 pub use engine::{Engine, EngineOptions, Session, StepOut};
+pub use error::{catch_worker, EngineError};
 pub use prefix::{PrefixIndex, PrefixIndexStats};
 pub use sharded::{build_engine, InferenceEngine, ShardedEngine};
 pub use spec::SpecEngine;

@@ -36,12 +36,14 @@ use crate::model::forward::{
 use crate::model::kv::{KvPool, KvPoolStats, KvPrecision, KvState};
 use crate::model::tp::{shard_arch, Collective, ShardPlan, ThreadCollective};
 use crate::model::WeightMemory;
+use crate::util::faults;
 use crate::{Result, BLOCK};
 
 use super::args::ArgValue;
 use super::engine::{
     params_map, params_weight_memory, parse_tail, ParamData, DEFAULT_POOL_SESSIONS,
 };
+use super::error::{catch_worker, EngineError};
 use super::prefix::PrefixIndexStats;
 use super::{Engine, EngineOptions, ExecSpec, Executable, GraphKind, Runtime, Session, StepOut};
 
@@ -128,6 +130,24 @@ pub trait InferenceEngine {
     fn kv_pages_worst_for_prompt(&self, prompt: &[i32], want: usize) -> usize {
         self.kv_pages_worst_for(prompt.len(), want)
     }
+
+    /// Donate a session's cache to the engine's prefix index just before
+    /// preempting it, so the request's eventual resume maps the
+    /// already-computed prefix back in by reference instead of
+    /// re-prefilling it. Returns whether anything was registered; `false`
+    /// (the default — no index) is never an error, resume then recomputes
+    /// the prefix and the stream stays bit-exact either way.
+    fn preempt_donate(&self, _sess: &Session) -> bool {
+        false
+    }
+
+    /// Cooldown windows a speculative engine has entered after repeated
+    /// draft-fork exhaustion fallbacks (`None` on non-speculative engines
+    /// — the default). The serve report surfaces this next to the accept
+    /// rate.
+    fn spec_cooldowns(&self) -> Option<u64> {
+        None
+    }
 }
 
 impl InferenceEngine for Engine {
@@ -172,6 +192,9 @@ impl InferenceEngine for Engine {
     }
     fn kv_pages_worst_for_prompt(&self, prompt: &[i32], want: usize) -> usize {
         Engine::kv_pages_worst_for_prompt(self, prompt, want)
+    }
+    fn preempt_donate(&self, sess: &Session) -> bool {
+        Engine::preempt_donate(self, sess)
     }
 }
 
@@ -309,6 +332,9 @@ impl<C: Collective> ShardedEngine<C> {
         if prompts.is_empty() {
             return Ok(Vec::new());
         }
+        if faults::should_fail(faults::ENGINE_PREFILL) {
+            return Err(EngineError::Injected { point: faults::ENGINE_PREFILL }.into());
+        }
         let kept: Vec<&[i32]> = prompts
             .iter()
             .map(|p| {
@@ -326,17 +352,21 @@ impl<C: Collective> ShardedEngine<C> {
         let out = {
             let mut kv_refs: Vec<Vec<&mut KvState>> =
                 shards_owned.iter_mut().map(|s| s.iter_mut().collect()).collect();
-            // On error shards_owned drops → reserved pages released.
-            forward_prefill_batch_tp(
-                &self.arch,
-                &self.shard_arches,
-                &self.plan,
-                &pm,
-                &self.coll,
-                &kept,
-                Some(&quant),
-                &mut kv_refs,
-            )?
+            // On error shards_owned drops → reserved pages released;
+            // catch_worker turns a panicked worker into the typed
+            // WorkerFailed the coordinator retries on.
+            catch_worker(|| {
+                forward_prefill_batch_tp(
+                    &self.arch,
+                    &self.shard_arches,
+                    &self.plan,
+                    &pm,
+                    &self.coll,
+                    &kept,
+                    Some(&quant),
+                    &mut kv_refs,
+                )
+            })?
         };
         let vocab = self.arch.vocab;
         Ok(shards_owned
@@ -359,6 +389,14 @@ impl<C: Collective> ShardedEngine<C> {
         if sessions.is_empty() {
             return Ok(StepOut::default());
         }
+        // Same failpoint placement as the single-worker engine: before any
+        // session mutation, so injected failures are retryable as-is.
+        if faults::should_fail(faults::ENGINE_DECODE) {
+            return Err(EngineError::Injected { point: faults::ENGINE_DECODE }.into());
+        }
+        if faults::should_fail(faults::ENGINE_SLOW) {
+            std::thread::sleep(std::time::Duration::from_millis(faults::SLOW_STEP_MS));
+        }
         let active = self.shard_arches.len();
         // Validate and roll before consuming any token, mirroring the
         // single-worker engine's step semantics exactly.
@@ -380,54 +418,66 @@ impl<C: Collective> ShardedEngine<C> {
             }
         }
         if !roll_idx.is_empty() {
+            // Rebuild rolled caches in FRESH per-worker shards and swap on
+            // success, exactly like the single-worker roll: a mid-roll
+            // failure (exhaustion, injected fault, worker panic) leaves
+            // every live shard bit-identical to its pre-roll state and the
+            // partial rebuild's pages release when `fresh` drops.
+            let mut fresh: Vec<Vec<KvState>> =
+                roll_idx.iter().map(|_| self.new_shards()).collect();
             {
-                let mut want = roll_idx.iter().copied().peekable();
-                let mut kv_refs: Vec<Vec<&mut KvState>> = Vec::with_capacity(roll_idx.len());
-                for (i, sess) in sessions.iter_mut().enumerate() {
-                    if want.peek() == Some(&i) {
-                        want.next();
-                        for kv in sess.kv_shards.iter_mut() {
-                            kv.clear();
-                        }
-                        kv_refs.push(sess.kv_shards.iter_mut().collect());
-                    }
-                }
+                let mut kv_refs: Vec<Vec<&mut KvState>> =
+                    fresh.iter_mut().map(|s| s.iter_mut().collect()).collect();
                 let prompts: Vec<&[i32]> = roll_prompts.iter().map(|p| p.as_slice()).collect();
-                forward_prefill_batch_tp(
-                    &self.arch,
-                    &self.shard_arches,
-                    &self.plan,
-                    &pm,
-                    &self.coll,
-                    &prompts,
-                    Some(&quant),
-                    &mut kv_refs,
-                )?;
+                catch_worker(|| {
+                    forward_prefill_batch_tp(
+                        &self.arch,
+                        &self.shard_arches,
+                        &self.plan,
+                        &pm,
+                        &self.coll,
+                        &prompts,
+                        Some(&quant),
+                        &mut kv_refs,
+                    )
+                })?;
             }
-            for (&i, kept) in roll_idx.iter().zip(roll_prompts) {
+            for ((&i, kept), shards) in roll_idx.iter().zip(roll_prompts).zip(fresh) {
                 sessions[i].tokens = kept;
+                sessions[i].kv_shards = shards;
             }
         }
         let inputs: Vec<i32> = sessions.iter().map(|s| s.next_token()).collect();
         for (sess, &t) in sessions.iter_mut().zip(&inputs) {
             sess.tokens.push(t);
         }
+        let pre_lens: Vec<usize> = sessions.iter().map(|s| s.cached_tokens()).collect();
         let mut kvs: Vec<Vec<&mut KvState>> =
             sessions.iter_mut().map(|s| s.kv_shards.iter_mut().collect()).collect();
-        let out = match forward_step_batch_tp(
-            &self.arch,
-            &self.shard_arches,
-            &self.plan,
-            &pm,
-            &self.coll,
-            &inputs,
-            &mut kvs,
-            Some(&quant),
-        ) {
+        let out = match catch_worker(|| {
+            forward_step_batch_tp(
+                &self.arch,
+                &self.shard_arches,
+                &self.plan,
+                &pm,
+                &self.coll,
+                &inputs,
+                &mut kvs,
+                Some(&quant),
+            )
+        }) {
             Ok(out) => out,
             Err(e) => {
-                for sess in sessions.iter_mut() {
+                // Restore every session's pre-step state: pop the consumed
+                // input and trim any physical rows the failed forward (or a
+                // panicked worker's surviving peers) appended past the
+                // un-advanced length, returning their pages — the step is
+                // then safe to retry.
+                for (sess, &len) in sessions.iter_mut().zip(&pre_lens) {
                     sess.tokens.pop();
+                    for kv in sess.kv_shards.iter_mut() {
+                        kv.truncate(len);
+                    }
                 }
                 return Err(e);
             }
@@ -496,16 +546,18 @@ impl<C: Collective> ShardedEngine<C> {
         tokens: &[i32],
         kvs: &mut [Vec<&mut KvState>],
     ) -> Result<ForwardOut> {
-        forward_step_batch_tp(
-            &self.arch,
-            &self.shard_arches,
-            &self.plan,
-            pm,
-            &self.coll,
-            tokens,
-            kvs,
-            Some(quant),
-        )
+        catch_worker(|| {
+            forward_step_batch_tp(
+                &self.arch,
+                &self.shard_arches,
+                &self.plan,
+                pm,
+                &self.coll,
+                tokens,
+                kvs,
+                Some(quant),
+            )
+        })
     }
 
     /// The speculative **verify pass** over per-worker KV shards: extend
@@ -528,16 +580,18 @@ impl<C: Collective> ShardedEngine<C> {
         let quant = self.quant_inputs();
         let mut kvs: Vec<Vec<&mut KvState>> =
             sessions.iter_mut().map(|s| s.kv_shards.iter_mut().collect()).collect();
-        forward_extend_batch_tp(
-            &self.arch,
-            &self.shard_arches,
-            &self.plan,
-            &pm,
-            &self.coll,
-            chains,
-            &mut kvs,
-            Some(&quant),
-        )
+        catch_worker(|| {
+            forward_extend_batch_tp(
+                &self.arch,
+                &self.shard_arches,
+                &self.plan,
+                &pm,
+                &self.coll,
+                chains,
+                &mut kvs,
+                Some(&quant),
+            )
+        })
     }
 
     /// KV-traffic accounting over the sessions' *current* cache state —

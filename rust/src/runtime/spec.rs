@@ -37,21 +37,33 @@
 //!
 //! Rounds degrade gracefully: when any session is within `k` tokens of
 //! `max_seq` (a roll is near) or a draft fork hits pool exhaustion, the
-//! round falls through to the target's plain decode step.
+//! round falls through to the target's plain decode step. Sustained
+//! exhaustion disables drafting entirely for a **cooldown** window
+//! ([`COOLDOWN_AFTER`] consecutive exhaustion fallbacks →
+//! [`COOLDOWN_ROUNDS`] plain rounds): a full pool will not drain in one
+//! round, and repeatedly forking into it just burns the failed forks'
+//! copy-on-write work.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::model::forward::{forward_step_batch, ForwardOut, ModelArch, Params, QuantInputs};
-use crate::model::kv::{KvPoolExhausted, KvPoolStats, KvPrecision, KvState};
+use crate::model::kv::{KvPoolStats, KvPrecision, KvState};
 use crate::model::WeightMemory;
 use crate::quant::PackedPanels;
 use crate::Result;
 
 use super::engine::ParamData;
+use super::error::EngineError;
 use super::prefix::PrefixIndexStats;
 use super::sharded::InferenceEngine;
 use super::{Engine, Session, ShardedEngine, StepOut};
+
+/// Consecutive exhaustion fallbacks that trigger a draft cooldown.
+pub const COOLDOWN_AFTER: u32 = 3;
+/// Plain-decode rounds one cooldown window lasts.
+pub const COOLDOWN_ROUNDS: u32 = 16;
 
 /// The concrete engine a [`SpecEngine`] drafts for. Concrete (not a trait
 /// object) because the draft/verify passes reach the engines' internal
@@ -86,6 +98,13 @@ pub struct SpecEngine {
     draft: HashMap<String, Arc<PackedPanels>>,
     /// Resident bytes the draft view adds on top of the target weights.
     draft_bytes: u64,
+    /// Plain-decode rounds remaining before drafting resumes (0 = active).
+    cooldown: AtomicU32,
+    /// Consecutive rounds that fell back on pool exhaustion; reset by any
+    /// round whose drafts survive to the verify pass.
+    exhaust_streak: AtomicU32,
+    /// Lifetime cooldown windows entered ([`InferenceEngine::spec_cooldowns`]).
+    cooldowns_total: AtomicU64,
 }
 
 fn draft_view(params: &[(String, ParamData)]) -> (HashMap<String, Arc<PackedPanels>>, u64) {
@@ -139,7 +158,15 @@ impl SpecEngine {
             Some(ce) => draft_view(&ce.params),
             None => (HashMap::new(), 0),
         };
-        SpecEngine { target: Target::Single(target), k: k.max(2), draft, draft_bytes }
+        SpecEngine {
+            target: Target::Single(target),
+            k: k.max(2),
+            draft,
+            draft_bytes,
+            cooldown: AtomicU32::new(0),
+            exhaust_streak: AtomicU32::new(0),
+            cooldowns_total: AtomicU64::new(0),
+        }
     }
 
     /// Wrap a tensor-parallel [`ShardedEngine`]. The draft view is shared
@@ -147,7 +174,15 @@ impl SpecEngine {
     /// column-sharded through the same collective.
     pub fn over_sharded(target: ShardedEngine, k: usize) -> SpecEngine {
         let (draft, draft_bytes) = draft_view(target.params());
-        SpecEngine { target: Target::Sharded(target), k: k.max(2), draft, draft_bytes }
+        SpecEngine {
+            target: Target::Sharded(target),
+            k: k.max(2),
+            draft,
+            draft_bytes,
+            cooldown: AtomicU32::new(0),
+            exhaust_streak: AtomicU32::new(0),
+            cooldowns_total: AtomicU64::new(0),
+        }
     }
 
     /// The configured chain length `k`.
@@ -158,6 +193,17 @@ impl SpecEngine {
     /// Resident bytes of the all-NVFP4 draft view.
     pub fn draft_resident_bytes(&self) -> u64 {
         self.draft_bytes
+    }
+
+    /// One more round fell back on pool exhaustion; a long enough streak
+    /// enters a cooldown window of plain decode.
+    fn note_exhausted(&self) {
+        let streak = self.exhaust_streak.fetch_add(1, Ordering::Relaxed) + 1;
+        if streak >= COOLDOWN_AFTER {
+            self.exhaust_streak.store(0, Ordering::Relaxed);
+            self.cooldown.store(COOLDOWN_ROUNDS, Ordering::Relaxed);
+            self.cooldowns_total.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// One batched draft decode step over the forked sessions, through the
@@ -226,6 +272,13 @@ impl SpecEngine {
         if k_round < 2 || !self.target.as_dyn().is_cached() {
             return self.target.as_dyn().decode_step(sessions);
         }
+        // In a cooldown window drafting is disabled outright: burn one
+        // round off the window and decode plainly. (Relaxed ordering —
+        // the counters are heuristics, not synchronization.)
+        if self.cooldown.load(Ordering::Relaxed) > 0 {
+            self.cooldown.fetch_sub(1, Ordering::Relaxed);
+            return self.target.as_dyn().decode_step(sessions);
+        }
 
         // Fork every session into a draft: an O(page-table) refcount bump
         // — no payload copies, no allocation, so forking itself no longer
@@ -235,7 +288,10 @@ impl SpecEngine {
         for sess in sessions.iter() {
             match sess.fork() {
                 Ok(d) => drafts.push(d),
-                Err(_) => return self.target.as_dyn().decode_step(sessions),
+                Err(_) => {
+                    self.note_exhausted();
+                    return self.target.as_dyn().decode_step(sessions);
+                }
             }
         }
 
@@ -252,8 +308,9 @@ impl SpecEngine {
             // and decode plainly this round.
             let out = match self.draft_step(&inputs, &mut drafts) {
                 Ok(out) => out,
-                Err(e) if e.downcast_ref::<KvPoolExhausted>().is_some() => {
+                Err(e) if EngineError::is_exhausted(&e) => {
                     drop(drafts);
+                    self.note_exhausted();
                     return self.target.as_dyn().decode_step(sessions);
                 }
                 Err(e) => return Err(e),
@@ -265,8 +322,10 @@ impl SpecEngine {
             }
         }
         // The drafts' pages go back to the pool before the verify pass
-        // reserves the real caches' new rows.
+        // reserves the real caches' new rows. The drafts survived, so the
+        // exhaustion streak breaks here.
         drop(drafts);
+        self.exhaust_streak.store(0, Ordering::Relaxed);
 
         let chain_refs: Vec<&[i32]> = chains.iter().map(|c| c.as_slice()).collect();
         let out = self.target_extend(sessions, &chain_refs)?;
@@ -372,5 +431,11 @@ impl InferenceEngine for SpecEngine {
     }
     fn spec_draft_bytes(&self) -> Option<u64> {
         Some(self.draft_bytes)
+    }
+    fn preempt_donate(&self, sess: &Session) -> bool {
+        self.target.as_dyn().preempt_donate(sess)
+    }
+    fn spec_cooldowns(&self) -> Option<u64> {
+        Some(self.cooldowns_total.load(Ordering::Relaxed))
     }
 }

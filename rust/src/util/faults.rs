@@ -1,0 +1,230 @@
+//! Seeded, deterministic fault injection for the serving stack.
+//!
+//! A process-global registry of named **failpoints** wired at the seams
+//! that can actually fail in production — KV page allocation
+//! ([`KV_ALLOC`]), tensor-parallel worker execution ([`WORKER_PANIC`]),
+//! and the engine's prefill/decode steps ([`ENGINE_PREFILL`],
+//! [`ENGINE_DECODE`], [`ENGINE_SLOW`]). The registry is **inert by
+//! default**: every [`should_fail`] call first reads one relaxed atomic
+//! and returns `false` without taking any lock, so a disarmed process
+//! pays a single predictable branch per failpoint — no allocation, no
+//! contention, no behavior change.
+//!
+//! Armed ([`arm`] with a seed), each failpoint fires with its configured
+//! probability ([`set`]) from one shared splitmix64 stream
+//! ([`crate::util::Rng`]), so a fixed seed plus a fixed call sequence
+//! replays the exact same fault schedule — the chaos soak test's
+//! determinism contract. Calls from concurrent worker threads serialize
+//! on the registry lock; their interleaving (and hence which *thread*
+//! absorbs a given draw) may vary across runs, which is why the chaos
+//! invariants (no lost streams, books reconcile, bit-exact tokens) are
+//! written to hold under *any* schedule the seed produces.
+//!
+//! Tests within one binary share the process-global registry: arm/disarm
+//! around the faulted region and serialize fault-using tests on a lock
+//! (see `tests/fault_props.rs`), or use test-private failpoint names —
+//! a name with no configured probability never fires.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::Rng;
+
+/// Failpoint in `KvPool::cow_alloc`: the reservation reports typed
+/// [`crate::model::kv::KvPoolExhausted`] backpressure as if the free list
+/// had run dry (all-or-nothing, nothing allocated, nothing leaked).
+pub const KV_ALLOC: &str = "kv.alloc";
+
+/// Failpoint in `ThreadCollective::run`: one worker's job panics instead
+/// of running — the engine recovers it as a typed `WorkerFailed` error.
+pub const WORKER_PANIC: &str = "tp.worker_panic";
+
+/// Failpoint at the top of engine prefill: the batch fails cleanly before
+/// any session state exists, as a typed retryable error.
+pub const ENGINE_PREFILL: &str = "engine.prefill";
+
+/// Failpoint at the top of engine decode steps: the step fails cleanly
+/// before consuming tokens or touching any cache, as a typed retryable
+/// error.
+pub const ENGINE_DECODE: &str = "engine.decode";
+
+/// Failpoint in the decode step that injects latency instead of failure
+/// (a slow worker / noisy-neighbor stand-in): the step sleeps
+/// [`SLOW_STEP_MS`] and then proceeds normally.
+pub const ENGINE_SLOW: &str = "engine.slow_step";
+
+/// Milliseconds an [`ENGINE_SLOW`] firing stalls the step.
+pub const SLOW_STEP_MS: u64 = 2;
+
+/// The zero-cost gate: disarmed processes never touch the registry lock.
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+/// Total firings across all failpoints since the last [`arm`].
+static INJECTED: AtomicU64 = AtomicU64::new(0);
+
+static REGISTRY: Mutex<Registry> = Mutex::new(Registry { rng: None, points: Vec::new() });
+
+struct Registry {
+    /// Seeded on [`arm`]; `None` while disarmed.
+    rng: Option<Rng>,
+    /// `(name, probability, fire count)` per configured failpoint.
+    points: Vec<(String, f64, u64)>,
+}
+
+fn lock() -> std::sync::MutexGuard<'static, Registry> {
+    // A panic while holding the registry lock (e.g. an injected worker
+    // panic unwinding through a test) must not wedge every later test.
+    REGISTRY.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Arm the registry with a fresh seeded schedule. Clears every previously
+/// configured failpoint and zeroes all counters; configure probabilities
+/// with [`set`] afterwards.
+pub fn arm(seed: u64) {
+    let mut g = lock();
+    g.rng = Some(Rng::new(seed));
+    g.points.clear();
+    INJECTED.store(0, Ordering::Relaxed);
+    ARMED.store(true, Ordering::Relaxed);
+}
+
+/// Disarm the registry: every [`should_fail`] reverts to the zero-cost
+/// `false` path. Configured probabilities and fire counts are kept
+/// readable ([`fires`], [`injected`]) until the next [`arm`].
+pub fn disarm() {
+    ARMED.store(false, Ordering::Relaxed);
+}
+
+/// Whether the registry is currently armed.
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Set `name`'s fire probability (clamped to `[0, 1]`). Unconfigured
+/// failpoints never fire, so arming with only test-private names leaves
+/// the production seams untouched.
+pub fn set(name: &str, probability: f64) {
+    let mut g = lock();
+    let p = probability.clamp(0.0, 1.0);
+    if let Some(e) = g.points.iter_mut().find(|(n, _, _)| n == name) {
+        e.1 = p;
+    } else {
+        g.points.push((name.to_string(), p, 0));
+    }
+}
+
+/// Draw `name`'s failpoint: `true` means the caller should fail here.
+/// Disarmed, this is one relaxed atomic load and `false`.
+#[inline]
+pub fn should_fail(name: &str) -> bool {
+    if !ARMED.load(Ordering::Relaxed) {
+        return false;
+    }
+    should_fail_armed(name)
+}
+
+#[cold]
+fn should_fail_armed(name: &str) -> bool {
+    let mut g = lock();
+    let Some(i) = g.points.iter().position(|(n, _, _)| n == name) else {
+        return false;
+    };
+    let p = g.points[i].1;
+    if p <= 0.0 {
+        return false;
+    }
+    let fire = match g.rng.as_mut() {
+        Some(rng) => p >= 1.0 || rng.f64() < p,
+        None => false,
+    };
+    if fire {
+        g.points[i].2 += 1;
+        INJECTED.fetch_add(1, Ordering::Relaxed);
+    }
+    fire
+}
+
+/// Times `name` has fired since the last [`arm`].
+pub fn fires(name: &str) -> u64 {
+    lock().points.iter().find(|(n, _, _)| n == name).map_or(0, |(_, _, c)| *c)
+}
+
+/// Total firings across all failpoints since the last [`arm`].
+pub fn injected() -> u64 {
+    INJECTED.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These unit tests only ever configure test-private failpoint names,
+    // so arming the process-global registry here cannot perturb other
+    // tests running concurrently in this binary (production seams draw on
+    // names this module never sets).
+
+    #[test]
+    fn disarmed_is_inert_and_unconfigured_names_never_fire() {
+        disarm();
+        assert!(!should_fail("test.faults.unit_inert"));
+        assert_eq!(fires("test.faults.unit_inert"), 0);
+
+        arm(7);
+        assert!(armed());
+        // Armed but unconfigured: still never fires, and draws no rng.
+        for _ in 0..100 {
+            assert!(!should_fail("test.faults.unit_unset"));
+        }
+        assert_eq!(injected(), 0);
+        disarm();
+        assert!(!armed());
+    }
+
+    #[test]
+    fn probabilities_are_deterministic_for_a_seed() {
+        arm(42);
+        set("test.faults.unit_p1", 1.0);
+        set("test.faults.unit_p0", 0.0);
+        set("test.faults.unit_half", 0.5);
+        let mut pattern = Vec::new();
+        for _ in 0..64 {
+            assert!(should_fail("test.faults.unit_p1"));
+            assert!(!should_fail("test.faults.unit_p0"));
+            pattern.push(should_fail("test.faults.unit_half"));
+        }
+        assert_eq!(fires("test.faults.unit_p1"), 64);
+        assert_eq!(fires("test.faults.unit_p0"), 0);
+        let half = fires("test.faults.unit_half");
+        assert!(half > 0 && half < 64, "p=0.5 fired {half}/64");
+        assert_eq!(injected(), 64 + half);
+
+        // Same seed, same call sequence → the same schedule bit-for-bit.
+        arm(42);
+        set("test.faults.unit_p1", 1.0);
+        set("test.faults.unit_p0", 0.0);
+        set("test.faults.unit_half", 0.5);
+        let mut replay = Vec::new();
+        for _ in 0..64 {
+            assert!(should_fail("test.faults.unit_p1"));
+            assert!(!should_fail("test.faults.unit_p0"));
+            replay.push(should_fail("test.faults.unit_half"));
+        }
+        assert_eq!(pattern, replay, "seeded schedule must replay exactly");
+        disarm();
+    }
+
+    #[test]
+    fn rearm_resets_counters_and_set_updates_in_place() {
+        arm(3);
+        set("test.faults.unit_reset", 1.0);
+        assert!(should_fail("test.faults.unit_reset"));
+        assert_eq!(fires("test.faults.unit_reset"), 1);
+        set("test.faults.unit_reset", 0.0);
+        assert!(!should_fail("test.faults.unit_reset"));
+        assert_eq!(fires("test.faults.unit_reset"), 1, "p=0 stops new fires");
+        arm(3);
+        assert_eq!(fires("test.faults.unit_reset"), 0, "re-arm clears points");
+        assert_eq!(injected(), 0);
+        disarm();
+    }
+}

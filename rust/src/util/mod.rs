@@ -1,9 +1,11 @@
 //! Self-contained utilities replacing external crates for the fully-offline
 //! build (DESIGN.md §Deps): a minimal JSON codec, a seeded RNG, a scoped
-//! parallel map, the shared blocked/SIMD compute kernels, and a micro-bench
-//! harness with machine-readable `BENCH_*.json` suites.
+//! parallel map, the shared blocked/SIMD compute kernels, a micro-bench
+//! harness with machine-readable `BENCH_*.json` suites, and the seeded
+//! failpoint registry behind the chaos tests.
 
 pub mod bench;
+pub mod faults;
 pub mod json;
 pub mod kernels;
 pub mod parallel;

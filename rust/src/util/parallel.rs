@@ -1,8 +1,31 @@
 //! Scoped parallel map over a slice — replaces rayon for the offline
 //! weight-quantization pipeline (embarrassingly parallel over linears).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
+
+/// Panic payload [`par_run_once`] re-raises after every worker has joined:
+/// worker `worker`'s job panicked with `reason`. Engines catch this at the
+/// step boundary (`runtime::catch_worker`) and convert it into the typed
+/// `EngineError::WorkerFailed`, so one lost worker fails the step instead
+/// of killing the serving process.
+#[derive(Debug, Clone)]
+pub struct WorkerPanic {
+    pub worker: usize,
+    pub reason: String,
+}
+
+/// Best-effort stringification of a caught panic payload.
+fn panic_reason(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
 
 /// Map `f` over `items` using up to `std::thread::available_parallelism()`
 /// worker threads; results come back in input order.
@@ -49,6 +72,13 @@ where
 /// shard step and must run even when `jobs.len()` exceeds the core count
 /// (a worker blocking would deadlock a collective). Job 0 runs inline on
 /// the calling thread, so a single-worker "fleet" costs no spawn at all.
+///
+/// Worker panics are caught per job (`AssertUnwindSafe`: a panicked job
+/// may leave its captures — e.g. a KV shard — partially appended, which
+/// the engine restores with `KvState::truncate` before retrying). Every
+/// worker is joined first, then the *first* failure is re-raised on the
+/// calling thread as a [`WorkerPanic`] payload — a plain unwinding panic
+/// after the scope has fully quiesced, never a double-panic abort.
 pub fn par_run_once<'env, R: Send>(jobs: Vec<Box<dyn FnOnce() -> R + Send + 'env>>) -> Vec<R> {
     let n = jobs.len();
     if n == 0 {
@@ -57,15 +87,29 @@ pub fn par_run_once<'env, R: Send>(jobs: Vec<Box<dyn FnOnce() -> R + Send + 'env
     let mut it = jobs.into_iter();
     let first = it.next().expect("n >= 1");
     let rest: Vec<_> = it.collect();
-    std::thread::scope(|s| {
-        let handles: Vec<_> = rest.into_iter().map(|j| s.spawn(j)).collect();
-        let mut out = Vec::with_capacity(n);
-        out.push(first());
+    let results: Vec<std::thread::Result<R>> = std::thread::scope(|s| {
+        let handles: Vec<_> =
+            rest.into_iter().map(|j| s.spawn(move || catch_unwind(AssertUnwindSafe(j)))).collect();
+        let mut out: Vec<std::thread::Result<R>> = Vec::with_capacity(n);
+        out.push(catch_unwind(AssertUnwindSafe(first)));
         for h in handles {
-            out.push(h.join().expect("tensor-parallel worker panicked"));
+            // The closure caught its own panic, so join only fails if the
+            // runtime killed the thread some other way — fold it in too.
+            out.push(h.join().unwrap_or_else(Err));
         }
         out
-    })
+    });
+    let mut out = Vec::with_capacity(n);
+    for (worker, r) in results.into_iter().enumerate() {
+        match r {
+            Ok(v) => out.push(v),
+            Err(payload) => {
+                let reason = panic_reason(payload.as_ref());
+                std::panic::panic_any(WorkerPanic { worker, reason });
+            }
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -97,6 +141,32 @@ mod tests {
             .map(|(i, &v)| Box::new(move || v + i as u32) as Box<dyn FnOnce() -> u32 + Send>)
             .collect();
         assert_eq!(par_run_once(jobs), vec![10, 21, 32, 43, 54]);
+    }
+
+    #[test]
+    fn run_once_joins_all_then_raises_typed_worker_panic() {
+        // Worker 2 panics; workers 0/1/3 must still run to completion
+        // before the calling thread sees a WorkerPanic payload naming the
+        // failed lane (the engine's recovery contract).
+        let ran = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() -> u32 + Send + '_>> = (0..4)
+            .map(|i| {
+                let ran = &ran;
+                Box::new(move || {
+                    if i == 2 {
+                        panic!("boom in worker 2");
+                    }
+                    ran.fetch_add(1, Ordering::Relaxed);
+                    i as u32
+                }) as Box<dyn FnOnce() -> u32 + Send>
+            })
+            .collect();
+        let err = catch_unwind(AssertUnwindSafe(|| par_run_once(jobs)))
+            .expect_err("a panicked worker must fail the run");
+        let wp = err.downcast_ref::<WorkerPanic>().expect("typed WorkerPanic payload");
+        assert_eq!(wp.worker, 2);
+        assert!(wp.reason.contains("boom"), "reason carries the panic message: {}", wp.reason);
+        assert_eq!(ran.load(Ordering::Relaxed), 3, "surviving workers all joined");
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! Seeded chaos soak over the serving stack: with every failpoint armed at
+//! realistic probabilities (allocation failures, worker panics, injected
+//! prefill/decode faults, slow steps), the coordinator must answer every
+//! request exactly once — each either a bit-exact stream or a typed
+//! rejection — and the engine's KV-page books must reconcile to zero after
+//! an adversarial session workload.
+//!
+//! The failpoint registry is process-global, so both tests serialize on one
+//! lock and disarm on every exit path (a drop guard).
+
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+use fgmp::eval::Evaluator;
+use fgmp::model::{KvPrecision, QuantConfig, QuantizedModel};
+use fgmp::runtime::{Engine, EngineError, EngineOptions, ExecSpec, GraphKind, Runtime, Session};
+use fgmp::util::{faults, Rng};
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Hold the registry for one test; disarm on drop (even under panic).
+struct FaultScope {
+    _guard: MutexGuard<'static, ()>,
+}
+
+impl FaultScope {
+    fn acquire() -> Self {
+        let guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        faults::disarm();
+        FaultScope { _guard: guard }
+    }
+}
+
+impl Drop for FaultScope {
+    fn drop(&mut self) {
+        faults::disarm();
+    }
+}
+
+/// The coordinator under sustained seeded chaos: allocation failures,
+/// worker panics, injected prefill/decode faults, and slow steps all armed
+/// at once over a 2-worker sharded engine. Every request gets exactly one
+/// answer; every answered stream is bit-exact against a clean
+/// single-engine reference; every non-answer is a typed rejection; the
+/// fault counters land in the metrics.
+#[test]
+fn chaos_soak_serves_every_stream_bit_exact() {
+    use fgmp::coordinator::{BatchPolicy, Request, RequestKind, Server, ServerConfig};
+
+    let _scope = FaultScope::acquire();
+    let dir = std::env::temp_dir().join("fgmp_chaos_soak_artifacts");
+    let _ = std::fs::remove_dir_all(&dir);
+    fgmp::io::synth::ensure_model(&dir, "tiny-llama", 42).expect("synthesize artifacts");
+
+    let rt = Runtime::native();
+    let ev = Evaluator::load(&rt, &dir, "tiny-llama").unwrap();
+    let cfg = QuantConfig::fgmp(0.7);
+    let qm = QuantizedModel::quantize(&ev.arts, &cfg).unwrap();
+    let tail = ev.quant_arg_tail(&cfg, &qm).unwrap();
+    let shapes = qm.layer_profiles(&ev.arts.manifest, ev.batch * ev.seq, &[]);
+    let logits_spec = ExecSpec::new(&dir, "tiny-llama", GraphKind::LogitsQuant);
+
+    // Clean reference streams, computed before any fault is armed. The
+    // sharded engine is bit-identical to the single-worker engine, so one
+    // clean Engine stands for the chaos target's healthy behavior.
+    let engine = Engine::new(&rt, &logits_spec, tail.clone(), KvPrecision::Fp16).unwrap();
+    let mut rng = Rng::new(0xC4A05);
+    let cases: Vec<(Vec<i32>, usize)> = (0..24)
+        .map(|i| {
+            let off = i * 32;
+            let len = 6 + rng.below(9);
+            let n_tokens = 3 + rng.below(6);
+            (ev.test_stream[off..off + len].to_vec(), n_tokens)
+        })
+        .collect();
+    let expected: Vec<Vec<i32>> = cases
+        .iter()
+        .map(|(prompt, n)| {
+            let mut sess = engine.prefill(prompt).unwrap();
+            let mut produced = vec![sess.next_token()];
+            while produced.len() < *n {
+                let mut refs = [&mut sess];
+                engine.decode_step(&mut refs).unwrap();
+                produced.push(sess.next_token());
+            }
+            produced
+        })
+        .collect();
+
+    let scfg = ServerConfig {
+        batch: ev.batch,
+        seq: ev.seq,
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+        layer_shapes: shapes,
+        queue_depth: 64,
+        kv_precision: KvPrecision::Fp16,
+        decode_batch: 4,
+        kv_pages: None,
+        energy: fgmp::hwsim::EnergyModel::default(),
+        attn_threshold: None,
+        workers: 2,
+        spec: None,
+        prefix_share: false,
+        deadline_ms: None,
+        promote_after_ms: 20,
+    };
+    let fwd_spec = ExecSpec::new(&dir, "tiny-llama", GraphKind::FwdQuant);
+    let server = Server::start(scfg, fwd_spec, tail.clone(), logits_spec, tail).unwrap();
+
+    // Arm the full failpoint menu only once the server is up, so the soak
+    // exercises steady-state serving rather than startup.
+    faults::arm(0x50AC);
+    faults::set(faults::KV_ALLOC, 0.02);
+    faults::set(faults::WORKER_PANIC, 0.08);
+    faults::set(faults::ENGINE_PREFILL, 0.1);
+    faults::set(faults::ENGINE_DECODE, 0.1);
+    faults::set(faults::ENGINE_SLOW, 0.2);
+
+    let mut rxs = Vec::new();
+    for (id, (prompt, n_tokens)) in cases.iter().enumerate() {
+        let (req, resp_rx) = Request::new(
+            id as u64,
+            RequestKind::Generate { prompt: prompt.clone(), n_tokens: *n_tokens },
+        );
+        server.router.submit(req).unwrap();
+        rxs.push(resp_rx);
+    }
+
+    let mut served = 0usize;
+    for (i, resp_rx) in rxs.into_iter().enumerate() {
+        let resp = resp_rx.recv_timeout(Duration::from_secs(120)).expect("soak stalled");
+        assert!(
+            resp.generated.is_some() != resp.rejection.is_some(),
+            "request {i}: exactly one of stream / typed rejection"
+        );
+        if let Some(got) = resp.generated {
+            assert_eq!(got, expected[i], "request {i}: stream perturbed by chaos");
+            served += 1;
+        }
+        // Exactly-once: the response channel must never fire twice.
+        assert!(resp_rx.recv().is_err(), "request {i}: answered more than once");
+    }
+    assert!(served > 0, "chaos drowned every request");
+
+    let snap = server.metrics.snapshot();
+    assert!(snap.faults_injected > 0, "failpoints never fired");
+    assert!(snap.batch_retries > 0, "injected step faults must surface as retries");
+    assert!(snap.worker_failures > 0, "worker panics must surface typed");
+    server.shutdown();
+}
+
+/// Engine-level chaos: a seeded adversarial workload (prefill / batch
+/// decode / retire, with allocation + forward failpoints armed) over a
+/// deliberately tight pool. Every error stays typed, failed operations
+/// leak nothing, and once the sessions drop the pool's books reconcile to
+/// exactly zero pages in use.
+#[test]
+fn chaos_engine_pool_reconciles_to_zero() {
+    let _scope = FaultScope::acquire();
+    let dir = std::env::temp_dir().join("fgmp_chaos_pool_artifacts");
+    let _ = std::fs::remove_dir_all(&dir);
+    fgmp::io::synth::ensure_model(&dir, "tiny-llama", 42).expect("synthesize artifacts");
+
+    let rt = Runtime::native();
+    let ev = Evaluator::load(&rt, &dir, "tiny-llama").unwrap();
+    let cfg = QuantConfig::fgmp(0.7);
+    let qm = QuantizedModel::quantize(&ev.arts, &cfg).unwrap();
+    let tail = ev.quant_arg_tail(&cfg, &qm).unwrap();
+    let logits_spec = ExecSpec::new(&dir, "tiny-llama", GraphKind::LogitsQuant);
+    let stream = ev.test_stream.clone();
+
+    // 48 pages holds at most two mid-size sessions: organic exhaustion is
+    // part of the workload, on top of the injected failures.
+    let opts = EngineOptions::default().kv(KvPrecision::Fp16).pages(Some(48));
+    let engine = Engine::with_options(&rt, &logits_spec, tail, opts).unwrap();
+
+    faults::arm(0x9001);
+    faults::set(faults::KV_ALLOC, 0.05);
+    faults::set(faults::ENGINE_PREFILL, 0.05);
+    faults::set(faults::ENGINE_DECODE, 0.05);
+
+    let mut rng = Rng::new(0xD15C0);
+    let mut sessions: Vec<Session> = Vec::new();
+    for round in 0..60 {
+        if sessions.len() < 3 {
+            let off = rng.below(stream.len() - 80);
+            let len = 16 + rng.below(64);
+            match engine.prefill(&stream[off..off + len]) {
+                Ok(sess) => sessions.push(sess),
+                Err(e) => {
+                    assert!(
+                        EngineError::classify(&e).is_some(),
+                        "round {round}: untyped prefill error: {e}"
+                    );
+                }
+            }
+        }
+        if !sessions.is_empty() {
+            let step = {
+                let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+                engine.decode_step(&mut refs)
+            };
+            if let Err(e) = step {
+                let classified = EngineError::classify(&e);
+                assert!(classified.is_some(), "round {round}: untyped decode error: {e}");
+                if EngineError::is_exhausted(&e) {
+                    // Shed load the way the coordinator would: retire the
+                    // newest session and let its pages return.
+                    sessions.pop();
+                }
+            }
+        }
+        if !sessions.is_empty() && rng.f64() < 0.2 {
+            sessions.remove(0);
+        }
+    }
+    sessions.clear();
+    faults::disarm();
+
+    let stats = engine.pool_stats().unwrap();
+    assert_eq!(stats.in_use_pages, 0, "chaos workload leaked pages");
+    assert_eq!(stats.logical_pages, 0, "chaos workload leaked logical pages");
+    assert!(faults::injected() > 0, "failpoints never fired");
+}

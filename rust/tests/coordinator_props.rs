@@ -224,6 +224,8 @@ fn continuous_batching_preserves_per_request_streams() {
         workers: 1,
         spec: None,
         prefix_share: false,
+        deadline_ms: None,
+        promote_after_ms: 0,
     };
     let fwd_spec = ExecSpec::new(&dir, "tiny-llama", GraphKind::FwdQuant);
     let server = Server::start(scfg, fwd_spec, tail.clone(), logits_spec, tail).unwrap();
@@ -323,6 +325,8 @@ fn pool_backpressure_defers_admissions_and_preserves_streams() {
         workers: 1,
         spec: None,
         prefix_share: false,
+        deadline_ms: None,
+        promote_after_ms: 0,
     };
     let fwd_spec = ExecSpec::new(&dir, "tiny-llama", GraphKind::FwdQuant);
     let server = Server::start(scfg, fwd_spec, tail.clone(), logits_spec, tail).unwrap();
@@ -438,6 +442,204 @@ fn decode_step_energy_tp_prices_each_shard_at_its_own_width() {
             avg - tp
         );
     }
+}
+
+/// Typed deadlines: with `deadline_ms = 0` every generation request has
+/// already expired by the time the decode loop sees it, so each one must
+/// be answered exactly once with [`Rejection::DeadlineExceeded`] — never a
+/// silent drop, never an untyped failure — and the rejection counter
+/// reconciles with the submissions.
+#[test]
+fn zero_deadline_rejects_every_generation_typed() {
+    use fgmp::coordinator::{Rejection, Server, ServerConfig};
+    use fgmp::eval::Evaluator;
+    use fgmp::model::{KvPrecision, QuantConfig, QuantizedModel};
+    use fgmp::runtime::{ExecSpec, GraphKind, Runtime};
+
+    let dir = std::env::temp_dir().join("fgmp_coordinator_deadline_artifacts");
+    let _ = std::fs::remove_dir_all(&dir);
+    fgmp::io::synth::ensure_model(&dir, "tiny-llama", 42).expect("synthesize artifacts");
+
+    let rt = Runtime::native();
+    let ev = Evaluator::load(&rt, &dir, "tiny-llama").unwrap();
+    let cfg = QuantConfig::fgmp(0.7);
+    let qm = QuantizedModel::quantize(&ev.arts, &cfg).unwrap();
+    let tail = ev.quant_arg_tail(&cfg, &qm).unwrap();
+    let shapes = qm.layer_profiles(&ev.arts.manifest, ev.batch * ev.seq, &[]);
+    let logits_spec = ExecSpec::new(&dir, "tiny-llama", GraphKind::LogitsQuant);
+
+    let scfg = ServerConfig {
+        batch: ev.batch,
+        seq: ev.seq,
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+        layer_shapes: shapes,
+        queue_depth: 64,
+        kv_precision: KvPrecision::Fp16,
+        decode_batch: 4,
+        kv_pages: None,
+        energy: fgmp::hwsim::EnergyModel::default(),
+        attn_threshold: None,
+        workers: 1,
+        spec: None,
+        prefix_share: false,
+        deadline_ms: Some(0),
+        promote_after_ms: 250,
+    };
+    let fwd_spec = ExecSpec::new(&dir, "tiny-llama", GraphKind::FwdQuant);
+    let server = Server::start(scfg, fwd_spec, tail.clone(), logits_spec, tail).unwrap();
+
+    let mut rxs = Vec::new();
+    for id in 0..6u64 {
+        let (req, rx) = Request::new(
+            id,
+            RequestKind::Generate { prompt: ev.test_stream[..6].to_vec(), n_tokens: 4 },
+        );
+        server.router.submit(req).unwrap();
+        rxs.push(rx);
+    }
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().expect("typed response");
+        assert_eq!(resp.rejection, Some(Rejection::DeadlineExceeded), "request {i}");
+        assert!(resp.generated.is_none(), "request {i} generated past its deadline");
+    }
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.deadline_rejections, 6);
+    assert_eq!(snap.generated_tokens, 0);
+    server.shutdown();
+}
+
+/// Starvation bound under bypass (`promote_after_ms > 0`): a big request
+/// whose worst case needs the whole pool is submitted early, while a
+/// producer keeps feeding small requests that are allowed to bypass a
+/// young deferred head. Without the age-based promotion bound the small
+/// traffic would keep the pool busy and starve the big request forever;
+/// with it, admission reverts to strict head-of-line once the head ages —
+/// preempting live sessions under sustained pressure — so the big request
+/// completes while small traffic is still arriving, and every stream
+/// (including any preempted-and-resumed one) stays bit-exact.
+#[test]
+fn aged_deferred_head_is_not_starved_by_bypass() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    use fgmp::coordinator::{Server, ServerConfig};
+    use fgmp::eval::Evaluator;
+    use fgmp::model::{KvPool, KvPrecision, QuantConfig, QuantizedModel};
+    use fgmp::runtime::{Engine, ExecSpec, GraphKind, Runtime};
+
+    let dir = std::env::temp_dir().join("fgmp_coordinator_aging_artifacts");
+    let _ = std::fs::remove_dir_all(&dir);
+    fgmp::io::synth::ensure_model(&dir, "tiny-llama", 42).expect("synthesize artifacts");
+
+    let rt = Runtime::native();
+    let ev = Evaluator::load(&rt, &dir, "tiny-llama").unwrap();
+    let arch = ev.arts.manifest.arch().unwrap();
+    let cfg = QuantConfig::fgmp(0.7);
+    let qm = QuantizedModel::quantize(&ev.arts, &cfg).unwrap();
+    let tail = ev.quant_arg_tail(&cfg, &qm).unwrap();
+    let shapes = qm.layer_profiles(&ev.arts.manifest, ev.batch * ev.seq, &[]);
+    let logits_spec = ExecSpec::new(&dir, "tiny-llama", GraphKind::LogitsQuant);
+
+    // The pool holds exactly two small requests; the big request's worst
+    // case is the whole pool, so it can only ever run alone.
+    let n_tokens = 4usize;
+    let small_prompt: Vec<i32> = ev.test_stream[..6].to_vec();
+    let big_prompt: Vec<i32> = ev.test_stream[32..52].to_vec();
+    let per_small = KvPool::pages_for_session(arch.n_layers, small_prompt.len() + n_tokens);
+    let kv_pages = 2 * per_small;
+    assert_eq!(
+        KvPool::pages_for_session(arch.n_layers, big_prompt.len() + n_tokens),
+        kv_pages,
+        "the big request must need the whole pool"
+    );
+
+    // Reference streams from a dedicated single-session engine.
+    let engine = Engine::new(&rt, &logits_spec, tail.clone(), KvPrecision::Fp16).unwrap();
+    let stream_for = |prompt: &[i32]| -> Vec<i32> {
+        let mut sess = engine.prefill(prompt).unwrap();
+        let mut produced = vec![sess.next_token()];
+        while produced.len() < n_tokens {
+            let mut refs = [&mut sess];
+            engine.decode_step(&mut refs).unwrap();
+            produced.push(sess.next_token());
+        }
+        produced
+    };
+    let small_expected = stream_for(&small_prompt);
+    let big_expected = stream_for(&big_prompt);
+
+    let scfg = ServerConfig {
+        batch: ev.batch,
+        seq: ev.seq,
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+        layer_shapes: shapes,
+        queue_depth: 64,
+        kv_precision: KvPrecision::Fp16,
+        decode_batch: 3,
+        kv_pages: Some(kv_pages),
+        energy: fgmp::hwsim::EnergyModel::default(),
+        attn_threshold: None,
+        workers: 1,
+        spec: None,
+        prefix_share: false,
+        deadline_ms: None,
+        promote_after_ms: 25,
+    };
+    let fwd_spec = ExecSpec::new(&dir, "tiny-llama", GraphKind::FwdQuant);
+    let server = Server::start(scfg, fwd_spec, tail.clone(), logits_spec, tail).unwrap();
+
+    // One small leads (so the pool is busy), then the big request.
+    let (req, small0_rx) =
+        Request::new(0, RequestKind::Generate { prompt: small_prompt.clone(), n_tokens });
+    server.router.submit(req).unwrap();
+    let (req, big_rx) =
+        Request::new(1, RequestKind::Generate { prompt: big_prompt.clone(), n_tokens });
+    server.router.submit(req).unwrap();
+
+    // A producer keeps small traffic flowing until the big one completes:
+    // bypass alone (no promotion bound) would starve it indefinitely.
+    let stop = Arc::new(AtomicBool::new(false));
+    let producer = {
+        let (router, stop) = (server.router.clone(), stop.clone());
+        let prompt = small_prompt.clone();
+        std::thread::spawn(move || {
+            let mut rxs = Vec::new();
+            let mut id = 1000u64;
+            while !stop.load(Ordering::Relaxed) && rxs.len() < 4000 {
+                let (req, rx) =
+                    Request::new(id, RequestKind::Generate { prompt: prompt.clone(), n_tokens });
+                if router.submit(req).is_err() {
+                    break;
+                }
+                id += 1;
+                rxs.push(rx);
+                std::thread::sleep(Duration::from_micros(500));
+            }
+            rxs
+        })
+    };
+
+    let big = big_rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("aged big request must not be starved by small-request bypass");
+    stop.store(true, Ordering::Relaxed);
+    assert_eq!(big.generated.as_deref(), Some(&big_expected[..]), "big stream bit-exact");
+    assert_eq!(big.rejection, None);
+
+    let small0 = small0_rx.recv().expect("leading small response");
+    assert_eq!(small0.generated.as_deref(), Some(&small_expected[..]));
+    for (i, rx) in producer.join().unwrap().into_iter().enumerate() {
+        let resp = rx.recv().expect("small response");
+        assert_eq!(
+            resp.generated.as_deref(),
+            Some(&small_expected[..]),
+            "small {i}: stream perturbed by preemption/resume"
+        );
+    }
+    let snap = server.metrics.snapshot();
+    assert!(snap.deferred_admissions > 0, "the big request never waited");
+    assert!(snap.preempt_resumes <= snap.preemptions, "resumes cannot exceed preemptions");
+    server.shutdown();
 }
 
 /// Metrics accounting: sums of random batch records reconcile exactly.

@@ -221,6 +221,8 @@ fn coordinator_serves_score_requests_natively() {
         workers: 1,
         spec: None,
         prefix_share: false,
+        deadline_ms: None,
+        promote_after_ms: 0,
     };
     let fwd = ExecSpec::new(dir, "tiny-llama", GraphKind::FwdQuant);
     let logits = ExecSpec::new(dir, "tiny-llama", GraphKind::LogitsQuant);

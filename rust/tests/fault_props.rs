@@ -1,0 +1,272 @@
+//! Fault-injection properties over the engines (`util::faults` armed):
+//! typed worker-panic recovery, mid-roll pool exhaustion restoring the
+//! books bit-identically, injected decode failures leaving sessions
+//! stepable, and preempt/resume streams staying bit-exact — the
+//! engine-level halves of the coordinator's chaos story.
+//!
+//! The failpoint registry is process-global, so every test here serializes
+//! on one lock and disarms on every exit path (a drop guard), keeping each
+//! test's seeded schedule deterministic.
+
+use std::sync::{Mutex, MutexGuard};
+
+use fgmp::eval::Evaluator;
+use fgmp::model::{KvPrecision, QuantConfig, QuantizedModel};
+use fgmp::runtime::{
+    build_engine, ArgValue, Engine, EngineError, EngineOptions, ExecSpec, GraphKind,
+    InferenceEngine, Runtime, Session,
+};
+use fgmp::util::faults;
+
+/// Serializes fault tests: the registry is process-global, and an armed
+/// schedule must never leak into a concurrently running test.
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Hold the registry for one test; disarm on drop (even under panic).
+struct FaultScope {
+    _guard: MutexGuard<'static, ()>,
+}
+
+impl FaultScope {
+    fn acquire() -> Self {
+        let guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        faults::disarm();
+        FaultScope { _guard: guard }
+    }
+}
+
+impl Drop for FaultScope {
+    fn drop(&mut self) {
+        faults::disarm();
+    }
+}
+
+struct Harness {
+    rt: Runtime,
+    tail: Vec<ArgValue>,
+    logits: ExecSpec,
+    stream: Vec<i32>,
+}
+
+fn harness(name: &str) -> Harness {
+    let dir = std::env::temp_dir().join(format!("fgmp_fault_props_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    fgmp::io::synth::ensure_model(&dir, "tiny-llama", 42).expect("synthesize artifacts");
+    let rt = Runtime::native();
+    let ev = Evaluator::load(&rt, &dir, "tiny-llama").unwrap();
+    let cfg = QuantConfig::fgmp(0.7);
+    let qm = QuantizedModel::quantize(&ev.arts, &cfg).unwrap();
+    let tail = ev.quant_arg_tail(&cfg, &qm).unwrap();
+    let logits = ExecSpec::new(&dir, "tiny-llama", GraphKind::LogitsQuant);
+    let stream = ev.test_stream.clone();
+    Harness { rt, tail, logits, stream }
+}
+
+/// Greedy stream of `n` tokens from a fresh session over `prompt`.
+fn run_stream<E: InferenceEngine + ?Sized>(engine: &E, prompt: &[i32], n: usize) -> Vec<i32> {
+    let mut sess = engine.prefill(prompt).unwrap();
+    let mut produced = vec![sess.next_token()];
+    while produced.len() < n {
+        let mut refs = [&mut sess];
+        engine.decode_step(&mut refs).unwrap();
+        produced.push(sess.next_token());
+    }
+    produced
+}
+
+/// A tensor-parallel worker panic surfaces as the typed
+/// [`EngineError::WorkerFailed`] (never an unwinding process), the failed
+/// step restores every shard, and retrying once the fault clears continues
+/// the exact reference stream.
+#[test]
+fn fault_worker_panic_recovers_cleanly() {
+    let _scope = FaultScope::acquire();
+    let h = harness("worker_panic");
+    let opts = EngineOptions::default().kv(KvPrecision::Fp16).workers(2);
+    let boxed = build_engine(&h.rt, &h.logits, h.tail.clone(), opts).unwrap();
+    let engine = boxed.as_ref();
+    let prompt = &h.stream[..12];
+    let want = 6usize;
+    let expected = run_stream(engine, prompt, want);
+
+    let mut sess = engine.prefill(prompt).unwrap();
+    let mut produced = vec![sess.next_token()];
+
+    faults::arm(0xFA17);
+    faults::set(faults::WORKER_PANIC, 1.0);
+    let before_tokens = sess.tokens.clone();
+    let before_cached = sess.cached_tokens();
+    let err = {
+        let mut refs = [&mut sess];
+        engine.decode_step(&mut refs).unwrap_err()
+    };
+    match EngineError::classify(&err) {
+        Some(EngineError::WorkerFailed { .. }) => {}
+        other => panic!("expected WorkerFailed, got {other:?} ({err})"),
+    }
+    assert!(EngineError::is_transient(&err));
+    // The failed step restored the session: same context, same cache —
+    // and a panicked prefill types identically (with nothing to restore).
+    assert_eq!(sess.tokens, before_tokens);
+    assert_eq!(sess.cached_tokens(), before_cached);
+    let perr = engine.prefill(&h.stream[64..70]).unwrap_err();
+    assert!(EngineError::is_transient(&perr), "panicked prefill must be typed: {perr}");
+    faults::disarm();
+
+    while produced.len() < want {
+        let mut refs = [&mut sess];
+        engine.decode_step(&mut refs).unwrap();
+        produced.push(sess.next_token());
+    }
+    assert_eq!(produced, expected, "retried stream must be bit-exact");
+}
+
+/// Mid-roll pool exhaustion (injected at the page-allocation seam) leaves
+/// the pool's books and the session's cache bit-identical to the pre-step
+/// state, and the retried step continues the exact uninterrupted stream.
+#[test]
+fn fault_midroll_exhaustion_restores_books() {
+    let _scope = FaultScope::acquire();
+    let h = harness("midroll");
+    let opts = EngineOptions::default().kv(KvPrecision::Fp16).pages(Some(96));
+    let engine = Engine::with_options(&h.rt, &h.logits, h.tail.clone(), opts).unwrap();
+    let max_seq = engine.arch().max_seq;
+    let prompt = &h.stream[..max_seq];
+    let want = 6usize;
+
+    // Uninterrupted reference: the very first decode step must roll, since
+    // prefill filled the cache to the boundary.
+    let reference = {
+        let opts = EngineOptions::default().kv(KvPrecision::Fp16).pages(Some(96));
+        let eng = Engine::with_options(&h.rt, &h.logits, h.tail.clone(), opts).unwrap();
+        run_stream(&eng, prompt, want)
+    };
+
+    let mut sess = engine.prefill(prompt).unwrap();
+    let mut produced = vec![sess.next_token()];
+    assert_eq!(sess.cached_tokens(), max_seq, "prefill must reach the roll boundary");
+
+    let before = engine.pool_stats().unwrap();
+    let before_tokens = sess.tokens.clone();
+    let next = sess.next_token();
+    faults::arm(0x60AF);
+    faults::set(faults::KV_ALLOC, 1.0);
+    let err = {
+        let mut refs = [&mut sess];
+        engine.decode_step(&mut refs).unwrap_err()
+    };
+    assert!(EngineError::is_exhausted(&err), "injected alloc failure must be typed: {err}");
+    faults::disarm();
+
+    // Books restored bit-identically: same pages in use, same logical
+    // pages, same session context — the failed roll leaked nothing.
+    let after = engine.pool_stats().unwrap();
+    assert_eq!(after.in_use_pages, before.in_use_pages, "failed roll leaked pages");
+    assert_eq!(after.logical_pages, before.logical_pages);
+    assert_eq!(sess.tokens, before_tokens);
+    assert_eq!(sess.cached_tokens(), max_seq);
+    assert_eq!(sess.next_token(), next, "logits disturbed by the failed roll");
+
+    while produced.len() < want {
+        let mut refs = [&mut sess];
+        engine.decode_step(&mut refs).unwrap();
+        produced.push(sess.next_token());
+    }
+    assert_eq!(produced, reference, "post-failure stream must be bit-exact");
+}
+
+/// An injected decode failure fails the *step*, not the sessions: every
+/// session in the batch stays stepable and the retried steps continue the
+/// exact reference streams.
+#[test]
+fn fault_decode_step_failure_leaves_sessions_stepable() {
+    let _scope = FaultScope::acquire();
+    let h = harness("decode_fail");
+    let engine = Engine::new(&h.rt, &h.logits, h.tail.clone(), KvPrecision::Fp16).unwrap();
+    let want = 5usize;
+    let prompts: Vec<Vec<i32>> = (0..3).map(|i| h.stream[i * 24..i * 24 + 8].to_vec()).collect();
+    let expected: Vec<Vec<i32>> = prompts.iter().map(|p| run_stream(&engine, p, want)).collect();
+
+    let mut sessions = engine.prefill_batch(&prompts).unwrap();
+    let mut produced: Vec<Vec<i32>> = sessions.iter().map(|s| vec![s.next_token()]).collect();
+
+    faults::arm(0xDECD);
+    faults::set(faults::ENGINE_DECODE, 1.0);
+    let err = {
+        let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+        engine.decode_step(&mut refs).unwrap_err()
+    };
+    assert_eq!(
+        EngineError::classify(&err),
+        Some(EngineError::Injected { point: faults::ENGINE_DECODE })
+    );
+    assert_eq!(faults::fires(faults::ENGINE_DECODE), 1);
+    faults::disarm();
+
+    while produced[0].len() < want {
+        let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+        engine.decode_step(&mut refs).unwrap();
+        for (s, p) in sessions.iter().zip(produced.iter_mut()) {
+            p.push(s.next_token());
+        }
+    }
+    assert_eq!(produced, expected, "streams must survive an injected step failure");
+}
+
+/// The coordinator's preempt/resume contract at the engine level: drop a
+/// live session mid-stream and re-prefill its tokens plus the one
+/// produced-but-unconsumed token — roll-normalized exactly the way the
+/// server's `preempt_youngest` does — and the greedy stream continues
+/// bit-exactly, with and without prefix-index donation, including across
+/// the roll boundary.
+#[test]
+fn preempt_resume_stream_is_bit_exact() {
+    let _scope = FaultScope::acquire();
+    let h = harness("preempt_resume");
+    for share in [false, true] {
+        let opts = EngineOptions::default().kv(KvPrecision::Fp16).prefix_share(share);
+        let engine = Engine::with_options(&h.rt, &h.logits, h.tail.clone(), opts).unwrap();
+        let max_seq = engine.arch().max_seq;
+        // A near-boundary prompt so the stream crosses a roll mid-flight.
+        let prompt = &h.stream[..max_seq - 2];
+        let want = 8usize;
+        let reference = {
+            let opts = EngineOptions::default().kv(KvPrecision::Fp16).prefix_share(share);
+            let eng = Engine::with_options(&h.rt, &h.logits, h.tail.clone(), opts).unwrap();
+            run_stream(&eng, prompt, want)
+        };
+        for preempt_after in [1usize, 4] {
+            let mut sess = engine.prefill(prompt).unwrap();
+            let mut produced = vec![sess.next_token()];
+            while produced.len() < preempt_after {
+                let mut refs = [&mut sess];
+                engine.decode_step(&mut refs).unwrap();
+                produced.push(sess.next_token());
+            }
+            // Preempt: donate (prefix engines keep the computed pages
+            // alive under the index), rebuild the resume context, drop the
+            // session — its pages return to the pool.
+            let donated = engine.preempt_donate(&sess);
+            assert_eq!(donated, share, "donation requires the prefix index");
+            let mut resume = sess.tokens.clone();
+            if resume.len() >= max_seq {
+                let keep = (max_seq / 2).max(1);
+                resume.drain(..resume.len() - keep);
+            }
+            resume.push(*produced.last().unwrap());
+            drop(sess);
+
+            let mut sess = engine.prefill(&resume).unwrap();
+            produced.push(sess.next_token());
+            while produced.len() < want {
+                let mut refs = [&mut sess];
+                engine.decode_step(&mut refs).unwrap();
+                produced.push(sess.next_token());
+            }
+            assert_eq!(
+                produced, reference,
+                "share={share} preempt_after={preempt_after}: resumed stream diverged"
+            );
+        }
+    }
+}
